@@ -1,0 +1,73 @@
+//! End-to-end serving driver (DESIGN.md validation requirement): starts the
+//! TCP server on a real model family, fires a batch of mixed-domain
+//! requests through the line protocol, and reports per-request latency and
+//! aggregate throughput.
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use specdelay::benchkit::{load_engine, load_prompts, DOMAINS};
+use specdelay::coordinator::server::{serve, ServerConfig};
+use specdelay::util::stats::Running;
+use specdelay::util::Json;
+
+fn main() -> anyhow::Result<()> {
+    let addr = "127.0.0.1:7411";
+    let n_requests = 6usize;
+
+    // leader: spawn the server thread
+    let server_handle = thread::spawn(move || {
+        let engine = load_engine("qwen-sim").expect("engine");
+        let cfg = ServerConfig { addr: addr.to_string(), seed: 42 };
+        serve(&engine, &cfg, Some(n_requests)).expect("serve");
+    });
+    thread::sleep(Duration::from_secs(3)); // engine load
+
+    // client: mixed-domain batch
+    let mut reqs = Vec::new();
+    for (i, domain) in DOMAINS.iter().cycle().take(n_requests).enumerate() {
+        let p = load_prompts(domain, i / DOMAINS.len() + 1)?.pop().unwrap();
+        reqs.push((domain.to_string(), p));
+    }
+
+    let mut stream = loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => break s,
+            Err(_) => thread::sleep(Duration::from_millis(200)),
+        }
+    };
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut latency = Running::new();
+    let mut total_tokens = 0.0;
+    let t0 = Instant::now();
+    for (domain, prompt) in &reqs {
+        let req = format!(
+            "{{\"prompt\": {}, \"max_new\": 32, \"temperature\": 0.8, \"verifier\": \"SpecInfer\", \"k\": 3, \"l1\": 2, \"l2\": 3}}",
+            Json::Str(prompt.clone())
+        );
+        let t1 = Instant::now();
+        writeln!(stream, "{req}")?;
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        let dt = t1.elapsed().as_secs_f64();
+        latency.push(dt);
+        let resp = Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let tokens = resp.get("tokens").map_err(|e| anyhow::anyhow!("{e}"))?.as_f64().unwrap_or(0.0);
+        let be = resp.get("block_efficiency").map_err(|e| anyhow::anyhow!("{e}"))?.as_f64().unwrap_or(0.0);
+        total_tokens += tokens;
+        println!("[{domain:<12}] {tokens:>3.0} tokens in {dt:.2}s (block eff {be:.2})");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    drop(stream);
+    server_handle.join().ok();
+    println!(
+        "\nserved {} requests | mean latency {:.2}s (min {:.2} max {:.2}) | aggregate {:.1} tok/s",
+        reqs.len(),
+        latency.mean(),
+        latency.min(),
+        latency.max(),
+        total_tokens / wall
+    );
+    Ok(())
+}

@@ -1,0 +1,31 @@
+//! Quickstart: load a family, run delayed-expansion speculative decoding,
+//! print the continuation and stats.
+//!
+//!     cargo run --release --example quickstart
+use specdelay::benchkit::load_engine;
+use specdelay::coordinator::{FixedPolicy, SpecEngine};
+use specdelay::dist::SamplingConfig;
+use specdelay::draft::Action;
+use specdelay::util::Pcg64;
+use specdelay::verify;
+
+fn main() -> anyhow::Result<()> {
+    let engine = load_engine("qwen-sim")?;
+    let spec = SpecEngine::new(&engine, SamplingConfig::new(0.6, 1.0));
+    let verifier = verify::verifier("SpecInfer").unwrap();
+    // delayed tree: trunk of 2, then 3 branches of 3 (paper Definition 5.2)
+    let policy = FixedPolicy(Action::new(3, 2, 3));
+    let mut rng = Pcg64::seeded(0);
+    for prompt in ["Q: 6 * 7 = ? A:", "story: the golden ", "translate en->fr: the sea => "] {
+        let (text, stats) = spec.generate(prompt, 48, verifier.as_ref(), &policy, &mut rng)?;
+        println!("prompt:  {prompt:?}");
+        println!("output:  {:?}", text);
+        println!(
+            "         {} tokens | block efficiency {:.2} | {:.1} tok/s\n",
+            stats.tokens,
+            stats.block_efficiency(),
+            stats.tps()
+        );
+    }
+    Ok(())
+}

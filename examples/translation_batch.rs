@@ -1,0 +1,38 @@
+//! Translation scenario: batch of en->fr/es prompts across all three model
+//! families, comparing every verification algorithm's block efficiency.
+use specdelay::benchkit::{load_engine, load_prompts, print_table, FAMILIES};
+use specdelay::coordinator::{FixedPolicy, SpecEngine};
+use specdelay::dist::SamplingConfig;
+use specdelay::draft::Action;
+use specdelay::util::Pcg64;
+use specdelay::verify;
+
+fn main() -> anyhow::Result<()> {
+    let prompts = load_prompts("translation", 2)?;
+    let algos = ["Naive", "BV", "NSS", "NaiveTree", "SpecTr", "SpecInfer", "Khisti", "Traversal"];
+    let mut rows = Vec::new();
+    for algo in algos {
+        let mut cols = Vec::new();
+        for family in FAMILIES {
+            let engine = load_engine(family)?;
+            let spec = SpecEngine::new(&engine, SamplingConfig::new(0.8, 1.0));
+            let verifier = verify::verifier(algo).unwrap();
+            let action = if algo == "Naive" || algo == "BV" {
+                Action::new(1, 5, 0)
+            } else {
+                Action::new(3, 0, 4)
+            };
+            let mut rng = Pcg64::seeded(3);
+            let mut be = 0.0;
+            for p in &prompts {
+                let (_t, stats) =
+                    spec.generate(p, 32, verifier.as_ref(), &FixedPolicy(action), &mut rng)?;
+                be += stats.block_efficiency() / prompts.len() as f64;
+            }
+            cols.push(be);
+        }
+        rows.push((algo.to_string(), cols));
+    }
+    print_table("translation block efficiency by family", &["qwen", "gemma", "llama"], &rows);
+    Ok(())
+}

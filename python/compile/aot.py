@@ -1,0 +1,184 @@
+"""AOT export: train (or load cached) model pairs and lower every entry point
+to HLO *text* under artifacts/.
+
+HLO text — not ``lowered.compiler_ir("hlo")`` protos and not ``.serialize()``
+— is the interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (the version behind the rust `xla`
+crate) rejects; the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Layout:
+    artifacts/<family>/meta.json
+    artifacts/<family>/{target,draft}.bin          # weights, HLO arg order
+    artifacts/<family>/hlo/<entry>.hlo.txt
+    artifacts/prompts/<domain>.json                # held-out bench prompts
+
+Run:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import corpus as corpus_mod
+from . import train as train_mod
+from .model import (ModelConfig, make_decode, make_prefill, make_rollout,
+                    make_tree_verify, param_names)
+from .weights_io import read_tensors, write_tensors
+
+S_PRE = 192                      # prefill window (prompts are shorter)
+TREE_SIZES = (8, 16, 32, 48)     # online tree-pass buckets
+TREE_BIG = 320                   # offline superset tree (trace collection)
+TRUNK_LENS = tuple(range(1, 9))  # trunk rollout variants (K=1)
+BRANCH_KS = (2, 3, 4)
+BRANCH_LENS = (2, 4, 6, 8)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _kv_sds(cfg: ModelConfig):
+    shape = (cfg.n_layers, cfg.n_heads, cfg.max_seq, cfg.d_head)
+    return _sds(shape), _sds(shape)
+
+
+def _params_sds(cfg: ModelConfig, params):
+    return [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in params]
+
+
+def lower_entries(cfg: ModelConfig, params, role: str, hlo_dir: str) -> dict:
+    """Lower every entry point for one model; returns entry metadata."""
+    os.makedirs(hlo_dir, exist_ok=True)
+    psds = _params_sds(cfg, params)
+    k_sds, v_sds = _kv_sds(cfg)
+    i32 = jnp.int32
+    entries = {}
+
+    def emit(name, fn, *args):
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(hlo_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        entries[name] = {"file": f"hlo/{name}.hlo.txt"}
+        print(f"  [aot] {name}: {len(text) // 1024} KiB ({time.time() - t0:.1f}s)",
+              flush=True)
+
+    emit(f"{role}_prefill", make_prefill(cfg, S_PRE),
+         psds, _sds((S_PRE,), i32), _sds((), i32))
+    emit(f"{role}_decode", make_decode(cfg),
+         psds, k_sds, v_sds, _sds((), i32), _sds((), i32))
+
+    if role == "draft":
+        for l in TRUNK_LENS:
+            emit(f"draft_rollout_k1_l{l}", make_rollout(cfg, 1, l),
+                 psds, k_sds, v_sds, _sds((), i32), _sds((), i32),
+                 _sds((1, l)), _sds(()), _sds(()))
+        for k in BRANCH_KS:
+            for l in BRANCH_LENS:
+                emit(f"draft_rollout_k{k}_l{l}", make_rollout(cfg, k, l),
+                     psds, k_sds, v_sds, _sds((), i32), _sds((), i32),
+                     _sds((k, l)), _sds(()), _sds(()))
+    else:
+        for n in TREE_SIZES + (TREE_BIG,):
+            emit(f"target_tree_n{n}", make_tree_verify(cfg, n),
+                 psds, k_sds, v_sds, _sds((n,), i32), _sds((n,), i32),
+                 _sds((n, n)), _sds((), i32))
+    return entries
+
+
+def cfg_meta(cfg: ModelConfig, params) -> dict:
+    return {
+        "n_layers": cfg.n_layers, "d_model": cfg.d_model,
+        "n_heads": cfg.n_heads, "d_head": cfg.d_head,
+        "vocab": cfg.vocab, "max_seq": cfg.max_seq,
+        "n_params": int(sum(int(np.prod(p.shape)) for p in params)),
+    }
+
+
+def build_family(name: str, out_dir: str, steps: int | None) -> None:
+    fam_dir = os.path.join(out_dir, name)
+    os.makedirs(fam_dir, exist_ok=True)
+    spec = train_mod.FAMILIES[name]
+    t_path = os.path.join(fam_dir, "target.bin")
+    d_path = os.path.join(fam_dir, "draft.bin")
+
+    if os.path.exists(t_path) and os.path.exists(d_path):
+        print(f"[aot] {name}: cached weights found, skipping training")
+        target = [jnp.asarray(a) for _, a in read_tensors(t_path)]
+        draft = [jnp.asarray(a) for _, a in read_tensors(d_path)]
+        t_loss = d_loss = -1.0
+    else:
+        target, draft, t_loss, d_loss = train_mod.train_family(name, steps=steps)
+        write_tensors(t_path, list(zip(param_names(spec["target"]),
+                                       [np.asarray(p) for p in target])))
+        write_tensors(d_path, list(zip(param_names(spec["draft"]),
+                                       [np.asarray(p) for p in draft])))
+
+    hlo_dir = os.path.join(fam_dir, "hlo")
+    entries = {}
+    entries.update(lower_entries(spec["target"], target, "target", hlo_dir))
+    entries.update(lower_entries(spec["draft"], draft, "draft", hlo_dir))
+
+    meta = {
+        "family": name,
+        "target": cfg_meta(spec["target"], target),
+        "draft": cfg_meta(spec["draft"], draft),
+        "s_pre": S_PRE,
+        "tree_sizes": list(TREE_SIZES), "tree_big": TREE_BIG,
+        "trunk_lens": list(TRUNK_LENS),
+        "branch_ks": list(BRANCH_KS), "branch_lens": list(BRANCH_LENS),
+        "train_loss": {"target": t_loss, "draft": d_loss},
+        "entries": entries,
+    }
+    with open(os.path.join(fam_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"[aot] {name}: wrote {len(entries)} entries")
+
+
+def write_prompts(out_dir: str) -> None:
+    pdir = os.path.join(out_dir, "prompts")
+    os.makedirs(pdir, exist_ok=True)
+    prompts = corpus_mod.build_prompts()
+    for domain, items in prompts.items():
+        with open(os.path.join(pdir, f"{domain}.json"), "w") as f:
+            json.dump(items, f, indent=0)
+    print(f"[aot] wrote prompts for {len(prompts)} domains")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--families", default=",".join(train_mod.FAMILIES))
+    ap.add_argument("--steps", type=int, default=None,
+                    help="override training steps (default env SPECDELAY_TRAIN_STEPS or 300)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    write_prompts(args.out)
+    for fam in args.families.split(","):
+        build_family(fam.strip(), args.out, args.steps)
+    with open(os.path.join(args.out, "families.json"), "w") as f:
+        json.dump([f.strip() for f in args.families.split(",")], f)
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,184 @@
+"""Deterministic synthetic multi-domain corpus.
+
+The paper evaluates on five generative settings (math-easy = MATH500,
+math-hard = OlympiadBench, coding = LiveCodeBench, creative writing =
+LitBench, translation = Opus). We cannot ship those datasets, so we build a
+synthetic analogue per domain from small grammars. What the experiments
+consume is only the *draft/target distribution agreement per domain*, and the
+grammars are designed so that agreement varies the same way it does in the
+paper: code and math are locally deterministic (high agreement, long accepted
+blocks), creative writing has high branching entropy, translation sits in
+between with long copied spans.
+
+Everything is seeded and reproducible; the same module also emits held-out
+prompt sets used by the rust bench harness (written by aot.py into
+artifacts/prompts/).
+"""
+
+from __future__ import annotations
+
+import random
+
+DOMAINS = ("writing", "coding", "translation", "math_easy", "math_hard")
+
+# ---------------------------------------------------------------------------
+# Shared vocabulary fragments
+# ---------------------------------------------------------------------------
+
+_NOUNS = [
+    "river", "lantern", "harbor", "meadow", "engine", "letter", "garden",
+    "violin", "winter", "mirror", "forest", "signal", "anchor", "castle",
+    "shadow", "market", "dancer", "sailor", "mountain", "archive",
+]
+_ADJS = [
+    "quiet", "golden", "distant", "broken", "gentle", "hollow", "silver",
+    "ancient", "restless", "pale", "luminous", "weathered", "crimson",
+]
+_VERBS = [
+    "drifted", "glowed", "trembled", "vanished", "unfolded", "lingered",
+    "whispered", "wandered", "settled", "burned", "echoed", "dissolved",
+]
+_ADVS = ["slowly", "quietly", "suddenly", "gracefully", "finally", "softly"]
+
+_EN_FR = [
+    ("the house", "la maison"), ("the sea", "la mer"), ("a small bird", "un petit oiseau"),
+    ("the old man", "le vieil homme"), ("the city", "la ville"), ("my friend", "mon ami"),
+    ("the night", "la nuit"), ("a long road", "une longue route"), ("the sun", "le soleil"),
+    ("the garden", "le jardin"), ("a quiet voice", "une voix calme"), ("the winter", "l'hiver"),
+]
+_EN_ES = [
+    ("the house", "la casa"), ("the sea", "el mar"), ("a small bird", "un pajaro pequeno"),
+    ("the old man", "el viejo"), ("the city", "la ciudad"), ("my friend", "mi amigo"),
+    ("the night", "la noche"), ("a long road", "un camino largo"), ("the sun", "el sol"),
+    ("the garden", "el jardin"), ("a quiet voice", "una voz tranquila"), ("the winter", "el invierno"),
+]
+
+_FUNCS = ["scan", "fold", "merge", "split", "rank", "pack", "trim", "join"]
+_VARS = ["xs", "ys", "acc", "out", "buf", "val", "idx", "tmp"]
+
+
+# ---------------------------------------------------------------------------
+# Per-domain document generators
+# ---------------------------------------------------------------------------
+
+def gen_writing(rng: random.Random) -> str:
+    lines = []
+    for _ in range(rng.randint(2, 4)):
+        n1, n2 = rng.choice(_NOUNS), rng.choice(_NOUNS)
+        a1, a2 = rng.choice(_ADJS), rng.choice(_ADJS)
+        v1, v2 = rng.choice(_VERBS), rng.choice(_VERBS)
+        adv = rng.choice(_ADVS)
+        form = rng.randrange(4)
+        if form == 0:
+            lines.append(f"The {a1} {n1} {v1} {adv} beyond the {a2} {n2}.")
+        elif form == 1:
+            lines.append(f"Under a {a1} sky, the {n1} {v1} while the {n2} {v2}.")
+        elif form == 2:
+            lines.append(f"No one saw how the {n1} {v1}; only the {a2} {n2} {v2} {adv}.")
+        else:
+            lines.append(f"It was the {n1} that {v1} first, {adv}, like a {a1} {n2}.")
+    return "story: " + " ".join(lines) + "\n"
+
+
+def gen_coding(rng: random.Random) -> str:
+    f = rng.choice(_FUNCS)
+    a, b = rng.sample(_VARS, 2)
+    k = rng.randint(1, 9)
+    body = rng.randrange(3)
+    out = [f"def {f}({a}, {b}):"]
+    if body == 0:
+        out += [f"    {b} = 0", f"    for v in {a}:", f"        {b} = {b} + v * {k}",
+                f"    return {b}"]
+    elif body == 1:
+        out += [f"    if len({a}) == 0:", "        return []",
+                f"    return [v + {k} for v in {a} if v > {b}]"]
+    else:
+        out += [f"    while {b} > 0:", f"        {a}.append({b} % {k + 1})",
+                f"        {b} = {b} // {k + 1}", f"    return {a}"]
+    return "code:\n" + "\n".join(out) + "\n"
+
+
+def gen_translation(rng: random.Random) -> str:
+    lex = _EN_FR if rng.random() < 0.5 else _EN_ES
+    tag = "fr" if lex is _EN_FR else "es"
+    pairs = rng.sample(lex, rng.randint(2, 3))
+    en = " and ".join(p[0] for p in pairs)
+    tr = " et ".join(p[1] for p in pairs) if tag == "fr" else " y ".join(p[1] for p in pairs)
+    return f"translate en->{tag}: {en} => {tr}\n"
+
+
+def gen_math_easy(rng: random.Random) -> str:
+    a, b = rng.randint(2, 40), rng.randint(2, 40)
+    op = rng.choice(["+", "-", "*"])
+    val = {"+": a + b, "-": a - b, "*": a * b}[op]
+    return f"Q: {a} {op} {b} = ? A: {val}\n"
+
+
+def gen_math_hard(rng: random.Random) -> str:
+    a, b, c = rng.randint(2, 20), rng.randint(2, 20), rng.randint(2, 12)
+    form = rng.randrange(3)
+    if form == 0:
+        expr, val = f"({a} + {b}) * {c}", (a + b) * c
+    elif form == 1:
+        expr, val = f"{a} * {b} - {c} * {a}", a * b - c * a
+    else:
+        expr, val = f"({a} - {b}) * ({a} + {c})", (a - b) * (a + c)
+    steps = f"step1: inner terms; step2: multiply; answer: {val}"
+    return f"Q: {expr} = ? {steps}\n"
+
+
+_GENERATORS = {
+    "writing": gen_writing,
+    "coding": gen_coding,
+    "translation": gen_translation,
+    "math_easy": gen_math_easy,
+    "math_hard": gen_math_hard,
+}
+
+
+# ---------------------------------------------------------------------------
+# Corpus / prompt assembly
+# ---------------------------------------------------------------------------
+
+def build_corpus(seed: int = 0, docs_per_domain: int = 2000) -> bytes:
+    """Concatenated training corpus over all domains (UTF-8 bytes)."""
+    rng = random.Random(seed)
+    docs = []
+    for domain in DOMAINS:
+        gen = _GENERATORS[domain]
+        for _ in range(docs_per_domain):
+            docs.append(gen(rng))
+    rng.shuffle(docs)
+    return "".join(docs).encode("utf-8")
+
+
+def build_prompts(seed: int = 1234, per_domain: int = 64) -> dict[str, list[str]]:
+    """Held-out prompt prefixes per domain for the bench harness.
+
+    A prompt is the *prefix* of a fresh document (cut before its natural
+    completion) so the model continues in-domain.
+    """
+    rng = random.Random(seed)
+    prompts: dict[str, list[str]] = {}
+    for domain in DOMAINS:
+        gen = _GENERATORS[domain]
+        out = []
+        for _ in range(per_domain):
+            doc = gen(rng)
+            if domain == "writing":
+                cut = doc.index(":") + 2 + rng.randint(8, 20)
+            elif domain == "coding":
+                cut = doc.index("):") + 3
+            elif domain == "translation":
+                cut = doc.index("=>") + 3
+            else:  # math domains: cut right after "A:" / "?" marker
+                marker = "A:" if "A:" in doc else "?"
+                cut = doc.index(marker) + len(marker)
+            out.append(doc[:cut])
+        prompts[domain] = out
+    return prompts
+
+
+if __name__ == "__main__":
+    corpus = build_corpus(docs_per_domain=5)
+    print(corpus.decode("utf-8"))

@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the tree-attention kernel.
+
+Materializes the full (N, S+N) score matrix; used only as the correctness
+reference in pytest and never lowered into artifacts.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def tree_attention_ref(q, k_cache, v_cache, k_tree, v_tree, tree_bias, cache_len):
+    """Reference tree attention.
+
+    Args:
+      q:         [H, N, Dh]  queries for the N draft-tree nodes (RoPE applied).
+      k_cache:   [H, S, Dh]  committed-prefix keys.
+      v_cache:   [H, S, Dh]  committed-prefix values.
+      k_tree:    [H, N, Dh]  keys of the tree nodes themselves.
+      v_tree:    [H, N, Dh]  values of the tree nodes.
+      tree_bias: [N, N]      additive mask over tree->tree attention;
+                             0 where node j is an ancestor-or-self of node i,
+                             -inf (large negative) otherwise.
+      cache_len: int32       number of valid prefix rows (< S).
+
+    Returns:
+      [H, N, Dh] attention outputs.
+    """
+    h, n, dh = q.shape
+    s = k_cache.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+
+    scores_cache = jnp.einsum("hnd,hsd->hns", q, k_cache) * scale  # [H,N,S]
+    pos = jnp.arange(s)[None, None, :]
+    scores_cache = jnp.where(pos < cache_len, scores_cache, -1e30)
+
+    scores_tree = jnp.einsum("hnd,hmd->hnm", q, k_tree) * scale  # [H,N,N]
+    scores_tree = scores_tree + tree_bias[None, :, :]
+
+    scores = jnp.concatenate([scores_cache, scores_tree], axis=-1)  # [H,N,S+N]
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    vals = jnp.concatenate([v_cache, v_tree], axis=1)  # [H, S+N, Dh]
+    return jnp.einsum("hnk,hkd->hnd", probs, vals)

@@ -1,0 +1,138 @@
+"""Pallas tree-attention kernel (layer 1).
+
+The paper's target pass is a batched forward over the draft tree with an
+ancestor-only attention mask — on GPUs this is done inside fused attention
+kernels with the tree mask applied per threadblock. Here the insight is
+re-thought for the TPU/Pallas execution model (DESIGN.md §Hardware-Adaptation):
+
+* the committed KV prefix is streamed HBM→VMEM in `BLOCK_S` tiles through a
+  flash-attention-style running (max, denominator, accumulator) carried by a
+  `fori_loop` — the VMEM analogue of the paper's threadblock KV tiling;
+* the (small) tree block — queries, tree keys/values, and the NxN ancestor
+  bias — stays VMEM-resident for the whole kernel;
+* scores are `(N, Dh) x (Dh, BLOCK_S)` matmuls so the MXU systolic array is
+  fed with tree nodes as rows; the ancestor mask is an additive bias, never
+  control flow.
+
+Grid is one program per attention head. `interpret=True` everywhere: the CPU
+PJRT plugin cannot execute Mosaic custom-calls, so the kernel lowers to plain
+HLO; real-TPU perf is estimated from the VMEM footprint + MXU utilization of
+these block shapes in DESIGN.md / EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# KV prefix tile. 128 rows of Dh=64 f32 keys+values = 64 KiB per tile — two
+# tiles (double buffering) plus the resident tree block fit comfortably in
+# 16 MiB VMEM; 128 is also the MXU lane width.
+BLOCK_S = 128
+
+NEG_INF = -1e30
+
+
+def _tree_attn_kernel(len_ref, q_ref, kc_ref, vc_ref, kt_ref, vt_ref, bias_ref,
+                      o_ref, *, block_s: int):
+    """One head: flash attention over [prefix tiles ... tree block]."""
+    q = q_ref[0]            # [N, Dh]   VMEM-resident
+    k_tree = kt_ref[0]      # [N, Dh]
+    v_tree = vt_ref[0]      # [N, Dh]
+    bias = bias_ref[...]    # [N, N]
+    cache_len = len_ref[0]
+
+    n, dh = q.shape
+    s_total = kc_ref.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    qs = q * scale
+
+    num_tiles = s_total // block_s
+
+    def tile_step(t, carry):
+        m, l, acc = carry
+        k = jax.lax.dynamic_slice_in_dim(kc_ref[0], t * block_s, block_s, axis=0)
+        v = jax.lax.dynamic_slice_in_dim(vc_ref[0], t * block_s, block_s, axis=0)
+        # (N, Dh) x (Dh, BLOCK_S) — MXU-shaped.
+        scores = jnp.dot(qs, k.T)  # [N, block_s]
+        pos = t * block_s + jax.lax.iota(jnp.int32, block_s)[None, :]
+        scores = jnp.where(pos < cache_len, scores, NEG_INF)
+        m_new = jnp.maximum(m, scores.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(scores - m_new[:, None])
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[:, None] + jnp.dot(p, v)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((n,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((n,), jnp.float32)
+    acc0 = jnp.zeros((n, dh), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, num_tiles, tile_step, (m0, l0, acc0))
+
+    # Final stage: the VMEM-resident tree block with the ancestor bias.
+    scores = jnp.dot(qs, k_tree.T) + bias  # [N, N]
+    m_new = jnp.maximum(m, scores.max(axis=-1))
+    alpha = jnp.exp(m - m_new)
+    p = jnp.exp(scores - m_new[:, None])
+    l_fin = l * alpha + p.sum(axis=-1)
+    acc_fin = acc * alpha[:, None] + jnp.dot(p, v_tree)
+
+    o_ref[0] = acc_fin / l_fin[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_s",))
+def tree_attention(q, k_cache, v_cache, k_tree, v_tree, tree_bias, cache_len,
+                   *, block_s: int = BLOCK_S):
+    """Tree attention via the Pallas kernel.
+
+    Args:
+      q:         [H, N, Dh] node queries (RoPE already applied).
+      k_cache:   [H, S, Dh] committed prefix keys; S must be a multiple of
+                 `block_s`.
+      v_cache:   [H, S, Dh].
+      k_tree:    [H, N, Dh] tree-node keys.
+      v_tree:    [H, N, Dh].
+      tree_bias: [N, N] additive ancestor mask (0 allowed / -1e30 blocked).
+      cache_len: int32 scalar, number of valid prefix rows.
+
+    Returns:
+      [H, N, Dh] attention outputs.
+    """
+    h, n, dh = q.shape
+    s = k_cache.shape[1]
+    if s % block_s != 0:
+        raise ValueError(f"S={s} must be a multiple of block_s={block_s}")
+    cache_len_arr = jnp.asarray(cache_len, jnp.int32).reshape(1)
+
+    kernel = functools.partial(_tree_attn_kernel, block_s=block_s)
+    return pl.pallas_call(
+        kernel,
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),             # cache_len
+            pl.BlockSpec((1, n, dh), lambda i: (i, 0, 0)),  # q
+            pl.BlockSpec((1, s, dh), lambda i: (i, 0, 0)),  # k_cache
+            pl.BlockSpec((1, s, dh), lambda i: (i, 0, 0)),  # v_cache
+            pl.BlockSpec((1, n, dh), lambda i: (i, 0, 0)),  # k_tree
+            pl.BlockSpec((1, n, dh), lambda i: (i, 0, 0)),  # v_tree
+            pl.BlockSpec((n, n), lambda i: (0, 0)),         # bias
+        ],
+        out_specs=pl.BlockSpec((1, n, dh), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, n, dh), jnp.float32),
+        interpret=True,
+    )(cache_len_arr, q, k_cache, v_cache, k_tree, v_tree, tree_bias)
+
+
+def vmem_footprint_bytes(n: int, s: int, dh: int, block_s: int = BLOCK_S) -> int:
+    """Estimated per-program VMEM residency for DESIGN.md §Perf.
+
+    Resident: q, k_tree, v_tree, bias, accumulators + two KV prefix tiles
+    (double buffered).
+    """
+    f32 = 4
+    resident = (3 * n * dh + n * n + n * (dh + 2)) * f32
+    tiles = 2 * 2 * block_s * dh * f32
+    return resident + tiles

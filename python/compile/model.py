@@ -1,0 +1,427 @@
+"""Layer 2: functional byte-level GPT in JAX.
+
+Five AOT entry points per model (lowered to HLO text by aot.py, executed from
+the rust coordinator via PJRT):
+
+  * ``prefill``      — prompt -> logits/hidden at the last token + full KV rows
+  * ``decode``       — one-token autoregressive step (baseline + microbench)
+  * ``rollout``      — fused draft rollout: K i.i.d. branches of length L in a
+                       single call (K=1 is the delayed-expansion trunk). This
+                       is what makes drafting cheap on the request path: one
+                       PJRT dispatch per trunk / branch stage instead of one
+                       per token. Sampling (temperature + nucleus) happens
+                       inside, driven by caller-supplied uniforms, so rust
+                       retains full control of randomness.
+  * ``tree_verify``  — the paper's hot spot: batched target pass over the
+                       draft tree with the ancestor mask, via the Pallas
+                       tree-attention kernel (kernels/tree_attention.py).
+
+KV caches live host-side in rust and are passed in/out as plain arrays; every
+function is pure. Positions use RoPE so there is no trained positional table
+to run off the end of.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.tree_attention import tree_attention
+
+VOCAB = 259  # 256 bytes + BOS(256) + EOS(257) + PAD(258)
+BOS, EOS, PAD = 256, 257, 258
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    n_layers: int
+    d_model: int
+    n_heads: int
+    d_head: int = 64
+    vocab: int = VOCAB
+    max_seq: int = 384      # multiple of the kernel BLOCK_S
+    mlp_ratio: int = 4
+
+    @property
+    def d_attn(self) -> int:
+        return self.n_heads * self.d_head
+
+    @property
+    def d_mlp(self) -> int:
+        return self.mlp_ratio * self.d_model
+
+
+# Parameter layout (flat list — the exact HLO argument / weights-file order):
+#   tok_emb [V, d]
+#   per layer: ln1_g, ln1_b, wq [d, H*Dh], wk, wv, wo [H*Dh, d],
+#              ln2_g, ln2_b, w1 [d, m], b1 [m], w2 [m, d], b2 [d]
+#   lnf_g [d], lnf_b [d]
+PER_LAYER = 12
+
+
+def param_names(cfg: ModelConfig) -> list[str]:
+    names = ["tok_emb"]
+    for i in range(cfg.n_layers):
+        names += [f"l{i}.{n}" for n in (
+            "ln1_g", "ln1_b", "wq", "wk", "wv", "wo",
+            "ln2_g", "ln2_b", "w1", "b1", "w2", "b2")]
+    names += ["lnf_g", "lnf_b"]
+    return names
+
+
+def init_params(cfg: ModelConfig, seed: int) -> list[jnp.ndarray]:
+    rng = np.random.default_rng(seed)
+    d, da, m = cfg.d_model, cfg.d_attn, cfg.d_mlp
+
+    def norm(*shape, scale=0.02):
+        return jnp.asarray(rng.normal(0.0, scale, shape), jnp.float32)
+
+    out_scale = 0.02 / np.sqrt(2 * cfg.n_layers)
+    params: list[jnp.ndarray] = [norm(cfg.vocab, d)]
+    for _ in range(cfg.n_layers):
+        params += [
+            jnp.ones(d), jnp.zeros(d),
+            norm(d, da), norm(d, da), norm(d, da), norm(da, d, scale=out_scale),
+            jnp.ones(d), jnp.zeros(d),
+            norm(d, m), jnp.zeros(m), norm(m, d, scale=out_scale), jnp.zeros(d),
+        ]
+    params += [jnp.ones(d), jnp.zeros(d)]
+    return params
+
+
+def _layer_params(params, i):
+    return params[1 + i * PER_LAYER: 1 + (i + 1) * PER_LAYER]
+
+
+def _ln(x, g, b, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def _rope_freqs(d_head: int):
+    return 10000.0 ** (-jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head)
+
+
+def apply_rope(x, positions):
+    """x: [..., T, H, Dh]; positions: [..., T] (int32)."""
+    dh = x.shape[-1]
+    theta = positions[..., :, None, None].astype(jnp.float32) * _rope_freqs(dh)
+    cos, sin = jnp.cos(theta), jnp.sin(theta)
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    out = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.reshape(x.shape)
+
+
+# ---------------------------------------------------------------------------
+# Training forward (python-only; never exported)
+# ---------------------------------------------------------------------------
+
+def train_forward(cfg: ModelConfig, params, tokens):
+    """tokens: [B, T] int32 -> logits [B, T, V]. Plain causal attention."""
+    b, t = tokens.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    x = params[0][tokens]  # [B, T, d]
+    pos = jnp.arange(t, dtype=jnp.int32)
+    causal = jnp.tril(jnp.ones((t, t), bool))
+
+    for i in range(cfg.n_layers):
+        (ln1_g, ln1_b, wq, wk, wv, wo, ln2_g, ln2_b, w1, b1, w2, b2) = _layer_params(params, i)
+        y = _ln(x, ln1_g, ln1_b)
+        q = apply_rope(jnp.einsum("btd,de->bte", y, wq).reshape(b, t, h, dh), pos[None, :])
+        k = apply_rope(jnp.einsum("btd,de->bte", y, wk).reshape(b, t, h, dh), pos[None, :])
+        v = jnp.einsum("btd,de->bte", y, wv).reshape(b, t, h, dh)
+        scores = jnp.einsum("bthd,bshd->bhts", q, k) / np.sqrt(dh)
+        scores = jnp.where(causal[None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        att = jnp.einsum("bhts,bshd->bthd", probs, v).reshape(b, t, h * dh)
+        x = x + att @ wo
+        y = _ln(x, ln2_g, ln2_b)
+        x = x + jax.nn.gelu(y @ w1 + b1) @ w2 + b2
+
+    x = _ln(x, params[-2], params[-1])
+    return x @ params[0].T
+
+
+# ---------------------------------------------------------------------------
+# Shared single/multi-token transformer step over an external KV cache
+# ---------------------------------------------------------------------------
+
+def _attend_cache(q, k_cache, v_cache, limit):
+    """q: [K?, H, Dh] vs cache [H, S, Dh]; attend rows < limit. Returns
+    unnormalized flash-style (m, l, acc) so callers can merge more keys."""
+    s = k_cache.shape[1]
+    scores = jnp.einsum("...hd,hsd->...hs", q, k_cache)
+    valid = jnp.arange(s) < limit
+    scores = jnp.where(valid, scores, -1e30)
+    m = scores.max(-1)
+    p = jnp.exp(scores - m[..., None])
+    l = p.sum(-1)
+    acc = jnp.einsum("...hs,hsd->...hd", p, v_cache)
+    return m, l, acc
+
+
+def _merge_softmax(m1, l1, a1, m2, l2, a2):
+    m = jnp.maximum(m1, m2)
+    w1, w2 = jnp.exp(m1 - m), jnp.exp(m2 - m)
+    return m, l1 * w1 + l2 * w2, a1 * w1[..., None] + a2 * w2[..., None]
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+def make_prefill(cfg: ModelConfig, s_pre: int):
+    """(params..., tokens[s_pre], length) ->
+    (logits [V], hidden [d], k_rows [L,H,s_pre,Dh], v_rows [L,H,s_pre,Dh])."""
+    h, dh = cfg.n_heads, cfg.d_head
+
+    def prefill(params, tokens, length):
+        t = s_pre
+        x = params[0][tokens][None]  # [1, t, d]
+        pos = jnp.arange(t, dtype=jnp.int32)
+        causal = jnp.tril(jnp.ones((t, t), bool))
+        k_rows, v_rows = [], []
+        for i in range(cfg.n_layers):
+            (ln1_g, ln1_b, wq, wk, wv, wo, ln2_g, ln2_b, w1, b1, w2, b2) = _layer_params(params, i)
+            y = _ln(x, ln1_g, ln1_b)
+            q = apply_rope((y @ wq).reshape(1, t, h, dh), pos[None])
+            k = apply_rope((y @ wk).reshape(1, t, h, dh), pos[None])
+            v = (y @ wv).reshape(1, t, h, dh)
+            scores = jnp.einsum("bthd,bshd->bhts", q, k) / np.sqrt(dh)
+            scores = jnp.where(causal[None, None], scores, -1e30)
+            att = jnp.einsum("bhts,bshd->bthd", jax.nn.softmax(scores, -1), v)
+            x = x + att.reshape(1, t, h * dh) @ wo
+            y = _ln(x, ln2_g, ln2_b)
+            x = x + jax.nn.gelu(y @ w1 + b1) @ w2 + b2
+            k_rows.append(k[0].transpose(1, 0, 2))  # [H, t, Dh]
+            v_rows.append(v[0].transpose(1, 0, 2))
+        x = _ln(x, params[-2], params[-1])
+        hidden = x[0, length - 1]
+        logits = hidden @ params[0].T
+        return logits, hidden, jnp.stack(k_rows), jnp.stack(v_rows)
+
+    return prefill
+
+
+# ---------------------------------------------------------------------------
+# Single-token decode
+# ---------------------------------------------------------------------------
+
+def make_decode(cfg: ModelConfig):
+    """(params..., k_cache [L,H,S,Dh], v_cache, token, pos) ->
+    (logits [V], hidden [d], k_row [L,H,Dh], v_row [L,H,Dh]).
+
+    Attends to cache rows < pos plus the current token itself."""
+    h, dh = cfg.n_heads, cfg.d_head
+
+    def decode(params, k_cache, v_cache, token, pos):
+        x = params[0][token]  # [d]
+        pos_arr = jnp.asarray(pos, jnp.int32)[None]
+        k_out, v_out = [], []
+        for i in range(cfg.n_layers):
+            (ln1_g, ln1_b, wq, wk, wv, wo, ln2_g, ln2_b, w1, b1, w2, b2) = _layer_params(params, i)
+            y = _ln(x, ln1_g, ln1_b)
+            q = apply_rope((y @ wq).reshape(1, h, dh), pos_arr)[0] / np.sqrt(dh)
+            k = apply_rope((y @ wk).reshape(1, h, dh), pos_arr)[0]
+            v = (y @ wv).reshape(h, dh)
+            m, l, acc = _attend_cache(q, k_cache[i], v_cache[i], pos)
+            # merge the token's own (k, v)
+            s_self = jnp.einsum("hd,hd->h", q, k)
+            m2, l2, a2 = _merge_softmax(m, l, acc, s_self, jnp.ones_like(l), v)
+            att = (a2 / l2[..., None]).reshape(h * dh)
+            x = x + att @ wo
+            y = _ln(x, ln2_g, ln2_b)
+            x = x + jax.nn.gelu(y @ w1 + b1) @ w2 + b2
+            k_out.append(k)
+            v_out.append(v)
+        x = _ln(x, params[-2], params[-1])
+        return x @ params[0].T, x, jnp.stack(k_out), jnp.stack(v_out)
+
+    return decode
+
+
+# ---------------------------------------------------------------------------
+# Sampling helpers (must be mirrored exactly by rust dist::Dist)
+# ---------------------------------------------------------------------------
+
+def transform_dist(logits, temp, top_p):
+    """softmax(logits / temp) followed by nucleus truncation.
+
+    Keep order: probabilities descending, ties broken by token id ascending;
+    a token is kept while the cumulative mass *before* it is < top_p.
+    """
+    logits = logits / jnp.maximum(temp, 1e-4)
+    probs = jax.nn.softmax(logits, axis=-1)
+    order = jnp.argsort(probs, axis=-1, stable=True, descending=True)
+    sorted_p = jnp.take_along_axis(probs, order, axis=-1)
+    cdf_excl = jnp.cumsum(sorted_p, axis=-1) - sorted_p
+    keep_sorted = cdf_excl < top_p
+    keep = jnp.put_along_axis(jnp.zeros_like(probs, bool), order, keep_sorted,
+                              axis=-1, inplace=False)
+    probs = jnp.where(keep, probs, 0.0)
+    return probs / probs.sum(-1, keepdims=True)
+
+
+def sample_from(probs, u):
+    """Inverse-CDF sampling; probs [..., V], u [...] in [0,1)."""
+    cdf = jnp.cumsum(probs, -1)
+    idx = jnp.sum(cdf < u[..., None] * cdf[..., -1:], axis=-1)
+    return jnp.minimum(idx, probs.shape[-1] - 1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Fused draft rollout (trunk when K == 1, branch fan-out otherwise)
+# ---------------------------------------------------------------------------
+
+def make_rollout(cfg: ModelConfig, k_paths: int, length: int):
+    """(params..., k_cache, v_cache, token, pos, uniforms [K, L], temp, top_p) ->
+      (tokens   [K, L]      sampled continuation per path,
+       dists    [K, L, V]   transformed q at each visited node,
+       hiddens  [K, L, d]   final-LN hidden at each visited node,
+       k_rows   [Lyr, K, L, H, Dh], v_rows same — KV rows for visited nodes
+       at positions pos..pos+L-1).
+
+    Step j embeds the current token (the shared start token at j=0), attends
+    to cache rows < pos plus its own path's rows <= j, emits the sampling
+    distribution q(.|path so far) and samples the next token. All K paths run
+    in one call, sharing the cache read — this is the fused drafting kernel
+    that keeps python-free drafting cheap (one dispatch per stage)."""
+    h, dh, d = cfg.n_heads, cfg.d_head, cfg.d_model
+    kk, ll = k_paths, length
+
+    def step_tokens(params, k_cache, v_cache, tokens_k, pos_j, own_k, own_v, j):
+        """One transformer pass for the K current tokens at position pos_j.
+        own_k/own_v: [Lyr, K, L, H, Dh] rows written so far (rows < j valid).
+        Returns hidden [K, d] (final-LN), plus per-layer rows [Lyr, K, H, Dh]."""
+        x = params[0][tokens_k]  # [K, d]
+        pos_arr = jnp.broadcast_to(pos_j, (kk, 1)).astype(jnp.int32)
+        rows_k, rows_v = [], []
+        for i in range(cfg.n_layers):
+            (ln1_g, ln1_b, wq, wk, wv, wo, ln2_g, ln2_b, w1, b1, w2, b2) = _layer_params(params, i)
+            y = _ln(x, ln1_g, ln1_b)
+            q = apply_rope((y @ wq).reshape(kk, 1, h, dh), pos_arr)[:, 0] / np.sqrt(dh)
+            k = apply_rope((y @ wk).reshape(kk, 1, h, dh), pos_arr)[:, 0]
+            v = (y @ wv).reshape(kk, h, dh)
+            m, l, acc = _attend_cache(q, k_cache[i], v_cache[i], pos_j)  # [K,H]...
+            # own-path rows (valid where idx < j)
+            s_own = jnp.einsum("khd,klhd->khl", q, own_k[i])
+            s_own = jnp.where(jnp.arange(ll)[None, None, :] < j, s_own, -1e30)
+            m2 = s_own.max(-1)
+            p2 = jnp.exp(s_own - m2[..., None])
+            l2 = p2.sum(-1)
+            a2 = jnp.einsum("khl,klhd->khd", p2, own_v[i])
+            m3, l3, a3 = _merge_softmax(m, l, acc, m2, l2, a2)
+            # current token's own (k, v)
+            s_self = jnp.einsum("khd,khd->kh", q, k)
+            m4, l4, a4 = _merge_softmax(m3, l3, a3, s_self, jnp.ones_like(l3), v)
+            att = (a4 / l4[..., None]).reshape(kk, h * dh)
+            x = x + att @ wo
+            y = _ln(x, ln2_g, ln2_b)
+            x = x + jax.nn.gelu(y @ w1 + b1) @ w2 + b2
+            rows_k.append(k)
+            rows_v.append(v)
+        x = _ln(x, params[-2], params[-1])
+        return x, jnp.stack(rows_k), jnp.stack(rows_v)
+
+    def rollout(params, k_cache, v_cache, token, pos, uniforms, temp, top_p):
+        own_k = jnp.zeros((cfg.n_layers, kk, ll, h, dh))
+        own_v = jnp.zeros((cfg.n_layers, kk, ll, h, dh))
+        tokens0 = jnp.broadcast_to(token, (kk,)).astype(jnp.int32)
+
+        def body(carry, j):
+            tokens_k, own_k, own_v = carry
+            hidden, rk, rv = step_tokens(params, k_cache, v_cache, tokens_k,
+                                         pos + j, own_k, own_v, j)
+            own_k = jax.lax.dynamic_update_slice(own_k, rk[:, :, None], (0, 0, j, 0, 0))
+            own_v = jax.lax.dynamic_update_slice(own_v, rv[:, :, None], (0, 0, j, 0, 0))
+            logits = hidden @ params[0].T  # [K, V]
+            dist = transform_dist(logits, temp, top_p)
+            nxt = sample_from(dist, uniforms[:, j])
+            out = (nxt, dist, hidden, rk, rv)
+            return (nxt, own_k, own_v), out
+
+        (_, _, _), (toks, dists, hiddens, rks, rvs) = jax.lax.scan(
+            body, (tokens0, own_k, own_v), jnp.arange(ll))
+        # scan stacks on axis 0 = step; reorder to documented layouts.
+        tokens_out = toks.transpose(1, 0)                    # [K, L]
+        dists_out = dists.transpose(1, 0, 2)                 # [K, L, V]
+        hiddens_out = hiddens.transpose(1, 0, 2)             # [K, L, d]
+        k_rows = rks.transpose(1, 2, 0, 3, 4)                # [Lyr, K, L, H, Dh]
+        v_rows = rvs.transpose(1, 2, 0, 3, 4)
+        return tokens_out, dists_out, hiddens_out, k_rows, v_rows
+
+    return rollout
+
+
+# ---------------------------------------------------------------------------
+# Tree verification pass (target model, Pallas kernel)
+# ---------------------------------------------------------------------------
+
+def make_tree_verify(cfg: ModelConfig, n_nodes: int):
+    """(params..., k_cache, v_cache, tree_tokens [N], tree_pos [N],
+        tree_bias [N, N], cache_len) ->
+      (logits [N, V], hidden [N, d], k_rows [Lyr, N, H, Dh], v_rows).
+
+    One batched target pass over the whole draft tree. tree_bias[i, j] is 0
+    when node j is an ancestor-or-self of node i (attention allowed) and a
+    large negative number otherwise. Node 0 is by convention the root token
+    (the last committed token, whose KV row is still missing); every node's
+    bias row allows node 0."""
+    h, dh = cfg.n_heads, cfg.d_head
+    n = n_nodes
+
+    def tree_verify(params, k_cache, v_cache, tree_tokens, tree_pos, tree_bias, cache_len):
+        x = params[0][tree_tokens]  # [N, d]
+        k_out, v_out = [], []
+        for i in range(cfg.n_layers):
+            (ln1_g, ln1_b, wq, wk, wv, wo, ln2_g, ln2_b, w1, b1, w2, b2) = _layer_params(params, i)
+            y = _ln(x, ln1_g, ln1_b)
+            q = apply_rope((y @ wq).reshape(n, h, dh), tree_pos)
+            k = apply_rope((y @ wk).reshape(n, h, dh), tree_pos)
+            v = (y @ wv).reshape(n, h, dh)
+            att = tree_attention(
+                q.transpose(1, 0, 2), k_cache[i], v_cache[i],
+                k.transpose(1, 0, 2), v.transpose(1, 0, 2), tree_bias, cache_len)
+            x = x + att.transpose(1, 0, 2).reshape(n, h * dh) @ wo
+            y = _ln(x, ln2_g, ln2_b)
+            x = x + jax.nn.gelu(y @ w1 + b1) @ w2 + b2
+            k_out.append(k)
+            v_out.append(v)
+        x = _ln(x, params[-2], params[-1])
+        logits = x @ params[0].T
+        return logits, x, jnp.stack(k_out), jnp.stack(v_out)
+
+    return tree_verify
+
+
+# ---------------------------------------------------------------------------
+# Convenience jitted wrappers for python tests
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def jit_prefill(cfg: ModelConfig, s_pre: int):
+    return jax.jit(make_prefill(cfg, s_pre))
+
+
+@functools.lru_cache(maxsize=None)
+def jit_decode(cfg: ModelConfig):
+    return jax.jit(make_decode(cfg))
+
+
+@functools.lru_cache(maxsize=None)
+def jit_rollout(cfg: ModelConfig, k: int, l: int):
+    return jax.jit(make_rollout(cfg, k, l))
+
+
+@functools.lru_cache(maxsize=None)
+def jit_tree_verify(cfg: ModelConfig, n: int):
+    return jax.jit(make_tree_verify(cfg, n))

@@ -1,0 +1,146 @@
+"""Build-time training of the target/draft model pairs.
+
+Three families mirroring the paper's capability ratios (DESIGN.md §5). Each
+model is a byte-level GPT trained with hand-rolled AdamW (no optax in this
+environment) on the synthetic multi-domain corpus. Training runs once per
+`make artifacts`; weights are cached under artifacts/<family>/.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus as corpus_mod
+from .model import ModelConfig, init_params, train_forward
+
+# ---------------------------------------------------------------------------
+# Families — DESIGN.md §5. d_head = 32 everywhere so the Pallas kernel sees a
+# single head geometry across families.
+# ---------------------------------------------------------------------------
+
+FAMILIES: dict[str, dict] = {
+    # medium-weak draft (Qwen-2.5 32B/0.5B analogue)
+    "qwen-sim": {
+        "target": ModelConfig(n_layers=4, d_model=128, n_heads=4, d_head=32),
+        "draft": ModelConfig(n_layers=2, d_model=64, n_heads=2, d_head=32),
+        "draft_step_frac": 1.0,
+    },
+    # very weak draft (Gemma-3 27B/270M analogue): tiny and under-trained
+    "gemma-sim": {
+        "target": ModelConfig(n_layers=5, d_model=128, n_heads=4, d_head=32),
+        "draft": ModelConfig(n_layers=1, d_model=32, n_heads=1, d_head=32),
+        "draft_step_frac": 0.34,
+    },
+    # strong draft (Llama-3 70B/8B analogue)
+    "llama-sim": {
+        "target": ModelConfig(n_layers=4, d_model=128, n_heads=4, d_head=32),
+        "draft": ModelConfig(n_layers=3, d_model=96, n_heads=3, d_head=32),
+        "draft_step_frac": 1.0,
+    },
+}
+
+BATCH = 4
+SEQ = 64
+
+
+def default_steps() -> int:
+    return int(os.environ.get("SPECDELAY_TRAIN_STEPS", "300"))
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_update(params, grads, m, v, step, lr, wd=0.01, b1=0.9, b2=0.999, eps=1e-8):
+    new_p, new_m, new_v = [], [], []
+    t = step + 1
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+    for p, g, mi, vi in zip(params, grads, m, v):
+        mi = b1 * mi + (1 - b1) * g
+        vi = b2 * vi + (1 - b2) * g * g
+        upd = (mi / c1) / (jnp.sqrt(vi / c2) + eps)
+        decay = wd if p.ndim >= 2 else 0.0  # no decay on gains/biases
+        new_p.append(p - lr * (upd + decay * p))
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_p, new_m, new_v
+
+
+def lr_schedule(step, steps, peak=3e-3, warmup=20):
+    warm = peak * (step + 1) / warmup
+    t = jnp.clip((step - warmup) / jnp.maximum(steps - warmup, 1), 0.0, 1.0)
+    cos = peak * (0.1 + 0.9 * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def _loss_fn(cfg, params, x, y):
+    logits = train_forward(cfg, params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+@functools.lru_cache(maxsize=None)
+def _train_step(cfg: ModelConfig, total_steps: int):
+    def step_fn(params, m, v, x, y, step):
+        loss, grads = jax.value_and_grad(lambda p: _loss_fn(cfg, p, x, y))(params)
+        gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in grads))
+        clip = jnp.minimum(1.0, 1.0 / (gnorm + 1e-6))
+        grads = [g * clip for g in grads]
+        lr = lr_schedule(step, total_steps)
+        params, m, v = adamw_update(params, grads, m, v, step, lr)
+        return params, m, v, loss
+
+    return jax.jit(step_fn, donate_argnums=(0, 1, 2))
+
+
+def train_model(cfg: ModelConfig, data: np.ndarray, steps: int, seed: int,
+                log_prefix: str = "") -> tuple[list, float]:
+    """Train one model on a uint8 token stream; returns (params, eval loss)."""
+    params = init_params(cfg, seed)
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    step_fn = _train_step(cfg, steps)
+    rng = np.random.default_rng(seed + 1)
+    n = len(data) - SEQ - 1
+
+    t0 = time.time()
+    loss = None
+    for s in range(steps):
+        idx = rng.integers(0, n, BATCH)
+        x = np.stack([data[i:i + SEQ] for i in idx]).astype(np.int32)
+        y = np.stack([data[i + 1:i + 1 + SEQ] for i in idx]).astype(np.int32)
+        params, m, v, loss = step_fn(params, m, v, jnp.array(x), jnp.array(y), s)
+        if s % 50 == 0 or s == steps - 1:
+            print(f"  {log_prefix} step {s:4d} loss {float(loss):.4f} "
+                  f"({time.time() - t0:.0f}s)", flush=True)
+
+    # held-out eval
+    eval_rng = np.random.default_rng(987)
+    idx = eval_rng.integers(0, n, 16)
+    x = np.stack([data[i:i + SEQ] for i in idx]).astype(np.int32)
+    y = np.stack([data[i + 1:i + 1 + SEQ] for i in idx]).astype(np.int32)
+    eval_loss = float(_loss_fn(cfg, params, jnp.array(x), jnp.array(y)))
+    return params, eval_loss
+
+
+def train_family(name: str, steps: int | None = None, seed: int = 7):
+    """Train the (target, draft) pair for one family."""
+    spec = FAMILIES[name]
+    steps = steps or default_steps()
+    data = np.frombuffer(corpus_mod.build_corpus(seed=0), dtype=np.uint8)
+    print(f"[train] family={name} corpus={len(data)} bytes steps={steps}")
+    target, t_loss = train_model(spec["target"], data, steps, seed,
+                                 log_prefix=f"{name}/target")
+    d_steps = max(20, int(steps * spec["draft_step_frac"]))
+    draft, d_loss = train_model(spec["draft"], data, d_steps, seed + 100,
+                                log_prefix=f"{name}/draft")
+    print(f"[train] {name}: target eval {t_loss:.4f}, draft eval {d_loss:.4f}")
+    return target, draft, t_loss, d_loss

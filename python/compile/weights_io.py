@@ -1,0 +1,53 @@
+"""Flat binary tensor container shared between python (writer) and rust (reader).
+
+Format (little-endian):
+    magic   u32 = 0x53504457  ("SPDW")
+    version u32 = 1
+    count   u32
+    then per tensor:
+        name_len u32, name bytes (utf-8)
+        ndim     u32, dims u32 * ndim
+        data     f32 * prod(dims)
+
+Tensors are written in the exact order the AOT-lowered HLO entry expects its
+parameter buffers, so the rust loader can upload them positionally.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = 0x53504457
+VERSION = 1
+
+
+def write_tensors(path: str, tensors: list[tuple[str, np.ndarray]]) -> None:
+    with open(path, "wb") as f:
+        f.write(struct.pack("<III", MAGIC, VERSION, len(tensors)))
+        for name, arr in tensors:
+            arr = np.ascontiguousarray(arr, dtype=np.float32)
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", arr.ndim))
+            f.write(struct.pack(f"<{arr.ndim}I", *arr.shape))
+            f.write(arr.tobytes())
+
+
+def read_tensors(path: str) -> list[tuple[str, np.ndarray]]:
+    out = []
+    with open(path, "rb") as f:
+        magic, version, count = struct.unpack("<III", f.read(12))
+        assert magic == MAGIC, f"bad magic {magic:#x}"
+        assert version == VERSION
+        for _ in range(count):
+            (name_len,) = struct.unpack("<I", f.read(4))
+            name = f.read(name_len).decode("utf-8")
+            (ndim,) = struct.unpack("<I", f.read(4))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            n = int(np.prod(dims)) if ndim else 1
+            data = np.frombuffer(f.read(4 * n), dtype=np.float32).reshape(dims)
+            out.append((name, data))
+    return out

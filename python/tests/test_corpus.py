@@ -1,0 +1,38 @@
+"""Synthetic corpus determinism and structure."""
+
+from compile import corpus
+
+
+def test_deterministic():
+    assert corpus.build_corpus(seed=3, docs_per_domain=20) == corpus.build_corpus(
+        seed=3, docs_per_domain=20)
+    assert corpus.build_corpus(seed=3, docs_per_domain=20) != corpus.build_corpus(
+        seed=4, docs_per_domain=20)
+
+
+def test_all_domains_present():
+    text = corpus.build_corpus(seed=0, docs_per_domain=30).decode("utf-8")
+    assert "story:" in text
+    assert "def " in text
+    assert "translate en->" in text
+    assert "Q: " in text and "A: " in text
+    assert "step1:" in text
+
+
+def test_prompts_are_prefixes():
+    prompts = corpus.build_prompts(per_domain=10)
+    assert set(prompts) == set(corpus.DOMAINS)
+    for domain, items in prompts.items():
+        assert len(items) == 10
+        for p in items:
+            assert 0 < len(p) < 200
+    # coding prompts end right after the signature
+    assert all(p.rstrip().endswith("):") for p in prompts["coding"])
+    # translation prompts stop at the arrow
+    assert all("=>" in p for p in prompts["translation"])
+
+
+def test_ascii_only():
+    # byte-level models: keep the corpus single-byte to avoid partial UTF-8
+    data = corpus.build_corpus(seed=0, docs_per_domain=50)
+    assert all(b < 128 for b in data)

@@ -1,0 +1,47 @@
+"""transform_dist / sample_from semantics — these must mirror the rust
+dist::Dist implementation exactly (same nucleus rule, same tie-breaking)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.model import sample_from, transform_dist
+
+
+def test_topp_truncation_rule():
+    # probs for logits [3,2,1,0] ~ [.643,.236,.087,.032]; top_p=0.8 keeps
+    # tokens while the exclusive cumulative mass is < 0.8 -> first two.
+    d = np.array(transform_dist(jnp.array([3.0, 2.0, 1.0, 0.0]), 1.0, 0.8))
+    assert d[2] == 0.0 and d[3] == 0.0
+    assert abs(d.sum() - 1.0) < 1e-6
+
+
+def test_topp_one_keeps_all():
+    d = np.array(transform_dist(jnp.array([0.0, 0.0, 0.0]), 1.0, 1.0))
+    np.testing.assert_allclose(d, np.ones(3) / 3, atol=1e-6)
+
+
+def test_temperature_sharpens():
+    cold = np.array(transform_dist(jnp.array([1.0, 2.0]), 0.2, 1.0))
+    hot = np.array(transform_dist(jnp.array([1.0, 2.0]), 2.0, 1.0))
+    assert cold[1] > hot[1]
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**16), temp=st.floats(0.1, 2.0), topp=st.floats(0.05, 1.0))
+def test_transform_always_valid(seed, temp, topp):
+    rng = np.random.default_rng(seed)
+    logits = jnp.array(rng.normal(size=16).astype(np.float32) * 4)
+    d = np.array(transform_dist(logits, temp, topp))
+    assert abs(d.sum() - 1.0) < 1e-4
+    assert (d >= 0).all()
+    assert d.max() > 0
+
+
+def test_inverse_cdf_sampling():
+    probs = jnp.array([0.2, 0.5, 0.3])
+    assert int(sample_from(probs, jnp.array(0.1))) == 0
+    assert int(sample_from(probs, jnp.array(0.3))) == 1
+    assert int(sample_from(probs, jnp.array(0.95))) == 2
+    # u ~ 1.0 clamps to the last token
+    assert int(sample_from(probs, jnp.array(0.999999))) == 2

@@ -1,0 +1,36 @@
+"""Weights container round-trip (the rust reader mirrors this format)."""
+
+import numpy as np
+import pytest
+
+from compile.weights_io import read_tensors, write_tensors
+
+
+def test_roundtrip(tmp_path):
+    tensors = [
+        ("emb", np.arange(12, dtype=np.float32).reshape(3, 4)),
+        ("bias", np.array([1.5, -2.0], dtype=np.float32)),
+        ("scalar", np.array(7.0, dtype=np.float32)),
+    ]
+    path = str(tmp_path / "w.bin")
+    write_tensors(path, tensors)
+    back = read_tensors(path)
+    assert [n for n, _ in back] == ["emb", "bias", "scalar"]
+    for (n1, a1), (n2, a2) in zip(tensors, back):
+        np.testing.assert_array_equal(np.asarray(a1, np.float32), a2)
+
+
+def test_order_preserved(tmp_path):
+    tensors = [(f"t{i}", np.full(2, i, np.float32)) for i in range(20)]
+    path = str(tmp_path / "many.bin")
+    write_tensors(path, tensors)
+    back = read_tensors(path)
+    assert [n for n, _ in back] == [f"t{i}" for i in range(20)]
+
+
+def test_bad_magic_rejected(tmp_path):
+    path = str(tmp_path / "bad.bin")
+    with open(path, "wb") as f:
+        f.write(b"\x00" * 16)
+    with pytest.raises(AssertionError):
+        read_tensors(path)

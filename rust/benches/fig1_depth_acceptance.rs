@@ -1,0 +1,6 @@
+//! Regenerates paper Figure 1: depth-wise L1(p,q) divergence and OTLP
+//! acceptance rates over offline trees along target trajectories.
+use specdelay::benchkit::{experiments, Scale};
+fn main() {
+    experiments::figure_1(Scale::from_env(), "llama-sim").expect("fig1");
+}

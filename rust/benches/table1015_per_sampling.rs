@@ -1,0 +1,8 @@
+//! Regenerates paper Tables 10-15: per-sampling-configuration breakdown
+//! for each model family.
+use specdelay::benchkit::{experiments, Scale};
+fn main() {
+    for f in specdelay::benchkit::FAMILIES {
+        experiments::tables_10_15(Scale::from_env(), f).expect("tables 10-15");
+    }
+}

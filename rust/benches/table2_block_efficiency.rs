@@ -1,0 +1,6 @@
+//! Regenerates paper Table 2 (average block efficiency per family).
+//! SPECDELAY_BENCH_SCALE=quick|std|full controls cost.
+use specdelay::benchkit::{experiments, Scale};
+fn main() {
+    experiments::tables_2_3(Scale::from_env()).expect("table 2/3");
+}

@@ -1,0 +1,6 @@
+//! Regenerates paper Table 3 (average throughput per family). Shares the
+//! sweep with table2 (both tables come from the same grid).
+use specdelay::benchkit::{experiments, Scale};
+fn main() {
+    experiments::tables_2_3(Scale::from_env()).expect("table 2/3");
+}

@@ -1,0 +1,6 @@
+//! Regenerates paper Tables 4+5: NDE improvement ratios over static
+//! baselines (trains selectors on demand).
+use specdelay::benchkit::{experiments, Scale};
+fn main() {
+    experiments::tables_4_7(Scale::from_env()).expect("tables 4-7");
+}

@@ -1,0 +1,5 @@
+//! Regenerates paper Tables 6+7: Traversal vs NDE methods.
+use specdelay::benchkit::{experiments, Scale};
+fn main() {
+    experiments::tables_4_7(Scale::from_env()).expect("tables 4-7");
+}

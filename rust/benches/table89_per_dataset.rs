@@ -1,0 +1,6 @@
+//! Regenerates paper Tables 8+9: per-dataset breakdown incl. delayed
+//! expansion variants and Traversal K=2..4.
+use specdelay::benchkit::{experiments, Scale};
+fn main() {
+    experiments::tables_8_9(Scale::from_env()).expect("tables 8/9");
+}

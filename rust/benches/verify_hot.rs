@@ -1,0 +1,78 @@
+//! Hot-path microbenchmark: verification algorithms + branching calculators
+//! on synthetic dists (pure L3, no PJRT). Used by the §Perf pass.
+use std::time::Instant;
+
+use specdelay::dist::Dist;
+use specdelay::tree::{DraftTree, PathDraws, Provenance};
+use specdelay::util::Pcg64;
+use specdelay::verify;
+
+fn random_dist(v: usize, rng: &mut Pcg64, sharp: f32) -> Dist {
+    let mut d: Vec<f32> = (0..v).map(|_| rng.next_f32().powf(sharp) + 1e-4).collect();
+    let s: f32 = d.iter().sum();
+    for x in d.iter_mut() { *x /= s; }
+    Dist(d)
+}
+
+fn make_tree(rng: &mut Pcg64, v: usize) -> DraftTree {
+    // trunk 2 + 3 branches of 3
+    let mut t = DraftTree::new(5);
+    let mut node = 0;
+    for s in 0..2 {
+        let q = random_dist(v, rng, 1.0);
+        let tok = q.sample(rng) as u32;
+        t.set_q(node, q);
+        t.set_p(node, random_dist(v, rng, 2.0));
+        node = t.add_child(node, tok, Provenance::Trunk { step: s + 1 });
+    }
+    let bp = node;
+    let mut paths = Vec::new();
+    for b in 0..3 {
+        let mut cur = bp;
+        for s in 0..3 {
+            if t.nodes[cur].q.is_none() {
+                t.set_q(cur, random_dist(v, rng, 1.0));
+            }
+            if t.nodes[cur].p.is_none() {
+                t.set_p(cur, random_dist(v, rng, 2.0));
+            }
+            let tok = t.nodes[cur].q.as_ref().unwrap().sample(rng) as u32;
+            cur = t.add_child(cur, tok, Provenance::Branch { branch: b, step: s + 1 });
+        }
+        if t.nodes[cur].p.is_none() {
+            t.set_p(cur, random_dist(v, rng, 2.0));
+        }
+        paths.push(t.path_nodes(cur));
+    }
+    t.path_draws = Some(PathDraws { paths, shared_edges: 2 });
+    t
+}
+
+fn main() {
+    let v = 259;
+    let iters = 2000;
+    let mut rng = Pcg64::seeded(1);
+    let trees: Vec<DraftTree> = (0..64).map(|_| make_tree(&mut rng, v)).collect();
+    println!("{:<12} {:>12} {:>14}", "verifier", "us/verify", "us/branching");
+    for name in ["NSS", "Naive", "NaiveTree", "SpecTr", "SpecInfer", "Khisti", "BV", "Traversal"] {
+        let ver = verify::verifier(name).unwrap();
+        let t0 = Instant::now();
+        for i in 0..iters {
+            let _ = ver.verify(&trees[i % trees.len()], &mut rng);
+        }
+        let per_verify = t0.elapsed().as_secs_f64() / iters as f64 * 1e6;
+        let per_branch = if let Some(solver) = verify::ot_solver(name) {
+            let p = random_dist(v, &mut rng, 2.0);
+            let q = random_dist(v, &mut rng, 1.0);
+            let xs: Vec<u32> = (0..4).map(|_| q.sample(&mut rng) as u32).collect();
+            let t1 = Instant::now();
+            for _ in 0..iters {
+                let _ = solver.branching(&p, &q, &xs);
+            }
+            t1.elapsed().as_secs_f64() / iters as f64 * 1e6
+        } else {
+            f64::NAN
+        };
+        println!("{name:<12} {per_verify:>12.1} {per_branch:>14.1}");
+    }
+}

@@ -1,0 +1,456 @@
+//! Generators for every table and figure in the paper's evaluation
+//! (experiment index in DESIGN.md §7). Each prints the same rows the paper
+//! reports and returns the numbers for EXPERIMENTS.md.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Result};
+
+use super::{
+    artifacts_dir, ascii_plot, best_static, domain_label, load_engine, load_prompts, print_table,
+    run_config, ConfigResult, Scale, DOMAINS, FAMILIES,
+};
+use crate::coordinator::{FixedPolicy, SpecEngine};
+use crate::dist::{Dist, SamplingConfig};
+use crate::draft::Action;
+use crate::runtime::Engine;
+use crate::selector::{
+    self, action_space, collect_traces, load_checkpoint, save_checkpoint, train, LatencyModel,
+    NeuralPolicy, TrainConfig,
+};
+use crate::util::stats::Running;
+use crate::util::Pcg64;
+use crate::verify;
+
+pub const ALGOS: [&str; 8] =
+    ["NSS", "BV", "Khisti", "NaiveTree", "Naive", "SpecInfer", "SpecTr", "Traversal"];
+pub const OT_ALGOS: [&str; 5] = ["Khisti", "NaiveTree", "NSS", "SpecInfer", "SpecTr"];
+
+fn is_single_path(name: &str) -> bool {
+    matches!(name, "Naive" | "BV")
+}
+
+/// Tables 2 + 3: average block efficiency and throughput per family for all
+/// eight verification algorithms, best static (K, L) per configuration.
+pub fn tables_2_3(scale: Scale) -> Result<(Vec<(String, Vec<f64>)>, Vec<(String, Vec<f64>)>)> {
+    let max_new = scale.max_new();
+    let grid = scale.kl_grid();
+    let mut be_rows: Vec<(String, Vec<f64>)> = Vec::new();
+    let mut tps_rows: Vec<(String, Vec<f64>)> = Vec::new();
+    for algo in ALGOS {
+        be_rows.push((algo.to_string(), Vec::new()));
+        tps_rows.push((algo.to_string(), Vec::new()));
+    }
+
+    for family in FAMILIES {
+        let engine = load_engine(family)?;
+        let mut be_acc = vec![Running::new(); ALGOS.len()];
+        let mut tps_acc = vec![Running::new(); ALGOS.len()];
+        for sampling in scale.sampling_grid() {
+            for domain in DOMAINS {
+                let prompts = load_prompts(domain, scale.prompts_per_domain())?;
+                for (ai, algo) in ALGOS.iter().enumerate() {
+                    let (be, tps, _, _) = best_static(
+                        &engine,
+                        algo,
+                        sampling,
+                        &prompts,
+                        max_new,
+                        &grid,
+                        0xbe5c + ai as u64,
+                        is_single_path(algo),
+                    )?;
+                    be_acc[ai].push(be);
+                    tps_acc[ai].push(tps);
+                }
+            }
+        }
+        for ai in 0..ALGOS.len() {
+            be_rows[ai].1.push(be_acc[ai].mean());
+            tps_rows[ai].1.push(tps_acc[ai].mean());
+        }
+    }
+    // append row average
+    for rows in [&mut be_rows, &mut tps_rows] {
+        for (_n, v) in rows.iter_mut() {
+            let avg = v.iter().sum::<f64>() / v.len() as f64;
+            v.push(avg);
+        }
+        rows.sort_by(|a, b| a.1.last().partial_cmp(&b.1.last()).unwrap());
+    }
+    print_table("Table 2: average block efficiency", &["Qwen", "Gemma", "Llama", "Average"], &be_rows);
+    print_table("Table 3: average throughput (tok/s)", &["Qwen", "Gemma", "Llama", "Average"], &tps_rows);
+    Ok((be_rows, tps_rows))
+}
+
+/// Figure 1: depth-wise L1(p, q) divergence and OTLP acceptance rates over
+/// offline draft trees rooted along target trajectories.
+pub fn figure_1(scale: Scale, family: &str) -> Result<Vec<(String, Vec<f64>)>> {
+    let engine = load_engine(family)?;
+    let sampling = SamplingConfig::new(0.8, 1.0);
+    let spec = SpecEngine::new(&engine, sampling);
+    let depth_max = 6usize;
+    let k = 4usize;
+    let n_roots = match scale {
+        Scale::Quick => 12,
+        Scale::Std => 40,
+        Scale::Full => 200,
+    };
+
+    let solvers: Vec<&str> = OT_ALGOS.to_vec();
+    let mut l1_by_depth = vec![Running::new(); depth_max];
+    let mut acc_by_depth: BTreeMap<&str, Vec<Running>> = solvers
+        .iter()
+        .map(|&s| (s, vec![Running::new(); depth_max]))
+        .collect();
+
+    let mut rng = Pcg64::seeded(0xf16);
+    let mut collected = 0usize;
+    'outer: for domain in DOMAINS {
+        for prompt in load_prompts(domain, 3)? {
+            let mut seq = spec.start(&prompt)?;
+            // walk the target trajectory, dropping offline trees along it
+            for _ in 0..4 {
+                if seq.finished {
+                    break;
+                }
+                // offline tree: K i.i.d. paths of depth_max from the root
+                let drafted = crate::draft::draft_delayed(
+                    &engine,
+                    &seq.draft_kv,
+                    *seq.tokens.last().unwrap(),
+                    seq.root_pos,
+                    Action::new(k, 0, depth_max),
+                    sampling,
+                    &mut rng,
+                )?;
+                let mut tree = drafted.tree;
+                let n_bucket = engine.meta.tree_bucket(tree.len())?;
+                let (toks, pos) = tree.tokens_positions(n_bucket, seq.root_pos, crate::tokenizer::PAD);
+                let bias = tree.attention_bias(n_bucket);
+                let out = engine.tree_verify(
+                    n_bucket,
+                    &seq.target_kv.k,
+                    &seq.target_kv.v,
+                    &toks,
+                    &pos,
+                    &bias,
+                    seq.root_pos,
+                )?;
+                let v = engine.meta.target.vocab;
+                for i in 0..tree.len() {
+                    tree.set_p(i, Dist::from_logits(&out.logits[i * v..(i + 1) * v], sampling));
+                }
+                for i in 0..tree.len() {
+                    let d = tree.nodes[i].depth;
+                    if d >= depth_max || tree.nodes[i].q.is_none() {
+                        continue;
+                    }
+                    let p = tree.nodes[i].p.as_ref().unwrap();
+                    let q = tree.nodes[i].q.as_ref().unwrap();
+                    l1_by_depth[d].push(Dist::l1(p, q) as f64);
+                    for &s in &solvers {
+                        let solver = verify::ot_solver(s).unwrap();
+                        acc_by_depth.get_mut(s).unwrap()[d]
+                            .push(solver.acceptance_rate(p, q, k));
+                    }
+                }
+                collected += 1;
+                if collected >= n_roots {
+                    break 'outer;
+                }
+                // advance along the trajectory
+                let verifier = verify::verifier("SpecInfer").unwrap();
+                spec.step(&mut seq, verifier.as_ref(), Action::new(2, 2, 4), &mut rng)?;
+            }
+        }
+    }
+
+    let mut series: Vec<(String, Vec<f64>)> = vec![(
+        "L1(p,q)".to_string(),
+        l1_by_depth.iter().map(|r| r.mean()).collect(),
+    )];
+    for &s in &solvers {
+        series.push((
+            s.to_string(),
+            acc_by_depth[s].iter().map(|r| r.mean()).collect(),
+        ));
+    }
+    ascii_plot(
+        &format!("Figure 1 ({family}): L1 divergence & OTLP acceptance by tree depth (k={k})"),
+        "depth",
+        &series,
+    );
+    Ok(series)
+}
+
+// ---------------------------------------------------------------------------
+// NDE pipeline
+// ---------------------------------------------------------------------------
+
+fn selector_path(family: &str, solver: &str) -> PathBuf {
+    artifacts_dir().join("selector").join(format!("{family}_{solver}.json"))
+}
+
+/// Train (or load) the neural selector for one (family, solver). Trace
+/// collection is shared: the first missing solver triggers one collection
+/// pass that scores ALL OT solvers, then each selector trains from it.
+pub fn ensure_selector(
+    engine: &Engine,
+    family: &str,
+    solver: &str,
+    scale: Scale,
+) -> Result<selector::Checkpoint> {
+    let path = selector_path(family, solver);
+    if path.exists() {
+        return load_checkpoint(&path);
+    }
+    eprintln!("[nde] collecting traces for {family} (first use) ...");
+    let lat = LatencyModel::measure(engine)?;
+    let n_roots = match scale {
+        Scale::Quick => 10,
+        Scale::Std => 24,
+        Scale::Full => 80,
+    };
+    let mut prompts = Vec::new();
+    let grid = scale.sampling_grid();
+    for (i, domain) in DOMAINS.iter().enumerate() {
+        for p in load_prompts(domain, 2)? {
+            prompts.push((p, grid[i % grid.len()]));
+        }
+    }
+    let solvers: Vec<(&str, Box<dyn verify::OtlpSolver>)> = OT_ALGOS
+        .iter()
+        .map(|&n| (n, verify::ot_solver(n).unwrap()))
+        .collect();
+    let mut rng = Pcg64::seeded(0x7ace);
+    let roots = collect_traces(engine, &prompts, &lat, 96, &mut rng, &solvers, n_roots)?;
+    if roots.is_empty() {
+        return Err(anyhow!("no trace roots collected"));
+    }
+    // train every solver's selector from the shared traces
+    let cfg = TrainConfig::default();
+    let mut requested = None;
+    for s in OT_ALGOS {
+        let sp = selector_path(family, s);
+        if sp.exists() && s != solver {
+            continue;
+        }
+        let (ckpt, ratio) = train(
+            &roots,
+            s,
+            engine.meta.target.d_model,
+            engine.meta.draft.d_model,
+            &lat,
+            &cfg,
+        )?;
+        eprintln!(
+            "[nde] {family}/{s}: train TPS ratio {ratio:.3} over {} roots",
+            roots.len()
+        );
+        save_checkpoint(&sp, &ckpt, engine.meta.target.d_model, engine.meta.draft.d_model)?;
+        if s == solver {
+            requested = Some(ckpt);
+        }
+    }
+    requested.ok_or_else(|| anyhow!("solver {solver} not in OT set")).or_else(|_| load_checkpoint(&path))
+}
+
+/// Run one NDE configuration (trained selector policy).
+pub fn run_nde(
+    engine: &Engine,
+    solver: &str,
+    ckpt: selector::Checkpoint,
+    sampling: SamplingConfig,
+    prompts: &[String],
+    max_new: usize,
+    seed: u64,
+) -> Result<ConfigResult> {
+    let policy = NeuralPolicy::new(ckpt, engine.meta.target.max_seq);
+    run_config(engine, solver, &policy, sampling, prompts, max_new, seed)
+}
+
+/// Tables 4–7: NDE vs static baselines and vs Traversal.
+/// Returns (table4 rows, table5 rows, table6 rows, table7 rows).
+#[allow(clippy::type_complexity)]
+pub fn tables_4_7(
+    scale: Scale,
+) -> Result<(
+    Vec<(String, Vec<f64>)>,
+    Vec<(String, Vec<f64>)>,
+    Vec<(String, Vec<f64>)>,
+    Vec<(String, Vec<f64>)>,
+)> {
+    let max_new = scale.max_new();
+    let grid = scale.kl_grid();
+    let mut t4: Vec<(String, Vec<f64>)> = Vec::new();
+    let mut t5: Vec<(String, Vec<f64>)> = Vec::new();
+    let mut t6: Vec<(String, Vec<f64>)> = vec![("Traversal".into(), Vec::new())];
+    let mut t7: Vec<(String, Vec<f64>)> = vec![("Traversal".into(), Vec::new())];
+    for algo in OT_ALGOS {
+        t4.push((format!("{algo} NDE"), Vec::new()));
+        t5.push((format!("{algo} NDE"), Vec::new()));
+        t6.push((format!("{algo} NDE"), Vec::new()));
+        t7.push((format!("{algo} NDE"), Vec::new()));
+    }
+
+    for family in FAMILIES {
+        let engine = load_engine(family)?;
+        // Traversal reference
+        let mut trav_be = Running::new();
+        let mut trav_tps = Running::new();
+        // per OT algo accumulators: (nde_be, nde_tps, base_be, base_tps)
+        let mut acc = vec![(Running::new(), Running::new(), Running::new(), Running::new()); OT_ALGOS.len()];
+
+        for sampling in scale.sampling_grid() {
+            for domain in DOMAINS {
+                let prompts = load_prompts(domain, scale.prompts_per_domain())?;
+                let (be, tps, _, _) = best_static(
+                    &engine, "Traversal", sampling, &prompts, max_new, &grid, 0x7a41, false,
+                )?;
+                trav_be.push(be);
+                trav_tps.push(tps);
+                for (ai, algo) in OT_ALGOS.iter().enumerate() {
+                    let ckpt = ensure_selector(&engine, family, algo, scale)?;
+                    let r = run_nde(&engine, algo, ckpt, sampling, &prompts, max_new, 0x4de + ai as u64)?;
+                    let (sbe, stps, _, _) = best_static(
+                        &engine, algo, sampling, &prompts, max_new, &grid, 0xba5e + ai as u64, false,
+                    )?;
+                    acc[ai].0.push(r.block_eff.mean());
+                    acc[ai].1.push(r.tps.mean());
+                    acc[ai].2.push(sbe);
+                    acc[ai].3.push(stps);
+                }
+            }
+        }
+        t6[0].1.push(trav_be.mean());
+        t7[0].1.push(trav_tps.mean());
+        for (ai, _) in OT_ALGOS.iter().enumerate() {
+            t4[ai].1.push(acc[ai].0.mean() / acc[ai].2.mean().max(1e-9));
+            t5[ai].1.push(acc[ai].1.mean() / acc[ai].3.mean().max(1e-9));
+            t6[ai + 1].1.push(acc[ai].0.mean());
+            t7[ai + 1].1.push(acc[ai].1.mean());
+        }
+    }
+    for rows in [&mut t4, &mut t5, &mut t6, &mut t7] {
+        for (_n, v) in rows.iter_mut() {
+            let avg = v.iter().sum::<f64>() / v.len() as f64;
+            v.push(avg);
+        }
+    }
+    let hdr = &["Qwen", "Gemma", "Llama", "Average"];
+    print_table("Table 4: NDE block-efficiency ratio vs baseline", hdr, &t4);
+    print_table("Table 5: NDE throughput ratio vs baseline", hdr, &t5);
+    print_table("Table 6: block efficiency — Traversal vs NDE", hdr, &t6);
+    print_table("Table 7: throughput (tok/s) — Traversal vs NDE", hdr, &t7);
+    Ok((t4, t5, t6, t7))
+}
+
+/// Tables 8 + 9: per-dataset breakdown including delayed-expansion static
+/// variants and Traversal K ∈ {2,3,4} (averaged over families).
+pub fn tables_8_9(scale: Scale) -> Result<(Vec<(String, Vec<f64>)>, Vec<(String, Vec<f64>)>)> {
+    let max_new = scale.max_new();
+    let sampling = SamplingConfig::new(0.8, 1.0);
+    let mut rows_tps: Vec<(String, Vec<f64>)> = Vec::new();
+    let mut rows_be: Vec<(String, Vec<f64>)> = Vec::new();
+
+    // method list mirrors the paper's Table 8 rows
+    let mut methods: Vec<(String, String, Action)> = Vec::new();
+    for algo in OT_ALGOS {
+        methods.push((format!("{algo}, delayed"), algo.to_string(), Action::new(3, 2, 3)));
+        methods.push((algo.to_string(), algo.to_string(), Action::new(3, 0, 4)));
+    }
+    methods.push(("Naive".into(), "Naive".into(), Action::new(1, 5, 0)));
+    methods.push(("BV".into(), "BV".into(), Action::new(1, 5, 0)));
+    for k in [2, 3, 4] {
+        methods.push((format!("Traversal, K={k}"), "Traversal".into(), Action::new(k, 0, 4)));
+    }
+
+    let engines: Vec<Engine> = FAMILIES.iter().map(|f| load_engine(f)).collect::<Result<_>>()?;
+    for (name, verifier, action) in &methods {
+        let mut tps_cols = Vec::new();
+        let mut be_cols = Vec::new();
+        for domain in DOMAINS {
+            let prompts = load_prompts(domain, scale.prompts_per_domain())?;
+            let mut tps = Running::new();
+            let mut be = Running::new();
+            for engine in &engines {
+                let r = run_config(
+                    engine,
+                    verifier,
+                    &FixedPolicy(*action),
+                    sampling,
+                    &prompts,
+                    max_new,
+                    0x89,
+                )?;
+                tps.push(r.tps.mean());
+                be.push(r.block_eff.mean());
+            }
+            tps_cols.push(tps.mean());
+            be_cols.push(be.mean());
+        }
+        rows_tps.push((name.clone(), tps_cols));
+        rows_be.push((name.clone(), be_cols));
+    }
+    let hdr: Vec<&str> = DOMAINS.iter().map(|d| domain_label(d)).collect();
+    print_table("Table 8: tokens/s by dataset (family-avg)", &hdr, &rows_tps);
+    print_table("Table 9: block efficiency by dataset (family-avg)", &hdr, &rows_be);
+    Ok((rows_tps, rows_be))
+}
+
+/// Tables 10–15: per-sampling-configuration breakdown per family.
+pub fn tables_10_15(scale: Scale, family: &str) -> Result<(Vec<(String, Vec<f64>)>, Vec<(String, Vec<f64>)>)> {
+    let max_new = scale.max_new();
+    let engine = load_engine(family)?;
+    let configs: Vec<SamplingConfig> = match scale {
+        Scale::Quick => vec![
+            SamplingConfig::new(0.4, 1.0),
+            SamplingConfig::new(1.0, 1.0),
+            SamplingConfig::new(1.0, 0.9),
+        ],
+        _ => Scale::Full.sampling_grid(),
+    };
+    let methods: Vec<(String, String, Action)> = {
+        let mut m = Vec::new();
+        for algo in OT_ALGOS {
+            m.push((format!("{algo}, delayed"), algo.to_string(), Action::new(3, 2, 3)));
+            m.push((algo.to_string(), algo.to_string(), Action::new(3, 0, 4)));
+        }
+        m.push(("Naive".into(), "Naive".into(), Action::new(1, 5, 0)));
+        m.push(("BV".into(), "BV".into(), Action::new(1, 5, 0)));
+        for k in [2, 3, 4] {
+            m.push((format!("Traversal, K={k}"), "Traversal".into(), Action::new(k, 0, 4)));
+        }
+        m
+    };
+    let prompts = load_prompts("coding", scale.prompts_per_domain())?;
+    let mut rows_tps = Vec::new();
+    let mut rows_be = Vec::new();
+    for (name, verifier, action) in &methods {
+        let mut tps_cols = Vec::new();
+        let mut be_cols = Vec::new();
+        for &cfg in &configs {
+            let r = run_config(&engine, verifier, &FixedPolicy(*action), cfg, &prompts, max_new, 0x1015)?;
+            tps_cols.push(r.tps.mean());
+            be_cols.push(r.block_eff.mean());
+        }
+        rows_tps.push((name.clone(), tps_cols));
+        rows_be.push((name.clone(), be_cols));
+    }
+    let hdr: Vec<String> = configs
+        .iter()
+        .map(|c| {
+            if c.top_p < 1.0 {
+                format!("top-p={}", c.top_p)
+            } else {
+                format!("T={}", c.temperature)
+            }
+        })
+        .collect();
+    let hdr_refs: Vec<&str> = hdr.iter().map(|s| s.as_str()).collect();
+    print_table(&format!("Table 10-15 ({family}): throughput by sampling config"), &hdr_refs, &rows_tps);
+    print_table(&format!("Table 10-15 ({family}): block efficiency by sampling config"), &hdr_refs, &rows_be);
+    Ok((rows_tps, rows_be))
+}

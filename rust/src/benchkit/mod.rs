@@ -1,0 +1,268 @@
+//! Shared benchmark harness: workload loading, configuration sweeps, table
+//! formatting. Every paper table/figure bench (rust/benches/*) and the CLI
+//! route through these functions.
+//!
+//! Scale: `SPECDELAY_BENCH_SCALE=quick|std|full` controls prompt counts,
+//! generation lengths and grid sizes (quick is the default — the testbed is
+//! a single CPU core).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::{ActionPolicy, FixedPolicy, SpecEngine};
+use crate::dist::SamplingConfig;
+use crate::draft::Action;
+use crate::runtime::Engine;
+use crate::util::stats::Running;
+use crate::util::{Json, Pcg64};
+use crate::verify;
+
+pub const FAMILIES: [&str; 3] = ["qwen-sim", "gemma-sim", "llama-sim"];
+pub const DOMAINS: [&str; 5] = ["writing", "coding", "translation", "math_easy", "math_hard"];
+
+/// Paper display names per domain (Table 8/9 column headers).
+pub fn domain_label(d: &str) -> &'static str {
+    match d {
+        "writing" => "Writing",
+        "coding" => "Coding",
+        "translation" => "Translation",
+        "math_easy" => "Math (E)",
+        "math_hard" => "Math (H)",
+        _ => "?",
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Scale {
+    Quick,
+    Std,
+    Full,
+}
+
+impl Scale {
+    pub fn from_env() -> Scale {
+        match std::env::var("SPECDELAY_BENCH_SCALE").as_deref() {
+            Ok("full") => Scale::Full,
+            Ok("std") => Scale::Std,
+            _ => Scale::Quick,
+        }
+    }
+    pub fn prompts_per_domain(self) -> usize {
+        match self {
+            Scale::Quick => 1,
+            Scale::Std => 3,
+            Scale::Full => 8,
+        }
+    }
+    pub fn max_new(self) -> usize {
+        match self {
+            Scale::Quick => 24,
+            Scale::Std => 48,
+            Scale::Full => 96,
+        }
+    }
+    /// Sampling configurations (paper §4.1: 6 temperatures + 2 nucleus).
+    pub fn sampling_grid(self) -> Vec<SamplingConfig> {
+        match self {
+            Scale::Quick => vec![SamplingConfig::new(0.8, 1.0)],
+            Scale::Std => vec![
+                SamplingConfig::new(0.4, 1.0),
+                SamplingConfig::new(0.8, 1.0),
+                SamplingConfig::new(1.0, 0.9),
+            ],
+            Scale::Full => {
+                let mut v: Vec<SamplingConfig> = [0.2, 0.4, 0.6, 0.8, 1.0, 1.2]
+                    .iter()
+                    .map(|&t| SamplingConfig::new(t, 1.0))
+                    .collect();
+                v.push(SamplingConfig::new(1.0, 0.9));
+                v.push(SamplingConfig::new(1.0, 0.99));
+                v
+            }
+        }
+    }
+    /// Static (K, L) grid for the §4 comparison (best-of selection).
+    pub fn kl_grid(self) -> Vec<(usize, usize)> {
+        match self {
+            Scale::Quick => vec![(1, 4), (2, 4), (4, 4)],
+            Scale::Std => vec![(1, 4), (1, 6), (2, 4), (3, 4), (4, 4), (4, 6)],
+            Scale::Full => {
+                let mut v = Vec::new();
+                for k in 1..=4 {
+                    for l in [2, 4, 6, 8] {
+                        v.push((k, l));
+                    }
+                }
+                v
+            }
+        }
+    }
+}
+
+pub fn artifacts_dir() -> PathBuf {
+    PathBuf::from(
+        std::env::var("SPECDELAY_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string()),
+    )
+}
+
+/// Load held-out prompts for one domain.
+pub fn load_prompts(domain: &str, count: usize) -> Result<Vec<String>> {
+    let path = artifacts_dir().join("prompts").join(format!("{domain}.json"));
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let j = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+    Ok(j.as_arr()
+        .ok_or_else(|| anyhow!("prompts not an array"))?
+        .iter()
+        .filter_map(|v| v.as_str().map(|s| s.to_string()))
+        .take(count)
+        .collect())
+}
+
+pub fn load_engine(family: &str) -> Result<Engine> {
+    Engine::load(&artifacts_dir().join(family))
+}
+
+/// Measured outcome of one (engine, verifier, policy, sampling) config.
+#[derive(Clone, Debug, Default)]
+pub struct ConfigResult {
+    pub block_eff: Running,
+    pub tps: Running,
+}
+
+/// Run one configuration over a prompt set.
+#[allow(clippy::too_many_arguments)]
+pub fn run_config(
+    engine: &Engine,
+    verifier_name: &str,
+    policy: &dyn ActionPolicy,
+    sampling: SamplingConfig,
+    prompts: &[String],
+    max_new: usize,
+    seed: u64,
+) -> Result<ConfigResult> {
+    let verifier = verify::verifier(verifier_name)
+        .ok_or_else(|| anyhow!("unknown verifier {verifier_name}"))?;
+    let spec = SpecEngine::new(engine, sampling);
+    let mut out = ConfigResult::default();
+    for (i, p) in prompts.iter().enumerate() {
+        let mut rng = Pcg64::new(seed, i as u64);
+        let (_text, stats) = spec.generate(p, max_new, verifier.as_ref(), policy, &mut rng)?;
+        if stats.blocks > 0 {
+            out.block_eff.push(stats.block_efficiency());
+            out.tps.push(stats.tps());
+        }
+    }
+    Ok(out)
+}
+
+/// Best static i.i.d. configuration for a verifier (paper §4.2: select the
+/// (K, L) maximizing the metric). Returns (block_eff at best-be config,
+/// tps at best-tps config).
+#[allow(clippy::too_many_arguments)]
+pub fn best_static(
+    engine: &Engine,
+    verifier_name: &str,
+    sampling: SamplingConfig,
+    prompts: &[String],
+    max_new: usize,
+    grid: &[(usize, usize)],
+    seed: u64,
+    single_path_only: bool,
+) -> Result<(f64, f64, Action, Action)> {
+    let mut best_be = (f64::MIN, Action::new(1, 4, 0));
+    let mut best_tps = (f64::MIN, Action::new(1, 4, 0));
+    for &(k, l) in grid {
+        if single_path_only && k != 1 {
+            continue;
+        }
+        // i.i.d. multipath = delayed tree with L1 = 0
+        let action = if k == 1 { Action::new(1, l, 0) } else { Action::new(k, 0, l) };
+        let r = run_config(engine, verifier_name, &FixedPolicy(action), sampling, prompts, max_new, seed)?;
+        if r.block_eff.mean() > best_be.0 {
+            best_be = (r.block_eff.mean(), action);
+        }
+        if r.tps.mean() > best_tps.0 {
+            best_tps = (r.tps.mean(), action);
+        }
+    }
+    Ok((best_be.0, best_tps.0, best_be.1, best_tps.1))
+}
+
+/// Simple fixed-width table printer.
+pub fn print_table(title: &str, headers: &[&str], rows: &[(String, Vec<f64>)]) {
+    println!("\n=== {title} ===");
+    let w0 = rows
+        .iter()
+        .map(|(n, _)| n.len())
+        .chain([10])
+        .max()
+        .unwrap_or(10)
+        + 2;
+    print!("{:w0$}", "Method", w0 = w0);
+    for h in headers {
+        print!("{h:>12}");
+    }
+    println!();
+    for (name, vals) in rows {
+        print!("{name:w0$}", w0 = w0);
+        for v in vals {
+            if v.is_nan() {
+                print!("{:>12}", "-");
+            } else {
+                print!("{v:>12.2}");
+            }
+        }
+        println!();
+    }
+}
+
+/// ASCII line plot for Figure 1 style series.
+pub fn ascii_plot(title: &str, xlabel: &str, series: &[(String, Vec<f64>)]) {
+    println!("\n--- {title} ---");
+    let max = series
+        .iter()
+        .flat_map(|(_, v)| v.iter())
+        .cloned()
+        .fold(f64::MIN, f64::max);
+    let min = series
+        .iter()
+        .flat_map(|(_, v)| v.iter())
+        .cloned()
+        .fold(f64::MAX, f64::min);
+    let span = (max - min).max(1e-9);
+    for (name, vals) in series {
+        let bars: String = vals
+            .iter()
+            .map(|&v| {
+                let t = ((v - min) / span * 7.0).round() as usize;
+                ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'][t.min(7)]
+            })
+            .collect();
+        let nums: Vec<String> = vals.iter().map(|v| format!("{v:.3}")).collect();
+        println!("{name:>14} {bars}  [{}]", nums.join(", "));
+    }
+    println!("{:>14} ({xlabel} →)", "");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_grids_nonempty() {
+        for s in [Scale::Quick, Scale::Std, Scale::Full] {
+            assert!(!s.sampling_grid().is_empty());
+            assert!(!s.kl_grid().is_empty());
+            assert!(s.prompts_per_domain() >= 1);
+        }
+    }
+
+    #[test]
+    fn full_grid_matches_paper() {
+        assert_eq!(Scale::Full.sampling_grid().len(), 8);
+        assert_eq!(Scale::Full.kl_grid().len(), 16);
+    }
+}
+pub mod experiments;

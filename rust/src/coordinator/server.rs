@@ -1,0 +1,103 @@
+//! Minimal TCP line-protocol serving front-end.
+//!
+//! Protocol: one JSON object per line in, one per line out.
+//!   request:  {"prompt": "...", "max_new": 64, "temperature": 0.8,
+//!              "top_p": 1.0, "verifier": "SpecInfer", "k": 2, "l1": 2, "l2": 4}
+//!   response: {"text": "...", "tokens": n, "blocks": m, "tps": x,
+//!              "block_efficiency": y}
+//!
+//! Model execution is single-threaded per PJRT client (CPU); the listener
+//! accepts connections sequentially and processes requests in arrival order
+//! — a deliberate single-lane scheduler matching the 1-core testbed.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::{FixedPolicy, SpecEngine};
+use crate::dist::SamplingConfig;
+use crate::draft::Action;
+use crate::runtime::Engine;
+use crate::util::json::{num, obj, s, Json};
+use crate::util::Pcg64;
+use crate::verify;
+
+pub struct ServerConfig {
+    pub addr: String,
+    pub seed: u64,
+}
+
+/// Serve forever (or until `max_requests` when Some — used by tests).
+pub fn serve(engine: &Engine, cfg: &ServerConfig, max_requests: Option<usize>) -> Result<()> {
+    let listener = TcpListener::bind(&cfg.addr)?;
+    eprintln!("[specdelay] serving {} on {}", engine.meta.family, cfg.addr);
+    let mut rng = Pcg64::seeded(cfg.seed);
+    let mut served = 0usize;
+    for stream in listener.incoming() {
+        let stream = stream?;
+        served += handle_conn(engine, stream, &mut rng)?;
+        if let Some(m) = max_requests {
+            if served >= m {
+                break;
+            }
+        }
+    }
+    Ok(())
+}
+
+fn handle_conn(engine: &Engine, stream: TcpStream, rng: &mut Pcg64) -> Result<usize> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut out = stream;
+    let mut line = String::new();
+    let mut count = 0usize;
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(count);
+        }
+        let reply = match handle_request(engine, line.trim(), rng) {
+            Ok(j) => j,
+            Err(e) => obj(vec![("error", s(&format!("{e}")))]),
+        };
+        writeln!(out, "{reply}")?;
+        count += 1;
+    }
+}
+
+fn handle_request(engine: &Engine, line: &str, rng: &mut Pcg64) -> Result<Json> {
+    let req = Json::parse(line).map_err(|e| anyhow!("bad json: {e}"))?;
+    let prompt = req
+        .get("prompt")
+        .map_err(|e| anyhow!(e))?
+        .as_str()
+        .ok_or_else(|| anyhow!("prompt must be a string"))?
+        .to_string();
+    let gx = |k: &str, d: f64| req.get(k).ok().and_then(|v| v.as_f64()).unwrap_or(d);
+    let sampling = SamplingConfig::new(gx("temperature", 1.0) as f32, gx("top_p", 1.0) as f32);
+    let vname = req
+        .get("verifier")
+        .ok()
+        .and_then(|v| v.as_str())
+        .unwrap_or("SpecInfer")
+        .to_string();
+    let verifier =
+        verify::verifier(&vname).ok_or_else(|| anyhow!("unknown verifier {vname}"))?;
+    let action = Action::new(
+        gx("k", 2.0) as usize,
+        gx("l1", 2.0) as usize,
+        gx("l2", 4.0) as usize,
+    );
+    let max_new = gx("max_new", 64.0) as usize;
+
+    let spec = SpecEngine::new(engine, sampling);
+    let (text, stats) =
+        spec.generate(&prompt, max_new, verifier.as_ref(), &FixedPolicy(action), rng)?;
+    Ok(obj(vec![
+        ("text", s(&text)),
+        ("tokens", num(stats.tokens as f64)),
+        ("blocks", num(stats.blocks as f64)),
+        ("tps", num(stats.tps())),
+        ("block_efficiency", num(stats.block_efficiency())),
+    ]))
+}

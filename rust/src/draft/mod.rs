@@ -1,0 +1,195 @@
+//! Drafting policies: (K, L1, L2) delayed-tree construction (paper
+//! Definition 5.2) over the fused AOT rollout entry points.
+//!
+//! A delayed tree needs at most two PJRT dispatches: one trunk rollout
+//! (single path, exact compiled length) and one branch rollout (K paths,
+//! bucketed length, truncated to L2). Root-node i.i.d. multipath (paper
+//! §3.2) is the L1 = 0 special case; single-path drafting is K ≤ 1 or
+//! L2 = 0.
+
+use anyhow::Result;
+
+use crate::dist::{Dist, SamplingConfig};
+use crate::kvcache::KvCache;
+use crate::runtime::{Engine, RolloutOut};
+use crate::tree::{DraftTree, PathDraws, Provenance};
+use crate::util::Pcg64;
+
+/// A delayed-expansion action a = (K, L1, L2) from the paper's action space.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Action {
+    pub k: usize,
+    pub l1: usize,
+    pub l2: usize,
+}
+
+impl Action {
+    pub fn new(k: usize, l1: usize, l2: usize) -> Action {
+        Action { k, l1, l2 }
+    }
+
+    /// Canonicalize: K=1 trees are single paths (trunk only, capped at the
+    /// longest compiled trunk); L2 = 0 likewise.
+    pub fn normalized(self, max_trunk: usize) -> Action {
+        if self.k <= 1 || self.l2 == 0 {
+            Action { k: 1, l1: (self.l1 + self.l2).min(max_trunk), l2: 0 }
+        } else {
+            Action { k: self.k.min(4), l1: self.l1, l2: self.l2 }
+        }
+    }
+
+    /// Number of tree nodes including the root.
+    pub fn nodes(&self) -> usize {
+        1 + self.l1 + if self.k > 1 { self.k * self.l2 } else { 0 }
+    }
+}
+
+/// Drafting output: the merged tree plus raw rollout tensors for KV commits.
+pub struct Drafted {
+    pub tree: DraftTree,
+    pub trunk: Option<RolloutOut>,
+    pub branch: Option<RolloutOut>,
+    /// node index of the trunk end (branch point); root if L1 = 0
+    pub branch_point: usize,
+}
+
+/// Draft a delayed tree from the current draft KV cache.
+///
+/// `root_token` is the last committed token at position `root_pos`; the
+/// draft cache must hold valid rows for positions < root_pos.
+#[allow(clippy::too_many_arguments)]
+pub fn draft_delayed(
+    engine: &Engine,
+    draft_kv: &KvCache,
+    root_token: u32,
+    root_pos: usize,
+    action: Action,
+    sampling: SamplingConfig,
+    rng: &mut Pcg64,
+) -> Result<Drafted> {
+    let meta = &engine.meta;
+    let max_trunk = meta.trunk_lens.iter().copied().max().unwrap_or(8);
+    let a = action.normalized(max_trunk);
+    let v = meta.draft.vocab;
+
+    let mut tree = DraftTree::new(root_token);
+    let mut trunk_out = None;
+    let mut branch_out = None;
+    let mut node = 0usize; // walk pointer (trunk end)
+
+    // --- trunk rollout (single path, exact length) ---
+    if a.l1 > 0 {
+        let uniforms: Vec<f32> = (0..a.l1).map(|_| rng.next_f32()).collect();
+        let out = engine.rollout(
+            1,
+            a.l1,
+            &draft_kv.k,
+            &draft_kv.v,
+            root_token,
+            root_pos,
+            &uniforms,
+            sampling.temperature,
+            sampling.top_p,
+        )?;
+        for step in 0..a.l1 {
+            let q = Dist(out.dists[step * v..(step + 1) * v].to_vec());
+            tree.set_q(node, q);
+            let tok = out.tokens[step] as u32;
+            node = tree.add_child(node, tok, Provenance::Trunk { step: step + 1 });
+        }
+        trunk_out = Some(out);
+    }
+    let branch_point = node;
+
+    // --- branch rollout (K paths, bucketed length) ---
+    let mut paths: Vec<Vec<usize>> = Vec::new();
+    if a.k > 1 && a.l2 > 0 {
+        let lb = meta.branch_bucket(a.l2)?;
+        let start_token = tree.nodes[branch_point].token;
+        let start_pos = root_pos + a.l1;
+        let uniforms: Vec<f32> = (0..a.k * lb).map(|_| rng.next_f32()).collect();
+        let out = engine.rollout(
+            a.k,
+            lb,
+            &draft_kv.k,
+            &draft_kv.v,
+            start_token,
+            start_pos,
+            &uniforms,
+            sampling.temperature,
+            sampling.top_p,
+        )?;
+        for b in 0..a.k {
+            let mut cur = branch_point;
+            for step in 0..a.l2 {
+                let q = Dist(out.dists[(b * lb + step) * v..(b * lb + step + 1) * v].to_vec());
+                if tree.nodes[cur].q.is_none() {
+                    tree.set_q(cur, q);
+                }
+                let tok = out.tokens[b * lb + step] as u32;
+                cur = tree.add_child(cur, tok, Provenance::Branch { branch: b, step: step + 1 });
+            }
+            paths.push(tree.path_nodes(cur));
+        }
+        branch_out = Some(out);
+    } else if a.l1 > 0 {
+        paths.push(tree.path_nodes(node));
+    }
+
+    tree.path_draws = Some(PathDraws { paths, shared_edges: a.l1 });
+    Ok(Drafted { tree, trunk: trunk_out, branch: branch_out, branch_point })
+}
+
+/// KV rows that must be written into the draft cache when the chain of
+/// accepted nodes is committed. Returns (max trunk step, Option<(branch id,
+/// max branch step)>) over the accepted chain (+ the always-present rows).
+pub fn accepted_row_extent(
+    tree: &DraftTree,
+    accepted: &[usize],
+) -> (Option<usize>, Option<(usize, usize)>) {
+    let mut trunk_max: Option<usize> = None;
+    let mut branch_max: Option<(usize, usize)> = None;
+    for &n in accepted {
+        match tree.nodes[n].provenance {
+            Provenance::Trunk { step } => {
+                // node's own row is at rollout step `step` only while it was
+                // *visited*; the deepest trunk token's row comes from the
+                // branch rollout (step 0), which commit_branch covers.
+                trunk_max = Some(trunk_max.map_or(step, |m: usize| m.max(step)));
+            }
+            Provenance::Branch { branch, step } => {
+                let cur = branch_max.map_or(step, |(_, m)| m.max(step));
+                branch_max = Some((branch, cur));
+            }
+            Provenance::Root => {}
+        }
+    }
+    (trunk_max, branch_max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalization() {
+        assert_eq!(Action::new(1, 3, 5).normalized(8), Action::new(1, 8, 0));
+        assert_eq!(Action::new(3, 0, 4).normalized(8), Action::new(3, 0, 4));
+        assert_eq!(Action::new(2, 2, 0).normalized(8), Action::new(1, 2, 0));
+        assert_eq!(Action::new(4, 8, 8).normalized(8).nodes(), 1 + 8 + 32);
+    }
+
+    #[test]
+    fn extent_tracks_deepest() {
+        let mut t = DraftTree::new(0);
+        let a = t.add_child(0, 1, Provenance::Trunk { step: 1 });
+        let b = t.add_child(a, 2, Provenance::Trunk { step: 2 });
+        let c = t.add_child(b, 3, Provenance::Branch { branch: 2, step: 1 });
+        let (tm, bm) = accepted_row_extent(&t, &[a, b, c]);
+        assert_eq!(tm, Some(2));
+        assert_eq!(bm, Some((2, 1)));
+        let (tm, bm) = accepted_row_extent(&t, &[a]);
+        assert_eq!(tm, Some(1));
+        assert_eq!(bm, None);
+    }
+}

@@ -1,0 +1,176 @@
+//! Host-resident KV cache with row-level commit.
+//!
+//! The AOT entry points are pure: caches go in as arguments and new rows
+//! come back as outputs. The manager owns the canonical [L, H, S, Dh] f32
+//! buffers per sequence, scatters accepted rows after verification, and
+//! rolls back simply by *not* committing rejected rows.
+
+use crate::runtime::ModelDims;
+
+#[derive(Clone)]
+pub struct KvCache {
+    pub dims: ModelDims,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    /// Number of committed rows (tokens with valid KV), i.e. the position
+    /// where the next row will be written.
+    pub len: usize,
+}
+
+impl KvCache {
+    pub fn new(dims: ModelDims) -> KvCache {
+        let n = dims.kv_elems();
+        KvCache { dims, k: vec![0.0; n], v: vec![0.0; n], len: 0 }
+    }
+
+    #[inline]
+    fn row_offset(&self, layer: usize, head: usize, pos: usize) -> usize {
+        ((layer * self.dims.n_heads + head) * self.dims.max_seq + pos) * self.dims.d_head
+    }
+
+    /// Commit prefill rows laid out [L, H, s_pre, Dh] for positions 0..len.
+    pub fn commit_prefill(&mut self, k_rows: &[f32], v_rows: &[f32], s_pre: usize, len: usize) {
+        let (lyr, h, dh) = (self.dims.n_layers, self.dims.n_heads, self.dims.d_head);
+        assert_eq!(k_rows.len(), lyr * h * s_pre * dh);
+        for l in 0..lyr {
+            for hh in 0..h {
+                let src = ((l * h + hh) * s_pre) * dh;
+                let dst = self.row_offset(l, hh, 0);
+                self.k[dst..dst + len * dh].copy_from_slice(&k_rows[src..src + len * dh]);
+                self.v[dst..dst + len * dh].copy_from_slice(&v_rows[src..src + len * dh]);
+            }
+        }
+        self.len = len;
+    }
+
+    /// Commit one row laid out [L, H, Dh] at `pos`.
+    pub fn commit_row(&mut self, k_row: &[f32], v_row: &[f32], pos: usize) {
+        let (lyr, h, dh) = (self.dims.n_layers, self.dims.n_heads, self.dims.d_head);
+        assert_eq!(k_row.len(), lyr * h * dh);
+        for l in 0..lyr {
+            for hh in 0..h {
+                let src = (l * h + hh) * dh;
+                let dst = self.row_offset(l, hh, pos);
+                self.k[dst..dst + dh].copy_from_slice(&k_row[src..src + dh]);
+                self.v[dst..dst + dh].copy_from_slice(&v_row[src..src + dh]);
+            }
+        }
+        self.len = self.len.max(pos + 1);
+    }
+
+    /// Commit rollout rows [Lyr, K, L, H, Dh]: path `branch`, steps
+    /// 0..=last_step, at positions base_pos + step.
+    #[allow(clippy::too_many_arguments)]
+    pub fn commit_rollout_rows(
+        &mut self,
+        k_rows: &[f32],
+        v_rows: &[f32],
+        k_paths: usize,
+        l_steps: usize,
+        branch: usize,
+        last_step: usize,
+        base_pos: usize,
+    ) {
+        let (lyr, h, dh) = (self.dims.n_layers, self.dims.n_heads, self.dims.d_head);
+        assert_eq!(k_rows.len(), lyr * k_paths * l_steps * h * dh);
+        for l in 0..lyr {
+            for step in 0..=last_step {
+                for hh in 0..h {
+                    let src = ((((l * k_paths + branch) * l_steps) + step) * h + hh) * dh;
+                    let dst = self.row_offset(l, hh, base_pos + step);
+                    self.k[dst..dst + dh].copy_from_slice(&k_rows[src..src + dh]);
+                    self.v[dst..dst + dh].copy_from_slice(&v_rows[src..src + dh]);
+                }
+            }
+        }
+        self.len = self.len.max(base_pos + last_step + 1);
+    }
+
+    /// Commit tree-pass rows [Lyr, N, H, Dh] for node `node_idx` at `pos`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn commit_tree_row(
+        &mut self,
+        k_rows: &[f32],
+        v_rows: &[f32],
+        n_bucket: usize,
+        node_idx: usize,
+        pos: usize,
+    ) {
+        let (lyr, h, dh) = (self.dims.n_layers, self.dims.n_heads, self.dims.d_head);
+        assert_eq!(k_rows.len(), lyr * n_bucket * h * dh);
+        for l in 0..lyr {
+            for hh in 0..h {
+                let src = ((l * n_bucket + node_idx) * h + hh) * dh;
+                let dst = self.row_offset(l, hh, pos);
+                self.k[dst..dst + dh].copy_from_slice(&k_rows[src..src + dh]);
+                self.v[dst..dst + dh].copy_from_slice(&v_rows[src..src + dh]);
+            }
+        }
+        self.len = self.len.max(pos + 1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> ModelDims {
+        ModelDims { n_layers: 2, d_model: 8, n_heads: 2, d_head: 4, vocab: 10, max_seq: 16 }
+    }
+
+    #[test]
+    fn commit_row_places_values() {
+        let mut c = KvCache::new(dims());
+        let row: Vec<f32> = (0..16).map(|x| x as f32).collect(); // [2,2,4]
+        c.commit_row(&row, &row, 3);
+        assert_eq!(c.len, 4);
+        // layer 1, head 1 slice = row[12..16]
+        let off = c.row_offset(1, 1, 3);
+        assert_eq!(&c.k[off..off + 4], &[12.0, 13.0, 14.0, 15.0]);
+        // untouched rows remain zero
+        let off2 = c.row_offset(1, 1, 2);
+        assert_eq!(&c.k[off2..off2 + 4], &[0.0; 4]);
+    }
+
+    #[test]
+    fn commit_prefill_layout() {
+        let d = dims();
+        let mut c = KvCache::new(d);
+        let s_pre = 4;
+        let n = d.n_layers * d.n_heads * s_pre * d.d_head;
+        let rows: Vec<f32> = (0..n).map(|x| x as f32).collect();
+        c.commit_prefill(&rows, &rows, s_pre, 3);
+        assert_eq!(c.len, 3);
+        // layer 0, head 1, pos 2 = src offset ((0*2+1)*4+2)*4 = 24
+        let off = c.row_offset(0, 1, 2);
+        assert_eq!(c.k[off], 24.0);
+    }
+
+    #[test]
+    fn commit_rollout_rows_branch_selection() {
+        let d = dims();
+        let mut c = KvCache::new(d);
+        let (kp, ls) = (3, 2);
+        let n = d.n_layers * kp * ls * d.n_heads * d.d_head;
+        let rows: Vec<f32> = (0..n).map(|x| x as f32).collect();
+        c.commit_rollout_rows(&rows, &rows, kp, ls, 1, 1, 5);
+        assert_eq!(c.len, 7);
+        // layer 0, branch 1, step 0, head 0: src ((0*3+1)*2+0)*2*4 + 0 = 16
+        let off = c.row_offset(0, 0, 5);
+        assert_eq!(c.k[off], 16.0);
+    }
+
+    #[test]
+    fn commit_tree_row_layout() {
+        let d = dims();
+        let mut c = KvCache::new(d);
+        let nb = 4;
+        let n = d.n_layers * nb * d.n_heads * d.d_head;
+        let rows: Vec<f32> = (0..n).map(|x| x as f32).collect();
+        c.commit_tree_row(&rows, &rows, nb, 2, 7);
+        // layer 1, node 2, head 0: src ((1*4+2)*2+0)*4 = 48
+        let off = c.row_offset(1, 0, 7);
+        assert_eq!(c.k[off], 48.0);
+        assert_eq!(c.len, 8);
+    }
+}

@@ -1,0 +1,25 @@
+//! specdelay — reproduction of "Dynamic Delayed Tree Expansion For Improved
+//! Multi-Path Speculative Decoding" as a three-layer rust + JAX + Pallas stack.
+//!
+//! Layer 3 (this crate) is the serving coordinator: request routing, draft
+//! tree construction, verification, KV-cache management, the neural
+//! delay-and-branch selector, and the bench harness that regenerates every
+//! table and figure of the paper. Layers 1/2 (Pallas kernel + JAX model)
+//! live in `python/compile/` and are AOT-lowered to HLO text loaded by
+//! [`runtime`]. Python never runs on the request path.
+
+pub mod benchkit;
+pub mod coordinator;
+pub mod dist;
+pub mod draft;
+pub mod kvcache;
+pub mod selector;
+pub mod runtime;
+pub mod tokenizer;
+pub mod tree;
+pub mod util;
+pub mod verify;
+
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,168 @@
+//! specdelay CLI — the layer-3 leader entrypoint.
+//!
+//! Subcommands:
+//!   generate        one-off generation with any verifier/action
+//!   serve           TCP line-protocol server (see coordinator::server)
+//!   microbench      per-entry latency model (Eq. 11 inputs)
+//!   collect-traces  offline NDE trace collection
+//!   train-selector  fit the neural delay-and-branch predictor
+//!   bench <id>      regenerate a paper table/figure (table2, table3, fig1,
+//!                   table45, table67, table89, table1015)
+
+use anyhow::{anyhow, Result};
+
+use specdelay::benchkit::{self, experiments, Scale};
+use specdelay::coordinator::{server, FixedPolicy, SpecEngine};
+use specdelay::dist::SamplingConfig;
+use specdelay::draft::Action;
+use specdelay::selector::{self, LatencyModel};
+use specdelay::util::cli::Args;
+use specdelay::util::Pcg64;
+use specdelay::verify;
+
+fn main() {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print_usage();
+        std::process::exit(2);
+    }
+    let cmd = argv.remove(0);
+    let res = match cmd.as_str() {
+        "generate" => cmd_generate(argv),
+        "serve" => cmd_serve(argv),
+        "microbench" => cmd_microbench(argv),
+        "collect-traces" | "train-selector" => cmd_selector(argv),
+        "bench" => cmd_bench(argv),
+        "version" => {
+            println!("specdelay {}", specdelay::version());
+            Ok(())
+        }
+        _ => {
+            print_usage();
+            Err(anyhow!("unknown command {cmd}"))
+        }
+    };
+    if let Err(e) = res {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    eprintln!(
+        "usage: specdelay <generate|serve|microbench|collect-traces|train-selector|bench|version> [--opts]"
+    );
+}
+
+fn cmd_generate(argv: Vec<String>) -> Result<()> {
+    let a = Args::parse(argv, &["ar"]).map_err(|e| anyhow!(e))?;
+    let family = a.get_or("family", "qwen-sim").to_string();
+    let engine = benchkit::load_engine(&family)?;
+    let sampling = SamplingConfig::new(
+        a.get_f64("temperature", 0.8).map_err(|e| anyhow!(e))? as f32,
+        a.get_f64("top-p", 1.0).map_err(|e| anyhow!(e))? as f32,
+    );
+    let prompt = a.get_or("prompt", "Q: 6 * 7 = ? A:").to_string();
+    let max_new = a.get_usize("max-new", 64).map_err(|e| anyhow!(e))?;
+    let mut rng = Pcg64::seeded(a.get_usize("seed", 0).map_err(|e| anyhow!(e))? as u64);
+
+    if a.flag("ar") {
+        let (text, stats) = specdelay::coordinator::generate_autoregressive(
+            &engine, sampling, &prompt, max_new, &mut rng,
+        )?;
+        println!("{text}");
+        println!("-- AR: {} tokens, {:.2} tok/s", stats.tokens, stats.tps());
+        return Ok(());
+    }
+
+    let vname = a.get_or("verifier", "SpecInfer");
+    let verifier = verify::verifier(vname).ok_or_else(|| anyhow!("unknown verifier {vname}"))?;
+    let action = Action::new(
+        a.get_usize("k", 2).map_err(|e| anyhow!(e))?,
+        a.get_usize("l1", 2).map_err(|e| anyhow!(e))?,
+        a.get_usize("l2", 4).map_err(|e| anyhow!(e))?,
+    );
+    let spec = SpecEngine::new(&engine, sampling);
+    let (text, stats) = spec.generate(&prompt, max_new, verifier.as_ref(), &FixedPolicy(action), &mut rng)?;
+    println!("{text}");
+    println!(
+        "-- {vname} (K={},L1={},L2={}): {} tokens, block efficiency {:.2}, {:.2} tok/s",
+        action.k,
+        action.l1,
+        action.l2,
+        stats.tokens,
+        stats.block_efficiency(),
+        stats.tps()
+    );
+    Ok(())
+}
+
+fn cmd_serve(argv: Vec<String>) -> Result<()> {
+    let a = Args::parse(argv, &[]).map_err(|e| anyhow!(e))?;
+    let family = a.get_or("family", "qwen-sim").to_string();
+    let engine = benchkit::load_engine(&family)?;
+    let cfg = server::ServerConfig {
+        addr: a.get_or("addr", "127.0.0.1:7333").to_string(),
+        seed: a.get_usize("seed", 0).map_err(|e| anyhow!(e))? as u64,
+    };
+    server::serve(&engine, &cfg, None)
+}
+
+fn cmd_microbench(argv: Vec<String>) -> Result<()> {
+    let a = Args::parse(argv, &[]).map_err(|e| anyhow!(e))?;
+    let family = a.get_or("family", "qwen-sim").to_string();
+    let engine = benchkit::load_engine(&family)?;
+    let lat = LatencyModel::measure(&engine)?;
+    println!("{}", lat.to_json().to_string_pretty());
+    Ok(())
+}
+
+fn cmd_selector(argv: Vec<String>) -> Result<()> {
+    let a = Args::parse(argv, &[]).map_err(|e| anyhow!(e))?;
+    let scale = Scale::from_env();
+    let families: Vec<String> = a
+        .get_or("family", "qwen-sim,gemma-sim,llama-sim")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect();
+    let solvers: Vec<String> = a
+        .get_or("solver", &experiments::OT_ALGOS.join(","))
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect();
+    for family in &families {
+        let engine = benchkit::load_engine(family)?;
+        for solver in &solvers {
+            let _ = experiments::ensure_selector(&engine, family, solver, scale)?;
+            println!("selector ready: {family}/{solver}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_bench(argv: Vec<String>) -> Result<()> {
+    let a = Args::parse(argv, &[]).map_err(|e| anyhow!(e))?;
+    let which = a.positional.first().map(|s| s.as_str()).unwrap_or("table2");
+    let scale = Scale::from_env();
+    match which {
+        "table2" | "table3" | "table23" => {
+            experiments::tables_2_3(scale)?;
+        }
+        "fig1" => {
+            experiments::figure_1(scale, a.get_or("family", "llama-sim"))?;
+        }
+        "table45" | "table67" | "nde" => {
+            experiments::tables_4_7(scale)?;
+        }
+        "table89" => {
+            experiments::tables_8_9(scale)?;
+        }
+        "table1015" => {
+            for f in benchkit::FAMILIES {
+                experiments::tables_10_15(scale, f)?;
+            }
+        }
+        other => return Err(anyhow!("unknown bench id {other}")),
+    }
+    Ok(())
+}

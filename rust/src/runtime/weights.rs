@@ -1,0 +1,116 @@
+//! Reader for the flat binary tensor container written by
+//! python/compile/weights_io.py (magic "SPDW", version 1). Tensors appear in
+//! the exact order the HLO entry points expect their parameter buffers.
+
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+pub struct Tensor {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+const MAGIC: u32 = 0x5350_4457;
+
+pub fn read_weights(path: &Path) -> Result<Vec<Tensor>> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening weights {}", path.display()))?;
+    let mut buf = Vec::new();
+    f.read_to_end(&mut buf)?;
+    let mut off = 0usize;
+    let u32_at = |b: &[u8], o: usize| -> Result<u32> {
+        Ok(u32::from_le_bytes(
+            b.get(o..o + 4).context("truncated weights")?.try_into()?,
+        ))
+    };
+    let magic = u32_at(&buf, 0)?;
+    if magic != MAGIC {
+        bail!("bad weights magic {magic:#x}");
+    }
+    let version = u32_at(&buf, 4)?;
+    if version != 1 {
+        bail!("unsupported weights version {version}");
+    }
+    let count = u32_at(&buf, 8)? as usize;
+    off += 12;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name_len = u32_at(&buf, off)? as usize;
+        off += 4;
+        let name = String::from_utf8(
+            buf.get(off..off + name_len).context("truncated name")?.to_vec(),
+        )?;
+        off += name_len;
+        let ndim = u32_at(&buf, off)? as usize;
+        off += 4;
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(u32_at(&buf, off)? as usize);
+            off += 4;
+        }
+        let n: usize = dims.iter().product::<usize>().max(1);
+        let bytes = buf.get(off..off + 4 * n).context("truncated data")?;
+        off += 4 * n;
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        out.push(Tensor { name, dims, data });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_fixture(path: &Path) {
+        let mut f = std::fs::File::create(path).unwrap();
+        f.write_all(&MAGIC.to_le_bytes()).unwrap();
+        f.write_all(&1u32.to_le_bytes()).unwrap();
+        f.write_all(&2u32.to_le_bytes()).unwrap();
+        // tensor "ab": dims [2,2], data 1..4
+        f.write_all(&2u32.to_le_bytes()).unwrap();
+        f.write_all(b"ab").unwrap();
+        f.write_all(&2u32.to_le_bytes()).unwrap();
+        f.write_all(&2u32.to_le_bytes()).unwrap();
+        f.write_all(&2u32.to_le_bytes()).unwrap();
+        for v in [1.0f32, 2.0, 3.0, 4.0] {
+            f.write_all(&v.to_le_bytes()).unwrap();
+        }
+        // scalar tensor "s"
+        f.write_all(&1u32.to_le_bytes()).unwrap();
+        f.write_all(b"s").unwrap();
+        f.write_all(&0u32.to_le_bytes()).unwrap();
+        f.write_all(&7.5f32.to_le_bytes()).unwrap();
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("specdelay_wtest");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.bin");
+        write_fixture(&path);
+        let t = read_weights(&path).unwrap();
+        assert_eq!(t.len(), 2);
+        assert_eq!(t[0].name, "ab");
+        assert_eq!(t[0].dims, vec![2, 2]);
+        assert_eq!(t[0].data, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t[1].name, "s");
+        assert!(t[1].dims.is_empty());
+        assert_eq!(t[1].data, vec![7.5]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("specdelay_wtest2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, [0u8; 16]).unwrap();
+        assert!(read_weights(&path).is_err());
+    }
+}

@@ -1,0 +1,366 @@
+//! The neural delay-and-branch predictor network (paper Appendix E):
+//! three per-hidden-state linear projections to d = 128 with layer norm,
+//! concatenated with standardized scalar features, followed by a two-layer
+//! GELU MLP (512, 32) and a |A|-way logit head. Training is plain Adam;
+//! forward and backward are hand-rolled (no autograd in this environment).
+
+use crate::util::Pcg64;
+
+pub const PROJ_DIM: usize = 128;
+pub const H1: usize = 512;
+pub const H2: usize = 32;
+
+fn gelu(x: f32) -> f32 {
+    // tanh approximation (Hendrycks & Gimpel)
+    0.5 * x * (1.0 + ((0.7978845608 * (x + 0.044715 * x * x * x)).tanh()))
+}
+
+fn gelu_grad(x: f32) -> f32 {
+    let t = (0.7978845608 * (x + 0.044715 * x * x * x)).tanh();
+    let dt = (1.0 - t * t) * 0.7978845608 * (1.0 + 3.0 * 0.044715 * x * x);
+    0.5 * (1.0 + t) + 0.5 * x * dt
+}
+
+/// A dense layer with Adam state.
+pub struct Linear {
+    pub w: Vec<f32>, // [out, in]
+    pub b: Vec<f32>,
+    pub n_in: usize,
+    pub n_out: usize,
+    m_w: Vec<f32>,
+    v_w: Vec<f32>,
+    m_b: Vec<f32>,
+    v_b: Vec<f32>,
+}
+
+impl Linear {
+    pub fn new(n_in: usize, n_out: usize, rng: &mut Pcg64) -> Linear {
+        let scale = (2.0 / (n_in + n_out) as f32).sqrt();
+        let w = (0..n_in * n_out)
+            .map(|_| (rng.next_f32() * 2.0 - 1.0) * scale)
+            .collect();
+        Linear {
+            w,
+            b: vec![0.0; n_out],
+            n_in,
+            n_out,
+            m_w: vec![0.0; n_in * n_out],
+            v_w: vec![0.0; n_in * n_out],
+            m_b: vec![0.0; n_out],
+            v_b: vec![0.0; n_out],
+        }
+    }
+
+    pub fn forward(&self, x: &[f32]) -> Vec<f32> {
+        let mut out = self.b.clone();
+        for o in 0..self.n_out {
+            let row = &self.w[o * self.n_in..(o + 1) * self.n_in];
+            let mut acc = 0.0f32;
+            for (wi, xi) in row.iter().zip(x) {
+                acc += wi * xi;
+            }
+            out[o] += acc;
+        }
+        out
+    }
+
+    /// Accumulate grads; returns dL/dx.
+    pub fn backward(
+        &self,
+        x: &[f32],
+        dy: &[f32],
+        gw: &mut [f32],
+        gb: &mut [f32],
+    ) -> Vec<f32> {
+        let mut dx = vec![0.0f32; self.n_in];
+        for o in 0..self.n_out {
+            gb[o] += dy[o];
+            let row = &self.w[o * self.n_in..(o + 1) * self.n_in];
+            let grow = &mut gw[o * self.n_in..(o + 1) * self.n_in];
+            for i in 0..self.n_in {
+                grow[i] += dy[o] * x[i];
+                dx[i] += dy[o] * row[i];
+            }
+        }
+        dx
+    }
+
+    pub fn adam(&mut self, gw: &[f32], gb: &[f32], lr: f32, t: usize) {
+        adam_update(&mut self.w, &mut self.m_w, &mut self.v_w, gw, lr, t);
+        adam_update(&mut self.b, &mut self.m_b, &mut self.v_b, gb, lr, t);
+    }
+}
+
+fn adam_update(p: &mut [f32], m: &mut [f32], v: &mut [f32], g: &[f32], lr: f32, t: usize) {
+    let (b1, b2, eps) = (0.9f32, 0.999f32, 1e-8f32);
+    let c1 = 1.0 - b1.powi(t as i32);
+    let c2 = 1.0 - b2.powi(t as i32);
+    for i in 0..p.len() {
+        m[i] = b1 * m[i] + (1.0 - b1) * g[i];
+        v[i] = b2 * v[i] + (1.0 - b2) * g[i] * g[i];
+        p[i] -= lr * (m[i] / c1) / ((v[i] / c2).sqrt() + eps);
+    }
+}
+
+/// Parameter-free layer norm.
+pub fn layer_norm(x: &[f32]) -> Vec<f32> {
+    let n = x.len() as f32;
+    let mu = x.iter().sum::<f32>() / n;
+    let var = x.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / n;
+    let inv = 1.0 / (var + 1e-5).sqrt();
+    x.iter().map(|v| (v - mu) * inv).collect()
+}
+
+/// dL/dx for parameter-free layer norm.
+pub fn layer_norm_backward(x: &[f32], dy: &[f32]) -> Vec<f32> {
+    let n = x.len() as f32;
+    let mu = x.iter().sum::<f32>() / n;
+    let var = x.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / n;
+    let inv = 1.0 / (var + 1e-5).sqrt();
+    let xc: Vec<f32> = x.iter().map(|v| (v - mu) * inv).collect();
+    let dy_sum: f32 = dy.iter().sum();
+    let dyx_sum: f32 = dy.iter().zip(&xc).map(|(a, b)| a * b).sum();
+    (0..x.len())
+        .map(|i| inv * (dy[i] - dy_sum / n - xc[i] * dyx_sum / n))
+        .collect()
+}
+
+/// Full selector network.
+pub struct SelectorNet {
+    pub proj_p: Linear,
+    pub proj_q_prev: Linear,
+    pub proj_q_cur: Linear,
+    pub fc1: Linear,
+    pub fc2: Linear,
+    pub head: Linear,
+    pub n_scalars: usize,
+    pub n_actions: usize,
+}
+
+/// Per-example activation cache for backward.
+pub struct Cache {
+    hp: Vec<f32>,
+    hq1: Vec<f32>,
+    hq2: Vec<f32>,
+    pp: Vec<f32>,
+    pq1: Vec<f32>,
+    pq2: Vec<f32>,
+    concat: Vec<f32>,
+    z1: Vec<f32>,
+    a1: Vec<f32>,
+    z2: Vec<f32>,
+    a2: Vec<f32>,
+}
+
+/// Gradient buffers matching the network layout.
+pub struct Grads {
+    pub proj_p: (Vec<f32>, Vec<f32>),
+    pub proj_q_prev: (Vec<f32>, Vec<f32>),
+    pub proj_q_cur: (Vec<f32>, Vec<f32>),
+    pub fc1: (Vec<f32>, Vec<f32>),
+    pub fc2: (Vec<f32>, Vec<f32>),
+    pub head: (Vec<f32>, Vec<f32>),
+}
+
+impl SelectorNet {
+    pub fn new(d_p: usize, d_q: usize, n_scalars: usize, n_actions: usize, seed: u64) -> Self {
+        let mut rng = Pcg64::seeded(seed);
+        let concat = 3 * PROJ_DIM + n_scalars;
+        SelectorNet {
+            proj_p: Linear::new(d_p, PROJ_DIM, &mut rng),
+            proj_q_prev: Linear::new(d_q, PROJ_DIM, &mut rng),
+            proj_q_cur: Linear::new(d_q, PROJ_DIM, &mut rng),
+            fc1: Linear::new(concat, H1, &mut rng),
+            fc2: Linear::new(H1, H2, &mut rng),
+            head: Linear::new(H2, n_actions, &mut rng),
+            n_scalars,
+            n_actions,
+        }
+    }
+
+    pub fn zero_grads(&self) -> Grads {
+        let z = |l: &Linear| (vec![0.0; l.w.len()], vec![0.0; l.b.len()]);
+        Grads {
+            proj_p: z(&self.proj_p),
+            proj_q_prev: z(&self.proj_q_prev),
+            proj_q_cur: z(&self.proj_q_cur),
+            fc1: z(&self.fc1),
+            fc2: z(&self.fc2),
+            head: z(&self.head),
+        }
+    }
+
+    pub fn forward(
+        &self,
+        h_p: &[f32],
+        h_q_prev: &[f32],
+        h_q_cur: &[f32],
+        scalars: &[f32],
+    ) -> (Vec<f32>, Cache) {
+        let pp = self.proj_p.forward(h_p);
+        let pq1 = self.proj_q_prev.forward(h_q_prev);
+        let pq2 = self.proj_q_cur.forward(h_q_cur);
+        let np = layer_norm(&pp);
+        let nq1 = layer_norm(&pq1);
+        let nq2 = layer_norm(&pq2);
+        let mut concat = Vec::with_capacity(3 * PROJ_DIM + scalars.len());
+        concat.extend_from_slice(&np);
+        concat.extend_from_slice(&nq1);
+        concat.extend_from_slice(&nq2);
+        concat.extend_from_slice(scalars);
+        let z1 = self.fc1.forward(&concat);
+        let a1: Vec<f32> = z1.iter().map(|&v| gelu(v)).collect();
+        let z2 = self.fc2.forward(&a1);
+        let a2: Vec<f32> = z2.iter().map(|&v| gelu(v)).collect();
+        let logits = self.head.forward(&a2);
+        (
+            logits,
+            Cache {
+                hp: h_p.to_vec(),
+                hq1: h_q_prev.to_vec(),
+                hq2: h_q_cur.to_vec(),
+                pp,
+                pq1,
+                pq2,
+                concat,
+                z1,
+                a1,
+                z2,
+                a2,
+            },
+        )
+    }
+
+    pub fn backward(&self, cache: &Cache, dlogits: &[f32], g: &mut Grads) {
+        let da2 = self
+            .head
+            .backward(&cache.a2, dlogits, &mut g.head.0, &mut g.head.1);
+        let dz2: Vec<f32> = da2
+            .iter()
+            .zip(&cache.z2)
+            .map(|(d, &z)| d * gelu_grad(z))
+            .collect();
+        let da1 = self
+            .fc2
+            .backward(&cache.a1, &dz2, &mut g.fc2.0, &mut g.fc2.1);
+        let dz1: Vec<f32> = da1
+            .iter()
+            .zip(&cache.z1)
+            .map(|(d, &z)| d * gelu_grad(z))
+            .collect();
+        let dconcat = self
+            .fc1
+            .backward(&cache.concat, &dz1, &mut g.fc1.0, &mut g.fc1.1);
+        let dp = layer_norm_backward(&cache.pp, &dconcat[..PROJ_DIM]);
+        let dq1 = layer_norm_backward(&cache.pq1, &dconcat[PROJ_DIM..2 * PROJ_DIM]);
+        let dq2 = layer_norm_backward(&cache.pq2, &dconcat[2 * PROJ_DIM..3 * PROJ_DIM]);
+        self.proj_p
+            .backward(&cache.hp, &dp, &mut g.proj_p.0, &mut g.proj_p.1);
+        self.proj_q_prev
+            .backward(&cache.hq1, &dq1, &mut g.proj_q_prev.0, &mut g.proj_q_prev.1);
+        self.proj_q_cur
+            .backward(&cache.hq2, &dq2, &mut g.proj_q_cur.0, &mut g.proj_q_cur.1);
+    }
+
+    pub fn adam_step(&mut self, g: &Grads, lr: f32, t: usize) {
+        self.proj_p.adam(&g.proj_p.0, &g.proj_p.1, lr, t);
+        self.proj_q_prev.adam(&g.proj_q_prev.0, &g.proj_q_prev.1, lr, t);
+        self.proj_q_cur.adam(&g.proj_q_cur.0, &g.proj_q_cur.1, lr, t);
+        self.fc1.adam(&g.fc1.0, &g.fc1.1, lr, t);
+        self.fc2.adam(&g.fc2.0, &g.fc2.1, lr, t);
+        self.head.adam(&g.head.0, &g.head.1, lr, t);
+    }
+}
+
+pub fn softmax(logits: &[f32]) -> Vec<f32> {
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut e: Vec<f32> = logits.iter().map(|&l| (l - m).exp()).collect();
+    let s: f32 = e.iter().sum();
+    for v in e.iter_mut() {
+        *v /= s;
+    }
+    e
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Numerical gradient check on a small network end-to-end.
+    #[test]
+    fn gradients_match_finite_differences() {
+        let mut net = SelectorNet::new(6, 4, 3, 5, 0);
+        let mut rng = Pcg64::seeded(1);
+        let hp: Vec<f32> = (0..6).map(|_| rng.next_f32()).collect();
+        let hq1: Vec<f32> = (0..4).map(|_| rng.next_f32()).collect();
+        let hq2: Vec<f32> = (0..4).map(|_| rng.next_f32()).collect();
+        let sc: Vec<f32> = (0..3).map(|_| rng.next_f32()).collect();
+        // loss = sum of squared logits (simple, smooth)
+        let loss = |net: &SelectorNet| -> f32 {
+            let (l, _) = net.forward(&hp, &hq1, &hq2, &sc);
+            l.iter().map(|v| v * v).sum()
+        };
+        let (logits, cache) = net.forward(&hp, &hq1, &hq2, &sc);
+        let dlogits: Vec<f32> = logits.iter().map(|&v| 2.0 * v).collect();
+        let mut g = net.zero_grads();
+        net.backward(&cache, &dlogits, &mut g);
+
+        // check a few weights in each layer
+        let eps = 1e-3f32;
+        let checks: Vec<(&str, usize)> = vec![("fc1", 10), ("fc2", 3), ("head", 7), ("proj_p", 5)];
+        for (layer, idx) in checks {
+            let (analytic, ptr): (f32, *mut f32) = match layer {
+                "fc1" => (g.fc1.0[idx], &mut net.fc1.w[idx]),
+                "fc2" => (g.fc2.0[idx], &mut net.fc2.w[idx]),
+                "head" => (g.head.0[idx], &mut net.head.w[idx]),
+                _ => (g.proj_p.0[idx], &mut net.proj_p.w[idx]),
+            };
+            unsafe {
+                let orig = *ptr;
+                *ptr = orig + eps;
+                let lp = loss(&net);
+                *ptr = orig - eps;
+                let lm = loss(&net);
+                *ptr = orig;
+                let numeric = (lp - lm) / (2.0 * eps);
+                assert!(
+                    (analytic - numeric).abs() < 0.02 * (1.0 + numeric.abs()),
+                    "{layer}[{idx}]: analytic {analytic} vs numeric {numeric}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn softmax_normalizes() {
+        let s = softmax(&[1.0, 2.0, 3.0]);
+        assert!((s.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(s[2] > s[1] && s[1] > s[0]);
+    }
+
+    #[test]
+    fn adam_reduces_simple_loss() {
+        // regression to fixed target logits
+        let mut net = SelectorNet::new(4, 4, 2, 3, 7);
+        let hp = vec![0.3, -0.2, 0.5, 0.1];
+        let sc = vec![1.0, -1.0];
+        let target = [1.0f32, -2.0, 0.5];
+        let loss_at = |net: &SelectorNet| {
+            let (l, _) = net.forward(&hp, &hp, &hp, &sc);
+            l.iter()
+                .zip(&target)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f32>()
+        };
+        let l0 = loss_at(&net);
+        for t in 1..=200 {
+            let (l, cache) = net.forward(&hp, &hp, &hp, &sc);
+            let dl: Vec<f32> = l.iter().zip(&target).map(|(a, b)| 2.0 * (a - b)).collect();
+            let mut g = net.zero_grads();
+            net.backward(&cache, &dl, &mut g);
+            net.adam_step(&g, 1e-2, t);
+        }
+        let l1 = loss_at(&net);
+        assert!(l1 < 0.05 * l0, "loss {l0} -> {l1}");
+    }
+}

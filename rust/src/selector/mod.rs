@@ -1,0 +1,960 @@
+//! Neural delay-and-branch predictor (paper §6 + Appendix E).
+//!
+//! Pipeline: [`collect_traces`] walks target-model trajectories, snapshots a
+//! root every 16 tokens, and for every action a = (K, L1, L2) stores the
+//! Eq. 3 block-efficiency estimate Ê[τ+1] (averaged over s = 4 superset-tree
+//! samples, scored with each OT solver's branching calculator) and the
+//! Eq. 11 latency estimate T̂ from the microbenchmarked per-entry costs.
+//! [`train`] then fits the MLP policy with the baseline-relative throughput
+//! loss (Eq. 12) and [`NeuralPolicy`] serves argmax actions online.
+
+pub mod mlp;
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::{ActionPolicy, SpecEngine, StepFeatures};
+use crate::dist::{Dist, SamplingConfig};
+use crate::draft::Action;
+use crate::runtime::{Engine, Role};
+use crate::tree::{DraftTree, Provenance};
+use crate::util::json::{arr, num, obj, Json};
+use crate::util::{Pcg64, Json as J};
+use crate::verify::{self, OtlpSolver};
+use mlp::{softmax, SelectorNet};
+
+pub const K_MAX: usize = 4;
+pub const L1_MAX: usize = 8;
+pub const L2_MAX: usize = 8;
+pub const N_SCALARS: usize = 11;
+pub const TRACE_STRIDE: usize = 16;
+pub const EQ3_SAMPLES: usize = 4;
+
+/// Enumerate the action space A = {1..4} × {0..8}² (paper §6).
+pub fn action_space() -> Vec<Action> {
+    let mut out = Vec::new();
+    for k in 1..=K_MAX {
+        for l1 in 0..=L1_MAX {
+            for l2 in 0..=L2_MAX {
+                out.push(Action::new(k, l1, l2));
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Latency model (Eq. 11, adapted: entry costs are shape-dependent, not
+// context-length-dependent, because the compiled modules are fixed-shape)
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug, Default)]
+pub struct LatencyModel {
+    pub t_decode_draft: f64,
+    pub t_trunk: Vec<f64>,          // by L1 (index 0 unused)
+    pub t_branch: Vec<Vec<f64>>,    // [k][bucket index]
+    pub t_tree: Vec<f64>,           // by tree-size bucket index
+    pub branch_lens: Vec<usize>,
+    pub tree_sizes: Vec<usize>,
+}
+
+impl LatencyModel {
+    /// Microbenchmark every compiled entry ("warm-up run" in the paper).
+    pub fn measure(engine: &Engine) -> Result<LatencyModel> {
+        let meta = &engine.meta;
+        let d = meta.draft;
+        let t = meta.target;
+        let dk = vec![0.0f32; d.kv_elems()];
+        let tk = vec![0.0f32; t.kv_elems()];
+        let time_it = |f: &mut dyn FnMut() -> Result<()>| -> Result<f64> {
+            f()?; // warmup + compile
+            let reps = 3;
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                f()?;
+            }
+            Ok(t0.elapsed().as_secs_f64() / reps as f64)
+        };
+
+        let t_decode_draft = time_it(&mut || {
+            engine.decode(Role::Draft, &dk, &dk, 65, 10).map(|_| ())
+        })?;
+
+        let mut t_trunk = vec![0.0f64];
+        for &l in &meta.trunk_lens {
+            let uni = vec![0.5f32; l];
+            t_trunk.push(time_it(&mut || {
+                engine
+                    .rollout(1, l, &dk, &dk, 65, 10, &uni, 1.0, 1.0)
+                    .map(|_| ())
+            })?);
+        }
+
+        let mut t_branch = vec![vec![]; K_MAX + 1];
+        for &k in &meta.branch_ks {
+            let mut per_bucket = Vec::new();
+            for &lb in &meta.branch_lens {
+                let uni = vec![0.5f32; k * lb];
+                per_bucket.push(time_it(&mut || {
+                    engine
+                        .rollout(k, lb, &dk, &dk, 65, 10, &uni, 1.0, 1.0)
+                        .map(|_| ())
+                })?);
+            }
+            t_branch[k] = per_bucket;
+        }
+
+        let mut t_tree = Vec::new();
+        for &n in &meta.tree_sizes {
+            let toks = vec![65i32; n];
+            let pos = vec![10i32; n];
+            let mut bias = vec![-1e30f32; n * n];
+            for i in 0..n {
+                bias[i * n + i] = 0.0;
+            }
+            t_tree.push(time_it(&mut || {
+                engine
+                    .tree_verify(n, &tk, &tk, &toks, &pos, &bias, 10)
+                    .map(|_| ())
+            })?);
+        }
+
+        Ok(LatencyModel {
+            t_decode_draft,
+            t_trunk,
+            t_branch,
+            t_tree,
+            branch_lens: meta.branch_lens.clone(),
+            tree_sizes: meta.tree_sizes.clone(),
+        })
+    }
+
+    /// T̂(a): total model time for one block under action a.
+    pub fn estimate(&self, a: Action) -> f64 {
+        let a = a.normalized(L1_MAX);
+        let mut t = self.t_decode_draft; // selector feature pass
+        if a.l1 > 0 {
+            t += self.t_trunk.get(a.l1).copied().unwrap_or(0.0);
+        }
+        if a.k > 1 && a.l2 > 0 {
+            let bi = self
+                .branch_lens
+                .iter()
+                .position(|&b| b >= a.l2)
+                .unwrap_or(self.branch_lens.len() - 1);
+            t += self
+                .t_branch
+                .get(a.k)
+                .and_then(|v| v.get(bi))
+                .copied()
+                .unwrap_or(0.0);
+        }
+        let nodes = a.nodes();
+        let ti = self
+            .tree_sizes
+            .iter()
+            .position(|&b| b >= nodes)
+            .unwrap_or(self.tree_sizes.len() - 1);
+        t += self.t_tree.get(ti).copied().unwrap_or(0.0);
+        t
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("t_decode_draft", num(self.t_decode_draft)),
+            ("t_trunk", arr(self.t_trunk.iter().map(|&v| num(v)))),
+            (
+                "t_branch",
+                arr(self
+                    .t_branch
+                    .iter()
+                    .map(|row| arr(row.iter().map(|&v| num(v))))),
+            ),
+            ("t_tree", arr(self.t_tree.iter().map(|&v| num(v)))),
+            (
+                "branch_lens",
+                arr(self.branch_lens.iter().map(|&v| num(v as f64))),
+            ),
+            (
+                "tree_sizes",
+                arr(self.tree_sizes.iter().map(|&v| num(v as f64))),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<LatencyModel> {
+        let f = |k: &str| -> Result<Vec<f64>> {
+            Ok(j.get(k)
+                .map_err(|e| anyhow!(e))?
+                .as_arr()
+                .context("arr")?
+                .iter()
+                .filter_map(|v| v.as_f64())
+                .collect())
+        };
+        let t_branch = j
+            .get("t_branch")
+            .map_err(|e| anyhow!(e))?
+            .as_arr()
+            .context("arr")?
+            .iter()
+            .map(|row| {
+                row.as_arr()
+                    .map(|r| r.iter().filter_map(|v| v.as_f64()).collect())
+                    .unwrap_or_default()
+            })
+            .collect();
+        Ok(LatencyModel {
+            t_decode_draft: j
+                .get("t_decode_draft")
+                .map_err(|e| anyhow!(e))?
+                .as_f64()
+                .unwrap_or(0.0),
+            t_trunk: f("t_trunk")?,
+            t_branch,
+            t_tree: f("t_tree")?,
+            branch_lens: f("branch_lens")?.iter().map(|&v| v as usize).collect(),
+            tree_sizes: f("tree_sizes")?.iter().map(|&v| v as usize).collect(),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Feature extraction
+// ---------------------------------------------------------------------------
+
+/// Scalar feature vector (paper Appendix E: uncertainty, divergence, local
+/// parameters, latency estimates).
+pub fn scalar_features(f: &StepFeatures<'_>, lat: &LatencyModel, max_seq: usize) -> Vec<f32> {
+    vec![
+        f.p_prev.entropy(),
+        f.q_prev.entropy(),
+        f.q_root.entropy(),
+        f.p_prev.kl(f.q_prev),
+        f.q_prev.kl(f.p_prev),
+        Dist::l1(f.p_prev, f.q_prev),
+        f.ctx_len as f32 / max_seq as f32,
+        f.sampling.temperature,
+        f.sampling.top_p,
+        (lat.t_decode_draft * 1e3) as f32,
+        (lat.t_tree.first().copied().unwrap_or(0.0) * 1e3) as f32,
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// Offline Ê[τ+1] estimation via superset trees (Eq. 3)
+// ---------------------------------------------------------------------------
+
+/// One trace root: features + per-solver Ê table + T̂ table.
+pub struct TraceRoot {
+    pub hidden_p: Vec<f32>,
+    pub hidden_q_prev: Vec<f32>,
+    pub hidden_q_cur: Vec<f32>,
+    pub scalars: Vec<f32>,
+    pub e_hat: Vec<(String, Vec<f64>)>, // per solver, aligned with action_space()
+    pub t_hat: Vec<f64>,
+    pub temperature: f32,
+    pub top_p: f32,
+}
+
+/// Cumulative expected accepted tokens by depth for one action tree:
+/// entry d = Σ over nodes of depth ≤ d of reach probability (Eq. 3 inner sum
+/// truncated at depth d).
+pub fn expected_by_depth(tree: &DraftTree, solver: &dyn OtlpSolver, max_depth: usize) -> Vec<f64> {
+    let mut reach = vec![0.0f64; tree.len()];
+    reach[0] = 1.0;
+    let mut per_depth = vec![0.0f64; max_depth + 1];
+    for node in 0..tree.len() {
+        if reach[node] <= 0.0 || tree.nodes[node].children.is_empty() {
+            continue;
+        }
+        let p = tree.nodes[node].p.as_ref().expect("p");
+        let q = tree.nodes[node].q.as_ref().expect("q");
+        let xs = tree.child_tokens(node);
+        let probs = solver.branching(p, q, &xs);
+        let mut seen: Vec<usize> = Vec::new();
+        for (i, &child) in tree.nodes[node].children.iter().enumerate() {
+            if seen.contains(&child) {
+                continue;
+            }
+            seen.push(child);
+            let pr = reach[node] * probs[i];
+            reach[child] += pr;
+            let d = tree.nodes[child].depth;
+            if d <= max_depth {
+                per_depth[d] += pr;
+            }
+        }
+    }
+    // cumulative
+    let mut acc = 0.0;
+    per_depth
+        .iter()
+        .map(|&v| {
+            acc += v;
+            acc
+        })
+        .collect()
+}
+
+/// A drafted superset sample: full trunk + K_MAX branches of L2_MAX at every
+/// trunk depth, with p/q at every node.
+pub struct Superset {
+    /// trunk node context tokens (root first)
+    pub trunk_tokens: Vec<u32>,
+    pub trunk_q: Vec<Dist>,
+    pub trunk_p: Vec<Dist>,
+    /// per trunk depth j (0..=L1_MAX): per branch b: token/q/p chains
+    pub branches: Vec<Vec<BranchChain>>,
+}
+
+pub struct BranchChain {
+    pub tokens: Vec<u32>,
+    pub q: Vec<Dist>,
+    pub p: Vec<Dist>,
+}
+
+/// Build the action tree (K, L1 = j, up to L2_MAX) from a superset sample
+/// and score it per depth.
+fn action_tree(ss: &Superset, j: usize, k: usize) -> DraftTree {
+    let mut tree = DraftTree::new(ss.trunk_tokens[0]);
+    let mut node = 0usize;
+    for d in 0..j {
+        tree.set_q(node, ss.trunk_q[d].clone());
+        tree.set_p(node, ss.trunk_p[d].clone());
+        node = tree.add_child(node, ss.trunk_tokens[d + 1], Provenance::Trunk { step: d + 1 });
+    }
+    let bp = node;
+    tree.set_p(bp, ss.trunk_p[j].clone());
+    for (b, chain) in ss.branches[j].iter().take(k).enumerate() {
+        let mut cur = bp;
+        for (s, &tok) in chain.tokens.iter().enumerate() {
+            if tree.nodes[cur].q.is_none() {
+                tree.set_q(cur, chain.q[s].clone());
+            }
+            if tree.nodes[cur].p.is_none() {
+                tree.set_p(cur, chain.p[s].clone());
+            }
+            cur = tree.add_child(cur, tok, Provenance::Branch { branch: b, step: s + 1 });
+            if s + 1 < chain.tokens.len() {
+                // deeper dists set on next iteration
+            }
+        }
+        // set p at the leaf if known
+        if tree.nodes[cur].p.is_none() && chain.p.len() > chain.tokens.len() {
+            tree.set_p(cur, chain.p[chain.tokens.len()].clone());
+        }
+    }
+    tree
+}
+
+/// Score one superset sample for every (solver, action): Ê accepted tokens.
+/// Returns per solver a vector aligned with `action_space()`.
+pub fn score_superset(ss: &Superset, solvers: &[(&str, Box<dyn OtlpSolver>)]) -> Vec<Vec<f64>> {
+    let actions = action_space();
+    let mut out = vec![vec![0.0f64; actions.len()]; solvers.len()];
+    for (si, (_name, solver)) in solvers.iter().enumerate() {
+        // trunk-only chain (K = 1): one tree with full trunk
+        let trunk_tree = action_tree(ss, L1_MAX, 1);
+        let trunk_cum = expected_by_depth(&trunk_tree, solver.as_ref(), L1_MAX);
+        // branched trees per (j, K)
+        let mut branched = vec![vec![Vec::new(); K_MAX + 1]; L1_MAX + 1];
+        for j in 0..=L1_MAX {
+            for k in 2..=K_MAX {
+                let t = action_tree(ss, j, k);
+                branched[j][k] = expected_by_depth(&t, solver.as_ref(), j + L2_MAX);
+            }
+        }
+        for (ai, a) in actions.iter().enumerate() {
+            let e = if a.k <= 1 || a.l2 == 0 {
+                let depth = (a.l1 + a.l2).min(L1_MAX);
+                trunk_cum[depth]
+            } else {
+                branched[a.l1][a.k][(a.l1 + a.l2).min(a.l1 + L2_MAX)]
+            };
+            out[si][ai] = e;
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Trace collection
+// ---------------------------------------------------------------------------
+
+/// Collect trace roots along target trajectories for one family.
+#[allow(clippy::too_many_arguments)]
+pub fn collect_traces(
+    engine: &Engine,
+    prompts: &[(String, SamplingConfig)],
+    lat: &LatencyModel,
+    max_new: usize,
+    rng: &mut Pcg64,
+    solvers: &[(&str, Box<dyn OtlpSolver>)],
+    max_roots: usize,
+) -> Result<Vec<TraceRoot>> {
+    let actions = action_space();
+    let mut roots: Vec<TraceRoot> = Vec::new();
+    let t_hat: Vec<f64> = actions.iter().map(|&a| lat.estimate(a)).collect();
+
+    'outer: for (prompt, sampling) in prompts {
+        let spec = SpecEngine::new(engine, *sampling);
+        let mut seq = spec.start(prompt)?;
+        let mut since_root = TRACE_STRIDE; // take the first root immediately
+        while !seq.finished && seq.tokens.len() - seq.prompt_len < max_new {
+            if since_root >= TRACE_STRIDE {
+                since_root = 0;
+                let rf = spec.root_features(&mut seq)?;
+                let feats = rf.as_features(&seq, *sampling);
+                let scalars = scalar_features(&feats, lat, engine.meta.target.max_seq);
+                // Ê over s = 4 superset samples
+                let mut e_acc = vec![vec![0.0f64; actions.len()]; solvers.len()];
+                for _ in 0..EQ3_SAMPLES {
+                    let ss = draft_superset(engine, &seq, *sampling, rng)?;
+                    let scored = score_superset(&ss, solvers);
+                    for (si, row) in scored.iter().enumerate() {
+                        for (ai, v) in row.iter().enumerate() {
+                            e_acc[si][ai] += v / EQ3_SAMPLES as f64;
+                        }
+                    }
+                }
+                roots.push(TraceRoot {
+                    hidden_p: seq.prev_hidden_target.clone(),
+                    hidden_q_prev: seq.prev_hidden_draft.clone(),
+                    hidden_q_cur: rf.hidden_q_cur.clone(),
+                    scalars,
+                    e_hat: solvers
+                        .iter()
+                        .zip(&e_acc)
+                        .map(|((n, _), e)| (n.to_string(), e.iter().map(|&v| v + 1.0).collect()))
+                        .collect(),
+                    t_hat: t_hat.clone(),
+                    temperature: sampling.temperature,
+                    top_p: sampling.top_p,
+                });
+                if roots.len() >= max_roots {
+                    break 'outer;
+                }
+            }
+            // advance the trajectory with a moderate static speculation step
+            let verifier = verify::verifier("SpecInfer").unwrap();
+            let b = spec.step(&mut seq, verifier.as_ref(), Action::new(2, 2, 4), rng)?;
+            since_root += b.emitted;
+            if b.emitted == 0 {
+                break;
+            }
+        }
+    }
+    Ok(roots)
+}
+
+/// Draft one superset sample at the current root: full trunk, branches of
+/// L2_MAX at every trunk depth, one big target tree pass for p everywhere.
+fn draft_superset(
+    engine: &Engine,
+    seq: &crate::coordinator::Sequence,
+    sampling: SamplingConfig,
+    rng: &mut Pcg64,
+) -> Result<Superset> {
+    let meta = &engine.meta;
+    let v = meta.draft.vocab;
+    let root_token = *seq.tokens.last().unwrap();
+    let root_pos = seq.root_pos;
+
+    // trunk
+    let uni: Vec<f32> = (0..L1_MAX).map(|_| rng.next_f32()).collect();
+    let trunk = engine.rollout(
+        1,
+        L1_MAX,
+        &seq.draft_kv.k,
+        &seq.draft_kv.v,
+        root_token,
+        root_pos,
+        &uni,
+        sampling.temperature,
+        sampling.top_p,
+    )?;
+    let mut trunk_tokens = vec![root_token];
+    trunk_tokens.extend(trunk.tokens.iter().map(|&t| t as u32));
+    let trunk_q: Vec<Dist> = (0..L1_MAX)
+        .map(|s| Dist(trunk.dists[s * v..(s + 1) * v].to_vec()))
+        .collect();
+
+    // temp draft KV with trunk rows committed so branch rollouts can attend
+    let mut kv = seq.draft_kv.clone();
+    kv.commit_rollout_rows(&trunk.k_rows, &trunk.v_rows, 1, L1_MAX, 0, L1_MAX - 1, root_pos);
+
+    // branches at every trunk depth
+    let mut branches: Vec<Vec<BranchChain>> = Vec::new();
+    let mut tree = DraftTree::new(root_token);
+    let mut trunk_nodes = vec![0usize];
+    {
+        let mut node = 0usize;
+        for (d, q) in trunk_q.iter().enumerate() {
+            tree.set_q(node, q.clone());
+            node = tree.add_child(node, trunk_tokens[d + 1], Provenance::Trunk { step: d + 1 });
+            trunk_nodes.push(node);
+        }
+    }
+    for j in 0..=L1_MAX {
+        let start_tok = trunk_tokens[j];
+        let start_pos = root_pos + j;
+        let uni: Vec<f32> = (0..K_MAX * L2_MAX).map(|_| rng.next_f32()).collect();
+        let out = engine.rollout(
+            K_MAX,
+            L2_MAX,
+            &kv.k,
+            &kv.v,
+            start_tok,
+            start_pos,
+            &uni,
+            sampling.temperature,
+            sampling.top_p,
+        )?;
+        let mut per_branch = Vec::new();
+        for b in 0..K_MAX {
+            let tokens: Vec<u32> = (0..L2_MAX).map(|s| out.tokens[b * L2_MAX + s] as u32).collect();
+            let q: Vec<Dist> = (0..L2_MAX)
+                .map(|s| Dist(out.dists[(b * L2_MAX + s) * v..(b * L2_MAX + s + 1) * v].to_vec()))
+                .collect();
+            // extend the merged tree for the big target pass
+            let mut cur = trunk_nodes[j];
+            for (s, &tok) in tokens.iter().enumerate() {
+                if tree.nodes[cur].q.is_none() {
+                    tree.set_q(cur, q[s].clone());
+                }
+                cur = tree.add_child(cur, tok, Provenance::Branch { branch: b, step: s + 1 });
+            }
+            per_branch.push(BranchChain { tokens, q, p: Vec::new() });
+        }
+        branches.push(per_branch);
+    }
+
+    // one big target pass for p at every superset node
+    let n_bucket = meta.tree_big;
+    if tree.len() > n_bucket {
+        return Err(anyhow!("superset tree {} exceeds bucket {}", tree.len(), n_bucket));
+    }
+    let (toks, pos) = tree.tokens_positions(n_bucket, root_pos, crate::tokenizer::PAD);
+    let bias = tree.attention_bias(n_bucket);
+    let out = engine.tree_verify(
+        n_bucket,
+        &seq.target_kv.k,
+        &seq.target_kv.v,
+        &toks,
+        &pos,
+        &bias,
+        root_pos,
+    )?;
+    let vt = meta.target.vocab;
+    let p_at = |node: usize| Dist::from_logits(&out.logits[node * vt..(node + 1) * vt], sampling);
+
+    let trunk_p: Vec<Dist> = trunk_nodes.iter().map(|&n| p_at(n)).collect();
+    // walk the merged tree to recover p along each branch chain
+    for (j, per_branch) in branches.iter_mut().enumerate() {
+        for chain in per_branch.iter_mut() {
+            let mut cur = trunk_nodes[j];
+            let mut ps = Vec::with_capacity(chain.tokens.len() + 1);
+            for &tok in &chain.tokens {
+                cur = tree
+                    .child_with_token(cur, tok)
+                    .expect("superset tree chain");
+                ps.push(p_at(cur));
+            }
+            // chain.p[s] = p at the node *after* s+1 tokens; the dist used at
+            // chain step s (predicting token s+1) is at the previous node —
+            // realign: p for branching at node s = p of node with s tokens.
+            let mut aligned = Vec::with_capacity(chain.tokens.len());
+            let mut cur2 = trunk_nodes[j];
+            for &tok in &chain.tokens {
+                aligned.push(p_at(cur2));
+                cur2 = tree.child_with_token(cur2, tok).unwrap();
+            }
+            aligned.push(p_at(cur2)); // leaf p (bonus)
+            chain.p = aligned;
+            let _ = ps;
+        }
+    }
+
+    Ok(Superset { trunk_tokens, trunk_q, trunk_p, branches })
+}
+
+// ---------------------------------------------------------------------------
+// Training (Eq. 12)
+// ---------------------------------------------------------------------------
+
+pub struct TrainConfig {
+    pub epochs: usize,
+    pub lr: f32,
+    pub lambda: f32,
+    pub alpha: f32,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { epochs: 30, lr: 1e-3, lambda: 1.0, alpha: 0.2, seed: 0 }
+    }
+}
+
+/// Trained checkpoint for one (family, solver).
+pub struct Checkpoint {
+    pub net: SelectorNet,
+    pub scalar_mean: Vec<f32>,
+    pub scalar_std: Vec<f32>,
+    pub lat: LatencyModel,
+}
+
+/// Pick the per-sampling-config static baseline action (best mean Ê/T̂ over
+/// the i.i.d. static grid, paper §4 style) — returns index into actions.
+fn baseline_index(roots: &[&TraceRoot], solver_idx: usize, actions: &[Action]) -> usize {
+    let mut best = 0usize;
+    let mut best_v = f64::MIN;
+    for (ai, a) in actions.iter().enumerate() {
+        // static baselines are root-iid multipath or single path
+        if a.l1 != 0 && a.k > 1 {
+            continue;
+        }
+        let mut e = 0.0;
+        let mut t = 0.0;
+        for r in roots {
+            e += r.e_hat[solver_idx].1[ai];
+            t += r.t_hat[ai];
+        }
+        let v = e / t.max(1e-12);
+        if v > best_v {
+            best_v = v;
+            best = ai;
+        }
+    }
+    best
+}
+
+/// Train one selector on trace roots for one solver. Returns the checkpoint
+/// and the mean train objective ratio (TPS_π / TPS_base).
+pub fn train(
+    roots: &[TraceRoot],
+    solver_name: &str,
+    d_p: usize,
+    d_q: usize,
+    lat: &LatencyModel,
+    cfg: &TrainConfig,
+) -> Result<(Checkpoint, f64)> {
+    let actions = action_space();
+    let n_a = actions.len();
+    let solver_idx = roots
+        .first()
+        .and_then(|r| r.e_hat.iter().position(|(n, _)| n == solver_name))
+        .ok_or_else(|| anyhow!("no traces for solver {solver_name}"))?;
+
+    // scalar standardization
+    let n_s = roots[0].scalars.len();
+    let mut mean = vec![0.0f32; n_s];
+    let mut std = vec![0.0f32; n_s];
+    for r in roots {
+        for (i, &v) in r.scalars.iter().enumerate() {
+            mean[i] += v / roots.len() as f32;
+        }
+    }
+    for r in roots {
+        for (i, &v) in r.scalars.iter().enumerate() {
+            std[i] += (v - mean[i]) * (v - mean[i]) / roots.len() as f32;
+        }
+    }
+    for v in std.iter_mut() {
+        *v = v.sqrt().max(1e-4);
+    }
+    let norm = |r: &TraceRoot| -> Vec<f32> {
+        r.scalars
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| (v - mean[i]) / std[i])
+            .collect()
+    };
+
+    // per-sampling-config baselines
+    let mut base_of_root: Vec<usize> = Vec::with_capacity(roots.len());
+    {
+        use std::collections::BTreeMap;
+        let mut groups: BTreeMap<(u32, u32), Vec<usize>> = BTreeMap::new();
+        for (i, r) in roots.iter().enumerate() {
+            groups
+                .entry((r.temperature.to_bits(), r.top_p.to_bits()))
+                .or_default()
+                .push(i);
+        }
+        let mut per_root = vec![0usize; roots.len()];
+        for idxs in groups.values() {
+            let rs: Vec<&TraceRoot> = idxs.iter().map(|&i| &roots[i]).collect();
+            let b = baseline_index(&rs, solver_idx, &actions);
+            for &i in idxs {
+                per_root[i] = b;
+            }
+        }
+        base_of_root = per_root;
+    }
+
+    let mut net = SelectorNet::new(d_p, d_q, n_s, n_a, cfg.seed);
+    let mut rng = Pcg64::seeded(cfg.seed + 1);
+    let mut t_step = 0usize;
+    let batch = 16usize.min(roots.len().max(1));
+    let mut final_ratio = 0.0;
+
+    for _epoch in 0..cfg.epochs {
+        let mut order: Vec<usize> = (0..roots.len()).collect();
+        // shuffle
+        for i in (1..order.len()).rev() {
+            order.swap(i, rng.next_below(i + 1));
+        }
+        let mut ratio_sum = 0.0f64;
+        for chunk in order.chunks(batch) {
+            let mut g = net.zero_grads();
+            // first pass: compute penalties for the CVaR top-α selection
+            let mut rec = Vec::new();
+            for &i in chunk {
+                let r = &roots[i];
+                let sc = norm(r);
+                let (logits, cache) =
+                    net.forward(&r.hidden_p, &r.hidden_q_prev, &r.hidden_q_cur, &sc);
+                let pi = softmax(&logits);
+                let e_row = &r.e_hat[solver_idx].1;
+                let e: f64 = pi.iter().zip(e_row).map(|(&p, &v)| p as f64 * v).sum();
+                let t: f64 = pi.iter().zip(&r.t_hat).map(|(&p, &v)| p as f64 * v).sum();
+                let bi = base_of_root[i];
+                let tps_base = e_row[bi] / r.t_hat[bi].max(1e-12);
+                let ratio = (e / t.max(1e-12)) / tps_base.max(1e-12);
+                rec.push((i, cache, pi, e, t, tps_base, ratio));
+            }
+            let mut pen: Vec<f64> = rec
+                .iter()
+                .map(|(_, _, _, _, _, _, r)| (1.0 - r).max(0.0).powi(2))
+                .collect();
+            let mut pen_sorted = pen.clone();
+            pen_sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let n_alpha = ((cfg.alpha * chunk.len() as f32).ceil() as usize).max(1);
+            let thresh = pen_sorted.get(n_alpha - 1).copied().unwrap_or(0.0);
+
+            for (ri, (i, cache, pi, e, t, tps_base, ratio)) in rec.iter().enumerate() {
+                let r = &roots[*i];
+                let e_row = &r.e_hat[solver_idx].1;
+                ratio_sum += ratio;
+                // dL/dπ_a for -log(ratio) term: -(E_a/E - T_a/T)
+                // penalty term (if in top-α): 2·max(1-ratio,0)·ratio·(E_a/E - T_a/T)·(-1)·λ/n_alpha
+                let in_alpha = pen[ri] >= thresh && pen[ri] > 0.0;
+                let mut dpi = vec![0.0f64; n_a];
+                for a in 0..n_a {
+                    let s = e_row[a] / e.max(1e-12) - r.t_hat[a] / t.max(1e-12);
+                    let mut d = -s / chunk.len() as f64;
+                    if in_alpha {
+                        let dpen = -2.0 * (1.0 - ratio).max(0.0) * ratio * s;
+                        d += cfg.lambda as f64 * dpen / n_alpha as f64;
+                    }
+                    dpi[a] = d;
+                }
+                let _ = tps_base;
+                // softmax jacobian: dlogit_a = π_a (dπ_a − Σ_b π_b dπ_b)
+                let dot: f64 = pi.iter().zip(&dpi).map(|(&p, &d)| p as f64 * d).sum();
+                let dlogits: Vec<f32> = pi
+                    .iter()
+                    .zip(&dpi)
+                    .map(|(&p, &d)| (p as f64 * (d - dot)) as f32)
+                    .collect();
+                net.backward(cache, &dlogits, &mut g);
+            }
+            pen.clear();
+            t_step += 1;
+            net.adam_step(&g, cfg.lr, t_step);
+        }
+        final_ratio = ratio_sum / roots.len() as f64;
+    }
+
+    Ok((
+        Checkpoint { net, scalar_mean: mean, scalar_std: std, lat: lat.clone() },
+        final_ratio,
+    ))
+}
+
+// ---------------------------------------------------------------------------
+// Online policy
+// ---------------------------------------------------------------------------
+
+/// Argmax policy over the trained selector (paper §6 inference).
+pub struct NeuralPolicy {
+    pub ckpt: Checkpoint,
+    pub max_seq: usize,
+    actions: Vec<Action>,
+}
+
+impl NeuralPolicy {
+    pub fn new(ckpt: Checkpoint, max_seq: usize) -> NeuralPolicy {
+        NeuralPolicy { ckpt, max_seq, actions: action_space() }
+    }
+}
+
+impl ActionPolicy for NeuralPolicy {
+    fn choose(&self, f: &StepFeatures<'_>) -> Action {
+        let sc_raw = scalar_features(f, &self.ckpt.lat, self.max_seq);
+        let sc: Vec<f32> = sc_raw
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| (v - self.ckpt.scalar_mean[i]) / self.ckpt.scalar_std[i])
+            .collect();
+        let (logits, _) = self
+            .ckpt
+            .net
+            .forward(f.hidden_p_prev, f.hidden_q_prev, f.hidden_q_cur, &sc);
+        let mut best = 0usize;
+        for i in 1..logits.len() {
+            if logits[i] > logits[best] {
+                best = i;
+            }
+        }
+        self.actions[best]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint (de)serialization
+// ---------------------------------------------------------------------------
+
+fn f32s_json(v: &[f32]) -> Json {
+    arr(v.iter().map(|&x| num(x as f64)))
+}
+
+fn json_f32s(j: &Json) -> Vec<f32> {
+    j.as_arr()
+        .map(|a| a.iter().filter_map(|v| v.as_f64()).map(|v| v as f32).collect())
+        .unwrap_or_default()
+}
+
+pub fn save_checkpoint(path: &Path, ckpt: &Checkpoint, d_p: usize, d_q: usize) -> Result<()> {
+    let lin = |l: &mlp::Linear| {
+        obj(vec![
+            ("w", f32s_json(&l.w)),
+            ("b", f32s_json(&l.b)),
+            ("n_in", num(l.n_in as f64)),
+            ("n_out", num(l.n_out as f64)),
+        ])
+    };
+    let j = obj(vec![
+        ("d_p", num(d_p as f64)),
+        ("d_q", num(d_q as f64)),
+        ("proj_p", lin(&ckpt.net.proj_p)),
+        ("proj_q_prev", lin(&ckpt.net.proj_q_prev)),
+        ("proj_q_cur", lin(&ckpt.net.proj_q_cur)),
+        ("fc1", lin(&ckpt.net.fc1)),
+        ("fc2", lin(&ckpt.net.fc2)),
+        ("head", lin(&ckpt.net.head)),
+        ("scalar_mean", f32s_json(&ckpt.scalar_mean)),
+        ("scalar_std", f32s_json(&ckpt.scalar_std)),
+        ("latency", ckpt.lat.to_json()),
+    ]);
+    std::fs::create_dir_all(path.parent().unwrap_or(Path::new(".")))?;
+    std::fs::write(path, j.to_string_pretty())?;
+    Ok(())
+}
+
+pub fn load_checkpoint(path: &Path) -> Result<Checkpoint> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading checkpoint {}", path.display()))?;
+    let j = J::parse(&text).map_err(|e| anyhow!("checkpoint parse: {e}"))?;
+    let d_p = j.get("d_p").map_err(|e| anyhow!(e))?.as_usize().unwrap();
+    let d_q = j.get("d_q").map_err(|e| anyhow!(e))?.as_usize().unwrap();
+    let n_s = json_f32s(j.get("scalar_mean").map_err(|e| anyhow!(e))?).len();
+    let n_a = action_space().len();
+    let mut net = SelectorNet::new(d_p, d_q, n_s, n_a, 0);
+    let fill = |l: &mut mlp::Linear, key: &str| -> Result<()> {
+        let lj = j.get(key).map_err(|e| anyhow!(e))?;
+        l.w = json_f32s(lj.get("w").map_err(|e| anyhow!(e))?);
+        l.b = json_f32s(lj.get("b").map_err(|e| anyhow!(e))?);
+        Ok(())
+    };
+    fill(&mut net.proj_p, "proj_p")?;
+    fill(&mut net.proj_q_prev, "proj_q_prev")?;
+    fill(&mut net.proj_q_cur, "proj_q_cur")?;
+    fill(&mut net.fc1, "fc1")?;
+    fill(&mut net.fc2, "fc2")?;
+    fill(&mut net.head, "head")?;
+    Ok(Checkpoint {
+        net,
+        scalar_mean: json_f32s(j.get("scalar_mean").map_err(|e| anyhow!(e))?),
+        scalar_std: json_f32s(j.get("scalar_std").map_err(|e| anyhow!(e))?),
+        lat: LatencyModel::from_json(j.get("latency").map_err(|e| anyhow!(e))?)?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn action_space_size() {
+        assert_eq!(action_space().len(), 4 * 9 * 9);
+    }
+
+    #[test]
+    fn latency_estimate_monotone_in_tree_size() {
+        let lat = LatencyModel {
+            t_decode_draft: 0.001,
+            t_trunk: vec![0.0, 0.002, 0.003, 0.004, 0.005, 0.006, 0.007, 0.008, 0.009],
+            t_branch: vec![
+                vec![],
+                vec![],
+                vec![0.004, 0.006, 0.008, 0.010],
+                vec![0.005, 0.008, 0.011, 0.014],
+                vec![0.006, 0.010, 0.013, 0.016],
+            ],
+            t_tree: vec![0.01, 0.02, 0.03, 0.05],
+            branch_lens: vec![2, 4, 6, 8],
+            tree_sizes: vec![8, 16, 32, 48],
+        };
+        let small = lat.estimate(Action::new(1, 2, 0));
+        let big = lat.estimate(Action::new(4, 8, 8));
+        assert!(big > small);
+    }
+
+    /// Train on synthetic traces where one action dominates; the selector
+    /// must learn to pick it.
+    #[test]
+    fn selector_learns_dominant_action() {
+        let actions = action_space();
+        let n_a = actions.len();
+        let target_action = 77usize;
+        let mut rng = Pcg64::seeded(3);
+        let mut roots = Vec::new();
+        for _ in 0..40 {
+            let hidden: Vec<f32> = (0..8).map(|_| rng.next_f32()).collect();
+            let mut e = vec![1.0f64; n_a];
+            e[target_action] = 5.0;
+            roots.push(TraceRoot {
+                hidden_p: hidden.clone(),
+                hidden_q_prev: hidden.clone(),
+                hidden_q_cur: hidden.clone(),
+                scalars: (0..N_SCALARS).map(|_| rng.next_f32()).collect(),
+                e_hat: vec![("SpecInfer".into(), e)],
+                t_hat: vec![1.0; n_a],
+                temperature: 1.0,
+                top_p: 1.0,
+            });
+        }
+        let lat = LatencyModel::default();
+        let cfg = TrainConfig { epochs: 15, lr: 3e-3, ..Default::default() };
+        let (ckpt, ratio) = train(&roots, "SpecInfer", 8, 8, &lat, &cfg).unwrap();
+        assert!(ratio > 0.9, "train ratio {ratio}");
+        // policy should pick the dominant action
+        let r = &roots[0];
+        let sc: Vec<f32> = r
+            .scalars
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| (v - ckpt.scalar_mean[i]) / ckpt.scalar_std[i])
+            .collect();
+        let (logits, _) = ckpt
+            .net
+            .forward(&r.hidden_p, &r.hidden_q_prev, &r.hidden_q_cur, &sc);
+        let best = (0..n_a).max_by(|&a, &b| logits[a].partial_cmp(&logits[b]).unwrap()).unwrap();
+        assert_eq!(best, target_action, "selector picked {:?}", actions[best]);
+    }
+}

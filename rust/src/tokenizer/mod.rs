@@ -1,0 +1,64 @@
+//! Byte-level tokenizer shared with the python training pipeline.
+//!
+//! Token ids 0..=255 are raw bytes; 256 = BOS, 257 = EOS, 258 = PAD.
+//! (python/compile/model.py defines the same constants.)
+
+pub const VOCAB: usize = 259;
+pub const BOS: u32 = 256;
+pub const EOS: u32 = 257;
+pub const PAD: u32 = 258;
+
+/// Encode text as byte tokens.
+pub fn encode(text: &str) -> Vec<u32> {
+    text.as_bytes().iter().map(|&b| b as u32).collect()
+}
+
+/// Decode tokens back to text. Special tokens are dropped; invalid UTF-8 is
+/// replaced (generation can split multi-byte characters at block bounds).
+pub fn decode(tokens: &[u32]) -> String {
+    let bytes: Vec<u8> = tokens
+        .iter()
+        .filter(|&&t| t < 256)
+        .map(|&t| t as u8)
+        .collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+/// Is this token a generation terminator?
+pub fn is_terminal(token: u32) -> bool {
+    token == EOS || token == PAD
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = encode("hello, world!\n");
+        assert_eq!(decode(&t), "hello, world!\n");
+        assert!(t.iter().all(|&x| x < 256));
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let s = "héllo ✓";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn specials_dropped_on_decode() {
+        let mut t = encode("ab");
+        t.push(EOS);
+        t.push(PAD);
+        assert_eq!(decode(&t), "ab");
+    }
+
+    #[test]
+    fn terminality() {
+        assert!(is_terminal(EOS));
+        assert!(is_terminal(PAD));
+        assert!(!is_terminal(BOS));
+        assert!(!is_terminal(65));
+    }
+}

@@ -1,0 +1,325 @@
+//! Draft tree structure (paper Definition 3.1 / 5.2).
+//!
+//! Nodes are distinct contexts; child lists carry *multiplicity* (two i.i.d.
+//! paths sampling the same token at the same node contribute the same child
+//! node twice). Node 0 is always the root: the last committed token, whose
+//! KV row is recomputed by the target tree pass.
+
+use crate::dist::Dist;
+
+/// Where a node's draft-model KV row came from (for cache commits).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Provenance {
+    /// The committed root token: no draft rows to commit.
+    Root,
+    /// Trunk rollout step `step` (single path, K = 1).
+    Trunk { step: usize },
+    /// Branch rollout: path `branch`, step `step`.
+    Branch { branch: usize, step: usize },
+}
+
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub token: u32,
+    pub parent: Option<usize>,
+    pub depth: usize,
+    /// Children **with multiplicity**, in draft order.
+    pub children: Vec<usize>,
+    /// Draft distribution q(.|context of this node) — the transformed
+    /// distribution the rollout actually sampled children from.
+    pub q: Option<Dist>,
+    /// Target distribution p(.|context of this node); filled after the tree
+    /// pass.
+    pub p: Option<Dist>,
+    pub provenance: Provenance,
+}
+
+/// The i.i.d. path draws that produced the tree. Distinct paths are
+/// independent draws even where their tokens coincide; the first
+/// `shared_edges` edges (the delayed-expansion trunk) are a *single* draw
+/// shared by every path. Bottom-up verification (Traversal) needs this to
+/// know how many independent trials each edge supports.
+#[derive(Clone, Debug, Default)]
+pub struct PathDraws {
+    /// Root→leaf node-index sequences (root excluded), in draft order.
+    pub paths: Vec<Vec<usize>>,
+    /// Number of leading edges shared as one draw across all paths.
+    pub shared_edges: usize,
+}
+
+/// A draft tree plus construction helpers.
+#[derive(Clone, Debug)]
+pub struct DraftTree {
+    pub nodes: Vec<Node>,
+    /// Draw provenance; `None` means "each leaf path is an independent
+    /// draw" (plain i.i.d. multipath).
+    pub path_draws: Option<PathDraws>,
+}
+
+impl DraftTree {
+    /// New tree containing only the root token.
+    pub fn new(root_token: u32) -> DraftTree {
+        DraftTree {
+            nodes: vec![Node {
+                token: root_token,
+                parent: None,
+                depth: 0,
+                children: Vec::new(),
+                q: None,
+                p: None,
+                provenance: Provenance::Root,
+            }],
+            path_draws: None,
+        }
+    }
+
+    /// Path draws: recorded ones, or one independent draw per leaf.
+    pub fn draws(&self) -> PathDraws {
+        match &self.path_draws {
+            Some(d) => d.clone(),
+            None => PathDraws {
+                paths: self.leaves().iter().map(|&l| self.path_nodes(l)).collect(),
+                shared_edges: 0,
+            },
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn max_depth(&self) -> usize {
+        self.nodes.iter().map(|n| n.depth).max().unwrap_or(0)
+    }
+
+    /// Append a child of `parent` with the given token; if an identical
+    /// child context already exists it is reused and only the multiplicity
+    /// grows. Returns the child node index.
+    pub fn add_child(&mut self, parent: usize, token: u32, provenance: Provenance) -> usize {
+        if let Some(&existing) = self.nodes[parent]
+            .children
+            .iter()
+            .find(|&&c| self.nodes[c].token == token)
+        {
+            self.nodes[parent].children.push(existing);
+            return existing;
+        }
+        let idx = self.nodes.len();
+        let depth = self.nodes[parent].depth + 1;
+        self.nodes.push(Node {
+            token,
+            parent: Some(parent),
+            depth,
+            children: Vec::new(),
+            q: None,
+            p: None,
+            provenance,
+        });
+        self.nodes[parent].children.push(idx);
+        idx
+    }
+
+    /// Set the draft distribution at a node (idempotent: identical contexts
+    /// across branches produce identical dists).
+    pub fn set_q(&mut self, node: usize, q: Dist) {
+        self.nodes[node].q = Some(q);
+    }
+
+    pub fn set_p(&mut self, node: usize, p: Dist) {
+        self.nodes[node].p = Some(p);
+    }
+
+    /// Child tokens of `node` with multiplicity, in draft order.
+    pub fn child_tokens(&self, node: usize) -> Vec<u32> {
+        self.nodes[node]
+            .children
+            .iter()
+            .map(|&c| self.nodes[c].token)
+            .collect()
+    }
+
+    /// Distinct child node indices in first-appearance order.
+    pub fn distinct_children(&self, node: usize) -> Vec<usize> {
+        let mut seen = Vec::new();
+        for &c in &self.nodes[node].children {
+            if !seen.contains(&c) {
+                seen.push(c);
+            }
+        }
+        seen
+    }
+
+    /// Find the child node of `node` carrying `token`.
+    pub fn child_with_token(&self, node: usize, token: u32) -> Option<usize> {
+        self.nodes[node]
+            .children
+            .iter()
+            .copied()
+            .find(|&c| self.nodes[c].token == token)
+    }
+
+    /// Root-to-node token path (excluding the root token itself).
+    pub fn path_tokens(&self, mut node: usize) -> Vec<u32> {
+        let mut out = Vec::new();
+        while let Some(p) = self.nodes[node].parent {
+            out.push(self.nodes[node].token);
+            node = p;
+        }
+        out.reverse();
+        out
+    }
+
+    /// Node indices from root (exclusive) down to `node` (inclusive).
+    pub fn path_nodes(&self, mut node: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        while let Some(p) = self.nodes[node].parent {
+            out.push(node);
+            node = p;
+        }
+        out.reverse();
+        out
+    }
+
+    /// Is `anc` an ancestor of `node` (or equal)?
+    pub fn is_ancestor_or_self(&self, anc: usize, node: usize) -> bool {
+        let mut cur = node;
+        loop {
+            if cur == anc {
+                return true;
+            }
+            match self.nodes[cur].parent {
+                Some(p) => cur = p,
+                None => return false,
+            }
+        }
+    }
+
+    /// Additive attention bias for the target tree pass, padded to
+    /// `n_bucket` nodes: bias[i][j] = 0 when j is ancestor-or-self of i,
+    /// else -1e30. Padding rows see only themselves.
+    pub fn attention_bias(&self, n_bucket: usize) -> Vec<f32> {
+        assert!(self.len() <= n_bucket, "tree {} > bucket {n_bucket}", self.len());
+        let mut bias = vec![-1e30f32; n_bucket * n_bucket];
+        for i in 0..n_bucket {
+            bias[i * n_bucket + i] = 0.0;
+        }
+        for i in 0..self.len() {
+            let mut cur = i;
+            loop {
+                bias[i * n_bucket + cur] = 0.0;
+                match self.nodes[cur].parent {
+                    Some(p) => cur = p,
+                    None => break,
+                }
+            }
+        }
+        bias
+    }
+
+    /// Tokens and positions padded to the bucket, for the tree pass.
+    /// `root_pos` is the cache position of the root token; node at depth d
+    /// sits at `root_pos + d`. Padding uses `pad_token` at `root_pos`.
+    pub fn tokens_positions(
+        &self,
+        n_bucket: usize,
+        root_pos: usize,
+        pad_token: u32,
+    ) -> (Vec<i32>, Vec<i32>) {
+        let mut toks = vec![pad_token as i32; n_bucket];
+        let mut pos = vec![root_pos as i32; n_bucket];
+        for (i, n) in self.nodes.iter().enumerate() {
+            toks[i] = n.token as i32;
+            pos[i] = (root_pos + n.depth) as i32;
+        }
+        (toks, pos)
+    }
+
+    /// All leaves (no children), in node-index order (= draft order).
+    pub fn leaves(&self) -> Vec<usize> {
+        (0..self.len())
+            .filter(|&i| self.nodes[i].children.is_empty())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chain(tokens: &[u32]) -> DraftTree {
+        let mut t = DraftTree::new(7);
+        let mut cur = 0;
+        for (i, &tok) in tokens.iter().enumerate() {
+            cur = t.add_child(cur, tok, Provenance::Trunk { step: i });
+        }
+        t
+    }
+
+    #[test]
+    fn chain_structure() {
+        let t = chain(&[1, 2, 3]);
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.max_depth(), 3);
+        assert_eq!(t.path_tokens(3), vec![1, 2, 3]);
+        assert_eq!(t.path_nodes(3), vec![1, 2, 3]);
+        assert_eq!(t.leaves(), vec![3]);
+    }
+
+    #[test]
+    fn multiplicity_merging() {
+        let mut t = DraftTree::new(0);
+        let a = t.add_child(0, 5, Provenance::Branch { branch: 0, step: 0 });
+        let b = t.add_child(0, 5, Provenance::Branch { branch: 1, step: 0 });
+        let c = t.add_child(0, 9, Provenance::Branch { branch: 2, step: 0 });
+        assert_eq!(a, b, "same context merges");
+        assert_ne!(a, c);
+        assert_eq!(t.child_tokens(0), vec![5, 5, 9]);
+        assert_eq!(t.distinct_children(0), vec![a, c]);
+        assert_eq!(t.len(), 3);
+    }
+
+    #[test]
+    fn ancestor_queries() {
+        let mut t = DraftTree::new(0);
+        let a = t.add_child(0, 1, Provenance::Trunk { step: 0 });
+        let b = t.add_child(a, 2, Provenance::Trunk { step: 1 });
+        let c = t.add_child(0, 3, Provenance::Branch { branch: 1, step: 0 });
+        assert!(t.is_ancestor_or_self(0, b));
+        assert!(t.is_ancestor_or_self(a, b));
+        assert!(t.is_ancestor_or_self(b, b));
+        assert!(!t.is_ancestor_or_self(c, b));
+        assert!(!t.is_ancestor_or_self(b, a));
+    }
+
+    #[test]
+    fn bias_matrix() {
+        let mut t = DraftTree::new(0);
+        let a = t.add_child(0, 1, Provenance::Trunk { step: 0 });
+        let b = t.add_child(a, 2, Provenance::Trunk { step: 1 });
+        let c = t.add_child(0, 3, Provenance::Branch { branch: 1, step: 0 });
+        let n = 6;
+        let bias = t.attention_bias(n);
+        let at = |i: usize, j: usize| bias[i * n + j];
+        // b sees root, a, b; not c
+        assert_eq!(at(b, 0), 0.0);
+        assert_eq!(at(b, a), 0.0);
+        assert_eq!(at(b, b), 0.0);
+        assert!(at(b, c) < -1e29);
+        // a does not see its descendant b
+        assert!(at(a, b) < -1e29);
+        // padding rows self-only
+        assert_eq!(at(5, 5), 0.0);
+        assert!(at(5, 0) < -1e29);
+    }
+
+    #[test]
+    fn tokens_positions_padding() {
+        let t = chain(&[1, 2]);
+        let (toks, pos) = t.tokens_positions(5, 10, 258);
+        assert_eq!(toks, vec![7, 1, 2, 258, 258]);
+        assert_eq!(pos, vec![10, 11, 12, 10, 10]);
+    }
+}

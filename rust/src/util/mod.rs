@@ -1,0 +1,12 @@
+//! Shared substrates: deterministic RNG, JSON, CLI parsing, thread pool,
+//! statistics helpers. Everything here is dependency-free (std only) because
+//! the build environment is offline.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+
+pub use json::Json;
+pub use rng::Pcg64;

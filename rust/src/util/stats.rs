@@ -1,0 +1,188 @@
+//! Streaming statistics and lightweight histograms for metrics and benches.
+
+/// Online mean/variance accumulator (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Running {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Running {
+    pub fn new() -> Self {
+        Running { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+    /// Standard error of the mean.
+    pub fn sem(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.std() / (self.n as f64).sqrt()
+        }
+    }
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn merge(&mut self, other: &Running) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let d = other.mean - self.mean;
+        let mean = self.mean + d * other.n as f64 / n as f64;
+        self.m2 += other.m2 + d * d * (self.n as f64 * other.n as f64) / n as f64;
+        self.mean = mean;
+        self.n = n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Fixed-bucket latency histogram with percentile queries.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    /// log-spaced bucket upper bounds (seconds, or any unit)
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    total: u64,
+}
+
+impl Histogram {
+    /// Log-spaced histogram covering [lo, hi] with `n` buckets.
+    pub fn log_spaced(lo: f64, hi: f64, n: usize) -> Self {
+        assert!(lo > 0.0 && hi > lo && n >= 2);
+        let ratio = (hi / lo).powf(1.0 / (n - 1) as f64);
+        let bounds = (0..n).map(|i| lo * ratio.powi(i as i32)).collect();
+        Histogram { bounds, counts: vec![0; n + 1], total: 0 }
+    }
+
+    pub fn record(&mut self, x: f64) {
+        let idx = self.bounds.partition_point(|&b| b < x);
+        self.counts[idx] += 1;
+        self.total += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Approximate quantile (upper bound of the containing bucket).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return f64::NAN;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target.max(1) {
+                return if i < self.bounds.len() {
+                    self.bounds[i]
+                } else {
+                    *self.bounds.last().unwrap()
+                };
+            }
+        }
+        *self.bounds.last().unwrap()
+    }
+}
+
+/// Format a mean ± sem pair compactly for tables.
+pub fn fmt_mean_sem(r: &Running) -> String {
+    format!("{:.2}±{:.2}", r.mean(), r.sem())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn running_basic() {
+        let mut r = Running::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            r.push(x);
+        }
+        assert_eq!(r.count(), 4);
+        assert!((r.mean() - 2.5).abs() < 1e-12);
+        assert!((r.var() - 5.0 / 3.0).abs() < 1e-12);
+        assert_eq!(r.min(), 1.0);
+        assert_eq!(r.max(), 4.0);
+    }
+
+    #[test]
+    fn running_merge_equals_combined() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 10.0).collect();
+        let mut all = Running::new();
+        let mut a = Running::new();
+        let mut b = Running::new();
+        for (i, &x) in xs.iter().enumerate() {
+            all.push(x);
+            if i % 2 == 0 {
+                a.push(x)
+            } else {
+                b.push(x)
+            }
+        }
+        a.merge(&b);
+        assert!((a.mean() - all.mean()).abs() < 1e-9);
+        assert!((a.var() - all.var()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let mut h = Histogram::log_spaced(1e-6, 10.0, 64);
+        for i in 1..=1000 {
+            h.record(i as f64 / 1000.0);
+        }
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p99);
+        assert!((p50 - 0.5).abs() / 0.5 < 0.3, "p50 {p50}");
+    }
+
+    #[test]
+    fn histogram_empty_nan() {
+        let h = Histogram::log_spaced(1e-6, 1.0, 8);
+        assert!(h.quantile(0.5).is_nan());
+    }
+}

@@ -1,0 +1,232 @@
+//! Block Verification (Sun et al. 2024c) — single-path, non-OT.
+//!
+//! Reconstructed from the paper's description (§3.1): recursive weights
+//! w_i = min(1, w_{i−1}·p_i/q_i), single-uniform acceptance of the deepest
+//! weight-covered node, and the *w-weighted naive residual*
+//! ∝ (p − q/w_τ)_+ as the correction.
+//!
+//! Derivation (validated by the Monte-Carlo losslessness suite): the weights
+//! w_i are the tightest reach probabilities satisfying the conditional
+//! losslessness constraint w_{i+1} ≤ w_i·p_{i+1}/q_{i+1} (accepted-child mass
+//! at a node must not exceed the target mass); deep steps with p/q > 1 repay
+//! earlier deficits, which is exactly how BV beats per-token naive
+//! acceptance. Because w is not monotone, a single uniform cannot use w
+//! directly as thresholds; the backward pass below rebuilds monotone
+//! thresholds W_i with E[W_i | x_{1:i}] = w_i by distributing the slack
+//! s_i = w_i − E[w_{i+1}|x_{1:i}] over the headroom (1 − W_{i+1}):
+//!
+//! ```text
+//!     e_i = Σ_t min(q_{i+1}(t), w_i·p_{i+1}(t))      (= E[w_{i+1}|x_{1:i}])
+//!     W_L = w_L,   W_i = W_{i+1} + (w_i − e_i)·(1 − W_{i+1})/(1 − e_i)
+//! ```
+//!
+//! Stop depth τ = max{i : u ≤ W_i}; the accepted-child conditional mass is
+//! then min(q, w_τ·p)/w_τ ≤ p pointwise and the residual (p − q/w_τ)_+
+//! restores the target exactly.
+
+use super::{Verdict, Verifier};
+use crate::dist::Dist;
+use crate::tree::DraftTree;
+use crate::util::Pcg64;
+
+pub struct BlockVerify;
+
+/// Forward/backward pass over one path. `p_first` overrides the target
+/// distribution at the first node (used by Traversal's residual handoff).
+///
+/// `path` lists node indices below the start node. Returns
+/// (stop depth τ ∈ 0..=L, weight w_τ at the stop node).
+pub(crate) fn bv_path(
+    tree: &DraftTree,
+    start: usize,
+    p_first: &Dist,
+    path: &[usize],
+    rng: &mut Pcg64,
+) -> (usize, f64) {
+    let l = path.len();
+    debug_assert!(l > 0);
+
+    // dists along the path: entry i gives (p, q) at the node *above* edge i.
+    let node_p = |i: usize| -> &Dist {
+        if i == 0 {
+            p_first
+        } else {
+            tree.nodes[path[i - 1]].p.as_ref().expect("p dist")
+        }
+    };
+    let node_q = |i: usize| -> &Dist {
+        let n = if i == 0 { start } else { path[i - 1] };
+        tree.nodes[n].q.as_ref().expect("q dist")
+    };
+
+    // forward weights
+    let mut w = vec![1.0f64; l + 1];
+    for i in 1..=l {
+        let tok = tree.nodes[path[i - 1]].token as usize;
+        let (p, q) = (node_p(i - 1), node_q(i - 1));
+        let r = if q.p(tok) > 0.0 {
+            p.p(tok) as f64 / q.p(tok) as f64
+        } else {
+            1.0
+        };
+        w[i] = (w[i - 1] * r).min(1.0);
+    }
+
+    // e_i = Σ_t min(q_{i+1}(t), w_i p_{i+1}(t)) for i < L
+    let mut e = vec![0.0f64; l];
+    for i in 0..l {
+        let (p, q) = (node_p(i), node_q(i));
+        e[i] = p
+            .0
+            .iter()
+            .zip(&q.0)
+            .map(|(&pt, &qt)| (qt as f64).min(w[i] * pt as f64))
+            .sum();
+    }
+
+    // backward monotone thresholds
+    let mut thr = vec![0.0f64; l + 1];
+    thr[l] = w[l];
+    for i in (0..l).rev() {
+        let s = (w[i] - e[i]).max(0.0);
+        thr[i] = if e[i] >= 1.0 - 1e-12 {
+            thr[i + 1]
+        } else {
+            thr[i + 1] + s * (1.0 - thr[i + 1]) / (1.0 - e[i])
+        };
+    }
+
+    let u = rng.next_f64();
+    let mut tau = 0usize;
+    for i in (0..=l).rev() {
+        if u <= thr[i] {
+            tau = i;
+            break;
+        }
+    }
+    (tau, w[tau])
+}
+
+/// w-weighted naive residual at the stop node: ∝ (p − q/w)_+.
+pub(crate) fn weighted_residual(p: &Dist, q: &Dist, w: f64) -> Dist {
+    let mut r: Vec<f32> = p
+        .0
+        .iter()
+        .zip(&q.0)
+        .map(|(&pt, &qt)| (pt as f64 - qt as f64 / w.max(1e-12)).max(0.0) as f32)
+        .collect();
+    let s: f32 = r.iter().sum();
+    if s > 0.0 {
+        for v in r.iter_mut() {
+            *v /= s;
+        }
+        Dist(r)
+    } else {
+        // zero-probability stop (numerical); fall back to target
+        p.clone()
+    }
+}
+
+impl Verifier for BlockVerify {
+    fn name(&self) -> &'static str {
+        "BV"
+    }
+
+    fn verify(&self, tree: &DraftTree, rng: &mut Pcg64) -> Verdict {
+        // single-path: follow the first-child chain
+        let mut path = Vec::new();
+        let mut cur = 0usize;
+        while let Some(&c) = tree.nodes[cur].children.first() {
+            path.push(c);
+            cur = c;
+        }
+        if path.is_empty() {
+            let p = tree.nodes[0].p.as_ref().expect("p dist");
+            return Verdict { accepted: vec![], correction: p.sample(rng) as u32 };
+        }
+        let p_root = tree.nodes[0].p.as_ref().expect("p dist").clone();
+        let (tau, w_tau) = bv_path(tree, 0, &p_root, &path, rng);
+        let accepted: Vec<usize> = path[..tau].to_vec();
+        let stop = if tau == 0 { 0 } else { path[tau - 1] };
+        let correction = if tau == path.len() {
+            // whole block accepted: bonus token from the leaf target dist
+            tree.nodes[*path.last().unwrap()].p.as_ref().unwrap().sample(rng) as u32
+        } else {
+            let p = if tau == 0 { &p_root } else { tree.nodes[stop].p.as_ref().unwrap() };
+            let q = tree.nodes[stop].q.as_ref().expect("q dist");
+            weighted_residual(p, q, w_tau).sample(rng) as u32
+        };
+        Verdict { accepted, correction }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tree::Provenance;
+
+    /// Build a path tree with prescribed p/q at each node.
+    fn path_tree(tokens: &[u32], dists: Vec<(Dist, Dist)>) -> DraftTree {
+        let mut t = DraftTree::new(0);
+        let mut cur = 0;
+        for (i, &tok) in tokens.iter().enumerate() {
+            cur = t.add_child(cur, tok, Provenance::Trunk { step: i });
+        }
+        let mut node = 0;
+        for (i, (p, q)) in dists.into_iter().enumerate() {
+            t.set_p(node, p);
+            t.set_q(node, q);
+            if i < tokens.len() {
+                node = t.nodes[node].children[0];
+            }
+        }
+        t
+    }
+
+    #[test]
+    fn repayment_beats_naive() {
+        // r1 = 2 (surplus), r2 = 0.6: naive accepts depth-2 w.p. 0.6;
+        // BV weights: w1 = 1, w2 = 0.6 — but the coupled thresholds let the
+        // early surplus repay, so P(τ ≥ 2) = 0.6 = naive here; the gain shows
+        // when the deficit comes first: r1 = 0.6, r2 = 2 → naive 0.6·1 = 0.6
+        // at depth 2... with w: w1 = 0.6, w2 = min(1, 1.2) = 1?? no:
+        // w2 = min(1, 0.6·2) = 1 ≥ naive's 0.6 — deep repayment.
+        let p0 = Dist(vec![0.6, 0.4]);
+        let q0 = Dist(vec![1.0, 0.0]);
+        // at node (tok 0): p gives token 0 prob 0.8, q gives 0.4 → r = 2
+        let p1 = Dist(vec![0.8, 0.2]);
+        let q1 = Dist(vec![0.4, 0.6]);
+        let p2 = Dist(vec![0.5, 0.5]);
+        let q2 = Dist(vec![0.5, 0.5]);
+        let tree = path_tree(&[0, 0], vec![(p0, q0), (p1, q1), (p2, q2)]);
+        let mut rng = Pcg64::seeded(11);
+        let n = 60_000;
+        let mut depth2 = 0usize;
+        for _ in 0..n {
+            if BlockVerify.verify(&tree, &mut rng).tau() >= 2 {
+                depth2 += 1;
+            }
+        }
+        let frac = depth2 as f64 / n as f64;
+        // naive would give min(1,0.6)·min(1,2) = 0.6; BV's w2 = min(1,1.2) = 1
+        // capped by the thresholds' budget E[W_2] = w_2-budget... empirically
+        // BV must be >= naive's 0.6.
+        assert!(frac >= 0.6 - 0.01, "depth-2 acceptance {frac} < naive 0.6");
+    }
+
+    #[test]
+    fn weights_monotone_thresholds() {
+        let p = Dist(vec![0.5, 0.5]);
+        let q = Dist(vec![0.9, 0.1]);
+        let tree = path_tree(
+            &[0, 1],
+            vec![(p.clone(), q.clone()), (p.clone(), q.clone()), (p, q)],
+        );
+        let mut rng = Pcg64::seeded(12);
+        // just exercising: no panics, tau in range
+        for _ in 0..1000 {
+            let v = BlockVerify.verify(&tree, &mut rng);
+            assert!(v.tau() <= 2);
+        }
+    }
+}

@@ -1,0 +1,187 @@
+//! Verification algorithms (paper §3, Appendix B).
+//!
+//! Two kinds:
+//! * **OT-based** algorithms are built from an [`OtlpSolver`] (paper
+//!   Definition 3.2) and share the generic top-down walk in [`OtVerifier`]:
+//!   at each node the solver emits a token distributed as p; if it matches a
+//!   drafted child we descend, otherwise it terminates the block as the
+//!   correction token. Each solver also provides its acceptance-rate
+//!   calculator (Algorithms 6–10) and branching-probability calculator
+//!   (Algorithms 11–15) used by Figure 1 and the Eq. 3 block-efficiency
+//!   estimator.
+//! * **Non-OT** algorithms (Block Verification, Traversal) implement
+//!   [`Verifier`] directly.
+//!
+//! Losslessness of every implementation is validated by the Monte-Carlo
+//! harness in `rust/tests/losslessness.rs` (the same validation the paper
+//! reports for its calculators).
+
+pub mod bv;
+pub mod khisti;
+pub mod naive;
+pub mod nss;
+pub mod specinfer;
+pub mod spectr;
+pub mod traversal;
+
+use crate::dist::Dist;
+use crate::tree::DraftTree;
+use crate::util::Pcg64;
+
+/// Outcome of verifying one draft tree.
+#[derive(Clone, Debug)]
+pub struct Verdict {
+    /// Accepted node indices, root-exclusive, in root→leaf order.
+    pub accepted: Vec<usize>,
+    /// The correction/bonus token appended after the accepted prefix.
+    pub correction: u32,
+}
+
+impl Verdict {
+    /// τ — the depth of the accepted node.
+    pub fn tau(&self) -> usize {
+        self.accepted.len()
+    }
+    /// Decoded tokens this block = τ + 1.
+    pub fn block_tokens(&self) -> usize {
+        self.accepted.len() + 1
+    }
+}
+
+/// A verification algorithm over a draft tree whose nodes carry p and q.
+pub trait Verifier: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn verify(&self, tree: &DraftTree, rng: &mut Pcg64) -> Verdict;
+}
+
+/// An OTLP solver f_{p,q,k} (paper Definition 3.2): maps i.i.d. draft tokens
+/// X_1..X_k ~ q to an output token distributed exactly as p.
+pub trait OtlpSolver: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Draw the output token given the realized draft tokens.
+    fn solve(&self, p: &Dist, q: &Dist, xs: &[u32], rng: &mut Pcg64) -> u32;
+
+    /// Acceptance rate α(f_{p,q,k}) = P(f(X_1..X_k) ∈ {X_1..X_k}) over
+    /// X_i ~ q i.i.d. (Algorithms 6–10; Khisti's is a bound, see khisti.rs).
+    fn acceptance_rate(&self, p: &Dist, q: &Dist, k: usize) -> f64;
+
+    /// Branching probabilities B(f, xs, t) for each *position* i (aligned
+    /// with xs; duplicate tokens receive the same total value at each
+    /// occurrence — callers sum per distinct token before use).
+    /// Returned value at position i is P(f outputs token xs[i]).
+    fn branching(&self, p: &Dist, q: &Dist, xs: &[u32]) -> Vec<f64>;
+}
+
+/// Generic top-down OT walk (paper §3.2).
+pub struct OtVerifier<S: OtlpSolver> {
+    pub solver: S,
+    name: &'static str,
+}
+
+impl<S: OtlpSolver> OtVerifier<S> {
+    pub fn new(solver: S, name: &'static str) -> Self {
+        OtVerifier { solver, name }
+    }
+}
+
+impl<S: OtlpSolver> Verifier for OtVerifier<S> {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn verify(&self, tree: &DraftTree, rng: &mut Pcg64) -> Verdict {
+        let mut accepted = Vec::new();
+        let mut node = 0usize;
+        loop {
+            let p = tree.nodes[node].p.as_ref().expect("p dist set");
+            if tree.nodes[node].children.is_empty() {
+                // Leaf: sample the bonus token directly from p.
+                return Verdict { accepted, correction: p.sample(rng) as u32 };
+            }
+            let q = tree.nodes[node].q.as_ref().expect("q dist set");
+            let xs = tree.child_tokens(node);
+            let y = self.solver.solve(p, q, &xs, rng);
+            match tree.child_with_token(node, y) {
+                Some(child) => {
+                    accepted.push(child);
+                    node = child;
+                }
+                None => return Verdict { accepted, correction: y },
+            }
+        }
+    }
+}
+
+/// Expected number of accepted tokens from walking the tree with a solver's
+/// branching probabilities (the inner sum of paper Eq. 3): Σ over non-root
+/// nodes of ∏ branching probabilities along the path.
+pub fn expected_accepted(tree: &DraftTree, solver: &dyn OtlpSolver) -> f64 {
+    let mut reach = vec![0.0f64; tree.len()];
+    reach[0] = 1.0;
+    let mut total = 0.0f64;
+    for node in 0..tree.len() {
+        if reach[node] <= 0.0 || tree.nodes[node].children.is_empty() {
+            continue;
+        }
+        let p = tree.nodes[node].p.as_ref().expect("p dist set");
+        let q = tree.nodes[node].q.as_ref().expect("q dist set");
+        let xs = tree.child_tokens(node);
+        let probs = solver.branching(p, q, &xs);
+        // Sum duplicate positions per distinct child once: positions carrying
+        // the same token all hold the same total probability of the solver
+        // outputting that token, so take the value at the first occurrence.
+        let mut seen: Vec<usize> = Vec::new();
+        for (i, &child) in tree.nodes[node].children.iter().enumerate() {
+            if seen.contains(&child) {
+                continue;
+            }
+            seen.push(child);
+            let pr = reach[node] * probs[i];
+            reach[child] += pr;
+            total += pr;
+        }
+    }
+    total
+}
+
+/// All eight verifiers by paper name.
+pub fn all_verifiers() -> Vec<Box<dyn Verifier>> {
+    vec![
+        Box::new(OtVerifier::new(nss::Nss, "NSS")),
+        Box::new(OtVerifier::new(naive::Naive, "Naive")),
+        Box::new(OtVerifier::new(naive::Naive, "NaiveTree")),
+        Box::new(OtVerifier::new(spectr::SpecTr, "SpecTr")),
+        Box::new(OtVerifier::new(specinfer::SpecInfer, "SpecInfer")),
+        Box::new(OtVerifier::new(khisti::Khisti, "Khisti")),
+        Box::new(bv::BlockVerify),
+        Box::new(traversal::Traversal),
+    ]
+}
+
+/// OT solvers by name (for NDE, which applies to OT-based methods only).
+pub fn ot_solver(name: &str) -> Option<Box<dyn OtlpSolver>> {
+    match name {
+        "NSS" => Some(Box::new(nss::Nss)),
+        "Naive" | "NaiveTree" => Some(Box::new(naive::Naive)),
+        "SpecTr" => Some(Box::new(spectr::SpecTr)),
+        "SpecInfer" => Some(Box::new(specinfer::SpecInfer)),
+        "Khisti" => Some(Box::new(khisti::Khisti)),
+        _ => None,
+    }
+}
+
+/// Verifier lookup by paper name.
+pub fn verifier(name: &str) -> Option<Box<dyn Verifier>> {
+    match name {
+        "NSS" => Some(Box::new(OtVerifier::new(nss::Nss, "NSS"))),
+        "Naive" => Some(Box::new(OtVerifier::new(naive::Naive, "Naive"))),
+        "NaiveTree" => Some(Box::new(OtVerifier::new(naive::Naive, "NaiveTree"))),
+        "SpecTr" => Some(Box::new(OtVerifier::new(spectr::SpecTr, "SpecTr"))),
+        "SpecInfer" => Some(Box::new(OtVerifier::new(specinfer::SpecInfer, "SpecInfer"))),
+        "Khisti" => Some(Box::new(OtVerifier::new(khisti::Khisti, "Khisti"))),
+        "BV" => Some(Box::new(bv::BlockVerify)),
+        "Traversal" => Some(Box::new(traversal::Traversal)),
+        _ => None,
+    }
+}

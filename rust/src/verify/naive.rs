@@ -1,0 +1,132 @@
+//! Naive speculative sampling as an OTLP solver — paper Algorithm 2 / 7 / 12.
+//!
+//! Accept the *first* draft token X_1 with probability min(1, p(X_1)/q(X_1));
+//! otherwise sample from the residual ∝ (p − q)_+. Used for both the
+//! single-path "Naive" baseline and the multi-path "NaiveTree" (the residual
+//! draw may land on X_2..X_k, letting the walk branch).
+
+use super::OtlpSolver;
+use crate::dist::Dist;
+use crate::util::Pcg64;
+
+pub struct Naive;
+
+impl OtlpSolver for Naive {
+    fn name(&self) -> &'static str {
+        "Naive"
+    }
+
+    fn solve(&self, p: &Dist, q: &Dist, xs: &[u32], rng: &mut Pcg64) -> u32 {
+        let x1 = xs[0] as usize;
+        let ratio = if q.p(x1) > 0.0 { p.p(x1) / q.p(x1) } else { 1.0 };
+        if rng.next_f64() <= ratio as f64 {
+            return x1 as u32;
+        }
+        match Dist::residual(p, q) {
+            Some(res) => res.sample(rng) as u32,
+            // p == q: rejection has probability zero; numerical fallback.
+            None => x1 as u32,
+        }
+    }
+
+    /// Algorithm 7: Σ min(p, q) + Σ (p − q)_+ (1 − (1 − q)^{k−1}).
+    fn acceptance_rate(&self, p: &Dist, q: &Dist, k: usize) -> f64 {
+        let overlap: f64 = p
+            .0
+            .iter()
+            .zip(&q.0)
+            .map(|(&a, &b)| a.min(b) as f64)
+            .sum();
+        let residual_hit: f64 = p
+            .0
+            .iter()
+            .zip(&q.0)
+            .map(|(&a, &b)| {
+                ((a - b).max(0.0) as f64)
+                    * (1.0 - (1.0 - b as f64).powi(k as i32 - 1))
+            })
+            .sum();
+        overlap + residual_hit
+    }
+
+    /// Algorithm 12: B(X_i) = (1 − a) p_res(X_i) + a·1{X_i = X_1},
+    /// a = min(1, p(X_1)/q(X_1)).
+    fn branching(&self, p: &Dist, q: &Dist, xs: &[u32]) -> Vec<f64> {
+        let x1 = xs[0] as usize;
+        let a = if q.p(x1) > 0.0 {
+            (p.p(x1) / q.p(x1)).min(1.0) as f64
+        } else {
+            1.0
+        };
+        let res = Dist::residual(p, q);
+        xs.iter()
+            .map(|&x| {
+                let r = res.as_ref().map_or(0.0, |d| d.p(x as usize) as f64);
+                (1.0 - a) * r + if x as usize == x1 { a } else { 0.0 }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The solver output must follow p for any q (OTLP property).
+    #[test]
+    fn output_follows_p() {
+        let p = Dist(vec![0.5, 0.3, 0.2]);
+        let q = Dist(vec![0.2, 0.2, 0.6]);
+        let mut rng = Pcg64::seeded(3);
+        let mut counts = [0usize; 3];
+        let n = 60_000;
+        for _ in 0..n {
+            let xs: Vec<u32> = (0..2).map(|_| q.sample(&mut rng) as u32).collect();
+            counts[Naive.solve(&p, &q, &xs, &mut rng) as usize] += 1;
+        }
+        for t in 0..3 {
+            let f = counts[t] as f64 / n as f64;
+            assert!((f - p.0[t] as f64).abs() < 0.01, "token {t}: {f}");
+        }
+    }
+
+    #[test]
+    fn acceptance_rate_matches_mc() {
+        let p = Dist(vec![0.5, 0.3, 0.2]);
+        let q = Dist(vec![0.2, 0.2, 0.6]);
+        for k in 1..=4 {
+            let exact = Naive.acceptance_rate(&p, &q, k);
+            let mut rng = Pcg64::seeded(10 + k as u64);
+            let n = 80_000;
+            let mut hits = 0usize;
+            for _ in 0..n {
+                let xs: Vec<u32> = (0..k).map(|_| q.sample(&mut rng) as u32).collect();
+                let y = Naive.solve(&p, &q, &xs, &mut rng);
+                if xs.contains(&y) {
+                    hits += 1;
+                }
+            }
+            let mc = hits as f64 / n as f64;
+            assert!((mc - exact).abs() < 0.01, "k={k}: mc {mc} vs exact {exact}");
+        }
+    }
+
+    #[test]
+    fn branching_matches_mc() {
+        let p = Dist(vec![0.5, 0.3, 0.2]);
+        let q = Dist(vec![0.2, 0.2, 0.6]);
+        let xs = vec![2u32, 0, 1];
+        let b = Naive.branching(&p, &q, &xs);
+        let mut rng = Pcg64::seeded(20);
+        let n = 120_000usize;
+        let mut counts = [0usize; 3];
+        for _ in 0..n {
+            let y = Naive.solve(&p, &q, &xs, &mut rng) as usize;
+            counts[y] += 1;
+        }
+        for (i, &x) in xs.iter().enumerate() {
+            let mc = counts[x as usize] as f64 / n as f64;
+            assert!((mc - b[i]).abs() < 0.01, "pos {i}: mc {mc} vs {b:?}");
+        }
+    }
+}

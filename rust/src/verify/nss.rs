@@ -1,0 +1,84 @@
+//! NSS (Miao et al. 2024) — paper Algorithm 1 / 6 / 11.
+//!
+//! The simplest OTLP solver: ignore the draft tokens and sample Y ~ p.
+//! Trivially lossless; acceptance only via collision with drafted tokens.
+
+use super::OtlpSolver;
+use crate::dist::Dist;
+use crate::util::Pcg64;
+
+pub struct Nss;
+
+impl OtlpSolver for Nss {
+    fn name(&self) -> &'static str {
+        "NSS"
+    }
+
+    fn solve(&self, p: &Dist, _q: &Dist, _xs: &[u32], rng: &mut Pcg64) -> u32 {
+        p.sample(rng) as u32
+    }
+
+    /// Algorithm 6: Σ_t p(t) (1 − (1 − q(t))^k).
+    fn acceptance_rate(&self, p: &Dist, q: &Dist, k: usize) -> f64 {
+        p.0.iter()
+            .zip(&q.0)
+            .map(|(&pt, &qt)| pt as f64 * (1.0 - (1.0 - qt as f64).powi(k as i32)))
+            .sum()
+    }
+
+    /// Algorithm 11: B(X_i) = p(X_i).
+    fn branching(&self, p: &Dist, _q: &Dist, xs: &[u32]) -> Vec<f64> {
+        xs.iter().map(|&x| p.p(x as usize) as f64).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn output_follows_p() {
+        let p = Dist(vec![0.1, 0.2, 0.7]);
+        let q = Dist(vec![0.5, 0.3, 0.2]);
+        let mut rng = Pcg64::seeded(1);
+        let mut counts = [0usize; 3];
+        for _ in 0..30_000 {
+            counts[Nss.solve(&p, &q, &[0, 1], &mut rng) as usize] += 1;
+        }
+        for t in 0..3 {
+            let f = counts[t] as f32 / 30_000.0;
+            assert!((f - p.0[t]).abs() < 0.02, "token {t}: {f}");
+        }
+    }
+
+    #[test]
+    fn acceptance_rate_matches_mc() {
+        let p = Dist(vec![0.3, 0.3, 0.4]);
+        let q = Dist(vec![0.6, 0.2, 0.2]);
+        let k = 3;
+        let exact = Nss.acceptance_rate(&p, &q, k);
+        let mut rng = Pcg64::seeded(2);
+        let mut hits = 0usize;
+        let n = 60_000;
+        for _ in 0..n {
+            let xs: Vec<u32> = (0..k).map(|_| q.sample(&mut rng) as u32).collect();
+            let y = Nss.solve(&p, &q, &xs, &mut rng);
+            if xs.contains(&y) {
+                hits += 1;
+            }
+        }
+        let mc = hits as f64 / n as f64;
+        assert!((mc - exact).abs() < 0.01, "mc {mc} vs exact {exact}");
+    }
+
+    #[test]
+    fn branching_matches_mc() {
+        let p = Dist(vec![0.25, 0.25, 0.5]);
+        let q = Dist(vec![0.4, 0.4, 0.2]);
+        let xs = vec![0u32, 2, 0];
+        let b = Nss.branching(&p, &q, &xs);
+        assert!((b[0] - 0.25).abs() < 1e-9);
+        assert!((b[1] - 0.5).abs() < 1e-9);
+        assert!((b[2] - 0.25).abs() < 1e-9);
+    }
+}

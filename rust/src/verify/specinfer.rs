@@ -1,0 +1,225 @@
+//! SpecInfer (Miao et al. 2024) — paper Algorithm 4 / 9 / 14.
+//!
+//! Multi-round naive with uniform child selection and per-round residual
+//! update of p. The branching calculator is the exact multiset recursion of
+//! Algorithm 14 (k ≤ 4 keeps it tiny).
+
+use std::collections::HashMap;
+
+use super::OtlpSolver;
+use crate::dist::Dist;
+use crate::util::Pcg64;
+
+pub struct SpecInfer;
+
+/// p ← normalize((p − q)_+); falls back to p unchanged on zero mass.
+fn residualize(p: &Dist, q: &Dist) -> Dist {
+    Dist::residual(p, q).unwrap_or_else(|| p.clone())
+}
+
+impl OtlpSolver for SpecInfer {
+    fn name(&self) -> &'static str {
+        "SpecInfer"
+    }
+
+    fn solve(&self, p: &Dist, q: &Dist, xs: &[u32], rng: &mut Pcg64) -> u32 {
+        let mut s: Vec<u32> = xs.to_vec();
+        let mut p_cur = p.clone();
+        while !s.is_empty() {
+            let idx = rng.next_below(s.len());
+            let x = s[idx] as usize;
+            let ratio = if q.p(x) > 0.0 {
+                p_cur.p(x) as f64 / q.p(x) as f64
+            } else {
+                f64::INFINITY
+            };
+            if rng.next_f64() <= ratio {
+                return x as u32;
+            }
+            p_cur = residualize(&p_cur, q);
+            s.swap_remove(idx);
+        }
+        p_cur.sample(rng) as u32
+    }
+
+    /// Algorithm 9.
+    fn acceptance_rate(&self, p: &Dist, q: &Dist, k: usize) -> f64 {
+        let n = p.len();
+        let mut p_cur: Vec<f64> = p.0.iter().map(|&v| v as f64).collect();
+        let mut p_rej = 1.0f64;
+        let mut m = vec![1.0f64; n];
+        for _ in 0..k {
+            let r: f64 = p_cur
+                .iter()
+                .zip(&q.0)
+                .map(|(&a, &b)| a.min(b as f64))
+                .sum();
+            if r >= 1.0 - 1e-12 {
+                // every round accepts: rejection path has zero mass
+                p_rej = 0.0;
+                break;
+            }
+            p_rej *= 1.0 - r;
+            for t in 0..n {
+                let miss = (q.0[t] as f64 - p_cur[t]).max(0.0) / (1.0 - r);
+                m[t] *= (1.0 - miss).max(0.0);
+            }
+            // p ∝ (p − q)_+
+            let mut mass = 0.0;
+            for t in 0..n {
+                p_cur[t] = (p_cur[t] - q.0[t] as f64).max(0.0);
+                mass += p_cur[t];
+            }
+            if mass <= 0.0 {
+                break;
+            }
+            for v in p_cur.iter_mut() {
+                *v /= mass;
+            }
+        }
+        let tail: f64 = p_cur
+            .iter()
+            .zip(&m)
+            .map(|(&pt, &mt)| pt * (1.0 - mt))
+            .sum();
+        (1.0 - p_rej) + p_rej * tail
+    }
+
+    /// Algorithm 14 — exact recursion over sub-multisets.
+    fn branching(&self, p: &Dist, q: &Dist, xs: &[u32]) -> Vec<f64> {
+        let k = xs.len();
+        // Pre-compute round distributions p_0..p_k and acceptance vectors
+        // a_i(t) = min(1, p_{i-1}(t)/q(t)) for rounds i = 1..k.
+        let mut p_rounds: Vec<Dist> = vec![p.clone()];
+        for _ in 0..k {
+            let last = p_rounds.last().unwrap();
+            p_rounds.push(residualize(last, q));
+        }
+        let accept = |round: usize, t: usize| -> f64 {
+            // round is 1-based: uses p_{round-1}
+            if q.p(t) > 0.0 {
+                (p_rounds[round - 1].p(t) as f64 / q.p(t) as f64).min(1.0)
+            } else {
+                1.0
+            }
+        };
+
+        // B_i(S; x): prob of eventually outputting x given the remaining
+        // multiset S at the start of round i+1 (|S| = k − i).
+        // Memoized over (i, sorted multiset, x).
+        fn rec(
+            i: usize,
+            s: &mut Vec<u32>,
+            x: u32,
+            k: usize,
+            p_rounds: &[Dist],
+            q: &Dist,
+            accept: &dyn Fn(usize, usize) -> f64,
+            memo: &mut HashMap<(usize, Vec<u32>, u32), f64>,
+        ) -> f64 {
+            if i == k {
+                return p_rounds[k].p(x as usize) as f64;
+            }
+            let mut key_s = s.clone();
+            key_s.sort_unstable();
+            if let Some(&v) = memo.get(&(i, key_s.clone(), x)) {
+                return v;
+            }
+            let len = s.len() as f64;
+            let mut total = 0.0;
+            for j in 0..s.len() {
+                let t = s[j];
+                let a = accept(i + 1, t as usize);
+                let hit = if t == x { a } else { 0.0 };
+                let removed = s.swap_remove(j);
+                let deeper = rec(i + 1, s, x, k, p_rounds, q, accept, memo);
+                s.push(removed);
+                let last = s.len() - 1;
+                s.swap(j, last);
+                total += (hit + (1.0 - a) * deeper) / len;
+            }
+            memo.insert((i, key_s, x), total);
+            total
+        }
+
+        let mut memo = HashMap::new();
+        xs.iter()
+            .map(|&x| {
+                let mut s = xs.to_vec();
+                rec(0, &mut s, x, k, &p_rounds, q, &accept, &mut memo)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pq() -> (Dist, Dist) {
+        (
+            Dist(vec![0.45, 0.25, 0.2, 0.1]),
+            Dist(vec![0.1, 0.3, 0.25, 0.35]),
+        )
+    }
+
+    #[test]
+    fn output_follows_p() {
+        let (p, q) = pq();
+        let mut rng = Pcg64::seeded(6);
+        let n = 80_000;
+        let mut counts = [0usize; 4];
+        for _ in 0..n {
+            let xs: Vec<u32> = (0..3).map(|_| q.sample(&mut rng) as u32).collect();
+            counts[SpecInfer.solve(&p, &q, &xs, &mut rng) as usize] += 1;
+        }
+        for t in 0..4 {
+            let f = counts[t] as f64 / n as f64;
+            assert!((f - p.0[t] as f64).abs() < 0.012, "token {t}: {f}");
+        }
+    }
+
+    #[test]
+    fn acceptance_rate_matches_mc() {
+        let (p, q) = pq();
+        for k in 1..=4 {
+            let exact = SpecInfer.acceptance_rate(&p, &q, k);
+            let mut rng = Pcg64::seeded(60 + k as u64);
+            let n = 80_000;
+            let mut hits = 0usize;
+            for _ in 0..n {
+                let xs: Vec<u32> = (0..k).map(|_| q.sample(&mut rng) as u32).collect();
+                if xs.contains(&SpecInfer.solve(&p, &q, &xs, &mut rng)) {
+                    hits += 1;
+                }
+            }
+            let mc = hits as f64 / n as f64;
+            assert!((mc - exact).abs() < 0.012, "k={k}: mc {mc} vs exact {exact}");
+        }
+    }
+
+    #[test]
+    fn branching_matches_mc() {
+        let (p, q) = pq();
+        let xs = vec![1u32, 3, 1, 0];
+        let b = SpecInfer.branching(&p, &q, &xs);
+        let mut rng = Pcg64::seeded(70);
+        let n = 150_000usize;
+        let mut counts = [0usize; 4];
+        for _ in 0..n {
+            counts[SpecInfer.solve(&p, &q, &xs, &mut rng) as usize] += 1;
+        }
+        for (i, &x) in xs.iter().enumerate() {
+            let mc = counts[x as usize] as f64 / n as f64;
+            assert!((mc - b[i]).abs() < 0.012, "pos {i} tok {x}: mc {mc} vs {}", b[i]);
+        }
+    }
+
+    #[test]
+    fn reduces_to_naive_at_k1() {
+        let (p, q) = pq();
+        let a = SpecInfer.acceptance_rate(&p, &q, 1);
+        let n = super::super::naive::Naive.acceptance_rate(&p, &q, 1);
+        assert!((a - n).abs() < 1e-9, "{a} vs {n}");
+    }
+}

@@ -1,0 +1,245 @@
+//! SpecTr K-SEQ (Sun et al. 2023) — paper Algorithm 3 / 8 / 13.
+//!
+//! Computes the division factor ρ* ∈ [1, k] by binary search on
+//! ρ ↦ p_acc(ρ) − ρ·β(ρ), then runs k ρ*-damped naive rounds followed by a
+//! γ-corrected residual. Reduces to Naive at k = 1.
+
+use super::OtlpSolver;
+use crate::dist::Dist;
+use crate::util::Pcg64;
+
+pub struct SpecTr;
+
+/// β(ρ) = Σ_t min(p(t)/ρ, q(t)).
+fn beta(p: &Dist, q: &Dist, rho: f64) -> f64 {
+    p.0.iter()
+        .zip(&q.0)
+        .map(|(&a, &b)| (a as f64 / rho).min(b as f64))
+        .sum()
+}
+
+fn p_acc(beta: f64, k: usize) -> f64 {
+    1.0 - (1.0 - beta).powi(k as i32)
+}
+
+/// Solve p_acc(ρ) = ρ β(ρ) on [1, k] by bisection (g is monotone
+/// decreasing there, per Sun et al.).
+pub fn solve_rho(p: &Dist, q: &Dist, k: usize) -> f64 {
+    if k <= 1 {
+        return 1.0;
+    }
+    let g = |rho: f64| {
+        let b = beta(p, q, rho);
+        p_acc(b, k) - rho * b
+    };
+    let (mut lo, mut hi) = (1.0f64, k as f64);
+    if g(lo) <= 0.0 {
+        return lo;
+    }
+    if g(hi) >= 0.0 {
+        return hi;
+    }
+    for _ in 0..60 {
+        let mid = 0.5 * (lo + hi);
+        if g(mid) > 0.0 {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+/// Residual ∝ (p − min(p/ρ*, q)·γ)_+ with γ = p_acc/β.
+fn residual(p: &Dist, q: &Dist, rho: f64, gamma: f64) -> Dist {
+    let mut r: Vec<f32> = p
+        .0
+        .iter()
+        .zip(&q.0)
+        .map(|(&a, &b)| {
+            let m = (a as f64 / rho).min(b as f64);
+            (a as f64 - m * gamma).max(0.0) as f32
+        })
+        .collect();
+    let s: f32 = r.iter().sum();
+    if s > 0.0 {
+        for v in r.iter_mut() {
+            *v /= s;
+        }
+    }
+    Dist(r)
+}
+
+impl OtlpSolver for SpecTr {
+    fn name(&self) -> &'static str {
+        "SpecTr"
+    }
+
+    fn solve(&self, p: &Dist, q: &Dist, xs: &[u32], rng: &mut Pcg64) -> u32 {
+        let k = xs.len();
+        let rho = solve_rho(p, q, k);
+        let b = beta(p, q, rho);
+        if b <= 0.0 {
+            // p and q disjoint: no round can accept.
+            return residual(p, q, rho, 0.0).sample(rng) as u32;
+        }
+        let gamma = p_acc(b, k) / b;
+        for &x in xs {
+            let xi = x as usize;
+            let ratio = if q.p(xi) > 0.0 {
+                p.p(xi) as f64 / q.p(xi) as f64
+            } else {
+                f64::INFINITY
+            };
+            if rho * rng.next_f64() <= ratio {
+                return x;
+            }
+        }
+        residual(p, q, rho, gamma).sample(rng) as u32
+    }
+
+    /// Algorithm 8.
+    fn acceptance_rate(&self, p: &Dist, q: &Dist, k: usize) -> f64 {
+        let rho = solve_rho(p, q, k);
+        let b = beta(p, q, rho);
+        if b <= 0.0 {
+            return 0.0;
+        }
+        let pa = p_acc(b, k);
+        let gamma = pa / b;
+        let res = residual(p, q, rho, gamma);
+        // r(t) = (q − p/ρ*)_+ / (1 − β)
+        let hit: f64 = res
+            .0
+            .iter()
+            .enumerate()
+            .map(|(t, &rt)| {
+                let r = ((q.p(t) as f64 - p.p(t) as f64 / rho).max(0.0)) / (1.0 - b).max(1e-12);
+                rt as f64 * (1.0 - (1.0 - r).powi(k as i32))
+            })
+            .sum();
+        pa + (1.0 - pa) * hit
+    }
+
+    /// Algorithm 13.
+    fn branching(&self, p: &Dist, q: &Dist, xs: &[u32]) -> Vec<f64> {
+        let k = xs.len();
+        let rho = solve_rho(p, q, k);
+        let b = beta(p, q, rho);
+        let gamma = if b > 0.0 { p_acc(b, k) / b } else { 0.0 };
+        let res = residual(p, q, rho, gamma);
+        let a: Vec<f64> = xs
+            .iter()
+            .map(|&x| {
+                let xi = x as usize;
+                if q.p(xi) > 0.0 {
+                    (p.p(xi) as f64 / (rho * q.p(xi) as f64)).min(1.0)
+                } else {
+                    1.0
+                }
+            })
+            .collect();
+        let mut no_accept_all = 1.0;
+        for &ai in &a {
+            no_accept_all *= 1.0 - ai;
+        }
+        xs.iter()
+            .enumerate()
+            .map(|(i, &xi_tok)| {
+                let mut total = 0.0;
+                let mut pre = 1.0;
+                for (j, &aj) in a.iter().enumerate() {
+                    if xs[j] == xi_tok {
+                        total += aj * pre;
+                    }
+                    pre *= 1.0 - aj;
+                }
+                total + res.p(xi_tok as usize) as f64 * no_accept_all
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pq() -> (Dist, Dist) {
+        (
+            Dist(vec![0.45, 0.25, 0.2, 0.1]),
+            Dist(vec![0.1, 0.3, 0.25, 0.35]),
+        )
+    }
+
+    #[test]
+    fn rho_in_range_and_root() {
+        let (p, q) = pq();
+        for k in 2..=4 {
+            let rho = solve_rho(&p, &q, k);
+            assert!((1.0..=k as f64).contains(&rho), "rho {rho}");
+            let b = beta(&p, &q, rho);
+            let g = p_acc(b, k) - rho * b;
+            assert!(g.abs() < 1e-6, "g {g}");
+        }
+    }
+
+    #[test]
+    fn output_follows_p() {
+        let (p, q) = pq();
+        let mut rng = Pcg64::seeded(4);
+        let n = 80_000;
+        let mut counts = [0usize; 4];
+        for _ in 0..n {
+            let xs: Vec<u32> = (0..3).map(|_| q.sample(&mut rng) as u32).collect();
+            counts[SpecTr.solve(&p, &q, &xs, &mut rng) as usize] += 1;
+        }
+        for t in 0..4 {
+            let f = counts[t] as f64 / n as f64;
+            assert!((f - p.0[t] as f64).abs() < 0.012, "token {t}: {f} vs {}", p.0[t]);
+        }
+    }
+
+    #[test]
+    fn acceptance_rate_matches_mc() {
+        let (p, q) = pq();
+        for k in 1..=4 {
+            let exact = SpecTr.acceptance_rate(&p, &q, k);
+            let mut rng = Pcg64::seeded(40 + k as u64);
+            let n = 80_000;
+            let mut hits = 0usize;
+            for _ in 0..n {
+                let xs: Vec<u32> = (0..k).map(|_| q.sample(&mut rng) as u32).collect();
+                if xs.contains(&SpecTr.solve(&p, &q, &xs, &mut rng)) {
+                    hits += 1;
+                }
+            }
+            let mc = hits as f64 / n as f64;
+            assert!((mc - exact).abs() < 0.012, "k={k}: mc {mc} vs exact {exact}");
+        }
+    }
+
+    #[test]
+    fn branching_matches_mc() {
+        let (p, q) = pq();
+        let xs = vec![3u32, 0, 3];
+        let b = SpecTr.branching(&p, &q, &xs);
+        let mut rng = Pcg64::seeded(50);
+        let n = 120_000usize;
+        let mut counts = [0usize; 4];
+        for _ in 0..n {
+            counts[SpecTr.solve(&p, &q, &xs, &mut rng) as usize] += 1;
+        }
+        for (i, &x) in xs.iter().enumerate() {
+            let mc = counts[x as usize] as f64 / n as f64;
+            assert!((mc - b[i]).abs() < 0.012, "pos {i}: mc {mc} vs {}", b[i]);
+        }
+    }
+
+    #[test]
+    fn reduces_to_naive_at_k1() {
+        let (p, q) = pq();
+        let a_spectr = SpecTr.acceptance_rate(&p, &q, 1);
+        let a_naive = super::super::naive::Naive.acceptance_rate(&p, &q, 1);
+        assert!((a_spectr - a_naive).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,193 @@
+//! Traversal Verification (Weng et al. 2025) — bottom-up, non-OT.
+//!
+//! Reconstructed to the paper's specification: bottom-up block acceptance
+//! that "starts at leaf nodes and has a higher chance of accepting longer
+//! sequences", reducing exactly to Block Verification at K = 1 (§3.2). The
+//! construction runs block (BV) trials over the i.i.d. path draws in draft
+//! order with residual handoff:
+//!
+//! 1. Run the BV coupling (verify::bv) on the first root→leaf path draw.
+//! 2. If it stops at node a with weight w, the conditional target at a given
+//!    the stop is the w-weighted residual r ∝ (p_a − q_a/w)_+. Any remaining
+//!    *independent* path draw passing through a is then tried from a against
+//!    r (its edges below a are fresh i.i.d. draws); each trial updates the
+//!    residual on failure, exactly like sequential multi-draft residual
+//!    composition.
+//! 3. Draw accounting matters: the delayed-expansion trunk is one shared
+//!    draw, so a rejection inside the trunk ends verification (no fresh
+//!    draws exist), while the K branches are independent draws and each
+//!    supports one trial. `DraftTree::path_draws` carries this structure.
+//! 4. When no draws remain, the correction token is sampled from the
+//!    current residual target at a.
+//!
+//! Losslessness follows by composing the per-trial BV guarantee with the
+//! residual chain rule, and is validated in tests/losslessness.rs.
+
+use super::bv::{bv_path, weighted_residual};
+use super::{Verdict, Verifier};
+use crate::tree::DraftTree;
+use crate::util::Pcg64;
+
+pub struct Traversal;
+
+impl Verifier for Traversal {
+    fn name(&self) -> &'static str {
+        "Traversal"
+    }
+
+    fn verify(&self, tree: &DraftTree, rng: &mut Pcg64) -> Verdict {
+        let draws = tree.draws();
+        let mut used = vec![false; draws.paths.len()];
+        let mut accepted: Vec<usize> = Vec::new();
+        let mut a = 0usize; // current accepted node
+        let mut p_tilde = tree.nodes[0].p.as_ref().expect("p dist").clone();
+        // depth (edge count from root) of the current node
+        let mut depth = 0usize;
+        // whether a rejection has already consumed the shared trunk draw
+        let mut trunk_dead = false;
+
+        loop {
+            // next untried path draw passing through the current node
+            let candidate = draws.paths.iter().enumerate().find(|(i, path)| {
+                if used[*i] || path.len() <= depth {
+                    return false;
+                }
+                // passes through a: its node at depth-1 .. matches
+                let through = if depth == 0 { true } else { path[depth - 1] == a };
+                if !through {
+                    return false;
+                }
+                // if the trunk draw is dead, paths whose next edge is still
+                // inside the shared trunk cannot retry it
+                !(trunk_dead && depth < draws.shared_edges)
+            });
+
+            let Some((pi, path)) = candidate else {
+                let correction = p_tilde.sample(rng) as u32;
+                return Verdict { accepted, correction };
+            };
+            used[pi] = true;
+            let subpath: Vec<usize> = path[depth..].to_vec();
+            let (tau, w_tau) = bv_path(tree, a, &p_tilde, &subpath, rng);
+
+            if tau == subpath.len() {
+                // accepted to the leaf: bonus token from the leaf target
+                accepted.extend_from_slice(&subpath);
+                let leaf = *subpath.last().unwrap();
+                let correction =
+                    tree.nodes[leaf].p.as_ref().unwrap().sample(rng) as u32;
+                return Verdict { accepted, correction };
+            }
+
+            // advance to the stop node, update the residual target there
+            accepted.extend_from_slice(&subpath[..tau]);
+            if tau > 0 {
+                a = subpath[tau - 1];
+            }
+            depth += tau;
+            let p_stop = if tau == 0 {
+                p_tilde.clone()
+            } else {
+                tree.nodes[a].p.as_ref().unwrap().clone()
+            };
+            let q_stop = tree.nodes[a].q.as_ref().expect("q dist");
+            p_tilde = weighted_residual(&p_stop, q_stop, w_tau);
+            if depth < draws.shared_edges {
+                // the rejected edge was part of the shared trunk draw
+                trunk_dead = true;
+            }
+            // mark sibling paths that shared the just-rejected *node* draw:
+            // none — distinct paths are independent draws below the trunk, and
+            // trunk rejections are handled by trunk_dead.
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::Dist;
+    use crate::tree::{PathDraws, Provenance};
+
+    /// K=1 must reduce to BV exactly (same RNG stream → same verdicts).
+    #[test]
+    fn k1_reduces_to_bv() {
+        let mut t = DraftTree::new(0);
+        let a = t.add_child(0, 1, Provenance::Trunk { step: 0 });
+        let b = t.add_child(a, 0, Provenance::Trunk { step: 1 });
+        let p = Dist(vec![0.6, 0.4]);
+        let q = Dist(vec![0.3, 0.7]);
+        for n in [0, a, b] {
+            t.set_p(n, p.clone());
+            t.set_q(n, q.clone());
+        }
+        t.path_draws = Some(PathDraws { paths: vec![vec![a, b]], shared_edges: 0 });
+        for seed in 0..200 {
+            let mut r1 = Pcg64::seeded(seed);
+            let mut r2 = Pcg64::seeded(seed);
+            let v1 = Traversal.verify(&t, &mut r1);
+            let v2 = super::super::bv::BlockVerify.verify(&t, &mut r2);
+            assert_eq!(v1.accepted, v2.accepted, "seed {seed}");
+            assert_eq!(v1.correction, v2.correction, "seed {seed}");
+        }
+    }
+
+    /// Trunk rejection must not retry trunk edges (shared draw).
+    #[test]
+    fn trunk_rejection_terminates() {
+        // trunk edge with p(token)=0 → always rejected at depth 0
+        let mut t = DraftTree::new(0);
+        let a = t.add_child(0, 1, Provenance::Trunk { step: 0 });
+        let b1 = t.add_child(a, 0, Provenance::Branch { branch: 0, step: 0 });
+        let b2 = t.add_child(a, 1, Provenance::Branch { branch: 1, step: 0 });
+        let p_root = Dist(vec![1.0, 0.0]); // token 1 (the trunk edge) impossible
+        let q_root = Dist(vec![0.0, 1.0]);
+        t.set_p(0, p_root);
+        t.set_q(0, q_root);
+        let flat = Dist(vec![0.5, 0.5]);
+        for n in [a, b1, b2] {
+            t.set_p(n, flat.clone());
+            t.set_q(n, flat.clone());
+        }
+        t.path_draws = Some(PathDraws {
+            paths: vec![vec![a, b1], vec![a, b2]],
+            shared_edges: 1,
+        });
+        let mut rng = Pcg64::seeded(3);
+        for _ in 0..200 {
+            let v = Traversal.verify(&t, &mut rng);
+            assert_eq!(v.tau(), 0, "trunk edge must always be rejected");
+            assert_eq!(v.correction, 0, "correction must follow the residual");
+        }
+    }
+
+    /// Multipath: a second branch can rescue after the first is rejected.
+    #[test]
+    fn second_branch_can_accept() {
+        let mut t = DraftTree::new(0);
+        let c1 = t.add_child(0, 1, Provenance::Branch { branch: 0, step: 0 });
+        let c2 = t.add_child(0, 0, Provenance::Branch { branch: 1, step: 0 });
+        // p prefers token 0 strongly; branch 1 drafted token 1 (likely
+        // rejected), branch 2 drafted token 0 (likely accepted on retry).
+        t.set_p(0, Dist(vec![0.9, 0.1]));
+        t.set_q(0, Dist(vec![0.5, 0.5]));
+        let flat = Dist(vec![0.5, 0.5]);
+        for n in [c1, c2] {
+            t.set_p(n, flat.clone());
+            t.set_q(n, flat.clone());
+        }
+        t.path_draws = Some(PathDraws { paths: vec![vec![c1], vec![c2]], shared_edges: 0 });
+        let mut rng = Pcg64::seeded(9);
+        let n = 30_000;
+        let mut tau1 = 0usize;
+        for _ in 0..n {
+            if Traversal.verify(&t, &mut rng).tau() >= 1 {
+                tau1 += 1;
+            }
+        }
+        // single-draw naive acceptance would be Σ min(p,q) = 0.6;
+        // two draws must beat it
+        let frac = tau1 as f64 / n as f64;
+        assert!(frac > 0.62, "two-branch acceptance {frac} should beat 0.6");
+    }
+}

@@ -1,0 +1,120 @@
+//! Cross-validation of the acceptance-rate (Alg. 6–10) and branching
+//! (Alg. 11–15) calculators against Monte-Carlo runs of the corresponding
+//! solvers, over randomized (p, q) pairs — the paper's own validation
+//! methodology, applied systematically.
+
+use specdelay::dist::Dist;
+use specdelay::util::Pcg64;
+use specdelay::verify::{ot_solver, OtlpSolver};
+
+fn random_dist(v: usize, rng: &mut Pcg64, sharp: f32) -> Dist {
+    let mut d: Vec<f32> = (0..v).map(|_| rng.next_f32().powf(sharp) + 1e-3).collect();
+    let s: f32 = d.iter().sum();
+    for x in d.iter_mut() {
+        *x /= s;
+    }
+    Dist(d)
+}
+
+fn check_solver(name: &str, trials: usize) {
+    let solver = ot_solver(name).unwrap();
+    let mut rng = Pcg64::seeded(777);
+    for trial in 0..trials {
+        let v = 3 + rng.next_below(6);
+        let p = random_dist(v, &mut rng, 2.0);
+        let q = random_dist(v, &mut rng, 1.0);
+        let k = 1 + rng.next_below(4);
+
+        // acceptance rate vs MC
+        let rate = solver.acceptance_rate(&p, &q, k);
+        let n = 40_000;
+        let mut hits = 0usize;
+        for _ in 0..n {
+            let xs: Vec<u32> = (0..k).map(|_| q.sample(&mut rng) as u32).collect();
+            let y = solver.solve(&p, &q, &xs, &mut rng);
+            if xs.contains(&y) {
+                hits += 1;
+            }
+        }
+        let mc = hits as f64 / n as f64;
+        let tol = 5.0 * (rate * (1.0 - rate) / n as f64).sqrt() + 0.004;
+        // Khisti's calculator is a documented canonical bound, not exact.
+        if name == "Khisti" {
+            assert!(
+                mc <= rate + tol,
+                "{name} trial {trial}: mc {mc} exceeds canonical bound {rate}"
+            );
+        } else {
+            assert!(
+                (mc - rate).abs() < tol,
+                "{name} trial {trial} k={k}: mc {mc} vs exact {rate} (tol {tol})"
+            );
+        }
+
+        // branching vs MC on a fixed draw
+        let xs: Vec<u32> = (0..k).map(|_| q.sample(&mut rng) as u32).collect();
+        let b = solver.branching(&p, &q, &xs);
+        let n2 = 40_000;
+        let mut counts = vec![0usize; v];
+        for _ in 0..n2 {
+            counts[solver.solve(&p, &q, &xs, &mut rng) as usize] += 1;
+        }
+        for (i, &x) in xs.iter().enumerate() {
+            let mc = counts[x as usize] as f64 / n2 as f64;
+            let tol = 5.0 * (b[i].max(0.01) * (1.0 - b[i].min(0.99)) / n2 as f64).sqrt() + 0.005;
+            assert!(
+                (mc - b[i]).abs() < tol,
+                "{name} trial {trial} branching pos {i}: mc {mc} vs {} (tol {tol})",
+                b[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn nss_calculators() {
+    check_solver("NSS", 8);
+}
+
+#[test]
+fn naive_calculators() {
+    check_solver("Naive", 8);
+}
+
+#[test]
+fn spectr_calculators() {
+    check_solver("SpecTr", 8);
+}
+
+#[test]
+fn specinfer_calculators() {
+    check_solver("SpecInfer", 6);
+}
+
+#[test]
+fn khisti_calculators() {
+    check_solver("Khisti", 5);
+}
+
+/// Acceptance-rate ordering sanity: all methods ≥ NSS-with-k... and
+/// acceptance increases with k for every solver.
+#[test]
+fn acceptance_monotone_in_k() {
+    let mut rng = Pcg64::seeded(55);
+    for name in ["NSS", "Naive", "SpecTr", "SpecInfer", "Khisti"] {
+        let solver = ot_solver(name).unwrap();
+        for _ in 0..5 {
+            let p = random_dist(6, &mut rng, 2.0);
+            let q = random_dist(6, &mut rng, 1.0);
+            let mut prev = 0.0;
+            for k in 1..=4 {
+                let r = solver.acceptance_rate(&p, &q, k);
+                assert!(
+                    r >= prev - 1e-9,
+                    "{name}: acceptance must grow with k ({prev} -> {r})"
+                );
+                prev = r;
+            }
+        }
+    }
+}

@@ -1,0 +1,202 @@
+//! Monte-Carlo losslessness validation for every verification algorithm.
+//!
+//! Losslessness is the non-negotiable invariant of speculative decoding: the
+//! emitted token stream must follow the target chain exactly. We validate it
+//! the only way it can be validated — empirically, over a toy language model
+//! with exactly known conditionals:
+//!
+//!   * the FIRST emitted token of a block must follow p(.|root) exactly;
+//!   * conditioned on the first i emitted tokens, token i+1 (when the block
+//!     is long enough) must follow p(.|prefix) exactly
+//!     (blocks that ended earlier regenerate the suffix from a fresh block,
+//!     so the within-block conditional must itself match the target).
+//!
+//! This is the same style of validation the paper reports for its
+//! acceptance/branching calculators ("empirically confirmed ... with Monte
+//! Carlo sampling").
+
+use specdelay::dist::Dist;
+use specdelay::tree::{DraftTree, PathDraws, Provenance};
+use specdelay::util::Pcg64;
+use specdelay::verify::{all_verifiers, Verifier};
+
+const V: usize = 4;
+
+/// Toy LM: deterministic conditional distributions derived from a context
+/// hash. `smooth` mixes toward uniform so ratios p/q stay bounded.
+struct ToyLm {
+    seed: u64,
+    smooth: f32,
+}
+
+impl ToyLm {
+    fn dist(&self, ctx: &[u32]) -> Dist {
+        let mut h = Pcg64::new(
+            self.seed ^ ctx.iter().fold(0xabcdu64, |a, &t| {
+                a.wrapping_mul(31).wrapping_add(t as u64 + 1)
+            }),
+            77,
+        );
+        let mut v: Vec<f32> = (0..V).map(|_| h.next_f32() + 0.05).collect();
+        let s: f32 = v.iter().sum();
+        for x in v.iter_mut() {
+            *x /= s;
+        }
+        for x in v.iter_mut() {
+            *x = (1.0 - self.smooth) * *x + self.smooth / V as f32;
+        }
+        Dist(v)
+    }
+}
+
+/// Draft a (K, L1, L2)-delayed tree from the toy draft model.
+fn draft_delayed(
+    p_lm: &ToyLm,
+    q_lm: &ToyLm,
+    root: &[u32],
+    k: usize,
+    l1: usize,
+    l2: usize,
+    rng: &mut Pcg64,
+) -> DraftTree {
+    let mut tree = DraftTree::new(*root.last().unwrap());
+    let mut ctx: Vec<u32> = root.to_vec();
+    let mut node = 0usize;
+    // trunk
+    for step in 0..l1 {
+        let q = q_lm.dist(&ctx);
+        let tok = q.sample(rng) as u32;
+        tree.set_q(node, q);
+        node = tree.add_child(node, tok, Provenance::Trunk { step });
+        ctx.push(tok);
+    }
+    let trunk_end = node;
+    let trunk_ctx = ctx.clone();
+    let trunk_path: Vec<usize> = tree.path_nodes(trunk_end);
+    // branches
+    let mut paths = Vec::new();
+    if l2 == 0 {
+        if !trunk_path.is_empty() {
+            paths.push(trunk_path.clone());
+        }
+    } else {
+        for b in 0..k {
+            let mut node = trunk_end;
+            let mut ctx = trunk_ctx.clone();
+            for step in 0..l2 {
+                let q = q_lm.dist(&ctx);
+                let tok = q.sample(rng) as u32;
+                if tree.nodes[node].q.is_none() {
+                    tree.set_q(node, q);
+                }
+                node = tree.add_child(node, tok, Provenance::Branch { branch: b, step });
+                ctx.push(tok);
+            }
+            paths.push(tree.path_nodes(node));
+        }
+    }
+    tree.path_draws = Some(PathDraws { paths, shared_edges: l1 });
+    // target dists at every node
+    for i in 0..tree.len() {
+        let mut ctx = root[..root.len() - 1].to_vec();
+        ctx.push(tree.nodes[0].token);
+        ctx.extend(tree.path_tokens(i));
+        tree.set_p(i, p_lm.dist(&ctx));
+    }
+    tree
+}
+
+/// Run `n` verification rounds and check emitted-stream conditionals against
+/// the exact toy target chain up to depth `max_check`.
+fn check_lossless(verifier: &dyn Verifier, k: usize, l1: usize, l2: usize, seed: u64) {
+    let p_lm = ToyLm { seed: 1111, smooth: 0.2 };
+    let q_lm = ToyLm { seed: 2222, smooth: 0.4 };
+    let root = vec![1u32, 2];
+    let n = 60_000usize;
+    let max_check = 3usize;
+
+    let mut rng = Pcg64::seeded(seed);
+    // counts[prefix as Vec<u32>] -> [token counts; V]
+    use std::collections::HashMap;
+    let mut counts: HashMap<Vec<u32>, Vec<usize>> = HashMap::new();
+
+    for _ in 0..n {
+        let tree = draft_delayed(&p_lm, &q_lm, &root, k, l1, l2, &mut rng);
+        let v = verifier.verify(&tree, &mut rng);
+        let mut emitted: Vec<u32> =
+            v.accepted.iter().map(|&i| tree.nodes[i].token).collect();
+        emitted.push(v.correction);
+        for d in 0..emitted.len().min(max_check) {
+            let prefix = emitted[..d].to_vec();
+            counts.entry(prefix).or_insert_with(|| vec![0; V])[emitted[d] as usize] += 1;
+        }
+    }
+
+    for (prefix, cnt) in &counts {
+        let total: usize = cnt.iter().sum();
+        if total < 3000 {
+            continue; // not enough conditional mass to test tightly
+        }
+        let mut ctx = root.clone();
+        ctx.extend(prefix);
+        let target = p_lm.dist(&ctx);
+        for t in 0..V {
+            let emp = cnt[t] as f64 / total as f64;
+            let want = target.0[t] as f64;
+            let tol = 5.0 * (want * (1.0 - want) / total as f64).sqrt() + 0.004;
+            assert!(
+                (emp - want).abs() < tol,
+                "{} prefix {prefix:?} token {t}: emp {emp:.4} vs target {want:.4} (n={total}, tol {tol:.4})",
+                verifier.name(),
+            );
+        }
+    }
+}
+
+#[test]
+fn lossless_multipath_all_verifiers() {
+    for v in all_verifiers() {
+        // i.i.d. multipath: K=3 paths of length 2 from the root
+        check_lossless(v.as_ref(), 3, 0, 2, 42);
+    }
+}
+
+#[test]
+fn lossless_delayed_tree_all_verifiers() {
+    for v in all_verifiers() {
+        // delayed expansion: trunk 2, then K=2 branches of length 2
+        check_lossless(v.as_ref(), 2, 2, 2, 43);
+    }
+}
+
+#[test]
+fn lossless_single_path_all_verifiers() {
+    for v in all_verifiers() {
+        // pure single path (trunk only)
+        check_lossless(v.as_ref(), 1, 3, 0, 44);
+    }
+}
+
+/// Traversal must accept at least as much as BV on single paths and more on
+/// trees (the paper's headline structural finding).
+#[test]
+fn traversal_dominates_on_trees() {
+    let p_lm = ToyLm { seed: 1111, smooth: 0.2 };
+    let q_lm = ToyLm { seed: 2222, smooth: 0.4 };
+    let root = vec![1u32, 2];
+    let trav = specdelay::verify::verifier("Traversal").unwrap();
+    let spec = specdelay::verify::verifier("SpecInfer").unwrap();
+    let mut rng = Pcg64::seeded(7);
+    let n = 20_000;
+    let (mut t_sum, mut s_sum) = (0usize, 0usize);
+    for _ in 0..n {
+        let tree = draft_delayed(&p_lm, &q_lm, &root, 3, 0, 3, &mut rng);
+        t_sum += trav.verify(&tree, &mut rng).tau();
+        s_sum += spec.verify(&tree, &mut rng).tau();
+    }
+    let (t_avg, s_avg) = (t_sum as f64 / n as f64, s_sum as f64 / n as f64);
+    assert!(
+        t_avg > s_avg * 0.97,
+        "Traversal {t_avg:.3} should be at least comparable to SpecInfer {s_avg:.3}"
+    );
+}
