@@ -6,16 +6,25 @@
 //! generation lengths and grid sizes (quick is the default — the testbed is
 //! a single CPU core).
 
+#[cfg(feature = "pjrt")]
+pub mod experiments;
+
 use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Context, Result};
 
+#[cfg(feature = "pjrt")]
 use crate::coordinator::{ActionPolicy, FixedPolicy, SpecEngine};
 use crate::dist::SamplingConfig;
+#[cfg(feature = "pjrt")]
 use crate::draft::Action;
+#[cfg(feature = "pjrt")]
 use crate::runtime::Engine;
 use crate::util::stats::Running;
-use crate::util::{Json, Pcg64};
+use crate::util::Json;
+#[cfg(feature = "pjrt")]
+use crate::util::Pcg64;
+#[cfg(feature = "pjrt")]
 use crate::verify;
 
 pub const FAMILIES: [&str; 3] = ["qwen-sim", "gemma-sim", "llama-sim"];
@@ -120,6 +129,7 @@ pub fn load_prompts(domain: &str, count: usize) -> Result<Vec<String>> {
         .collect())
 }
 
+#[cfg(feature = "pjrt")]
 pub fn load_engine(family: &str) -> Result<Engine> {
     Engine::load(&artifacts_dir().join(family))
 }
@@ -132,6 +142,7 @@ pub struct ConfigResult {
 }
 
 /// Run one configuration over a prompt set.
+#[cfg(feature = "pjrt")]
 #[allow(clippy::too_many_arguments)]
 pub fn run_config(
     engine: &Engine,
@@ -160,6 +171,7 @@ pub fn run_config(
 /// Best static i.i.d. configuration for a verifier (paper §4.2: select the
 /// (K, L) maximizing the metric). Returns (block_eff at best-be config,
 /// tps at best-tps config).
+#[cfg(feature = "pjrt")]
 #[allow(clippy::too_many_arguments)]
 pub fn best_static(
     engine: &Engine,
@@ -265,4 +277,3 @@ mod tests {
         assert_eq!(Scale::Full.kl_grid().len(), 16);
     }
 }
-pub mod experiments;

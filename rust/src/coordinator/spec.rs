@@ -1,0 +1,411 @@
+//! The PJRT-backed speculative decoding engine (`pjrt` feature).
+//!
+//! Each [`Sequence`] owns a [`VerifyScratch`] arena and a reusable
+//! [`Verdict`], so the per-block verification stage runs allocation-free in
+//! steady state (the tentpole guarantee measured by `benches/verify_hot`).
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::{ActionPolicy, BlockStats, GenStats, StepFeatures};
+use crate::dist::{Dist, SamplingConfig};
+use crate::draft::{accepted_row_extent, draft_delayed, Action};
+use crate::kvcache::KvCache;
+use crate::runtime::{Engine, Role};
+use crate::tokenizer;
+use crate::tree::DraftTree;
+use crate::util::Pcg64;
+use crate::verify::{Verdict, Verifier, VerifyScratch};
+
+/// One in-flight sequence.
+pub struct Sequence {
+    pub tokens: Vec<u32>,
+    pub prompt_len: usize,
+    pub target_kv: KvCache,
+    pub draft_kv: KvCache,
+    pub root_pos: usize,
+    pub finished: bool,
+    // selector feature memory (previous verified node)
+    pub prev_hidden_target: Vec<f32>,
+    pub prev_hidden_draft: Vec<f32>,
+    pub prev_p: Dist,
+    pub prev_q: Dist,
+    /// Reusable verification arena: warm after the first block, so every
+    /// later verify call allocates nothing.
+    pub scratch: VerifyScratch,
+    /// Recycled verdict buffer (capacity persists across blocks).
+    pub verdict: Verdict,
+}
+
+/// The speculative decoding engine for one family.
+pub struct SpecEngine<'a> {
+    pub engine: &'a Engine,
+    pub sampling: SamplingConfig,
+}
+
+impl<'a> SpecEngine<'a> {
+    pub fn new(engine: &'a Engine, sampling: SamplingConfig) -> Self {
+        SpecEngine { engine, sampling }
+    }
+
+    /// Prefill both models on the prompt.
+    pub fn start(&self, prompt: &str) -> Result<Sequence> {
+        let mut toks = tokenizer::encode(prompt);
+        let s_pre = self.engine.meta.s_pre;
+        if toks.is_empty() {
+            toks.push(tokenizer::BOS);
+        }
+        toks.truncate(s_pre);
+        let toks_i32: Vec<i32> = toks.iter().map(|&t| t as i32).collect();
+        let len = toks.len();
+
+        let t_out = self.engine.prefill(Role::Target, &toks_i32, len)?;
+        let d_out = self.engine.prefill(Role::Draft, &toks_i32, len)?;
+
+        let mut target_kv = KvCache::new(self.engine.meta.target);
+        let mut draft_kv = KvCache::new(self.engine.meta.draft);
+        target_kv.commit_prefill(&t_out.k_rows, &t_out.v_rows, s_pre, len);
+        draft_kv.commit_prefill(&d_out.k_rows, &d_out.v_rows, s_pre, len);
+
+        let p0 = Dist::from_logits(&t_out.logits, self.sampling);
+        let q0 = Dist::from_logits(&d_out.logits, self.sampling);
+        let mut scratch = VerifyScratch::default();
+        scratch.reserve(self.engine.meta.target.vocab, 32, 8);
+        let mut verdict = Verdict::default();
+        verdict.accepted.reserve(32);
+        Ok(Sequence {
+            tokens: toks,
+            prompt_len: len,
+            target_kv,
+            draft_kv,
+            root_pos: len - 1,
+            finished: false,
+            prev_hidden_target: t_out.hidden,
+            prev_hidden_draft: d_out.hidden.clone(),
+            prev_p: p0,
+            prev_q: q0,
+            scratch,
+            verdict,
+        })
+    }
+
+    /// Remaining position headroom for one block at the given action.
+    fn fits(&self, seq: &Sequence, a: Action) -> bool {
+        let depth = a.l1 + a.l2 + 2;
+        seq.root_pos + depth < self.engine.meta.target.max_seq
+    }
+
+    /// One speculation block. Returns stats; marks `seq.finished` on EOS or
+    /// length cap.
+    pub fn step(
+        &self,
+        seq: &mut Sequence,
+        verifier: &dyn Verifier,
+        action: Action,
+        rng: &mut Pcg64,
+    ) -> Result<BlockStats> {
+        let meta = &self.engine.meta;
+        let max_trunk = meta.trunk_lens.iter().copied().max().unwrap_or(8);
+        let mut a = action.normalized(max_trunk);
+        if a.l1 == 0 && (a.k <= 1 || a.l2 == 0) {
+            // always draft at least one token so the root's draft KV row
+            // gets computed (see draft::draft_delayed)
+            a = Action::new(1, 1, 0);
+        }
+        // shrink to fit the context window
+        while !self.fits(seq, a) && a.l1 + a.l2 > 1 {
+            if a.l2 > 1 {
+                a.l2 -= 1;
+            } else if a.l1 > 1 {
+                a.l1 -= 1;
+            } else {
+                break;
+            }
+        }
+        if !self.fits(seq, a) {
+            seq.finished = true;
+            return Ok(BlockStats::default());
+        }
+
+        let root_token = *seq.tokens.last().unwrap();
+
+        // --- draft ---
+        let t0 = Instant::now();
+        let mut drafted = draft_delayed(
+            self.engine,
+            &seq.draft_kv,
+            root_token,
+            seq.root_pos,
+            a,
+            self.sampling,
+            rng,
+        )?;
+        let draft_secs = t0.elapsed().as_secs_f64();
+        let mut tree = std::mem::replace(&mut drafted.tree, DraftTree::new(0));
+
+        // --- target tree pass ---
+        let t1 = Instant::now();
+        let n_bucket = meta.tree_bucket(tree.len())?;
+        let (toks, pos) = tree.tokens_positions(n_bucket, seq.root_pos, tokenizer::PAD);
+        let bias = tree.attention_bias(n_bucket);
+        let out = self.engine.tree_verify(
+            n_bucket,
+            &seq.target_kv.k,
+            &seq.target_kv.v,
+            &toks,
+            &pos,
+            &bias,
+            seq.root_pos,
+        )?;
+        let v = meta.target.vocab;
+        for i in 0..tree.len() {
+            tree.set_p(i, Dist::from_logits(&out.logits[i * v..(i + 1) * v], self.sampling));
+        }
+        let tree_secs = t1.elapsed().as_secs_f64();
+
+        // --- verification (allocation-free: sequence-owned arena) ---
+        let t2 = Instant::now();
+        let mut verdict = std::mem::take(&mut seq.verdict);
+        verifier.verify_into(&tree, rng, &mut seq.scratch, &mut verdict);
+        let verify_secs = t2.elapsed().as_secs_f64();
+
+        // --- commit ---
+        self.commit(seq, &tree, &drafted, &out, &verdict.accepted, a)?;
+        let mut emitted: Vec<u32> =
+            verdict.accepted.iter().map(|&n| tree.nodes[n].token).collect();
+        emitted.push(verdict.correction);
+
+        // feature memory: deepest accepted node predicts the new root
+        let deepest = verdict.accepted.last().copied().unwrap_or(0);
+        let accepted_len = verdict.tau();
+        seq.verdict = verdict; // recycle the buffer for the next block
+        let d_t = meta.target.d_model;
+        seq.prev_hidden_target = out.hidden[deepest * d_t..(deepest + 1) * d_t].to_vec();
+        if let Some(h) = draft_hidden_for(&tree, &drafted, deepest, meta.draft.d_model) {
+            seq.prev_hidden_draft = h;
+        }
+        seq.prev_p = tree.nodes[deepest].p.clone().unwrap();
+        if let Some(q) = tree.nodes[deepest].q.clone() {
+            seq.prev_q = q;
+        }
+
+        for &t in &emitted {
+            seq.tokens.push(t);
+            if tokenizer::is_terminal(t) {
+                seq.finished = true;
+            }
+        }
+        seq.root_pos += emitted.len();
+        if seq.root_pos + 3 >= meta.target.max_seq {
+            seq.finished = true;
+        }
+
+        Ok(BlockStats {
+            accepted: accepted_len,
+            emitted: emitted.len(),
+            draft_secs,
+            tree_secs,
+            verify_secs,
+            tree_nodes: tree.len(),
+        })
+    }
+
+    fn commit(
+        &self,
+        seq: &mut Sequence,
+        tree: &DraftTree,
+        drafted: &crate::draft::Drafted,
+        out: &crate::runtime::TreeOut,
+        accepted: &[usize],
+        a: Action,
+    ) -> Result<()> {
+        // target rows: root + accepted chain
+        seq.target_kv
+            .commit_tree_row(&out.k_rows, &out.v_rows, out.n, 0, seq.root_pos);
+        for &n in accepted {
+            let posn = seq.root_pos + tree.nodes[n].depth;
+            seq.target_kv
+                .commit_tree_row(&out.k_rows, &out.v_rows, out.n, n, posn);
+        }
+
+        // draft rows per rollout provenance
+        let (trunk_ext, branch_ext) = accepted_row_extent(tree, accepted);
+        if let Some(tr) = &drafted.trunk {
+            let last = trunk_ext.unwrap_or(0).min(tr.l.saturating_sub(1));
+            seq.draft_kv.commit_rollout_rows(
+                &tr.k_rows, &tr.v_rows, 1, tr.l, 0, last, seq.root_pos,
+            );
+        }
+        if let Some(br) = &drafted.branch {
+            // commit the accepted branch's rows; if no branch node was
+            // accepted, still commit step 0 of branch 0 (the trunk-end /
+            // root row lives there)
+            let (b, s) = branch_ext.unwrap_or((0, 0));
+            let last = s.min(br.l.saturating_sub(1));
+            seq.draft_kv.commit_rollout_rows(
+                &br.k_rows,
+                &br.v_rows,
+                br.k,
+                br.l,
+                b,
+                last,
+                seq.root_pos + a.l1,
+            );
+        }
+        Ok(())
+    }
+
+    /// Generate up to `max_new` tokens with a fixed verifier and policy.
+    pub fn generate(
+        &self,
+        prompt: &str,
+        max_new: usize,
+        verifier: &dyn Verifier,
+        policy: &dyn ActionPolicy,
+        rng: &mut Pcg64,
+    ) -> Result<(String, GenStats)> {
+        let mut seq = self.start(prompt)?;
+        let mut stats = GenStats::default();
+        let t0 = Instant::now();
+        while !seq.finished && seq.tokens.len() - seq.prompt_len < max_new {
+            let action = if policy.needs_features() {
+                let f = self.root_features(&mut seq)?;
+                policy.choose(&f.as_features(&seq, self.sampling))
+            } else {
+                policy.choose(&StepFeatures {
+                    hidden_p_prev: &seq.prev_hidden_target,
+                    hidden_q_prev: &seq.prev_hidden_draft,
+                    hidden_q_cur: &seq.prev_hidden_draft,
+                    p_prev: &seq.prev_p,
+                    q_prev: &seq.prev_q,
+                    q_root: &seq.prev_q,
+                    ctx_len: seq.tokens.len(),
+                    sampling: self.sampling,
+                })
+            };
+            let b = self.step(&mut seq, verifier, action, rng)?;
+            stats.blocks += 1;
+            stats.tokens += b.emitted;
+            stats.sum_accepted += b.accepted;
+            stats.draft_secs += b.draft_secs;
+            stats.tree_secs += b.tree_secs;
+            stats.verify_secs += b.verify_secs;
+        }
+        stats.wall_secs = t0.elapsed().as_secs_f64();
+        let text = tokenizer::decode(&seq.tokens[seq.prompt_len..]);
+        Ok((text, stats))
+    }
+
+    /// Extra root draft pass for selector features (paper Appendix E: the
+    /// draft-model forward at the root is cheap and supplies h^q_cur and
+    /// H(q_root)).
+    pub fn root_features(&self, seq: &mut Sequence) -> Result<RootFeatures> {
+        let root = *seq.tokens.last().unwrap();
+        let d = self.engine.decode(
+            Role::Draft,
+            &seq.draft_kv.k,
+            &seq.draft_kv.v,
+            root,
+            seq.root_pos,
+        )?;
+        Ok(RootFeatures {
+            hidden_q_cur: d.hidden,
+            q_root: Dist::from_logits(&d.logits, self.sampling),
+        })
+    }
+}
+
+/// Root features needing a fresh draft pass.
+pub struct RootFeatures {
+    pub hidden_q_cur: Vec<f32>,
+    pub q_root: Dist,
+}
+
+impl RootFeatures {
+    pub fn as_features<'a>(
+        &'a self,
+        seq: &'a Sequence,
+        sampling: SamplingConfig,
+    ) -> StepFeatures<'a> {
+        StepFeatures {
+            hidden_p_prev: &seq.prev_hidden_target,
+            hidden_q_prev: &seq.prev_hidden_draft,
+            hidden_q_cur: &self.hidden_q_cur,
+            p_prev: &seq.prev_p,
+            q_prev: &seq.prev_q,
+            q_root: &self.q_root,
+            ctx_len: seq.tokens.len(),
+            sampling,
+        }
+    }
+}
+
+/// Draft hidden state for a tree node, if the rollouts computed one.
+fn draft_hidden_for(
+    tree: &DraftTree,
+    drafted: &crate::draft::Drafted,
+    node: usize,
+    d_model: usize,
+) -> Option<Vec<f32>> {
+    use crate::tree::Provenance;
+    match tree.nodes[node].provenance {
+        Provenance::Root => drafted
+            .trunk
+            .as_ref()
+            .map(|t| t.hiddens[0..d_model].to_vec())
+            .or_else(|| drafted.branch.as_ref().map(|b| b.hiddens[0..d_model].to_vec())),
+        Provenance::Trunk { step } => drafted.trunk.as_ref().and_then(|t| {
+            if step < t.l {
+                Some(t.hiddens[step * d_model..(step + 1) * d_model].to_vec())
+            } else {
+                // trunk end: branch rollout visited it at step 0
+                drafted
+                    .branch
+                    .as_ref()
+                    .map(|b| b.hiddens[0..d_model].to_vec())
+            }
+        }),
+        Provenance::Branch { branch, step } => drafted.branch.as_ref().and_then(|b| {
+            if step < b.l {
+                let off = (branch * b.l + step) * d_model;
+                Some(b.hiddens[off..off + d_model].to_vec())
+            } else {
+                None
+            }
+        }),
+    }
+}
+
+/// Plain autoregressive decoding baseline (no speculation): one target
+/// decode per token.
+pub fn generate_autoregressive(
+    engine: &Engine,
+    sampling: SamplingConfig,
+    prompt: &str,
+    max_new: usize,
+    rng: &mut Pcg64,
+) -> Result<(String, GenStats)> {
+    let spec = SpecEngine::new(engine, sampling);
+    let mut seq = spec.start(prompt)?;
+    let mut stats = GenStats::default();
+    let t0 = Instant::now();
+    while !seq.finished && seq.tokens.len() - seq.prompt_len < max_new {
+        let root = *seq.tokens.last().unwrap();
+        let out = engine
+            .decode(Role::Target, &seq.target_kv.k, &seq.target_kv.v, root, seq.root_pos)
+            .map_err(|e| anyhow!(e))?;
+        seq.target_kv.commit_row(&out.k_row, &out.v_row, seq.root_pos);
+        let p = Dist::from_logits(&out.logits, sampling);
+        let tok = p.sample(rng) as u32;
+        seq.tokens.push(tok);
+        seq.root_pos += 1;
+        stats.blocks += 1;
+        stats.tokens += 1;
+        if tokenizer::is_terminal(tok) || seq.root_pos + 2 >= engine.meta.target.max_seq {
+            seq.finished = true;
+        }
+    }
+    stats.wall_secs = t0.elapsed().as_secs_f64();
+    Ok((tokenizer::decode(&seq.tokens[seq.prompt_len..]), stats))
+}

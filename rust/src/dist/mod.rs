@@ -1,0 +1,415 @@
+//! Dense token distributions and the sampling transforms applied to logits.
+//!
+//! This is the performance-first kernel layer under the verification walk:
+//! every per-block operation the verifiers run (sampling, residuals,
+//! overlaps, divergences) lives here, and every op has an `_into` / in-place
+//! variant that writes into caller-provided scratch so the steady-state
+//! verify path performs **zero heap allocations** (validated by
+//! `tests/alloc_free.rs`). The allocating wrappers remain for tests and
+//! cold paths.
+//!
+//! Probabilities are dense `f32` over the (small, byte-level) vocabulary;
+//! accumulations run in `f64` for stability.
+
+use crate::util::Pcg64;
+
+/// A dense probability distribution over token ids `0..len`.
+///
+/// The payload is public: verifiers and tests construct `Dist(vec![...])`
+/// directly. Invariant (maintained by every constructor here): entries are
+/// non-negative and sum to ~1; consumers tolerate small normalization error.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Dist(pub Vec<f32>);
+
+impl Dist {
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    /// Probability of token `t` (0 outside the support).
+    #[inline]
+    pub fn p(&self, t: usize) -> f32 {
+        self.0.get(t).copied().unwrap_or(0.0)
+    }
+
+    /// Replace contents with a copy of `src`, reusing this allocation.
+    pub fn copy_from(&mut self, src: &Dist) {
+        self.0.clear();
+        self.0.extend_from_slice(&src.0);
+    }
+
+    /// Index of the largest entry (first on ties); 0 for the empty dist.
+    pub fn argmax(&self) -> usize {
+        let mut best = 0usize;
+        for i in 1..self.0.len() {
+            if self.0[i] > self.0[best] {
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Draw a token index by cumulative scan with early exit.
+    ///
+    /// One uniform draw, one forward pass that stops at the crossing entry —
+    /// for the sharp distributions speculative decoding sees, the expected
+    /// scan length is far below the vocabulary size. Falls back to the last
+    /// positive-mass index on numerical shortfall (mass < 1), matching the
+    /// slack handling of `Pcg64::sample_weighted`.
+    pub fn sample(&self, rng: &mut Pcg64) -> usize {
+        let u = rng.next_f64();
+        let mut acc = 0.0f64;
+        let mut last = 0usize;
+        for (i, &w) in self.0.iter().enumerate() {
+            if w > 0.0 {
+                last = i;
+                acc += w as f64;
+                if u < acc {
+                    return i;
+                }
+            }
+        }
+        last
+    }
+
+    /// Shannon entropy in nats.
+    pub fn entropy(&self) -> f32 {
+        let mut h = 0.0f64;
+        for &p in &self.0 {
+            if p > 0.0 {
+                h -= p as f64 * (p as f64).ln();
+            }
+        }
+        h as f32
+    }
+
+    /// KL(self ‖ other) in nats, summed over the common positive support
+    /// (terms with `other = 0` are skipped so the feature stays bounded).
+    pub fn kl(&self, other: &Dist) -> f32 {
+        let mut d = 0.0f64;
+        for (i, &p) in self.0.iter().enumerate() {
+            let q = other.p(i);
+            if p > 0.0 && q > 0.0 {
+                d += p as f64 * (p as f64 / q as f64).ln();
+            }
+        }
+        d as f32
+    }
+
+    /// Rescale to unit mass in place. Returns false (leaving the contents
+    /// untouched) when the total mass is zero or non-finite.
+    pub fn normalize_in_place(&mut self) -> bool {
+        let mass: f64 = self.0.iter().map(|&v| v.max(0.0) as f64).sum();
+        if !(mass > 0.0) || !mass.is_finite() {
+            return false;
+        }
+        let inv = (1.0 / mass) as f32;
+        for v in self.0.iter_mut() {
+            *v = v.max(0.0) * inv;
+        }
+        true
+    }
+
+    /// Overlap Σ_t min(p(t), q(t)) — the k = 1 naive acceptance rate.
+    pub fn overlap(p: &Dist, q: &Dist) -> f32 {
+        let n = p.len().max(q.len());
+        let mut s = 0.0f64;
+        for t in 0..n {
+            s += p.p(t).min(q.p(t)) as f64;
+        }
+        s as f32
+    }
+
+    /// L1 distance Σ_t |p(t) − q(t)|.
+    pub fn l1(p: &Dist, q: &Dist) -> f32 {
+        let n = p.len().max(q.len());
+        let mut s = 0.0f64;
+        for t in 0..n {
+            s += (p.p(t) - q.p(t)).abs() as f64;
+        }
+        s as f32
+    }
+
+    /// Total variation distance = L1 / 2 = 1 − overlap for normalized dists.
+    pub fn tv(p: &Dist, q: &Dist) -> f32 {
+        0.5 * Dist::l1(p, q)
+    }
+
+    /// Normalized residual ∝ (p − q)_+ written into `out` (contents and
+    /// capacity reused; no allocation once `out` has capacity). Returns
+    /// false when the residual mass is zero — `out` then holds the
+    /// unnormalized (all-zero) values and must not be sampled.
+    pub fn residual_into(p: &Dist, q: &Dist, out: &mut Dist) -> bool {
+        let o = &mut out.0;
+        o.clear();
+        o.reserve(p.0.len());
+        let mut mass = 0.0f64;
+        for (i, &pt) in p.0.iter().enumerate() {
+            let r = (pt - q.p(i)).max(0.0);
+            o.push(r);
+            mass += r as f64;
+        }
+        if !(mass > 0.0) {
+            return false;
+        }
+        let inv = (1.0 / mass) as f32;
+        for v in o.iter_mut() {
+            *v *= inv;
+        }
+        true
+    }
+
+    /// Allocating wrapper over [`Dist::residual_into`]: `None` when p ≤ q
+    /// pointwise (zero residual mass).
+    pub fn residual(p: &Dist, q: &Dist) -> Option<Dist> {
+        let mut out = Dist(Vec::with_capacity(p.len()));
+        if Dist::residual_into(p, q, &mut out) {
+            Some(out)
+        } else {
+            None
+        }
+    }
+
+    /// Transform raw logits into the sampled-from distribution, writing into
+    /// `out` and using `idx_scratch` for the nucleus sort — allocation-free
+    /// once both have capacity.
+    pub fn from_logits_into(
+        logits: &[f32],
+        cfg: SamplingConfig,
+        out: &mut Dist,
+        idx_scratch: &mut Vec<u32>,
+    ) {
+        out.0.clear();
+        out.0.extend_from_slice(logits);
+        cfg.transform_logits(&mut out.0, idx_scratch);
+    }
+
+    /// Allocating wrapper over [`Dist::from_logits_into`].
+    pub fn from_logits(logits: &[f32], cfg: SamplingConfig) -> Dist {
+        let mut out = Dist(Vec::with_capacity(logits.len()));
+        let mut idx = Vec::new();
+        Dist::from_logits_into(logits, cfg, &mut out, &mut idx);
+        out
+    }
+}
+
+/// Temperature + nucleus (top-p) sampling configuration (paper §4.1 grid).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SamplingConfig {
+    pub temperature: f32,
+    pub top_p: f32,
+}
+
+impl Default for SamplingConfig {
+    fn default() -> SamplingConfig {
+        SamplingConfig::new(1.0, 1.0)
+    }
+}
+
+impl SamplingConfig {
+    pub fn new(temperature: f32, top_p: f32) -> SamplingConfig {
+        SamplingConfig { temperature, top_p }
+    }
+
+    /// In-place logits → probabilities: temperature-scaled stable softmax,
+    /// then nucleus truncation when `top_p < 1`. `idx_scratch` is only used
+    /// (and only grows) on the nucleus path. `temperature <= 0` takes the
+    /// greedy limit: a one-hot at the argmax.
+    pub fn transform_logits(&self, x: &mut [f32], idx_scratch: &mut Vec<u32>) {
+        if x.is_empty() {
+            return;
+        }
+        if self.temperature <= 0.0 {
+            let mut best = 0usize;
+            for i in 1..x.len() {
+                if x[i] > x[best] {
+                    best = i;
+                }
+            }
+            for v in x.iter_mut() {
+                *v = 0.0;
+            }
+            x[best] = 1.0;
+            return;
+        }
+        let inv_t = 1.0 / self.temperature;
+        let mut max = f32::NEG_INFINITY;
+        for &v in x.iter() {
+            if v > max {
+                max = v;
+            }
+        }
+        if !max.is_finite() {
+            // degenerate logits (all -inf / NaN): uniform fallback
+            let u = 1.0 / x.len() as f32;
+            for v in x.iter_mut() {
+                *v = u;
+            }
+            return;
+        }
+        let mut sum = 0.0f64;
+        for v in x.iter_mut() {
+            let e = (((*v - max) * inv_t) as f64).exp();
+            *v = e as f32;
+            sum += e;
+        }
+        let inv = (1.0 / sum) as f32;
+        for v in x.iter_mut() {
+            *v *= inv;
+        }
+        if self.top_p < 1.0 {
+            nucleus(x, self.top_p, idx_scratch);
+        }
+    }
+}
+
+/// Keep the smallest top-probability prefix with cumulative mass ≥ top_p
+/// (the token crossing the threshold is included), zero the rest, and
+/// renormalize the kept mass to 1.
+fn nucleus(x: &mut [f32], top_p: f32, idx: &mut Vec<u32>) {
+    idx.clear();
+    idx.extend(0..x.len() as u32);
+    idx.sort_unstable_by(|&a, &b| {
+        x[b as usize].total_cmp(&x[a as usize]).then(a.cmp(&b))
+    });
+    let mut cum = 0.0f64;
+    let mut keep = idx.len();
+    for (rank, &i) in idx.iter().enumerate() {
+        cum += x[i as usize] as f64;
+        if cum >= top_p as f64 {
+            keep = rank + 1;
+            break;
+        }
+    }
+    for &i in &idx[keep..] {
+        x[i as usize] = 0.0;
+    }
+    let inv = (1.0 / cum.max(1e-30)) as f32;
+    for &i in &idx[..keep] {
+        x[i as usize] *= inv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f32, b: f32, tol: f32) -> bool {
+        (a - b).abs() < tol
+    }
+
+    #[test]
+    fn softmax_normalizes_and_orders() {
+        let d = Dist::from_logits(&[1.0, 3.0, 2.0], SamplingConfig::new(1.0, 1.0));
+        let s: f32 = d.0.iter().sum();
+        assert!(close(s, 1.0, 1e-5), "sum {s}");
+        assert!(d.0[1] > d.0[2] && d.0[2] > d.0[0]);
+        // softmax identity: ratios follow exp(logit differences)
+        assert!(close(d.0[1] / d.0[2], std::f32::consts::E, 1e-4));
+    }
+
+    #[test]
+    fn temperature_argmax_limit() {
+        let logits = [1.0f32, 3.0, 2.9];
+        // cooling the temperature concentrates mass on the argmax...
+        let warm = Dist::from_logits(&logits, SamplingConfig::new(1.0, 1.0));
+        let cool = Dist::from_logits(&logits, SamplingConfig::new(0.05, 1.0));
+        assert!(cool.0[1] > warm.0[1]);
+        assert!(cool.0[1] > 0.85, "T=0.05 argmax mass {}", cool.0[1]);
+        // ...and T = 0 is the exact one-hot limit
+        let greedy = Dist::from_logits(&logits, SamplingConfig::new(0.0, 1.0));
+        assert_eq!(greedy.0, vec![0.0, 1.0, 0.0]);
+        assert_eq!(greedy.argmax(), 1);
+    }
+
+    #[test]
+    fn top_p_support_mass() {
+        // probs before nucleus: [0.5, 0.3, 0.15, 0.05] (logits = ln p)
+        let logits: Vec<f32> = [0.5f32, 0.3, 0.15, 0.05].iter().map(|p| p.ln()).collect();
+        let d = Dist::from_logits(&logits, SamplingConfig::new(1.0, 0.75));
+        // smallest prefix reaching 0.75 is {0, 1} with mass 0.8
+        assert!(d.0[2] == 0.0 && d.0[3] == 0.0, "outside nucleus must be zeroed: {:?}", d.0);
+        let s: f32 = d.0.iter().sum();
+        assert!(close(s, 1.0, 1e-5), "kept mass renormalized, sum {s}");
+        assert!(close(d.0[0], 0.5 / 0.8, 1e-4), "{}", d.0[0]);
+        assert!(close(d.0[1], 0.3 / 0.8, 1e-4), "{}", d.0[1]);
+        // top_p = 1 keeps everything
+        let full = Dist::from_logits(&logits, SamplingConfig::new(1.0, 1.0));
+        assert!(full.0.iter().all(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn sample_within_support() {
+        let logits: Vec<f32> = [0.4f32, 0.3, 0.2, 0.1].iter().map(|p| p.ln()).collect();
+        let d = Dist::from_logits(&logits, SamplingConfig::new(1.0, 0.65));
+        let support: Vec<usize> =
+            (0..d.len()).filter(|&t| d.0[t] > 0.0).collect();
+        assert_eq!(support, vec![0, 1], "nucleus support {:?}", d.0);
+        let mut rng = Pcg64::seeded(5);
+        for _ in 0..5_000 {
+            let t = d.sample(&mut rng);
+            assert!(d.0[t] > 0.0, "sampled token {t} outside support");
+        }
+    }
+
+    #[test]
+    fn sample_matches_distribution() {
+        let d = Dist(vec![0.1, 0.2, 0.7]);
+        let mut rng = Pcg64::seeded(9);
+        let n = 60_000;
+        let mut counts = [0usize; 3];
+        for _ in 0..n {
+            counts[d.sample(&mut rng)] += 1;
+        }
+        for t in 0..3 {
+            let f = counts[t] as f32 / n as f32;
+            assert!(close(f, d.0[t], 0.01), "token {t}: {f} vs {}", d.0[t]);
+        }
+    }
+
+    #[test]
+    fn residual_into_matches_residual() {
+        let p = Dist(vec![0.5, 0.3, 0.2]);
+        let q = Dist(vec![0.2, 0.5, 0.3]);
+        let r = Dist::residual(&p, &q).expect("positive residual");
+        let mut buf = Dist::default();
+        assert!(Dist::residual_into(&p, &q, &mut buf));
+        assert_eq!(r, buf);
+        // residual of p against itself has zero mass
+        assert!(Dist::residual(&p, &p).is_none());
+        assert!(!Dist::residual_into(&p, &p, &mut buf));
+        // mass: (0.3)/(0.3) at token 0 only
+        assert!(close(r.0[0], 1.0, 1e-6));
+        assert_eq!(r.0[1], 0.0);
+    }
+
+    #[test]
+    fn divergence_helpers() {
+        let p = Dist(vec![0.5, 0.5]);
+        let q = Dist(vec![0.9, 0.1]);
+        assert!(close(Dist::overlap(&p, &q), 0.6, 1e-6));
+        assert!(close(Dist::l1(&p, &q), 0.8, 1e-6));
+        assert!(close(Dist::tv(&p, &q), 0.4, 1e-6));
+        assert!(close(Dist::overlap(&p, &q), 1.0 - Dist::tv(&p, &q), 1e-6));
+        assert!(close(p.entropy(), std::f32::consts::LN_2, 1e-6));
+        assert!(p.kl(&p).abs() < 1e-7);
+        assert!(p.kl(&q) > 0.0);
+    }
+
+    #[test]
+    fn copy_from_and_normalize() {
+        let src = Dist(vec![0.25, 0.75]);
+        let mut dst = Dist(vec![1.0, 2.0, 3.0]);
+        dst.copy_from(&src);
+        assert_eq!(dst, src);
+        let mut un = Dist(vec![2.0, 6.0]);
+        assert!(un.normalize_in_place());
+        assert!(close(un.0[0], 0.25, 1e-6) && close(un.0[1], 0.75, 1e-6));
+        let mut zero = Dist(vec![0.0, 0.0]);
+        assert!(!zero.normalize_in_place());
+    }
+}

@@ -7,12 +7,20 @@
 //! §3.2) is the L1 = 0 special case; single-path drafting is K ≤ 1 or
 //! L2 = 0.
 
+#[cfg(feature = "pjrt")]
 use anyhow::Result;
 
+#[cfg(feature = "pjrt")]
 use crate::dist::{Dist, SamplingConfig};
+#[cfg(feature = "pjrt")]
 use crate::kvcache::KvCache;
-use crate::runtime::{Engine, RolloutOut};
-use crate::tree::{DraftTree, PathDraws, Provenance};
+#[cfg(feature = "pjrt")]
+use crate::runtime::Engine;
+use crate::runtime::RolloutOut;
+#[cfg(feature = "pjrt")]
+use crate::tree::PathDraws;
+use crate::tree::{DraftTree, Provenance};
+#[cfg(feature = "pjrt")]
 use crate::util::Pcg64;
 
 /// A delayed-expansion action a = (K, L1, L2) from the paper's action space.
@@ -53,10 +61,12 @@ pub struct Drafted {
     pub branch_point: usize,
 }
 
-/// Draft a delayed tree from the current draft KV cache.
+/// Draft a delayed tree from the current draft KV cache (`pjrt` feature:
+/// issues the fused rollout dispatches).
 ///
 /// `root_token` is the last committed token at position `root_pos`; the
 /// draft cache must hold valid rows for positions < root_pos.
+#[cfg(feature = "pjrt")]
 #[allow(clippy::too_many_arguments)]
 pub fn draft_delayed(
     engine: &Engine,

@@ -1,0 +1,310 @@
+//! PJRT execution engine (behind the `pjrt` feature): loads the AOT
+//! artifacts (HLO text + weights) and executes them on the CPU client.
+//! This is the only module in the crate that touches the `xla` crate.
+//!
+//! Weights are uploaded to device buffers once per model and reused via
+//! `execute_b`; per-call inputs (KV caches, tokens, uniforms) are uploaded
+//! per call. Executables are compiled lazily on first use and cached.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::weights::read_weights;
+use super::{DecodeOut, FamilyMeta, ModelDims, PrefillOut, Role, RolloutOut, TreeOut};
+
+impl Role {
+    fn prefix(self) -> &'static str {
+        match self {
+            Role::Target => "target",
+            Role::Draft => "draft",
+        }
+    }
+}
+
+/// A loaded model family: PJRT client, weight buffers, lazy executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub meta: FamilyMeta,
+    target_weights: Vec<xla::PjRtBuffer>,
+    draft_weights: Vec<xla::PjRtBuffer>,
+    execs: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl Engine {
+    /// Load a family from `artifacts/<family>`.
+    pub fn load(family_dir: &Path) -> Result<Engine> {
+        let meta = FamilyMeta::load(family_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e:?}"))?;
+        let upload = |file: &str| -> Result<Vec<xla::PjRtBuffer>> {
+            let tensors = read_weights(&family_dir.join(file))?;
+            tensors
+                .iter()
+                .map(|t| {
+                    client
+                        .buffer_from_host_buffer(&t.data, &t.dims, None)
+                        .map_err(|e| anyhow!("upload {}: {e:?}", t.name))
+                })
+                .collect()
+        };
+        let target_weights = upload("target.bin")?;
+        let draft_weights = upload("draft.bin")?;
+        Ok(Engine {
+            client,
+            dir: family_dir.to_path_buf(),
+            meta,
+            target_weights,
+            draft_weights,
+            execs: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn dims(&self, role: Role) -> ModelDims {
+        match role {
+            Role::Target => self.meta.target,
+            Role::Draft => self.meta.draft,
+        }
+    }
+
+    fn weights(&self, role: Role) -> &[xla::PjRtBuffer] {
+        match role {
+            Role::Target => &self.target_weights,
+            Role::Draft => &self.draft_weights,
+        }
+    }
+
+    /// Compile (or fetch) an executable by entry name.
+    fn exec_for(&self, name: &str) -> Result<()> {
+        if self.execs.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let path = self.dir.join("hlo").join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        self.execs.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Run an entry: weights ++ extra args (uploaded here), untuple outputs.
+    fn run(&self, role: Role, name: &str, args: Vec<ArgSpec>) -> Result<Vec<xla::Literal>> {
+        self.exec_for(name)?;
+        let mut bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(args.len());
+        for a in args {
+            let b = match a {
+                ArgSpec::F32(data, dims) => self
+                    .client
+                    .buffer_from_host_buffer(data, &dims, None)
+                    .map_err(|e| anyhow!("arg upload: {e:?}"))?,
+                ArgSpec::I32(data, dims) => self
+                    .client
+                    .buffer_from_host_buffer(data, &dims, None)
+                    .map_err(|e| anyhow!("arg upload: {e:?}"))?,
+                ArgSpec::ScalarI32(v) => self
+                    .client
+                    .buffer_from_host_buffer(&[v], &[], None)
+                    .map_err(|e| anyhow!("scalar upload: {e:?}"))?,
+                ArgSpec::ScalarF32(v) => self
+                    .client
+                    .buffer_from_host_buffer(&[v], &[], None)
+                    .map_err(|e| anyhow!("scalar upload: {e:?}"))?,
+            };
+            bufs.push(b);
+        }
+        let execs = self.execs.borrow();
+        let exe = execs.get(name).expect("compiled above");
+        let mut all: Vec<&xla::PjRtBuffer> = self.weights(role).iter().collect();
+        all.extend(bufs.iter());
+        let out = exe
+            .execute_b(&all)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))
+    }
+
+    pub fn prefill(&self, role: Role, tokens: &[i32], length: usize) -> Result<PrefillOut> {
+        let s_pre = self.meta.s_pre;
+        if tokens.len() > s_pre || length == 0 || length > tokens.len() {
+            bail!("prefill: bad token count {} (s_pre {s_pre})", tokens.len());
+        }
+        let mut padded = tokens.to_vec();
+        padded.resize(s_pre, crate::tokenizer::PAD as i32);
+        let name = format!("{}_prefill", role.prefix());
+        let out = self.run(
+            role,
+            &name,
+            vec![
+                ArgSpec::I32(&padded, vec![s_pre]),
+                ArgSpec::ScalarI32(length as i32),
+            ],
+        )?;
+        let [logits, hidden, k_rows, v_rows] = take4(out)?;
+        Ok(PrefillOut {
+            logits: to_f32(&logits)?,
+            hidden: to_f32(&hidden)?,
+            k_rows: to_f32(&k_rows)?,
+            v_rows: to_f32(&v_rows)?,
+        })
+    }
+
+    pub fn decode(
+        &self,
+        role: Role,
+        k_cache: &[f32],
+        v_cache: &[f32],
+        token: u32,
+        pos: usize,
+    ) -> Result<DecodeOut> {
+        let d = self.dims(role);
+        let kv_dims = vec![d.n_layers, d.n_heads, d.max_seq, d.d_head];
+        let name = format!("{}_decode", role.prefix());
+        let out = self.run(
+            role,
+            &name,
+            vec![
+                ArgSpec::F32(k_cache, kv_dims.clone()),
+                ArgSpec::F32(v_cache, kv_dims),
+                ArgSpec::ScalarI32(token as i32),
+                ArgSpec::ScalarI32(pos as i32),
+            ],
+        )?;
+        let [logits, hidden, k_row, v_row] = take4(out)?;
+        Ok(DecodeOut {
+            logits: to_f32(&logits)?,
+            hidden: to_f32(&hidden)?,
+            k_row: to_f32(&k_row)?,
+            v_row: to_f32(&v_row)?,
+        })
+    }
+
+    /// Fused draft rollout (draft model only).
+    #[allow(clippy::too_many_arguments)]
+    pub fn rollout(
+        &self,
+        k: usize,
+        l: usize,
+        k_cache: &[f32],
+        v_cache: &[f32],
+        token: u32,
+        pos: usize,
+        uniforms: &[f32],
+        temperature: f32,
+        top_p: f32,
+    ) -> Result<RolloutOut> {
+        let d = self.meta.draft;
+        let kv_dims = vec![d.n_layers, d.n_heads, d.max_seq, d.d_head];
+        if uniforms.len() != k * l {
+            bail!("rollout: expected {} uniforms", k * l);
+        }
+        let name = format!("draft_rollout_k{k}_l{l}");
+        let out = self.run(
+            Role::Draft,
+            &name,
+            vec![
+                ArgSpec::F32(k_cache, kv_dims.clone()),
+                ArgSpec::F32(v_cache, kv_dims),
+                ArgSpec::ScalarI32(token as i32),
+                ArgSpec::ScalarI32(pos as i32),
+                ArgSpec::F32(uniforms, vec![k, l]),
+                ArgSpec::ScalarF32(temperature),
+                ArgSpec::ScalarF32(top_p),
+            ],
+        )?;
+        let [tokens, dists, hiddens, k_rows, v_rows] = take5(out)?;
+        Ok(RolloutOut {
+            k,
+            l,
+            tokens: to_i32(&tokens)?,
+            dists: to_f32(&dists)?,
+            hiddens: to_f32(&hiddens)?,
+            k_rows: to_f32(&k_rows)?,
+            v_rows: to_f32(&v_rows)?,
+        })
+    }
+
+    /// Target tree-verification pass over `n_bucket` nodes.
+    #[allow(clippy::too_many_arguments)]
+    pub fn tree_verify(
+        &self,
+        n_bucket: usize,
+        k_cache: &[f32],
+        v_cache: &[f32],
+        tokens: &[i32],
+        positions: &[i32],
+        bias: &[f32],
+        cache_len: usize,
+    ) -> Result<TreeOut> {
+        let d = self.meta.target;
+        let kv_dims = vec![d.n_layers, d.n_heads, d.max_seq, d.d_head];
+        let name = format!("target_tree_n{n_bucket}");
+        let out = self.run(
+            Role::Target,
+            &name,
+            vec![
+                ArgSpec::F32(k_cache, kv_dims.clone()),
+                ArgSpec::F32(v_cache, kv_dims),
+                ArgSpec::I32(tokens, vec![n_bucket]),
+                ArgSpec::I32(positions, vec![n_bucket]),
+                ArgSpec::F32(bias, vec![n_bucket, n_bucket]),
+                ArgSpec::ScalarI32(cache_len as i32),
+            ],
+        )?;
+        let [logits, hidden, k_rows, v_rows] = take4(out)?;
+        Ok(TreeOut {
+            n: n_bucket,
+            logits: to_f32(&logits)?,
+            hidden: to_f32(&hidden)?,
+            k_rows: to_f32(&k_rows)?,
+            v_rows: to_f32(&v_rows)?,
+        })
+    }
+}
+
+enum ArgSpec<'a> {
+    F32(&'a [f32], Vec<usize>),
+    I32(&'a [i32], Vec<usize>),
+    ScalarI32(i32),
+    ScalarF32(f32),
+}
+
+fn to_f32(l: &xla::Literal) -> Result<Vec<f32>> {
+    l.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))
+}
+
+fn to_i32(l: &xla::Literal) -> Result<Vec<i32>> {
+    l.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e:?}"))
+}
+
+fn take4(mut v: Vec<xla::Literal>) -> Result<[xla::Literal; 4]> {
+    if v.len() != 4 {
+        bail!("expected 4 outputs, got {}", v.len());
+    }
+    let d = v.pop().unwrap();
+    let c = v.pop().unwrap();
+    let b = v.pop().unwrap();
+    let a = v.pop().unwrap();
+    Ok([a, b, c, d])
+}
+
+fn take5(mut v: Vec<xla::Literal>) -> Result<[xla::Literal; 5]> {
+    if v.len() != 5 {
+        bail!("expected 5 outputs, got {}", v.len());
+    }
+    let e = v.pop().unwrap();
+    let d = v.pop().unwrap();
+    let c = v.pop().unwrap();
+    let b = v.pop().unwrap();
+    let a = v.pop().unwrap();
+    Ok([a, b, c, d, e])
+}

@@ -11,18 +11,24 @@
 pub mod mlp;
 
 use std::path::Path;
+#[cfg(feature = "pjrt")]
 use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::coordinator::{ActionPolicy, SpecEngine, StepFeatures};
-use crate::dist::{Dist, SamplingConfig};
+#[cfg(feature = "pjrt")]
+use crate::coordinator::SpecEngine;
+use crate::coordinator::{ActionPolicy, StepFeatures};
+#[cfg(feature = "pjrt")]
+use crate::dist::SamplingConfig;
+use crate::dist::Dist;
 use crate::draft::Action;
+#[cfg(feature = "pjrt")]
 use crate::runtime::{Engine, Role};
 use crate::tree::{DraftTree, Provenance};
 use crate::util::json::{arr, num, obj, Json};
 use crate::util::{Pcg64, Json as J};
-use crate::verify::{self, OtlpSolver};
+use crate::verify::OtlpSolver;
 use mlp::{softmax, SelectorNet};
 
 pub const K_MAX: usize = 4;
@@ -62,6 +68,7 @@ pub struct LatencyModel {
 
 impl LatencyModel {
     /// Microbenchmark every compiled entry ("warm-up run" in the paper).
+    #[cfg(feature = "pjrt")]
     pub fn measure(engine: &Engine) -> Result<LatencyModel> {
         let meta = &engine.meta;
         let d = meta.draft;
@@ -274,19 +281,16 @@ pub fn expected_by_depth(tree: &DraftTree, solver: &dyn OtlpSolver, max_depth: u
         let q = tree.nodes[node].q.as_ref().expect("q");
         let xs = tree.child_tokens(node);
         let probs = solver.branching(p, q, &xs);
-        let mut seen: Vec<usize> = Vec::new();
-        for (i, &child) in tree.nodes[node].children.iter().enumerate() {
-            if seen.contains(&child) {
-                continue;
-            }
-            seen.push(child);
+        // duplicate child positions carry identical totals: credit each
+        // distinct child once, at its first occurrence
+        tree.for_each_distinct_child(node, |i, child| {
             let pr = reach[node] * probs[i];
             reach[child] += pr;
             let d = tree.nodes[child].depth;
             if d <= max_depth {
                 per_depth[d] += pr;
             }
-        }
+        });
     }
     // cumulative
     let mut acc = 0.0;
@@ -385,6 +389,7 @@ pub fn score_superset(ss: &Superset, solvers: &[(&str, Box<dyn OtlpSolver>)]) ->
 // ---------------------------------------------------------------------------
 
 /// Collect trace roots along target trajectories for one family.
+#[cfg(feature = "pjrt")]
 #[allow(clippy::too_many_arguments)]
 pub fn collect_traces(
     engine: &Engine,
@@ -439,7 +444,7 @@ pub fn collect_traces(
                 }
             }
             // advance the trajectory with a moderate static speculation step
-            let verifier = verify::verifier("SpecInfer").unwrap();
+            let verifier = crate::verify::verifier("SpecInfer").unwrap();
             let b = spec.step(&mut seq, verifier.as_ref(), Action::new(2, 2, 4), rng)?;
             since_root += b.emitted;
             if b.emitted == 0 {
@@ -452,6 +457,7 @@ pub fn collect_traces(
 
 /// Draft one superset sample at the current root: full trunk, branches of
 /// L2_MAX at every trunk depth, one big target tree pass for p everywhere.
+#[cfg(feature = "pjrt")]
 fn draft_superset(
     engine: &Engine,
     seq: &crate::coordinator::Sequence,

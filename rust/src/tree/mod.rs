@@ -4,6 +4,24 @@
 //! paths sampling the same token at the same node contribute the same child
 //! node twice). Node 0 is always the root: the last committed token, whose
 //! KV row is recomputed by the target tree pass.
+//!
+//! ## Index invariant (load-bearing for the hot path)
+//!
+//! [`DraftTree::add_child`] assigns every *new* node the index
+//! `nodes.len()` at creation time, so within any node's child list the
+//! **first occurrence of each distinct child has a strictly larger index
+//! than every previously-seen distinct child**. Duplicate occurrences repeat
+//! an earlier (smaller-or-equal) index. Consumers exploit this to
+//! deduplicate children with a running maximum in O(k) and zero
+//! allocations instead of an O(k²) `seen.contains` scan.
+//!
+//! ## Hot accessors
+//!
+//! Every accessor the per-block verification walk touches has an `_into`
+//! variant writing into caller-provided scratch (see
+//! `verify::VerifyScratch`), plus [`CsrChildren`], a reusable CSR snapshot
+//! of the child lists for pointer-chase-free walks. The allocating wrappers
+//! remain for construction-time and test use.
 
 use crate::dist::Dist;
 
@@ -45,6 +63,55 @@ pub struct PathDraws {
     pub paths: Vec<Vec<usize>>,
     /// Number of leading edges shared as one draw across all paths.
     pub shared_edges: usize,
+}
+
+/// Reusable CSR (compressed sparse row) snapshot of a tree's child lists.
+///
+/// One `build` per verification walk turns the per-node `Vec<usize>` child
+/// lists into three flat arrays, so the walk reads contiguous child/token
+/// slices with no per-node allocation. All buffers retain capacity across
+/// rebuilds; steady-state rebuilds are allocation-free.
+#[derive(Clone, Debug, Default)]
+pub struct CsrChildren {
+    /// `offsets[i]..offsets[i+1]` bounds node i's slice in `children`/`tokens`.
+    offsets: Vec<u32>,
+    /// Child node indices with multiplicity, in draft order.
+    children: Vec<u32>,
+    /// `tokens[j]` = token of `children[j]` (gathered once at build).
+    tokens: Vec<u32>,
+}
+
+impl CsrChildren {
+    /// Rebuild the snapshot for `tree`, reusing all capacity.
+    pub fn build(&mut self, tree: &DraftTree) {
+        self.offsets.clear();
+        self.children.clear();
+        self.tokens.clear();
+        self.offsets.reserve(tree.len() + 1);
+        self.offsets.push(0);
+        for node in &tree.nodes {
+            for &c in &node.children {
+                self.children.push(c as u32);
+                self.tokens.push(tree.nodes[c].token);
+            }
+            self.offsets.push(self.children.len() as u32);
+        }
+    }
+
+    /// Child node indices of `node`, with multiplicity.
+    #[inline]
+    pub fn child_nodes(&self, node: usize) -> &[u32] {
+        let (a, b) = (self.offsets[node] as usize, self.offsets[node + 1] as usize);
+        &self.children[a..b]
+    }
+
+    /// Child tokens of `node`, with multiplicity (aligned with
+    /// [`CsrChildren::child_nodes`]).
+    #[inline]
+    pub fn child_tokens(&self, node: usize) -> &[u32] {
+        let (a, b) = (self.offsets[node] as usize, self.offsets[node + 1] as usize);
+        &self.tokens[a..b]
+    }
 }
 
 /// A draft tree plus construction helpers.
@@ -98,6 +165,9 @@ impl DraftTree {
     /// Append a child of `parent` with the given token; if an identical
     /// child context already exists it is reused and only the multiplicity
     /// grows. Returns the child node index.
+    ///
+    /// New nodes always receive index `nodes.len()`, which upholds the
+    /// first-occurrence-increasing invariant documented on the module.
     pub fn add_child(&mut self, parent: usize, token: u32, provenance: Provenance) -> usize {
         if let Some(&existing) = self.nodes[parent]
             .children
@@ -132,24 +202,56 @@ impl DraftTree {
         self.nodes[node].p = Some(p);
     }
 
+    /// Child tokens of `node` with multiplicity, written into `out`.
+    pub fn child_tokens_into(&self, node: usize, out: &mut Vec<u32>) {
+        out.clear();
+        for &c in &self.nodes[node].children {
+            out.push(self.nodes[c].token);
+        }
+    }
+
     /// Child tokens of `node` with multiplicity, in draft order.
     pub fn child_tokens(&self, node: usize) -> Vec<u32> {
-        self.nodes[node]
-            .children
-            .iter()
-            .map(|&c| self.nodes[c].token)
-            .collect()
+        let mut out = Vec::with_capacity(self.nodes[node].children.len());
+        self.child_tokens_into(node, &mut out);
+        out
+    }
+
+    /// Visit the first occurrence of each distinct child of `node` as
+    /// `(position_in_child_list, child_index)`, in first-appearance order.
+    ///
+    /// O(k) and allocation-free. This is the single home of the
+    /// first-occurrence-increasing index invariant (module docs): an
+    /// occurrence is a duplicate exactly when it does not exceed the
+    /// running maximum of children seen so far. Every consumer that needs
+    /// per-distinct-child iteration (Eq. 3 estimators, accessors) routes
+    /// through here so the invariant is exploited in one place only.
+    pub fn for_each_distinct_child<F: FnMut(usize, usize)>(&self, node: usize, mut f: F) {
+        let mut max_seen: Option<usize> = None;
+        for (i, &c) in self.nodes[node].children.iter().enumerate() {
+            let first = match max_seen {
+                Some(m) => c > m,
+                None => true,
+            };
+            if first {
+                max_seen = Some(c);
+                f(i, c);
+            }
+        }
+    }
+
+    /// Distinct child node indices in first-appearance order, written into
+    /// `out`.
+    pub fn distinct_children_into(&self, node: usize, out: &mut Vec<usize>) {
+        out.clear();
+        self.for_each_distinct_child(node, |_, c| out.push(c));
     }
 
     /// Distinct child node indices in first-appearance order.
     pub fn distinct_children(&self, node: usize) -> Vec<usize> {
-        let mut seen = Vec::new();
-        for &c in &self.nodes[node].children {
-            if !seen.contains(&c) {
-                seen.push(c);
-            }
-        }
-        seen
+        let mut out = Vec::with_capacity(self.nodes[node].children.len());
+        self.distinct_children_into(node, &mut out);
+        out
     }
 
     /// Find the child node of `node` carrying `token`.
@@ -162,25 +264,38 @@ impl DraftTree {
     }
 
     /// Root-to-node token path (excluding the root token itself).
-    pub fn path_tokens(&self, mut node: usize) -> Vec<u32> {
+    pub fn path_tokens(&self, node: usize) -> Vec<u32> {
         let mut out = Vec::new();
+        self.path_tokens_into(node, &mut out);
+        out
+    }
+
+    /// Root-to-node token path (root excluded), written into `out`.
+    pub fn path_tokens_into(&self, mut node: usize, out: &mut Vec<u32>) {
+        out.clear();
         while let Some(p) = self.nodes[node].parent {
             out.push(self.nodes[node].token);
             node = p;
         }
         out.reverse();
-        out
     }
 
     /// Node indices from root (exclusive) down to `node` (inclusive).
-    pub fn path_nodes(&self, mut node: usize) -> Vec<usize> {
+    pub fn path_nodes(&self, node: usize) -> Vec<usize> {
         let mut out = Vec::new();
+        self.path_nodes_into(node, &mut out);
+        out
+    }
+
+    /// Node indices from root (exclusive) down to `node` (inclusive),
+    /// written into `out`.
+    pub fn path_nodes_into(&self, mut node: usize, out: &mut Vec<usize>) {
+        out.clear();
         while let Some(p) = self.nodes[node].parent {
             out.push(node);
             node = p;
         }
         out.reverse();
-        out
     }
 
     /// Is `anc` an ancestor of `node` (or equal)?
@@ -200,23 +315,31 @@ impl DraftTree {
     /// Additive attention bias for the target tree pass, padded to
     /// `n_bucket` nodes: bias[i][j] = 0 when j is ancestor-or-self of i,
     /// else -1e30. Padding rows see only themselves.
-    pub fn attention_bias(&self, n_bucket: usize) -> Vec<f32> {
+    ///
+    /// Written into `out` (capacity reused). Because parents always precede
+    /// children in index order, each row is the parent's finished row copied
+    /// wholesale (one memcpy of the bucket) plus the node's own diagonal —
+    /// O(N·bucket) instead of re-walking the ancestor chain per node.
+    pub fn attention_bias_into(&self, n_bucket: usize, out: &mut Vec<f32>) {
         assert!(self.len() <= n_bucket, "tree {} > bucket {n_bucket}", self.len());
-        let mut bias = vec![-1e30f32; n_bucket * n_bucket];
-        for i in 0..n_bucket {
-            bias[i * n_bucket + i] = 0.0;
-        }
+        out.clear();
+        out.resize(n_bucket * n_bucket, -1e30f32);
         for i in 0..self.len() {
-            let mut cur = i;
-            loop {
-                bias[i * n_bucket + cur] = 0.0;
-                match self.nodes[cur].parent {
-                    Some(p) => cur = p,
-                    None => break,
-                }
+            if let Some(p) = self.nodes[i].parent {
+                out.copy_within(p * n_bucket..(p + 1) * n_bucket, i * n_bucket);
             }
+            out[i * n_bucket + i] = 0.0;
         }
-        bias
+        for i in self.len()..n_bucket {
+            out[i * n_bucket + i] = 0.0;
+        }
+    }
+
+    /// Allocating wrapper over [`DraftTree::attention_bias_into`].
+    pub fn attention_bias(&self, n_bucket: usize) -> Vec<f32> {
+        let mut out = Vec::with_capacity(n_bucket * n_bucket);
+        self.attention_bias_into(n_bucket, &mut out);
+        out
     }
 
     /// Tokens and positions padded to the bucket, for the tree pass.
@@ -237,11 +360,21 @@ impl DraftTree {
         (toks, pos)
     }
 
+    /// All leaves (no children), written into `out` in node-index order.
+    pub fn leaves_into(&self, out: &mut Vec<usize>) {
+        out.clear();
+        for (i, n) in self.nodes.iter().enumerate() {
+            if n.children.is_empty() {
+                out.push(i);
+            }
+        }
+    }
+
     /// All leaves (no children), in node-index order (= draft order).
     pub fn leaves(&self) -> Vec<usize> {
-        (0..self.len())
-            .filter(|&i| self.nodes[i].children.is_empty())
-            .collect()
+        let mut out = Vec::new();
+        self.leaves_into(&mut out);
+        out
     }
 }
 
@@ -282,6 +415,46 @@ mod tests {
     }
 
     #[test]
+    fn distinct_children_running_max_dedup() {
+        // interleave duplicates: children [a, c, a, c, d] with first
+        // occurrences in increasing index order (the structural invariant)
+        let mut t = DraftTree::new(0);
+        let a = t.add_child(0, 5, Provenance::Branch { branch: 0, step: 0 });
+        let c = t.add_child(0, 9, Provenance::Branch { branch: 1, step: 0 });
+        let a2 = t.add_child(0, 5, Provenance::Branch { branch: 2, step: 0 });
+        let c2 = t.add_child(0, 9, Provenance::Branch { branch: 3, step: 0 });
+        let d = t.add_child(0, 2, Provenance::Branch { branch: 4, step: 0 });
+        assert_eq!((a, c), (a2, c2));
+        assert_eq!(t.nodes[0].children, vec![a, c, a, c, d]);
+        assert_eq!(t.distinct_children(0), vec![a, c, d]);
+        let mut scratch = Vec::new();
+        t.distinct_children_into(0, &mut scratch);
+        assert_eq!(scratch, vec![a, c, d]);
+    }
+
+    #[test]
+    fn csr_matches_child_lists() {
+        let mut t = DraftTree::new(0);
+        let a = t.add_child(0, 1, Provenance::Trunk { step: 0 });
+        let b = t.add_child(a, 2, Provenance::Trunk { step: 1 });
+        let _b2 = t.add_child(a, 2, Provenance::Branch { branch: 1, step: 0 });
+        let c = t.add_child(a, 3, Provenance::Branch { branch: 2, step: 0 });
+        let mut csr = CsrChildren::default();
+        csr.build(&t);
+        assert_eq!(csr.child_nodes(0), &[a as u32]);
+        assert_eq!(csr.child_tokens(0), &[1]);
+        assert_eq!(csr.child_nodes(a), &[b as u32, b as u32, c as u32]);
+        assert_eq!(csr.child_tokens(a), &[2, 2, 3]);
+        assert!(csr.child_nodes(b).is_empty());
+        // rebuild on a different tree reuses buffers and stays consistent
+        let t2 = chain(&[4, 6]);
+        csr.build(&t2);
+        assert_eq!(csr.child_tokens(0), &[4]);
+        assert_eq!(csr.child_tokens(1), &[6]);
+        assert!(csr.child_tokens(2).is_empty());
+    }
+
+    #[test]
     fn ancestor_queries() {
         let mut t = DraftTree::new(0);
         let a = t.add_child(0, 1, Provenance::Trunk { step: 0 });
@@ -310,9 +483,25 @@ mod tests {
         assert!(at(b, c) < -1e29);
         // a does not see its descendant b
         assert!(at(a, b) < -1e29);
+        // c sees root and itself only
+        assert_eq!(at(c, 0), 0.0);
+        assert_eq!(at(c, c), 0.0);
+        assert!(at(c, a) < -1e29);
         // padding rows self-only
         assert_eq!(at(5, 5), 0.0);
         assert!(at(5, 0) < -1e29);
+    }
+
+    #[test]
+    fn bias_into_reuses_buffer() {
+        let t = chain(&[1, 2]);
+        let mut buf = Vec::new();
+        t.attention_bias_into(5, &mut buf);
+        let first = buf.clone();
+        // second fill must produce identical contents in the same buffer
+        t.attention_bias_into(5, &mut buf);
+        assert_eq!(buf, first);
+        assert_eq!(buf.len(), 25);
     }
 
     #[test]

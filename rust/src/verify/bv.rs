@@ -23,8 +23,11 @@
 //! Stop depth τ = max{i : u ≤ W_i}; the accepted-child conditional mass is
 //! then min(q, w_τ·p)/w_τ ≤ p pointwise and the residual (p − q/w_τ)_+
 //! restores the target exactly.
+//!
+//! The forward/backward buffers (w, e, thr) and the residual target are all
+//! caller-provided scratch, so the per-block pass allocates nothing.
 
-use super::{Verdict, Verifier};
+use super::{Verdict, Verifier, VerifyScratch};
 use crate::dist::Dist;
 use crate::tree::DraftTree;
 use crate::util::Pcg64;
@@ -34,14 +37,20 @@ pub struct BlockVerify;
 /// Forward/backward pass over one path. `p_first` overrides the target
 /// distribution at the first node (used by Traversal's residual handoff).
 ///
-/// `path` lists node indices below the start node. Returns
-/// (stop depth τ ∈ 0..=L, weight w_τ at the stop node).
+/// `path` lists node indices below the start node; `w`/`e`/`thr` are
+/// reusable buffers for the forward weights, expected next-step weights and
+/// backward monotone thresholds. Returns (stop depth τ ∈ 0..=L, weight w_τ
+/// at the stop node).
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn bv_path(
     tree: &DraftTree,
     start: usize,
     p_first: &Dist,
     path: &[usize],
     rng: &mut Pcg64,
+    w: &mut Vec<f64>,
+    e: &mut Vec<f64>,
+    thr: &mut Vec<f64>,
 ) -> (usize, f64) {
     let l = path.len();
     debug_assert!(l > 0);
@@ -60,7 +69,8 @@ pub(crate) fn bv_path(
     };
 
     // forward weights
-    let mut w = vec![1.0f64; l + 1];
+    w.clear();
+    w.resize(l + 1, 1.0);
     for i in 1..=l {
         let tok = tree.nodes[path[i - 1]].token as usize;
         let (p, q) = (node_p(i - 1), node_q(i - 1));
@@ -73,7 +83,8 @@ pub(crate) fn bv_path(
     }
 
     // e_i = Σ_t min(q_{i+1}(t), w_i p_{i+1}(t)) for i < L
-    let mut e = vec![0.0f64; l];
+    e.clear();
+    e.resize(l, 0.0);
     for i in 0..l {
         let (p, q) = (node_p(i), node_q(i));
         e[i] = p
@@ -85,7 +96,8 @@ pub(crate) fn bv_path(
     }
 
     // backward monotone thresholds
-    let mut thr = vec![0.0f64; l + 1];
+    thr.clear();
+    thr.resize(l + 1, 0.0);
     thr[l] = w[l];
     for i in (0..l).rev() {
         let s = (w[i] - e[i]).max(0.0);
@@ -107,23 +119,25 @@ pub(crate) fn bv_path(
     (tau, w[tau])
 }
 
-/// w-weighted naive residual at the stop node: ∝ (p − q/w)_+.
-pub(crate) fn weighted_residual(p: &Dist, q: &Dist, w: f64) -> Dist {
-    let mut r: Vec<f32> = p
-        .0
-        .iter()
-        .zip(&q.0)
-        .map(|(&pt, &qt)| (pt as f64 - qt as f64 / w.max(1e-12)).max(0.0) as f32)
-        .collect();
-    let s: f32 = r.iter().sum();
-    if s > 0.0 {
-        for v in r.iter_mut() {
-            *v /= s;
+/// w-weighted naive residual at the stop node, ∝ (p − q/w)_+, written into
+/// `out`. Zero-probability stops (numerical) fall back to the target p.
+pub(crate) fn weighted_residual_into(p: &Dist, q: &Dist, w: f64, out: &mut Dist) {
+    let o = &mut out.0;
+    o.clear();
+    o.reserve(p.0.len());
+    let mut mass = 0.0f64;
+    for (&pt, &qt) in p.0.iter().zip(&q.0) {
+        let v = (pt as f64 - qt as f64 / w.max(1e-12)).max(0.0);
+        o.push(v as f32);
+        mass += v;
+    }
+    if mass > 0.0 {
+        let inv = (1.0 / mass) as f32;
+        for v in o.iter_mut() {
+            *v *= inv;
         }
-        Dist(r)
     } else {
-        // zero-probability stop (numerical); fall back to target
-        p.clone()
+        out.copy_from(p);
     }
 }
 
@@ -132,31 +146,40 @@ impl Verifier for BlockVerify {
         "BV"
     }
 
-    fn verify(&self, tree: &DraftTree, rng: &mut Pcg64) -> Verdict {
+    fn verify_into(
+        &self,
+        tree: &DraftTree,
+        rng: &mut Pcg64,
+        sc: &mut VerifyScratch,
+        out: &mut Verdict,
+    ) {
+        out.accepted.clear();
         // single-path: follow the first-child chain
-        let mut path = Vec::new();
+        sc.path.clear();
         let mut cur = 0usize;
         while let Some(&c) = tree.nodes[cur].children.first() {
-            path.push(c);
+            sc.path.push(c);
             cur = c;
         }
-        if path.is_empty() {
-            let p = tree.nodes[0].p.as_ref().expect("p dist");
-            return Verdict { accepted: vec![], correction: p.sample(rng) as u32 };
+        let p_root = tree.nodes[0].p.as_ref().expect("p dist");
+        if sc.path.is_empty() {
+            out.correction = p_root.sample(rng) as u32;
+            return;
         }
-        let p_root = tree.nodes[0].p.as_ref().expect("p dist").clone();
-        let (tau, w_tau) = bv_path(tree, 0, &p_root, &path, rng);
-        let accepted: Vec<usize> = path[..tau].to_vec();
-        let stop = if tau == 0 { 0 } else { path[tau - 1] };
-        let correction = if tau == path.len() {
+        let (tau, w_tau) =
+            bv_path(tree, 0, p_root, &sc.path, rng, &mut sc.w, &mut sc.e, &mut sc.thr);
+        out.accepted.extend_from_slice(&sc.path[..tau]);
+        if tau == sc.path.len() {
             // whole block accepted: bonus token from the leaf target dist
-            tree.nodes[*path.last().unwrap()].p.as_ref().unwrap().sample(rng) as u32
+            let leaf = *sc.path.last().unwrap();
+            out.correction = tree.nodes[leaf].p.as_ref().unwrap().sample(rng) as u32;
         } else {
-            let p = if tau == 0 { &p_root } else { tree.nodes[stop].p.as_ref().unwrap() };
+            let stop = if tau == 0 { 0 } else { sc.path[tau - 1] };
+            let p = if tau == 0 { p_root } else { tree.nodes[stop].p.as_ref().unwrap() };
             let q = tree.nodes[stop].q.as_ref().expect("q dist");
-            weighted_residual(p, q, w_tau).sample(rng) as u32
-        };
-        Verdict { accepted, correction }
+            weighted_residual_into(p, q, w_tau, &mut sc.dist_a);
+            out.correction = sc.dist_a.sample(rng) as u32;
+        }
     }
 }
 
@@ -227,6 +250,28 @@ mod tests {
         for _ in 0..1000 {
             let v = BlockVerify.verify(&tree, &mut rng);
             assert!(v.tau() <= 2);
+        }
+    }
+
+    /// Reusing one scratch across many verifies must not change verdicts
+    /// relative to fresh-scratch calls (warm buffers are state-free).
+    #[test]
+    fn scratch_reuse_is_stateless() {
+        let p = Dist(vec![0.55, 0.45]);
+        let q = Dist(vec![0.3, 0.7]);
+        let tree = path_tree(
+            &[1, 0, 1],
+            vec![(p.clone(), q.clone()), (p.clone(), q.clone()), (p.clone(), q.clone()), (p, q)],
+        );
+        let mut sc = VerifyScratch::default();
+        let mut warm = Verdict::default();
+        for seed in 0..300 {
+            let mut r1 = Pcg64::seeded(seed);
+            let mut r2 = Pcg64::seeded(seed);
+            let cold = BlockVerify.verify(&tree, &mut r1);
+            BlockVerify.verify_into(&tree, &mut r2, &mut sc, &mut warm);
+            assert_eq!(cold.accepted, warm.accepted, "seed {seed}");
+            assert_eq!(cold.correction, warm.correction, "seed {seed}");
         }
     }
 }

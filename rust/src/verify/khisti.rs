@@ -13,8 +13,14 @@
 //! Σ_t min(p(t), 1 − (1 − q(t))^k) (paper Algorithm 10 reports a lower
 //! bound; this is the matching canonical upper bound — we document the
 //! substitution in DESIGN.md and the MC tests bound the gap).
+//!
+//! **Allocation note:** unlike the other solvers, Khisti rebuilds its
+//! pattern/flow coupling per node, which inherently allocates; it is the
+//! one verifier excluded from the steady-state zero-allocation guarantee
+//! (`tests/alloc_free.rs`) and its allocs/verify are reported as-is by the
+//! `verify_hot` bench.
 
-use super::OtlpSolver;
+use super::{OtlpSolver, SolverScratch};
 use crate::dist::Dist;
 use crate::util::Pcg64;
 
@@ -228,7 +234,14 @@ impl OtlpSolver for Khisti {
         "Khisti"
     }
 
-    fn solve(&self, p: &Dist, q: &Dist, xs: &[u32], rng: &mut Pcg64) -> u32 {
+    fn solve_scratch(
+        &self,
+        p: &Dist,
+        q: &Dist,
+        xs: &[u32],
+        rng: &mut Pcg64,
+        _scratch: &mut SolverScratch,
+    ) -> u32 {
         let c = build_coupling(p, q, xs.len());
         let pi = c.pattern_index(xs);
         let pp = c.pattern_prob[pi];
@@ -254,22 +267,21 @@ impl OtlpSolver for Khisti {
             .min(1.0)
     }
 
-    fn branching(&self, p: &Dist, q: &Dist, xs: &[u32]) -> Vec<f64> {
+    fn branching_into(&self, p: &Dist, q: &Dist, xs: &[u32], out: &mut Vec<f64>) {
         let c = build_coupling(p, q, xs.len());
         let pi = c.pattern_index(xs);
         let pp = c.pattern_prob[pi].max(1e-300);
         let matched_total: f64 = c.matched[pi].iter().sum::<f64>() / pp;
         let res = c.residual(p);
-        xs.iter()
-            .map(|&x| {
-                let matched = c
-                    .distinct
-                    .iter()
-                    .position(|&t| t == x)
-                    .map_or(0.0, |j| c.matched[pi][j] / pp);
-                matched + (1.0 - matched_total) * res.p(x as usize) as f64
-            })
-            .collect()
+        out.clear();
+        out.extend(xs.iter().map(|&x| {
+            let matched = c
+                .distinct
+                .iter()
+                .position(|&t| t == x)
+                .map_or(0.0, |j| c.matched[pi][j] / pp);
+            matched + (1.0 - matched_total) * res.p(x as usize) as f64
+        }));
     }
 }
 

@@ -12,6 +12,17 @@
 //! * **Non-OT** algorithms (Block Verification, Traversal) implement
 //!   [`Verifier`] directly.
 //!
+//! ## The allocation-free hot path
+//!
+//! Verification runs once per decoded block, so its per-node heap traffic
+//! is pure overhead on the throughput-critical path. The steady-state entry
+//! point is [`Verifier::verify_into`]: all working memory lives in a
+//! caller-owned [`VerifyScratch`] arena and the verdict is written into a
+//! reusable [`Verdict`], so a warm call performs **zero heap allocations**
+//! (asserted by `tests/alloc_free.rs`; the one exception is the Khisti
+//! solver, whose per-node transportation LP is documented as allocating).
+//! [`Verifier::verify`] remains as an allocating convenience wrapper.
+//!
 //! Losslessness of every implementation is validated by the Monte-Carlo
 //! harness in `rust/tests/losslessness.rs` (the same validation the paper
 //! reports for its calculators).
@@ -25,11 +36,11 @@ pub mod spectr;
 pub mod traversal;
 
 use crate::dist::Dist;
-use crate::tree::DraftTree;
+use crate::tree::{CsrChildren, DraftTree};
 use crate::util::Pcg64;
 
 /// Outcome of verifying one draft tree.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct Verdict {
     /// Accepted node indices, root-exclusive, in root→leaf order.
     pub accepted: Vec<usize>,
@@ -48,10 +59,89 @@ impl Verdict {
     }
 }
 
+/// Reusable scratch for one solver invocation: a token multiset and two
+/// distribution buffers for residual ping-pong. All capacity persists
+/// across calls.
+#[derive(Clone, Debug, Default)]
+pub struct SolverScratch {
+    /// Remaining draft-token multiset (SpecInfer rounds).
+    pub tokens: Vec<u32>,
+    /// Residual / working distribution buffers.
+    pub dist_a: Dist,
+    pub dist_b: Dist,
+}
+
+/// Caller-owned arena backing a verification walk. Create one per sequence
+/// (or per bench thread), reuse it across blocks: after warm-up every
+/// buffer has its high-water capacity and `verify_into` allocates nothing.
+#[derive(Clone, Debug, Default)]
+pub struct VerifyScratch {
+    /// CSR snapshot of the tree's child lists, rebuilt per walk.
+    pub csr: CsrChildren,
+    /// Current node path (BV first-child chain).
+    pub path: Vec<usize>,
+    /// Per-path-draw used flags (Traversal).
+    pub used: Vec<bool>,
+    /// BV forward weights w_0..w_L.
+    pub w: Vec<f64>,
+    /// BV expected next-step weights e_0..e_{L-1}.
+    pub e: Vec<f64>,
+    /// BV backward monotone thresholds W_0..W_L.
+    pub thr: Vec<f64>,
+    /// Residual-target ping-pong buffers (Traversal / BV corrections).
+    pub dist_a: Dist,
+    pub dist_b: Dist,
+    /// Fallback per-leaf path draws when the tree records none.
+    pub fallback_paths: Vec<Vec<usize>>,
+    /// Solver-local scratch.
+    pub solver: SolverScratch,
+}
+
+impl VerifyScratch {
+    pub fn new() -> VerifyScratch {
+        VerifyScratch::default()
+    }
+
+    /// Pre-size every buffer for walks over trees with accepted paths of at
+    /// most `depth` edges, at most `paths` path draws, and `vocab`-sized
+    /// distributions. After this call even branches first taken mid-flight
+    /// (e.g. a solver's second rejection round) allocate nothing.
+    pub fn reserve(&mut self, vocab: usize, depth: usize, paths: usize) {
+        self.path.reserve(depth);
+        self.used.reserve(paths);
+        self.w.reserve(depth + 1);
+        self.e.reserve(depth + 1);
+        self.thr.reserve(depth + 1);
+        self.dist_a.0.reserve(vocab);
+        self.dist_b.0.reserve(vocab);
+        self.solver.tokens.reserve(paths.max(8));
+        self.solver.dist_a.0.reserve(vocab);
+        self.solver.dist_b.0.reserve(vocab);
+    }
+}
+
 /// A verification algorithm over a draft tree whose nodes carry p and q.
 pub trait Verifier: Send + Sync {
     fn name(&self) -> &'static str;
-    fn verify(&self, tree: &DraftTree, rng: &mut Pcg64) -> Verdict;
+
+    /// Verify one tree, writing the verdict into `out` and drawing all
+    /// working memory from `scratch`. Steady-state calls (warm scratch,
+    /// reused verdict) perform no heap allocation.
+    fn verify_into(
+        &self,
+        tree: &DraftTree,
+        rng: &mut Pcg64,
+        scratch: &mut VerifyScratch,
+        out: &mut Verdict,
+    );
+
+    /// Allocating convenience wrapper over [`Verifier::verify_into`].
+    fn verify(&self, tree: &DraftTree, rng: &mut Pcg64) -> Verdict {
+        let mut scratch = VerifyScratch::default();
+        let mut out = Verdict::default();
+        self.verify_into(tree, rng, &mut scratch, &mut out);
+        out
+    }
 }
 
 /// An OTLP solver f_{p,q,k} (paper Definition 3.2): maps i.i.d. draft tokens
@@ -59,8 +149,22 @@ pub trait Verifier: Send + Sync {
 pub trait OtlpSolver: Send + Sync {
     fn name(&self) -> &'static str;
 
-    /// Draw the output token given the realized draft tokens.
-    fn solve(&self, p: &Dist, q: &Dist, xs: &[u32], rng: &mut Pcg64) -> u32;
+    /// Draw the output token given the realized draft tokens, using
+    /// caller-provided scratch for residual buffers — the hot-path entry.
+    fn solve_scratch(
+        &self,
+        p: &Dist,
+        q: &Dist,
+        xs: &[u32],
+        rng: &mut Pcg64,
+        scratch: &mut SolverScratch,
+    ) -> u32;
+
+    /// Allocating convenience wrapper over [`OtlpSolver::solve_scratch`].
+    fn solve(&self, p: &Dist, q: &Dist, xs: &[u32], rng: &mut Pcg64) -> u32 {
+        let mut scratch = SolverScratch::default();
+        self.solve_scratch(p, q, xs, rng, &mut scratch)
+    }
 
     /// Acceptance rate α(f_{p,q,k}) = P(f(X_1..X_k) ∈ {X_1..X_k}) over
     /// X_i ~ q i.i.d. (Algorithms 6–10; Khisti's is a bound, see khisti.rs).
@@ -68,9 +172,17 @@ pub trait OtlpSolver: Send + Sync {
 
     /// Branching probabilities B(f, xs, t) for each *position* i (aligned
     /// with xs; duplicate tokens receive the same total value at each
-    /// occurrence — callers sum per distinct token before use).
-    /// Returned value at position i is P(f outputs token xs[i]).
-    fn branching(&self, p: &Dist, q: &Dist, xs: &[u32]) -> Vec<f64>;
+    /// occurrence — callers sum per distinct token before use), written
+    /// into the reusable `out` buffer. Value at position i is P(f outputs
+    /// token xs[i]).
+    fn branching_into(&self, p: &Dist, q: &Dist, xs: &[u32], out: &mut Vec<f64>);
+
+    /// Allocating convenience wrapper over [`OtlpSolver::branching_into`].
+    fn branching(&self, p: &Dist, q: &Dist, xs: &[u32]) -> Vec<f64> {
+        let mut out = Vec::with_capacity(xs.len());
+        self.branching_into(p, q, xs, &mut out);
+        out
+    }
 }
 
 /// Generic top-down OT walk (paper §3.2).
@@ -90,24 +202,48 @@ impl<S: OtlpSolver> Verifier for OtVerifier<S> {
         self.name
     }
 
-    fn verify(&self, tree: &DraftTree, rng: &mut Pcg64) -> Verdict {
-        let mut accepted = Vec::new();
+    fn verify_into(
+        &self,
+        tree: &DraftTree,
+        rng: &mut Pcg64,
+        scratch: &mut VerifyScratch,
+        out: &mut Verdict,
+    ) {
+        out.accepted.clear();
+        // One O(edges) gather over the (≤ ~50-node) tree buys contiguous
+        // child/token slices for the whole walk — cheaper than per-node
+        // pointer-chasing into `nodes[c].token`, and negligible next to the
+        // solvers' vocab-length work at each visited node.
+        scratch.csr.build(tree);
         let mut node = 0usize;
         loop {
             let p = tree.nodes[node].p.as_ref().expect("p dist set");
-            if tree.nodes[node].children.is_empty() {
+            let xs = scratch.csr.child_tokens(node);
+            if xs.is_empty() {
                 // Leaf: sample the bonus token directly from p.
-                return Verdict { accepted, correction: p.sample(rng) as u32 };
+                out.correction = p.sample(rng) as u32;
+                return;
             }
             let q = tree.nodes[node].q.as_ref().expect("q dist set");
-            let xs = tree.child_tokens(node);
-            let y = self.solver.solve(p, q, &xs, rng);
-            match tree.child_with_token(node, y) {
+            let y = self.solver.solve_scratch(p, q, xs, rng, &mut scratch.solver);
+            let kids = scratch.csr.child_nodes(node);
+            let toks = scratch.csr.child_tokens(node);
+            let mut next = None;
+            for (j, &tok) in toks.iter().enumerate() {
+                if tok == y {
+                    next = Some(kids[j] as usize);
+                    break;
+                }
+            }
+            match next {
                 Some(child) => {
-                    accepted.push(child);
+                    out.accepted.push(child);
                     node = child;
                 }
-                None => return Verdict { accepted, correction: y },
+                None => {
+                    out.correction = y;
+                    return;
+                }
             }
         }
     }
@@ -120,27 +256,24 @@ pub fn expected_accepted(tree: &DraftTree, solver: &dyn OtlpSolver) -> f64 {
     let mut reach = vec![0.0f64; tree.len()];
     reach[0] = 1.0;
     let mut total = 0.0f64;
+    let mut xs: Vec<u32> = Vec::new();
+    let mut probs: Vec<f64> = Vec::new();
     for node in 0..tree.len() {
         if reach[node] <= 0.0 || tree.nodes[node].children.is_empty() {
             continue;
         }
         let p = tree.nodes[node].p.as_ref().expect("p dist set");
         let q = tree.nodes[node].q.as_ref().expect("q dist set");
-        let xs = tree.child_tokens(node);
-        let probs = solver.branching(p, q, &xs);
+        tree.child_tokens_into(node, &mut xs);
+        solver.branching_into(p, q, &xs, &mut probs);
         // Sum duplicate positions per distinct child once: positions carrying
         // the same token all hold the same total probability of the solver
         // outputting that token, so take the value at the first occurrence.
-        let mut seen: Vec<usize> = Vec::new();
-        for (i, &child) in tree.nodes[node].children.iter().enumerate() {
-            if seen.contains(&child) {
-                continue;
-            }
-            seen.push(child);
+        tree.for_each_distinct_child(node, |i, child| {
             let pr = reach[node] * probs[i];
             reach[child] += pr;
             total += pr;
-        }
+        });
     }
     total
 }

@@ -5,7 +5,7 @@
 //! single-path "Naive" baseline and the multi-path "NaiveTree" (the residual
 //! draw may land on X_2..X_k, letting the walk branch).
 
-use super::OtlpSolver;
+use super::{OtlpSolver, SolverScratch};
 use crate::dist::Dist;
 use crate::util::Pcg64;
 
@@ -16,16 +16,24 @@ impl OtlpSolver for Naive {
         "Naive"
     }
 
-    fn solve(&self, p: &Dist, q: &Dist, xs: &[u32], rng: &mut Pcg64) -> u32 {
+    fn solve_scratch(
+        &self,
+        p: &Dist,
+        q: &Dist,
+        xs: &[u32],
+        rng: &mut Pcg64,
+        scratch: &mut SolverScratch,
+    ) -> u32 {
         let x1 = xs[0] as usize;
         let ratio = if q.p(x1) > 0.0 { p.p(x1) / q.p(x1) } else { 1.0 };
         if rng.next_f64() <= ratio as f64 {
             return x1 as u32;
         }
-        match Dist::residual(p, q) {
-            Some(res) => res.sample(rng) as u32,
+        if Dist::residual_into(p, q, &mut scratch.dist_a) {
+            scratch.dist_a.sample(rng) as u32
+        } else {
             // p == q: rejection has probability zero; numerical fallback.
-            None => x1 as u32,
+            x1 as u32
         }
     }
 
@@ -51,7 +59,7 @@ impl OtlpSolver for Naive {
 
     /// Algorithm 12: B(X_i) = (1 − a) p_res(X_i) + a·1{X_i = X_1},
     /// a = min(1, p(X_1)/q(X_1)).
-    fn branching(&self, p: &Dist, q: &Dist, xs: &[u32]) -> Vec<f64> {
+    fn branching_into(&self, p: &Dist, q: &Dist, xs: &[u32], out: &mut Vec<f64>) {
         let x1 = xs[0] as usize;
         let a = if q.p(x1) > 0.0 {
             (p.p(x1) / q.p(x1)).min(1.0) as f64
@@ -59,12 +67,11 @@ impl OtlpSolver for Naive {
             1.0
         };
         let res = Dist::residual(p, q);
-        xs.iter()
-            .map(|&x| {
-                let r = res.as_ref().map_or(0.0, |d| d.p(x as usize) as f64);
-                (1.0 - a) * r + if x as usize == x1 { a } else { 0.0 }
-            })
-            .collect()
+        out.clear();
+        out.extend(xs.iter().map(|&x| {
+            let r = res.as_ref().map_or(0.0, |d| d.p(x as usize) as f64);
+            (1.0 - a) * r + if x as usize == x1 { a } else { 0.0 }
+        }));
     }
 }
 
@@ -87,6 +94,22 @@ mod tests {
         for t in 0..3 {
             let f = counts[t] as f64 / n as f64;
             assert!((f - p.0[t] as f64).abs() < 0.01, "token {t}: {f}");
+        }
+    }
+
+    /// Scratch-based and allocating entry points draw identical streams.
+    #[test]
+    fn solve_scratch_matches_solve() {
+        let p = Dist(vec![0.5, 0.3, 0.2]);
+        let q = Dist(vec![0.2, 0.2, 0.6]);
+        let mut scratch = SolverScratch::default();
+        for seed in 0..100 {
+            let mut r1 = Pcg64::seeded(seed);
+            let mut r2 = Pcg64::seeded(seed);
+            let xs = [2u32, 0];
+            let a = Naive.solve(&p, &q, &xs, &mut r1);
+            let b = Naive.solve_scratch(&p, &q, &xs, &mut r2, &mut scratch);
+            assert_eq!(a, b, "seed {seed}");
         }
     }
 

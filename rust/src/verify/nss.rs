@@ -3,7 +3,7 @@
 //! The simplest OTLP solver: ignore the draft tokens and sample Y ~ p.
 //! Trivially lossless; acceptance only via collision with drafted tokens.
 
-use super::OtlpSolver;
+use super::{OtlpSolver, SolverScratch};
 use crate::dist::Dist;
 use crate::util::Pcg64;
 
@@ -14,7 +14,14 @@ impl OtlpSolver for Nss {
         "NSS"
     }
 
-    fn solve(&self, p: &Dist, _q: &Dist, _xs: &[u32], rng: &mut Pcg64) -> u32 {
+    fn solve_scratch(
+        &self,
+        p: &Dist,
+        _q: &Dist,
+        _xs: &[u32],
+        rng: &mut Pcg64,
+        _scratch: &mut SolverScratch,
+    ) -> u32 {
         p.sample(rng) as u32
     }
 
@@ -27,8 +34,9 @@ impl OtlpSolver for Nss {
     }
 
     /// Algorithm 11: B(X_i) = p(X_i).
-    fn branching(&self, p: &Dist, _q: &Dist, xs: &[u32]) -> Vec<f64> {
-        xs.iter().map(|&x| p.p(x as usize) as f64).collect()
+    fn branching_into(&self, p: &Dist, _q: &Dist, xs: &[u32], out: &mut Vec<f64>) {
+        out.clear();
+        out.extend(xs.iter().map(|&x| p.p(x as usize) as f64));
     }
 }
 
@@ -80,5 +88,16 @@ mod tests {
         assert!((b[0] - 0.25).abs() < 1e-9);
         assert!((b[1] - 0.5).abs() < 1e-9);
         assert!((b[2] - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn branching_into_reuses_buffer() {
+        let p = Dist(vec![0.25, 0.25, 0.5]);
+        let q = Dist(vec![0.4, 0.4, 0.2]);
+        let mut out = Vec::new();
+        Nss.branching_into(&p, &q, &[0, 2], &mut out);
+        assert_eq!(out, vec![0.25, 0.5]);
+        Nss.branching_into(&p, &q, &[1], &mut out);
+        assert_eq!(out, vec![0.25]);
     }
 }

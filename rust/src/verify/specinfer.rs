@@ -6,7 +6,7 @@
 
 use std::collections::HashMap;
 
-use super::OtlpSolver;
+use super::{OtlpSolver, SolverScratch};
 use crate::dist::Dist;
 use crate::util::Pcg64;
 
@@ -22,24 +22,49 @@ impl OtlpSolver for SpecInfer {
         "SpecInfer"
     }
 
-    fn solve(&self, p: &Dist, q: &Dist, xs: &[u32], rng: &mut Pcg64) -> u32 {
-        let mut s: Vec<u32> = xs.to_vec();
-        let mut p_cur = p.clone();
-        while !s.is_empty() {
-            let idx = rng.next_below(s.len());
-            let x = s[idx] as usize;
+    fn solve_scratch(
+        &self,
+        p: &Dist,
+        q: &Dist,
+        xs: &[u32],
+        rng: &mut Pcg64,
+        scratch: &mut SolverScratch,
+    ) -> u32 {
+        // multiset of remaining draws in reusable scratch; the round target
+        // stays a borrow of `p` until the first rejection forces a residual
+        // (common case: round 1 accepts and no vocab-length copy happens),
+        // then ping-pongs between dist_a and dist_b
+        scratch.tokens.clear();
+        scratch.tokens.extend_from_slice(xs);
+        let mut on_p = true;
+        while !scratch.tokens.is_empty() {
+            let idx = rng.next_below(scratch.tokens.len());
+            let x = scratch.tokens[idx] as usize;
+            let cur = if on_p { p } else { &scratch.dist_a };
             let ratio = if q.p(x) > 0.0 {
-                p_cur.p(x) as f64 / q.p(x) as f64
+                cur.p(x) as f64 / q.p(x) as f64
             } else {
                 f64::INFINITY
             };
             if rng.next_f64() <= ratio {
                 return x as u32;
             }
-            p_cur = residualize(&p_cur, q);
-            s.swap_remove(idx);
+            // p ← normalize((p − q)_+); zero residual mass keeps the current
+            // target (residualize fallback), matching the allocating path
+            if on_p {
+                if Dist::residual_into(p, q, &mut scratch.dist_a) {
+                    on_p = false;
+                }
+            } else if Dist::residual_into(&scratch.dist_a, q, &mut scratch.dist_b) {
+                std::mem::swap(&mut scratch.dist_a, &mut scratch.dist_b);
+            }
+            scratch.tokens.swap_remove(idx);
         }
-        p_cur.sample(rng) as u32
+        if on_p {
+            p.sample(rng) as u32
+        } else {
+            scratch.dist_a.sample(rng) as u32
+        }
     }
 
     /// Algorithm 9.
@@ -86,7 +111,7 @@ impl OtlpSolver for SpecInfer {
     }
 
     /// Algorithm 14 — exact recursion over sub-multisets.
-    fn branching(&self, p: &Dist, q: &Dist, xs: &[u32]) -> Vec<f64> {
+    fn branching_into(&self, p: &Dist, q: &Dist, xs: &[u32], out: &mut Vec<f64>) {
         let k = xs.len();
         // Pre-compute round distributions p_0..p_k and acceptance vectors
         // a_i(t) = min(1, p_{i-1}(t)/q(t)) for rounds i = 1..k.
@@ -107,6 +132,7 @@ impl OtlpSolver for SpecInfer {
         // B_i(S; x): prob of eventually outputting x given the remaining
         // multiset S at the start of round i+1 (|S| = k − i).
         // Memoized over (i, sorted multiset, x).
+        #[allow(clippy::too_many_arguments)]
         fn rec(
             i: usize,
             s: &mut Vec<u32>,
@@ -143,12 +169,11 @@ impl OtlpSolver for SpecInfer {
         }
 
         let mut memo = HashMap::new();
-        xs.iter()
-            .map(|&x| {
-                let mut s = xs.to_vec();
-                rec(0, &mut s, x, k, &p_rounds, q, &accept, &mut memo)
-            })
-            .collect()
+        out.clear();
+        out.extend(xs.iter().map(|&x| {
+            let mut s = xs.to_vec();
+            rec(0, &mut s, x, k, &p_rounds, q, &accept, &mut memo)
+        }));
     }
 }
 
@@ -176,6 +201,21 @@ mod tests {
         for t in 0..4 {
             let f = counts[t] as f64 / n as f64;
             assert!((f - p.0[t] as f64).abs() < 0.012, "token {t}: {f}");
+        }
+    }
+
+    /// The scratch path must replay the identical randomized algorithm.
+    #[test]
+    fn solve_scratch_matches_solve() {
+        let (p, q) = pq();
+        let mut scratch = SolverScratch::default();
+        for seed in 0..200 {
+            let mut r1 = Pcg64::seeded(seed);
+            let mut r2 = Pcg64::seeded(seed);
+            let xs = [1u32, 3, 1, 0];
+            let a = SpecInfer.solve(&p, &q, &xs, &mut r1);
+            let b = SpecInfer.solve_scratch(&p, &q, &xs, &mut r2, &mut scratch);
+            assert_eq!(a, b, "seed {seed}");
         }
     }
 

@@ -22,9 +22,14 @@
 //!
 //! Losslessness follows by composing the per-trial BV guarantee with the
 //! residual chain rule, and is validated in tests/losslessness.rs.
+//!
+//! The walk is allocation-free in steady state: path draws are borrowed
+//! from the tree (or rebuilt into scratch for plain multipath trees), the
+//! BV buffers live in [`VerifyScratch`], and the evolving residual target
+//! ping-pongs between the two scratch distributions.
 
-use super::bv::{bv_path, weighted_residual};
-use super::{Verdict, Verifier};
+use super::bv::{bv_path, weighted_residual_into};
+use super::{Verdict, Verifier, VerifyScratch};
 use crate::tree::DraftTree;
 use crate::util::Pcg64;
 
@@ -35,12 +40,40 @@ impl Verifier for Traversal {
         "Traversal"
     }
 
-    fn verify(&self, tree: &DraftTree, rng: &mut Pcg64) -> Verdict {
-        let draws = tree.draws();
-        let mut used = vec![false; draws.paths.len()];
-        let mut accepted: Vec<usize> = Vec::new();
+    fn verify_into(
+        &self,
+        tree: &DraftTree,
+        rng: &mut Pcg64,
+        sc: &mut VerifyScratch,
+        out: &mut Verdict,
+    ) {
+        out.accepted.clear();
+        // Path draws: borrow recorded ones, or rebuild one independent draw
+        // per leaf into scratch (inner path buffers are recycled by index so
+        // steady-state rebuilds allocate nothing).
+        let (paths, shared_edges): (&[Vec<usize>], usize) = match &tree.path_draws {
+            Some(d) => (d.paths.as_slice(), d.shared_edges),
+            None => {
+                let mut count = 0usize;
+                for leaf in 0..tree.len() {
+                    if !tree.nodes[leaf].children.is_empty() {
+                        continue;
+                    }
+                    if count == sc.fallback_paths.len() {
+                        sc.fallback_paths.push(Vec::new());
+                    }
+                    tree.path_nodes_into(leaf, &mut sc.fallback_paths[count]);
+                    count += 1;
+                }
+                (&sc.fallback_paths[..count], 0)
+            }
+        };
+
+        sc.used.clear();
+        sc.used.resize(paths.len(), false);
         let mut a = 0usize; // current accepted node
-        let mut p_tilde = tree.nodes[0].p.as_ref().expect("p dist").clone();
+        // current residual target p̃, kept in dist_a
+        sc.dist_a.copy_from(tree.nodes[0].p.as_ref().expect("p dist"));
         // depth (edge count from root) of the current node
         let mut depth = 0usize;
         // whether a rejection has already consumed the shared trunk draw
@@ -48,51 +81,58 @@ impl Verifier for Traversal {
 
         loop {
             // next untried path draw passing through the current node
-            let candidate = draws.paths.iter().enumerate().find(|(i, path)| {
-                if used[*i] || path.len() <= depth {
-                    return false;
+            let mut candidate = None;
+            for (i, path) in paths.iter().enumerate() {
+                if sc.used[i] || path.len() <= depth {
+                    continue;
                 }
                 // passes through a: its node at depth-1 .. matches
                 let through = if depth == 0 { true } else { path[depth - 1] == a };
                 if !through {
-                    return false;
+                    continue;
                 }
                 // if the trunk draw is dead, paths whose next edge is still
                 // inside the shared trunk cannot retry it
-                !(trunk_dead && depth < draws.shared_edges)
-            });
+                if trunk_dead && depth < shared_edges {
+                    continue;
+                }
+                candidate = Some(i);
+                break;
+            }
 
-            let Some((pi, path)) = candidate else {
-                let correction = p_tilde.sample(rng) as u32;
-                return Verdict { accepted, correction };
+            let Some(pi) = candidate else {
+                out.correction = sc.dist_a.sample(rng) as u32;
+                return;
             };
-            used[pi] = true;
-            let subpath: Vec<usize> = path[depth..].to_vec();
-            let (tau, w_tau) = bv_path(tree, a, &p_tilde, &subpath, rng);
+            sc.used[pi] = true;
+            let subpath = &paths[pi][depth..];
+            let (tau, w_tau) =
+                bv_path(tree, a, &sc.dist_a, subpath, rng, &mut sc.w, &mut sc.e, &mut sc.thr);
 
             if tau == subpath.len() {
                 // accepted to the leaf: bonus token from the leaf target
-                accepted.extend_from_slice(&subpath);
+                out.accepted.extend_from_slice(subpath);
                 let leaf = *subpath.last().unwrap();
-                let correction =
-                    tree.nodes[leaf].p.as_ref().unwrap().sample(rng) as u32;
-                return Verdict { accepted, correction };
+                out.correction = tree.nodes[leaf].p.as_ref().unwrap().sample(rng) as u32;
+                return;
             }
 
             // advance to the stop node, update the residual target there
-            accepted.extend_from_slice(&subpath[..tau]);
+            out.accepted.extend_from_slice(&subpath[..tau]);
             if tau > 0 {
                 a = subpath[tau - 1];
             }
             depth += tau;
-            let p_stop = if tau == 0 {
-                p_tilde.clone()
-            } else {
-                tree.nodes[a].p.as_ref().unwrap().clone()
-            };
             let q_stop = tree.nodes[a].q.as_ref().expect("q dist");
-            p_tilde = weighted_residual(&p_stop, q_stop, w_tau);
-            if depth < draws.shared_edges {
+            if tau == 0 {
+                // stop at the current node: residual of the current target
+                weighted_residual_into(&sc.dist_a, q_stop, w_tau, &mut sc.dist_b);
+            } else {
+                let p_stop = tree.nodes[a].p.as_ref().unwrap();
+                weighted_residual_into(p_stop, q_stop, w_tau, &mut sc.dist_b);
+            }
+            std::mem::swap(&mut sc.dist_a, &mut sc.dist_b);
+            if depth < shared_edges {
                 // the rejected edge was part of the shared trunk draw
                 trunk_dead = true;
             }
@@ -189,5 +229,34 @@ mod tests {
         // two draws must beat it
         let frac = tau1 as f64 / n as f64;
         assert!(frac > 0.62, "two-branch acceptance {frac} should beat 0.6");
+    }
+
+    /// Recorded-draws and fallback (path_draws = None) walks agree for
+    /// i.i.d. multipath trees, including with a reused scratch.
+    #[test]
+    fn fallback_paths_match_recorded() {
+        let mut t = DraftTree::new(0);
+        let c1 = t.add_child(0, 1, Provenance::Branch { branch: 0, step: 0 });
+        let c2 = t.add_child(0, 0, Provenance::Branch { branch: 1, step: 0 });
+        t.set_p(0, Dist(vec![0.7, 0.3]));
+        t.set_q(0, Dist(vec![0.4, 0.6]));
+        let flat = Dist(vec![0.5, 0.5]);
+        for n in [c1, c2] {
+            t.set_p(n, flat.clone());
+            t.set_q(n, flat.clone());
+        }
+        let mut recorded = t.clone();
+        recorded.path_draws =
+            Some(PathDraws { paths: vec![vec![c1], vec![c2]], shared_edges: 0 });
+        let mut sc = VerifyScratch::default();
+        let mut out = Verdict::default();
+        for seed in 0..200 {
+            let mut r1 = Pcg64::seeded(seed);
+            let mut r2 = Pcg64::seeded(seed);
+            let v1 = Traversal.verify(&recorded, &mut r1);
+            Traversal.verify_into(&t, &mut r2, &mut sc, &mut out);
+            assert_eq!(v1.accepted, out.accepted, "seed {seed}");
+            assert_eq!(v1.correction, out.correction, "seed {seed}");
+        }
     }
 }

@@ -1,0 +1,100 @@
+//! Counting-allocator proof of the tentpole guarantee: a steady-state
+//! (warm-scratch) `verify_into` call performs zero heap allocations, for
+//! every verifier except the documented Khisti LP.
+//!
+//! Everything runs inside ONE #[test] so the process-global allocation
+//! counter is never polluted by a concurrently running test thread. The
+//! allocator and workload are shared with the `verify_hot` bench via
+//! `tests/common/mod.rs`, so this test asserts exactly the configuration
+//! the bench measures.
+
+mod common;
+
+use common::{allocs, make_tree, random_dist, CountingAlloc};
+use specdelay::dist::Dist;
+use specdelay::tree::DraftTree;
+use specdelay::util::Pcg64;
+use specdelay::verify::{verifier, Verdict, VerifyScratch};
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn steady_state_verify_is_allocation_free() {
+    let vocab = 97;
+    let mut rng = Pcg64::seeded(7);
+    let trees: Vec<DraftTree> = (0..16).map(|_| make_tree(&mut rng, vocab)).collect();
+    // Traversal fallback variant: no recorded draws (leaf paths rebuilt
+    // into scratch each walk)
+    let fallback_trees: Vec<DraftTree> = trees
+        .iter()
+        .map(|t| {
+            let mut t = t.clone();
+            t.path_draws = None;
+            t
+        })
+        .collect();
+
+    // Khisti's per-node transportation LP is the documented exception.
+    let names = ["NSS", "Naive", "NaiveTree", "SpecTr", "SpecInfer", "BV", "Traversal"];
+    let verifiers: Vec<_> = names.iter().map(|&n| (n, verifier(n).unwrap())).collect();
+
+    let mut scratch = VerifyScratch::new();
+    scratch.reserve(vocab, 16, 8);
+    let mut verdict = Verdict::default();
+    verdict.accepted.reserve(64);
+
+    // Warm-up: every verifier over every tree, twice, so all scratch
+    // buffers reach their high-water capacity before counting starts.
+    for _ in 0..2 {
+        for (_, ver) in &verifiers {
+            for t in &trees {
+                ver.verify_into(t, &mut rng, &mut scratch, &mut verdict);
+            }
+            for t in &fallback_trees {
+                ver.verify_into(t, &mut rng, &mut scratch, &mut verdict);
+            }
+        }
+    }
+
+    for (name, ver) in &verifiers {
+        let rounds = 200usize;
+        let a0 = allocs();
+        for i in 0..rounds {
+            ver.verify_into(&trees[i % trees.len()], &mut rng, &mut scratch, &mut verdict);
+        }
+        let da = allocs() - a0;
+        assert_eq!(
+            da, 0,
+            "{name}: {da} allocations across {rounds} steady-state verifies (expected 0)"
+        );
+        // verdicts must still be produced (the walk really ran)
+        assert!(verdict.block_tokens() >= 1);
+    }
+
+    // Traversal's fallback (no recorded path draws) must also be free.
+    let trav = &verifiers.iter().find(|(n, _)| *n == "Traversal").unwrap().1;
+    let a0 = allocs();
+    for i in 0..200 {
+        trav.verify_into(
+            &fallback_trees[i % fallback_trees.len()],
+            &mut rng,
+            &mut scratch,
+            &mut verdict,
+        );
+    }
+    assert_eq!(allocs() - a0, 0, "Traversal fallback path allocated");
+
+    // And the core dist kernels themselves: sampling and scratch residuals.
+    let p = random_dist(vocab, &mut rng, 2.0);
+    let q = random_dist(vocab, &mut rng, 1.0);
+    let mut buf = Dist::default();
+    Dist::residual_into(&p, &q, &mut buf); // warm
+    let a0 = allocs();
+    for _ in 0..100 {
+        let t = p.sample(&mut rng);
+        assert!(t < vocab);
+        Dist::residual_into(&p, &q, &mut buf);
+    }
+    assert_eq!(allocs() - a0, 0, "dist kernels allocated");
+}

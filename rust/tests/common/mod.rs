@@ -1,0 +1,91 @@
+//! Shared support for the allocation test (`tests/alloc_free.rs`) and the
+//! `verify_hot` bench: the counting global allocator and the synthetic
+//! delayed-tree workload. Keeping these in one module guarantees the
+//! configuration the zero-allocation test asserts is exactly the one the
+//! bench measures.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use specdelay::dist::Dist;
+use specdelay::tree::{DraftTree, PathDraws, Provenance};
+use specdelay::util::Pcg64;
+
+/// Global allocator that counts every alloc/realloc/alloc_zeroed call.
+pub struct CountingAlloc;
+
+static ALLOC_COUNT: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::SeqCst);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::SeqCst);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::SeqCst);
+        System.alloc_zeroed(layout)
+    }
+}
+
+/// Total allocation calls so far (diff two reads to count a region).
+pub fn allocs() -> u64 {
+    ALLOC_COUNT.load(Ordering::SeqCst)
+}
+
+/// Random normalized distribution; `sharp` > 1 concentrates mass.
+pub fn random_dist(v: usize, rng: &mut Pcg64, sharp: f32) -> Dist {
+    let mut d: Vec<f32> = (0..v).map(|_| rng.next_f32().powf(sharp) + 1e-4).collect();
+    let sum: f32 = d.iter().sum();
+    for x in d.iter_mut() {
+        *x /= sum;
+    }
+    Dist(d)
+}
+
+/// Delayed tree: trunk of 2, then 3 branches of 3 — the paper's moderate
+/// (K=3, L1=2, L2=3) shape, 12 nodes. p and q are set at every node and
+/// path draws are recorded with `shared_edges = 2`.
+pub fn make_tree(rng: &mut Pcg64, v: usize) -> DraftTree {
+    let mut t = DraftTree::new(5);
+    let mut node = 0;
+    for step in 0..2 {
+        let q = random_dist(v, rng, 1.0);
+        let tok = q.sample(rng) as u32;
+        t.set_q(node, q);
+        t.set_p(node, random_dist(v, rng, 2.0));
+        node = t.add_child(node, tok, Provenance::Trunk { step: step + 1 });
+    }
+    let bp = node;
+    let mut paths = Vec::new();
+    for b in 0..3 {
+        let mut cur = bp;
+        for step in 0..3 {
+            if t.nodes[cur].q.is_none() {
+                t.set_q(cur, random_dist(v, rng, 1.0));
+            }
+            if t.nodes[cur].p.is_none() {
+                t.set_p(cur, random_dist(v, rng, 2.0));
+            }
+            let tok = t.nodes[cur].q.as_ref().unwrap().sample(rng) as u32;
+            cur = t.add_child(cur, tok, Provenance::Branch { branch: b, step: step + 1 });
+        }
+        paths.push(t.path_nodes(cur));
+    }
+    for i in 0..t.len() {
+        if t.nodes[i].p.is_none() {
+            t.set_p(i, random_dist(v, rng, 2.0));
+        }
+        if t.nodes[i].q.is_none() {
+            t.set_q(i, random_dist(v, rng, 1.0));
+        }
+    }
+    t.path_draws = Some(PathDraws { paths, shared_edges: 2 });
+    t
+}

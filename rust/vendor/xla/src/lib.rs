@@ -1,0 +1,127 @@
+//! Stub of the PJRT/XLA client API consumed by `specdelay::runtime`.
+//!
+//! The offline build environment cannot link a real PJRT plugin, so this
+//! crate provides the exact type/method surface the runtime layer compiles
+//! against. Every constructor returns an error ("no PJRT backend linked"),
+//! and all post-construction types are uninhabited, so the stub can never
+//! silently produce wrong results: code paths beyond client creation are
+//! statically unreachable. Swapping this path dependency for a real `xla`
+//! crate (with identical method names) enables actual model execution.
+
+/// Uninhabited marker: values of stub device types cannot exist.
+#[derive(Clone, Copy, Debug)]
+enum Never {}
+
+/// Error type mirroring the real crate's debug-printable error.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: no PJRT backend linked (specdelay built against the offline xla stub; \
+         see rust/README.md for enabling a real backend)"
+    ))
+}
+
+/// PJRT client handle (stub: creation always fails).
+pub struct PjRtClient {
+    _p: Never,
+}
+
+impl PjRtClient {
+    /// CPU client constructor — always errors in the stub.
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    /// Upload a host buffer to the device.
+    pub fn buffer_from_host_buffer<T: Copy>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer, Error> {
+        match self._p {}
+    }
+
+    /// Compile a computation into a loaded executable.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        match self._p {}
+    }
+}
+
+/// Device-resident buffer (stub: uninhabited).
+pub struct PjRtBuffer {
+    _p: Never,
+}
+
+impl PjRtBuffer {
+    /// Fetch the buffer contents back to the host as a literal.
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        match self._p {}
+    }
+}
+
+/// Compiled executable (stub: uninhabited).
+pub struct PjRtLoadedExecutable {
+    _p: Never,
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with borrowed argument buffers; returns per-device outputs.
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        match self._p {}
+    }
+}
+
+/// Parsed HLO module proto (stub: parsing always fails).
+pub struct HloModuleProto {
+    _p: Never,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation built from a module proto.
+pub struct XlaComputation {
+    _p: Never,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        match proto._p {}
+    }
+}
+
+/// Host-side literal value (stub: uninhabited).
+pub struct Literal {
+    _p: Never,
+}
+
+impl Literal {
+    /// Copy out as a typed host vector.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        match self._p {}
+    }
+
+    /// Destructure a tuple literal into its elements.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+        match self._p {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_report_missing_backend() {
+        let e = PjRtClient::cpu().err().expect("stub must fail");
+        assert!(e.0.contains("no PJRT backend"));
+        let e = HloModuleProto::from_text_file("x.hlo.txt").err().expect("stub must fail");
+        assert!(e.0.contains("no PJRT backend"));
+    }
+}
