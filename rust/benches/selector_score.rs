@@ -1,0 +1,182 @@
+//! Shared-branching Eq. 3 scorer microbenchmark (pure rust, no PJRT).
+//!
+//! Per trace root, two full-action-space scorers are timed at equal output
+//! (asserted before timing):
+//!
+//! * **legacy** — the frozen per-action scorer
+//!   (`selector::score_superset_per_action`): every one of the 324 actions
+//!   rebuilds its tree and recomputes every node's branching probabilities,
+//!   the O(|A|·nodes·vocab) pre-shared-branching cost model.
+//! * **shared** — `selector::score_superset_into` with a warm
+//!   `ScoreScratch` arena: one merged structure per trunk depth, one
+//!   branching computation per distinct (node, child-prefix), reach DP for
+//!   all actions.
+//!
+//! A threads-vs-throughput curve then drives the parallel scoring path
+//! (`par_map_init` with one arena per worker) that `collect_traces` uses.
+//! Emits a table plus machine-readable `BENCH_selector_score.json` at the
+//! repo root for the perf trajectory.
+//!
+//! Run: `cargo bench --bench selector_score`. Env overrides:
+//! `SELECTOR_SCORE_ROOTS` (default 4 timed roots),
+//! `SELECTOR_SCORE_VOCAB` (default 259, the byte-level testbed vocab).
+
+use std::time::Instant;
+
+use specdelay::selector::{
+    score_superset_into, score_superset_per_action, ScoreScratch, Superset,
+};
+use specdelay::util::json::{arr, num, obj, s, Json};
+use specdelay::util::threadpool::{default_workers, par_map_init};
+use specdelay::util::Pcg64;
+use specdelay::verify::OtlpSolver;
+
+#[path = "../tests/common/mod.rs"]
+mod common;
+
+use common::superset::{make_superset, ot_solvers};
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|x| x.parse().ok())
+        .unwrap_or(default)
+}
+
+fn seeded_supersets(n: usize, vocab: usize) -> Vec<Superset> {
+    let mut rng = Pcg64::seeded(0x5e1);
+    (0..n).map(|_| make_superset(&mut rng, vocab)).collect()
+}
+
+/// (legacy µs/root, shared µs/root) for one solver roster over `supersets`.
+fn time_pair(
+    supersets: &[Superset],
+    solvers: &[(&str, Box<dyn OtlpSolver>)],
+    shared_reps: usize,
+) -> (f64, f64) {
+    let n = supersets.len();
+    let t0 = Instant::now();
+    for ss in supersets {
+        let _ = score_superset_per_action(ss, solvers);
+    }
+    let legacy_us = t0.elapsed().as_secs_f64() / n as f64 * 1e6;
+
+    let mut scratch = ScoreScratch::default();
+    let mut table = Vec::new();
+    for ss in supersets {
+        score_superset_into(ss, solvers, &mut scratch, &mut table); // warm-up
+    }
+    let t0 = Instant::now();
+    for _ in 0..shared_reps {
+        for ss in supersets {
+            score_superset_into(ss, solvers, &mut scratch, &mut table);
+        }
+    }
+    let shared_us = t0.elapsed().as_secs_f64() / (n * shared_reps) as f64 * 1e6;
+    (legacy_us, shared_us)
+}
+
+fn main() {
+    let roots = env_usize("SELECTOR_SCORE_ROOTS", 4);
+    let vocab = env_usize("SELECTOR_SCORE_VOCAB", 259);
+    let shared_reps = 5usize;
+    let solvers = ot_solvers();
+    let supersets = seeded_supersets(roots, vocab);
+
+    // Equal output first: the speedup below is only meaningful if the two
+    // scorers agree on every (solver, action) entry.
+    let mut max_diff = 0.0f64;
+    {
+        let mut scratch = ScoreScratch::default();
+        let mut table = Vec::new();
+        for ss in &supersets {
+            let legacy = score_superset_per_action(ss, &solvers);
+            score_superset_into(ss, &solvers, &mut scratch, &mut table);
+            for (l_row, s_row) in legacy.iter().zip(&table) {
+                for (&l, &sv) in l_row.iter().zip(s_row) {
+                    max_diff = max_diff.max((l - sv).abs());
+                }
+            }
+        }
+    }
+    assert!(max_diff < 1e-9, "scorers disagree: max |Δ| = {max_diff}");
+
+    println!(
+        "{:<12} {:>16} {:>16} {:>10}",
+        "solver", "us/root legacy", "us/root shared", "speedup"
+    );
+    let mut per_solver: Vec<(&str, Json)> = Vec::new();
+    for one in solvers.chunks(1) {
+        let name = one[0].0;
+        let (l_us, s_us) = time_pair(&supersets, one, shared_reps);
+        println!("{name:<12} {l_us:>16.1} {s_us:>16.1} {:>9.2}x", l_us / s_us);
+        per_solver.push((
+            name,
+            obj(vec![
+                ("legacy_us_per_root", num(l_us)),
+                ("shared_us_per_root", num(s_us)),
+                ("speedup", num(l_us / s_us)),
+            ]),
+        ));
+    }
+    let (legacy_us, shared_us) = time_pair(&supersets, &solvers, shared_reps);
+    let speedup = legacy_us / shared_us;
+    println!(
+        "{:<12} {legacy_us:>16.1} {shared_us:>16.1} {speedup:>9.2}x",
+        "all-5"
+    );
+
+    // Threads-vs-throughput curve for the parallel scoring path. Each
+    // worker owns one ScoreScratch arena; results are discarded (the
+    // determinism tests assert they are bit-identical across counts).
+    let par_roots = (roots * 8).max(16);
+    let mut curve: Vec<Json> = Vec::new();
+    let mut base_rps = 0.0f64;
+    println!("\n{:<10} {:>14} {:>12}", "threads", "roots/sec", "scaling");
+    for threads in [1usize, 2, 4, 8] {
+        let batch = seeded_supersets(par_roots, vocab);
+        let t0 = Instant::now();
+        let done = par_map_init(batch, threads, ScoreScratch::default, |scratch, _i, ss| {
+            let mut table = Vec::new();
+            score_superset_into(&ss, &solvers, scratch, &mut table);
+            table.len()
+        });
+        let dt = t0.elapsed().as_secs_f64();
+        assert_eq!(done.len(), par_roots);
+        let rps = par_roots as f64 / dt;
+        if threads == 1 {
+            base_rps = rps;
+        }
+        println!("{threads:<10} {rps:>14.1} {:>11.2}x", rps / base_rps);
+        curve.push(obj(vec![
+            ("threads", num(threads as f64)),
+            ("roots_per_sec", num(rps)),
+            ("scaling_vs_1", num(rps / base_rps)),
+        ]));
+    }
+
+    let report = obj(vec![
+        ("schema", s("selector_score/v1")),
+        (
+            "config",
+            obj(vec![
+                ("vocab", num(vocab as f64)),
+                ("roots", num(roots as f64)),
+                ("shared_reps", num(shared_reps as f64)),
+                ("par_roots", num(par_roots as f64)),
+                ("solvers", num(solvers.len() as f64)),
+                ("machine_workers", num(default_workers() as f64)),
+            ]),
+        ),
+        ("max_abs_diff_vs_legacy", num(max_diff)),
+        ("legacy_us_per_root", num(legacy_us)),
+        ("shared_us_per_root", num(shared_us)),
+        ("speedup_vs_legacy", num(speedup)),
+        ("per_solver", obj(per_solver)),
+        ("threads_curve", arr(curve.into_iter())),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_selector_score.json");
+    std::fs::write(path, format!("{}\n", report.to_string_pretty())).expect("write bench json");
+    println!("\nfull-action-space speedup vs frozen legacy: {speedup:.2}x");
+    println!("wrote {path}");
+}

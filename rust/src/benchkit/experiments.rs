@@ -77,7 +77,13 @@ pub fn tables_2_3(scale: Scale) -> Result<(Vec<(String, Vec<f64>)>, Vec<(String,
             let avg = v.iter().sum::<f64>() / v.len() as f64;
             v.push(avg);
         }
-        rows.sort_by(|a, b| a.1.last().partial_cmp(&b.1.last()).unwrap());
+        // NaN-safe: a config whose sweep produced no finished blocks yields
+        // NaN means; total_cmp sorts those deterministically (NaN last)
+        // instead of panicking in partial_cmp.
+        rows.sort_by(|a, b| {
+            let (av, bv) = (a.1.last().copied(), b.1.last().copied());
+            av.unwrap_or(f64::NAN).total_cmp(&bv.unwrap_or(f64::NAN))
+        });
     }
     print_table("Table 2: average block efficiency", &["Qwen", "Gemma", "Llama", "Average"], &be_rows);
     print_table("Table 3: average throughput (tok/s)", &["Qwen", "Gemma", "Llama", "Average"], &tps_rows);

@@ -3,8 +3,17 @@
 //! route through these functions.
 //!
 //! Scale: `SPECDELAY_BENCH_SCALE=quick|std|full` controls prompt counts,
-//! generation lengths and grid sizes (quick is the default — the testbed is
-//! a single CPU core).
+//! generation lengths and grid sizes (quick is the default).
+//!
+//! Sweeps are data-parallel: [`run_config`] fans prompts out across
+//! workers and [`best_static`] fans out grid points, both through
+//! `util::threadpool::par_map_init`, whose contract (per-item seeded rng
+//! streams, order-preserving folds) makes every speculation outcome —
+//! tokens, blocks, block efficiency — **bit-identical** between serial and
+//! parallel runs. Wall-clock-derived tps is a measurement, not an outcome:
+//! under a parallel sweep it includes contention, so pin
+//! `SPECDELAY_THREADS=1` when per-prompt latency fidelity matters (that
+//! also forces the fully serial path).
 
 #[cfg(feature = "pjrt")]
 pub mod experiments;
@@ -141,7 +150,9 @@ pub struct ConfigResult {
     pub tps: Running,
 }
 
-/// Run one configuration over a prompt set.
+/// Run one configuration over a prompt set with the default worker count
+/// ([`crate::util::threadpool::default_workers`], `SPECDELAY_THREADS`
+/// override). Results are bit-identical to a serial run.
 #[cfg(feature = "pjrt")]
 #[allow(clippy::too_many_arguments)]
 pub fn run_config(
@@ -153,16 +164,67 @@ pub fn run_config(
     max_new: usize,
     seed: u64,
 ) -> Result<ConfigResult> {
+    let workers = crate::util::threadpool::default_workers();
+    run_config_threads(engine, verifier_name, policy, sampling, prompts, max_new, seed, workers)
+}
+
+/// Run one configuration over a prompt set on up to `workers` threads.
+///
+/// Each prompt already draws from its own seeded rng stream
+/// (`Pcg64::new(seed, prompt_index)`), so every *speculation outcome* —
+/// tokens, blocks, acceptances, and the block-efficiency metric — is
+/// independent of scheduling, and the fold below walks prompts in input
+/// order: those results are **bit-identical** between serial and parallel
+/// runs. The tps metric is a wall-clock *measurement* (it differs between
+/// any two runs, serial ones included); under a parallel sweep each
+/// prompt's wall time additionally includes contention with its
+/// neighbours, so for latency-faithful per-prompt tps numbers pin
+/// `SPECDELAY_THREADS=1`.
+///
+/// On a prompt failure the remaining workers stop picking up new prompts
+/// (already-running generations finish) and the failure is propagated.
+#[cfg(feature = "pjrt")]
+#[allow(clippy::too_many_arguments)]
+pub fn run_config_threads(
+    engine: &Engine,
+    verifier_name: &str,
+    policy: &dyn ActionPolicy,
+    sampling: SamplingConfig,
+    prompts: &[String],
+    max_new: usize,
+    seed: u64,
+    workers: usize,
+) -> Result<ConfigResult> {
+    use std::sync::atomic::{AtomicBool, Ordering};
     let verifier = verify::verifier(verifier_name)
         .ok_or_else(|| anyhow!("unknown verifier {verifier_name}"))?;
-    let spec = SpecEngine::new(engine, sampling);
+    let verifier = verifier.as_ref();
+    let failed = AtomicBool::new(false);
+    let per_prompt = crate::util::threadpool::par_map_init(
+        prompts.iter().collect::<Vec<&String>>(),
+        workers,
+        || SpecEngine::new(engine, sampling),
+        |spec, i, p| -> Result<Option<(f64, f64)>> {
+            if failed.load(Ordering::Relaxed) {
+                return Ok(None); // abandoned after an earlier failure
+            }
+            let mut rng = Pcg64::new(seed, i as u64);
+            match spec.generate(p, max_new, verifier, policy, &mut rng) {
+                Ok((_text, stats)) => {
+                    Ok((stats.blocks > 0).then(|| (stats.block_efficiency(), stats.tps())))
+                }
+                Err(e) => {
+                    failed.store(true, Ordering::Relaxed);
+                    Err(e)
+                }
+            }
+        },
+    );
     let mut out = ConfigResult::default();
-    for (i, p) in prompts.iter().enumerate() {
-        let mut rng = Pcg64::new(seed, i as u64);
-        let (_text, stats) = spec.generate(p, max_new, verifier.as_ref(), policy, &mut rng)?;
-        if stats.blocks > 0 {
-            out.block_eff.push(stats.block_efficiency());
-            out.tps.push(stats.tps());
+    for r in per_prompt {
+        if let Some((be, tps)) = r? {
+            out.block_eff.push(be);
+            out.tps.push(tps);
         }
     }
     Ok(out)
@@ -171,6 +233,14 @@ pub fn run_config(
 /// Best static i.i.d. configuration for a verifier (paper §4.2: select the
 /// (K, L) maximizing the metric). Returns (block_eff at best-be config,
 /// tps at best-tps config).
+///
+/// Grid points run in parallel (each point's prompt sweep stays serial to
+/// avoid nested fan-out); the best-of fold walks the grid in input order
+/// with the same `>` comparisons as the old serial loop, so winners and
+/// tie-breaks match a serial sweep wherever the compared metric is a
+/// deterministic speculation outcome (see [`run_config_threads`] for the
+/// tps caveat). A failing grid point stops the remaining queue and is
+/// propagated.
 #[cfg(feature = "pjrt")]
 #[allow(clippy::too_many_arguments)]
 pub fn best_static(
@@ -183,15 +253,47 @@ pub fn best_static(
     seed: u64,
     single_path_only: bool,
 ) -> Result<(f64, f64, Action, Action)> {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    // i.i.d. multipath = delayed tree with L1 = 0
+    let actions: Vec<Action> = grid
+        .iter()
+        .filter(|&&(k, _)| !(single_path_only && k != 1))
+        .map(|&(k, l)| if k == 1 { Action::new(1, l, 0) } else { Action::new(k, 0, l) })
+        .collect();
+    let failed = AtomicBool::new(false);
+    let results = crate::util::threadpool::par_map_init(
+        actions.clone(),
+        crate::util::threadpool::default_workers(),
+        || (),
+        |_state, _i, action| -> Result<Option<ConfigResult>> {
+            if failed.load(Ordering::Relaxed) {
+                return Ok(None); // abandoned after an earlier failure
+            }
+            let r = run_config_threads(
+                engine,
+                verifier_name,
+                &FixedPolicy(action),
+                sampling,
+                prompts,
+                max_new,
+                seed,
+                1,
+            );
+            match r {
+                Ok(v) => Ok(Some(v)),
+                Err(e) => {
+                    failed.store(true, Ordering::Relaxed);
+                    Err(e)
+                }
+            }
+        },
+    );
     let mut best_be = (f64::MIN, Action::new(1, 4, 0));
     let mut best_tps = (f64::MIN, Action::new(1, 4, 0));
-    for &(k, l) in grid {
-        if single_path_only && k != 1 {
-            continue;
-        }
-        // i.i.d. multipath = delayed tree with L1 = 0
-        let action = if k == 1 { Action::new(1, l, 0) } else { Action::new(k, 0, l) };
-        let r = run_config(engine, verifier_name, &FixedPolicy(action), sampling, prompts, max_new, seed)?;
+    for (action, r) in actions.into_iter().zip(results) {
+        let Some(r) = r? else {
+            continue; // abandoned point; the failing point's Err surfaces via `?`
+        };
         if r.block_eff.mean() > best_be.0 {
             best_be = (r.block_eff.mean(), action);
         }

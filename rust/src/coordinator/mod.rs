@@ -71,8 +71,9 @@ pub struct StepFeatures<'a> {
     pub sampling: SamplingConfig,
 }
 
-/// Chooses the delayed-expansion action each block.
-pub trait ActionPolicy {
+/// Chooses the delayed-expansion action each block. `Send + Sync` so one
+/// policy can drive every worker of a data-parallel prompt sweep.
+pub trait ActionPolicy: Send + Sync {
     fn choose(&self, feats: &StepFeatures<'_>) -> Action;
     /// Whether the policy needs the extra root draft-decode for features.
     fn needs_features(&self) -> bool {

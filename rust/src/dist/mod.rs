@@ -268,27 +268,49 @@ impl SamplingConfig {
 }
 
 /// Keep the smallest top-probability prefix with cumulative mass ≥ top_p
-/// (the token crossing the threshold is included), zero the rest, and
-/// renormalize the kept mass to 1.
+/// (the token crossing the threshold is included; ties break by token id),
+/// zero the rest, and renormalize the kept mass to 1.
+///
+/// Instead of fully sorting the vocabulary (O(V log V)), this bisects with
+/// `select_nth_unstable_by`: each round partitions the live window around
+/// its median rank and either commits the top half to the nucleus or
+/// discards the bottom half. The window halves every round, so the total
+/// partitioning work is O(V) and the cost past the first partition tracks
+/// the nucleus size, not the vocabulary size.
 fn nucleus(x: &mut [f32], top_p: f32, idx: &mut Vec<u32>) {
+    if x.is_empty() {
+        return;
+    }
     idx.clear();
     idx.extend(0..x.len() as u32);
-    idx.sort_unstable_by(|&a, &b| {
-        x[b as usize].total_cmp(&x[a as usize]).then(a.cmp(&b))
-    });
-    let mut cum = 0.0f64;
-    let mut keep = idx.len();
-    for (rank, &i) in idx.iter().enumerate() {
-        cum += x[i as usize] as f64;
-        if cum >= top_p as f64 {
-            keep = rank + 1;
-            break;
+    let desc = |a: &u32, b: &u32| {
+        x[*b as usize].total_cmp(&x[*a as usize]).then(a.cmp(b))
+    };
+    // Invariant: idx[..lo] is committed to the nucleus (mass `kept`), the
+    // crossing token lives in idx[lo..hi], and everything in idx[lo..hi]
+    // outranks everything in idx[hi..] under `desc`.
+    let mut lo = 0usize;
+    let mut hi = idx.len();
+    let mut kept = 0.0f64;
+    let mut need = top_p as f64;
+    while hi - lo > 1 {
+        let mid = lo + (hi - lo - 1) / 2;
+        idx[lo..hi].select_nth_unstable_by(mid - lo, desc);
+        let s: f64 = idx[lo..=mid].iter().map(|&i| x[i as usize] as f64).sum();
+        if s >= need {
+            hi = mid + 1;
+        } else {
+            kept += s;
+            need -= s;
+            lo = mid + 1;
         }
     }
+    kept += x[idx[lo] as usize] as f64; // the crossing token, always kept
+    let keep = lo + 1;
     for &i in &idx[keep..] {
         x[i as usize] = 0.0;
     }
-    let inv = (1.0 / cum.max(1e-30)) as f32;
+    let inv = (1.0 / kept.max(1e-30)) as f32;
     for &i in &idx[..keep] {
         x[i as usize] *= inv;
     }
@@ -340,6 +362,65 @@ mod tests {
         // top_p = 1 keeps everything
         let full = Dist::from_logits(&logits, SamplingConfig::new(1.0, 1.0));
         assert!(full.0.iter().all(|&v| v > 0.0));
+    }
+
+    /// The select_nth-based nucleus must keep exactly the same support as
+    /// the straightforward full-sort implementation, across sizes, ties,
+    /// and thresholds (including one the total mass never reaches).
+    #[test]
+    fn nucleus_matches_full_sort_reference() {
+        fn reference(x: &mut [f32], top_p: f32) {
+            let mut idx: Vec<u32> = (0..x.len() as u32).collect();
+            idx.sort_unstable_by(|&a, &b| {
+                x[b as usize].total_cmp(&x[a as usize]).then(a.cmp(&b))
+            });
+            let mut cum = 0.0f64;
+            let mut keep = idx.len();
+            for (rank, &i) in idx.iter().enumerate() {
+                cum += x[i as usize] as f64;
+                if cum >= top_p as f64 {
+                    keep = rank + 1;
+                    break;
+                }
+            }
+            for &i in &idx[keep..] {
+                x[i as usize] = 0.0;
+            }
+            let inv = (1.0 / cum.max(1e-30)) as f32;
+            for &i in &idx[..keep] {
+                x[i as usize] *= inv;
+            }
+        }
+        let mut rng = Pcg64::seeded(0x707);
+        let mut idx = Vec::new();
+        for case in 0..200usize {
+            let v = 1 + (case % 97);
+            let mut probs: Vec<f32> = (0..v).map(|_| rng.next_f32().powi(3) + 1e-5).collect();
+            if v > 4 {
+                probs[1] = probs[3]; // exercise the token-id tie-break
+            }
+            let sum: f32 = probs.iter().sum();
+            for p in probs.iter_mut() {
+                *p /= sum;
+            }
+            for &tp in &[0.1f32, 0.5, 0.75, 0.9, 0.999, 1.5] {
+                let mut a = probs.clone();
+                let mut b = probs.clone();
+                reference(&mut a, tp);
+                nucleus(&mut b, tp, &mut idx);
+                for (t, (&ra, &rb)) in a.iter().zip(&b).enumerate() {
+                    assert_eq!(
+                        ra == 0.0,
+                        rb == 0.0,
+                        "support mismatch: case {case} top_p {tp} token {t}"
+                    );
+                    assert!(
+                        (ra - rb).abs() < 1e-5,
+                        "value mismatch: case {case} top_p {tp} token {t}: {ra} vs {rb}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -6,9 +6,9 @@
 //! `execute_b`; per-call inputs (KV caches, tokens, uniforms) are uploaded
 //! per call. Executables are compiled lazily on first use and cached.
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, bail, Result};
 
@@ -31,7 +31,11 @@ pub struct Engine {
     pub meta: FamilyMeta,
     target_weights: Vec<xla::PjRtBuffer>,
     draft_weights: Vec<xla::PjRtBuffer>,
-    execs: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    /// Lazily compiled executables. A `Mutex` (not `RefCell`) so one
+    /// `Engine` can be shared across the data-parallel bench workers; the
+    /// lock is held across a cold-start compile (so racing workers don't
+    /// duplicate it) but never across a dispatch.
+    execs: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
 }
 
 impl Engine {
@@ -58,7 +62,7 @@ impl Engine {
             meta,
             target_weights,
             draft_weights,
-            execs: RefCell::new(HashMap::new()),
+            execs: Mutex::new(HashMap::new()),
         })
     }
 
@@ -76,9 +80,13 @@ impl Engine {
         }
     }
 
-    /// Compile (or fetch) an executable by entry name.
+    /// Compile (or fetch) an executable by entry name. The cache lock is
+    /// held across the compile so concurrent workers hitting the same cold
+    /// entry wait for one compilation instead of each redoing it; warm
+    /// calls only take the lock for a map lookup.
     fn exec_for(&self, name: &str) -> Result<()> {
-        if self.execs.borrow().contains_key(name) {
+        let mut execs = self.execs.lock().unwrap();
+        if execs.contains_key(name) {
             return Ok(());
         }
         let path = self.dir.join("hlo").join(format!("{name}.hlo.txt"));
@@ -91,7 +99,7 @@ impl Engine {
             .client
             .compile(&comp)
             .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
-        self.execs.borrow_mut().insert(name.to_string(), exe);
+        execs.insert(name.to_string(), Arc::new(exe));
         Ok(())
     }
 
@@ -120,8 +128,7 @@ impl Engine {
             };
             bufs.push(b);
         }
-        let execs = self.execs.borrow();
-        let exe = execs.get(name).expect("compiled above");
+        let exe = Arc::clone(self.execs.lock().unwrap().get(name).expect("compiled above"));
         let mut all: Vec<&xla::PjRtBuffer> = self.weights(role).iter().collect();
         all.extend(bufs.iter());
         let out = exe

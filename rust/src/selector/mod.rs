@@ -9,6 +9,7 @@
 //! loss (Eq. 12) and [`NeuralPolicy`] serves argmax actions online.
 
 pub mod mlp;
+pub mod score;
 
 use std::path::Path;
 #[cfg(feature = "pjrt")]
@@ -25,11 +26,17 @@ use crate::dist::Dist;
 use crate::draft::Action;
 #[cfg(feature = "pjrt")]
 use crate::runtime::{Engine, Role};
+#[cfg(feature = "pjrt")]
 use crate::tree::{DraftTree, Provenance};
 use crate::util::json::{arr, num, obj, Json};
 use crate::util::{Pcg64, Json as J};
+#[cfg(feature = "pjrt")]
 use crate::verify::OtlpSolver;
 use mlp::{softmax, SelectorNet};
+pub use score::{
+    expected_by_depth, expected_by_depth_into, score_superset, score_superset_into,
+    score_superset_per_action, BranchChain, ScoreScratch, Superset,
+};
 
 pub const K_MAX: usize = 4;
 pub const L1_MAX: usize = 8;
@@ -253,6 +260,12 @@ pub fn scalar_features(f: &StepFeatures<'_>, lat: &LatencyModel, max_seq: usize)
 // ---------------------------------------------------------------------------
 // Offline Ê[τ+1] estimation via superset trees (Eq. 3)
 // ---------------------------------------------------------------------------
+//
+// The estimators themselves live in [`score`]: `score_superset_into` is the
+// shared-branching scorer (build each superset structure once, cache every
+// node's branching probabilities per solver, derive all 324 actions by a
+// reach-prefix DP) and `score_superset_per_action` is the frozen per-action
+// baseline it is benchmarked and equality-tested against.
 
 /// One trace root: features + per-solver Ê table + T̂ table.
 pub struct TraceRoot {
@@ -264,124 +277,6 @@ pub struct TraceRoot {
     pub t_hat: Vec<f64>,
     pub temperature: f32,
     pub top_p: f32,
-}
-
-/// Cumulative expected accepted tokens by depth for one action tree:
-/// entry d = Σ over nodes of depth ≤ d of reach probability (Eq. 3 inner sum
-/// truncated at depth d).
-pub fn expected_by_depth(tree: &DraftTree, solver: &dyn OtlpSolver, max_depth: usize) -> Vec<f64> {
-    let mut reach = vec![0.0f64; tree.len()];
-    reach[0] = 1.0;
-    let mut per_depth = vec![0.0f64; max_depth + 1];
-    for node in 0..tree.len() {
-        if reach[node] <= 0.0 || tree.nodes[node].children.is_empty() {
-            continue;
-        }
-        let p = tree.nodes[node].p.as_ref().expect("p");
-        let q = tree.nodes[node].q.as_ref().expect("q");
-        let xs = tree.child_tokens(node);
-        let probs = solver.branching(p, q, &xs);
-        // duplicate child positions carry identical totals: credit each
-        // distinct child once, at its first occurrence
-        tree.for_each_distinct_child(node, |i, child| {
-            let pr = reach[node] * probs[i];
-            reach[child] += pr;
-            let d = tree.nodes[child].depth;
-            if d <= max_depth {
-                per_depth[d] += pr;
-            }
-        });
-    }
-    // cumulative
-    let mut acc = 0.0;
-    per_depth
-        .iter()
-        .map(|&v| {
-            acc += v;
-            acc
-        })
-        .collect()
-}
-
-/// A drafted superset sample: full trunk + K_MAX branches of L2_MAX at every
-/// trunk depth, with p/q at every node.
-pub struct Superset {
-    /// trunk node context tokens (root first)
-    pub trunk_tokens: Vec<u32>,
-    pub trunk_q: Vec<Dist>,
-    pub trunk_p: Vec<Dist>,
-    /// per trunk depth j (0..=L1_MAX): per branch b: token/q/p chains
-    pub branches: Vec<Vec<BranchChain>>,
-}
-
-pub struct BranchChain {
-    pub tokens: Vec<u32>,
-    pub q: Vec<Dist>,
-    pub p: Vec<Dist>,
-}
-
-/// Build the action tree (K, L1 = j, up to L2_MAX) from a superset sample
-/// and score it per depth.
-fn action_tree(ss: &Superset, j: usize, k: usize) -> DraftTree {
-    let mut tree = DraftTree::new(ss.trunk_tokens[0]);
-    let mut node = 0usize;
-    for d in 0..j {
-        tree.set_q(node, ss.trunk_q[d].clone());
-        tree.set_p(node, ss.trunk_p[d].clone());
-        node = tree.add_child(node, ss.trunk_tokens[d + 1], Provenance::Trunk { step: d + 1 });
-    }
-    let bp = node;
-    tree.set_p(bp, ss.trunk_p[j].clone());
-    for (b, chain) in ss.branches[j].iter().take(k).enumerate() {
-        let mut cur = bp;
-        for (s, &tok) in chain.tokens.iter().enumerate() {
-            if tree.nodes[cur].q.is_none() {
-                tree.set_q(cur, chain.q[s].clone());
-            }
-            if tree.nodes[cur].p.is_none() {
-                tree.set_p(cur, chain.p[s].clone());
-            }
-            cur = tree.add_child(cur, tok, Provenance::Branch { branch: b, step: s + 1 });
-            if s + 1 < chain.tokens.len() {
-                // deeper dists set on next iteration
-            }
-        }
-        // set p at the leaf if known
-        if tree.nodes[cur].p.is_none() && chain.p.len() > chain.tokens.len() {
-            tree.set_p(cur, chain.p[chain.tokens.len()].clone());
-        }
-    }
-    tree
-}
-
-/// Score one superset sample for every (solver, action): Ê accepted tokens.
-/// Returns per solver a vector aligned with `action_space()`.
-pub fn score_superset(ss: &Superset, solvers: &[(&str, Box<dyn OtlpSolver>)]) -> Vec<Vec<f64>> {
-    let actions = action_space();
-    let mut out = vec![vec![0.0f64; actions.len()]; solvers.len()];
-    for (si, (_name, solver)) in solvers.iter().enumerate() {
-        // trunk-only chain (K = 1): one tree with full trunk
-        let trunk_tree = action_tree(ss, L1_MAX, 1);
-        let trunk_cum = expected_by_depth(&trunk_tree, solver.as_ref(), L1_MAX);
-        // branched trees per (j, K)
-        let mut branched = vec![vec![Vec::new(); K_MAX + 1]; L1_MAX + 1];
-        for j in 0..=L1_MAX {
-            for k in 2..=K_MAX {
-                let t = action_tree(ss, j, k);
-                branched[j][k] = expected_by_depth(&t, solver.as_ref(), j + L2_MAX);
-            }
-        }
-        for (ai, a) in actions.iter().enumerate() {
-            let e = if a.k <= 1 || a.l2 == 0 {
-                let depth = (a.l1 + a.l2).min(L1_MAX);
-                trunk_cum[depth]
-            } else {
-                branched[a.l1][a.k][(a.l1 + a.l2).min(a.l1 + L2_MAX)]
-            };
-            out[si][ai] = e;
-        }
-    }
-    out
 }
 
 // ---------------------------------------------------------------------------
@@ -414,12 +309,28 @@ pub fn collect_traces(
                 let rf = spec.root_features(&mut seq)?;
                 let feats = rf.as_features(&seq, *sampling);
                 let scalars = scalar_features(&feats, lat, engine.meta.target.max_seq);
-                // Ê over s = 4 superset samples
-                let mut e_acc = vec![vec![0.0f64; actions.len()]; solvers.len()];
+                // Ê over s = 4 superset samples. Drafting stays serial (it
+                // advances the shared rng stream); scoring — the expensive
+                // part — fans out over workers, one ScoreScratch arena
+                // each. The accumulation below walks samples in draft
+                // order, so the table is bit-identical at any worker count.
+                let mut supersets = Vec::with_capacity(EQ3_SAMPLES);
                 for _ in 0..EQ3_SAMPLES {
-                    let ss = draft_superset(engine, &seq, *sampling, rng)?;
-                    let scored = score_superset(&ss, solvers);
-                    for (si, row) in scored.iter().enumerate() {
+                    supersets.push(draft_superset(engine, &seq, *sampling, rng)?);
+                }
+                let scored = crate::util::threadpool::par_map_init(
+                    supersets,
+                    crate::util::threadpool::default_workers(),
+                    ScoreScratch::default,
+                    |scratch, _i, ss| {
+                        let mut table = Vec::new();
+                        score_superset_into(&ss, solvers, scratch, &mut table);
+                        table
+                    },
+                );
+                let mut e_acc = vec![vec![0.0f64; actions.len()]; solvers.len()];
+                for table in &scored {
+                    for (si, row) in table.iter().enumerate() {
                         for (ai, v) in row.iter().enumerate() {
                             e_acc[si][ai] += v / EQ3_SAMPLES as f64;
                         }

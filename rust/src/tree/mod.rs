@@ -220,12 +220,15 @@ impl DraftTree {
     /// Visit the first occurrence of each distinct child of `node` as
     /// `(position_in_child_list, child_index)`, in first-appearance order.
     ///
-    /// O(k) and allocation-free. This is the single home of the
+    /// O(k) and allocation-free. This is the home of the
     /// first-occurrence-increasing index invariant (module docs): an
     /// occurrence is a duplicate exactly when it does not exceed the
     /// running maximum of children seen so far. Every consumer that needs
-    /// per-distinct-child iteration (Eq. 3 estimators, accessors) routes
-    /// through here so the invariant is exploited in one place only.
+    /// per-distinct-child iteration over a `DraftTree` (Eq. 3 estimators,
+    /// accessors) routes through here; the one external replica is the
+    /// reach DP in `selector::score`, whose `MergedBranches` upholds the
+    /// same invariant (a child's first edge is its creation) and documents
+    /// the dependency at the dedup site.
     pub fn for_each_distinct_child<F: FnMut(usize, usize)>(&self, node: usize, mut f: F) {
         let mut max_seen: Option<usize> = None;
         for (i, &c) in self.nodes[node].children.iter().enumerate() {

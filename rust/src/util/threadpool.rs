@@ -1,13 +1,131 @@
-//! Fixed-size worker pool over std threads (no tokio in this environment).
+//! Fixed-size worker pool plus the deterministic data-parallel layer
+//! (no tokio in this environment).
 //!
-//! The serving coordinator uses it for request handling; benches use
-//! `scope_map` for simple data-parallel sweeps.
+//! The serving coordinator uses [`ThreadPool`] for request handling. Every
+//! data-parallel sweep in the crate (benchkit's `run_config` over prompts,
+//! `best_static` over grid points, superset scoring over Eq. 3 samples, the
+//! bench harnesses) routes through [`par_map_init`], whose contract makes
+//! serial and parallel runs produce **bit-identical** results.
+//!
+//! ## Determinism contract
+//!
+//! `par_map_init(items, workers, init, f)` maps `f` over `items` with up to
+//! `workers` threads. Each worker owns one *contiguous chunk* of the input,
+//! builds its private state once via `init` (scratch arenas, buffers), and
+//! writes results into a disjoint slice of the output — order-preserving
+//! with no per-slot lock and no work-stealing races. `f` receives the
+//! item's **global index**, so randomized work derives its stream from the
+//! index (`Pcg64::new(seed, index)`), never from the worker or from
+//! iteration order. Under that contract the result vector is identical for
+//! every worker count, including 1 (the serial path is the same code).
+//! State handed out by `init` must act as scratch only: results must not
+//! depend on which items previously used the state.
+//!
+//! Static chunking trades load balancing for simplicity and cache-local
+//! writes: a heavily skewed workload degenerates toward the slowest
+//! chunk's serial time. If that ever dominates a sweep, a work-queue
+//! variant with the same index-seeded contract (output slot = item index)
+//! would stay bit-identical — determinism does not depend on the
+//! schedule, only on the contract above.
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Worker count for data-parallel sweeps: `SPECDELAY_THREADS=n` with
+/// n ≥ 1 pins the count (1 forces the serial path); `0`, unset, or an
+/// unparsable value mean "auto" — the machine's available parallelism.
+pub fn default_workers() -> usize {
+    match std::env::var("SPECDELAY_THREADS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+    {
+        Some(n) if n >= 1 => n,
+        _ => thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    }
+}
+
+/// Deterministic data-parallel map with per-worker init state.
+///
+/// See the module docs for the determinism contract. `init` runs once per
+/// worker (on that worker's thread); `f(state, index, item)` runs for every
+/// item with its global index. Results come back in input order.
+pub fn par_map_init<T, R, S, I, F>(items: Vec<T>, workers: usize, init: I, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize, T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, n);
+    if workers == 1 {
+        let mut state = init();
+        return items
+            .into_iter()
+            .enumerate()
+            .map(|(i, t)| f(&mut state, i, t))
+            .collect();
+    }
+
+    // Contiguous chunk per worker (first `n % workers` chunks get one
+    // extra item), so the output can be pre-split into disjoint slices.
+    let base = n / workers;
+    let extra = n % workers;
+    let mut chunks: Vec<Vec<T>> = Vec::with_capacity(workers);
+    let mut starts: Vec<usize> = Vec::with_capacity(workers);
+    {
+        let mut it = items.into_iter();
+        let mut start = 0usize;
+        for w in 0..workers {
+            let len = base + usize::from(w < extra);
+            starts.push(start);
+            chunks.push(it.by_ref().take(len).collect());
+            start += len;
+        }
+    }
+
+    let mut out: Vec<Option<R>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    {
+        let mut slices: Vec<&mut [Option<R>]> = Vec::with_capacity(workers);
+        let mut rest = out.as_mut_slice();
+        for chunk in &chunks {
+            let (head, tail) = rest.split_at_mut(chunk.len());
+            slices.push(head);
+            rest = tail;
+        }
+        let init = &init;
+        let f = &f;
+        thread::scope(|scope| {
+            for ((chunk, slice), start) in chunks.into_iter().zip(slices).zip(starts) {
+                scope.spawn(move || {
+                    let mut state = init();
+                    for (off, t) in chunk.into_iter().enumerate() {
+                        slice[off] = Some(f(&mut state, start + off, t));
+                    }
+                });
+            }
+        });
+    }
+    out.into_iter()
+        .map(|r| r.expect("worker filled every slot"))
+        .collect()
+}
+
+/// Map `f` over `items` with up to `workers` threads, preserving order.
+/// Stateless convenience wrapper over [`par_map_init`].
+pub fn scope_map<T: Send, R: Send, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
+where
+    F: Fn(T) -> R + Sync,
+{
+    par_map_init(items, workers, || (), |_state, _i, t| f(t))
+}
 
 /// A basic thread pool with graceful shutdown on drop.
 pub struct ThreadPool {
@@ -56,37 +174,10 @@ impl Drop for ThreadPool {
     }
 }
 
-/// Map `f` over `items` with up to `workers` scoped threads, preserving order.
-pub fn scope_map<T: Send, R: Send, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
-where
-    F: Fn(T) -> R + Sync,
-{
-    let n = items.len();
-    let mut results: Vec<Option<R>> = (0..n).map(|_| None).collect();
-    let work: Vec<(usize, T)> = items.into_iter().enumerate().collect();
-    let queue = Mutex::new(work);
-    let slots = Mutex::new(&mut results);
-
-    thread::scope(|scope| {
-        for _ in 0..workers.max(1).min(n.max(1)) {
-            scope.spawn(|| loop {
-                let item = queue.lock().unwrap().pop();
-                match item {
-                    Some((i, t)) => {
-                        let r = f(t);
-                        slots.lock().unwrap()[i] = Some(r);
-                    }
-                    None => break,
-                }
-            });
-        }
-    });
-    results.into_iter().map(|r| r.expect("all items done")).collect()
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::Pcg64;
     use std::sync::atomic::{AtomicUsize, Ordering};
 
     #[test]
@@ -115,5 +206,50 @@ mod tests {
     fn scope_map_empty() {
         let out: Vec<i32> = scope_map(Vec::<i32>::new(), 4, |x| x);
         assert!(out.is_empty());
+    }
+
+    /// Index-seeded randomized work must come out bit-identical for every
+    /// worker count — the determinism contract the bench harness relies on.
+    #[test]
+    fn par_map_init_bit_identical_across_worker_counts() {
+        let work = |state: &mut Vec<f64>, i: usize, x: u64| -> f64 {
+            // scratch state is reused across items but must not leak
+            state.clear();
+            let mut rng = Pcg64::new(0xD0, i as u64);
+            for _ in 0..64 {
+                state.push(rng.next_f64() * x as f64);
+            }
+            state.iter().sum()
+        };
+        let items: Vec<u64> = (1..=97).collect();
+        let serial = par_map_init(items.clone(), 1, Vec::new, work);
+        for workers in [2, 3, 5, 8, 200] {
+            let par = par_map_init(items.clone(), workers, Vec::new, work);
+            assert_eq!(serial, par, "workers = {workers}");
+        }
+    }
+
+    #[test]
+    fn par_map_init_runs_init_once_per_worker() {
+        let inits = AtomicUsize::new(0);
+        let out = par_map_init(
+            (0..40).collect::<Vec<usize>>(),
+            4,
+            || {
+                inits.fetch_add(1, Ordering::SeqCst);
+            },
+            |_state, i, x| {
+                assert_eq!(i, x);
+                x * 2
+            },
+        );
+        assert_eq!(out, (0..40).map(|x| x * 2).collect::<Vec<_>>());
+        assert_eq!(inits.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn par_map_init_more_workers_than_items() {
+        let out = par_map_init((0..3).collect::<Vec<i32>>(), 16, || (), |_state, _i, x| x + 1);
+        assert_eq!(out, vec![1, 2, 3]);
     }
 }

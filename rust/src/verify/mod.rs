@@ -183,6 +183,30 @@ pub trait OtlpSolver: Send + Sync {
         self.branching_into(p, q, xs, &mut out);
         out
     }
+
+    /// Branching-cache entry point: probabilities for several leading
+    /// prefixes of `xs` in one call, **appended** flat to `out` (prefix i
+    /// occupies `prefix_lens[i]` values starting after all earlier
+    /// prefixes; the caller records offsets). `tmp` is per-prefix scratch.
+    ///
+    /// The shared-branching Eq. 3 scorer (`selector::score`) calls this
+    /// once per (node, solver) with the distinct child-list prefix lengths
+    /// the action space induces, and caches the values for every action —
+    /// the sharing that removes the per-action O(vocab) recomputation.
+    fn branching_prefixes_into(
+        &self,
+        p: &Dist,
+        q: &Dist,
+        xs: &[u32],
+        prefix_lens: &[usize],
+        out: &mut Vec<f64>,
+        tmp: &mut Vec<f64>,
+    ) {
+        for &len in prefix_lens {
+            self.branching_into(p, q, &xs[..len], tmp);
+            out.extend_from_slice(tmp);
+        }
+    }
 }
 
 /// Generic top-down OT walk (paper §3.2).
@@ -249,33 +273,59 @@ impl<S: OtlpSolver> Verifier for OtVerifier<S> {
     }
 }
 
+/// Reusable scratch for the Eq. 3 reach-probability estimators
+/// ([`expected_accepted_into`], `selector::expected_by_depth_into`, and the
+/// shared-branching scorer's per-node buffers). All capacity persists
+/// across calls, so warm calls allocate nothing.
+#[derive(Clone, Debug, Default)]
+pub struct Eq3Scratch {
+    /// Per-node reach probability (∏ branching along the root path).
+    pub reach: Vec<f64>,
+    /// Child-token gather buffer.
+    pub xs: Vec<u32>,
+    /// Branching-probability output buffer.
+    pub probs: Vec<f64>,
+}
+
 /// Expected number of accepted tokens from walking the tree with a solver's
 /// branching probabilities (the inner sum of paper Eq. 3): Σ over non-root
-/// nodes of ∏ branching probabilities along the path.
-pub fn expected_accepted(tree: &DraftTree, solver: &dyn OtlpSolver) -> f64 {
-    let mut reach = vec![0.0f64; tree.len()];
-    reach[0] = 1.0;
+/// nodes of ∏ branching probabilities along the path. All working memory
+/// comes from `scratch` — zero allocations once it is warm.
+pub fn expected_accepted_into(
+    tree: &DraftTree,
+    solver: &dyn OtlpSolver,
+    scratch: &mut Eq3Scratch,
+) -> f64 {
+    scratch.reach.clear();
+    scratch.reach.resize(tree.len(), 0.0);
+    scratch.reach[0] = 1.0;
     let mut total = 0.0f64;
-    let mut xs: Vec<u32> = Vec::new();
-    let mut probs: Vec<f64> = Vec::new();
     for node in 0..tree.len() {
-        if reach[node] <= 0.0 || tree.nodes[node].children.is_empty() {
+        if scratch.reach[node] <= 0.0 || tree.nodes[node].children.is_empty() {
             continue;
         }
         let p = tree.nodes[node].p.as_ref().expect("p dist set");
         let q = tree.nodes[node].q.as_ref().expect("q dist set");
-        tree.child_tokens_into(node, &mut xs);
-        solver.branching_into(p, q, &xs, &mut probs);
+        tree.child_tokens_into(node, &mut scratch.xs);
+        solver.branching_into(p, q, &scratch.xs, &mut scratch.probs);
         // Sum duplicate positions per distinct child once: positions carrying
         // the same token all hold the same total probability of the solver
         // outputting that token, so take the value at the first occurrence.
+        let reach_node = scratch.reach[node];
+        let probs = &scratch.probs;
+        let reach = &mut scratch.reach;
         tree.for_each_distinct_child(node, |i, child| {
-            let pr = reach[node] * probs[i];
+            let pr = reach_node * probs[i];
             reach[child] += pr;
             total += pr;
         });
     }
     total
+}
+
+/// Allocating convenience wrapper over [`expected_accepted_into`].
+pub fn expected_accepted(tree: &DraftTree, solver: &dyn OtlpSolver) -> f64 {
+    expected_accepted_into(tree, solver, &mut Eq3Scratch::default())
 }
 
 /// All eight verifiers by paper name.

@@ -1,8 +1,16 @@
-//! Shared support for the allocation test (`tests/alloc_free.rs`) and the
-//! `verify_hot` bench: the counting global allocator and the synthetic
-//! delayed-tree workload. Keeping these in one module guarantees the
-//! configuration the zero-allocation test asserts is exactly the one the
-//! bench measures.
+//! Shared support for the integration tests and the default-build benches:
+//! the counting global allocator, the synthetic delayed-tree workload
+//! (`tests/alloc_free.rs` + `benches/verify_hot.rs`), and the synthetic
+//! superset workload (`tests/selector_score.rs` +
+//! `benches/selector_score.rs`, see [`superset`]). Keeping these in one
+//! module guarantees the configuration the tests assert is exactly the one
+//! the benches measure.
+//!
+//! Each including binary uses a subset of these helpers, hence the
+//! module-wide dead_code allowance.
+#![allow(dead_code)]
+
+pub mod superset;
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};

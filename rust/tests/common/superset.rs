@@ -1,0 +1,45 @@
+//! Synthetic superset samples and the OT solver roster for the
+//! selector-score bench and the shared-vs-per-action equality tests (pure
+//! rust, no PJRT, no model artifacts).
+
+use specdelay::dist::Dist;
+use specdelay::selector::{BranchChain, Superset, K_MAX, L1_MAX, L2_MAX};
+use specdelay::util::Pcg64;
+use specdelay::verify::{self, OtlpSolver};
+
+use super::random_dist;
+
+/// The five distinct OT solvers, in `benchkit::experiments::OT_ALGOS`
+/// spirit ("NaiveTree" shares the "Naive" solver and is omitted).
+pub fn ot_solvers() -> Vec<(&'static str, Box<dyn OtlpSolver>)> {
+    ["NSS", "Naive", "SpecTr", "SpecInfer", "Khisti"]
+        .iter()
+        .map(|&n| (n, verify::ot_solver(n).expect("known solver")))
+        .collect()
+}
+
+/// Draft-shaped superset sample over a synthetic vocabulary: full trunk of
+/// L1_MAX plus K_MAX chains of L2_MAX at every trunk depth, p and q at
+/// every node. Chain tokens are drawn from sharp draft distributions so
+/// chains share prefixes often enough to exercise the scorers' merge and
+/// duplicate-child paths.
+pub fn make_superset(rng: &mut Pcg64, v: usize) -> Superset {
+    let trunk_q: Vec<Dist> = (0..L1_MAX).map(|_| random_dist(v, rng, 1.0)).collect();
+    let trunk_p: Vec<Dist> = (0..=L1_MAX).map(|_| random_dist(v, rng, 2.0)).collect();
+    let mut trunk_tokens = vec![rng.next_below(v) as u32];
+    for q in &trunk_q {
+        trunk_tokens.push(q.sample(rng) as u32);
+    }
+    let mut branches = Vec::with_capacity(L1_MAX + 1);
+    for _j in 0..=L1_MAX {
+        let mut per_branch = Vec::with_capacity(K_MAX);
+        for _b in 0..K_MAX {
+            let q: Vec<Dist> = (0..L2_MAX).map(|_| random_dist(v, rng, 6.0)).collect();
+            let p: Vec<Dist> = (0..=L2_MAX).map(|_| random_dist(v, rng, 2.0)).collect();
+            let tokens: Vec<u32> = q.iter().map(|d| d.sample(rng) as u32).collect();
+            per_branch.push(BranchChain { tokens, q, p });
+        }
+        branches.push(per_branch);
+    }
+    Superset { trunk_tokens, trunk_q, trunk_p, branches }
+}

@@ -1,0 +1,107 @@
+//! Equality and determinism guarantees for the shared-branching Eq. 3
+//! scorer and the data-parallel layer:
+//!
+//! * the shared scorer's Ê table matches the frozen per-action scorer to
+//!   1e-12 on seeded superset samples (all five OT solvers);
+//! * `par_map_init` results are bit-identical to the serial path for every
+//!   worker count, both on a synthetic rng workload and on real superset
+//!   scoring with per-worker `ScoreScratch` arenas;
+//! * the `_into` scratch variants replay their allocating wrappers exactly.
+
+mod common;
+
+use common::superset::{make_superset, ot_solvers};
+use common::make_tree;
+use specdelay::selector::{
+    action_space, score_superset, score_superset_into, score_superset_per_action, ScoreScratch,
+    Superset,
+};
+use specdelay::util::threadpool::par_map_init;
+use specdelay::util::Pcg64;
+use specdelay::verify::{expected_accepted, expected_accepted_into, Eq3Scratch};
+
+fn seeded_supersets(n: usize, vocab: usize, seed: u64) -> Vec<Superset> {
+    let mut rng = Pcg64::seeded(seed);
+    (0..n).map(|_| make_superset(&mut rng, vocab)).collect()
+}
+
+#[test]
+fn shared_scorer_matches_frozen_per_action_scorer() {
+    let solvers = ot_solvers();
+    let n_actions = action_space().len();
+    for (case, ss) in seeded_supersets(2, 40, 0x5c0e).iter().enumerate() {
+        let legacy = score_superset_per_action(ss, &solvers);
+        let shared = score_superset(ss, &solvers);
+        assert_eq!(legacy.len(), solvers.len());
+        assert_eq!(shared.len(), solvers.len());
+        for (si, (l_row, s_row)) in legacy.iter().zip(&shared).enumerate() {
+            assert_eq!(l_row.len(), n_actions);
+            assert_eq!(s_row.len(), n_actions);
+            for (ai, (&l, &s)) in l_row.iter().zip(s_row).enumerate() {
+                assert!(
+                    (l - s).abs() <= 1e-12,
+                    "case {case} solver {} action {ai}: per-action {l} vs shared {s}",
+                    solvers[si].0
+                );
+            }
+        }
+    }
+}
+
+/// A warm scratch arena must not leak state between samples: scoring the
+/// same sample with a cold and a heavily reused arena is bit-identical.
+#[test]
+fn score_scratch_reuse_is_stateless() {
+    let solvers = ot_solvers();
+    let supersets = seeded_supersets(3, 40, 0xA3);
+    let mut warm = ScoreScratch::default();
+    let mut table = Vec::new();
+    for ss in &supersets {
+        score_superset_into(ss, &solvers, &mut warm, &mut table);
+    }
+    // warm arena, re-scored in reverse order, vs a cold arena each time
+    for ss in supersets.iter().rev() {
+        score_superset_into(ss, &solvers, &mut warm, &mut table);
+        let cold = score_superset(ss, &solvers);
+        assert_eq!(table, cold);
+    }
+}
+
+#[test]
+fn parallel_superset_scoring_bit_identical_to_serial() {
+    let solvers = ot_solvers();
+    let score_all = |workers: usize| -> Vec<Vec<Vec<f64>>> {
+        par_map_init(
+            seeded_supersets(6, 32, 0xBB),
+            workers,
+            ScoreScratch::default,
+            |scratch, _i, ss| {
+                let mut table = Vec::new();
+                score_superset_into(&ss, &solvers, scratch, &mut table);
+                table
+            },
+        )
+    };
+    let serial = score_all(1);
+    assert_eq!(serial.len(), 6);
+    for workers in [2, 3, 8] {
+        assert_eq!(serial, score_all(workers), "workers = {workers}");
+    }
+}
+
+#[test]
+fn expected_accepted_into_replays_allocating_wrapper() {
+    let mut rng = Pcg64::seeded(0xEA);
+    let mut scratch = Eq3Scratch::default();
+    for case in 0..4 {
+        let tree = make_tree(&mut rng, 64);
+        for (name, solver) in ot_solvers() {
+            let a = expected_accepted(&tree, solver.as_ref());
+            let b = expected_accepted_into(&tree, solver.as_ref(), &mut scratch);
+            let c = expected_accepted_into(&tree, solver.as_ref(), &mut scratch);
+            assert_eq!(a, b, "case {case} {name}: cold scratch");
+            assert_eq!(b, c, "case {case} {name}: warm scratch");
+            assert!(a.is_finite() && a >= 0.0, "case {case} {name}: {a}");
+        }
+    }
+}
