@@ -1,0 +1,285 @@
+//! Dense-vs-sparse distribution-kernel harness (pure rust, no PJRT).
+//!
+//! Measures the tentpole representation change across the grid the issue
+//! names — vocab sizes {8k, 32k, 128k} × top-p {0.8, 0.95, 1.0} — at two
+//! levels:
+//!
+//! * **per kernel**: µs/op for overlap, l1, kl, residual and sampling on
+//!   nucleus-truncated distribution pairs, dense vs sparse, with an
+//!   equal-output assertion (≤1e-6) before anything is timed;
+//! * **per verifier**: steady-state µs/verify for all eight verifiers on
+//!   dense trees vs their sparse twins, with seeded-rng verdict-equality
+//!   asserted per configuration.
+//!
+//! Every entry carries `speedup_vs_dense`. Emits a human table plus
+//! `BENCH_dist_kernels.json` at the repo root (CI smoke-runs it and uploads
+//! the JSON next to the other bench artifacts).
+//!
+//! Run: `cargo bench --bench dist_kernels` (`DIST_KERNELS_ITERS` overrides
+//! the kernel iteration base; verifier iterations scale down with vocab).
+
+use std::time::Instant;
+
+use specdelay::dist::{Dist, SparseDist};
+use specdelay::tree::DraftTree;
+use specdelay::util::json::{arr, num, obj, s, Json};
+use specdelay::util::Pcg64;
+use specdelay::verify::{self, Verdict, VerifyScratch};
+
+#[path = "../tests/common/mod.rs"]
+mod common;
+
+use common::{make_topp_tree, random_topp_dist, sparsify_tree};
+
+const VOCABS: [usize; 3] = [8_192, 32_768, 131_072];
+const TOP_PS: [f32; 3] = [0.8, 0.95, 1.0];
+const PAIRS: usize = 8;
+const TREES: usize = 4;
+
+fn time_us(iters: usize, mut f: impl FnMut(usize)) -> f64 {
+    for i in 0..8.min(iters) {
+        f(i); // warm-up: capacity, pages, branch predictors
+    }
+    let t0 = Instant::now();
+    for i in 0..iters {
+        f(i);
+    }
+    t0.elapsed().as_secs_f64() / iters as f64 * 1e6
+}
+
+struct KernelRow {
+    vocab: usize,
+    top_p: f32,
+    kernel: &'static str,
+    dense_us: f64,
+    sparse_us: f64,
+    support_mean: f64,
+}
+
+struct VerifierRow {
+    vocab: usize,
+    top_p: f32,
+    verifier: &'static str,
+    dense_us: f64,
+    sparse_us: f64,
+}
+
+fn main() {
+    let base_iters: usize = std::env::var("DIST_KERNELS_ITERS")
+        .ok()
+        .and_then(|x| x.parse().ok())
+        .unwrap_or(200);
+    let mut rng = Pcg64::seeded(0xd1);
+    let mut kernel_rows: Vec<KernelRow> = Vec::new();
+    let mut verifier_rows: Vec<VerifierRow> = Vec::new();
+    let names = ["NSS", "Naive", "NaiveTree", "SpecTr", "SpecInfer", "Khisti", "BV", "Traversal"];
+    let mut equal_output_checks = 0usize;
+
+    println!(
+        "{:<8} {:>6} {:>12} {:>12} {:>12} {:>10} {:>12}",
+        "vocab", "top_p", "kernel", "us/dense", "us/sparse", "speedup", "support"
+    );
+
+    for &vocab in &VOCABS {
+        for &top_p in &TOP_PS {
+            // ---- kernel pairs: dense + sparse twins, equality-checked ----
+            let dense_pairs: Vec<(Dist, Dist)> = (0..PAIRS)
+                .map(|_| {
+                    (
+                        random_topp_dist(vocab, &mut rng, top_p),
+                        random_topp_dist(vocab, &mut rng, top_p),
+                    )
+                })
+                .collect();
+            let sparse_pairs: Vec<(SparseDist, SparseDist)> = dense_pairs
+                .iter()
+                .map(|(p, q)| (SparseDist::from_dense(p), SparseDist::from_dense(q)))
+                .collect();
+            let support_mean = sparse_pairs
+                .iter()
+                .map(|(p, q)| (p.support_len() + q.support_len()) as f64 / 2.0)
+                .sum::<f64>()
+                / PAIRS as f64;
+
+            // equal-output assertion before timing anything
+            let mut dense_buf = Dist::default();
+            let mut sparse_buf = SparseDist::default();
+            for ((pd, qd), (ps, qs)) in dense_pairs.iter().zip(&sparse_pairs) {
+                assert!(
+                    (Dist::overlap(pd, qd) - SparseDist::overlap(ps, qs)).abs() <= 1e-6,
+                    "overlap mismatch at vocab {vocab} top_p {top_p}"
+                );
+                assert!(
+                    (Dist::l1(pd, qd) - SparseDist::l1(ps, qs)).abs() <= 1e-6,
+                    "l1 mismatch at vocab {vocab} top_p {top_p}"
+                );
+                assert!(
+                    (pd.kl(qd) - ps.kl(qs)).abs() <= 1e-6,
+                    "kl mismatch at vocab {vocab} top_p {top_p}"
+                );
+                let od = Dist::residual_into(pd, qd, &mut dense_buf);
+                let os = SparseDist::residual_into(ps, qs, &mut sparse_buf);
+                assert_eq!(od, os, "residual flag mismatch at vocab {vocab} top_p {top_p}");
+                if od {
+                    let sd = sparse_buf.to_dense();
+                    for (t, (&a, &b)) in dense_buf.0.iter().zip(&sd.0).enumerate() {
+                        assert!(
+                            (a - b).abs() <= 1e-6,
+                            "residual[{t}] mismatch at vocab {vocab} top_p {top_p}"
+                        );
+                    }
+                }
+                equal_output_checks += 1;
+            }
+
+            let kernels: Vec<(&'static str, f64, f64)> = {
+                let it = base_iters;
+                let overlap_d = time_us(it, |i| {
+                    let (p, q) = &dense_pairs[i % PAIRS];
+                    std::hint::black_box(Dist::overlap(p, q));
+                });
+                let overlap_s = time_us(it, |i| {
+                    let (p, q) = &sparse_pairs[i % PAIRS];
+                    std::hint::black_box(SparseDist::overlap(p, q));
+                });
+                let l1_d = time_us(it, |i| {
+                    let (p, q) = &dense_pairs[i % PAIRS];
+                    std::hint::black_box(Dist::l1(p, q));
+                });
+                let l1_s = time_us(it, |i| {
+                    let (p, q) = &sparse_pairs[i % PAIRS];
+                    std::hint::black_box(SparseDist::l1(p, q));
+                });
+                let kl_d = time_us(it, |i| {
+                    let (p, q) = &dense_pairs[i % PAIRS];
+                    std::hint::black_box(p.kl(q));
+                });
+                let kl_s = time_us(it, |i| {
+                    let (p, q) = &sparse_pairs[i % PAIRS];
+                    std::hint::black_box(p.kl(q));
+                });
+                let res_d = time_us(it, |i| {
+                    let (p, q) = &dense_pairs[i % PAIRS];
+                    std::hint::black_box(Dist::residual_into(p, q, &mut dense_buf));
+                });
+                let res_s = time_us(it, |i| {
+                    let (p, q) = &sparse_pairs[i % PAIRS];
+                    std::hint::black_box(SparseDist::residual_into(p, q, &mut sparse_buf));
+                });
+                let mut srng = Pcg64::seeded(7);
+                let sample_d = time_us(it, |i| {
+                    let (p, _) = &dense_pairs[i % PAIRS];
+                    std::hint::black_box(p.sample(&mut srng));
+                });
+                let mut srng = Pcg64::seeded(7);
+                let sample_s = time_us(it, |i| {
+                    let (p, _) = &sparse_pairs[i % PAIRS];
+                    std::hint::black_box(p.sample(&mut srng));
+                });
+                vec![
+                    ("overlap", overlap_d, overlap_s),
+                    ("l1", l1_d, l1_s),
+                    ("kl", kl_d, kl_s),
+                    ("residual_into", res_d, res_s),
+                    ("sample", sample_d, sample_s),
+                ]
+            };
+            for (kernel, dense_us, sparse_us) in kernels {
+                println!(
+                    "{vocab:<8} {top_p:>6.2} {kernel:>12} {dense_us:>12.3} {sparse_us:>12.3} {:>9.2}x {support_mean:>12.0}",
+                    dense_us / sparse_us
+                );
+                kernel_rows.push(KernelRow { vocab, top_p, kernel, dense_us, sparse_us, support_mean });
+            }
+            drop(dense_pairs);
+            drop(sparse_pairs);
+
+            // ---- per-verifier µs/verify, dense vs sparse twins ----
+            let dense_trees: Vec<DraftTree> =
+                (0..TREES).map(|_| make_topp_tree(&mut rng, vocab, top_p)).collect();
+            let sparse_trees: Vec<DraftTree> = dense_trees.iter().map(sparsify_tree).collect();
+            let v_iters = (base_iters * VOCABS[0] / (8 * vocab)).max(2);
+            for name in names {
+                let ver = verify::verifier(name).unwrap();
+                // verdict equality under seeded rng (the bench's equal-output
+                // assertion for the walk itself)
+                for seed in 0..3u64 {
+                    let mut r1 = Pcg64::seeded(seed);
+                    let mut r2 = Pcg64::seeded(seed);
+                    let a = ver.verify(&dense_trees[0], &mut r1);
+                    let b = ver.verify(&sparse_trees[0], &mut r2);
+                    assert_eq!(a.accepted, b.accepted, "{name}: accepted diverged");
+                    assert_eq!(a.correction, b.correction, "{name}: correction diverged");
+                    equal_output_checks += 1;
+                }
+                let mut scratch = VerifyScratch::new();
+                scratch.reserve(vocab, 16, 8);
+                let mut verdict = Verdict::default();
+                let mut drng = Pcg64::seeded(2);
+                let dense_us = time_us(v_iters, |i| {
+                    ver.verify_into(&dense_trees[i % TREES], &mut drng, &mut scratch, &mut verdict);
+                });
+                let mut srng = Pcg64::seeded(2);
+                let sparse_us = time_us(v_iters, |i| {
+                    ver.verify_into(&sparse_trees[i % TREES], &mut srng, &mut scratch, &mut verdict);
+                });
+                println!(
+                    "{vocab:<8} {top_p:>6.2} {name:>12} {dense_us:>12.2} {sparse_us:>12.2} {:>9.2}x {:>12}",
+                    dense_us / sparse_us, "-"
+                );
+                verifier_rows.push(VerifierRow { vocab, top_p, verifier: name, dense_us, sparse_us });
+            }
+        }
+    }
+
+    let kernel_json: Vec<Json> = kernel_rows
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("vocab", num(r.vocab as f64)),
+                ("top_p", num(r.top_p as f64)),
+                ("kernel", s(r.kernel)),
+                ("dense_us", num(r.dense_us)),
+                ("sparse_us", num(r.sparse_us)),
+                ("speedup_vs_dense", num(r.dense_us / r.sparse_us)),
+                ("support_mean", num(r.support_mean)),
+            ])
+        })
+        .collect();
+    let verifier_json: Vec<Json> = verifier_rows
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("vocab", num(r.vocab as f64)),
+                ("top_p", num(r.top_p as f64)),
+                ("verifier", s(r.verifier)),
+                ("dense_us_per_verify", num(r.dense_us)),
+                ("sparse_us_per_verify", num(r.sparse_us)),
+                ("speedup_vs_dense", num(r.dense_us / r.sparse_us)),
+            ])
+        })
+        .collect();
+
+    let report = obj(vec![
+        ("schema", s("dist_kernels/v1")),
+        (
+            "config",
+            obj(vec![
+                ("vocabs", arr(VOCABS.iter().map(|&v| num(v as f64)))),
+                ("top_ps", arr(TOP_PS.iter().map(|&p| num(p as f64)))),
+                ("pairs", num(PAIRS as f64)),
+                ("trees", num(TREES as f64)),
+                ("kernel_iters", num(base_iters as f64)),
+                ("tree_shape", s("K=3 L1=2 L2=3 (12 nodes)")),
+            ]),
+        ),
+        ("equal_output_checks", num(equal_output_checks as f64)),
+        ("equal_output_assertion", s("enabled")),
+        ("kernels", arr(kernel_json)),
+        ("verifiers", arr(verifier_json)),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_dist_kernels.json");
+    std::fs::write(path, format!("{}\n", report.to_string_pretty())).expect("write bench json");
+    println!("\n{equal_output_checks} equal-output checks passed");
+    println!("wrote {path}");
+}

@@ -41,7 +41,7 @@ static GLOBAL: CountingAlloc = CountingAlloc;
 // ---------------------------------------------------------------------------
 
 mod legacy {
-    use specdelay::dist::Dist;
+    use specdelay::dist::{Dist, NodeDist};
     use specdelay::tree::DraftTree;
     use specdelay::util::Pcg64;
     use specdelay::verify::{khisti, OtlpSolver};
@@ -184,7 +184,18 @@ mod legacy {
         sample(&p_cur, rng) as u32
     }
 
-    fn solve(name: &str, p: &Dist, q: &Dist, xs: &[u32], rng: &mut Pcg64) -> u32 {
+    /// `p_nd`/`q_nd` are the tree's stored dists, handed through *borrowed*
+    /// so the Khisti arm (whose baseline is the current allocating entry)
+    /// adds no wrapping clones to the frozen measurement.
+    fn solve(
+        name: &str,
+        p: &Dist,
+        q: &Dist,
+        p_nd: &NodeDist,
+        q_nd: &NodeDist,
+        xs: &[u32],
+        rng: &mut Pcg64,
+    ) -> u32 {
         match name {
             "NSS" => solve_nss(p, rng),
             "Naive" | "NaiveTree" => solve_naive(p, q, xs, rng),
@@ -192,24 +203,26 @@ mod legacy {
             "SpecInfer" => solve_specinfer(p, q, xs, rng),
             // Khisti's coupling construction is shared with the current
             // implementation; its baseline is the allocating entry point.
-            "Khisti" => khisti::Khisti.solve(p, q, xs, rng),
+            "Khisti" => khisti::Khisti.solve(p_nd, q_nd, xs, rng),
             other => panic!("no legacy solver for {other}"),
         }
     }
 
     /// Pre-bootstrap OT walk: allocates child-token vectors per node and a
-    /// fresh accepted vector per verify.
+    /// fresh accepted vector per verify. Frozen baseline — dense trees only.
     pub fn verify_ot(name: &str, tree: &DraftTree, rng: &mut Pcg64) -> (Vec<usize>, u32) {
         let mut accepted = Vec::new();
         let mut node = 0usize;
         loop {
-            let p = tree.nodes[node].p.as_ref().expect("p dist set");
+            let p_nd = tree.nodes[node].p.as_ref().expect("p dist set");
+            let p = p_nd.as_dense().expect("legacy baseline walks dense trees");
             if tree.nodes[node].children.is_empty() {
                 return (accepted, sample(p, rng) as u32);
             }
-            let q = tree.nodes[node].q.as_ref().expect("q dist set");
+            let q_nd = tree.nodes[node].q.as_ref().expect("q dist set");
+            let q = q_nd.as_dense().expect("legacy baseline walks dense trees");
             let xs = tree.child_tokens(node);
-            let y = solve(name, p, q, &xs, rng);
+            let y = solve(name, p, q, p_nd, q_nd, &xs, rng);
             match tree.child_with_token(node, y) {
                 Some(child) => {
                     accepted.push(child);
@@ -300,8 +313,8 @@ fn main() {
         // branching calculator (OT only), reused out-buffer
         let branching_us = if let Some(solver) = verify::ot_solver(name) {
             let mut brng = Pcg64::seeded(3);
-            let p = random_dist(v, &mut brng, 2.0);
-            let q = random_dist(v, &mut brng, 1.0);
+            let p = specdelay::dist::NodeDist::from(random_dist(v, &mut brng, 2.0));
+            let q = specdelay::dist::NodeDist::from(random_dist(v, &mut brng, 1.0));
             let xs: Vec<u32> = (0..4).map(|_| q.sample(&mut brng) as u32).collect();
             let mut out: Vec<f64> = Vec::new();
             let st = bench_path(iters, |_| {

@@ -12,7 +12,7 @@ use super::{
     run_config, ConfigResult, Scale, DOMAINS, FAMILIES,
 };
 use crate::coordinator::{FixedPolicy, SpecEngine};
-use crate::dist::{Dist, SamplingConfig};
+use crate::dist::{DistStorage, NodeDist, SamplingConfig};
 use crate::draft::Action;
 use crate::runtime::Engine;
 use crate::selector::{
@@ -145,8 +145,12 @@ pub fn figure_1(scale: Scale, family: &str) -> Result<Vec<(String, Vec<f64>)>> {
                     seq.root_pos,
                 )?;
                 let v = engine.meta.target.vocab;
+                let storage = DistStorage::global();
                 for i in 0..tree.len() {
-                    tree.set_p(i, Dist::from_logits(&out.logits[i * v..(i + 1) * v], sampling));
+                    tree.set_p(
+                        i,
+                        NodeDist::from_logits(&out.logits[i * v..(i + 1) * v], sampling, storage),
+                    );
                 }
                 for i in 0..tree.len() {
                     let d = tree.nodes[i].depth;
@@ -155,11 +159,13 @@ pub fn figure_1(scale: Scale, family: &str) -> Result<Vec<(String, Vec<f64>)>> {
                     }
                     let p = tree.nodes[i].p.as_ref().unwrap();
                     let q = tree.nodes[i].q.as_ref().unwrap();
-                    l1_by_depth[d].push(Dist::l1(p, q) as f64);
+                    l1_by_depth[d].push(NodeDist::l1(p, q) as f64);
+                    // the acceptance calculators are dense-only (cold path)
+                    let (pd, qd) = (p.to_dense(), q.to_dense());
                     for &s in &solvers {
                         let solver = verify::ot_solver(s).unwrap();
                         acc_by_depth.get_mut(s).unwrap()[d]
-                            .push(solver.acceptance_rate(p, q, k));
+                            .push(solver.acceptance_rate(&pd, &qd, k));
                     }
                 }
                 collected += 1;

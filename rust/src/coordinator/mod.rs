@@ -16,7 +16,7 @@ mod spec;
 #[cfg(feature = "pjrt")]
 pub use spec::{generate_autoregressive, RootFeatures, Sequence, SpecEngine};
 
-use crate::dist::{Dist, SamplingConfig};
+use crate::dist::{NodeDist, SamplingConfig};
 use crate::draft::Action;
 
 /// Per-block statistics.
@@ -64,9 +64,9 @@ pub struct StepFeatures<'a> {
     pub hidden_p_prev: &'a [f32],
     pub hidden_q_prev: &'a [f32],
     pub hidden_q_cur: &'a [f32],
-    pub p_prev: &'a Dist,
-    pub q_prev: &'a Dist,
-    pub q_root: &'a Dist,
+    pub p_prev: &'a NodeDist,
+    pub q_prev: &'a NodeDist,
+    pub q_root: &'a NodeDist,
     pub ctx_len: usize,
     pub sampling: SamplingConfig,
 }

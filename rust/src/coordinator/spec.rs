@@ -9,7 +9,7 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use super::{ActionPolicy, BlockStats, GenStats, StepFeatures};
-use crate::dist::{Dist, SamplingConfig};
+use crate::dist::{DistStorage, NodeDist, SamplingConfig};
 use crate::draft::{accepted_row_extent, draft_delayed, Action};
 use crate::kvcache::KvCache;
 use crate::runtime::{Engine, Role};
@@ -29,8 +29,8 @@ pub struct Sequence {
     // selector feature memory (previous verified node)
     pub prev_hidden_target: Vec<f32>,
     pub prev_hidden_draft: Vec<f32>,
-    pub prev_p: Dist,
-    pub prev_q: Dist,
+    pub prev_p: NodeDist,
+    pub prev_q: NodeDist,
     /// Reusable verification arena: warm after the first block, so every
     /// later verify call allocates nothing.
     pub scratch: VerifyScratch,
@@ -68,8 +68,9 @@ impl<'a> SpecEngine<'a> {
         target_kv.commit_prefill(&t_out.k_rows, &t_out.v_rows, s_pre, len);
         draft_kv.commit_prefill(&d_out.k_rows, &d_out.v_rows, s_pre, len);
 
-        let p0 = Dist::from_logits(&t_out.logits, self.sampling);
-        let q0 = Dist::from_logits(&d_out.logits, self.sampling);
+        let storage = DistStorage::global();
+        let p0 = NodeDist::from_logits(&t_out.logits, self.sampling, storage);
+        let q0 = NodeDist::from_logits(&d_out.logits, self.sampling, storage);
         let mut scratch = VerifyScratch::default();
         scratch.reserve(self.engine.meta.target.vocab, 32, 8);
         let mut verdict = Verdict::default();
@@ -159,8 +160,12 @@ impl<'a> SpecEngine<'a> {
             seq.root_pos,
         )?;
         let v = meta.target.vocab;
+        let storage = DistStorage::global();
         for i in 0..tree.len() {
-            tree.set_p(i, Dist::from_logits(&out.logits[i * v..(i + 1) * v], self.sampling));
+            tree.set_p(
+                i,
+                NodeDist::from_logits(&out.logits[i * v..(i + 1) * v], self.sampling, storage),
+            );
         }
         let tree_secs = t1.elapsed().as_secs_f64();
 
@@ -311,7 +316,7 @@ impl<'a> SpecEngine<'a> {
         )?;
         Ok(RootFeatures {
             hidden_q_cur: d.hidden,
-            q_root: Dist::from_logits(&d.logits, self.sampling),
+            q_root: NodeDist::from_logits(&d.logits, self.sampling, DistStorage::global()),
         })
     }
 }
@@ -319,7 +324,7 @@ impl<'a> SpecEngine<'a> {
 /// Root features needing a fresh draft pass.
 pub struct RootFeatures {
     pub hidden_q_cur: Vec<f32>,
-    pub q_root: Dist,
+    pub q_root: NodeDist,
 }
 
 impl RootFeatures {
@@ -396,7 +401,7 @@ pub fn generate_autoregressive(
             .decode(Role::Target, &seq.target_kv.k, &seq.target_kv.v, root, seq.root_pos)
             .map_err(|e| anyhow!(e))?;
         seq.target_kv.commit_row(&out.k_row, &out.v_row, seq.root_pos);
-        let p = Dist::from_logits(&out.logits, sampling);
+        let p = NodeDist::from_logits(&out.logits, sampling, DistStorage::global());
         let tok = p.sample(rng) as u32;
         seq.tokens.push(tok);
         seq.root_pos += 1;

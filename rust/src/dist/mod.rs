@@ -1,4 +1,4 @@
-//! Dense token distributions and the sampling transforms applied to logits.
+//! Token distributions and the sampling transforms applied to logits.
 //!
 //! This is the performance-first kernel layer under the verification walk:
 //! every per-block operation the verifiers run (sampling, residuals,
@@ -8,10 +8,49 @@
 //! `tests/alloc_free.rs`). The allocating wrappers remain for tests and
 //! cold paths.
 //!
-//! Probabilities are dense `f32` over the (small, byte-level) vocabulary;
-//! accumulations run in `f64` for stability.
+//! Two representations coexist:
+//!
+//! * [`Dist`] — dense `f32` over the vocabulary, `f64` accumulations. The
+//!   reference implementation and the equality oracle.
+//! * [`SparseDist`] — sorted support ids + probabilities, O(|support|)
+//!   kernels, bit-identical results (see `sparse.rs` for the exactness
+//!   contract). The default for tree/superset storage; the env knob
+//!   `SPECDELAY_DENSE_DISTS=1` selects the dense oracle instead (see
+//!   [`DistStorage`]).
+//!
+//! [`NodeDist`] is the storage enum the tree, scorer and verifiers carry,
+//! dispatching each kernel to whichever representation a node holds.
+
+mod sparse;
+
+pub use sparse::SparseDist;
 
 use crate::util::Pcg64;
+
+/// Which representation newly constructed node distributions use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DistStorage {
+    Dense,
+    Sparse,
+}
+
+impl DistStorage {
+    /// Process-wide default storage: sparse, unless `SPECDELAY_DENSE_DISTS`
+    /// is set to `1`/`true` (the dense oracle path). Read once and cached.
+    pub fn global() -> DistStorage {
+        static STORAGE: std::sync::OnceLock<DistStorage> = std::sync::OnceLock::new();
+        *STORAGE.get_or_init(|| {
+            let dense = std::env::var("SPECDELAY_DENSE_DISTS")
+                .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
+                .unwrap_or(false);
+            if dense {
+                DistStorage::Dense
+            } else {
+                DistStorage::Sparse
+            }
+        })
+    }
+}
 
 /// A dense probability distribution over token ids `0..len`.
 ///
@@ -115,21 +154,36 @@ impl Dist {
     }
 
     /// Overlap Σ_t min(p(t), q(t)) — the k = 1 naive acceptance rate.
+    ///
+    /// Runs over the zipped common prefix only: a token past the shorter
+    /// dist contributes min(x, 0) = 0 (entries are non-negative), and the
+    /// slice zip lets the compiler drop per-element bounds checks.
     pub fn overlap(p: &Dist, q: &Dist) -> f32 {
-        let n = p.len().max(q.len());
+        let n = p.len().min(q.len());
         let mut s = 0.0f64;
-        for t in 0..n {
-            s += p.p(t).min(q.p(t)) as f64;
+        for (&a, &b) in p.0[..n].iter().zip(&q.0[..n]) {
+            s += a.min(b) as f64;
         }
         s as f32
     }
 
     /// L1 distance Σ_t |p(t) − q(t)|.
+    ///
+    /// Zipped common prefix plus the remaining tail slice (at most one of
+    /// the two tails is non-empty, where the other dist is implicitly 0) —
+    /// same accumulation order as the old 0..max(len) loop, without the
+    /// bounds-checked `p(t)` accessor.
     pub fn l1(p: &Dist, q: &Dist) -> f32 {
-        let n = p.len().max(q.len());
+        let n = p.len().min(q.len());
         let mut s = 0.0f64;
-        for t in 0..n {
-            s += (p.p(t) - q.p(t)).abs() as f64;
+        for (&a, &b) in p.0[..n].iter().zip(&q.0[..n]) {
+            s += (a - b).abs() as f64;
+        }
+        for &a in &p.0[n..] {
+            s += a.abs() as f64;
+        }
+        for &b in &q.0[n..] {
+            s += b.abs() as f64;
         }
         s as f32
     }
@@ -185,7 +239,7 @@ impl Dist {
     ) {
         out.0.clear();
         out.0.extend_from_slice(logits);
-        cfg.transform_logits(&mut out.0, idx_scratch);
+        let _ = cfg.transform_logits(&mut out.0, idx_scratch);
     }
 
     /// Allocating wrapper over [`Dist::from_logits_into`].
@@ -219,9 +273,13 @@ impl SamplingConfig {
     /// then nucleus truncation when `top_p < 1`. `idx_scratch` is only used
     /// (and only grows) on the nucleus path. `temperature <= 0` takes the
     /// greedy limit: a one-hot at the argmax.
-    pub fn transform_logits(&self, x: &mut [f32], idx_scratch: &mut Vec<u32>) {
+    ///
+    /// Returns `Some(keep)` when the nucleus ran: `idx_scratch[..keep]`
+    /// then holds exactly the kept token ids (unsorted), which is what lets
+    /// [`SparseDist::from_logits_into`] gather the support for free.
+    pub fn transform_logits(&self, x: &mut [f32], idx_scratch: &mut Vec<u32>) -> Option<usize> {
         if x.is_empty() {
-            return;
+            return None;
         }
         if self.temperature <= 0.0 {
             let mut best = 0usize;
@@ -234,7 +292,7 @@ impl SamplingConfig {
                 *v = 0.0;
             }
             x[best] = 1.0;
-            return;
+            return None;
         }
         let inv_t = 1.0 / self.temperature;
         let mut max = f32::NEG_INFINITY;
@@ -249,7 +307,7 @@ impl SamplingConfig {
             for v in x.iter_mut() {
                 *v = u;
             }
-            return;
+            return None;
         }
         let mut sum = 0.0f64;
         for v in x.iter_mut() {
@@ -262,14 +320,17 @@ impl SamplingConfig {
             *v *= inv;
         }
         if self.top_p < 1.0 {
-            nucleus(x, self.top_p, idx_scratch);
+            Some(nucleus(x, self.top_p, idx_scratch))
+        } else {
+            None
         }
     }
 }
 
 /// Keep the smallest top-probability prefix with cumulative mass ≥ top_p
 /// (the token crossing the threshold is included; ties break by token id),
-/// zero the rest, and renormalize the kept mass to 1.
+/// zero the rest, and renormalize the kept mass to 1. Returns the number of
+/// kept tokens; `idx[..keep]` holds their ids.
 ///
 /// Instead of fully sorting the vocabulary (O(V log V)), this bisects with
 /// `select_nth_unstable_by`: each round partitions the live window around
@@ -277,9 +338,9 @@ impl SamplingConfig {
 /// discards the bottom half. The window halves every round, so the total
 /// partitioning work is O(V) and the cost past the first partition tracks
 /// the nucleus size, not the vocabulary size.
-fn nucleus(x: &mut [f32], top_p: f32, idx: &mut Vec<u32>) {
+fn nucleus(x: &mut [f32], top_p: f32, idx: &mut Vec<u32>) -> usize {
     if x.is_empty() {
-        return;
+        return 0;
     }
     idx.clear();
     idx.extend(0..x.len() as u32);
@@ -313,6 +374,269 @@ fn nucleus(x: &mut [f32], top_p: f32, idx: &mut Vec<u32>) {
     let inv = (1.0 / kept.max(1e-30)) as f32;
     for &i in &idx[..keep] {
         x[i as usize] *= inv;
+    }
+    keep
+}
+
+// ---------------------------------------------------------------------------
+// NodeDist: the storage enum the tree / scorer / verifiers carry
+// ---------------------------------------------------------------------------
+
+/// A node distribution in either representation.
+///
+/// The hot kernels dispatch on the pair of representations: (dense, dense)
+/// runs the [`Dist`] reference kernels, (sparse, sparse) the O(|support|)
+/// [`SparseDist`] kernels. Mixed pairs are a construction error everywhere
+/// except the Khisti solver (whose transportation LP densifies its inputs)
+/// and abort with a clear panic — trees and supersets are always built in
+/// one storage mode (see [`DistStorage`]).
+#[derive(Clone, Debug, PartialEq)]
+pub enum NodeDist {
+    Dense(Dist),
+    Sparse(SparseDist),
+}
+
+impl Default for NodeDist {
+    fn default() -> NodeDist {
+        NodeDist::Dense(Dist::default())
+    }
+}
+
+impl From<Dist> for NodeDist {
+    fn from(d: Dist) -> NodeDist {
+        NodeDist::Dense(d)
+    }
+}
+
+impl From<SparseDist> for NodeDist {
+    fn from(s: SparseDist) -> NodeDist {
+        NodeDist::Sparse(s)
+    }
+}
+
+/// Abort on a mixed dense/sparse kernel pair (see [`NodeDist`] docs).
+#[cold]
+#[inline(never)]
+pub(crate) fn mixed_repr() -> ! {
+    panic!(
+        "mixed dense/sparse distribution pair: build each tree/superset in \
+         one storage mode (DistStorage) — only the Khisti solver accepts \
+         mixed inputs"
+    )
+}
+
+impl NodeDist {
+    /// Dense length (vocabulary size).
+    pub fn len(&self) -> usize {
+        match self {
+            NodeDist::Dense(d) => d.len(),
+            NodeDist::Sparse(s) => s.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, NodeDist::Sparse(_))
+    }
+
+    /// Number of stored (positive) entries: O(1) sparse, O(vocab) dense.
+    pub fn support_len(&self) -> usize {
+        match self {
+            NodeDist::Dense(d) => d.0.iter().filter(|&&v| v > 0.0).count(),
+            NodeDist::Sparse(s) => s.support_len(),
+        }
+    }
+
+    pub fn as_dense(&self) -> Option<&Dist> {
+        match self {
+            NodeDist::Dense(d) => Some(d),
+            NodeDist::Sparse(_) => None,
+        }
+    }
+
+    pub fn as_sparse(&self) -> Option<&SparseDist> {
+        match self {
+            NodeDist::Dense(_) => None,
+            NodeDist::Sparse(s) => Some(s),
+        }
+    }
+
+    /// Borrow the dense slot, switching representation if needed (the
+    /// switch allocates; a stable stream of one representation never does).
+    pub fn make_dense_mut(&mut self) -> &mut Dist {
+        if !matches!(self, NodeDist::Dense(_)) {
+            *self = NodeDist::Dense(Dist::default());
+        }
+        match self {
+            NodeDist::Dense(d) => d,
+            NodeDist::Sparse(_) => unreachable!(),
+        }
+    }
+
+    /// Borrow the sparse slot, switching representation if needed.
+    pub fn make_sparse_mut(&mut self) -> &mut SparseDist {
+        if !matches!(self, NodeDist::Sparse(_)) {
+            *self = NodeDist::Sparse(SparseDist::default());
+        }
+        match self {
+            NodeDist::Dense(_) => unreachable!(),
+            NodeDist::Sparse(s) => s,
+        }
+    }
+
+    /// Switch to `storage`'s representation (if needed) and pre-size it for
+    /// `vocab`-length content — the scratch-warming entry: reserving the
+    /// variant the stream will actually use keeps the first real call from
+    /// discarding the reservation.
+    pub fn reserve_as(&mut self, vocab: usize, storage: DistStorage) {
+        match storage {
+            DistStorage::Dense => self.make_dense_mut().0.reserve(vocab),
+            DistStorage::Sparse => {
+                let s = self.make_sparse_mut();
+                s.ids.reserve(vocab);
+                s.ps.reserve(vocab);
+            }
+        }
+    }
+
+    /// Densify into `out` (copy for dense, scatter for sparse).
+    pub fn densify_into(&self, out: &mut Dist) {
+        match self {
+            NodeDist::Dense(d) => out.copy_from(d),
+            NodeDist::Sparse(s) => s.densify_into(out),
+        }
+    }
+
+    /// Allocating dense copy.
+    pub fn to_dense(&self) -> Dist {
+        let mut out = Dist::default();
+        self.densify_into(&mut out);
+        out
+    }
+
+    /// Convert to the sparse representation (identity when already sparse).
+    pub fn sparsify(&self) -> NodeDist {
+        match self {
+            NodeDist::Dense(d) => NodeDist::Sparse(SparseDist::from_dense(d)),
+            NodeDist::Sparse(s) => NodeDist::Sparse(s.clone()),
+        }
+    }
+
+    /// Replace contents with a copy of `src`. Representation-preserving and
+    /// allocation-free when the variants already match.
+    pub fn copy_from(&mut self, src: &NodeDist) {
+        match (self, src) {
+            (NodeDist::Dense(d), NodeDist::Dense(s)) => d.copy_from(s),
+            (NodeDist::Sparse(d), NodeDist::Sparse(s)) => d.copy_from(s),
+            (me, src) => *me = src.clone(),
+        }
+    }
+
+    /// Probability of token `t` (0 outside the support).
+    #[inline]
+    pub fn p(&self, t: usize) -> f32 {
+        match self {
+            NodeDist::Dense(d) => d.p(t),
+            NodeDist::Sparse(s) => s.p(t),
+        }
+    }
+
+    /// Draw a token index ([`Dist::sample`] semantics in both reps).
+    pub fn sample(&self, rng: &mut Pcg64) -> usize {
+        match self {
+            NodeDist::Dense(d) => d.sample(rng),
+            NodeDist::Sparse(s) => s.sample(rng),
+        }
+    }
+
+    pub fn argmax(&self) -> usize {
+        match self {
+            NodeDist::Dense(d) => d.argmax(),
+            NodeDist::Sparse(s) => s.argmax(),
+        }
+    }
+
+    pub fn entropy(&self) -> f32 {
+        match self {
+            NodeDist::Dense(d) => d.entropy(),
+            NodeDist::Sparse(s) => s.entropy(),
+        }
+    }
+
+    pub fn kl(&self, other: &NodeDist) -> f32 {
+        match (self, other) {
+            (NodeDist::Dense(a), NodeDist::Dense(b)) => a.kl(b),
+            (NodeDist::Sparse(a), NodeDist::Sparse(b)) => a.kl(b),
+            _ => mixed_repr(),
+        }
+    }
+
+    pub fn overlap(p: &NodeDist, q: &NodeDist) -> f32 {
+        match (p, q) {
+            (NodeDist::Dense(a), NodeDist::Dense(b)) => Dist::overlap(a, b),
+            (NodeDist::Sparse(a), NodeDist::Sparse(b)) => SparseDist::overlap(a, b),
+            _ => mixed_repr(),
+        }
+    }
+
+    pub fn l1(p: &NodeDist, q: &NodeDist) -> f32 {
+        match (p, q) {
+            (NodeDist::Dense(a), NodeDist::Dense(b)) => Dist::l1(a, b),
+            (NodeDist::Sparse(a), NodeDist::Sparse(b)) => SparseDist::l1(a, b),
+            _ => mixed_repr(),
+        }
+    }
+
+    pub fn tv(p: &NodeDist, q: &NodeDist) -> f32 {
+        0.5 * NodeDist::l1(p, q)
+    }
+
+    /// Normalized residual ∝ (p − q)_+ into `out` (representation follows
+    /// `p`); false on zero residual mass, matching [`Dist::residual_into`].
+    pub fn residual_into(p: &NodeDist, q: &NodeDist, out: &mut NodeDist) -> bool {
+        match (p, q) {
+            (NodeDist::Dense(a), NodeDist::Dense(b)) => {
+                Dist::residual_into(a, b, out.make_dense_mut())
+            }
+            (NodeDist::Sparse(a), NodeDist::Sparse(b)) => {
+                SparseDist::residual_into(a, b, out.make_sparse_mut())
+            }
+            _ => mixed_repr(),
+        }
+    }
+
+    /// Allocating wrapper over [`NodeDist::residual_into`].
+    pub fn residual(p: &NodeDist, q: &NodeDist) -> Option<NodeDist> {
+        let mut out = match p {
+            NodeDist::Dense(_) => NodeDist::Dense(Dist::default()),
+            NodeDist::Sparse(_) => NodeDist::Sparse(SparseDist::default()),
+        };
+        if NodeDist::residual_into(p, q, &mut out) {
+            Some(out)
+        } else {
+            None
+        }
+    }
+
+    /// Gather a dense probability slice into the requested storage.
+    pub fn from_probs(probs: &[f32], storage: DistStorage) -> NodeDist {
+        match storage {
+            DistStorage::Dense => NodeDist::Dense(Dist(probs.to_vec())),
+            DistStorage::Sparse => NodeDist::Sparse(SparseDist::from_probs(probs)),
+        }
+    }
+
+    /// Transform raw logits into the sampled-from distribution in the
+    /// requested storage (the nucleus support is gathered for free on the
+    /// sparse path).
+    pub fn from_logits(logits: &[f32], cfg: SamplingConfig, storage: DistStorage) -> NodeDist {
+        match storage {
+            DistStorage::Dense => NodeDist::Dense(Dist::from_logits(logits, cfg)),
+            DistStorage::Sparse => NodeDist::Sparse(SparseDist::from_logits(logits, cfg)),
+        }
     }
 }
 
@@ -479,6 +803,50 @@ mod tests {
         assert!(close(p.entropy(), std::f32::consts::LN_2, 1e-6));
         assert!(p.kl(&p).abs() < 1e-7);
         assert!(p.kl(&q) > 0.0);
+    }
+
+    #[test]
+    fn node_dist_dispatch() {
+        let d = Dist(vec![0.0, 0.25, 0.75]);
+        let dense = NodeDist::from(d.clone());
+        let sparse = dense.sparsify();
+        assert!(!dense.is_sparse() && sparse.is_sparse());
+        assert_eq!(dense.len(), 3);
+        assert_eq!(sparse.len(), 3);
+        assert_eq!(dense.support_len(), 2);
+        assert_eq!(sparse.support_len(), 2);
+        assert_eq!(dense.p(2), sparse.p(2));
+        assert_eq!(dense.argmax(), sparse.argmax());
+        assert_eq!(dense.entropy(), sparse.entropy());
+        assert_eq!(sparse.to_dense(), d);
+        // representation-preserving copy_from, plus cross-variant switch
+        let mut buf = NodeDist::default();
+        buf.copy_from(&sparse);
+        assert!(buf.is_sparse());
+        buf.copy_from(&dense);
+        assert!(!buf.is_sparse());
+        assert_eq!(buf, dense);
+        // residual follows p's representation
+        let q = NodeDist::from(Dist(vec![0.5, 0.5, 0.0]));
+        let r = NodeDist::residual(&dense, &q).expect("residual");
+        assert!(!r.is_sparse());
+        let rs = NodeDist::residual(&dense.sparsify(), &q.sparsify()).expect("residual");
+        assert!(rs.is_sparse());
+        assert_eq!(rs.to_dense().0, r.to_dense().0);
+        // storage-directed constructors
+        let logits = [0.0f32, 1.0, 2.0];
+        let cfg = SamplingConfig::new(1.0, 0.9);
+        let a = NodeDist::from_logits(&logits, cfg, DistStorage::Dense);
+        let b = NodeDist::from_logits(&logits, cfg, DistStorage::Sparse);
+        assert_eq!(a.to_dense(), b.to_dense());
+    }
+
+    #[test]
+    #[should_panic(expected = "mixed dense/sparse")]
+    fn node_dist_mixed_pair_panics() {
+        let dense = NodeDist::from(Dist(vec![0.5, 0.5]));
+        let sparse = dense.sparsify();
+        let _ = NodeDist::overlap(&dense, &sparse);
     }
 
     #[test]

@@ -1,0 +1,491 @@
+//! Sparse-support distributions: sorted token ids + probabilities.
+//!
+//! Temperature + top-p sampling produces sharply truncated distributions
+//! whose support is orders of magnitude smaller than the vocabulary, and
+//! mass outside the nucleus is *identically zero* — so every kernel the
+//! verification walk runs (overlap, residuals, divergences, sampling) is
+//! exact over the support alone. [`SparseDist`] stores that support as
+//! ascending token ids with aligned probabilities, making per-node cost
+//! O(|support|) or O(|support_p ∪ support_q|) instead of O(vocab).
+//!
+//! ## Exactness contract (the dense-equality invariant)
+//!
+//! Every kernel here accumulates in **ascending token-id order** with the
+//! same `f32` element values and `f64` accumulators as its dense
+//! counterpart in [`super::Dist`]. Terms the sparse walk skips are exactly
+//! `0.0` in the dense loop (adding `0.0` to an `f64` accumulator is the
+//! identity), so dense and sparse kernels return **bit-identical** results
+//! on equivalent inputs — verified by `tests/sparse_dense.rs`, which also
+//! asserts verdict-level equality for all eight verifiers under seeded rng.
+//!
+//! Construction is free inside the sampling transform: the nucleus
+//! bisection already identifies the kept ids, and
+//! [`SparseDist::from_logits_into`] gathers them directly.
+
+use super::{Dist, SamplingConfig};
+use crate::util::Pcg64;
+
+/// A probability distribution stored as its support.
+///
+/// Invariants: `ids` strictly ascending, `ps` aligned, every stored
+/// probability non-negative, `ids[i] < vocab`, and `mass` tracks the total
+/// stored probability. `mass` is maintained *incrementally* (push adds,
+/// scale multiplies, normalizing ops set 1) so the hot kernels never pay a
+/// second pass for it — it is exact for gather-constructed dists and
+/// agrees with Σ ps to f32 rounding after normalization.
+#[derive(Clone, Debug, Default)]
+pub struct SparseDist {
+    /// Support token ids, strictly ascending.
+    pub ids: Vec<u32>,
+    /// Probabilities aligned with `ids`.
+    pub ps: Vec<f32>,
+    /// Dense length this distribution is defined over.
+    pub vocab: u32,
+    /// Total stored mass Σ ps (f64 accumulation).
+    pub mass: f64,
+}
+
+/// Equality is over the distribution value (support + probabilities +
+/// vocab); `mass` is derived bookkeeping and deliberately excluded, so two
+/// value-identical dists built through different op histories (incremental
+/// pushes vs a normalizing op's exact `1.0`) compare equal.
+impl PartialEq for SparseDist {
+    fn eq(&self, other: &SparseDist) -> bool {
+        self.vocab == other.vocab && self.ids == other.ids && self.ps == other.ps
+    }
+}
+
+impl SparseDist {
+    /// Number of support entries.
+    pub fn support_len(&self) -> usize {
+        self.ids.len()
+    }
+
+    /// Dense length (vocabulary size).
+    pub fn len(&self) -> usize {
+        self.vocab as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.vocab == 0
+    }
+
+    /// Probability of token `t` (0 outside the support). O(log |support|).
+    #[inline]
+    pub fn p(&self, t: usize) -> f32 {
+        match self.ids.binary_search(&(t as u32)) {
+            Ok(i) => self.ps[i],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Reset to an empty support over `vocab` tokens, reusing capacity.
+    pub fn clear_for(&mut self, vocab: u32) {
+        self.ids.clear();
+        self.ps.clear();
+        self.vocab = vocab;
+        self.mass = 0.0;
+    }
+
+    /// Append a support entry. `id` must exceed every stored id.
+    #[inline]
+    pub fn push(&mut self, id: u32, p: f32) {
+        debug_assert!(self.ids.last().is_none_or(|&l| l < id), "ids must ascend");
+        self.ids.push(id);
+        self.ps.push(p);
+        self.mass += p as f64;
+    }
+
+    /// Multiply every stored probability by `by` (`mass` scales with it).
+    pub fn scale(&mut self, by: f32) {
+        for v in self.ps.iter_mut() {
+            *v *= by;
+        }
+        self.mass *= by as f64;
+    }
+
+    /// Replace contents with a copy of `src`, reusing allocations.
+    pub fn copy_from(&mut self, src: &SparseDist) {
+        self.ids.clear();
+        self.ids.extend_from_slice(&src.ids);
+        self.ps.clear();
+        self.ps.extend_from_slice(&src.ps);
+        self.vocab = src.vocab;
+        self.mass = src.mass;
+    }
+
+    /// Gather the positive entries of a dense probability slice into `out`.
+    pub fn from_probs_into(probs: &[f32], out: &mut SparseDist) {
+        out.clear_for(probs.len() as u32);
+        for (i, &v) in probs.iter().enumerate() {
+            if v > 0.0 {
+                out.push(i as u32, v);
+            }
+        }
+    }
+
+    /// Allocating wrapper over [`SparseDist::from_probs_into`].
+    pub fn from_probs(probs: &[f32]) -> SparseDist {
+        let mut out = SparseDist::default();
+        SparseDist::from_probs_into(probs, &mut out);
+        out
+    }
+
+    /// Sparse view of a dense distribution (positive entries only).
+    pub fn from_dense(d: &Dist) -> SparseDist {
+        SparseDist::from_probs(&d.0)
+    }
+
+    /// Scatter into a dense distribution, reusing `out`'s allocation.
+    pub fn densify_into(&self, out: &mut Dist) {
+        out.0.clear();
+        out.0.resize(self.vocab as usize, 0.0);
+        for (&id, &p) in self.ids.iter().zip(&self.ps) {
+            out.0[id as usize] = p;
+        }
+    }
+
+    /// Allocating wrapper over [`SparseDist::densify_into`].
+    pub fn to_dense(&self) -> Dist {
+        let mut out = Dist::default();
+        self.densify_into(&mut out);
+        out
+    }
+
+    /// Transform raw logits into the sampled-from distribution, stored
+    /// sparse. The dense softmax runs in `dense_scratch` (O(vocab), the
+    /// same work the dense constructor does); the support gather is free on
+    /// the nucleus path because the bisection already isolated the kept ids
+    /// in `idx_scratch`. Allocation-free once the scratch buffers and `out`
+    /// have capacity.
+    pub fn from_logits_into(
+        logits: &[f32],
+        cfg: SamplingConfig,
+        out: &mut SparseDist,
+        dense_scratch: &mut Vec<f32>,
+        idx_scratch: &mut Vec<u32>,
+    ) {
+        dense_scratch.clear();
+        dense_scratch.extend_from_slice(logits);
+        let keep = cfg.transform_logits(dense_scratch, idx_scratch);
+        out.clear_for(logits.len() as u32);
+        match keep {
+            Some(k) => {
+                // the nucleus path: idx_scratch[..k] holds exactly the kept
+                // token ids — sort ascending and gather
+                idx_scratch[..k].sort_unstable();
+                for &i in &idx_scratch[..k] {
+                    let v = dense_scratch[i as usize];
+                    if v > 0.0 {
+                        out.push(i, v);
+                    }
+                }
+            }
+            None => {
+                for (i, &v) in dense_scratch.iter().enumerate() {
+                    if v > 0.0 {
+                        out.push(i as u32, v);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Allocating wrapper over [`SparseDist::from_logits_into`].
+    pub fn from_logits(logits: &[f32], cfg: SamplingConfig) -> SparseDist {
+        let mut out = SparseDist::default();
+        let mut dense = Vec::new();
+        let mut idx = Vec::new();
+        SparseDist::from_logits_into(logits, cfg, &mut out, &mut dense, &mut idx);
+        out
+    }
+
+    /// Visit this dist's support in ascending id order as `(id, p_t, q_t)`,
+    /// where `q_t` is `q`'s probability at the same id (0 when absent).
+    /// O(|support_p| + |support_q|).
+    #[inline]
+    pub fn zip_support<F: FnMut(u32, f32, f32)>(&self, q: &SparseDist, mut f: F) {
+        let mut j = 0usize;
+        for (i, &id) in self.ids.iter().enumerate() {
+            while j < q.ids.len() && q.ids[j] < id {
+                j += 1;
+            }
+            let qt = if j < q.ids.len() && q.ids[j] == id { q.ps[j] } else { 0.0 };
+            f(id, self.ps[i], qt);
+        }
+    }
+
+    /// Visit the union of both supports in ascending id order as
+    /// `(id, p_t, q_t)` (0 for the absent side).
+    #[inline]
+    pub fn zip_union<F: FnMut(u32, f32, f32)>(&self, q: &SparseDist, mut f: F) {
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < self.ids.len() || j < q.ids.len() {
+            let pi = self.ids.get(i).copied().unwrap_or(u32::MAX);
+            let qj = q.ids.get(j).copied().unwrap_or(u32::MAX);
+            if pi < qj {
+                f(pi, self.ps[i], 0.0);
+                i += 1;
+            } else if qj < pi {
+                f(qj, 0.0, q.ps[j]);
+                j += 1;
+            } else {
+                f(pi, self.ps[i], q.ps[j]);
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+
+    /// Draw a token by cumulative scan with early exit over the support
+    /// (identical draw semantics to [`Dist::sample`]).
+    pub fn sample(&self, rng: &mut Pcg64) -> usize {
+        let u = rng.next_f64();
+        let mut acc = 0.0f64;
+        let mut last = 0usize;
+        for (&id, &w) in self.ids.iter().zip(&self.ps) {
+            if w > 0.0 {
+                last = id as usize;
+                acc += w as f64;
+                if u < acc {
+                    return id as usize;
+                }
+            }
+        }
+        last
+    }
+
+    /// Index of the largest entry (first on ties); 0 for empty support.
+    pub fn argmax(&self) -> usize {
+        let mut best_id = 0usize;
+        let mut best_p = f32::NEG_INFINITY;
+        for (&id, &p) in self.ids.iter().zip(&self.ps) {
+            if p > best_p {
+                best_p = p;
+                best_id = id as usize;
+            }
+        }
+        if best_p > 0.0 {
+            best_id
+        } else {
+            0
+        }
+    }
+
+    /// Shannon entropy in nats.
+    pub fn entropy(&self) -> f32 {
+        let mut h = 0.0f64;
+        for &p in &self.ps {
+            if p > 0.0 {
+                h -= p as f64 * (p as f64).ln();
+            }
+        }
+        h as f32
+    }
+
+    /// KL(self ‖ other) over the common positive support.
+    pub fn kl(&self, other: &SparseDist) -> f32 {
+        let mut d = 0.0f64;
+        self.zip_support(other, |_, p, q| {
+            if p > 0.0 && q > 0.0 {
+                d += p as f64 * (p as f64 / q as f64).ln();
+            }
+        });
+        d as f32
+    }
+
+    /// Overlap Σ_t min(p(t), q(t)).
+    pub fn overlap(p: &SparseDist, q: &SparseDist) -> f32 {
+        let mut s = 0.0f64;
+        p.zip_support(q, |_, pt, qt| {
+            s += pt.min(qt) as f64;
+        });
+        s as f32
+    }
+
+    /// L1 distance Σ_t |p(t) − q(t)|.
+    pub fn l1(p: &SparseDist, q: &SparseDist) -> f32 {
+        let mut s = 0.0f64;
+        p.zip_union(q, |_, pt, qt| {
+            s += (pt - qt).abs() as f64;
+        });
+        s as f32
+    }
+
+    /// Total variation distance = L1 / 2.
+    pub fn tv(p: &SparseDist, q: &SparseDist) -> f32 {
+        0.5 * SparseDist::l1(p, q)
+    }
+
+    /// Rescale to unit mass in place; false (contents untouched) on zero or
+    /// non-finite total mass.
+    pub fn normalize_in_place(&mut self) -> bool {
+        let mass: f64 = self.ps.iter().map(|&v| v.max(0.0) as f64).sum();
+        if !(mass > 0.0) || !mass.is_finite() {
+            return false;
+        }
+        let inv = (1.0 / mass) as f32;
+        for v in self.ps.iter_mut() {
+            *v = v.max(0.0) * inv;
+        }
+        self.mass = 1.0;
+        true
+    }
+
+    /// Normalized residual ∝ (p − q)_+ written into `out` (support ⊆
+    /// support(p); no allocation once `out` has capacity). Returns false on
+    /// zero residual mass, leaving `out` unnormalized and unsampleable —
+    /// exactly [`Dist::residual_into`]'s contract.
+    pub fn residual_into(p: &SparseDist, q: &SparseDist, out: &mut SparseDist) -> bool {
+        out.clear_for(p.vocab);
+        let mut mass = 0.0f64;
+        p.zip_support(q, |id, pt, qt| {
+            let r = (pt - qt).max(0.0);
+            if r > 0.0 {
+                out.ids.push(id);
+                out.ps.push(r);
+            }
+            mass += r as f64;
+        });
+        if !(mass > 0.0) {
+            return false;
+        }
+        let inv = (1.0 / mass) as f32;
+        for v in out.ps.iter_mut() {
+            *v *= inv;
+        }
+        out.mass = 1.0;
+        true
+    }
+
+    /// Allocating wrapper over [`SparseDist::residual_into`].
+    pub fn residual(p: &SparseDist, q: &SparseDist) -> Option<SparseDist> {
+        let mut out = SparseDist::default();
+        if SparseDist::residual_into(p, q, &mut out) {
+            Some(out)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f32, b: f32, tol: f32) -> bool {
+        (a - b).abs() < tol
+    }
+
+    #[test]
+    fn from_dense_roundtrip() {
+        let d = Dist(vec![0.0, 0.5, 0.0, 0.3, 0.2]);
+        let s = SparseDist::from_dense(&d);
+        assert_eq!(s.ids, vec![1, 3, 4]);
+        assert_eq!(s.ps, vec![0.5, 0.3, 0.2]);
+        assert_eq!(s.vocab, 5);
+        assert!(close(s.mass as f32, 1.0, 1e-6));
+        assert_eq!(s.to_dense(), d);
+        assert_eq!(s.p(1), 0.5);
+        assert_eq!(s.p(2), 0.0);
+        assert_eq!(s.p(99), 0.0);
+        assert_eq!(s.support_len(), 3);
+        assert_eq!(s.len(), 5);
+    }
+
+    #[test]
+    fn kernels_match_dense() {
+        let pd = Dist(vec![0.0, 0.5, 0.0, 0.3, 0.2]);
+        let qd = Dist(vec![0.4, 0.0, 0.1, 0.5, 0.0]);
+        let ps = SparseDist::from_dense(&pd);
+        let qs = SparseDist::from_dense(&qd);
+        assert_eq!(SparseDist::overlap(&ps, &qs), Dist::overlap(&pd, &qd));
+        assert_eq!(SparseDist::l1(&ps, &qs), Dist::l1(&pd, &qd));
+        assert_eq!(SparseDist::tv(&ps, &qs), Dist::tv(&pd, &qd));
+        assert_eq!(ps.kl(&qs), pd.kl(&qd));
+        assert_eq!(ps.entropy(), pd.entropy());
+        assert_eq!(ps.argmax(), pd.argmax());
+    }
+
+    #[test]
+    fn residual_matches_dense() {
+        let pd = Dist(vec![0.5, 0.3, 0.0, 0.2]);
+        let qd = Dist(vec![0.2, 0.5, 0.2, 0.1]);
+        let ps = SparseDist::from_dense(&pd);
+        let qs = SparseDist::from_dense(&qd);
+        let mut dense_out = Dist::default();
+        let mut sparse_out = SparseDist::default();
+        assert!(Dist::residual_into(&pd, &qd, &mut dense_out));
+        assert!(SparseDist::residual_into(&ps, &qs, &mut sparse_out));
+        assert_eq!(sparse_out.to_dense().0, dense_out.0);
+        // zero residual mass: p ≤ q pointwise
+        assert!(!SparseDist::residual_into(&ps, &ps, &mut sparse_out));
+        // disjoint supports: the residual is p itself
+        let a = SparseDist::from_dense(&Dist(vec![0.6, 0.4, 0.0, 0.0]));
+        let b = SparseDist::from_dense(&Dist(vec![0.0, 0.0, 0.5, 0.5]));
+        let r = SparseDist::residual(&a, &b).expect("disjoint residual");
+        assert_eq!(r.ids, a.ids);
+        assert!(close(r.mass as f32, 1.0, 1e-6));
+    }
+
+    #[test]
+    fn sample_matches_dense_stream() {
+        let d = Dist(vec![0.0, 0.1, 0.0, 0.2, 0.7]);
+        let s = SparseDist::from_dense(&d);
+        let mut r1 = Pcg64::seeded(11);
+        let mut r2 = Pcg64::seeded(11);
+        for _ in 0..5_000 {
+            assert_eq!(d.sample(&mut r1), s.sample(&mut r2));
+        }
+    }
+
+    #[test]
+    fn from_logits_matches_dense_support() {
+        let mut rng = Pcg64::seeded(0x5d);
+        for case in 0..50usize {
+            let v = 8 + case % 60;
+            let logits: Vec<f32> = (0..v).map(|_| rng.next_f32() * 8.0).collect();
+            for &tp in &[0.6f32, 0.9, 1.0] {
+                let cfg = SamplingConfig::new(1.0, tp);
+                let dense = Dist::from_logits(&logits, cfg);
+                let sparse = SparseDist::from_logits(&logits, cfg);
+                assert_eq!(sparse.to_dense().0, dense.0, "case {case} top_p {tp}");
+                assert!(
+                    sparse.support_len() == dense.0.iter().filter(|&&x| x > 0.0).count(),
+                    "case {case} top_p {tp}"
+                );
+            }
+        }
+        // greedy limit is a singleton support
+        let g = SparseDist::from_logits(&[0.1, 2.0, 0.5], SamplingConfig::new(0.0, 1.0));
+        assert_eq!(g.ids, vec![1]);
+        assert_eq!(g.ps, vec![1.0]);
+    }
+
+    #[test]
+    fn normalize_and_scale() {
+        let mut s = SparseDist::from_dense(&Dist(vec![0.0, 2.0, 6.0]));
+        assert!(s.normalize_in_place());
+        assert!(close(s.p(1), 0.25, 1e-6) && close(s.p(2), 0.75, 1e-6));
+        assert!(close(s.mass as f32, 1.0, 1e-6));
+        s.scale(2.0);
+        assert!(close(s.mass as f32, 2.0, 1e-6));
+        let mut zero = SparseDist::default();
+        zero.clear_for(4);
+        assert!(!zero.normalize_in_place());
+        assert_eq!(zero.sample(&mut Pcg64::seeded(1)), 0);
+        assert_eq!(zero.argmax(), 0);
+    }
+
+    #[test]
+    fn union_and_support_zip() {
+        let p = SparseDist::from_dense(&Dist(vec![0.5, 0.0, 0.5, 0.0]));
+        let q = SparseDist::from_dense(&Dist(vec![0.0, 0.5, 0.5, 0.0]));
+        let mut seen = Vec::new();
+        p.zip_union(&q, |id, pt, qt| seen.push((id, pt, qt)));
+        assert_eq!(seen, vec![(0, 0.5, 0.0), (1, 0.0, 0.5), (2, 0.5, 0.5)]);
+        seen.clear();
+        p.zip_support(&q, |id, pt, qt| seen.push((id, pt, qt)));
+        assert_eq!(seen, vec![(0, 0.5, 0.0), (2, 0.5, 0.5)]);
+    }
+}

@@ -11,7 +11,7 @@
 use anyhow::Result;
 
 #[cfg(feature = "pjrt")]
-use crate::dist::{Dist, SamplingConfig};
+use crate::dist::{DistStorage, NodeDist, SamplingConfig};
 #[cfg(feature = "pjrt")]
 use crate::kvcache::KvCache;
 #[cfg(feature = "pjrt")]
@@ -101,8 +101,9 @@ pub fn draft_delayed(
             sampling.temperature,
             sampling.top_p,
         )?;
+        let storage = DistStorage::global();
         for step in 0..a.l1 {
-            let q = Dist(out.dists[step * v..(step + 1) * v].to_vec());
+            let q = NodeDist::from_probs(&out.dists[step * v..(step + 1) * v], storage);
             tree.set_q(node, q);
             let tok = out.tokens[step] as u32;
             node = tree.add_child(node, tok, Provenance::Trunk { step: step + 1 });
@@ -129,11 +130,15 @@ pub fn draft_delayed(
             sampling.temperature,
             sampling.top_p,
         )?;
+        let storage = DistStorage::global();
         for b in 0..a.k {
             let mut cur = branch_point;
             for step in 0..a.l2 {
-                let q = Dist(out.dists[(b * lb + step) * v..(b * lb + step + 1) * v].to_vec());
                 if tree.nodes[cur].q.is_none() {
+                    let q = NodeDist::from_probs(
+                        &out.dists[(b * lb + step) * v..(b * lb + step + 1) * v],
+                        storage,
+                    );
                     tree.set_q(cur, q);
                 }
                 let tok = out.tokens[b * lb + step] as u32;

@@ -21,8 +21,8 @@ use anyhow::{anyhow, Context, Result};
 use crate::coordinator::SpecEngine;
 use crate::coordinator::{ActionPolicy, StepFeatures};
 #[cfg(feature = "pjrt")]
-use crate::dist::SamplingConfig;
-use crate::dist::Dist;
+use crate::dist::{DistStorage, SamplingConfig};
+use crate::dist::NodeDist;
 use crate::draft::Action;
 #[cfg(feature = "pjrt")]
 use crate::runtime::{Engine, Role};
@@ -248,7 +248,7 @@ pub fn scalar_features(f: &StepFeatures<'_>, lat: &LatencyModel, max_seq: usize)
         f.q_root.entropy(),
         f.p_prev.kl(f.q_prev),
         f.q_prev.kl(f.p_prev),
-        Dist::l1(f.p_prev, f.q_prev),
+        NodeDist::l1(f.p_prev, f.q_prev),
         f.ctx_len as f32 / max_seq as f32,
         f.sampling.temperature,
         f.sampling.top_p,
@@ -393,10 +393,11 @@ fn draft_superset(
         sampling.temperature,
         sampling.top_p,
     )?;
+    let storage = DistStorage::global();
     let mut trunk_tokens = vec![root_token];
     trunk_tokens.extend(trunk.tokens.iter().map(|&t| t as u32));
-    let trunk_q: Vec<Dist> = (0..L1_MAX)
-        .map(|s| Dist(trunk.dists[s * v..(s + 1) * v].to_vec()))
+    let trunk_q: Vec<NodeDist> = (0..L1_MAX)
+        .map(|s| NodeDist::from_probs(&trunk.dists[s * v..(s + 1) * v], storage))
         .collect();
 
     // temp draft KV with trunk rows committed so branch rollouts can attend
@@ -433,8 +434,13 @@ fn draft_superset(
         let mut per_branch = Vec::new();
         for b in 0..K_MAX {
             let tokens: Vec<u32> = (0..L2_MAX).map(|s| out.tokens[b * L2_MAX + s] as u32).collect();
-            let q: Vec<Dist> = (0..L2_MAX)
-                .map(|s| Dist(out.dists[(b * L2_MAX + s) * v..(b * L2_MAX + s + 1) * v].to_vec()))
+            let q: Vec<NodeDist> = (0..L2_MAX)
+                .map(|s| {
+                    NodeDist::from_probs(
+                        &out.dists[(b * L2_MAX + s) * v..(b * L2_MAX + s + 1) * v],
+                        storage,
+                    )
+                })
                 .collect();
             // extend the merged tree for the big target pass
             let mut cur = trunk_nodes[j];
@@ -466,9 +472,10 @@ fn draft_superset(
         root_pos,
     )?;
     let vt = meta.target.vocab;
-    let p_at = |node: usize| Dist::from_logits(&out.logits[node * vt..(node + 1) * vt], sampling);
+    let p_at =
+        |node: usize| NodeDist::from_logits(&out.logits[node * vt..(node + 1) * vt], sampling, storage);
 
-    let trunk_p: Vec<Dist> = trunk_nodes.iter().map(|&n| p_at(n)).collect();
+    let trunk_p: Vec<NodeDist> = trunk_nodes.iter().map(|&n| p_at(n)).collect();
     // walk the merged tree to recover p along each branch chain
     for (j, per_branch) in branches.iter_mut().enumerate() {
         for chain in per_branch.iter_mut() {

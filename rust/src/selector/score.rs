@@ -28,7 +28,7 @@
 //! `verify::VerifyScratch` convention): one arena per worker thread, warm
 //! calls reuse every buffer's high-water capacity.
 
-use crate::dist::Dist;
+use crate::dist::NodeDist;
 use crate::tree::{DraftTree, Provenance};
 use crate::verify::{Eq3Scratch, OtlpSolver};
 
@@ -38,22 +38,24 @@ use super::{action_space, K_MAX, L1_MAX, L2_MAX};
 const DEPTHS: usize = L1_MAX + L2_MAX + 1;
 
 /// A drafted superset sample: full trunk + K_MAX branches of L2_MAX at every
-/// trunk depth, with p/q at every node.
+/// trunk depth, with p/q at every node (dense or sparse per the
+/// construction-time [`crate::dist::DistStorage`]; one sample always uses
+/// one representation).
 pub struct Superset {
     /// trunk node context tokens (root first)
     pub trunk_tokens: Vec<u32>,
-    pub trunk_q: Vec<Dist>,
-    pub trunk_p: Vec<Dist>,
+    pub trunk_q: Vec<NodeDist>,
+    pub trunk_p: Vec<NodeDist>,
     /// per trunk depth j (0..=L1_MAX): per branch b: token/q/p chains
     pub branches: Vec<Vec<BranchChain>>,
 }
 
 pub struct BranchChain {
     pub tokens: Vec<u32>,
-    pub q: Vec<Dist>,
+    pub q: Vec<NodeDist>,
     /// `p[s]` is the target distribution used for branching after `s` chain
     /// tokens (one more entry than `tokens` for the leaf bonus).
-    pub p: Vec<Dist>,
+    pub p: Vec<NodeDist>,
 }
 
 // ---------------------------------------------------------------------------
@@ -239,13 +241,13 @@ impl MergedBranches {
     }
 
     /// Draft distribution at an interior node (never called on leaves).
-    fn q<'a>(&self, ss: &'a Superset, j: usize, node: usize) -> &'a Dist {
+    fn q<'a>(&self, ss: &'a Superset, j: usize, node: usize) -> &'a NodeDist {
         let (b, s) = self.first[node];
         &ss.branches[j][b as usize].q[s as usize]
     }
 
     /// Target distribution at an interior node.
-    fn p<'a>(&self, ss: &'a Superset, j: usize, node: usize) -> &'a Dist {
+    fn p<'a>(&self, ss: &'a Superset, j: usize, node: usize) -> &'a NodeDist {
         if node == 0 {
             return &ss.trunk_p[j];
         }

@@ -23,7 +23,7 @@
 //! of the child lists for pointer-chase-free walks. The allocating wrappers
 //! remain for construction-time and test use.
 
-use crate::dist::Dist;
+use crate::dist::NodeDist;
 
 /// Where a node's draft-model KV row came from (for cache commits).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -44,11 +44,13 @@ pub struct Node {
     /// Children **with multiplicity**, in draft order.
     pub children: Vec<usize>,
     /// Draft distribution q(.|context of this node) — the transformed
-    /// distribution the rollout actually sampled children from.
-    pub q: Option<Dist>,
+    /// distribution the rollout actually sampled children from. Dense or
+    /// sparse per the construction-time [`crate::dist::DistStorage`]; one
+    /// tree always uses one representation.
+    pub q: Option<NodeDist>,
     /// Target distribution p(.|context of this node); filled after the tree
     /// pass.
-    pub p: Option<Dist>,
+    pub p: Option<NodeDist>,
     pub provenance: Provenance,
 }
 
@@ -193,13 +195,14 @@ impl DraftTree {
     }
 
     /// Set the draft distribution at a node (idempotent: identical contexts
-    /// across branches produce identical dists).
-    pub fn set_q(&mut self, node: usize, q: Dist) {
-        self.nodes[node].q = Some(q);
+    /// across branches produce identical dists). Accepts `Dist`,
+    /// `SparseDist` or `NodeDist`.
+    pub fn set_q(&mut self, node: usize, q: impl Into<NodeDist>) {
+        self.nodes[node].q = Some(q.into());
     }
 
-    pub fn set_p(&mut self, node: usize, p: Dist) {
-        self.nodes[node].p = Some(p);
+    pub fn set_p(&mut self, node: usize, p: impl Into<NodeDist>) {
+        self.nodes[node].p = Some(p.into());
     }
 
     /// Child tokens of `node` with multiplicity, written into `out`.

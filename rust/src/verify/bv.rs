@@ -28,11 +28,33 @@
 //! caller-provided scratch, so the per-block pass allocates nothing.
 
 use super::{Verdict, Verifier, VerifyScratch};
-use crate::dist::Dist;
+use crate::dist::{mixed_repr, Dist, NodeDist, SparseDist};
 use crate::tree::DraftTree;
 use crate::util::Pcg64;
 
 pub struct BlockVerify;
+
+/// e = Σ_t min(q(t), w·p(t)) — the expected next-step weight. Terms vanish
+/// where either side is zero, so the sparse arm merges p's support against
+/// q in O(|support|), exactly equal to the dense zip.
+fn e_weight(p: &NodeDist, q: &NodeDist, w: f64) -> f64 {
+    match (p, q) {
+        (NodeDist::Dense(p), NodeDist::Dense(q)) => p
+            .0
+            .iter()
+            .zip(&q.0)
+            .map(|(&pt, &qt)| (qt as f64).min(w * pt as f64))
+            .sum(),
+        (NodeDist::Sparse(p), NodeDist::Sparse(q)) => {
+            let mut s = 0.0f64;
+            p.zip_support(q, |_, pt, qt| {
+                s += (qt as f64).min(w * pt as f64);
+            });
+            s
+        }
+        _ => mixed_repr(),
+    }
+}
 
 /// Forward/backward pass over one path. `p_first` overrides the target
 /// distribution at the first node (used by Traversal's residual handoff).
@@ -45,7 +67,7 @@ pub struct BlockVerify;
 pub(crate) fn bv_path(
     tree: &DraftTree,
     start: usize,
-    p_first: &Dist,
+    p_first: &NodeDist,
     path: &[usize],
     rng: &mut Pcg64,
     w: &mut Vec<f64>,
@@ -56,14 +78,14 @@ pub(crate) fn bv_path(
     debug_assert!(l > 0);
 
     // dists along the path: entry i gives (p, q) at the node *above* edge i.
-    let node_p = |i: usize| -> &Dist {
+    let node_p = |i: usize| -> &NodeDist {
         if i == 0 {
             p_first
         } else {
             tree.nodes[path[i - 1]].p.as_ref().expect("p dist")
         }
     };
-    let node_q = |i: usize| -> &Dist {
+    let node_q = |i: usize| -> &NodeDist {
         let n = if i == 0 { start } else { path[i - 1] };
         tree.nodes[n].q.as_ref().expect("q dist")
     };
@@ -86,13 +108,7 @@ pub(crate) fn bv_path(
     e.clear();
     e.resize(l, 0.0);
     for i in 0..l {
-        let (p, q) = (node_p(i), node_q(i));
-        e[i] = p
-            .0
-            .iter()
-            .zip(&q.0)
-            .map(|(&pt, &qt)| (qt as f64).min(w[i] * pt as f64))
-            .sum();
+        e[i] = e_weight(node_p(i), node_q(i), w[i]);
     }
 
     // backward monotone thresholds
@@ -119,9 +135,9 @@ pub(crate) fn bv_path(
     (tau, w[tau])
 }
 
-/// w-weighted naive residual at the stop node, ∝ (p − q/w)_+, written into
-/// `out`. Zero-probability stops (numerical) fall back to the target p.
-pub(crate) fn weighted_residual_into(p: &Dist, q: &Dist, w: f64, out: &mut Dist) {
+/// Dense w-weighted naive residual ∝ (p − q/w)_+ written into `out`.
+/// Zero-probability stops (numerical) fall back to the target p.
+fn weighted_residual_dense_into(p: &Dist, q: &Dist, w: f64, out: &mut Dist) {
     let o = &mut out.0;
     o.clear();
     o.reserve(p.0.len());
@@ -138,6 +154,43 @@ pub(crate) fn weighted_residual_into(p: &Dist, q: &Dist, w: f64, out: &mut Dist)
         }
     } else {
         out.copy_from(p);
+    }
+}
+
+/// Sparse w-weighted residual: support ⊆ support(p), O(|support|) merge.
+fn weighted_residual_sparse_into(p: &SparseDist, q: &SparseDist, w: f64, out: &mut SparseDist) {
+    out.clear_for(p.vocab);
+    let mut mass = 0.0f64;
+    p.zip_support(q, |id, pt, qt| {
+        let v = (pt as f64 - qt as f64 / w.max(1e-12)).max(0.0);
+        if v > 0.0 {
+            out.ids.push(id);
+            out.ps.push(v as f32);
+        }
+        mass += v;
+    });
+    if mass > 0.0 {
+        let inv = (1.0 / mass) as f32;
+        for v in out.ps.iter_mut() {
+            *v *= inv;
+        }
+        out.mass = 1.0;
+    } else {
+        out.copy_from(p);
+    }
+}
+
+/// w-weighted naive residual at the stop node, ∝ (p − q/w)_+, written into
+/// `out` in the inputs' representation.
+pub(crate) fn weighted_residual_into(p: &NodeDist, q: &NodeDist, w: f64, out: &mut NodeDist) {
+    match (p, q) {
+        (NodeDist::Dense(p), NodeDist::Dense(q)) => {
+            weighted_residual_dense_into(p, q, w, out.make_dense_mut())
+        }
+        (NodeDist::Sparse(p), NodeDist::Sparse(q)) => {
+            weighted_residual_sparse_into(p, q, w, out.make_sparse_mut())
+        }
+        _ => mixed_repr(),
     }
 }
 

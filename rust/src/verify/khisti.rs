@@ -19,9 +19,14 @@
 //! one verifier excluded from the steady-state zero-allocation guarantee
 //! (`tests/alloc_free.rs`) and its allocs/verify are reported as-is by the
 //! `verify_hot` bench.
+//!
+//! **Sparse note:** the transportation LP itself stays dense. Sparse
+//! inputs are accepted and scattered into scratch (`verify::densify_pair`)
+//! — the one O(vocab) exception to the sparse hot path, documented
+//! alongside the allocation exception above.
 
-use super::{OtlpSolver, SolverScratch};
-use crate::dist::Dist;
+use super::{densify_pair, OtlpSolver, SolverScratch};
+use crate::dist::{Dist, NodeDist};
 use crate::util::Pcg64;
 
 pub struct Khisti;
@@ -236,12 +241,13 @@ impl OtlpSolver for Khisti {
 
     fn solve_scratch(
         &self,
-        p: &Dist,
-        q: &Dist,
+        p: &NodeDist,
+        q: &NodeDist,
         xs: &[u32],
         rng: &mut Pcg64,
-        _scratch: &mut SolverScratch,
+        scratch: &mut SolverScratch,
     ) -> u32 {
+        let (p, q) = densify_pair(p, q, &mut scratch.dense_p, &mut scratch.dense_q);
         let c = build_coupling(p, q, xs.len());
         let pi = c.pattern_index(xs);
         let pp = c.pattern_prob[pi];
@@ -267,22 +273,49 @@ impl OtlpSolver for Khisti {
             .min(1.0)
     }
 
-    fn branching_into(&self, p: &Dist, q: &Dist, xs: &[u32], out: &mut Vec<f64>) {
-        let c = build_coupling(p, q, xs.len());
-        let pi = c.pattern_index(xs);
-        let pp = c.pattern_prob[pi].max(1e-300);
-        let matched_total: f64 = c.matched[pi].iter().sum::<f64>() / pp;
-        let res = c.residual(p);
-        out.clear();
-        out.extend(xs.iter().map(|&x| {
-            let matched = c
-                .distinct
-                .iter()
-                .position(|&t| t == x)
-                .map_or(0.0, |j| c.matched[pi][j] / pp);
-            matched + (1.0 - matched_total) * res.p(x as usize) as f64
-        }));
+    fn branching_into(&self, p: &NodeDist, q: &NodeDist, xs: &[u32], out: &mut Vec<f64>) {
+        let (mut dp, mut dq) = (Dist::default(), Dist::default());
+        let (p, q) = densify_pair(p, q, &mut dp, &mut dq);
+        branching_dense_into(p, q, xs, out);
     }
+
+    /// Override of the prefix-cache entry: densify once per (node, solver)
+    /// call instead of once per prefix (the Eq. 3 scorer calls this with
+    /// several prefixes per node under the default sparse storage).
+    fn branching_prefixes_into(
+        &self,
+        p: &NodeDist,
+        q: &NodeDist,
+        xs: &[u32],
+        prefix_lens: &[usize],
+        out: &mut Vec<f64>,
+        tmp: &mut Vec<f64>,
+    ) {
+        let (mut dp, mut dq) = (Dist::default(), Dist::default());
+        let (p, q) = densify_pair(p, q, &mut dp, &mut dq);
+        for &len in prefix_lens {
+            branching_dense_into(p, q, &xs[..len], tmp);
+            out.extend_from_slice(tmp);
+        }
+    }
+}
+
+/// Dense branching core shared by both trait entries.
+fn branching_dense_into(p: &Dist, q: &Dist, xs: &[u32], out: &mut Vec<f64>) {
+    let c = build_coupling(p, q, xs.len());
+    let pi = c.pattern_index(xs);
+    let pp = c.pattern_prob[pi].max(1e-300);
+    let matched_total: f64 = c.matched[pi].iter().sum::<f64>() / pp;
+    let res = c.residual(p);
+    out.clear();
+    out.extend(xs.iter().map(|&x| {
+        let matched = c
+            .distinct
+            .iter()
+            .position(|&t| t == x)
+            .map_or(0.0, |j| c.matched[pi][j] / pp);
+        matched + (1.0 - matched_total) * res.p(x as usize) as f64
+    }));
 }
 
 #[cfg(test)]
@@ -315,12 +348,13 @@ mod tests {
     #[test]
     fn output_follows_p() {
         let (p, q) = pq();
+        let (pn, qn) = (NodeDist::from(p.clone()), NodeDist::from(q.clone()));
         let mut rng = Pcg64::seeded(8);
         let n = 80_000;
         let mut counts = [0usize; 4];
         for _ in 0..n {
             let xs: Vec<u32> = (0..3).map(|_| q.sample(&mut rng) as u32).collect();
-            counts[Khisti.solve(&p, &q, &xs, &mut rng) as usize] += 1;
+            counts[Khisti.solve(&pn, &qn, &xs, &mut rng) as usize] += 1;
         }
         for t in 0..4 {
             let f = counts[t] as f64 / n as f64;
@@ -331,12 +365,13 @@ mod tests {
     #[test]
     fn k1_reduces_to_naive_acceptance() {
         let (p, q) = pq();
+        let (pn, qn) = (NodeDist::from(p.clone()), NodeDist::from(q.clone()));
         let mut rng = Pcg64::seeded(80);
         let n = 60_000;
         let mut hits = 0usize;
         for _ in 0..n {
             let xs = vec![q.sample(&mut rng) as u32];
-            if xs.contains(&Khisti.solve(&p, &q, &xs, &mut rng)) {
+            if xs.contains(&Khisti.solve(&pn, &qn, &xs, &mut rng)) {
                 hits += 1;
             }
         }
@@ -350,13 +385,14 @@ mod tests {
         // The canonical coupling is optimal: its realized acceptance must be
         // at least SpecInfer's computed rate.
         let (p, q) = pq();
+        let (pn, qn) = (NodeDist::from(p.clone()), NodeDist::from(q.clone()));
         for k in 2..=4 {
             let mut rng = Pcg64::seeded(90 + k as u64);
             let n = 60_000;
             let mut hits = 0usize;
             for _ in 0..n {
                 let xs: Vec<u32> = (0..k).map(|_| q.sample(&mut rng) as u32).collect();
-                if xs.contains(&Khisti.solve(&p, &q, &xs, &mut rng)) {
+                if xs.contains(&Khisti.solve(&pn, &qn, &xs, &mut rng)) {
                     hits += 1;
                 }
             }
@@ -369,13 +405,16 @@ mod tests {
     #[test]
     fn branching_matches_mc() {
         let (p, q) = pq();
+        let (pn, qn) = (NodeDist::from(p), NodeDist::from(q));
         let xs = vec![1u32, 3, 1];
-        let b = Khisti.branching(&p, &q, &xs);
+        let b = Khisti.branching(&pn, &qn, &xs);
+        // the sparse entry must densify to the identical coupling
+        assert_eq!(b, Khisti.branching(&pn.sparsify(), &qn.sparsify(), &xs));
         let mut rng = Pcg64::seeded(100);
         let n = 150_000usize;
         let mut counts = [0usize; 4];
         for _ in 0..n {
-            counts[Khisti.solve(&p, &q, &xs, &mut rng) as usize] += 1;
+            counts[Khisti.solve(&pn, &qn, &xs, &mut rng) as usize] += 1;
         }
         for (i, &x) in xs.iter().enumerate() {
             let mc = counts[x as usize] as f64 / n as f64;

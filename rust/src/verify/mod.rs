@@ -23,6 +23,16 @@
 //! solver, whose per-node transportation LP is documented as allocating).
 //! [`Verifier::verify`] remains as an allocating convenience wrapper.
 //!
+//! ## Sparse-support inputs
+//!
+//! Tree nodes carry [`NodeDist`]: dense vocab vectors (the equality
+//! oracle) or sparse supports (the default — see
+//! [`crate::dist::DistStorage`]). Every solver's hot entries run
+//! O(|support|) union-merge kernels on sparse inputs and produce verdicts
+//! identical to the dense path under the same rng stream (asserted by
+//! `tests/sparse_dense.rs`); Khisti densifies its inputs (the same
+//! documented exception as its allocating LP).
+//!
 //! Losslessness of every implementation is validated by the Monte-Carlo
 //! harness in `rust/tests/losslessness.rs` (the same validation the paper
 //! reports for its calculators).
@@ -35,7 +45,7 @@ pub mod specinfer;
 pub mod spectr;
 pub mod traversal;
 
-use crate::dist::Dist;
+use crate::dist::{Dist, NodeDist};
 use crate::tree::{CsrChildren, DraftTree};
 use crate::util::Pcg64;
 
@@ -66,9 +76,15 @@ impl Verdict {
 pub struct SolverScratch {
     /// Remaining draft-token multiset (SpecInfer rounds).
     pub tokens: Vec<u32>,
-    /// Residual / working distribution buffers.
-    pub dist_a: Dist,
-    pub dist_b: Dist,
+    /// Residual / working distribution buffers. Their representation
+    /// follows the inputs' (a stable stream of one representation never
+    /// reallocates after warm-up).
+    pub dist_a: NodeDist,
+    pub dist_b: NodeDist,
+    /// Densified input copies for the Khisti LP (the one solver whose
+    /// per-node computation stays dense; sparse inputs are scattered here).
+    pub dense_p: Dist,
+    pub dense_q: Dist,
 }
 
 /// Caller-owned arena backing a verification walk. Create one per sequence
@@ -89,8 +105,9 @@ pub struct VerifyScratch {
     /// BV backward monotone thresholds W_0..W_L.
     pub thr: Vec<f64>,
     /// Residual-target ping-pong buffers (Traversal / BV corrections).
-    pub dist_a: Dist,
-    pub dist_b: Dist,
+    /// Representation follows the tree's storage mode.
+    pub dist_a: NodeDist,
+    pub dist_b: NodeDist,
     /// Fallback per-leaf path draws when the tree records none.
     pub fallback_paths: Vec<Vec<usize>>,
     /// Solver-local scratch.
@@ -104,19 +121,26 @@ impl VerifyScratch {
 
     /// Pre-size every buffer for walks over trees with accepted paths of at
     /// most `depth` edges, at most `paths` path draws, and `vocab`-sized
-    /// distributions. After this call even branches first taken mid-flight
-    /// (e.g. a solver's second rejection round) allocate nothing.
+    /// distributions. The distribution buffers are switched to the
+    /// process-default storage ([`crate::dist::DistStorage::global`])
+    /// before reserving, so the representation the stream will actually
+    /// use holds the capacity. After this call even branches first taken
+    /// mid-flight (e.g. a solver's second rejection round) allocate
+    /// nothing.
     pub fn reserve(&mut self, vocab: usize, depth: usize, paths: usize) {
+        let storage = crate::dist::DistStorage::global();
         self.path.reserve(depth);
         self.used.reserve(paths);
         self.w.reserve(depth + 1);
         self.e.reserve(depth + 1);
         self.thr.reserve(depth + 1);
-        self.dist_a.0.reserve(vocab);
-        self.dist_b.0.reserve(vocab);
+        self.dist_a.reserve_as(vocab, storage);
+        self.dist_b.reserve_as(vocab, storage);
         self.solver.tokens.reserve(paths.max(8));
-        self.solver.dist_a.0.reserve(vocab);
-        self.solver.dist_b.0.reserve(vocab);
+        self.solver.dist_a.reserve_as(vocab, storage);
+        self.solver.dist_b.reserve_as(vocab, storage);
+        self.solver.dense_p.0.reserve(vocab);
+        self.solver.dense_q.0.reserve(vocab);
     }
 }
 
@@ -146,6 +170,11 @@ pub trait Verifier: Send + Sync {
 
 /// An OTLP solver f_{p,q,k} (paper Definition 3.2): maps i.i.d. draft tokens
 /// X_1..X_k ~ q to an output token distributed exactly as p.
+///
+/// The hot entries (`solve_scratch`, `branching_into`,
+/// `branching_prefixes_into`) take [`NodeDist`] and run O(|support|) on
+/// sparse inputs (Khisti excepted — its LP densifies). The acceptance-rate
+/// calculator is a cold analysis entry and stays dense.
 pub trait OtlpSolver: Send + Sync {
     fn name(&self) -> &'static str;
 
@@ -153,21 +182,23 @@ pub trait OtlpSolver: Send + Sync {
     /// caller-provided scratch for residual buffers — the hot-path entry.
     fn solve_scratch(
         &self,
-        p: &Dist,
-        q: &Dist,
+        p: &NodeDist,
+        q: &NodeDist,
         xs: &[u32],
         rng: &mut Pcg64,
         scratch: &mut SolverScratch,
     ) -> u32;
 
     /// Allocating convenience wrapper over [`OtlpSolver::solve_scratch`].
-    fn solve(&self, p: &Dist, q: &Dist, xs: &[u32], rng: &mut Pcg64) -> u32 {
+    fn solve(&self, p: &NodeDist, q: &NodeDist, xs: &[u32], rng: &mut Pcg64) -> u32 {
         let mut scratch = SolverScratch::default();
         self.solve_scratch(p, q, xs, rng, &mut scratch)
     }
 
     /// Acceptance rate α(f_{p,q,k}) = P(f(X_1..X_k) ∈ {X_1..X_k}) over
     /// X_i ~ q i.i.d. (Algorithms 6–10; Khisti's is a bound, see khisti.rs).
+    /// Cold calculator path: dense inputs only (densify sparse storage with
+    /// [`NodeDist::to_dense`] first).
     fn acceptance_rate(&self, p: &Dist, q: &Dist, k: usize) -> f64;
 
     /// Branching probabilities B(f, xs, t) for each *position* i (aligned
@@ -175,10 +206,10 @@ pub trait OtlpSolver: Send + Sync {
     /// occurrence — callers sum per distinct token before use), written
     /// into the reusable `out` buffer. Value at position i is P(f outputs
     /// token xs[i]).
-    fn branching_into(&self, p: &Dist, q: &Dist, xs: &[u32], out: &mut Vec<f64>);
+    fn branching_into(&self, p: &NodeDist, q: &NodeDist, xs: &[u32], out: &mut Vec<f64>);
 
     /// Allocating convenience wrapper over [`OtlpSolver::branching_into`].
-    fn branching(&self, p: &Dist, q: &Dist, xs: &[u32]) -> Vec<f64> {
+    fn branching(&self, p: &NodeDist, q: &NodeDist, xs: &[u32]) -> Vec<f64> {
         let mut out = Vec::with_capacity(xs.len());
         self.branching_into(p, q, xs, &mut out);
         out
@@ -195,8 +226,8 @@ pub trait OtlpSolver: Send + Sync {
     /// the sharing that removes the per-action O(vocab) recomputation.
     fn branching_prefixes_into(
         &self,
-        p: &Dist,
-        q: &Dist,
+        p: &NodeDist,
+        q: &NodeDist,
         xs: &[u32],
         prefix_lens: &[usize],
         out: &mut Vec<f64>,
@@ -207,6 +238,32 @@ pub trait OtlpSolver: Send + Sync {
             out.extend_from_slice(tmp);
         }
     }
+}
+
+/// Resolve a (p, q) pair to dense references, scattering sparse inputs into
+/// the provided scratch buffers. Khisti's LP (and only it) routes through
+/// this — the documented O(vocab) exception to the sparse hot path.
+pub(crate) fn densify_pair<'a>(
+    p: &'a NodeDist,
+    q: &'a NodeDist,
+    dp: &'a mut Dist,
+    dq: &'a mut Dist,
+) -> (&'a Dist, &'a Dist) {
+    let p = match p {
+        NodeDist::Dense(d) => d,
+        s => {
+            s.densify_into(dp);
+            &*dp
+        }
+    };
+    let q = match q {
+        NodeDist::Dense(d) => d,
+        s => {
+            s.densify_into(dq);
+            &*dq
+        }
+    };
+    (p, q)
 }
 
 /// Generic top-down OT walk (paper §3.2).

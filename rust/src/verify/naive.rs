@@ -4,9 +4,12 @@
 //! otherwise sample from the residual ∝ (p − q)_+. Used for both the
 //! single-path "Naive" baseline and the multi-path "NaiveTree" (the residual
 //! draw may land on X_2..X_k, letting the walk branch).
+//!
+//! Sparse inputs run the O(|support|) residual merge; dense inputs the
+//! vocab-length reference. Both draw identical rng streams.
 
 use super::{OtlpSolver, SolverScratch};
-use crate::dist::Dist;
+use crate::dist::{Dist, NodeDist};
 use crate::util::Pcg64;
 
 pub struct Naive;
@@ -18,8 +21,8 @@ impl OtlpSolver for Naive {
 
     fn solve_scratch(
         &self,
-        p: &Dist,
-        q: &Dist,
+        p: &NodeDist,
+        q: &NodeDist,
         xs: &[u32],
         rng: &mut Pcg64,
         scratch: &mut SolverScratch,
@@ -29,7 +32,7 @@ impl OtlpSolver for Naive {
         if rng.next_f64() <= ratio as f64 {
             return x1 as u32;
         }
-        if Dist::residual_into(p, q, &mut scratch.dist_a) {
+        if NodeDist::residual_into(p, q, &mut scratch.dist_a) {
             scratch.dist_a.sample(rng) as u32
         } else {
             // p == q: rejection has probability zero; numerical fallback.
@@ -59,14 +62,14 @@ impl OtlpSolver for Naive {
 
     /// Algorithm 12: B(X_i) = (1 − a) p_res(X_i) + a·1{X_i = X_1},
     /// a = min(1, p(X_1)/q(X_1)).
-    fn branching_into(&self, p: &Dist, q: &Dist, xs: &[u32], out: &mut Vec<f64>) {
+    fn branching_into(&self, p: &NodeDist, q: &NodeDist, xs: &[u32], out: &mut Vec<f64>) {
         let x1 = xs[0] as usize;
         let a = if q.p(x1) > 0.0 {
             (p.p(x1) / q.p(x1)).min(1.0) as f64
         } else {
             1.0
         };
-        let res = Dist::residual(p, q);
+        let res = NodeDist::residual(p, q);
         out.clear();
         out.extend(xs.iter().map(|&x| {
             let r = res.as_ref().map_or(0.0, |d| d.p(x as usize) as f64);
@@ -79,11 +82,18 @@ impl OtlpSolver for Naive {
 mod tests {
     use super::*;
 
+    fn nd(v: Vec<f32>) -> NodeDist {
+        NodeDist::from(Dist(v))
+    }
+
+    fn pq() -> (NodeDist, NodeDist) {
+        (nd(vec![0.5, 0.3, 0.2]), nd(vec![0.2, 0.2, 0.6]))
+    }
+
     /// The solver output must follow p for any q (OTLP property).
     #[test]
     fn output_follows_p() {
-        let p = Dist(vec![0.5, 0.3, 0.2]);
-        let q = Dist(vec![0.2, 0.2, 0.6]);
+        let (p, q) = pq();
         let mut rng = Pcg64::seeded(3);
         let mut counts = [0usize; 3];
         let n = 60_000;
@@ -93,23 +103,27 @@ mod tests {
         }
         for t in 0..3 {
             let f = counts[t] as f64 / n as f64;
-            assert!((f - p.0[t] as f64).abs() < 0.01, "token {t}: {f}");
+            assert!((f - p.p(t) as f64).abs() < 0.01, "token {t}: {f}");
         }
     }
 
-    /// Scratch-based and allocating entry points draw identical streams.
+    /// Scratch-based and allocating entry points draw identical streams —
+    /// in both representations.
     #[test]
     fn solve_scratch_matches_solve() {
-        let p = Dist(vec![0.5, 0.3, 0.2]);
-        let q = Dist(vec![0.2, 0.2, 0.6]);
+        let (p, q) = pq();
+        let (ps, qs) = (p.sparsify(), q.sparsify());
         let mut scratch = SolverScratch::default();
         for seed in 0..100 {
             let mut r1 = Pcg64::seeded(seed);
             let mut r2 = Pcg64::seeded(seed);
+            let mut r3 = Pcg64::seeded(seed);
             let xs = [2u32, 0];
             let a = Naive.solve(&p, &q, &xs, &mut r1);
             let b = Naive.solve_scratch(&p, &q, &xs, &mut r2, &mut scratch);
+            let c = Naive.solve_scratch(&ps, &qs, &xs, &mut r3, &mut scratch);
             assert_eq!(a, b, "seed {seed}");
+            assert_eq!(a, c, "seed {seed} (sparse)");
         }
     }
 
@@ -117,6 +131,7 @@ mod tests {
     fn acceptance_rate_matches_mc() {
         let p = Dist(vec![0.5, 0.3, 0.2]);
         let q = Dist(vec![0.2, 0.2, 0.6]);
+        let (pn, qn) = (nd(p.0.clone()), nd(q.0.clone()));
         for k in 1..=4 {
             let exact = Naive.acceptance_rate(&p, &q, k);
             let mut rng = Pcg64::seeded(10 + k as u64);
@@ -124,7 +139,7 @@ mod tests {
             let mut hits = 0usize;
             for _ in 0..n {
                 let xs: Vec<u32> = (0..k).map(|_| q.sample(&mut rng) as u32).collect();
-                let y = Naive.solve(&p, &q, &xs, &mut rng);
+                let y = Naive.solve(&pn, &qn, &xs, &mut rng);
                 if xs.contains(&y) {
                     hits += 1;
                 }
@@ -136,10 +151,10 @@ mod tests {
 
     #[test]
     fn branching_matches_mc() {
-        let p = Dist(vec![0.5, 0.3, 0.2]);
-        let q = Dist(vec![0.2, 0.2, 0.6]);
+        let (p, q) = pq();
         let xs = vec![2u32, 0, 1];
         let b = Naive.branching(&p, &q, &xs);
+        assert_eq!(b, Naive.branching(&p.sparsify(), &q.sparsify(), &xs));
         let mut rng = Pcg64::seeded(20);
         let n = 120_000usize;
         let mut counts = [0usize; 3];

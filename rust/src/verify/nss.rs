@@ -4,7 +4,7 @@
 //! Trivially lossless; acceptance only via collision with drafted tokens.
 
 use super::{OtlpSolver, SolverScratch};
-use crate::dist::Dist;
+use crate::dist::{Dist, NodeDist};
 use crate::util::Pcg64;
 
 pub struct Nss;
@@ -16,8 +16,8 @@ impl OtlpSolver for Nss {
 
     fn solve_scratch(
         &self,
-        p: &Dist,
-        _q: &Dist,
+        p: &NodeDist,
+        _q: &NodeDist,
         _xs: &[u32],
         rng: &mut Pcg64,
         _scratch: &mut SolverScratch,
@@ -34,7 +34,7 @@ impl OtlpSolver for Nss {
     }
 
     /// Algorithm 11: B(X_i) = p(X_i).
-    fn branching_into(&self, p: &Dist, _q: &Dist, xs: &[u32], out: &mut Vec<f64>) {
+    fn branching_into(&self, p: &NodeDist, _q: &NodeDist, xs: &[u32], out: &mut Vec<f64>) {
         out.clear();
         out.extend(xs.iter().map(|&x| p.p(x as usize) as f64));
     }
@@ -44,10 +44,14 @@ impl OtlpSolver for Nss {
 mod tests {
     use super::*;
 
+    fn nd(v: Vec<f32>) -> NodeDist {
+        NodeDist::from(Dist(v))
+    }
+
     #[test]
     fn output_follows_p() {
-        let p = Dist(vec![0.1, 0.2, 0.7]);
-        let q = Dist(vec![0.5, 0.3, 0.2]);
+        let p = nd(vec![0.1, 0.2, 0.7]);
+        let q = nd(vec![0.5, 0.3, 0.2]);
         let mut rng = Pcg64::seeded(1);
         let mut counts = [0usize; 3];
         for _ in 0..30_000 {
@@ -55,7 +59,7 @@ mod tests {
         }
         for t in 0..3 {
             let f = counts[t] as f32 / 30_000.0;
-            assert!((f - p.0[t]).abs() < 0.02, "token {t}: {f}");
+            assert!((f - p.p(t)).abs() < 0.02, "token {t}: {f}");
         }
     }
 
@@ -65,12 +69,13 @@ mod tests {
         let q = Dist(vec![0.6, 0.2, 0.2]);
         let k = 3;
         let exact = Nss.acceptance_rate(&p, &q, k);
+        let (pn, qn) = (nd(p.0.clone()), nd(q.0.clone()));
         let mut rng = Pcg64::seeded(2);
         let mut hits = 0usize;
         let n = 60_000;
         for _ in 0..n {
             let xs: Vec<u32> = (0..k).map(|_| q.sample(&mut rng) as u32).collect();
-            let y = Nss.solve(&p, &q, &xs, &mut rng);
+            let y = Nss.solve(&pn, &qn, &xs, &mut rng);
             if xs.contains(&y) {
                 hits += 1;
             }
@@ -81,8 +86,8 @@ mod tests {
 
     #[test]
     fn branching_matches_mc() {
-        let p = Dist(vec![0.25, 0.25, 0.5]);
-        let q = Dist(vec![0.4, 0.4, 0.2]);
+        let p = nd(vec![0.25, 0.25, 0.5]);
+        let q = nd(vec![0.4, 0.4, 0.2]);
         let xs = vec![0u32, 2, 0];
         let b = Nss.branching(&p, &q, &xs);
         assert!((b[0] - 0.25).abs() < 1e-9);
@@ -92,12 +97,30 @@ mod tests {
 
     #[test]
     fn branching_into_reuses_buffer() {
-        let p = Dist(vec![0.25, 0.25, 0.5]);
-        let q = Dist(vec![0.4, 0.4, 0.2]);
+        let p = nd(vec![0.25, 0.25, 0.5]);
+        let q = nd(vec![0.4, 0.4, 0.2]);
         let mut out = Vec::new();
         Nss.branching_into(&p, &q, &[0, 2], &mut out);
         assert_eq!(out, vec![0.25, 0.5]);
         Nss.branching_into(&p, &q, &[1], &mut out);
         assert_eq!(out, vec![0.25]);
+    }
+
+    /// The sparse path must replay the dense path's rng stream exactly.
+    #[test]
+    fn sparse_matches_dense() {
+        let p = nd(vec![0.1, 0.0, 0.2, 0.7]);
+        let q = nd(vec![0.5, 0.3, 0.0, 0.2]);
+        let (ps, qs) = (p.sparsify(), q.sparsify());
+        for seed in 0..100 {
+            let mut r1 = Pcg64::seeded(seed);
+            let mut r2 = Pcg64::seeded(seed);
+            assert_eq!(
+                Nss.solve(&p, &q, &[0, 3], &mut r1),
+                Nss.solve(&ps, &qs, &[0, 3], &mut r2),
+                "seed {seed}"
+            );
+        }
+        assert_eq!(Nss.branching(&p, &q, &[0, 3]), Nss.branching(&ps, &qs, &[0, 3]));
     }
 }

@@ -3,18 +3,21 @@
 //! Multi-round naive with uniform child selection and per-round residual
 //! update of p. The branching calculator is the exact multiset recursion of
 //! Algorithm 14 (k ≤ 4 keeps it tiny).
+//!
+//! The per-round residual chain only ever *shrinks* the support, so the
+//! sparse path keeps every round O(|support|) via the sparse residual merge.
 
 use std::collections::HashMap;
 
 use super::{OtlpSolver, SolverScratch};
-use crate::dist::Dist;
+use crate::dist::{Dist, NodeDist};
 use crate::util::Pcg64;
 
 pub struct SpecInfer;
 
 /// p ← normalize((p − q)_+); falls back to p unchanged on zero mass.
-fn residualize(p: &Dist, q: &Dist) -> Dist {
-    Dist::residual(p, q).unwrap_or_else(|| p.clone())
+fn residualize(p: &NodeDist, q: &NodeDist) -> NodeDist {
+    NodeDist::residual(p, q).unwrap_or_else(|| p.clone())
 }
 
 impl OtlpSolver for SpecInfer {
@@ -24,15 +27,15 @@ impl OtlpSolver for SpecInfer {
 
     fn solve_scratch(
         &self,
-        p: &Dist,
-        q: &Dist,
+        p: &NodeDist,
+        q: &NodeDist,
         xs: &[u32],
         rng: &mut Pcg64,
         scratch: &mut SolverScratch,
     ) -> u32 {
         // multiset of remaining draws in reusable scratch; the round target
         // stays a borrow of `p` until the first rejection forces a residual
-        // (common case: round 1 accepts and no vocab-length copy happens),
+        // (common case: round 1 accepts and no support-length copy happens),
         // then ping-pongs between dist_a and dist_b
         scratch.tokens.clear();
         scratch.tokens.extend_from_slice(xs);
@@ -52,10 +55,10 @@ impl OtlpSolver for SpecInfer {
             // p ← normalize((p − q)_+); zero residual mass keeps the current
             // target (residualize fallback), matching the allocating path
             if on_p {
-                if Dist::residual_into(p, q, &mut scratch.dist_a) {
+                if NodeDist::residual_into(p, q, &mut scratch.dist_a) {
                     on_p = false;
                 }
-            } else if Dist::residual_into(&scratch.dist_a, q, &mut scratch.dist_b) {
+            } else if NodeDist::residual_into(&scratch.dist_a, q, &mut scratch.dist_b) {
                 std::mem::swap(&mut scratch.dist_a, &mut scratch.dist_b);
             }
             scratch.tokens.swap_remove(idx);
@@ -111,11 +114,11 @@ impl OtlpSolver for SpecInfer {
     }
 
     /// Algorithm 14 — exact recursion over sub-multisets.
-    fn branching_into(&self, p: &Dist, q: &Dist, xs: &[u32], out: &mut Vec<f64>) {
+    fn branching_into(&self, p: &NodeDist, q: &NodeDist, xs: &[u32], out: &mut Vec<f64>) {
         let k = xs.len();
         // Pre-compute round distributions p_0..p_k and acceptance vectors
         // a_i(t) = min(1, p_{i-1}(t)/q(t)) for rounds i = 1..k.
-        let mut p_rounds: Vec<Dist> = vec![p.clone()];
+        let mut p_rounds: Vec<NodeDist> = vec![p.clone()];
         for _ in 0..k {
             let last = p_rounds.last().unwrap();
             p_rounds.push(residualize(last, q));
@@ -138,8 +141,8 @@ impl OtlpSolver for SpecInfer {
             s: &mut Vec<u32>,
             x: u32,
             k: usize,
-            p_rounds: &[Dist],
-            q: &Dist,
+            p_rounds: &[NodeDist],
+            q: &NodeDist,
             accept: &dyn Fn(usize, usize) -> f64,
             memo: &mut HashMap<(usize, Vec<u32>, u32), f64>,
         ) -> f64 {
@@ -181,10 +184,10 @@ impl OtlpSolver for SpecInfer {
 mod tests {
     use super::*;
 
-    fn pq() -> (Dist, Dist) {
+    fn pq() -> (NodeDist, NodeDist) {
         (
-            Dist(vec![0.45, 0.25, 0.2, 0.1]),
-            Dist(vec![0.1, 0.3, 0.25, 0.35]),
+            NodeDist::from(Dist(vec![0.45, 0.25, 0.2, 0.1])),
+            NodeDist::from(Dist(vec![0.1, 0.3, 0.25, 0.35])),
         )
     }
 
@@ -200,30 +203,36 @@ mod tests {
         }
         for t in 0..4 {
             let f = counts[t] as f64 / n as f64;
-            assert!((f - p.0[t] as f64).abs() < 0.012, "token {t}: {f}");
+            assert!((f - p.p(t) as f64).abs() < 0.012, "token {t}: {f}");
         }
     }
 
-    /// The scratch path must replay the identical randomized algorithm.
+    /// The scratch path must replay the identical randomized algorithm —
+    /// and the sparse representation the identical stream again.
     #[test]
     fn solve_scratch_matches_solve() {
         let (p, q) = pq();
+        let (ps, qs) = (p.sparsify(), q.sparsify());
         let mut scratch = SolverScratch::default();
         for seed in 0..200 {
             let mut r1 = Pcg64::seeded(seed);
             let mut r2 = Pcg64::seeded(seed);
+            let mut r3 = Pcg64::seeded(seed);
             let xs = [1u32, 3, 1, 0];
             let a = SpecInfer.solve(&p, &q, &xs, &mut r1);
             let b = SpecInfer.solve_scratch(&p, &q, &xs, &mut r2, &mut scratch);
+            let c = SpecInfer.solve_scratch(&ps, &qs, &xs, &mut r3, &mut scratch);
             assert_eq!(a, b, "seed {seed}");
+            assert_eq!(a, c, "seed {seed} (sparse)");
         }
     }
 
     #[test]
     fn acceptance_rate_matches_mc() {
         let (p, q) = pq();
+        let (pd, qd) = (p.to_dense(), q.to_dense());
         for k in 1..=4 {
-            let exact = SpecInfer.acceptance_rate(&p, &q, k);
+            let exact = SpecInfer.acceptance_rate(&pd, &qd, k);
             let mut rng = Pcg64::seeded(60 + k as u64);
             let n = 80_000;
             let mut hits = 0usize;
@@ -243,6 +252,7 @@ mod tests {
         let (p, q) = pq();
         let xs = vec![1u32, 3, 1, 0];
         let b = SpecInfer.branching(&p, &q, &xs);
+        assert_eq!(b, SpecInfer.branching(&p.sparsify(), &q.sparsify(), &xs));
         let mut rng = Pcg64::seeded(70);
         let n = 150_000usize;
         let mut counts = [0usize; 4];
@@ -258,8 +268,9 @@ mod tests {
     #[test]
     fn reduces_to_naive_at_k1() {
         let (p, q) = pq();
-        let a = SpecInfer.acceptance_rate(&p, &q, 1);
-        let n = super::super::naive::Naive.acceptance_rate(&p, &q, 1);
+        let (pd, qd) = (p.to_dense(), q.to_dense());
+        let a = SpecInfer.acceptance_rate(&pd, &qd, 1);
+        let n = super::super::naive::Naive.acceptance_rate(&pd, &qd, 1);
         assert!((a - n).abs() < 1e-9, "{a} vs {n}");
     }
 }

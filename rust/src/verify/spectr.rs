@@ -3,14 +3,20 @@
 //! Computes the division factor ρ* ∈ [1, k] by binary search on
 //! ρ ↦ p_acc(ρ) − ρ·β(ρ), then runs k ρ*-damped naive rounds followed by a
 //! γ-corrected residual. Reduces to Naive at k = 1.
+//!
+//! β(ρ) = Σ_t min(p(t)/ρ, q(t)) is supported only on the intersection of
+//! the two supports, and the γ-corrected residual only on p's support — so
+//! the sparse path runs every bisection step and the residual build in
+//! O(|support|), identical in value to the dense reference (zero terms are
+//! exact zeros).
 
 use super::{OtlpSolver, SolverScratch};
-use crate::dist::Dist;
+use crate::dist::{mixed_repr, Dist, NodeDist, SparseDist};
 use crate::util::Pcg64;
 
 pub struct SpecTr;
 
-/// β(ρ) = Σ_t min(p(t)/ρ, q(t)).
+/// β(ρ) = Σ_t min(p(t)/ρ, q(t)) — dense reference.
 fn beta(p: &Dist, q: &Dist, rho: f64) -> f64 {
     p.0.iter()
         .zip(&q.0)
@@ -18,18 +24,35 @@ fn beta(p: &Dist, q: &Dist, rho: f64) -> f64 {
         .sum()
 }
 
+/// β(ρ) over the support intersection (terms with p = 0 or q = 0 vanish).
+fn beta_sparse(p: &SparseDist, q: &SparseDist, rho: f64) -> f64 {
+    let mut s = 0.0f64;
+    p.zip_support(q, |_, a, b| {
+        s += (a as f64 / rho).min(b as f64);
+    });
+    s
+}
+
+fn beta_nd(p: &NodeDist, q: &NodeDist, rho: f64) -> f64 {
+    match (p, q) {
+        (NodeDist::Dense(a), NodeDist::Dense(b)) => beta(a, b, rho),
+        (NodeDist::Sparse(a), NodeDist::Sparse(b)) => beta_sparse(a, b, rho),
+        _ => mixed_repr(),
+    }
+}
+
 fn p_acc(beta: f64, k: usize) -> f64 {
     1.0 - (1.0 - beta).powi(k as i32)
 }
 
-/// Solve p_acc(ρ) = ρ β(ρ) on [1, k] by bisection (g is monotone
+/// Bisection core for p_acc(ρ) = ρ β(ρ) on [1, k] (g is monotone
 /// decreasing there, per Sun et al.).
-pub fn solve_rho(p: &Dist, q: &Dist, k: usize) -> f64 {
+fn solve_rho_with(beta_of: impl Fn(f64) -> f64, k: usize) -> f64 {
     if k <= 1 {
         return 1.0;
     }
     let g = |rho: f64| {
-        let b = beta(p, q, rho);
+        let b = beta_of(rho);
         p_acc(b, k) - rho * b
     };
     let (mut lo, mut hi) = (1.0f64, k as f64);
@@ -41,7 +64,8 @@ pub fn solve_rho(p: &Dist, q: &Dist, k: usize) -> f64 {
     }
     // 30 halvings of an interval of width ≤ 3 pin ρ* to ~3e-9 — far below
     // the f32 resolution of the dists — at half the per-node cost of the
-    // old 60-iteration loop (each g() is an O(V) scan on the verify path).
+    // old 60-iteration loop (each g() is an O(support) scan on the verify
+    // path).
     for _ in 0..30 {
         let mid = 0.5 * (lo + hi);
         if g(mid) > 0.0 {
@@ -53,8 +77,17 @@ pub fn solve_rho(p: &Dist, q: &Dist, k: usize) -> f64 {
     0.5 * (lo + hi)
 }
 
+/// Solve p_acc(ρ) = ρ β(ρ) on [1, k] for either representation.
+pub fn solve_rho(p: &NodeDist, q: &NodeDist, k: usize) -> f64 {
+    solve_rho_with(|rho| beta_nd(p, q, rho), k)
+}
+
+fn solve_rho_dense(p: &Dist, q: &Dist, k: usize) -> f64 {
+    solve_rho_with(|rho| beta(p, q, rho), k)
+}
+
 /// Residual ∝ (p − min(p/ρ*, q)·γ)_+ with γ = p_acc/β, written into `out`
-/// (no allocation once `out` has capacity).
+/// (no allocation once `out` has capacity) — dense reference.
 fn residual_into(p: &Dist, q: &Dist, rho: f64, gamma: f64, out: &mut Dist) {
     let o = &mut out.0;
     o.clear();
@@ -74,10 +107,54 @@ fn residual_into(p: &Dist, q: &Dist, rho: f64, gamma: f64, out: &mut Dist) {
     }
 }
 
-/// Allocating wrapper over [`residual_into`] for the calculators.
+/// Sparse residual: support ⊆ support(p), O(|support_p| + |support_q|).
+fn residual_sparse_into(p: &SparseDist, q: &SparseDist, rho: f64, gamma: f64, out: &mut SparseDist) {
+    out.clear_for(p.vocab);
+    let mut mass = 0.0f64;
+    p.zip_support(q, |id, a, b| {
+        let m = (a as f64 / rho).min(b as f64);
+        let v = (a as f64 - m * gamma).max(0.0) as f32;
+        if v > 0.0 {
+            out.ids.push(id);
+            out.ps.push(v);
+        }
+        mass += v as f64;
+    });
+    if mass > 0.0 {
+        let inv = (1.0 / mass) as f32;
+        for v in out.ps.iter_mut() {
+            *v *= inv;
+        }
+        out.mass = 1.0;
+    }
+}
+
+fn residual_nd_into(p: &NodeDist, q: &NodeDist, rho: f64, gamma: f64, out: &mut NodeDist) {
+    match (p, q) {
+        (NodeDist::Dense(a), NodeDist::Dense(b)) => {
+            residual_into(a, b, rho, gamma, out.make_dense_mut())
+        }
+        (NodeDist::Sparse(a), NodeDist::Sparse(b)) => {
+            residual_sparse_into(a, b, rho, gamma, out.make_sparse_mut())
+        }
+        _ => mixed_repr(),
+    }
+}
+
+/// Allocating wrapper over [`residual_into`] for the dense calculators.
 fn residual(p: &Dist, q: &Dist, rho: f64, gamma: f64) -> Dist {
     let mut out = Dist(Vec::with_capacity(p.len()));
     residual_into(p, q, rho, gamma, &mut out);
+    out
+}
+
+/// Allocating residual in the inputs' representation (branching path).
+fn residual_nd(p: &NodeDist, q: &NodeDist, rho: f64, gamma: f64) -> NodeDist {
+    let mut out = match p {
+        NodeDist::Dense(_) => NodeDist::Dense(Dist::default()),
+        NodeDist::Sparse(_) => NodeDist::Sparse(SparseDist::default()),
+    };
+    residual_nd_into(p, q, rho, gamma, &mut out);
     out
 }
 
@@ -88,18 +165,18 @@ impl OtlpSolver for SpecTr {
 
     fn solve_scratch(
         &self,
-        p: &Dist,
-        q: &Dist,
+        p: &NodeDist,
+        q: &NodeDist,
         xs: &[u32],
         rng: &mut Pcg64,
         scratch: &mut SolverScratch,
     ) -> u32 {
         let k = xs.len();
         let rho = solve_rho(p, q, k);
-        let b = beta(p, q, rho);
+        let b = beta_nd(p, q, rho);
         if b <= 0.0 {
             // p and q disjoint: no round can accept.
-            residual_into(p, q, rho, 0.0, &mut scratch.dist_a);
+            residual_nd_into(p, q, rho, 0.0, &mut scratch.dist_a);
             return scratch.dist_a.sample(rng) as u32;
         }
         let gamma = p_acc(b, k) / b;
@@ -114,13 +191,13 @@ impl OtlpSolver for SpecTr {
                 return x;
             }
         }
-        residual_into(p, q, rho, gamma, &mut scratch.dist_a);
+        residual_nd_into(p, q, rho, gamma, &mut scratch.dist_a);
         scratch.dist_a.sample(rng) as u32
     }
 
     /// Algorithm 8.
     fn acceptance_rate(&self, p: &Dist, q: &Dist, k: usize) -> f64 {
-        let rho = solve_rho(p, q, k);
+        let rho = solve_rho_dense(p, q, k);
         let b = beta(p, q, rho);
         if b <= 0.0 {
             return 0.0;
@@ -142,12 +219,12 @@ impl OtlpSolver for SpecTr {
     }
 
     /// Algorithm 13.
-    fn branching_into(&self, p: &Dist, q: &Dist, xs: &[u32], out: &mut Vec<f64>) {
+    fn branching_into(&self, p: &NodeDist, q: &NodeDist, xs: &[u32], out: &mut Vec<f64>) {
         let k = xs.len();
         let rho = solve_rho(p, q, k);
-        let b = beta(p, q, rho);
+        let b = beta_nd(p, q, rho);
         let gamma = if b > 0.0 { p_acc(b, k) / b } else { 0.0 };
-        let res = residual(p, q, rho, gamma);
+        let res = residual_nd(p, q, rho, gamma);
         let a: Vec<f64> = xs
             .iter()
             .map(|&x| {
@@ -182,10 +259,10 @@ impl OtlpSolver for SpecTr {
 mod tests {
     use super::*;
 
-    fn pq() -> (Dist, Dist) {
+    fn pq() -> (NodeDist, NodeDist) {
         (
-            Dist(vec![0.45, 0.25, 0.2, 0.1]),
-            Dist(vec![0.1, 0.3, 0.25, 0.35]),
+            NodeDist::from(Dist(vec![0.45, 0.25, 0.2, 0.1])),
+            NodeDist::from(Dist(vec![0.1, 0.3, 0.25, 0.35])),
         )
     }
 
@@ -195,9 +272,11 @@ mod tests {
         for k in 2..=4 {
             let rho = solve_rho(&p, &q, k);
             assert!((1.0..=k as f64).contains(&rho), "rho {rho}");
-            let b = beta(&p, &q, rho);
+            let b = beta_nd(&p, &q, rho);
             let g = p_acc(b, k) - rho * b;
             assert!(g.abs() < 1e-6, "g {g}");
+            // the sparse bisection walks the identical interval sequence
+            assert_eq!(rho, solve_rho(&p.sparsify(), &q.sparsify(), k));
         }
     }
 
@@ -213,15 +292,16 @@ mod tests {
         }
         for t in 0..4 {
             let f = counts[t] as f64 / n as f64;
-            assert!((f - p.0[t] as f64).abs() < 0.012, "token {t}: {f} vs {}", p.0[t]);
+            assert!((f - p.p(t) as f64).abs() < 0.012, "token {t}: {f} vs {}", p.p(t));
         }
     }
 
     #[test]
     fn acceptance_rate_matches_mc() {
         let (p, q) = pq();
+        let (pd, qd) = (p.to_dense(), q.to_dense());
         for k in 1..=4 {
-            let exact = SpecTr.acceptance_rate(&p, &q, k);
+            let exact = SpecTr.acceptance_rate(&pd, &qd, k);
             let mut rng = Pcg64::seeded(40 + k as u64);
             let n = 80_000;
             let mut hits = 0usize;
@@ -241,6 +321,7 @@ mod tests {
         let (p, q) = pq();
         let xs = vec![3u32, 0, 3];
         let b = SpecTr.branching(&p, &q, &xs);
+        assert_eq!(b, SpecTr.branching(&p.sparsify(), &q.sparsify(), &xs));
         let mut rng = Pcg64::seeded(50);
         let n = 120_000usize;
         let mut counts = [0usize; 4];
@@ -256,8 +337,9 @@ mod tests {
     #[test]
     fn reduces_to_naive_at_k1() {
         let (p, q) = pq();
-        let a_spectr = SpecTr.acceptance_rate(&p, &q, 1);
-        let a_naive = super::super::naive::Naive.acceptance_rate(&p, &q, 1);
+        let (pd, qd) = (p.to_dense(), q.to_dense());
+        let a_spectr = SpecTr.acceptance_rate(&pd, &qd, 1);
+        let a_naive = super::super::naive::Naive.acceptance_rate(&pd, &qd, 1);
         assert!((a_spectr - a_naive).abs() < 1e-9);
     }
 }

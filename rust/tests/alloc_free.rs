@@ -10,8 +10,8 @@
 
 mod common;
 
-use common::{allocs, make_tree, random_dist, CountingAlloc};
-use specdelay::dist::Dist;
+use common::{allocs, make_topp_tree, make_tree, random_dist, sparsify_tree, CountingAlloc};
+use specdelay::dist::{Dist, SparseDist};
 use specdelay::tree::DraftTree;
 use specdelay::util::Pcg64;
 use specdelay::verify::{verifier, Verdict, VerifyScratch};
@@ -97,4 +97,73 @@ fn steady_state_verify_is_allocation_free() {
         Dist::residual_into(&p, &q, &mut buf);
     }
     assert_eq!(allocs() - a0, 0, "dist kernels allocated");
+
+    // ---- sparse storage: the same guarantee with truncated supports ----
+    // The first sparse walk flips the scratch buffers' representation
+    // (one-off allocations); after the warm-up rounds every verifier must
+    // again be allocation-free in steady state.
+    let sparse_trees: Vec<DraftTree> = (0..16)
+        .map(|_| sparsify_tree(&make_topp_tree(&mut rng, vocab, 0.9)))
+        .collect();
+    let sparse_fallback: Vec<DraftTree> = sparse_trees
+        .iter()
+        .map(|t| {
+            let mut t = t.clone();
+            t.path_draws = None;
+            t
+        })
+        .collect();
+    for _ in 0..2 {
+        for (_, ver) in &verifiers {
+            for t in &sparse_trees {
+                ver.verify_into(t, &mut rng, &mut scratch, &mut verdict);
+            }
+            for t in &sparse_fallback {
+                ver.verify_into(t, &mut rng, &mut scratch, &mut verdict);
+            }
+        }
+    }
+    for (name, ver) in &verifiers {
+        let rounds = 200usize;
+        let a0 = allocs();
+        for i in 0..rounds {
+            ver.verify_into(
+                &sparse_trees[i % sparse_trees.len()],
+                &mut rng,
+                &mut scratch,
+                &mut verdict,
+            );
+        }
+        let da = allocs() - a0;
+        assert_eq!(
+            da, 0,
+            "{name} (sparse): {da} allocations across {rounds} steady-state verifies"
+        );
+        assert!(verdict.block_tokens() >= 1);
+    }
+    let a0 = allocs();
+    for i in 0..200 {
+        trav.verify_into(
+            &sparse_fallback[i % sparse_fallback.len()],
+            &mut rng,
+            &mut scratch,
+            &mut verdict,
+        );
+    }
+    assert_eq!(allocs() - a0, 0, "Traversal sparse fallback path allocated");
+
+    // Sparse dist kernels: sampling and scratch residual merges.
+    let ps = SparseDist::from_dense(&p);
+    let qs = SparseDist::from_dense(&q);
+    let mut sbuf = SparseDist::default();
+    sbuf.ids.reserve(vocab);
+    sbuf.ps.reserve(vocab);
+    SparseDist::residual_into(&ps, &qs, &mut sbuf); // warm
+    let a0 = allocs();
+    for _ in 0..100 {
+        let t = ps.sample(&mut rng);
+        assert!(t < vocab);
+        SparseDist::residual_into(&ps, &qs, &mut sbuf);
+    }
+    assert_eq!(allocs() - a0, 0, "sparse dist kernels allocated");
 }

@@ -3,7 +3,7 @@
 //! solvers, over randomized (p, q) pairs — the paper's own validation
 //! methodology, applied systematically.
 
-use specdelay::dist::Dist;
+use specdelay::dist::{Dist, NodeDist};
 use specdelay::util::Pcg64;
 use specdelay::verify::{ot_solver, OtlpSolver};
 
@@ -27,11 +27,12 @@ fn check_solver(name: &str, trials: usize) {
 
         // acceptance rate vs MC
         let rate = solver.acceptance_rate(&p, &q, k);
+        let (pn, qn) = (NodeDist::from(p.clone()), NodeDist::from(q.clone()));
         let n = 40_000;
         let mut hits = 0usize;
         for _ in 0..n {
             let xs: Vec<u32> = (0..k).map(|_| q.sample(&mut rng) as u32).collect();
-            let y = solver.solve(&p, &q, &xs, &mut rng);
+            let y = solver.solve(&pn, &qn, &xs, &mut rng);
             if xs.contains(&y) {
                 hits += 1;
             }
@@ -53,11 +54,19 @@ fn check_solver(name: &str, trials: usize) {
 
         // branching vs MC on a fixed draw
         let xs: Vec<u32> = (0..k).map(|_| q.sample(&mut rng) as u32).collect();
-        let b = solver.branching(&p, &q, &xs);
+        let b = solver.branching(&pn, &qn, &xs);
+        // the sparse representation computes the identical table
+        let bs = solver.branching(&pn.sparsify(), &qn.sparsify(), &xs);
+        for (i, (a, c)) in b.iter().zip(&bs).enumerate() {
+            assert!(
+                (a - c).abs() <= 1e-12,
+                "{name} trial {trial} pos {i}: dense {a} vs sparse {c}"
+            );
+        }
         let n2 = 40_000;
         let mut counts = vec![0usize; v];
         for _ in 0..n2 {
-            counts[solver.solve(&p, &q, &xs, &mut rng) as usize] += 1;
+            counts[solver.solve(&pn, &qn, &xs, &mut rng) as usize] += 1;
         }
         for (i, &x) in xs.iter().enumerate() {
             let mc = counts[x as usize] as f64 / n2 as f64;

@@ -15,7 +15,7 @@ pub mod superset;
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use specdelay::dist::Dist;
+use specdelay::dist::{Dist, SamplingConfig};
 use specdelay::tree::{DraftTree, PathDraws, Provenance};
 use specdelay::util::Pcg64;
 
@@ -57,17 +57,42 @@ pub fn random_dist(v: usize, rng: &mut Pcg64, sharp: f32) -> Dist {
     Dist(d)
 }
 
+/// Random *truncated* distribution: sharp logits through the temperature +
+/// top-p transform, so the support is a small nucleus (dense storage, zeros
+/// outside the nucleus). The workload for the sparse-vs-dense equality
+/// tests and the dist_kernels bench.
+pub fn random_topp_dist(v: usize, rng: &mut Pcg64, top_p: f32) -> Dist {
+    let logits: Vec<f32> = (0..v).map(|_| rng.next_f32() * 10.0).collect();
+    Dist::from_logits(&logits, SamplingConfig::new(1.0, top_p))
+}
+
+/// Sparse twin of a tree: identical structure and distribution values,
+/// sparse storage. Dense/sparse verdict-equality tests run both twins on
+/// the same seeded rng.
+pub fn sparsify_tree(tree: &DraftTree) -> DraftTree {
+    let mut t = tree.clone();
+    for n in t.nodes.iter_mut() {
+        n.p = n.p.take().map(|d| d.sparsify());
+        n.q = n.q.take().map(|d| d.sparsify());
+    }
+    t
+}
+
 /// Delayed tree: trunk of 2, then 3 branches of 3 — the paper's moderate
-/// (K=3, L1=2, L2=3) shape, 12 nodes. p and q are set at every node and
-/// path draws are recorded with `shared_edges = 2`.
-pub fn make_tree(rng: &mut Pcg64, v: usize) -> DraftTree {
+/// (K=3, L1=2, L2=3) shape, 12 nodes. p and q drawn by `gen_p`/`gen_q` at
+/// every node; path draws are recorded with `shared_edges = 2`.
+fn make_tree_with(
+    rng: &mut Pcg64,
+    mut gen_p: impl FnMut(&mut Pcg64) -> Dist,
+    mut gen_q: impl FnMut(&mut Pcg64) -> Dist,
+) -> DraftTree {
     let mut t = DraftTree::new(5);
     let mut node = 0;
     for step in 0..2 {
-        let q = random_dist(v, rng, 1.0);
+        let q = gen_q(rng);
         let tok = q.sample(rng) as u32;
         t.set_q(node, q);
-        t.set_p(node, random_dist(v, rng, 2.0));
+        t.set_p(node, gen_p(rng));
         node = t.add_child(node, tok, Provenance::Trunk { step: step + 1 });
     }
     let bp = node;
@@ -76,10 +101,11 @@ pub fn make_tree(rng: &mut Pcg64, v: usize) -> DraftTree {
         let mut cur = bp;
         for step in 0..3 {
             if t.nodes[cur].q.is_none() {
-                t.set_q(cur, random_dist(v, rng, 1.0));
+                let q = gen_q(rng);
+                t.set_q(cur, q);
             }
             if t.nodes[cur].p.is_none() {
-                t.set_p(cur, random_dist(v, rng, 2.0));
+                t.set_p(cur, gen_p(rng));
             }
             let tok = t.nodes[cur].q.as_ref().unwrap().sample(rng) as u32;
             cur = t.add_child(cur, tok, Provenance::Branch { branch: b, step: step + 1 });
@@ -88,12 +114,25 @@ pub fn make_tree(rng: &mut Pcg64, v: usize) -> DraftTree {
     }
     for i in 0..t.len() {
         if t.nodes[i].p.is_none() {
-            t.set_p(i, random_dist(v, rng, 2.0));
+            t.set_p(i, gen_p(rng));
         }
         if t.nodes[i].q.is_none() {
-            t.set_q(i, random_dist(v, rng, 1.0));
+            let q = gen_q(rng);
+            t.set_q(i, q);
         }
     }
     t.path_draws = Some(PathDraws { paths, shared_edges: 2 });
     t
+}
+
+/// The standard full-support workload (dense storage).
+pub fn make_tree(rng: &mut Pcg64, v: usize) -> DraftTree {
+    make_tree_with(rng, |r| random_dist(v, r, 2.0), |r| random_dist(v, r, 1.0))
+}
+
+/// Truncated-support workload: every p/q runs through top-p, so the sparse
+/// twin ([`sparsify_tree`]) carries genuinely small supports. Dense storage
+/// (the oracle side of the pair).
+pub fn make_topp_tree(rng: &mut Pcg64, v: usize, top_p: f32) -> DraftTree {
+    make_tree_with(rng, |r| random_topp_dist(v, r, top_p), |r| random_topp_dist(v, r, top_p))
 }

@@ -2,12 +2,12 @@
 //! selector-score bench and the shared-vs-per-action equality tests (pure
 //! rust, no PJRT, no model artifacts).
 
-use specdelay::dist::Dist;
+use specdelay::dist::{Dist, NodeDist};
 use specdelay::selector::{BranchChain, Superset, K_MAX, L1_MAX, L2_MAX};
 use specdelay::util::Pcg64;
 use specdelay::verify::{self, OtlpSolver};
 
-use super::random_dist;
+use super::{random_dist, random_topp_dist};
 
 /// The five distinct OT solvers, in `benchkit::experiments::OT_ALGOS`
 /// spirit ("NaiveTree" shares the "Naive" solver and is omitted).
@@ -18,14 +18,17 @@ pub fn ot_solvers() -> Vec<(&'static str, Box<dyn OtlpSolver>)> {
         .collect()
 }
 
-/// Draft-shaped superset sample over a synthetic vocabulary: full trunk of
-/// L1_MAX plus K_MAX chains of L2_MAX at every trunk depth, p and q at
-/// every node. Chain tokens are drawn from sharp draft distributions so
-/// chains share prefixes often enough to exercise the scorers' merge and
-/// duplicate-child paths.
-pub fn make_superset(rng: &mut Pcg64, v: usize) -> Superset {
-    let trunk_q: Vec<Dist> = (0..L1_MAX).map(|_| random_dist(v, rng, 1.0)).collect();
-    let trunk_p: Vec<Dist> = (0..=L1_MAX).map(|_| random_dist(v, rng, 2.0)).collect();
+/// Draft-shaped superset sample built from `gen_p`/`gen_q` (dense storage):
+/// full trunk of L1_MAX plus K_MAX chains of L2_MAX at every trunk depth,
+/// p and q at every node.
+fn make_superset_with(
+    rng: &mut Pcg64,
+    v: usize,
+    mut gen_p: impl FnMut(&mut Pcg64) -> Dist,
+    mut gen_q: impl FnMut(&mut Pcg64) -> Dist,
+) -> Superset {
+    let trunk_q: Vec<NodeDist> = (0..L1_MAX).map(|_| NodeDist::from(gen_q(rng))).collect();
+    let trunk_p: Vec<NodeDist> = (0..=L1_MAX).map(|_| NodeDist::from(gen_p(rng))).collect();
     let mut trunk_tokens = vec![rng.next_below(v) as u32];
     for q in &trunk_q {
         trunk_tokens.push(q.sample(rng) as u32);
@@ -34,12 +37,52 @@ pub fn make_superset(rng: &mut Pcg64, v: usize) -> Superset {
     for _j in 0..=L1_MAX {
         let mut per_branch = Vec::with_capacity(K_MAX);
         for _b in 0..K_MAX {
-            let q: Vec<Dist> = (0..L2_MAX).map(|_| random_dist(v, rng, 6.0)).collect();
-            let p: Vec<Dist> = (0..=L2_MAX).map(|_| random_dist(v, rng, 2.0)).collect();
+            let q: Vec<NodeDist> = (0..L2_MAX).map(|_| NodeDist::from(gen_q(rng))).collect();
+            let p: Vec<NodeDist> = (0..=L2_MAX).map(|_| NodeDist::from(gen_p(rng))).collect();
             let tokens: Vec<u32> = q.iter().map(|d| d.sample(rng) as u32).collect();
             per_branch.push(BranchChain { tokens, q, p });
         }
         branches.push(per_branch);
     }
     Superset { trunk_tokens, trunk_q, trunk_p, branches }
+}
+
+/// Full-support sample. Chain tokens are drawn from sharp draft
+/// distributions so chains share prefixes often enough to exercise the
+/// scorers' merge and duplicate-child paths.
+pub fn make_superset(rng: &mut Pcg64, v: usize) -> Superset {
+    make_superset_with(rng, v, |r| random_dist(v, r, 2.0), |r| random_dist(v, r, 6.0))
+}
+
+/// Truncated-support sample: every p/q runs through top-p (dense storage;
+/// pair with [`sparsify_superset`] for the sparse twin).
+pub fn make_topp_superset(rng: &mut Pcg64, v: usize, top_p: f32) -> Superset {
+    make_superset_with(
+        rng,
+        v,
+        |r| random_topp_dist(v, r, top_p),
+        |r| random_topp_dist(v, r, top_p),
+    )
+}
+
+/// Sparse twin: identical tokens and distribution values, sparse storage.
+pub fn sparsify_superset(ss: &Superset) -> Superset {
+    Superset {
+        trunk_tokens: ss.trunk_tokens.clone(),
+        trunk_q: ss.trunk_q.iter().map(|d| d.sparsify()).collect(),
+        trunk_p: ss.trunk_p.iter().map(|d| d.sparsify()).collect(),
+        branches: ss
+            .branches
+            .iter()
+            .map(|per| {
+                per.iter()
+                    .map(|c| BranchChain {
+                        tokens: c.tokens.clone(),
+                        q: c.q.iter().map(|d| d.sparsify()).collect(),
+                        p: c.p.iter().map(|d| d.sparsify()).collect(),
+                    })
+                    .collect()
+            })
+            .collect(),
+    }
 }

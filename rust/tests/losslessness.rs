@@ -15,6 +15,8 @@
 //! acceptance/branching calculators ("empirically confirmed ... with Monte
 //! Carlo sampling").
 
+mod common;
+
 use specdelay::dist::Dist;
 use specdelay::tree::{DraftTree, PathDraws, Provenance};
 use specdelay::util::Pcg64;
@@ -107,8 +109,17 @@ fn draft_delayed(
 }
 
 /// Run `n` verification rounds and check emitted-stream conditionals against
-/// the exact toy target chain up to depth `max_check`.
-fn check_lossless(verifier: &dyn Verifier, k: usize, l1: usize, l2: usize, seed: u64) {
+/// the exact toy target chain up to depth `max_check`. `sparse` converts
+/// every tree to sparse storage before verifying (the satellite rerun of
+/// this suite with the sparse representation).
+fn check_lossless_storage(
+    verifier: &dyn Verifier,
+    k: usize,
+    l1: usize,
+    l2: usize,
+    seed: u64,
+    sparse: bool,
+) {
     let p_lm = ToyLm { seed: 1111, smooth: 0.2 };
     let q_lm = ToyLm { seed: 2222, smooth: 0.4 };
     let root = vec![1u32, 2];
@@ -121,7 +132,10 @@ fn check_lossless(verifier: &dyn Verifier, k: usize, l1: usize, l2: usize, seed:
     let mut counts: HashMap<Vec<u32>, Vec<usize>> = HashMap::new();
 
     for _ in 0..n {
-        let tree = draft_delayed(&p_lm, &q_lm, &root, k, l1, l2, &mut rng);
+        let mut tree = draft_delayed(&p_lm, &q_lm, &root, k, l1, l2, &mut rng);
+        if sparse {
+            tree = common::sparsify_tree(&tree);
+        }
         let v = verifier.verify(&tree, &mut rng);
         let mut emitted: Vec<u32> =
             v.accepted.iter().map(|&i| tree.nodes[i].token).collect();
@@ -153,6 +167,10 @@ fn check_lossless(verifier: &dyn Verifier, k: usize, l1: usize, l2: usize, seed:
     }
 }
 
+fn check_lossless(verifier: &dyn Verifier, k: usize, l1: usize, l2: usize, seed: u64) {
+    check_lossless_storage(verifier, k, l1, l2, seed, false)
+}
+
 #[test]
 fn lossless_multipath_all_verifiers() {
     for v in all_verifiers() {
@@ -174,6 +192,15 @@ fn lossless_single_path_all_verifiers() {
     for v in all_verifiers() {
         // pure single path (trunk only)
         check_lossless(v.as_ref(), 1, 3, 0, 44);
+    }
+}
+
+/// The sparse representation must be just as lossless: same Monte-Carlo
+/// validation over sparse-stored trees (delayed-expansion config).
+#[test]
+fn lossless_delayed_tree_all_verifiers_sparse_storage() {
+    for v in all_verifiers() {
+        check_lossless_storage(v.as_ref(), 2, 2, 2, 45, true);
     }
 }
 
