@@ -1,14 +1,14 @@
-//! End-to-end serving driver (DESIGN.md validation requirement): starts the
-//! TCP server on a real model family, fires a batch of mixed-domain
-//! requests through the line protocol, and reports per-request latency and
-//! aggregate throughput.
+//! End-to-end serving driver: starts the TCP server on the CPU reference
+//! backend, fires a batch of mixed-domain requests through the line
+//! protocol, and reports per-request latency and aggregate throughput.
+//! Hermetic — no artifacts, no PJRT.
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::thread;
 use std::time::{Duration, Instant};
 
-use specdelay::benchkit::{load_engine, load_prompts, DOMAINS};
 use specdelay::coordinator::server::{serve, ServerConfig};
+use specdelay::runtime::{CpuModelConfig, CpuRefBackend};
 use specdelay::util::stats::Running;
 use specdelay::util::Json;
 
@@ -18,23 +18,25 @@ fn main() -> anyhow::Result<()> {
 
     // leader: spawn the server thread
     let server_handle = thread::spawn(move || {
-        let engine = load_engine("qwen-sim").expect("engine");
+        let backend = CpuRefBackend::new(&CpuModelConfig::small(), 42);
         let cfg = ServerConfig { addr: addr.to_string(), seed: 42 };
-        serve(&engine, &cfg, Some(n_requests)).expect("serve");
+        serve(&backend, &cfg, Some(n_requests)).expect("serve");
     });
-    thread::sleep(Duration::from_secs(3)); // engine load
 
     // client: mixed-domain batch
-    let mut reqs = Vec::new();
-    for (i, domain) in DOMAINS.iter().cycle().take(n_requests).enumerate() {
-        let p = load_prompts(domain, i / DOMAINS.len() + 1)?.pop().unwrap();
-        reqs.push((domain.to_string(), p));
-    }
+    let reqs: Vec<(&str, &str)> = vec![
+        ("writing", "story: the golden "),
+        ("coding", "def fib(n):\n    "),
+        ("translation", "translate en->fr: the sea => "),
+        ("math_easy", "Q: 6 * 7 = ? A:"),
+        ("math_hard", "Q: integrate x^2 from 0 to 3. A:"),
+        ("writing", "essay: on the value of "),
+    ];
 
     let mut stream = loop {
         match TcpStream::connect(addr) {
             Ok(s) => break s,
-            Err(_) => thread::sleep(Duration::from_millis(200)),
+            Err(_) => thread::sleep(Duration::from_millis(100)),
         }
     };
     let mut reader = BufReader::new(stream.try_clone()?);
@@ -44,7 +46,7 @@ fn main() -> anyhow::Result<()> {
     for (domain, prompt) in &reqs {
         let req = format!(
             "{{\"prompt\": {}, \"max_new\": 32, \"temperature\": 0.8, \"verifier\": \"SpecInfer\", \"k\": 3, \"l1\": 2, \"l2\": 3}}",
-            Json::Str(prompt.clone())
+            Json::Str(prompt.to_string())
         );
         let t1 = Instant::now();
         writeln!(stream, "{req}")?;
@@ -54,7 +56,11 @@ fn main() -> anyhow::Result<()> {
         latency.push(dt);
         let resp = Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("{e}"))?;
         let tokens = resp.get("tokens").map_err(|e| anyhow::anyhow!("{e}"))?.as_f64().unwrap_or(0.0);
-        let be = resp.get("block_efficiency").map_err(|e| anyhow::anyhow!("{e}"))?.as_f64().unwrap_or(0.0);
+        let be = resp
+            .get("block_efficiency")
+            .map_err(|e| anyhow::anyhow!("{e}"))?
+            .as_f64()
+            .unwrap_or(0.0);
         total_tokens += tokens;
         println!("[{domain:<12}] {tokens:>3.0} tokens in {dt:.2}s (block eff {be:.2})");
     }

@@ -1,17 +1,19 @@
-//! Quickstart: load a family, run delayed-expansion speculative decoding,
-//! print the continuation and stats.
+//! Quickstart: build the hermetic CPU reference backend, run delayed-
+//! expansion speculative decoding, print the continuation and stats.
+//!
+//! Runs out of the box — no artifacts, no PJRT:
 //!
 //!     cargo run --release --example quickstart
-use specdelay::benchkit::load_engine;
 use specdelay::coordinator::{FixedPolicy, SpecEngine};
 use specdelay::dist::SamplingConfig;
 use specdelay::draft::Action;
+use specdelay::runtime::{CpuModelConfig, CpuRefBackend};
 use specdelay::util::Pcg64;
 use specdelay::verify;
 
 fn main() -> anyhow::Result<()> {
-    let engine = load_engine("qwen-sim")?;
-    let spec = SpecEngine::new(&engine, SamplingConfig::new(0.6, 1.0));
+    let backend = CpuRefBackend::new(&CpuModelConfig::small(), 0);
+    let spec = SpecEngine::new(&backend, SamplingConfig::new(0.6, 1.0));
     let verifier = verify::verifier("SpecInfer").unwrap();
     // delayed tree: trunk of 2, then 3 branches of 3 (paper Definition 5.2)
     let policy = FixedPolicy(Action::new(3, 2, 3));

@@ -1,17 +1,22 @@
 //! Code-generation serving scenario: the coding workload the paper's intro
 //! motivates. Compares Traversal vs SpecInfer-with-delayed-expansion on
-//! code prompts and reports latency.
-use specdelay::benchkit::{load_engine, load_prompts};
+//! code prompts and reports latency. Runs on the CPU reference backend —
+//! no artifacts needed.
 use specdelay::coordinator::{FixedPolicy, SpecEngine};
 use specdelay::dist::SamplingConfig;
 use specdelay::draft::Action;
+use specdelay::runtime::{CpuModelConfig, CpuRefBackend};
 use specdelay::util::Pcg64;
 use specdelay::verify;
 
 fn main() -> anyhow::Result<()> {
-    let engine = load_engine("llama-sim")?;
-    let spec = SpecEngine::new(&engine, SamplingConfig::new(0.2, 1.0));
-    let prompts = load_prompts("coding", 3)?;
+    let backend = CpuRefBackend::new(&CpuModelConfig::small(), 11);
+    let spec = SpecEngine::new(&backend, SamplingConfig::new(0.2, 1.0));
+    let prompts = [
+        "def fib(n):\n    ",
+        "fn main() { println!(",
+        "SELECT name FROM users WHERE ",
+    ];
     for name in ["Traversal", "SpecInfer"] {
         let verifier = verify::verifier(name).unwrap();
         let action = if name == "Traversal" { Action::new(4, 0, 4) } else { Action::new(3, 2, 3) };
@@ -19,7 +24,8 @@ fn main() -> anyhow::Result<()> {
         let mut total_toks = 0usize;
         let mut total_secs = 0.0f64;
         for p in &prompts {
-            let (text, stats) = spec.generate(p, 48, verifier.as_ref(), &FixedPolicy(action), &mut rng)?;
+            let (text, stats) =
+                spec.generate(p, 48, verifier.as_ref(), &FixedPolicy(action), &mut rng)?;
             println!("[{name}] {:?}\n  -> {:?}", p.trim_end(), text);
             total_toks += stats.tokens;
             total_secs += stats.wall_secs;

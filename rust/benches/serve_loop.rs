@@ -1,0 +1,152 @@
+//! Batched serving-loop benchmark on the CPU reference backend (pure rust,
+//! no artifacts, no PJRT): aggregate tokens/s and block efficiency vs batch
+//! size, per verifier, through `coordinator::ServeLoop`.
+//!
+//! Before anything is timed, every batched run's per-request token stream
+//! is asserted equal to a serial `SpecEngine::generate` reference on the
+//! same per-request rng stream — the bench aborts on any divergence, so
+//! the numbers always describe the deterministic configuration the tests
+//! validate.
+//!
+//! Emits a human-readable table and `BENCH_serve_loop.json` at the repo
+//! root (uploaded as a CI artifact). Env knobs: `SERVE_LOOP_REQUESTS`
+//! (default 8), `SERVE_LOOP_MAX_NEW` (default 48), `SERVE_LOOP_VERIFIERS`
+//! (comma list, default `SpecInfer,Traversal`).
+//!
+//! Run: `cargo bench --bench serve_loop`.
+
+use std::time::Instant;
+
+use specdelay::coordinator::{FixedPolicy, ServeLoop, ServeRequest, SpecEngine};
+use specdelay::dist::SamplingConfig;
+use specdelay::draft::Action;
+use specdelay::runtime::{Backend, CpuModelConfig, CpuRefBackend};
+use specdelay::util::json::{arr, num, obj, s, Json};
+use specdelay::util::threadpool::default_workers;
+use specdelay::util::Pcg64;
+use specdelay::verify;
+
+const PROMPTS: [&str; 4] = [
+    "Q: 6 * 7 = ? A:",
+    "story: the golden ",
+    "fn add(a, b):",
+    "translate en->fr: the sea => ",
+];
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let requests = env_usize("SERVE_LOOP_REQUESTS", 8);
+    let max_new = env_usize("SERVE_LOOP_MAX_NEW", 48);
+    let verifier_names: Vec<String> = std::env::var("SERVE_LOOP_VERIFIERS")
+        .unwrap_or_else(|_| "SpecInfer,Traversal".to_string())
+        .split(',')
+        .map(|x| x.trim().to_string())
+        .filter(|x| !x.is_empty())
+        .collect();
+    let batches = [1usize, 2, 4, 8];
+
+    let cfg = CpuModelConfig::small();
+    let backend = CpuRefBackend::new(&cfg, 0);
+    let sampling = SamplingConfig::new(0.8, 0.95);
+    let action = Action::new(2, 2, 3);
+    let policy = FixedPolicy(action);
+    let seed = 42u64;
+
+    println!(
+        "{:<12} {:>6} {:>10} {:>12} {:>12} {:>14}",
+        "verifier", "batch", "tokens", "wall_secs", "tokens/s", "block_eff"
+    );
+
+    let mut equal_output_checks = 0usize;
+    let mut vrows: Vec<(&str, Json)> = Vec::new();
+    for vname in &verifier_names {
+        let verifier = verify::verifier(vname).expect("unknown verifier");
+
+        // serial reference streams: the equality oracle (untimed)
+        let spec = SpecEngine::new(&backend, sampling);
+        let mut ref_texts = Vec::with_capacity(requests);
+        for id in 0..requests {
+            let mut rng = Pcg64::new(seed, id as u64);
+            let (text, _stats) = spec
+                .generate(PROMPTS[id % PROMPTS.len()], max_new, verifier.as_ref(), &policy, &mut rng)
+                .expect("serial generate");
+            ref_texts.push(text);
+        }
+
+        let mut brows: Vec<Json> = Vec::new();
+        let mut tps_batch1 = f64::NAN;
+        for &batch in &batches {
+            let mut srv = ServeLoop::new(&backend, sampling, verifier.as_ref(), &policy, batch);
+            for id in 0..requests {
+                srv.submit(ServeRequest {
+                    prompt: PROMPTS[id % PROMPTS.len()].to_string(),
+                    max_new,
+                    seed,
+                });
+            }
+            let t0 = Instant::now();
+            let outs = srv.run().expect("serve loop");
+            let wall = t0.elapsed().as_secs_f64();
+            // equal-output assertion before any number is recorded
+            assert_eq!(outs.len(), ref_texts.len());
+            for (o, want) in outs.iter().zip(&ref_texts) {
+                assert!(o.error.is_none(), "lane {} failed: {:?}", o.id, o.error);
+                assert_eq!(
+                    &o.text, want,
+                    "{vname} batch {batch} id {}: batched stream diverged from serial",
+                    o.id
+                );
+                equal_output_checks += 1;
+            }
+            let tokens: usize = outs.iter().map(|o| o.stats.tokens).sum();
+            let blocks: usize = outs.iter().map(|o| o.stats.blocks).sum();
+            let block_eff = tokens as f64 / blocks.max(1) as f64;
+            let tps = tokens as f64 / wall.max(1e-12);
+            if batch == 1 {
+                tps_batch1 = tps;
+            }
+            println!(
+                "{vname:<12} {batch:>6} {tokens:>10} {wall:>12.3} {tps:>12.1} {block_eff:>14.2}"
+            );
+            brows.push(obj(vec![
+                ("batch", num(batch as f64)),
+                ("requests", num(requests as f64)),
+                ("tokens", num(tokens as f64)),
+                ("wall_secs", num(wall)),
+                ("tokens_per_sec", num(tps)),
+                ("block_efficiency", num(block_eff)),
+                ("speedup_vs_batch1", num(tps / tps_batch1)),
+            ]));
+        }
+        vrows.push((vname.as_str(), obj(vec![("batches", arr(brows))])));
+    }
+
+    let report = obj(vec![
+        ("schema", s("serve_loop/v1")),
+        (
+            "config",
+            obj(vec![
+                ("backend", s("cpu-ref")),
+                ("family", s(&backend.meta().family)),
+                ("n_layers", num(cfg.n_layers as f64)),
+                ("d_model", num(cfg.d_model as f64)),
+                ("vocab", num(cfg.vocab as f64)),
+                ("requests", num(requests as f64)),
+                ("max_new", num(max_new as f64)),
+                ("temperature", num(sampling.temperature as f64)),
+                ("top_p", num(sampling.top_p as f64)),
+                ("action", s(&format!("K={} L1={} L2={}", action.k, action.l1, action.l2))),
+                ("machine_workers", num(default_workers() as f64)),
+            ]),
+        ),
+        ("equal_output_checks", num(equal_output_checks as f64)),
+        ("equal_output_assertion", s("enabled")),
+        ("verifiers", obj(vrows)),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve_loop.json");
+    std::fs::write(path, format!("{}\n", report.to_string_pretty())).expect("write bench json");
+    println!("wrote {path}");
+}

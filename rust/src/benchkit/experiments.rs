@@ -23,8 +23,10 @@ use crate::util::stats::Running;
 use crate::util::Pcg64;
 use crate::verify;
 
+/// All eight verification algorithms, in the paper's table order.
 pub const ALGOS: [&str; 8] =
     ["NSS", "BV", "Khisti", "NaiveTree", "Naive", "SpecInfer", "SpecTr", "Traversal"];
+/// The OT-based subset (NDE applies to these only).
 pub const OT_ALGOS: [&str; 5] = ["Khisti", "NaiveTree", "NSS", "SpecInfer", "SpecTr"];
 
 fn is_single_path(name: &str) -> bool {
@@ -122,6 +124,7 @@ pub fn figure_1(scale: Scale, family: &str) -> Result<Vec<(String, Vec<f64>)>> {
                     break;
                 }
                 // offline tree: K i.i.d. paths of depth_max from the root
+                // (l1 = 0, so the sequence's handoff scratch stays idle)
                 let drafted = crate::draft::draft_delayed(
                     &engine,
                     &seq.draft_kv,
@@ -129,6 +132,7 @@ pub fn figure_1(scale: Scale, family: &str) -> Result<Vec<(String, Vec<f64>)>> {
                     seq.root_pos,
                     Action::new(k, 0, depth_max),
                     sampling,
+                    &mut seq.draft_scratch,
                     &mut rng,
                 )?;
                 let mut tree = drafted.tree;

@@ -22,21 +22,20 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Context, Result};
 
-#[cfg(feature = "pjrt")]
 use crate::coordinator::{ActionPolicy, FixedPolicy, SpecEngine};
 use crate::dist::SamplingConfig;
-#[cfg(feature = "pjrt")]
 use crate::draft::Action;
+use crate::runtime::Backend;
 #[cfg(feature = "pjrt")]
 use crate::runtime::Engine;
 use crate::util::stats::Running;
 use crate::util::Json;
-#[cfg(feature = "pjrt")]
 use crate::util::Pcg64;
-#[cfg(feature = "pjrt")]
 use crate::verify;
 
+/// The three simulated model families of the paper's evaluation.
 pub const FAMILIES: [&str; 3] = ["qwen-sim", "gemma-sim", "llama-sim"];
+/// The five workload domains (Table 8/9).
 pub const DOMAINS: [&str; 5] = ["writing", "coding", "translation", "math_easy", "math_hard"];
 
 /// Paper display names per domain (Table 8/9 column headers).
@@ -51,14 +50,19 @@ pub fn domain_label(d: &str) -> &'static str {
     }
 }
 
+/// Experiment scale knob (`SPECDELAY_BENCH_SCALE=quick|std|full`).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Scale {
+    /// Smoke-test scale (the default).
     Quick,
+    /// Medium scale for local iteration.
     Std,
+    /// Full paper-replication scale.
     Full,
 }
 
 impl Scale {
+    /// Read the scale from `SPECDELAY_BENCH_SCALE` (default: quick).
     pub fn from_env() -> Scale {
         match std::env::var("SPECDELAY_BENCH_SCALE").as_deref() {
             Ok("full") => Scale::Full,
@@ -66,6 +70,7 @@ impl Scale {
             _ => Scale::Quick,
         }
     }
+    /// Held-out prompts evaluated per domain.
     pub fn prompts_per_domain(self) -> usize {
         match self {
             Scale::Quick => 1,
@@ -73,6 +78,7 @@ impl Scale {
             Scale::Full => 8,
         }
     }
+    /// Generation budget per prompt.
     pub fn max_new(self) -> usize {
         match self {
             Scale::Quick => 24,
@@ -118,6 +124,7 @@ impl Scale {
     }
 }
 
+/// Root of the compiled model artifacts (`SPECDELAY_ARTIFACTS` override).
 pub fn artifacts_dir() -> PathBuf {
     PathBuf::from(
         std::env::var("SPECDELAY_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string()),
@@ -138,25 +145,27 @@ pub fn load_prompts(domain: &str, count: usize) -> Result<Vec<String>> {
         .collect())
 }
 
+/// Load a family's PJRT engine from the artifacts directory.
 #[cfg(feature = "pjrt")]
 pub fn load_engine(family: &str) -> Result<Engine> {
     Engine::load(&artifacts_dir().join(family))
 }
 
-/// Measured outcome of one (engine, verifier, policy, sampling) config.
+/// Measured outcome of one (backend, verifier, policy, sampling) config.
 #[derive(Clone, Debug, Default)]
 pub struct ConfigResult {
+    /// Per-prompt block efficiency E[τ + 1].
     pub block_eff: Running,
+    /// Per-prompt decode throughput (tokens/s).
     pub tps: Running,
 }
 
 /// Run one configuration over a prompt set with the default worker count
 /// ([`crate::util::threadpool::default_workers`], `SPECDELAY_THREADS`
 /// override). Results are bit-identical to a serial run.
-#[cfg(feature = "pjrt")]
 #[allow(clippy::too_many_arguments)]
 pub fn run_config(
-    engine: &Engine,
+    engine: &dyn Backend,
     verifier_name: &str,
     policy: &dyn ActionPolicy,
     sampling: SamplingConfig,
@@ -183,10 +192,9 @@ pub fn run_config(
 ///
 /// On a prompt failure the remaining workers stop picking up new prompts
 /// (already-running generations finish) and the failure is propagated.
-#[cfg(feature = "pjrt")]
 #[allow(clippy::too_many_arguments)]
 pub fn run_config_threads(
-    engine: &Engine,
+    engine: &dyn Backend,
     verifier_name: &str,
     policy: &dyn ActionPolicy,
     sampling: SamplingConfig,
@@ -241,10 +249,9 @@ pub fn run_config_threads(
 /// deterministic speculation outcome (see [`run_config_threads`] for the
 /// tps caveat). A failing grid point stops the remaining queue and is
 /// propagated.
-#[cfg(feature = "pjrt")]
 #[allow(clippy::too_many_arguments)]
 pub fn best_static(
-    engine: &Engine,
+    engine: &dyn Backend,
     verifier_name: &str,
     sampling: SamplingConfig,
     prompts: &[String],

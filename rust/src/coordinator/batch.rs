@@ -1,0 +1,236 @@
+//! Multi-request batched serving loop over any [`Backend`].
+//!
+//! [`ServeLoop`] is a continuous-batching scheduler: a FIFO request queue,
+//! up to `max_batch` concurrently active sequences, and per-request
+//! KV-cache lanes (each [`Sequence`](super::Sequence) owns its own target
+//! and draft caches, so lanes never alias). Every scheduler tick runs one
+//! speculation block — draft → tree pass → verify → commit — for every
+//! active lane, fanned out over
+//! [`par_map_init`](crate::util::threadpool::par_map_init); finished lanes
+//! retire and queued requests are admitted in their place, so the batch
+//! stays full until the queue drains.
+//!
+//! ## Determinism contract
+//!
+//! A lane's speculation stream is driven entirely by lane-local state: its
+//! own rng (seeded from the request seed and the admission-order id), its
+//! own [`Sequence`](super::Sequence), and the shared immutable backend.
+//! Nothing a lane computes depends on which other lanes are in flight or
+//! on the worker schedule, so **per-request token streams are
+//! bit-identical for every batch size and worker count**, and identical to
+//! a serial [`SpecEngine::generate`] call driven by the same
+//! `Pcg64::new(seed, id)` stream. `tests/e2e_serve.rs` asserts both; the
+//! `serve_loop` bench re-asserts them before timing anything.
+//!
+//! Each tick currently pays one scoped-thread spawn/join round
+//! ([`par_map_init`](crate::util::threadpool::par_map_init)); for model
+//! sizes where a block is sub-millisecond that overhead is visible in
+//! `BENCH_serve_loop.json`. Because results are index-addressed (never
+//! schedule-dependent), swapping in a persistent
+//! [`ThreadPool`](crate::util::threadpool::ThreadPool) would preserve the
+//! determinism contract — left as a follow-up.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::{ActionPolicy, GenStats, Sequence, SpecEngine};
+use crate::dist::SamplingConfig;
+use crate::runtime::Backend;
+use crate::tokenizer;
+use crate::util::threadpool;
+use crate::util::Pcg64;
+use crate::verify::Verifier;
+
+/// One queued generation request.
+pub struct ServeRequest {
+    /// Prompt text (byte-tokenized; truncated to the family's `s_pre`).
+    pub prompt: String,
+    /// Generation budget: the lane stops once it has emitted at least this
+    /// many tokens (the final block may overshoot, exactly like
+    /// [`SpecEngine::generate`]).
+    pub max_new: usize,
+    /// Seed of this request's private rng stream (the admission id is the
+    /// stream selector, so equal seeds still draw independent streams).
+    pub seed: u64,
+}
+
+/// One finished request.
+pub struct ServeOutput {
+    /// Admission-order request id (as returned by [`ServeLoop::submit`]).
+    pub id: u64,
+    /// Decoded continuation (prompt excluded; possibly partial when
+    /// `error` is set).
+    pub text: String,
+    /// Whole-generation statistics; `wall_secs` spans admission→retirement,
+    /// so under batching it includes time sharing the machine with other
+    /// lanes.
+    pub stats: GenStats,
+    /// Set when this lane failed mid-generation. A failing lane retires
+    /// with the error recorded here; the other lanes are unaffected — one
+    /// bad request never discards the batch's completed results.
+    pub error: Option<String>,
+}
+
+/// An active lane: one admitted request mid-generation. `seq` stays `None`
+/// until the lane's first tick — prefill runs inside the data-parallel
+/// fan-out (it is lane-local backend work), never serially in the
+/// scheduler thread where it would stall the other lanes.
+struct Lane {
+    id: u64,
+    prompt: String,
+    max_new: usize,
+    seq: Option<Sequence>,
+    rng: Pcg64,
+    stats: GenStats,
+    started: Instant,
+}
+
+/// The batched serving loop (see the module docs).
+pub struct ServeLoop<'a> {
+    spec: SpecEngine<'a>,
+    verifier: &'a dyn Verifier,
+    policy: &'a dyn ActionPolicy,
+    max_batch: usize,
+    workers: usize,
+    queue: VecDeque<(u64, ServeRequest)>,
+    next_id: u64,
+}
+
+impl<'a> ServeLoop<'a> {
+    /// Build a loop serving up to `max_batch` concurrent sequences with one
+    /// verifier/policy pair.
+    pub fn new(
+        engine: &'a dyn Backend,
+        sampling: SamplingConfig,
+        verifier: &'a dyn Verifier,
+        policy: &'a dyn ActionPolicy,
+        max_batch: usize,
+    ) -> ServeLoop<'a> {
+        ServeLoop {
+            spec: SpecEngine::new(engine, sampling),
+            verifier,
+            policy,
+            max_batch: max_batch.max(1),
+            workers: threadpool::default_workers(),
+            queue: VecDeque::new(),
+            next_id: 0,
+        }
+    }
+
+    /// Override the per-tick worker count (defaults to
+    /// [`threadpool::default_workers`]; token streams do not depend on it).
+    pub fn with_workers(mut self, workers: usize) -> ServeLoop<'a> {
+        self.workers = workers.max(1);
+        self
+    }
+
+    /// Enqueue a request; returns its admission-order id.
+    pub fn submit(&mut self, req: ServeRequest) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push_back((id, req));
+        id
+    }
+
+    /// Requests waiting for admission.
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    fn lane_done(lane: &Lane) -> bool {
+        match &lane.seq {
+            Some(seq) => seq.finished || seq.tokens.len() - seq.prompt_len >= lane.max_new,
+            None => false, // not even prefilled yet
+        }
+    }
+
+    fn retire(lane: Lane, error: Option<String>) -> ServeOutput {
+        let mut stats = lane.stats;
+        stats.wall_secs = lane.started.elapsed().as_secs_f64();
+        let text = lane
+            .seq
+            .as_ref()
+            .map(|seq| tokenizer::decode(&seq.tokens[seq.prompt_len..]))
+            .unwrap_or_default();
+        ServeOutput { id: lane.id, text, stats, error }
+    }
+
+    /// Drain the queue: admit, tick, retire until every submitted request
+    /// has finished. Returns one output per request, sorted by request id;
+    /// a lane that fails mid-generation retires with
+    /// [`ServeOutput::error`] set and does not disturb the other lanes.
+    pub fn run(&mut self) -> Result<Vec<ServeOutput>> {
+        let mut active: Vec<Lane> = Vec::new();
+        let mut done: Vec<ServeOutput> = Vec::new();
+        loop {
+            // admit queued requests into free batch slots (no backend work
+            // here: the lane prefills on its first fan-out tick)
+            while active.len() < self.max_batch {
+                let Some((id, req)) = self.queue.pop_front() else { break };
+                active.push(Lane {
+                    id,
+                    prompt: req.prompt,
+                    max_new: req.max_new,
+                    seq: None,
+                    rng: Pcg64::new(req.seed, id),
+                    stats: GenStats::default(),
+                    started: Instant::now(),
+                });
+            }
+            if active.is_empty() {
+                break;
+            }
+            // one speculation block per lane, fanned out over the pool
+            let spec = &self.spec;
+            let verifier = self.verifier;
+            let policy = self.policy;
+            let stepped = threadpool::par_map_init(
+                std::mem::take(&mut active),
+                self.workers,
+                || (),
+                |_state, _i, mut lane: Lane| -> (Lane, Option<String>) {
+                    let res = (|| -> Result<()> {
+                        if lane.seq.is_none() {
+                            lane.seq = Some(spec.start(&lane.prompt)?);
+                        }
+                        if !Self::lane_done(&lane) {
+                            step_lane(spec, verifier, policy, &mut lane)?;
+                        }
+                        Ok(())
+                    })();
+                    let err = res.err().map(|e| e.to_string());
+                    (lane, err)
+                },
+            );
+            for (lane, err) in stepped {
+                if err.is_some() {
+                    // confine the failure to this lane; keep serving others
+                    done.push(Self::retire(lane, err));
+                } else if Self::lane_done(&lane) {
+                    done.push(Self::retire(lane, None));
+                } else {
+                    active.push(lane);
+                }
+            }
+        }
+        done.sort_by_key(|o| o.id);
+        Ok(done)
+    }
+}
+
+/// One speculation block for one lane — the exact per-block body of
+/// [`SpecEngine::generate`], so a lane's stream matches a serial run.
+fn step_lane(
+    spec: &SpecEngine<'_>,
+    verifier: &dyn Verifier,
+    policy: &dyn ActionPolicy,
+    lane: &mut Lane,
+) -> Result<()> {
+    let seq = lane.seq.as_mut().expect("lane prefilled before stepping");
+    let action = spec.choose_action(seq, policy)?;
+    let b = spec.step(seq, verifier, action, &mut lane.rng)?;
+    lane.stats.add_block(&b);
+    Ok(())
+}

@@ -1,19 +1,22 @@
-//! Serving coordinator: per-sequence speculative decoding over the PJRT
-//! runtime. One speculation block = draft (≤2 fused rollouts) → target tree
-//! pass (1 dispatch, Pallas tree-attention inside) → verification (pure
-//! rust) → KV commit. Python is never on this path.
+//! Serving coordinator: per-sequence speculative decoding over any
+//! [`runtime::Backend`](crate::runtime::Backend). One speculation block =
+//! draft (≤2 fused rollouts) → target tree pass (1 dispatch) → verification
+//! (pure rust) → KV commit. Python is never on this path.
 //!
-//! The policy-facing types (block statistics, step features, action
-//! policies) are pure rust and always built; the engine half
-//! ([`SpecEngine`], [`Sequence`], the TCP [`server`]) needs a PJRT runtime
-//! and is gated behind the `pjrt` feature.
+//! The whole stack builds in the hermetic default configuration and runs
+//! end-to-end on [`crate::runtime::CpuRefBackend`]; with `--features pjrt`
+//! the same code drives the compiled-HLO engine. Three serving shapes:
+//!
+//! * [`SpecEngine::generate`] — one sequence, serial blocks;
+//! * [`server`] — the TCP line-protocol front-end (single lane);
+//! * [`ServeLoop`] — the multi-request continuous-batching loop with
+//!   per-request KV-cache lanes and data-parallel per-tick block work.
 
-#[cfg(feature = "pjrt")]
+mod batch;
 pub mod server;
-#[cfg(feature = "pjrt")]
 mod spec;
 
-#[cfg(feature = "pjrt")]
+pub use batch::{ServeLoop, ServeOutput, ServeRequest};
 pub use spec::{generate_autoregressive, RootFeatures, Sequence, SpecEngine};
 
 use crate::dist::{NodeDist, SamplingConfig};
@@ -22,27 +25,52 @@ use crate::draft::Action;
 /// Per-block statistics.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct BlockStats {
+    /// Accepted draft tokens τ.
     pub accepted: usize,
+    /// Emitted tokens this block (τ + 1, or 0 on a no-op block).
     pub emitted: usize,
+    /// Wall time of the draft rollouts.
     pub draft_secs: f64,
+    /// Wall time of the target tree pass.
     pub tree_secs: f64,
+    /// Wall time of verification.
     pub verify_secs: f64,
+    /// Nodes in the drafted tree.
     pub tree_nodes: usize,
 }
 
 /// Whole-generation statistics.
 #[derive(Clone, Debug, Default)]
 pub struct GenStats {
+    /// Speculation blocks run.
     pub blocks: usize,
+    /// Tokens emitted.
     pub tokens: usize,
+    /// End-to-end wall time.
     pub wall_secs: f64,
+    /// Total draft-rollout wall time.
     pub draft_secs: f64,
+    /// Total target-tree-pass wall time.
     pub tree_secs: f64,
+    /// Total verification wall time.
     pub verify_secs: f64,
+    /// Total accepted draft tokens (Σ τ).
     pub sum_accepted: usize,
 }
 
 impl GenStats {
+    /// Fold one block's statistics in — the single accumulation point
+    /// shared by the serial loop ([`SpecEngine::generate`]) and the
+    /// batched [`ServeLoop`], so their stats can never drift apart.
+    pub fn add_block(&mut self, b: &BlockStats) {
+        self.blocks += 1;
+        self.tokens += b.emitted;
+        self.sum_accepted += b.accepted;
+        self.draft_secs += b.draft_secs;
+        self.tree_secs += b.tree_secs;
+        self.verify_secs += b.verify_secs;
+    }
+
     /// Block efficiency E[τ + 1].
     pub fn block_efficiency(&self) -> f64 {
         if self.blocks == 0 {
@@ -61,19 +89,28 @@ impl GenStats {
 
 /// Root-step features handed to action policies (paper §6 / Appendix E).
 pub struct StepFeatures<'a> {
+    /// Target hidden state at the previous verified root.
     pub hidden_p_prev: &'a [f32],
+    /// Draft hidden state at the previous verified root.
     pub hidden_q_prev: &'a [f32],
+    /// Draft hidden state at the current root.
     pub hidden_q_cur: &'a [f32],
+    /// Target distribution at the previous root.
     pub p_prev: &'a NodeDist,
+    /// Draft distribution at the previous root.
     pub q_prev: &'a NodeDist,
+    /// Draft distribution at the current root.
     pub q_root: &'a NodeDist,
+    /// Current context length in tokens.
     pub ctx_len: usize,
+    /// Active sampling configuration.
     pub sampling: SamplingConfig,
 }
 
 /// Chooses the delayed-expansion action each block. `Send + Sync` so one
 /// policy can drive every worker of a data-parallel prompt sweep.
 pub trait ActionPolicy: Send + Sync {
+    /// Pick the (K, L1, L2) action for the next block.
     fn choose(&self, feats: &StepFeatures<'_>) -> Action;
     /// Whether the policy needs the extra root draft-decode for features.
     fn needs_features(&self) -> bool {

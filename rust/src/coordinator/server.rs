@@ -6,9 +6,10 @@
 //!   response: {"text": "...", "tokens": n, "blocks": m, "tps": x,
 //!              "block_efficiency": y}
 //!
-//! Model execution is single-threaded per PJRT client (CPU); the listener
-//! accepts connections sequentially and processes requests in arrival order
-//! — a deliberate single-lane scheduler matching the 1-core testbed.
+//! The listener accepts connections sequentially and processes requests in
+//! arrival order — a deliberate single-lane scheduler matching the paper's
+//! 1-core testbed. For concurrent multi-request serving use the batched
+//! [`super::ServeLoop`] instead.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -18,20 +19,23 @@ use anyhow::{anyhow, Result};
 use crate::coordinator::{FixedPolicy, SpecEngine};
 use crate::dist::SamplingConfig;
 use crate::draft::Action;
-use crate::runtime::Engine;
+use crate::runtime::Backend;
 use crate::util::json::{num, obj, s, Json};
 use crate::util::Pcg64;
 use crate::verify;
 
+/// Listener configuration.
 pub struct ServerConfig {
+    /// Bind address, e.g. `127.0.0.1:7333`.
     pub addr: String,
+    /// Seed of the server-wide rng stream.
     pub seed: u64,
 }
 
 /// Serve forever (or until `max_requests` when Some — used by tests).
-pub fn serve(engine: &Engine, cfg: &ServerConfig, max_requests: Option<usize>) -> Result<()> {
+pub fn serve(engine: &dyn Backend, cfg: &ServerConfig, max_requests: Option<usize>) -> Result<()> {
     let listener = TcpListener::bind(&cfg.addr)?;
-    eprintln!("[specdelay] serving {} on {}", engine.meta.family, cfg.addr);
+    eprintln!("[specdelay] serving {} on {}", engine.meta().family, cfg.addr);
     let mut rng = Pcg64::seeded(cfg.seed);
     let mut served = 0usize;
     for stream in listener.incoming() {
@@ -46,7 +50,7 @@ pub fn serve(engine: &Engine, cfg: &ServerConfig, max_requests: Option<usize>) -
     Ok(())
 }
 
-fn handle_conn(engine: &Engine, stream: TcpStream, rng: &mut Pcg64) -> Result<usize> {
+fn handle_conn(engine: &dyn Backend, stream: TcpStream, rng: &mut Pcg64) -> Result<usize> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut out = stream;
     let mut line = String::new();
@@ -65,7 +69,7 @@ fn handle_conn(engine: &Engine, stream: TcpStream, rng: &mut Pcg64) -> Result<us
     }
 }
 
-fn handle_request(engine: &Engine, line: &str, rng: &mut Pcg64) -> Result<Json> {
+fn handle_request(engine: &dyn Backend, line: &str, rng: &mut Pcg64) -> Result<Json> {
     let req = Json::parse(line).map_err(|e| anyhow!("bad json: {e}"))?;
     let prompt = req
         .get("prompt")

@@ -1,8 +1,10 @@
-//! The PJRT-backed speculative decoding engine (`pjrt` feature).
+//! The speculative decoding engine over any [`Backend`].
 //!
 //! Each [`Sequence`] owns a [`VerifyScratch`] arena and a reusable
 //! [`Verdict`], so the per-block verification stage runs allocation-free in
 //! steady state (the tentpole guarantee measured by `benches/verify_hot`).
+//! The engine half runs on the always-built CPU reference backend in the
+//! default configuration and on PJRT behind the `pjrt` feature.
 
 use std::time::Instant;
 
@@ -10,49 +12,67 @@ use anyhow::{anyhow, Result};
 
 use super::{ActionPolicy, BlockStats, GenStats, StepFeatures};
 use crate::dist::{DistStorage, NodeDist, SamplingConfig};
-use crate::draft::{accepted_row_extent, draft_delayed, Action};
+use crate::draft::{accepted_row_extent, draft_delayed, Action, DraftScratch};
 use crate::kvcache::KvCache;
-use crate::runtime::{Engine, Role};
+use crate::runtime::{Backend, Role};
 use crate::tokenizer;
 use crate::tree::DraftTree;
 use crate::util::Pcg64;
 use crate::verify::{Verdict, Verifier, VerifyScratch};
 
-/// One in-flight sequence.
+/// One in-flight sequence: the per-request state of the serving loop
+/// (token history, its own target/draft KV-cache lanes, selector feature
+/// memory, and the warm verification arena). `Clone` snapshots a sequence
+/// — used by tests that replay many blocks from one prefilled state.
+#[derive(Clone)]
 pub struct Sequence {
+    /// Prompt + emitted tokens.
     pub tokens: Vec<u32>,
+    /// Number of prompt tokens at the front of `tokens`.
     pub prompt_len: usize,
+    /// This request's target-model KV-cache lane.
     pub target_kv: KvCache,
+    /// This request's draft-model KV-cache lane.
     pub draft_kv: KvCache,
+    /// Cache position of the current root (last committed) token.
     pub root_pos: usize,
+    /// Set on EOS or when the context window is exhausted.
     pub finished: bool,
-    // selector feature memory (previous verified node)
+    /// Selector feature memory: target hidden at the previous root.
     pub prev_hidden_target: Vec<f32>,
+    /// Selector feature memory: draft hidden at the previous root.
     pub prev_hidden_draft: Vec<f32>,
+    /// Selector feature memory: target distribution at the previous root.
     pub prev_p: NodeDist,
+    /// Selector feature memory: draft distribution at the previous root.
     pub prev_q: NodeDist,
     /// Reusable verification arena: warm after the first block, so every
     /// later verify call allocates nothing.
     pub scratch: VerifyScratch,
+    /// Reusable drafting scratch (the branch-rollout handoff cache).
+    pub draft_scratch: DraftScratch,
     /// Recycled verdict buffer (capacity persists across blocks).
     pub verdict: Verdict,
 }
 
 /// The speculative decoding engine for one family.
 pub struct SpecEngine<'a> {
-    pub engine: &'a Engine,
+    /// The execution backend (CPU reference or PJRT).
+    pub engine: &'a dyn Backend,
+    /// Sampling configuration shared by target and draft.
     pub sampling: SamplingConfig,
 }
 
 impl<'a> SpecEngine<'a> {
-    pub fn new(engine: &'a Engine, sampling: SamplingConfig) -> Self {
+    /// Wrap a backend with a sampling configuration.
+    pub fn new(engine: &'a dyn Backend, sampling: SamplingConfig) -> Self {
         SpecEngine { engine, sampling }
     }
 
     /// Prefill both models on the prompt.
     pub fn start(&self, prompt: &str) -> Result<Sequence> {
         let mut toks = tokenizer::encode(prompt);
-        let s_pre = self.engine.meta.s_pre;
+        let s_pre = self.engine.meta().s_pre;
         if toks.is_empty() {
             toks.push(tokenizer::BOS);
         }
@@ -63,8 +83,8 @@ impl<'a> SpecEngine<'a> {
         let t_out = self.engine.prefill(Role::Target, &toks_i32, len)?;
         let d_out = self.engine.prefill(Role::Draft, &toks_i32, len)?;
 
-        let mut target_kv = KvCache::new(self.engine.meta.target);
-        let mut draft_kv = KvCache::new(self.engine.meta.draft);
+        let mut target_kv = KvCache::new(self.engine.meta().target);
+        let mut draft_kv = KvCache::new(self.engine.meta().draft);
         target_kv.commit_prefill(&t_out.k_rows, &t_out.v_rows, s_pre, len);
         draft_kv.commit_prefill(&d_out.k_rows, &d_out.v_rows, s_pre, len);
 
@@ -72,7 +92,7 @@ impl<'a> SpecEngine<'a> {
         let p0 = NodeDist::from_logits(&t_out.logits, self.sampling, storage);
         let q0 = NodeDist::from_logits(&d_out.logits, self.sampling, storage);
         let mut scratch = VerifyScratch::default();
-        scratch.reserve(self.engine.meta.target.vocab, 32, 8);
+        scratch.reserve(self.engine.meta().target.vocab, 32, 8);
         let mut verdict = Verdict::default();
         verdict.accepted.reserve(32);
         Ok(Sequence {
@@ -87,6 +107,7 @@ impl<'a> SpecEngine<'a> {
             prev_p: p0,
             prev_q: q0,
             scratch,
+            draft_scratch: DraftScratch::default(),
             verdict,
         })
     }
@@ -94,7 +115,7 @@ impl<'a> SpecEngine<'a> {
     /// Remaining position headroom for one block at the given action.
     fn fits(&self, seq: &Sequence, a: Action) -> bool {
         let depth = a.l1 + a.l2 + 2;
-        seq.root_pos + depth < self.engine.meta.target.max_seq
+        seq.root_pos + depth < self.engine.meta().target.max_seq
     }
 
     /// One speculation block. Returns stats; marks `seq.finished` on EOS or
@@ -106,7 +127,7 @@ impl<'a> SpecEngine<'a> {
         action: Action,
         rng: &mut Pcg64,
     ) -> Result<BlockStats> {
-        let meta = &self.engine.meta;
+        let meta = self.engine.meta();
         let max_trunk = meta.trunk_lens.iter().copied().max().unwrap_or(8);
         let mut a = action.normalized(max_trunk);
         if a.l1 == 0 && (a.k <= 1 || a.l2 == 0) {
@@ -140,6 +161,7 @@ impl<'a> SpecEngine<'a> {
             seq.root_pos,
             a,
             self.sampling,
+            &mut seq.draft_scratch,
             rng,
         )?;
         let draft_secs = t0.elapsed().as_secs_f64();
@@ -258,7 +280,52 @@ impl<'a> SpecEngine<'a> {
                 seq.root_pos + a.l1,
             );
         }
+
+        // Rollouts only carry rows for *visited* nodes, so a chain accepted
+        // to the full drafted depth ends on a token whose draft row was
+        // never computed (a fully accepted single-path trunk, or a branch
+        // accepted to its compiled bucket's end). Back-fill it with one
+        // draft decode — every later draft forward of this sequence
+        // attends that row, so leaving it stale would silently corrupt all
+        // subsequent draft distributions. The context rows it needs are
+        // exactly the commits above. Asserted bitwise against from-scratch
+        // prefills in tests/e2e_serve.rs.
+        if let Some(&deepest) = accepted.last() {
+            if draft_row_missing(tree, drafted, deepest) {
+                let pos = seq.root_pos + tree.nodes[deepest].depth;
+                let d = self.engine.decode(
+                    Role::Draft,
+                    &seq.draft_kv.k,
+                    &seq.draft_kv.v,
+                    tree.nodes[deepest].token,
+                    pos,
+                )?;
+                seq.draft_kv.commit_row(&d.k_row, &d.v_row, pos);
+            }
+        }
         Ok(())
+    }
+
+    /// Pick the next block's action: consults the policy, running the extra
+    /// root draft-decode feature pass only when the policy needs it. Shared
+    /// by [`SpecEngine::generate`] and the batched
+    /// [`super::ServeLoop`] so both drive identical per-block decisions.
+    pub fn choose_action(&self, seq: &mut Sequence, policy: &dyn ActionPolicy) -> Result<Action> {
+        if policy.needs_features() {
+            let f = self.root_features(seq)?;
+            Ok(policy.choose(&f.as_features(seq, self.sampling)))
+        } else {
+            Ok(policy.choose(&StepFeatures {
+                hidden_p_prev: &seq.prev_hidden_target,
+                hidden_q_prev: &seq.prev_hidden_draft,
+                hidden_q_cur: &seq.prev_hidden_draft,
+                p_prev: &seq.prev_p,
+                q_prev: &seq.prev_q,
+                q_root: &seq.prev_q,
+                ctx_len: seq.tokens.len(),
+                sampling: self.sampling,
+            }))
+        }
     }
 
     /// Generate up to `max_new` tokens with a fixed verifier and policy.
@@ -274,28 +341,9 @@ impl<'a> SpecEngine<'a> {
         let mut stats = GenStats::default();
         let t0 = Instant::now();
         while !seq.finished && seq.tokens.len() - seq.prompt_len < max_new {
-            let action = if policy.needs_features() {
-                let f = self.root_features(&mut seq)?;
-                policy.choose(&f.as_features(&seq, self.sampling))
-            } else {
-                policy.choose(&StepFeatures {
-                    hidden_p_prev: &seq.prev_hidden_target,
-                    hidden_q_prev: &seq.prev_hidden_draft,
-                    hidden_q_cur: &seq.prev_hidden_draft,
-                    p_prev: &seq.prev_p,
-                    q_prev: &seq.prev_q,
-                    q_root: &seq.prev_q,
-                    ctx_len: seq.tokens.len(),
-                    sampling: self.sampling,
-                })
-            };
+            let action = self.choose_action(&mut seq, policy)?;
             let b = self.step(&mut seq, verifier, action, rng)?;
-            stats.blocks += 1;
-            stats.tokens += b.emitted;
-            stats.sum_accepted += b.accepted;
-            stats.draft_secs += b.draft_secs;
-            stats.tree_secs += b.tree_secs;
-            stats.verify_secs += b.verify_secs;
+            stats.add_block(&b);
         }
         stats.wall_secs = t0.elapsed().as_secs_f64();
         let text = tokenizer::decode(&seq.tokens[seq.prompt_len..]);
@@ -323,11 +371,14 @@ impl<'a> SpecEngine<'a> {
 
 /// Root features needing a fresh draft pass.
 pub struct RootFeatures {
+    /// Draft-model hidden state at the current root.
     pub hidden_q_cur: Vec<f32>,
+    /// Draft distribution at the current root.
     pub q_root: NodeDist,
 }
 
 impl RootFeatures {
+    /// Assemble the full [`StepFeatures`] view over a sequence's memory.
     pub fn as_features<'a>(
         &'a self,
         seq: &'a Sequence,
@@ -342,6 +393,31 @@ impl RootFeatures {
             q_root: &self.q_root,
             ctx_len: seq.tokens.len(),
             sampling,
+        }
+    }
+}
+
+/// Whether a node's draft-KV row is absent from every rollout output: the
+/// rollouts record rows only for nodes they *visited* (a node's row is
+/// produced by the step that sampled its child), so the deepest node of a
+/// trunk-only draft — and a branch node at its rollout's final bucket
+/// position — has none. The trunk end is the exception: when a branch
+/// rollout ran, its step 0 revisits the trunk end and supplies the row.
+fn draft_row_missing(
+    tree: &DraftTree,
+    drafted: &crate::draft::Drafted,
+    node: usize,
+) -> bool {
+    use crate::tree::Provenance;
+    match tree.nodes[node].provenance {
+        Provenance::Root => false,
+        Provenance::Trunk { step } => match (&drafted.trunk, &drafted.branch) {
+            (_, Some(_)) => false, // branch rollout step 0 covers the trunk end
+            (Some(tr), None) => step >= tr.l,
+            (None, None) => true,
+        },
+        Provenance::Branch { step, .. } => {
+            drafted.branch.as_ref().is_none_or(|br| step >= br.l)
         }
     }
 }
@@ -385,7 +461,7 @@ fn draft_hidden_for(
 /// Plain autoregressive decoding baseline (no speculation): one target
 /// decode per token.
 pub fn generate_autoregressive(
-    engine: &Engine,
+    engine: &dyn Backend,
     sampling: SamplingConfig,
     prompt: &str,
     max_new: usize,
@@ -407,7 +483,7 @@ pub fn generate_autoregressive(
         seq.root_pos += 1;
         stats.blocks += 1;
         stats.tokens += 1;
-        if tokenizer::is_terminal(tok) || seq.root_pos + 2 >= engine.meta.target.max_seq {
+        if tokenizer::is_terminal(tok) || seq.root_pos + 2 >= engine.meta().target.max_seq {
             seq.finished = true;
         }
     }

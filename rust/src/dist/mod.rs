@@ -30,7 +30,9 @@ use crate::util::Pcg64;
 /// Which representation newly constructed node distributions use.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DistStorage {
+    /// Full-vocabulary [`Dist`] storage (the reference/oracle path).
     Dense,
+    /// Support-only [`SparseDist`] storage (the default hot path).
     Sparse,
 }
 
@@ -57,14 +59,25 @@ impl DistStorage {
 /// The payload is public: verifiers and tests construct `Dist(vec![...])`
 /// directly. Invariant (maintained by every constructor here): entries are
 /// non-negative and sum to ~1; consumers tolerate small normalization error.
+/// ```
+/// use specdelay::dist::{Dist, SamplingConfig};
+///
+/// // softmax + nucleus: the transformed dist is normalized and truncated
+/// let d = Dist::from_logits(&[0.0, 1.0, 3.0, 2.0], SamplingConfig::new(1.0, 0.9));
+/// assert!((d.0.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+/// assert_eq!(d.argmax(), 2);
+/// assert_eq!(d.0[0], 0.0, "tail token falls outside the 0.9 nucleus");
+/// ```
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Dist(pub Vec<f32>);
 
 impl Dist {
+    /// Dense length (vocabulary size).
     pub fn len(&self) -> usize {
         self.0.len()
     }
 
+    /// Whether the distribution has no entries at all.
     pub fn is_empty(&self) -> bool {
         self.0.is_empty()
     }
@@ -254,7 +267,9 @@ impl Dist {
 /// Temperature + nucleus (top-p) sampling configuration (paper §4.1 grid).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct SamplingConfig {
+    /// Softmax temperature; `<= 0` takes the greedy (argmax one-hot) limit.
     pub temperature: f32,
+    /// Nucleus mass; `1.0` disables truncation.
     pub top_p: f32,
 }
 
@@ -265,6 +280,7 @@ impl Default for SamplingConfig {
 }
 
 impl SamplingConfig {
+    /// Build a configuration from its (temperature, top-p) pair.
     pub fn new(temperature: f32, top_p: f32) -> SamplingConfig {
         SamplingConfig { temperature, top_p }
     }
@@ -392,7 +408,9 @@ fn nucleus(x: &mut [f32], top_p: f32, idx: &mut Vec<u32>) -> usize {
 /// one storage mode (see [`DistStorage`]).
 #[derive(Clone, Debug, PartialEq)]
 pub enum NodeDist {
+    /// Dense full-vocabulary storage.
     Dense(Dist),
+    /// Sparse support-only storage.
     Sparse(SparseDist),
 }
 
@@ -434,10 +452,12 @@ impl NodeDist {
         }
     }
 
+    /// Whether the distribution has no entries at all.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Whether this node holds the sparse representation.
     pub fn is_sparse(&self) -> bool {
         matches!(self, NodeDist::Sparse(_))
     }
@@ -450,6 +470,7 @@ impl NodeDist {
         }
     }
 
+    /// Borrow the dense payload, if this node is dense.
     pub fn as_dense(&self) -> Option<&Dist> {
         match self {
             NodeDist::Dense(d) => Some(d),
@@ -457,6 +478,7 @@ impl NodeDist {
         }
     }
 
+    /// Borrow the sparse payload, if this node is sparse.
     pub fn as_sparse(&self) -> Option<&SparseDist> {
         match self {
             NodeDist::Dense(_) => None,
@@ -552,6 +574,7 @@ impl NodeDist {
         }
     }
 
+    /// Index of the largest entry (first on ties).
     pub fn argmax(&self) -> usize {
         match self {
             NodeDist::Dense(d) => d.argmax(),
@@ -559,6 +582,7 @@ impl NodeDist {
         }
     }
 
+    /// Shannon entropy in nats.
     pub fn entropy(&self) -> f32 {
         match self {
             NodeDist::Dense(d) => d.entropy(),
@@ -566,6 +590,7 @@ impl NodeDist {
         }
     }
 
+    /// KL(self ‖ other) over the common positive support.
     pub fn kl(&self, other: &NodeDist) -> f32 {
         match (self, other) {
             (NodeDist::Dense(a), NodeDist::Dense(b)) => a.kl(b),
@@ -574,6 +599,7 @@ impl NodeDist {
         }
     }
 
+    /// Overlap Σ_t min(p(t), q(t)).
     pub fn overlap(p: &NodeDist, q: &NodeDist) -> f32 {
         match (p, q) {
             (NodeDist::Dense(a), NodeDist::Dense(b)) => Dist::overlap(a, b),
@@ -582,6 +608,7 @@ impl NodeDist {
         }
     }
 
+    /// L1 distance Σ_t |p(t) − q(t)|.
     pub fn l1(p: &NodeDist, q: &NodeDist) -> f32 {
         match (p, q) {
             (NodeDist::Dense(a), NodeDist::Dense(b)) => Dist::l1(a, b),
@@ -590,6 +617,7 @@ impl NodeDist {
         }
     }
 
+    /// Total variation distance = L1 / 2.
     pub fn tv(p: &NodeDist, q: &NodeDist) -> f32 {
         0.5 * NodeDist::l1(p, q)
     }

@@ -66,6 +66,7 @@ impl SparseDist {
         self.vocab as usize
     }
 
+    /// Whether the distribution is defined over an empty vocabulary.
     pub fn is_empty(&self) -> bool {
         self.vocab == 0
     }

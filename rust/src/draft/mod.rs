@@ -1,37 +1,33 @@
 //! Drafting policies: (K, L1, L2) delayed-tree construction (paper
-//! Definition 5.2) over the fused AOT rollout entry points.
+//! Definition 5.2) over the fused [`Backend::rollout`] entry points.
 //!
-//! A delayed tree needs at most two PJRT dispatches: one trunk rollout
+//! A delayed tree needs at most two backend dispatches: one trunk rollout
 //! (single path, exact compiled length) and one branch rollout (K paths,
 //! bucketed length, truncated to L2). Root-node i.i.d. multipath (paper
 //! §3.2) is the L1 = 0 special case; single-path drafting is K ≤ 1 or
 //! L2 = 0.
 
-#[cfg(feature = "pjrt")]
 use anyhow::Result;
 
-#[cfg(feature = "pjrt")]
 use crate::dist::{DistStorage, NodeDist, SamplingConfig};
-#[cfg(feature = "pjrt")]
 use crate::kvcache::KvCache;
-#[cfg(feature = "pjrt")]
-use crate::runtime::Engine;
-use crate::runtime::RolloutOut;
-#[cfg(feature = "pjrt")]
-use crate::tree::PathDraws;
-use crate::tree::{DraftTree, Provenance};
-#[cfg(feature = "pjrt")]
+use crate::runtime::{Backend, RolloutOut};
+use crate::tree::{DraftTree, PathDraws, Provenance};
 use crate::util::Pcg64;
 
 /// A delayed-expansion action a = (K, L1, L2) from the paper's action space.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct Action {
+    /// Branch count K (K ≤ 1 means single path).
     pub k: usize,
+    /// Trunk (delay) length L1.
     pub l1: usize,
+    /// Branch length L2.
     pub l2: usize,
 }
 
 impl Action {
+    /// Build an action from its (K, L1, L2) components.
     pub fn new(k: usize, l1: usize, l2: usize) -> Action {
         Action { k, l1, l2 }
     }
@@ -52,32 +48,50 @@ impl Action {
     }
 }
 
+/// Reusable drafting scratch (the `VerifyScratch` convention): the
+/// branch-rollout handoff cache trunk rows are committed into. Create one
+/// per sequence and reuse it across blocks — after the first trunk+branch
+/// block the cache is warm and steady-state drafting performs no
+/// cache-sized allocations.
+#[derive(Clone, Default)]
+pub struct DraftScratch {
+    branch_kv: Option<KvCache>,
+}
+
 /// Drafting output: the merged tree plus raw rollout tensors for KV commits.
 pub struct Drafted {
+    /// The merged delayed tree (node 0 = root).
     pub tree: DraftTree,
+    /// Raw trunk rollout output (None when L1 = 0).
     pub trunk: Option<RolloutOut>,
+    /// Raw branch rollout output (None for single-path actions).
     pub branch: Option<RolloutOut>,
     /// node index of the trunk end (branch point); root if L1 = 0
     pub branch_point: usize,
 }
 
-/// Draft a delayed tree from the current draft KV cache (`pjrt` feature:
-/// issues the fused rollout dispatches).
+/// Draft a delayed tree from the current draft KV cache by issuing the
+/// fused rollout dispatches on any [`Backend`].
 ///
 /// `root_token` is the last committed token at position `root_pos`; the
-/// draft cache must hold valid rows for positions < root_pos.
-#[cfg(feature = "pjrt")]
+/// draft cache must hold valid rows for positions < root_pos. When the
+/// action has both a trunk and branches, the trunk's freshly drafted KV
+/// rows are committed into `scratch`'s reusable handoff cache before the
+/// branch rollout (the fused rollout only carries its *own* path's rows,
+/// and the branch paths start l1 positions past the committed prefix);
+/// with a warm scratch the handoff allocates nothing.
 #[allow(clippy::too_many_arguments)]
 pub fn draft_delayed(
-    engine: &Engine,
+    engine: &dyn Backend,
     draft_kv: &KvCache,
     root_token: u32,
     root_pos: usize,
     action: Action,
     sampling: SamplingConfig,
+    scratch: &mut DraftScratch,
     rng: &mut Pcg64,
 ) -> Result<Drafted> {
-    let meta = &engine.meta;
+    let meta = engine.meta();
     let max_trunk = meta.trunk_lens.iter().copied().max().unwrap_or(8);
     let a = action.normalized(max_trunk);
     let v = meta.draft.vocab;
@@ -119,11 +133,28 @@ pub fn draft_delayed(
         let start_token = tree.nodes[branch_point].token;
         let start_pos = root_pos + a.l1;
         let uniforms: Vec<f32> = (0..a.k * lb).map(|_| rng.next_f32()).collect();
+        // Branch paths start l1 positions past the committed prefix, so the
+        // trunk's rows must be visible to them: refresh the reusable
+        // handoff cache with the committed prefix (copy cost tracks the
+        // context length; stale rows past start_pos are never read) and
+        // commit the trunk rollout's rows on top — the same handoff
+        // selector::draft_superset performs for superset sampling.
+        let branch_kv: &KvCache = match &trunk_out {
+            Some(tr) if a.l1 > 0 => {
+                let kv = scratch
+                    .branch_kv
+                    .get_or_insert_with(|| KvCache::new(meta.draft));
+                kv.copy_prefix_from(draft_kv, root_pos);
+                kv.commit_rollout_rows(&tr.k_rows, &tr.v_rows, 1, a.l1, 0, a.l1 - 1, root_pos);
+                kv
+            }
+            _ => draft_kv,
+        };
         let out = engine.rollout(
             a.k,
             lb,
-            &draft_kv.k,
-            &draft_kv.v,
+            &branch_kv.k,
+            &branch_kv.v,
             start_token,
             start_pos,
             &uniforms,

@@ -10,7 +10,7 @@
 //! The [L, H, S, Dh] destination layout is part of the compiled-module
 //! interface, and it places a token's heads `max_seq·d_head` apart — so a
 //! head-spanning `n_heads·d_head` copy per (layer, step/node) is only legal
-//! when the layout degenerates ([`KvCache::heads_contiguous`]: one head, or
+//! when the layout degenerates (`KvCache::heads_contiguous`: one head, or
 //! `max_seq == 1`). What the layout *does* make contiguous is the step
 //! axis: positions are adjacent per (layer, head), so the rollout commit
 //! coalesces all accepted steps into one span copy whenever the source
@@ -21,10 +21,14 @@
 
 use crate::runtime::ModelDims;
 
+/// One sequence's host-resident KV cache (one lane of the batched loop).
 #[derive(Clone)]
 pub struct KvCache {
+    /// Model dimensions fixing the `[L, H, S, Dh]` layout.
     pub dims: ModelDims,
+    /// Key buffer, `[L, H, S, Dh]` flat.
     pub k: Vec<f32>,
+    /// Value buffer, `[L, H, S, Dh]` flat.
     pub v: Vec<f32>,
     /// Number of committed rows (tokens with valid KV), i.e. the position
     /// where the next row will be written.
@@ -32,6 +36,7 @@ pub struct KvCache {
 }
 
 impl KvCache {
+    /// Zeroed cache sized by the model's dimensions.
     pub fn new(dims: ModelDims) -> KvCache {
         let n = dims.kv_elems();
         KvCache { dims, k: vec![0.0; n], v: vec![0.0; n], len: 0 }
@@ -48,6 +53,36 @@ impl KvCache {
     #[inline]
     fn heads_contiguous(&self) -> bool {
         self.dims.n_heads == 1 || self.dims.max_seq == 1
+    }
+
+    /// Refresh this cache as a prefix copy of `src`: rows `< rows` are
+    /// copied (one contiguous span per (layer, head), so the cost tracks
+    /// the committed context, not `max_seq`), rows past the prefix keep
+    /// their previous contents and **must not be read**. Allocation-free —
+    /// the scratch-reuse half of [`KvCache::clone_prefix`]; dims must
+    /// match.
+    pub fn copy_prefix_from(&mut self, src: &KvCache, rows: usize) {
+        debug_assert_eq!(self.k.len(), src.k.len(), "prefix copy across dims");
+        let rows = rows.min(self.dims.max_seq);
+        let (lyr, h, dh) = (self.dims.n_layers, self.dims.n_heads, self.dims.d_head);
+        let n = rows * dh;
+        for l in 0..lyr {
+            for hh in 0..h {
+                let off = self.row_offset(l, hh, 0);
+                self.k[off..off + n].copy_from_slice(&src.k[off..off + n]);
+                self.v[off..off + n].copy_from_slice(&src.v[off..off + n]);
+            }
+        }
+        self.len = src.len.min(rows);
+    }
+
+    /// Freshly allocated copy of this cache holding only rows `< rows`
+    /// (later rows zero). Allocating convenience wrapper over
+    /// [`KvCache::copy_prefix_from`].
+    pub fn clone_prefix(&self, rows: usize) -> KvCache {
+        let mut out = KvCache::new(self.dims);
+        out.copy_prefix_from(self, rows);
+        out
     }
 
     /// Commit prefill rows laid out [L, H, s_pre, Dh] for positions 0..len.
@@ -143,7 +178,7 @@ impl KvCache {
     /// Commit tree-pass rows [Lyr, N, H, Dh] for node `node_idx` at `pos`.
     ///
     /// The source places a node's heads contiguously, so when the cache
-    /// layout agrees ([`KvCache::heads_contiguous`]) the whole node commits
+    /// layout agrees (`KvCache::heads_contiguous`) the whole node commits
     /// as one `n_heads·d_head` copy per layer; otherwise the per-head loop
     /// advances hoisted strides.
     #[allow(clippy::too_many_arguments)]
@@ -199,6 +234,43 @@ mod tests {
         // untouched rows remain zero
         let off2 = c.row_offset(1, 1, 2);
         assert_eq!(&c.k[off2..off2 + 4], &[0.0; 4]);
+    }
+
+    #[test]
+    fn clone_prefix_copies_only_prefix_rows() {
+        let d = dims();
+        let mut c = KvCache::new(d);
+        for (i, v) in c.k.iter_mut().enumerate() {
+            *v = i as f32 + 1.0;
+        }
+        c.v.copy_from_slice(&c.k);
+        c.len = 6;
+        let p = c.clone_prefix(3);
+        assert_eq!(p.len, 3);
+        for l in 0..d.n_layers {
+            for hh in 0..d.n_heads {
+                for pos in 0..d.max_seq {
+                    let off = p.row_offset(l, hh, pos);
+                    let want = if pos < 3 { c.k[off] } else { 0.0 };
+                    assert_eq!(p.k[off], want, "l={l} h={hh} pos={pos}");
+                    assert_eq!(p.v[off], want, "l={l} h={hh} pos={pos}");
+                }
+            }
+        }
+        // clamps past max_seq
+        let full = c.clone_prefix(d.max_seq + 5);
+        assert_eq!(full.k, c.k);
+        assert_eq!(full.len, 6);
+        // the reusing entry refreshes the prefix in place (stale tail kept)
+        let mut reuse = KvCache::new(d);
+        reuse.k.fill(-1.0);
+        reuse.v.fill(-1.0);
+        reuse.copy_prefix_from(&c, 3);
+        assert_eq!(reuse.len, 3);
+        let off_in = reuse.row_offset(1, 1, 2);
+        let off_out = reuse.row_offset(1, 1, 3);
+        assert_eq!(reuse.k[off_in], c.k[off_in]);
+        assert_eq!(reuse.k[off_out], -1.0, "tail rows keep stale contents");
     }
 
     #[test]

@@ -7,6 +7,18 @@
 //! table and figure of the paper. Layers 1/2 (Pallas kernel + JAX model)
 //! live in `python/compile/` and are AOT-lowered to HLO text loaded by
 //! [`runtime`]. Python never runs on the request path.
+//!
+//! Model execution goes through the [`runtime::Backend`] seam: the default
+//! build runs the whole serving stack — [`coordinator::SpecEngine`], the
+//! TCP [`coordinator::server`], the batched [`coordinator::ServeLoop`],
+//! the CLI and the examples — end-to-end on the deterministic
+//! [`runtime::CpuRefBackend`]; `--features pjrt` swaps in the compiled-HLO
+//! engine without touching anything above the seam.
+//!
+//! See `docs/ARCHITECTURE.md` for the module map and data flow, and
+//! `docs/BENCHES.md` for the machine-readable benchmark reports.
+
+#![warn(missing_docs)]
 
 pub mod benchkit;
 pub mod coordinator;
@@ -20,6 +32,7 @@ pub mod tree;
 pub mod util;
 pub mod verify;
 
+/// Crate version (from Cargo.toml).
 pub fn version() -> &'static str {
     env!("CARGO_PKG_VERSION")
 }

@@ -1,21 +1,35 @@
 //! specdelay CLI — the layer-3 leader entrypoint.
 //!
-//! Subcommands:
+//! Subcommands (default build, CPU reference backend):
 //!   generate        one-off generation with any verifier/action
 //!   serve           TCP line-protocol server (see coordinator::server)
+//!   serve-loop      multi-request batched serving demo (coordinator::ServeLoop)
+//!   version
+//!
+//! Backend selection: `--backend cpu` (default; `--preset tiny|small`,
+//! `--model-seed N` size and seed the reference model) or `--backend pjrt`
+//! (`--family <name>`, needs a `--features pjrt` build plus compiled
+//! artifacts).
+//!
+//! pjrt-only subcommands (need artifacts):
 //!   microbench      per-entry latency model (Eq. 11 inputs)
 //!   collect-traces  offline NDE trace collection
 //!   train-selector  fit the neural delay-and-branch predictor
 //!   bench <id>      regenerate a paper table/figure (table2, table3, fig1,
 //!                   table45, table67, table89, table1015)
 
+use std::time::Instant;
+
 use anyhow::{anyhow, Result};
 
+#[cfg(feature = "pjrt")]
 use specdelay::benchkit::{self, experiments, Scale};
-use specdelay::coordinator::{server, FixedPolicy, SpecEngine};
+use specdelay::coordinator::{server, FixedPolicy, ServeLoop, ServeRequest, SpecEngine};
 use specdelay::dist::SamplingConfig;
 use specdelay::draft::Action;
-use specdelay::selector::{self, LatencyModel};
+use specdelay::runtime::{Backend, CpuModelConfig, CpuRefBackend};
+#[cfg(feature = "pjrt")]
+use specdelay::selector::LatencyModel;
 use specdelay::util::cli::Args;
 use specdelay::util::Pcg64;
 use specdelay::verify;
@@ -30,6 +44,7 @@ fn main() {
     let res = match cmd.as_str() {
         "generate" => cmd_generate(argv),
         "serve" => cmd_serve(argv),
+        "serve-loop" => cmd_serve_loop(argv),
         "microbench" => cmd_microbench(argv),
         "collect-traces" | "train-selector" => cmd_selector(argv),
         "bench" => cmd_bench(argv),
@@ -50,14 +65,44 @@ fn main() {
 
 fn print_usage() {
     eprintln!(
-        "usage: specdelay <generate|serve|microbench|collect-traces|train-selector|bench|version> [--opts]"
+        "usage: specdelay <generate|serve|serve-loop|microbench|collect-traces|train-selector|bench|version> [--opts]\n\
+         backend: --backend cpu (default, --preset tiny|small) | --backend pjrt (--family <name>)"
     );
+}
+
+fn cpu_config(a: &Args) -> Result<CpuModelConfig> {
+    match a.get_or("preset", "small") {
+        "tiny" => Ok(CpuModelConfig::tiny()),
+        "small" => Ok(CpuModelConfig::small()),
+        other => Err(anyhow!("unknown CPU preset {other} (tiny|small)")),
+    }
+}
+
+/// Resolve `--backend cpu|pjrt` into a boxed backend.
+fn load_backend(a: &Args) -> Result<Box<dyn Backend>> {
+    match a.get_or("backend", "cpu") {
+        "cpu" => {
+            let seed = a.get_usize("model-seed", 0).map_err(|e| anyhow!(e))? as u64;
+            Ok(Box::new(CpuRefBackend::new(&cpu_config(a)?, seed)))
+        }
+        "pjrt" => pjrt_backend(a),
+        other => Err(anyhow!("unknown backend {other} (cpu|pjrt)")),
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_backend(a: &Args) -> Result<Box<dyn Backend>> {
+    Ok(Box::new(benchkit::load_engine(a.get_or("family", "qwen-sim"))?))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_backend(_a: &Args) -> Result<Box<dyn Backend>> {
+    Err(anyhow!("--backend pjrt requires a build with --features pjrt"))
 }
 
 fn cmd_generate(argv: Vec<String>) -> Result<()> {
     let a = Args::parse(argv, &["ar"]).map_err(|e| anyhow!(e))?;
-    let family = a.get_or("family", "qwen-sim").to_string();
-    let engine = benchkit::load_engine(&family)?;
+    let backend = load_backend(&a)?;
     let sampling = SamplingConfig::new(
         a.get_f64("temperature", 0.8).map_err(|e| anyhow!(e))? as f32,
         a.get_f64("top-p", 1.0).map_err(|e| anyhow!(e))? as f32,
@@ -68,7 +113,11 @@ fn cmd_generate(argv: Vec<String>) -> Result<()> {
 
     if a.flag("ar") {
         let (text, stats) = specdelay::coordinator::generate_autoregressive(
-            &engine, sampling, &prompt, max_new, &mut rng,
+            backend.as_ref(),
+            sampling,
+            &prompt,
+            max_new,
+            &mut rng,
         )?;
         println!("{text}");
         println!("-- AR: {} tokens, {:.2} tok/s", stats.tokens, stats.tps());
@@ -82,11 +131,13 @@ fn cmd_generate(argv: Vec<String>) -> Result<()> {
         a.get_usize("l1", 2).map_err(|e| anyhow!(e))?,
         a.get_usize("l2", 4).map_err(|e| anyhow!(e))?,
     );
-    let spec = SpecEngine::new(&engine, sampling);
-    let (text, stats) = spec.generate(&prompt, max_new, verifier.as_ref(), &FixedPolicy(action), &mut rng)?;
+    let spec = SpecEngine::new(backend.as_ref(), sampling);
+    let (text, stats) =
+        spec.generate(&prompt, max_new, verifier.as_ref(), &FixedPolicy(action), &mut rng)?;
     println!("{text}");
     println!(
-        "-- {vname} (K={},L1={},L2={}): {} tokens, block efficiency {:.2}, {:.2} tok/s",
+        "-- {vname} on {} (K={},L1={},L2={}): {} tokens, block efficiency {:.2}, {:.2} tok/s",
+        backend.name(),
         action.k,
         action.l1,
         action.l2,
@@ -99,15 +150,75 @@ fn cmd_generate(argv: Vec<String>) -> Result<()> {
 
 fn cmd_serve(argv: Vec<String>) -> Result<()> {
     let a = Args::parse(argv, &[]).map_err(|e| anyhow!(e))?;
-    let family = a.get_or("family", "qwen-sim").to_string();
-    let engine = benchkit::load_engine(&family)?;
+    let backend = load_backend(&a)?;
     let cfg = server::ServerConfig {
         addr: a.get_or("addr", "127.0.0.1:7333").to_string(),
         seed: a.get_usize("seed", 0).map_err(|e| anyhow!(e))? as u64,
     };
-    server::serve(&engine, &cfg, None)
+    server::serve(backend.as_ref(), &cfg, None)
 }
 
+fn cmd_serve_loop(argv: Vec<String>) -> Result<()> {
+    let a = Args::parse(argv, &[]).map_err(|e| anyhow!(e))?;
+    let backend = load_backend(&a)?;
+    let sampling = SamplingConfig::new(
+        a.get_f64("temperature", 0.8).map_err(|e| anyhow!(e))? as f32,
+        a.get_f64("top-p", 1.0).map_err(|e| anyhow!(e))? as f32,
+    );
+    let vname = a.get_or("verifier", "SpecInfer");
+    let verifier = verify::verifier(vname).ok_or_else(|| anyhow!("unknown verifier {vname}"))?;
+    let action = Action::new(
+        a.get_usize("k", 2).map_err(|e| anyhow!(e))?,
+        a.get_usize("l1", 2).map_err(|e| anyhow!(e))?,
+        a.get_usize("l2", 4).map_err(|e| anyhow!(e))?,
+    );
+    let policy = FixedPolicy(action);
+    let batch = a.get_usize("batch", 4).map_err(|e| anyhow!(e))?;
+    let requests = a.get_usize("requests", 8).map_err(|e| anyhow!(e))?;
+    let max_new = a.get_usize("max-new", 48).map_err(|e| anyhow!(e))?;
+    let seed = a.get_usize("seed", 0).map_err(|e| anyhow!(e))? as u64;
+
+    const PROMPTS: [&str; 4] = [
+        "Q: 6 * 7 = ? A:",
+        "story: the golden ",
+        "fn add(a, b):",
+        "translate en->fr: the sea => ",
+    ];
+    let mut srv = ServeLoop::new(backend.as_ref(), sampling, verifier.as_ref(), &policy, batch);
+    for i in 0..requests {
+        srv.submit(ServeRequest {
+            prompt: PROMPTS[i % PROMPTS.len()].to_string(),
+            max_new,
+            seed,
+        });
+    }
+    let t0 = Instant::now();
+    let outs = srv.run()?;
+    let wall = t0.elapsed().as_secs_f64();
+    let mut total = 0usize;
+    for o in &outs {
+        if let Some(e) = &o.error {
+            println!("[{:>3}] error: {e}", o.id);
+            continue;
+        }
+        total += o.stats.tokens;
+        println!(
+            "[{:>3}] {} tokens | block efficiency {:.2} | {:?}",
+            o.id,
+            o.stats.tokens,
+            o.stats.block_efficiency(),
+            o.text
+        );
+    }
+    println!(
+        "-- {vname} on {}, batch {batch}: {requests} requests, {total} tokens in {wall:.2}s = {:.1} tok/s aggregate",
+        backend.name(),
+        total as f64 / wall.max(1e-9)
+    );
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_microbench(argv: Vec<String>) -> Result<()> {
     let a = Args::parse(argv, &[]).map_err(|e| anyhow!(e))?;
     let family = a.get_or("family", "qwen-sim").to_string();
@@ -117,6 +228,7 @@ fn cmd_microbench(argv: Vec<String>) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_selector(argv: Vec<String>) -> Result<()> {
     let a = Args::parse(argv, &[]).map_err(|e| anyhow!(e))?;
     let scale = Scale::from_env();
@@ -140,6 +252,7 @@ fn cmd_selector(argv: Vec<String>) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_bench(argv: Vec<String>) -> Result<()> {
     let a = Args::parse(argv, &[]).map_err(|e| anyhow!(e))?;
     let which = a.positional.first().map(|s| s.as_str()).unwrap_or("table2");
@@ -165,4 +278,19 @@ fn cmd_bench(argv: Vec<String>) -> Result<()> {
         other => return Err(anyhow!("unknown bench id {other}")),
     }
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_microbench(_argv: Vec<String>) -> Result<()> {
+    Err(anyhow!("microbench requires a build with --features pjrt"))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_selector(_argv: Vec<String>) -> Result<()> {
+    Err(anyhow!("selector commands require a build with --features pjrt"))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_bench(_argv: Vec<String>) -> Result<()> {
+    Err(anyhow!("paper-table benches require a build with --features pjrt"))
 }

@@ -1,0 +1,102 @@
+//! The model-invocation seam between the serving stack and a concrete
+//! execution engine.
+//!
+//! Everything downstream of verification — [`crate::coordinator::SpecEngine`],
+//! the batched [`crate::coordinator::ServeLoop`], [`crate::draft::draft_delayed`],
+//! the CLI and the examples — drives models exclusively through this trait,
+//! so the whole serving stack builds and runs in the hermetic default
+//! configuration. Two implementations exist:
+//!
+//! * [`super::CpuRefBackend`] — a deterministic pure-rust reference
+//!   transformer (always built). This is what tier-1 tests, the examples
+//!   and `benches/serve_loop.rs` exercise end-to-end.
+//! * `runtime::Engine` (behind the `pjrt` feature) — the AOT/PJRT engine
+//!   executing compiled HLO.
+//!
+//! The method surface is exactly the compiled-module interface of the AOT
+//! artifacts (see `python/compile/model.py`): KV caches are caller-owned
+//! host arrays in the canonical `[L, H, S, Dh]` layout, every call is pure
+//! (new KV rows come back as outputs and are committed by the caller via
+//! [`crate::kvcache::KvCache`]), and all randomness is injected by the
+//! caller (rollouts sample from caller-supplied uniforms), so any backend
+//! is exactly reproducible given a seed.
+
+use anyhow::Result;
+
+use super::{DecodeOut, FamilyMeta, ModelDims, PrefillOut, Role, RolloutOut, TreeOut};
+
+/// A model-execution backend for one target/draft family.
+///
+/// `Send + Sync` is part of the contract: one backend instance is shared by
+/// every worker of a data-parallel sweep and every lane of the batched
+/// serving loop. Implementations must be pure functions of their inputs
+/// (plus immutable model state) — the determinism guarantees of the
+/// harness ([`crate::util::threadpool::par_map_init`]) rely on it.
+pub trait Backend: Send + Sync {
+    /// Family metadata: model dimensions and compiled shape buckets.
+    fn meta(&self) -> &FamilyMeta;
+
+    /// Short backend name for logs and bench reports (e.g. `"cpu-ref"`).
+    fn name(&self) -> &'static str;
+
+    /// Dimensions of one model of the pair.
+    fn dims(&self, role: Role) -> ModelDims {
+        match role {
+            Role::Target => self.meta().target,
+            Role::Draft => self.meta().draft,
+        }
+    }
+
+    /// Prompt prefill: run `tokens[..length]` through the model and return
+    /// the last valid token's logits/hidden plus KV rows for every prompt
+    /// position (layout `[L, H, s_pre, Dh]`, rows past `length` undefined).
+    fn prefill(&self, role: Role, tokens: &[i32], length: usize) -> Result<PrefillOut>;
+
+    /// One autoregressive step: `token` at position `pos`, attending to
+    /// committed cache rows `< pos` plus itself.
+    fn decode(
+        &self,
+        role: Role,
+        k_cache: &[f32],
+        v_cache: &[f32],
+        token: u32,
+        pos: usize,
+    ) -> Result<DecodeOut>;
+
+    /// Fused draft rollout (draft model only): `k` i.i.d. continuation
+    /// paths of `l` steps from `token` at `pos`. Sampling (temperature +
+    /// nucleus) happens inside, driven by the `k·l` caller-supplied
+    /// `uniforms`, so the caller retains full control of randomness; the
+    /// transformed per-step distributions come back in
+    /// [`RolloutOut::dists`] and are exactly what the tokens were sampled
+    /// from (the q-side losslessness requirement).
+    #[allow(clippy::too_many_arguments)]
+    fn rollout(
+        &self,
+        k: usize,
+        l: usize,
+        k_cache: &[f32],
+        v_cache: &[f32],
+        token: u32,
+        pos: usize,
+        uniforms: &[f32],
+        temperature: f32,
+        top_p: f32,
+    ) -> Result<RolloutOut>;
+
+    /// Target tree-verification pass over `n_bucket` nodes: one batched
+    /// forward with tree attention — node `i` attends committed cache rows
+    /// `< cache_len` plus every node `j` with `bias[i·n + j] == 0`
+    /// (ancestor-or-self).
+    #[allow(clippy::too_many_arguments)]
+    fn tree_verify(
+        &self,
+        n_bucket: usize,
+        k_cache: &[f32],
+        v_cache: &[f32],
+        tokens: &[i32],
+        positions: &[i32],
+        bias: &[f32],
+        cache_len: usize,
+    ) -> Result<TreeOut>;
+}

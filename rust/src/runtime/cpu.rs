@@ -1,0 +1,915 @@
+//! Deterministic CPU reference backend: a small seeded transformer that
+//! implements the full [`Backend`] surface in pure rust, so the whole
+//! serving stack — drafting, tree verification, the batched serving loop —
+//! builds and runs end-to-end in the hermetic default configuration.
+//!
+//! The architecture mirrors the layer-2 JAX model (`python/compile/model.py`
+//! and the pure-jnp oracle `python/compile/kernels/ref.py`): pre-LN blocks,
+//! RoPE positions, softmax attention over an external `[L, H, S, Dh]` KV
+//! cache, tanh-GELU MLP, and a tied-embedding logit head. Weights are drawn
+//! from a seeded [`Pcg64`] (Box–Muller normals, GPT-style scales), so a
+//! `(config, seed)` pair names one reproducible model everywhere.
+//!
+//! ## Consistency contract (what the unit tests pin down)
+//!
+//! All four entry points are views of *one* deterministic function of
+//! (context tokens, position): a prefill row, a decode step, a rollout step
+//! and a tree-pass node with the same context produce **bit-identical**
+//! logits, because every path routes through the same layer kernels and
+//! assembles its attention keys in the same order (committed cache rows
+//! ascending, then in-flight rows ascending, then self). This is the
+//! incremental-KV invariant the serving loop relies on, and it is what
+//! makes the end-to-end losslessness suite (`tests/e2e_serve.rs`)
+//! meaningful: the q recorded by [`Backend::rollout`] is exactly the
+//! distribution the draft tokens were sampled from, and the p produced by
+//! [`Backend::tree_verify`] is exactly the target conditional.
+//!
+//! Out-of-vocabulary token ids (e.g. the byte-tokenizer `PAD` = 258 against
+//! a truncated test vocabulary) wrap modulo the vocab instead of panicking —
+//! padding lanes of a bucketed tree pass are computed and discarded.
+
+use anyhow::{bail, Result};
+
+use super::backend::Backend;
+use super::{DecodeOut, FamilyMeta, ModelDims, PrefillOut, Role, RolloutOut, TreeOut};
+use crate::dist::SamplingConfig;
+use crate::util::Pcg64;
+
+/// Architecture + scale of one CPU reference model pair.
+#[derive(Clone, Debug)]
+pub struct CpuModelConfig {
+    /// Transformer blocks per model.
+    pub n_layers: usize,
+    /// Residual-stream width.
+    pub d_model: usize,
+    /// Attention heads.
+    pub n_heads: usize,
+    /// Per-head dimension (must be even for RoPE).
+    pub d_head: usize,
+    /// Vocabulary size. Prompt bytes must stay below it; out-of-range ids
+    /// wrap modulo the vocab (see the module docs).
+    pub vocab: usize,
+    /// Maximum sequence length (KV-cache rows per head).
+    pub max_seq: usize,
+    /// Prompt prefill capacity ([`FamilyMeta::s_pre`]).
+    pub s_pre: usize,
+    /// MLP expansion factor (d_mlp = ratio · d_model).
+    pub mlp_ratio: usize,
+    /// Multiplier on the tied-embedding logits. Random-weight logits are
+    /// nearly flat; this sharpens them to LM-like entropy so temperature /
+    /// top-p sweeps and acceptance dynamics are non-trivial.
+    pub logit_scale: f32,
+}
+
+impl CpuModelConfig {
+    /// Test-scale preset: 1 layer, d = 16, vocab 64 (prompts must use bytes
+    /// `< 64`, e.g. digits/punctuation). Fast enough for debug-mode
+    /// Monte-Carlo suites.
+    pub fn tiny() -> CpuModelConfig {
+        CpuModelConfig {
+            n_layers: 1,
+            d_model: 16,
+            n_heads: 2,
+            d_head: 8,
+            vocab: 64,
+            max_seq: 96,
+            s_pre: 24,
+            mlp_ratio: 2,
+            logit_scale: 30.0,
+        }
+    }
+
+    /// Demo/bench preset: 2 layers, d = 32, the full byte-tokenizer vocab
+    /// (so arbitrary text prompts and EOS/PAD emission work).
+    pub fn small() -> CpuModelConfig {
+        CpuModelConfig {
+            n_layers: 2,
+            d_model: 32,
+            n_heads: 2,
+            d_head: 16,
+            vocab: crate::tokenizer::VOCAB,
+            max_seq: 320,
+            s_pre: 48,
+            mlp_ratio: 2,
+            logit_scale: 30.0,
+        }
+    }
+
+    fn dims(&self) -> ModelDims {
+        ModelDims {
+            n_layers: self.n_layers,
+            d_model: self.d_model,
+            n_heads: self.n_heads,
+            d_head: self.d_head,
+            vocab: self.vocab,
+            max_seq: self.max_seq,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Model weights + kernels
+// ---------------------------------------------------------------------------
+
+/// One pre-LN transformer block (layouts match `python/compile/model.py`).
+struct Layer {
+    ln1_g: Vec<f32>,
+    ln1_b: Vec<f32>,
+    /// `[d_model, n_heads·d_head]`, row-major (x @ w).
+    wq: Vec<f32>,
+    wk: Vec<f32>,
+    wv: Vec<f32>,
+    /// `[n_heads·d_head, d_model]`.
+    wo: Vec<f32>,
+    ln2_g: Vec<f32>,
+    ln2_b: Vec<f32>,
+    /// `[d_model, d_mlp]`.
+    w1: Vec<f32>,
+    b1: Vec<f32>,
+    /// `[d_mlp, d_model]`.
+    w2: Vec<f32>,
+    b2: Vec<f32>,
+}
+
+struct CpuModel {
+    dims: ModelDims,
+    d_mlp: usize,
+    logit_scale: f32,
+    /// `[vocab, d_model]`; also the (tied) output head.
+    tok_emb: Vec<f32>,
+    layers: Vec<Layer>,
+    lnf_g: Vec<f32>,
+    lnf_b: Vec<f32>,
+}
+
+/// Standard normal via Box–Muller on the seeded stream.
+fn normal(rng: &mut Pcg64) -> f32 {
+    let u1 = rng.next_f64().max(1e-12);
+    let u2 = rng.next_f64();
+    (((-2.0 * u1.ln()).sqrt()) * (std::f64::consts::TAU * u2).cos()) as f32
+}
+
+fn norm_vec(rng: &mut Pcg64, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| normal(rng) * scale).collect()
+}
+
+/// LayerNorm with affine params, written into `out` (same length as `x`).
+fn ln(x: &[f32], g: &[f32], b: &[f32], out: &mut [f32]) {
+    let n = x.len() as f32;
+    let mut mu = 0.0f32;
+    for &v in x {
+        mu += v;
+    }
+    mu /= n;
+    let mut var = 0.0f32;
+    for &v in x {
+        let dv = v - mu;
+        var += dv * dv;
+    }
+    var /= n;
+    let inv = 1.0 / (var + 1e-5).sqrt();
+    for (((o, &xv), &gv), &bv) in out.iter_mut().zip(x).zip(g).zip(b) {
+        *o = (xv - mu) * inv * gv + bv;
+    }
+}
+
+/// out = x @ w with `w` row-major `[x.len(), n_out]`.
+fn matvec(x: &[f32], w: &[f32], n_out: usize, out: &mut [f32]) {
+    out.fill(0.0);
+    for (i, &xi) in x.iter().enumerate() {
+        let row = &w[i * n_out..(i + 1) * n_out];
+        for (o, &wv) in out.iter_mut().zip(row) {
+            *o += xi * wv;
+        }
+    }
+}
+
+/// tanh-approximation GELU (matches `jax.nn.gelu`'s default).
+fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + ((0.797_884_6 * (x + 0.044715 * x * x * x)).tanh()))
+}
+
+/// Rotary position embedding applied in place to a `[H·Dh]` row.
+fn rope(row: &mut [f32], n_heads: usize, d_head: usize, pos: usize) {
+    for h in 0..n_heads {
+        let base = h * d_head;
+        for j in 0..d_head / 2 {
+            let freq = 10000.0f32.powf(-((2 * j) as f32) / d_head as f32);
+            let theta = pos as f32 * freq;
+            let (sin, cos) = theta.sin_cos();
+            let x1 = row[base + 2 * j];
+            let x2 = row[base + 2 * j + 1];
+            row[base + 2 * j] = x1 * cos - x2 * sin;
+            row[base + 2 * j + 1] = x1 * sin + x2 * cos;
+        }
+    }
+}
+
+/// Gathered attention keys/values: one `[H·Dh]` row per visible position,
+/// in the canonical order (cache rows ascending, in-flight rows, self).
+#[derive(Default)]
+struct KeyBuf {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    n: usize,
+}
+
+impl KeyBuf {
+    fn clear(&mut self) {
+        self.k.clear();
+        self.v.clear();
+        self.n = 0;
+    }
+
+    fn push_row(&mut self, k: &[f32], v: &[f32]) {
+        self.k.extend_from_slice(k);
+        self.v.extend_from_slice(v);
+        self.n += 1;
+    }
+
+    /// Gather cache position `s` of `layer` from the `[L, H, S, Dh]` cache.
+    fn push_cache_row(&mut self, kc: &[f32], vc: &[f32], dims: &ModelDims, layer: usize, s: usize) {
+        for hh in 0..dims.n_heads {
+            let off = ((layer * dims.n_heads + hh) * dims.max_seq + s) * dims.d_head;
+            self.k.extend_from_slice(&kc[off..off + dims.d_head]);
+            self.v.extend_from_slice(&vc[off..off + dims.d_head]);
+        }
+        self.n += 1;
+    }
+}
+
+/// Softmax attention of one query row over gathered keys, per head, with
+/// 1/√Dh score scaling; output written into `out` (`[H·Dh]`).
+#[allow(clippy::too_many_arguments)]
+fn attend(
+    q: &[f32],
+    keys: &[f32],
+    vals: &[f32],
+    n_keys: usize,
+    n_heads: usize,
+    d_head: usize,
+    scores: &mut Vec<f32>,
+    out: &mut [f32],
+) {
+    let scale = 1.0 / (d_head as f32).sqrt();
+    let row = n_heads * d_head;
+    for h in 0..n_heads {
+        let qh = &q[h * d_head..(h + 1) * d_head];
+        scores.clear();
+        let mut max = f32::NEG_INFINITY;
+        for kidx in 0..n_keys {
+            let base = kidx * row + h * d_head;
+            let kh = &keys[base..base + d_head];
+            let mut sv = 0.0f32;
+            for (a, b) in qh.iter().zip(kh) {
+                sv += a * b;
+            }
+            sv *= scale;
+            if sv > max {
+                max = sv;
+            }
+            scores.push(sv);
+        }
+        let mut denom = 0.0f32;
+        for sv in scores.iter_mut() {
+            *sv = (*sv - max).exp();
+            denom += *sv;
+        }
+        let inv = 1.0 / denom;
+        let oh = &mut out[h * d_head..(h + 1) * d_head];
+        oh.fill(0.0);
+        for (kidx, &w) in scores.iter().enumerate() {
+            let base = kidx * row + h * d_head;
+            let vh = &vals[base..base + d_head];
+            let wn = w * inv;
+            for (o, &vv) in oh.iter_mut().zip(vh) {
+                *o += wn * vv;
+            }
+        }
+    }
+}
+
+/// Inverse-CDF draw from a normalized probability slice with a supplied
+/// uniform — the same cumulative-scan semantics as [`crate::dist::Dist::sample`]
+/// (skip zero entries, fall back to the last positive-mass index).
+fn sample_probs(probs: &[f32], u: f64) -> usize {
+    let mut acc = 0.0f64;
+    let mut last = 0usize;
+    for (i, &w) in probs.iter().enumerate() {
+        if w > 0.0 {
+            last = i;
+            acc += w as f64;
+            if u < acc {
+                return i;
+            }
+        }
+    }
+    last
+}
+
+/// Output of one single-token forward pass.
+struct StepOut {
+    logits: Vec<f32>,
+    hidden: Vec<f32>,
+    /// `[L, H·Dh]` (RoPE applied).
+    k_rows: Vec<f32>,
+    v_rows: Vec<f32>,
+}
+
+/// Output of one batched forward pass over `n` tokens.
+struct BatchOut {
+    /// `[N, V]`.
+    logits: Vec<f32>,
+    /// `[N, d]`.
+    hidden: Vec<f32>,
+    /// `[L, N, H·Dh]` (RoPE applied).
+    k_rows: Vec<f32>,
+    v_rows: Vec<f32>,
+}
+
+impl CpuModel {
+    fn init(cfg: &CpuModelConfig, rng: &mut Pcg64) -> CpuModel {
+        assert!(cfg.d_head % 2 == 0, "d_head must be even for RoPE");
+        let d = cfg.d_model;
+        let da = cfg.n_heads * cfg.d_head;
+        let m = cfg.mlp_ratio * d;
+        let out_scale = 0.02 / (2.0 * cfg.n_layers as f32).sqrt();
+        let layers: Vec<Layer> = (0..cfg.n_layers)
+            .map(|_| Layer {
+                ln1_g: vec![1.0; d],
+                ln1_b: vec![0.0; d],
+                wq: norm_vec(rng, d * da, 0.02),
+                wk: norm_vec(rng, d * da, 0.02),
+                wv: norm_vec(rng, d * da, 0.02),
+                wo: norm_vec(rng, da * d, out_scale),
+                ln2_g: vec![1.0; d],
+                ln2_b: vec![0.0; d],
+                w1: norm_vec(rng, d * m, 0.02),
+                b1: vec![0.0; m],
+                w2: norm_vec(rng, m * d, out_scale),
+                b2: vec![0.0; d],
+            })
+            .collect();
+        CpuModel {
+            dims: cfg.dims(),
+            d_mlp: m,
+            logit_scale: cfg.logit_scale,
+            tok_emb: norm_vec(rng, cfg.vocab * d, 0.02),
+            layers,
+            lnf_g: vec![1.0; d],
+            lnf_b: vec![0.0; d],
+        }
+    }
+
+    /// Embedding row for a token id, wrapping out-of-range ids.
+    fn embed_row(&self, token: i64) -> &[f32] {
+        let d = self.dims.d_model;
+        let t = token.rem_euclid(self.dims.vocab as i64) as usize;
+        &self.tok_emb[t * d..(t + 1) * d]
+    }
+
+    /// Tied-embedding logits of a final-LN hidden state, into `out` (`[V]`).
+    fn logits_into(&self, hidden: &[f32], out: &mut [f32]) {
+        let d = self.dims.d_model;
+        for (t, o) in out.iter_mut().enumerate() {
+            let row = &self.tok_emb[t * d..(t + 1) * d];
+            let mut acc = 0.0f32;
+            for (a, b) in hidden.iter().zip(row) {
+                acc += a * b;
+            }
+            *o = acc * self.logit_scale;
+        }
+    }
+
+    /// One token at `pos`: attends committed cache rows `< cache_limit`,
+    /// then `n_own` in-flight path rows (per layer, `[r·H·Dh..]` slices of
+    /// `own_k`/`own_v`), then itself.
+    #[allow(clippy::too_many_arguments)]
+    fn step(
+        &self,
+        k_cache: &[f32],
+        v_cache: &[f32],
+        cache_limit: usize,
+        own_k: &[Vec<f32>],
+        own_v: &[Vec<f32>],
+        n_own: usize,
+        token: u32,
+        pos: usize,
+    ) -> StepOut {
+        let d = self.dims.d_model;
+        let da = self.dims.n_heads * self.dims.d_head;
+        let mut x = self.embed_row(token as i64).to_vec();
+        let mut yv = vec![0.0f32; d];
+        let mut att = vec![0.0f32; da];
+        let mut proj = vec![0.0f32; d];
+        let mut h1 = vec![0.0f32; self.d_mlp];
+        let mut keys = KeyBuf::default();
+        let mut scores: Vec<f32> = Vec::new();
+        let mut k_rows = Vec::with_capacity(self.dims.n_layers * da);
+        let mut v_rows = Vec::with_capacity(self.dims.n_layers * da);
+        for (l, layer) in self.layers.iter().enumerate() {
+            ln(&x, &layer.ln1_g, &layer.ln1_b, &mut yv);
+            let mut q = vec![0.0f32; da];
+            let mut k = vec![0.0f32; da];
+            let mut v = vec![0.0f32; da];
+            matvec(&yv, &layer.wq, da, &mut q);
+            matvec(&yv, &layer.wk, da, &mut k);
+            matvec(&yv, &layer.wv, da, &mut v);
+            rope(&mut q, self.dims.n_heads, self.dims.d_head, pos);
+            rope(&mut k, self.dims.n_heads, self.dims.d_head, pos);
+            keys.clear();
+            for s in 0..cache_limit {
+                keys.push_cache_row(k_cache, v_cache, &self.dims, l, s);
+            }
+            for r in 0..n_own {
+                keys.push_row(&own_k[l][r * da..(r + 1) * da], &own_v[l][r * da..(r + 1) * da]);
+            }
+            keys.push_row(&k, &v);
+            attend(
+                &q,
+                &keys.k,
+                &keys.v,
+                keys.n,
+                self.dims.n_heads,
+                self.dims.d_head,
+                &mut scores,
+                &mut att,
+            );
+            matvec(&att, &layer.wo, d, &mut proj);
+            for (xv, &pv) in x.iter_mut().zip(&proj) {
+                *xv += pv;
+            }
+            ln(&x, &layer.ln2_g, &layer.ln2_b, &mut yv);
+            matvec(&yv, &layer.w1, self.d_mlp, &mut h1);
+            for (hv, &bv) in h1.iter_mut().zip(&layer.b1) {
+                *hv = gelu(*hv + bv);
+            }
+            matvec(&h1, &layer.w2, d, &mut proj);
+            for ((xv, &pv), &bv) in x.iter_mut().zip(&proj).zip(&layer.b2) {
+                *xv += pv + bv;
+            }
+            k_rows.extend_from_slice(&k);
+            v_rows.extend_from_slice(&v);
+        }
+        let mut hidden = vec![0.0f32; d];
+        ln(&x, &self.lnf_g, &self.lnf_b, &mut hidden);
+        let mut logits = vec![0.0f32; self.dims.vocab];
+        self.logits_into(&hidden, &mut logits);
+        StepOut { logits, hidden, k_rows, v_rows }
+    }
+
+    /// Batched forward over `tokens` at `positions`: each row attends cache
+    /// rows `< limit` (when a cache is given) plus every batch row `j` with
+    /// `allowed(i, j)` (ascending; `allowed(i, i)` covers self-attention).
+    fn batch(
+        &self,
+        cache: Option<(&[f32], &[f32], usize)>,
+        tokens: &[i32],
+        positions: &[i32],
+        allowed: &dyn Fn(usize, usize) -> bool,
+    ) -> BatchOut {
+        let n = tokens.len();
+        let d = self.dims.d_model;
+        let da = self.dims.n_heads * self.dims.d_head;
+        let mut xs: Vec<f32> = Vec::with_capacity(n * d);
+        for &t in tokens {
+            xs.extend_from_slice(self.embed_row(t as i64));
+        }
+        let mut k_rows = vec![0.0f32; self.dims.n_layers * n * da];
+        let mut v_rows = vec![0.0f32; self.dims.n_layers * n * da];
+        let mut qs = vec![0.0f32; n * da];
+        let mut yv = vec![0.0f32; d];
+        let mut att = vec![0.0f32; da];
+        let mut proj = vec![0.0f32; d];
+        let mut h1 = vec![0.0f32; self.d_mlp];
+        let mut keys = KeyBuf::default();
+        let mut scores: Vec<f32> = Vec::new();
+        for (l, layer) in self.layers.iter().enumerate() {
+            // every row's q/k/v first: attention reads the whole batch's
+            // pre-update keys
+            for i in 0..n {
+                ln(&xs[i * d..(i + 1) * d], &layer.ln1_g, &layer.ln1_b, &mut yv);
+                let pos = positions[i].max(0) as usize;
+                let qrow = &mut qs[i * da..(i + 1) * da];
+                matvec(&yv, &layer.wq, da, qrow);
+                rope(qrow, self.dims.n_heads, self.dims.d_head, pos);
+                let base = (l * n + i) * da;
+                matvec(&yv, &layer.wk, da, &mut k_rows[base..base + da]);
+                rope(&mut k_rows[base..base + da], self.dims.n_heads, self.dims.d_head, pos);
+                matvec(&yv, &layer.wv, da, &mut v_rows[base..base + da]);
+            }
+            for i in 0..n {
+                keys.clear();
+                if let Some((kc, vc, limit)) = cache {
+                    for s in 0..limit {
+                        keys.push_cache_row(kc, vc, &self.dims, l, s);
+                    }
+                }
+                for j in 0..n {
+                    if allowed(i, j) {
+                        let base = (l * n + j) * da;
+                        keys.push_row(&k_rows[base..base + da], &v_rows[base..base + da]);
+                    }
+                }
+                attend(
+                    &qs[i * da..(i + 1) * da],
+                    &keys.k,
+                    &keys.v,
+                    keys.n,
+                    self.dims.n_heads,
+                    self.dims.d_head,
+                    &mut scores,
+                    &mut att,
+                );
+                matvec(&att, &layer.wo, d, &mut proj);
+                let x = &mut xs[i * d..(i + 1) * d];
+                for (xv, &pv) in x.iter_mut().zip(&proj) {
+                    *xv += pv;
+                }
+                ln(x, &layer.ln2_g, &layer.ln2_b, &mut yv);
+                matvec(&yv, &layer.w1, self.d_mlp, &mut h1);
+                for (hv, &bv) in h1.iter_mut().zip(&layer.b1) {
+                    *hv = gelu(*hv + bv);
+                }
+                matvec(&h1, &layer.w2, d, &mut proj);
+                for ((xv, &pv), &bv) in x.iter_mut().zip(&proj).zip(&layer.b2) {
+                    *xv += pv + bv;
+                }
+            }
+        }
+        let v = self.dims.vocab;
+        let mut hidden = vec![0.0f32; n * d];
+        let mut logits = vec![0.0f32; n * v];
+        for i in 0..n {
+            ln(&xs[i * d..(i + 1) * d], &self.lnf_g, &self.lnf_b, &mut hidden[i * d..(i + 1) * d]);
+            self.logits_into(&hidden[i * d..(i + 1) * d], &mut logits[i * v..(i + 1) * v]);
+        }
+        BatchOut { logits, hidden, k_rows, v_rows }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The backend
+// ---------------------------------------------------------------------------
+
+/// Always-built CPU reference backend: one seeded target/draft model pair
+/// behind the [`Backend`] trait.
+///
+/// ```
+/// use specdelay::runtime::{Backend, CpuModelConfig, CpuRefBackend, Role};
+///
+/// let backend = CpuRefBackend::new(&CpuModelConfig::tiny(), 0);
+/// let out = backend.prefill(Role::Target, &[7, 3, 11], 3).unwrap();
+/// assert_eq!(out.logits.len(), backend.dims(Role::Target).vocab);
+/// ```
+pub struct CpuRefBackend {
+    meta: FamilyMeta,
+    target: CpuModel,
+    draft: CpuModel,
+}
+
+impl CpuRefBackend {
+    /// Build a target/draft pair from one config: same dimensions,
+    /// different seeded weights (streams derived from `seed`), so p ≠ q
+    /// with comparable entropy.
+    pub fn new(cfg: &CpuModelConfig, seed: u64) -> CpuRefBackend {
+        let dims = cfg.dims();
+        CpuRefBackend {
+            meta: FamilyMeta {
+                family: "cpu-ref".to_string(),
+                target: dims,
+                draft: dims,
+                s_pre: cfg.s_pre,
+                tree_sizes: vec![4, 8, 16, 32, 48],
+                // large enough for selector superset sampling (≤ ~300 nodes)
+                tree_big: 384,
+                trunk_lens: vec![1, 2, 3, 4, 6, 8],
+                branch_ks: vec![2, 3, 4],
+                branch_lens: vec![1, 2, 4, 8],
+            },
+            target: CpuModel::init(cfg, &mut Pcg64::new(seed, 0x7a67)),
+            draft: CpuModel::init(cfg, &mut Pcg64::new(seed, 0xd4a7)),
+        }
+    }
+
+    fn model(&self, role: Role) -> &CpuModel {
+        match role {
+            Role::Target => &self.target,
+            Role::Draft => &self.draft,
+        }
+    }
+
+    fn check_cache(&self, role: Role, k_cache: &[f32], v_cache: &[f32]) -> Result<()> {
+        let want = self.model(role).dims.kv_elems();
+        if k_cache.len() != want || v_cache.len() != want {
+            bail!(
+                "cpu-ref: cache size {}/{} != expected {want}",
+                k_cache.len(),
+                v_cache.len()
+            );
+        }
+        Ok(())
+    }
+}
+
+impl Backend for CpuRefBackend {
+    fn meta(&self) -> &FamilyMeta {
+        &self.meta
+    }
+
+    fn name(&self) -> &'static str {
+        "cpu-ref"
+    }
+
+    fn prefill(&self, role: Role, tokens: &[i32], length: usize) -> Result<PrefillOut> {
+        let m = self.model(role);
+        let s_pre = self.meta.s_pre;
+        if tokens.len() > s_pre || length == 0 || length > tokens.len() {
+            bail!("prefill: bad token count {} (s_pre {s_pre})", tokens.len());
+        }
+        let positions: Vec<i32> = (0..length as i32).collect();
+        let out = m.batch(None, &tokens[..length], &positions, &|i, j| j <= i);
+        let dims = m.dims;
+        let (h, dh) = (dims.n_heads, dims.d_head);
+        let da = h * dh;
+        let mut k_rows = vec![0.0f32; dims.n_layers * h * s_pre * dh];
+        let mut v_rows = vec![0.0f32; dims.n_layers * h * s_pre * dh];
+        for l in 0..dims.n_layers {
+            for s in 0..length {
+                let src = (l * length + s) * da;
+                for hh in 0..h {
+                    let dst = ((l * h + hh) * s_pre + s) * dh;
+                    k_rows[dst..dst + dh]
+                        .copy_from_slice(&out.k_rows[src + hh * dh..src + (hh + 1) * dh]);
+                    v_rows[dst..dst + dh]
+                        .copy_from_slice(&out.v_rows[src + hh * dh..src + (hh + 1) * dh]);
+                }
+            }
+        }
+        let last = length - 1;
+        let (v, d) = (dims.vocab, dims.d_model);
+        Ok(PrefillOut {
+            logits: out.logits[last * v..(last + 1) * v].to_vec(),
+            hidden: out.hidden[last * d..(last + 1) * d].to_vec(),
+            k_rows,
+            v_rows,
+        })
+    }
+
+    fn decode(
+        &self,
+        role: Role,
+        k_cache: &[f32],
+        v_cache: &[f32],
+        token: u32,
+        pos: usize,
+    ) -> Result<DecodeOut> {
+        self.check_cache(role, k_cache, v_cache)?;
+        let m = self.model(role);
+        if pos >= m.dims.max_seq {
+            bail!("decode: position {pos} exceeds max_seq {}", m.dims.max_seq);
+        }
+        let no_rows: Vec<Vec<f32>> = vec![Vec::new(); m.dims.n_layers];
+        let out = m.step(k_cache, v_cache, pos, &no_rows, &no_rows, 0, token, pos);
+        Ok(DecodeOut {
+            logits: out.logits,
+            hidden: out.hidden,
+            k_row: out.k_rows,
+            v_row: out.v_rows,
+        })
+    }
+
+    fn rollout(
+        &self,
+        k: usize,
+        l: usize,
+        k_cache: &[f32],
+        v_cache: &[f32],
+        token: u32,
+        pos: usize,
+        uniforms: &[f32],
+        temperature: f32,
+        top_p: f32,
+    ) -> Result<RolloutOut> {
+        if uniforms.len() != k * l {
+            bail!("rollout: expected {} uniforms", k * l);
+        }
+        if k == 0 || l == 0 {
+            bail!("rollout: k and l must be positive");
+        }
+        self.check_cache(Role::Draft, k_cache, v_cache)?;
+        let m = &self.draft;
+        if pos + l > m.dims.max_seq {
+            bail!("rollout: positions {pos}..{} exceed max_seq", pos + l);
+        }
+        let dims = m.dims;
+        let (vcb, d) = (dims.vocab, dims.d_model);
+        let da = dims.n_heads * dims.d_head;
+        let cfg = SamplingConfig::new(temperature, top_p);
+        let mut tokens_out = vec![0i32; k * l];
+        let mut dists = vec![0.0f32; k * l * vcb];
+        let mut hiddens = vec![0.0f32; k * l * d];
+        let mut k_rows = vec![0.0f32; dims.n_layers * k * l * da];
+        let mut v_rows = vec![0.0f32; dims.n_layers * k * l * da];
+        let mut idx_scratch: Vec<u32> = Vec::new();
+        for b in 0..k {
+            let mut own_k: Vec<Vec<f32>> =
+                (0..dims.n_layers).map(|_| Vec::with_capacity(l * da)).collect();
+            let mut own_v: Vec<Vec<f32>> =
+                (0..dims.n_layers).map(|_| Vec::with_capacity(l * da)).collect();
+            let mut cur = token;
+            for j in 0..l {
+                let out = m.step(k_cache, v_cache, pos, &own_k, &own_v, j, cur, pos + j);
+                for lyr in 0..dims.n_layers {
+                    let src = lyr * da;
+                    let dst = ((lyr * k + b) * l + j) * da;
+                    k_rows[dst..dst + da].copy_from_slice(&out.k_rows[src..src + da]);
+                    v_rows[dst..dst + da].copy_from_slice(&out.v_rows[src..src + da]);
+                    own_k[lyr].extend_from_slice(&out.k_rows[src..src + da]);
+                    own_v[lyr].extend_from_slice(&out.v_rows[src..src + da]);
+                }
+                let slot = b * l + j;
+                hiddens[slot * d..(slot + 1) * d].copy_from_slice(&out.hidden);
+                let probs = &mut dists[slot * vcb..(slot + 1) * vcb];
+                probs.copy_from_slice(&out.logits);
+                let _ = cfg.transform_logits(probs, &mut idx_scratch);
+                let t = sample_probs(probs, uniforms[slot] as f64);
+                tokens_out[slot] = t as i32;
+                cur = t as u32;
+            }
+        }
+        Ok(RolloutOut { k, l, tokens: tokens_out, dists, hiddens, k_rows, v_rows })
+    }
+
+    fn tree_verify(
+        &self,
+        n_bucket: usize,
+        k_cache: &[f32],
+        v_cache: &[f32],
+        tokens: &[i32],
+        positions: &[i32],
+        bias: &[f32],
+        cache_len: usize,
+    ) -> Result<TreeOut> {
+        if tokens.len() != n_bucket
+            || positions.len() != n_bucket
+            || bias.len() != n_bucket * n_bucket
+        {
+            bail!("tree_verify: shape mismatch for bucket {n_bucket}");
+        }
+        self.check_cache(Role::Target, k_cache, v_cache)?;
+        let m = &self.target;
+        if cache_len > m.dims.max_seq {
+            bail!("tree_verify: cache_len {cache_len} exceeds max_seq");
+        }
+        let out = m.batch(Some((k_cache, v_cache, cache_len)), tokens, positions, &|i, j| {
+            bias[i * n_bucket + j] > -1e29
+        });
+        Ok(TreeOut {
+            n: n_bucket,
+            logits: out.logits,
+            hidden: out.hidden,
+            k_rows: out.k_rows,
+            v_rows: out.v_rows,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::KvCache;
+    use crate::tree::{DraftTree, Provenance};
+
+    #[test]
+    fn prefill_decode_consistency() {
+        let cfg = CpuModelConfig::tiny();
+        let be = CpuRefBackend::new(&cfg, 1);
+        let toks = [5i32, 9, 3, 7];
+        let full = be.prefill(Role::Target, &toks, 4).unwrap();
+        let pre = be.prefill(Role::Target, &toks[..3], 3).unwrap();
+        let mut cache = KvCache::new(be.dims(Role::Target));
+        cache.commit_prefill(&pre.k_rows, &pre.v_rows, cfg.s_pre, 3);
+        let dec = be.decode(Role::Target, &cache.k, &cache.v, 7, 3).unwrap();
+        assert_eq!(full.logits, dec.logits, "prefill row vs incremental decode");
+        assert_eq!(full.hidden, dec.hidden);
+        // the decode's fresh KV row equals the full prefill's row at pos 3
+        let dims = be.dims(Role::Target);
+        for l in 0..dims.n_layers {
+            for hh in 0..dims.n_heads {
+                let src = ((l * dims.n_heads + hh) * cfg.s_pre + 3) * dims.d_head;
+                let dst = (l * dims.n_heads + hh) * dims.d_head;
+                assert_eq!(
+                    &full.k_rows[src..src + dims.d_head],
+                    &dec.k_row[dst..dst + dims.d_head],
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rollout_matches_decode_chain() {
+        let cfg = CpuModelConfig::tiny();
+        let be = CpuRefBackend::new(&cfg, 2);
+        let toks = [4i32, 8, 15];
+        let pre = be.prefill(Role::Draft, &toks, 3).unwrap();
+        let mut cache = KvCache::new(be.dims(Role::Draft));
+        cache.commit_prefill(&pre.k_rows, &pre.v_rows, cfg.s_pre, 3);
+        let v = be.dims(Role::Draft).vocab;
+        let d = be.dims(Role::Draft).d_model;
+        let sampling = SamplingConfig::new(0.8, 0.9);
+        let uni = [0.37f32, 0.81];
+        let ro = be.rollout(1, 2, &cache.k, &cache.v, 15, 2, &uni, 0.8, 0.9).unwrap();
+        // step 0 == a plain decode of the root token
+        let dec0 = be.decode(Role::Draft, &cache.k, &cache.v, 15, 2).unwrap();
+        let mut idx = Vec::new();
+        let mut probs0 = dec0.logits.clone();
+        let _ = sampling.transform_logits(&mut probs0, &mut idx);
+        assert_eq!(&ro.dists[..v], &probs0[..], "rollout step-0 dist");
+        let t0 = sample_probs(&probs0, uni[0] as f64);
+        assert_eq!(ro.tokens[0], t0 as i32);
+        // commit step 0's KV row; a plain decode then reproduces step 1
+        let mut c2 = cache.clone();
+        c2.commit_rollout_rows(&ro.k_rows, &ro.v_rows, 1, 2, 0, 0, 2);
+        let dec1 = be.decode(Role::Draft, &c2.k, &c2.v, t0 as u32, 3).unwrap();
+        assert_eq!(&ro.hiddens[d..2 * d], &dec1.hidden[..]);
+        let mut probs1 = dec1.logits.clone();
+        let _ = sampling.transform_logits(&mut probs1, &mut idx);
+        assert_eq!(&ro.dists[v..2 * v], &probs1[..], "rollout step-1 dist");
+        // two branches share the step-0 context → identical step-0 dists
+        let uni4 = [0.1f32, 0.6, 0.9, 0.2];
+        let rb = be.rollout(2, 2, &cache.k, &cache.v, 15, 2, &uni4, 0.8, 0.9).unwrap();
+        assert_eq!(&rb.dists[..v], &rb.dists[2 * v..3 * v]);
+    }
+
+    #[test]
+    fn tree_verify_matches_decode_chain() {
+        let cfg = CpuModelConfig::tiny();
+        let be = CpuRefBackend::new(&cfg, 3);
+        let toks = [6i32, 2, 11, 30];
+        let len = 4;
+        let pre = be.prefill(Role::Target, &toks, len).unwrap();
+        let mut cache = KvCache::new(be.dims(Role::Target));
+        cache.commit_prefill(&pre.k_rows, &pre.v_rows, cfg.s_pre, len);
+        let root_pos = len - 1; // the root's row is recomputed by the pass
+        let mut tree = DraftTree::new(30);
+        let a = tree.add_child(0, 12, Provenance::Trunk { step: 1 });
+        let b = tree.add_child(a, 44, Provenance::Trunk { step: 2 });
+        let nb = 4;
+        let (tt, tp) = tree.tokens_positions(nb, root_pos, 63);
+        let bias = tree.attention_bias(nb);
+        let out = be.tree_verify(nb, &cache.k, &cache.v, &tt, &tp, &bias, root_pos).unwrap();
+        let v = be.dims(Role::Target).vocab;
+        // node 0 == a plain decode of the root token
+        let dec0 = be.decode(Role::Target, &cache.k, &cache.v, 30, root_pos).unwrap();
+        assert_eq!(&out.logits[..v], &dec0.logits[..], "tree root vs decode");
+        // deeper chain nodes == sequential decodes over committed rows
+        let mut c2 = cache.clone();
+        c2.commit_tree_row(&out.k_rows, &out.v_rows, nb, 0, root_pos);
+        let dec1 = be.decode(Role::Target, &c2.k, &c2.v, 12, root_pos + 1).unwrap();
+        assert_eq!(&out.logits[a * v..(a + 1) * v], &dec1.logits[..]);
+        c2.commit_tree_row(&out.k_rows, &out.v_rows, nb, a, root_pos + 1);
+        let dec2 = be.decode(Role::Target, &c2.k, &c2.v, 44, root_pos + 2).unwrap();
+        assert_eq!(&out.logits[b * v..(b + 1) * v], &dec2.logits[..]);
+    }
+
+    #[test]
+    fn seeded_determinism_and_distinct_models() {
+        let cfg = CpuModelConfig::tiny();
+        let b1 = CpuRefBackend::new(&cfg, 5);
+        let b2 = CpuRefBackend::new(&cfg, 5);
+        let b3 = CpuRefBackend::new(&cfg, 6);
+        let toks = [1i32, 2, 3];
+        let p1 = b1.prefill(Role::Target, &toks, 3).unwrap();
+        let p2 = b2.prefill(Role::Target, &toks, 3).unwrap();
+        let p3 = b3.prefill(Role::Target, &toks, 3).unwrap();
+        assert_eq!(p1.logits, p2.logits, "same seed must be bit-identical");
+        assert_ne!(p1.logits, p3.logits, "different seeds must differ");
+        let pd = b1.prefill(Role::Draft, &toks, 3).unwrap();
+        assert_ne!(p1.logits, pd.logits, "target and draft must differ");
+        // logit_scale gives LM-like sharpness: not a uniform distribution
+        let d = crate::dist::Dist::from_logits(&p1.logits, SamplingConfig::new(1.0, 1.0));
+        let max = d.0.iter().cloned().fold(0.0f32, f32::max);
+        assert!(max > 2.0 / cfg.vocab as f32, "logits too flat: max prob {max}");
+    }
+
+    #[test]
+    fn out_of_vocab_tokens_wrap() {
+        // PAD (258) exceeds the tiny vocab: bucketed padding lanes must
+        // compute (and be discarded), not panic
+        let cfg = CpuModelConfig::tiny();
+        let be = CpuRefBackend::new(&cfg, 4);
+        let out = be.prefill(Role::Target, &[258i32, 5], 2).unwrap();
+        assert_eq!(out.logits.len(), cfg.vocab);
+    }
+
+    #[test]
+    fn shape_validation() {
+        let cfg = CpuModelConfig::tiny();
+        let be = CpuRefBackend::new(&cfg, 0);
+        let too_long = vec![0i32; cfg.s_pre + 1];
+        assert!(be.prefill(Role::Target, &too_long, cfg.s_pre + 1).is_err());
+        assert!(be.rollout(2, 2, &[], &[], 0, 0, &[0.5; 3], 1.0, 1.0).is_err());
+        assert!(be.decode(Role::Target, &[], &[], 0, 0).is_err());
+    }
+}

@@ -28,6 +28,7 @@ impl Role {
 pub struct Engine {
     client: xla::PjRtClient,
     dir: PathBuf,
+    /// Parsed family metadata (dims, compiled shape buckets).
     pub meta: FamilyMeta,
     target_weights: Vec<xla::PjRtBuffer>,
     draft_weights: Vec<xla::PjRtBuffer>,
@@ -66,6 +67,7 @@ impl Engine {
         })
     }
 
+    /// Dimensions of one model of the pair.
     pub fn dims(&self, role: Role) -> ModelDims {
         match role {
             Role::Target => self.meta.target,
@@ -140,6 +142,7 @@ impl Engine {
         lit.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))
     }
 
+    /// Prompt prefill over the compiled entry (pads to s_pre internally).
     pub fn prefill(&self, role: Role, tokens: &[i32], length: usize) -> Result<PrefillOut> {
         let s_pre = self.meta.s_pre;
         if tokens.len() > s_pre || length == 0 || length > tokens.len() {
@@ -165,6 +168,7 @@ impl Engine {
         })
     }
 
+    /// One autoregressive decode step over the compiled entry.
     pub fn decode(
         &self,
         role: Role,
@@ -275,6 +279,62 @@ impl Engine {
             k_rows: to_f32(&k_rows)?,
             v_rows: to_f32(&v_rows)?,
         })
+    }
+}
+
+/// The PJRT engine exposes the same surface through the [`Backend`] seam
+/// the serving stack is written against; every method delegates to the
+/// inherent implementation above.
+impl super::Backend for Engine {
+    fn meta(&self) -> &FamilyMeta {
+        &self.meta
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn prefill(&self, role: Role, tokens: &[i32], length: usize) -> Result<PrefillOut> {
+        Engine::prefill(self, role, tokens, length)
+    }
+
+    fn decode(
+        &self,
+        role: Role,
+        k_cache: &[f32],
+        v_cache: &[f32],
+        token: u32,
+        pos: usize,
+    ) -> Result<DecodeOut> {
+        Engine::decode(self, role, k_cache, v_cache, token, pos)
+    }
+
+    fn rollout(
+        &self,
+        k: usize,
+        l: usize,
+        k_cache: &[f32],
+        v_cache: &[f32],
+        token: u32,
+        pos: usize,
+        uniforms: &[f32],
+        temperature: f32,
+        top_p: f32,
+    ) -> Result<RolloutOut> {
+        Engine::rollout(self, k, l, k_cache, v_cache, token, pos, uniforms, temperature, top_p)
+    }
+
+    fn tree_verify(
+        &self,
+        n_bucket: usize,
+        k_cache: &[f32],
+        v_cache: &[f32],
+        tokens: &[i32],
+        positions: &[i32],
+        bias: &[f32],
+        cache_len: usize,
+    ) -> Result<TreeOut> {
+        Engine::tree_verify(self, n_bucket, k_cache, v_cache, tokens, positions, bias, cache_len)
     }
 }
 

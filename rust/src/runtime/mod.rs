@@ -1,16 +1,23 @@
-//! Model runtime: AOT artifact metadata, weight containers, and (behind the
-//! `pjrt` feature) the PJRT execution engine.
+//! Model runtime: the [`Backend`] execution seam, the always-built
+//! [`CpuRefBackend`] reference implementation, AOT artifact metadata,
+//! weight containers, and (behind the `pjrt` feature) the PJRT engine.
 //!
-//! The metadata/weights half is pure rust and always built: it is what the
-//! hermetic default build and the pure benches/tests consume. The
-//! [`Engine`] half is the only code that touches the `xla` crate and is
-//! gated behind `--features pjrt`; everything above it works with plain
-//! `Vec<f32>` tensors.
+//! The serving stack drives models only through [`Backend`], whose method
+//! surface mirrors the compiled-module interface (prefill / decode / fused
+//! rollout / tree-verification pass, caller-owned KV caches, caller-owned
+//! randomness). The metadata/weights half and the CPU reference backend
+//! are pure rust and always built; the `Engine` half is the only code that
+//! touches the `xla` crate and is gated behind `--features pjrt`.
+//! Everything above this module works with plain `Vec<f32>` tensors.
 
+mod backend;
+mod cpu;
 #[cfg(feature = "pjrt")]
 mod engine;
 mod weights;
 
+pub use backend::Backend;
+pub use cpu::{CpuModelConfig, CpuRefBackend};
 #[cfg(feature = "pjrt")]
 pub use engine::Engine;
 pub use weights::{read_weights, Tensor};
@@ -24,11 +31,17 @@ use crate::util::Json;
 /// Dimensions of one model (target or draft).
 #[derive(Clone, Copy, Debug)]
 pub struct ModelDims {
+    /// Transformer blocks.
     pub n_layers: usize,
+    /// Residual-stream width.
     pub d_model: usize,
+    /// Attention heads.
     pub n_heads: usize,
+    /// Per-head dimension.
     pub d_head: usize,
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Maximum sequence length (KV-cache rows per head).
     pub max_seq: usize,
 }
 
@@ -55,21 +68,35 @@ impl ModelDims {
     }
 }
 
-/// Parsed artifacts/<family>/meta.json.
+/// Family metadata: model dimensions plus the compiled shape buckets.
+///
+/// For the PJRT engine this is parsed from `artifacts/<family>/meta.json`;
+/// [`CpuRefBackend`] synthesizes an equivalent set so the serving stack
+/// exercises the same bucket-selection code paths on both backends.
 #[derive(Clone, Debug)]
 pub struct FamilyMeta {
+    /// Family name (e.g. `"qwen-sim"`, `"cpu-ref"`).
     pub family: String,
+    /// Target-model dimensions.
     pub target: ModelDims,
+    /// Draft-model dimensions.
     pub draft: ModelDims,
+    /// Prompt prefill capacity (tokens).
     pub s_pre: usize,
+    /// Compiled tree-pass node buckets, ascending.
     pub tree_sizes: Vec<usize>,
+    /// Largest compiled tree bucket (superset scoring).
     pub tree_big: usize,
+    /// Compiled single-path trunk rollout lengths.
     pub trunk_lens: Vec<usize>,
+    /// Compiled branch-rollout path counts.
     pub branch_ks: Vec<usize>,
+    /// Compiled branch-rollout length buckets, ascending.
     pub branch_lens: Vec<usize>,
 }
 
 impl FamilyMeta {
+    /// Parse `<dir>/meta.json`.
     pub fn load(dir: &Path) -> Result<FamilyMeta> {
         let text = std::fs::read_to_string(dir.join("meta.json"))
             .with_context(|| format!("reading {}/meta.json", dir.display()))?;
@@ -129,53 +156,66 @@ impl FamilyMeta {
 
 /// Output of a prefill call.
 pub struct PrefillOut {
+    /// `[V]` logits at the last valid prompt token.
     pub logits: Vec<f32>,
+    /// `[d]` final-LN hidden state at the last valid prompt token.
     pub hidden: Vec<f32>,
-    /// [L, H, s_pre, Dh]
+    /// `[L, H, s_pre, Dh]` KV rows for every prompt position.
     pub k_rows: Vec<f32>,
+    /// Value rows, same layout as `k_rows`.
     pub v_rows: Vec<f32>,
 }
 
 /// Output of a decode call.
 pub struct DecodeOut {
+    /// `[V]` next-token logits.
     pub logits: Vec<f32>,
+    /// `[d]` final-LN hidden state.
     pub hidden: Vec<f32>,
-    /// [L, H, Dh]
+    /// `[L, H, Dh]` KV row of the decoded token.
     pub k_row: Vec<f32>,
+    /// Value row, same layout as `k_row`.
     pub v_row: Vec<f32>,
 }
 
 /// Output of a fused rollout call (K paths × L steps).
 pub struct RolloutOut {
+    /// Number of i.i.d. paths.
     pub k: usize,
+    /// Steps per path.
     pub l: usize,
-    /// [K, L] sampled continuation tokens
+    /// `[K, L]` sampled continuation tokens.
     pub tokens: Vec<i32>,
-    /// [K, L, V] transformed draft distributions at each visited node
+    /// `[K, L, V]` transformed draft distributions at each visited node.
     pub dists: Vec<f32>,
-    /// [K, L, d] final-LN hidden states
+    /// `[K, L, d]` final-LN hidden states.
     pub hiddens: Vec<f32>,
-    /// [Lyr, K, L, H, Dh] KV rows for visited nodes at pos..pos+L-1
+    /// `[Lyr, K, L, H, Dh]` KV rows for visited nodes at pos..pos+L-1.
     pub k_rows: Vec<f32>,
+    /// Value rows, same layout as `k_rows`.
     pub v_rows: Vec<f32>,
 }
 
 /// Output of a target tree pass.
 pub struct TreeOut {
+    /// Bucketed node count of the pass.
     pub n: usize,
-    /// [N, V]
+    /// `[N, V]` per-node logits.
     pub logits: Vec<f32>,
-    /// [N, d]
+    /// `[N, d]` per-node final-LN hidden states.
     pub hidden: Vec<f32>,
-    /// [Lyr, N, H, Dh]
+    /// `[Lyr, N, H, Dh]` per-node KV rows.
     pub k_rows: Vec<f32>,
+    /// Value rows, same layout as `k_rows`.
     pub v_rows: Vec<f32>,
 }
 
 /// Which model of the pair.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Role {
+    /// The large model whose distribution is served losslessly.
     Target,
+    /// The small drafting model.
     Draft,
 }
 

@@ -7,14 +7,19 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+/// One named tensor from the weights container.
 pub struct Tensor {
+    /// Parameter name (e.g. `l0.wq`).
     pub name: String,
+    /// Shape (empty for scalars).
     pub dims: Vec<usize>,
+    /// Row-major f32 payload.
     pub data: Vec<f32>,
 }
 
 const MAGIC: u32 = 0x5350_4457;
 
+/// Read every tensor of a weights file, in stored (HLO argument) order.
 pub fn read_weights(path: &Path) -> Result<Vec<Tensor>> {
     let mut f = std::fs::File::open(path)
         .with_context(|| format!("opening weights {}", path.display()))?;

@@ -6,8 +6,11 @@
 
 use crate::util::Pcg64;
 
+/// Width each hidden-state projection maps to.
 pub const PROJ_DIM: usize = 128;
+/// First MLP hidden width.
 pub const H1: usize = 512;
+/// Second MLP hidden width.
 pub const H2: usize = 32;
 
 fn gelu(x: f32) -> f32 {
@@ -23,9 +26,13 @@ fn gelu_grad(x: f32) -> f32 {
 
 /// A dense layer with Adam state.
 pub struct Linear {
-    pub w: Vec<f32>, // [out, in]
+    /// Weights, row-major `[n_out, n_in]`.
+    pub w: Vec<f32>,
+    /// Biases `[n_out]`.
     pub b: Vec<f32>,
+    /// Input width.
     pub n_in: usize,
+    /// Output width.
     pub n_out: usize,
     m_w: Vec<f32>,
     v_w: Vec<f32>,
@@ -34,6 +41,7 @@ pub struct Linear {
 }
 
 impl Linear {
+    /// Glorot-uniform-ish seeded initialization.
     pub fn new(n_in: usize, n_out: usize, rng: &mut Pcg64) -> Linear {
         let scale = (2.0 / (n_in + n_out) as f32).sqrt();
         let w = (0..n_in * n_out)
@@ -51,6 +59,7 @@ impl Linear {
         }
     }
 
+    /// y = W x + b.
     pub fn forward(&self, x: &[f32]) -> Vec<f32> {
         let mut out = self.b.clone();
         for o in 0..self.n_out {
@@ -85,6 +94,7 @@ impl Linear {
         dx
     }
 
+    /// One Adam update on weights and biases.
     pub fn adam(&mut self, gw: &[f32], gb: &[f32], lr: f32, t: usize) {
         adam_update(&mut self.w, &mut self.m_w, &mut self.v_w, gw, lr, t);
         adam_update(&mut self.b, &mut self.m_b, &mut self.v_b, gb, lr, t);
@@ -127,13 +137,21 @@ pub fn layer_norm_backward(x: &[f32], dy: &[f32]) -> Vec<f32> {
 
 /// Full selector network.
 pub struct SelectorNet {
+    /// Projection of the previous-root target hidden state.
     pub proj_p: Linear,
+    /// Projection of the previous-root draft hidden state.
     pub proj_q_prev: Linear,
+    /// Projection of the current-root draft hidden state.
     pub proj_q_cur: Linear,
+    /// First MLP layer over the concatenated features.
     pub fc1: Linear,
+    /// Second MLP layer.
     pub fc2: Linear,
+    /// |A|-way logit head.
     pub head: Linear,
+    /// Scalar feature count.
     pub n_scalars: usize,
+    /// Action count |A|.
     pub n_actions: usize,
 }
 
@@ -152,17 +170,24 @@ pub struct Cache {
     a2: Vec<f32>,
 }
 
-/// Gradient buffers matching the network layout.
+/// Gradient buffers matching the network layout (weight, bias) per layer.
 pub struct Grads {
+    /// Gradients of [`SelectorNet::proj_p`].
     pub proj_p: (Vec<f32>, Vec<f32>),
+    /// Gradients of [`SelectorNet::proj_q_prev`].
     pub proj_q_prev: (Vec<f32>, Vec<f32>),
+    /// Gradients of [`SelectorNet::proj_q_cur`].
     pub proj_q_cur: (Vec<f32>, Vec<f32>),
+    /// Gradients of [`SelectorNet::fc1`].
     pub fc1: (Vec<f32>, Vec<f32>),
+    /// Gradients of [`SelectorNet::fc2`].
     pub fc2: (Vec<f32>, Vec<f32>),
+    /// Gradients of [`SelectorNet::head`].
     pub head: (Vec<f32>, Vec<f32>),
 }
 
 impl SelectorNet {
+    /// Seeded initialization for given hidden-state widths and action count.
     pub fn new(d_p: usize, d_q: usize, n_scalars: usize, n_actions: usize, seed: u64) -> Self {
         let mut rng = Pcg64::seeded(seed);
         let concat = 3 * PROJ_DIM + n_scalars;
@@ -178,6 +203,7 @@ impl SelectorNet {
         }
     }
 
+    /// Fresh zeroed gradient buffers shaped like this network.
     pub fn zero_grads(&self) -> Grads {
         let z = |l: &Linear| (vec![0.0; l.w.len()], vec![0.0; l.b.len()]);
         Grads {
@@ -190,6 +216,7 @@ impl SelectorNet {
         }
     }
 
+    /// Forward pass: action logits plus the activation cache for backward.
     pub fn forward(
         &self,
         h_p: &[f32],
@@ -231,6 +258,7 @@ impl SelectorNet {
         )
     }
 
+    /// Backward pass: accumulate gradients for one example into `g`.
     pub fn backward(&self, cache: &Cache, dlogits: &[f32], g: &mut Grads) {
         let da2 = self
             .head
@@ -262,6 +290,7 @@ impl SelectorNet {
             .backward(&cache.hq2, &dq2, &mut g.proj_q_cur.0, &mut g.proj_q_cur.1);
     }
 
+    /// Apply one Adam step to every layer.
     pub fn adam_step(&mut self, g: &Grads, lr: f32, t: usize) {
         self.proj_p.adam(&g.proj_p.0, &g.proj_p.1, lr, t);
         self.proj_q_prev.adam(&g.proj_q_prev.0, &g.proj_q_prev.1, lr, t);
@@ -272,6 +301,7 @@ impl SelectorNet {
     }
 }
 
+/// Numerically stable softmax.
 pub fn softmax(logits: &[f32]) -> Vec<f32> {
     let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
     let mut e: Vec<f32> = logits.iter().map(|&l| (l - m).exp()).collect();

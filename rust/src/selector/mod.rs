@@ -17,20 +17,15 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
 
-#[cfg(feature = "pjrt")]
-use crate::coordinator::SpecEngine;
-use crate::coordinator::{ActionPolicy, StepFeatures};
-#[cfg(feature = "pjrt")]
-use crate::dist::{DistStorage, SamplingConfig};
-use crate::dist::NodeDist;
+use crate::coordinator::{ActionPolicy, SpecEngine, StepFeatures};
+use crate::dist::{DistStorage, NodeDist, SamplingConfig};
 use crate::draft::Action;
+use crate::runtime::Backend;
 #[cfg(feature = "pjrt")]
 use crate::runtime::{Engine, Role};
-#[cfg(feature = "pjrt")]
 use crate::tree::{DraftTree, Provenance};
 use crate::util::json::{arr, num, obj, Json};
 use crate::util::{Pcg64, Json as J};
-#[cfg(feature = "pjrt")]
 use crate::verify::OtlpSolver;
 use mlp::{softmax, SelectorNet};
 pub use score::{
@@ -38,14 +33,26 @@ pub use score::{
     score_superset_per_action, BranchChain, ScoreScratch, Superset,
 };
 
+/// Largest branch count K in the action space.
 pub const K_MAX: usize = 4;
+/// Largest trunk (delay) length L1 in the action space.
 pub const L1_MAX: usize = 8;
+/// Largest branch length L2 in the action space.
 pub const L2_MAX: usize = 8;
+/// Scalar feature count (paper Appendix E).
 pub const N_SCALARS: usize = 11;
+/// Tokens between consecutive trace roots during collection.
 pub const TRACE_STRIDE: usize = 16;
+/// Superset-tree samples averaged per Ê table (s in Eq. 3).
 pub const EQ3_SAMPLES: usize = 4;
 
 /// Enumerate the action space A = {1..4} × {0..8}² (paper §6).
+///
+/// ```
+/// let actions = specdelay::selector::action_space();
+/// assert_eq!(actions.len(), 4 * 9 * 9);
+/// assert_eq!((actions[0].k, actions[0].l1, actions[0].l2), (1, 0, 0));
+/// ```
 pub fn action_space() -> Vec<Action> {
     let mut out = Vec::new();
     for k in 1..=K_MAX {
@@ -63,13 +70,21 @@ pub fn action_space() -> Vec<Action> {
 // context-length-dependent, because the compiled modules are fixed-shape)
 // ---------------------------------------------------------------------------
 
+/// Per-entry latency model (Eq. 11): microbenchmarked wall times per
+/// compiled shape, from which T̂(a) is assembled for every action.
 #[derive(Clone, Debug, Default)]
 pub struct LatencyModel {
+    /// One draft decode step (the selector feature pass).
     pub t_decode_draft: f64,
-    pub t_trunk: Vec<f64>,          // by L1 (index 0 unused)
-    pub t_branch: Vec<Vec<f64>>,    // [k][bucket index]
-    pub t_tree: Vec<f64>,           // by tree-size bucket index
+    /// Trunk rollout time by L1 (index 0 unused).
+    pub t_trunk: Vec<f64>,
+    /// Branch rollout time `[k][branch-length bucket index]`.
+    pub t_branch: Vec<Vec<f64>>,
+    /// Target tree-pass time by tree-size bucket index.
+    pub t_tree: Vec<f64>,
+    /// Branch-length buckets aligning `t_branch` columns.
     pub branch_lens: Vec<usize>,
+    /// Tree-size buckets aligning `t_tree`.
     pub tree_sizes: Vec<usize>,
 }
 
@@ -175,6 +190,7 @@ impl LatencyModel {
         t
     }
 
+    /// Serialize for the checkpoint file.
     pub fn to_json(&self) -> Json {
         obj(vec![
             ("t_decode_draft", num(self.t_decode_draft)),
@@ -198,6 +214,7 @@ impl LatencyModel {
         ])
     }
 
+    /// Parse from a checkpoint file's `latency` object.
     pub fn from_json(j: &Json) -> Result<LatencyModel> {
         let f = |k: &str| -> Result<Vec<f64>> {
             Ok(j.get(k)
@@ -269,13 +286,21 @@ pub fn scalar_features(f: &StepFeatures<'_>, lat: &LatencyModel, max_seq: usize)
 
 /// One trace root: features + per-solver Ê table + T̂ table.
 pub struct TraceRoot {
+    /// Target hidden state at the previous verified root.
     pub hidden_p: Vec<f32>,
+    /// Draft hidden state at the previous verified root.
     pub hidden_q_prev: Vec<f32>,
+    /// Draft hidden state at the current root.
     pub hidden_q_cur: Vec<f32>,
+    /// Raw scalar features ([`scalar_features`]).
     pub scalars: Vec<f32>,
-    pub e_hat: Vec<(String, Vec<f64>)>, // per solver, aligned with action_space()
+    /// Per-solver Ê[τ+1] tables, aligned with [`action_space`].
+    pub e_hat: Vec<(String, Vec<f64>)>,
+    /// Latency estimates T̂(a), aligned with [`action_space`].
     pub t_hat: Vec<f64>,
+    /// Sampling temperature active at this root.
     pub temperature: f32,
+    /// Nucleus mass active at this root.
     pub top_p: f32,
 }
 
@@ -283,11 +308,12 @@ pub struct TraceRoot {
 // Trace collection
 // ---------------------------------------------------------------------------
 
-/// Collect trace roots along target trajectories for one family.
-#[cfg(feature = "pjrt")]
+/// Collect trace roots along target trajectories for one family (any
+/// [`Backend`]: the CPU reference backend makes selector data collection a
+/// default-build workload).
 #[allow(clippy::too_many_arguments)]
 pub fn collect_traces(
-    engine: &Engine,
+    engine: &dyn Backend,
     prompts: &[(String, SamplingConfig)],
     lat: &LatencyModel,
     max_new: usize,
@@ -308,7 +334,7 @@ pub fn collect_traces(
                 since_root = 0;
                 let rf = spec.root_features(&mut seq)?;
                 let feats = rf.as_features(&seq, *sampling);
-                let scalars = scalar_features(&feats, lat, engine.meta.target.max_seq);
+                let scalars = scalar_features(&feats, lat, engine.meta().target.max_seq);
                 // Ê over s = 4 superset samples. Drafting stays serial (it
                 // advances the shared rng stream); scoring — the expensive
                 // part — fans out over workers, one ScoreScratch arena
@@ -368,14 +394,13 @@ pub fn collect_traces(
 
 /// Draft one superset sample at the current root: full trunk, branches of
 /// L2_MAX at every trunk depth, one big target tree pass for p everywhere.
-#[cfg(feature = "pjrt")]
 fn draft_superset(
-    engine: &Engine,
+    engine: &dyn Backend,
     seq: &crate::coordinator::Sequence,
     sampling: SamplingConfig,
     rng: &mut Pcg64,
 ) -> Result<Superset> {
-    let meta = &engine.meta;
+    let meta = engine.meta();
     let v = meta.draft.vocab;
     let root_token = *seq.tokens.last().unwrap();
     let root_pos = seq.root_pos;
@@ -509,11 +534,17 @@ fn draft_superset(
 // Training (Eq. 12)
 // ---------------------------------------------------------------------------
 
+/// Selector training hyperparameters (Eq. 12 loss).
 pub struct TrainConfig {
+    /// Training epochs over the trace roots.
     pub epochs: usize,
+    /// Adam learning rate.
     pub lr: f32,
+    /// Weight of the CVaR penalty term.
     pub lambda: f32,
+    /// CVaR tail fraction α.
     pub alpha: f32,
+    /// Initialization/shuffle seed.
     pub seed: u64,
 }
 
@@ -525,9 +556,13 @@ impl Default for TrainConfig {
 
 /// Trained checkpoint for one (family, solver).
 pub struct Checkpoint {
+    /// The trained policy network.
     pub net: SelectorNet,
+    /// Per-scalar standardization means.
     pub scalar_mean: Vec<f32>,
+    /// Per-scalar standardization standard deviations.
     pub scalar_std: Vec<f32>,
+    /// Latency model frozen at training time.
     pub lat: LatencyModel,
 }
 
@@ -706,12 +741,15 @@ pub fn train(
 
 /// Argmax policy over the trained selector (paper §6 inference).
 pub struct NeuralPolicy {
+    /// The trained checkpoint the policy evaluates.
     pub ckpt: Checkpoint,
+    /// Context-length normalizer (the family's `max_seq`).
     pub max_seq: usize,
     actions: Vec<Action>,
 }
 
 impl NeuralPolicy {
+    /// Wrap a checkpoint as an online [`ActionPolicy`].
     pub fn new(ckpt: Checkpoint, max_seq: usize) -> NeuralPolicy {
         NeuralPolicy { ckpt, max_seq, actions: action_space() }
     }
@@ -753,6 +791,8 @@ fn json_f32s(j: &Json) -> Vec<f32> {
         .unwrap_or_default()
 }
 
+/// Write a checkpoint (network weights + standardization + latency model)
+/// as pretty-printed JSON.
 pub fn save_checkpoint(path: &Path, ckpt: &Checkpoint, d_p: usize, d_q: usize) -> Result<()> {
     let lin = |l: &mlp::Linear| {
         obj(vec![
@@ -780,6 +820,7 @@ pub fn save_checkpoint(path: &Path, ckpt: &Checkpoint, d_p: usize, d_q: usize) -
     Ok(())
 }
 
+/// Load a checkpoint written by [`save_checkpoint`].
 pub fn load_checkpoint(path: &Path) -> Result<Checkpoint> {
     let text = std::fs::read_to_string(path)
         .with_context(|| format!("reading checkpoint {}", path.display()))?;

@@ -14,7 +14,7 @@
 //!   node, so edges sort by chain id);
 //! * only the branch point sees a genuinely different multiset per k.
 //!
-//! [`score_superset_into`] therefore builds one [`MergedBranches`]
+//! [`score_superset_into`] therefore builds one `MergedBranches`
 //! structure per trunk depth (solver-independent, shared by all five OT
 //! solvers), computes each node's branching probabilities **once per
 //! distinct child-list prefix** through the
@@ -44,14 +44,19 @@ const DEPTHS: usize = L1_MAX + L2_MAX + 1;
 pub struct Superset {
     /// trunk node context tokens (root first)
     pub trunk_tokens: Vec<u32>,
+    /// Draft distributions along the trunk (index = trunk depth).
     pub trunk_q: Vec<NodeDist>,
+    /// Target distributions along the trunk (index = trunk depth).
     pub trunk_p: Vec<NodeDist>,
     /// per trunk depth j (0..=L1_MAX): per branch b: token/q/p chains
     pub branches: Vec<Vec<BranchChain>>,
 }
 
+/// One drafted branch chain below a trunk depth.
 pub struct BranchChain {
+    /// Chain tokens in draft order.
     pub tokens: Vec<u32>,
+    /// Draft distribution used at each chain step.
     pub q: Vec<NodeDist>,
     /// `p[s]` is the target distribution used for branching after `s` chain
     /// tokens (one more entry than `tokens` for the leaf bonus).
@@ -286,7 +291,7 @@ pub struct ScoreScratch {
     /// Reach DP state and per-depth accumulators.
     reach: Vec<f64>,
     per_depth: Vec<f64>,
-    /// Cumulative-by-depth rows, flat over (j, k−2) with stride [`DEPTHS`].
+    /// Cumulative-by-depth rows, flat over (j, k−2) with stride `DEPTHS`.
     cum: Vec<f64>,
 }
 

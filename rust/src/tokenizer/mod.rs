@@ -3,9 +3,13 @@
 //! Token ids 0..=255 are raw bytes; 256 = BOS, 257 = EOS, 258 = PAD.
 //! (python/compile/model.py defines the same constants.)
 
+/// Vocabulary size: 256 bytes + BOS + EOS + PAD.
 pub const VOCAB: usize = 259;
+/// Beginning-of-sequence token id.
 pub const BOS: u32 = 256;
+/// End-of-sequence token id.
 pub const EOS: u32 = 257;
+/// Padding token id (also a generation terminator).
 pub const PAD: u32 = 258;
 
 /// Encode text as byte tokens.

@@ -36,10 +36,14 @@ pub enum Provenance {
     Branch { branch: usize, step: usize },
 }
 
+/// One draft-tree node: a distinct context extending its parent by `token`.
 #[derive(Clone, Debug)]
 pub struct Node {
+    /// Token extending the parent context (root: the committed root token).
     pub token: u32,
+    /// Parent node index (`None` for the root).
     pub parent: Option<usize>,
+    /// Edge count from the root.
     pub depth: usize,
     /// Children **with multiplicity**, in draft order.
     pub children: Vec<usize>,
@@ -51,6 +55,7 @@ pub struct Node {
     /// Target distribution p(.|context of this node); filled after the tree
     /// pass.
     pub p: Option<NodeDist>,
+    /// Which rollout produced this node's draft KV row.
     pub provenance: Provenance,
 }
 
@@ -117,8 +122,21 @@ impl CsrChildren {
 }
 
 /// A draft tree plus construction helpers.
+///
+/// ```
+/// use specdelay::tree::{DraftTree, Provenance};
+///
+/// let mut t = DraftTree::new(7);
+/// let a = t.add_child(0, 1, Provenance::Trunk { step: 1 });
+/// let b = t.add_child(0, 1, Provenance::Branch { branch: 1, step: 1 });
+/// assert_eq!(a, b, "identical contexts merge; multiplicity grows");
+/// assert_eq!(t.child_tokens(0), vec![1, 1]);
+/// assert_eq!(t.distinct_children(0), vec![a]);
+/// assert_eq!(t.max_depth(), 1);
+/// ```
 #[derive(Clone, Debug)]
 pub struct DraftTree {
+    /// Nodes in creation order; node 0 is always the root.
     pub nodes: Vec<Node>,
     /// Draw provenance; `None` means "each leaf path is an independent
     /// draw" (plain i.i.d. multipath).
@@ -153,13 +171,16 @@ impl DraftTree {
         }
     }
 
+    /// Node count (root included).
     pub fn len(&self) -> usize {
         self.nodes.len()
     }
+    /// Whether the tree holds no nodes (only via `DraftTree::new(0)` swaps).
     pub fn is_empty(&self) -> bool {
         self.nodes.is_empty()
     }
 
+    /// Deepest node's edge count from the root.
     pub fn max_depth(&self) -> usize {
         self.nodes.iter().map(|n| n.depth).max().unwrap_or(0)
     }
@@ -201,6 +222,7 @@ impl DraftTree {
         self.nodes[node].q = Some(q.into());
     }
 
+    /// Set the target distribution at a node (after the tree pass).
     pub fn set_p(&mut self, node: usize, p: impl Into<NodeDist>) {
         self.nodes[node].p = Some(p.into());
     }

@@ -4,10 +4,14 @@
 
 use std::collections::BTreeMap;
 
+/// Parsed command-line arguments.
 #[derive(Debug, Default)]
 pub struct Args {
+    /// Positional arguments in order.
     pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options.
     pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches that were present.
     pub flags: Vec<String>,
 }
 
@@ -36,18 +40,22 @@ impl Args {
         Ok(out)
     }
 
+    /// Whether the bare flag `--name` was given.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Value of option `--name`, if given.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.options.get(name).map(|s| s.as_str())
     }
 
+    /// Value of option `--name`, or `default`.
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }
 
+    /// Integer option with a default; errors on an unparsable value.
     pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
         match self.get(name) {
             None => Ok(default),
@@ -57,6 +65,7 @@ impl Args {
         }
     }
 
+    /// Float option with a default; errors on an unparsable value.
     pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
         match self.get(name) {
             None => Ok(default),

@@ -11,10 +11,12 @@ pub struct Running {
 }
 
 impl Running {
+    /// Empty accumulator.
     pub fn new() -> Self {
         Running { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
     }
 
+    /// Add one observation.
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -24,9 +26,11 @@ impl Running {
         self.max = self.max.max(x);
     }
 
+    /// Observation count.
     pub fn count(&self) -> u64 {
         self.n
     }
+    /// Sample mean (NaN when empty).
     pub fn mean(&self) -> f64 {
         if self.n == 0 {
             f64::NAN
@@ -34,6 +38,7 @@ impl Running {
             self.mean
         }
     }
+    /// Unbiased sample variance.
     pub fn var(&self) -> f64 {
         if self.n < 2 {
             0.0
@@ -41,6 +46,7 @@ impl Running {
             self.m2 / (self.n - 1) as f64
         }
     }
+    /// Sample standard deviation.
     pub fn std(&self) -> f64 {
         self.var().sqrt()
     }
@@ -52,13 +58,16 @@ impl Running {
             self.std() / (self.n as f64).sqrt()
         }
     }
+    /// Smallest observation.
     pub fn min(&self) -> f64 {
         self.min
     }
+    /// Largest observation.
     pub fn max(&self) -> f64 {
         self.max
     }
 
+    /// Fold another accumulator in (parallel-reduction merge).
     pub fn merge(&mut self, other: &Running) {
         if other.n == 0 {
             return;
@@ -96,12 +105,14 @@ impl Histogram {
         Histogram { bounds, counts: vec![0; n + 1], total: 0 }
     }
 
+    /// Record one observation.
     pub fn record(&mut self, x: f64) {
         let idx = self.bounds.partition_point(|&b| b < x);
         self.counts[idx] += 1;
         self.total += 1;
     }
 
+    /// Observation count.
     pub fn count(&self) -> u64 {
         self.total
     }

@@ -134,6 +134,7 @@ pub struct ThreadPool {
 }
 
 impl ThreadPool {
+    /// Spawn `workers` (≥ 1) named worker threads.
     pub fn new(workers: usize) -> Self {
         let workers = workers.max(1);
         let (tx, rx) = mpsc::channel::<Job>();
@@ -156,6 +157,7 @@ impl ThreadPool {
         ThreadPool { tx: Some(tx), handles }
     }
 
+    /// Enqueue a job on the pool.
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
         self.tx
             .as_ref()

@@ -32,6 +32,7 @@ use crate::dist::{mixed_repr, Dist, NodeDist, SparseDist};
 use crate::tree::DraftTree;
 use crate::util::Pcg64;
 
+/// Block Verification (Sun et al. 2024c): single-path, non-OT.
 pub struct BlockVerify;
 
 /// e = Σ_t min(q(t), w·p(t)) — the expected next-step weight. Terms vanish

@@ -29,6 +29,7 @@ use super::{densify_pair, OtlpSolver, SolverScratch};
 use crate::dist::{Dist, NodeDist};
 use crate::util::Pcg64;
 
+/// The canonical multi-draft OTLP solver (Khisti et al. 2025).
 pub struct Khisti;
 
 /// Multiset patterns: counts over m distinct tokens + 1 "other" bucket.

@@ -76,14 +76,16 @@ impl Verdict {
 pub struct SolverScratch {
     /// Remaining draft-token multiset (SpecInfer rounds).
     pub tokens: Vec<u32>,
-    /// Residual / working distribution buffers. Their representation
-    /// follows the inputs' (a stable stream of one representation never
+    /// Residual / working distribution buffer. Its representation follows
+    /// the inputs' (a stable stream of one representation never
     /// reallocates after warm-up).
     pub dist_a: NodeDist,
+    /// Second residual buffer (ping-pong partner of `dist_a`).
     pub dist_b: NodeDist,
-    /// Densified input copies for the Khisti LP (the one solver whose
-    /// per-node computation stays dense; sparse inputs are scattered here).
+    /// Densified p copy for the Khisti LP (the one solver whose per-node
+    /// computation stays dense; sparse inputs are scattered here).
     pub dense_p: Dist,
+    /// Densified q copy for the Khisti LP.
     pub dense_q: Dist,
 }
 
@@ -104,9 +106,10 @@ pub struct VerifyScratch {
     pub e: Vec<f64>,
     /// BV backward monotone thresholds W_0..W_L.
     pub thr: Vec<f64>,
-    /// Residual-target ping-pong buffers (Traversal / BV corrections).
+    /// Residual-target ping-pong buffer (Traversal / BV corrections).
     /// Representation follows the tree's storage mode.
     pub dist_a: NodeDist,
+    /// Second residual-target buffer (ping-pong partner of `dist_a`).
     pub dist_b: NodeDist,
     /// Fallback per-leaf path draws when the tree records none.
     pub fallback_paths: Vec<Vec<usize>>,
@@ -115,6 +118,7 @@ pub struct VerifyScratch {
 }
 
 impl VerifyScratch {
+    /// Empty arena (buffers grow to their high-water marks on first use).
     pub fn new() -> VerifyScratch {
         VerifyScratch::default()
     }
@@ -145,7 +149,23 @@ impl VerifyScratch {
 }
 
 /// A verification algorithm over a draft tree whose nodes carry p and q.
+///
+/// ```
+/// use specdelay::dist::Dist;
+/// use specdelay::tree::{DraftTree, Provenance};
+/// use specdelay::util::Pcg64;
+///
+/// let mut t = DraftTree::new(7);
+/// let c = t.add_child(0, 1, Provenance::Trunk { step: 1 });
+/// t.set_q(0, Dist(vec![0.5, 0.5]));
+/// t.set_p(0, Dist(vec![0.4, 0.6]));
+/// t.set_p(c, Dist(vec![1.0, 0.0])); // leaf p feeds the bonus token
+/// let verifier = specdelay::verify::verifier("SpecInfer").unwrap();
+/// let verdict = verifier.verify(&t, &mut Pcg64::seeded(0));
+/// assert!(verdict.block_tokens() >= 1, "every block emits ≥ 1 token");
+/// ```
 pub trait Verifier: Send + Sync {
+    /// Paper name of the algorithm (e.g. `"SpecInfer"`).
     fn name(&self) -> &'static str;
 
     /// Verify one tree, writing the verdict into `out` and drawing all
@@ -176,6 +196,7 @@ pub trait Verifier: Send + Sync {
 /// sparse inputs (Khisti excepted — its LP densifies). The acceptance-rate
 /// calculator is a cold analysis entry and stays dense.
 pub trait OtlpSolver: Send + Sync {
+    /// Paper name of the solver (e.g. `"SpecTr"`).
     fn name(&self) -> &'static str;
 
     /// Draw the output token given the realized draft tokens, using
@@ -268,11 +289,13 @@ pub(crate) fn densify_pair<'a>(
 
 /// Generic top-down OT walk (paper §3.2).
 pub struct OtVerifier<S: OtlpSolver> {
+    /// The per-node OTLP solver the walk queries.
     pub solver: S,
     name: &'static str,
 }
 
 impl<S: OtlpSolver> OtVerifier<S> {
+    /// Wrap a solver under a display name (e.g. Naive vs NaiveTree).
     pub fn new(solver: S, name: &'static str) -> Self {
         OtVerifier { solver, name }
     }

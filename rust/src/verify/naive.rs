@@ -12,6 +12,7 @@ use super::{OtlpSolver, SolverScratch};
 use crate::dist::{Dist, NodeDist};
 use crate::util::Pcg64;
 
+/// The naive speculative-sampling OTLP solver (paper Algorithm 2).
 pub struct Naive;
 
 impl OtlpSolver for Naive {

@@ -7,6 +7,7 @@ use super::{OtlpSolver, SolverScratch};
 use crate::dist::{Dist, NodeDist};
 use crate::util::Pcg64;
 
+/// The NSS OTLP solver (paper Algorithm 1): sample Y ~ p directly.
 pub struct Nss;
 
 impl OtlpSolver for Nss {

@@ -13,6 +13,7 @@ use super::{OtlpSolver, SolverScratch};
 use crate::dist::{Dist, NodeDist};
 use crate::util::Pcg64;
 
+/// The SpecInfer multi-round OTLP solver (paper Algorithm 4).
 pub struct SpecInfer;
 
 /// p ← normalize((p − q)_+); falls back to p unchanged on zero mass.

@@ -14,6 +14,7 @@ use super::{OtlpSolver, SolverScratch};
 use crate::dist::{mixed_repr, Dist, NodeDist, SparseDist};
 use crate::util::Pcg64;
 
+/// The SpecTr K-SEQ OTLP solver (paper Algorithm 3).
 pub struct SpecTr;
 
 /// β(ρ) = Σ_t min(p(t)/ρ, q(t)) — dense reference.

@@ -33,6 +33,7 @@ use super::{Verdict, Verifier, VerifyScratch};
 use crate::tree::DraftTree;
 use crate::util::Pcg64;
 
+/// Traversal Verification (Weng et al. 2025): bottom-up, non-OT.
 pub struct Traversal;
 
 impl Verifier for Traversal {
