@@ -1,0 +1,304 @@
+//! Paged vs contiguous KV cache benchmark (pure rust, no artifacts).
+//!
+//! Three measurements, all preceded by equal-output assertions so the
+//! numbers always describe the bit-identical configuration the tests
+//! validate:
+//!
+//! 1. **µs/commit** — steady-state rollout-span + tree-row commits into a
+//!    warm cache, contiguous vs paged (the per-block coalescing cost).
+//! 2. **µs/handoff refresh** — `copy_prefix_from` of a committed prefix,
+//!    contiguous (physical span copy) vs paged (copy-on-write refcount
+//!    bumps): the trunk→branch handoff cost `draft::draft_delayed` pays
+//!    every block.
+//! 3. **Peak resident blocks** — a batched shared-trunk serving workload
+//!    (`SpecEngine::step` lanes on one pool) per batch size: paged
+//!    high-water blocks vs the contiguous equivalent (lanes × full-lane
+//!    blocks for target + draft + handoff), plus the average prefix-share
+//!    ratio (fraction of table-referenced blocks that are copy-on-write
+//!    shared). The paged peak must be strictly below the contiguous
+//!    equivalent — asserted, per the acceptance criterion.
+//!
+//! Emits `BENCH_kvcache_paged.json` at the repo root (uploaded as a CI
+//! artifact). Env knobs: `KVCACHE_PAGED_ITERS` (default 2000),
+//! `KVCACHE_PAGED_MAX_NEW` (default 24).
+//!
+//! Run: `cargo bench --bench kvcache_paged`.
+
+use std::time::Instant;
+
+use specdelay::coordinator::{Sequence, SpecEngine};
+use specdelay::dist::SamplingConfig;
+use specdelay::draft::Action;
+use specdelay::kvcache::{BlockPool, ContiguousKv, KvStorage, PagedKvCache};
+use specdelay::runtime::{Backend, CpuModelConfig, CpuRefBackend, Role};
+use specdelay::util::json::{arr, num, obj, s, Json};
+use specdelay::util::Pcg64;
+use specdelay::verify;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Assert paged and contiguous caches hold bitwise-identical rows.
+fn assert_rows_equal(paged: &PagedKvCache, cont: &ContiguousKv, ctx: &str) {
+    let d = cont.dims;
+    assert_eq!(paged.len(), cont.len, "{ctx}: len");
+    for l in 0..d.n_layers {
+        for hh in 0..d.n_heads {
+            for pos in 0..d.max_seq {
+                let (pk, pv) = paged.row(l, hh, pos);
+                let (ck, cv) = cont.row(l, hh, pos);
+                assert_eq!(pk, ck, "{ctx}: K l={l} h={hh} pos={pos}");
+                assert_eq!(pv, cv, "{ctx}: V l={l} h={hh} pos={pos}");
+            }
+        }
+    }
+}
+
+/// Part 1+2: steady-state commit and handoff-refresh microbenchmarks.
+fn commit_micro(iters: usize) -> Json {
+    let d = specdelay::runtime::ModelDims {
+        n_layers: 2,
+        d_model: 32,
+        n_heads: 2,
+        d_head: 16,
+        vocab: 64,
+        max_seq: 256,
+    };
+    let bt = specdelay::kvcache::default_block_tokens();
+    let (kp, ls) = (2usize, 4usize);
+    let n = d.n_layers * kp * ls * d.n_heads * d.d_head;
+    let rows: Vec<f32> = (0..n).map(|x| (x as f32).sin()).collect();
+    let nb = 8usize;
+    let trow: Vec<f32> = (0..d.n_layers * nb * d.n_heads * d.d_head)
+        .map(|x| (x as f32).cos())
+        .collect();
+
+    // equal-output assertion before timing
+    let pool = BlockPool::new(d, bt, None);
+    let mut pg = PagedKvCache::new(&pool);
+    let mut ct = ContiguousKv::new(d);
+    for base in [0usize, 5, 40, 200] {
+        pg.commit_rollout_rows(&rows, &rows, kp, ls, 1, ls - 1, base);
+        ct.commit_rollout_rows(&rows, &rows, kp, ls, 1, ls - 1, base);
+        pg.commit_tree_row(&trow, &trow, nb, 3, base + ls);
+        ct.commit_tree_row(&trow, &trow, nb, 3, base + ls);
+    }
+    assert_rows_equal(&pg, &ct, "commit equality");
+
+    let spots: Vec<usize> = (0..64).map(|i| (i * 37) % (d.max_seq - ls)).collect();
+    let t0 = Instant::now();
+    for i in 0..iters {
+        let base = spots[i % spots.len()];
+        ct.commit_rollout_rows(&rows, &rows, kp, ls, 1, ls - 1, base);
+        ct.commit_tree_row(&trow, &trow, nb, 3, base + ls);
+    }
+    let cont_us = t0.elapsed().as_secs_f64() * 1e6 / iters as f64;
+    let t1 = Instant::now();
+    for i in 0..iters {
+        let base = spots[i % spots.len()];
+        pg.commit_rollout_rows(&rows, &rows, kp, ls, 1, ls - 1, base);
+        pg.commit_tree_row(&trow, &trow, nb, 3, base + ls);
+    }
+    let paged_us = t1.elapsed().as_secs_f64() * 1e6 / iters as f64;
+
+    // handoff refresh: committed 192-row prefix, refreshed into a warm
+    // scratch cache every iteration (contiguous copies rows, paged bumps
+    // block refcounts)
+    let prefix = 192usize;
+    let mut src_c = ContiguousKv::new(d);
+    let mut src_p = PagedKvCache::new(&pool);
+    let row1: Vec<f32> = (0..d.n_layers * d.n_heads * d.d_head).map(|x| x as f32 * 0.1).collect();
+    for pos in 0..prefix {
+        src_c.commit_row(&row1, &row1, pos);
+        src_p.commit_row(&row1, &row1, pos);
+    }
+    let mut dst_c = ContiguousKv::new(d);
+    let mut dst_p = PagedKvCache::new(&pool);
+    let t2 = Instant::now();
+    for _ in 0..iters {
+        dst_c.copy_prefix_from(&src_c, prefix);
+    }
+    let cont_refresh_us = t2.elapsed().as_secs_f64() * 1e6 / iters as f64;
+    let t3 = Instant::now();
+    for _ in 0..iters {
+        dst_p.copy_prefix_from(&src_p, prefix);
+    }
+    let paged_refresh_us = t3.elapsed().as_secs_f64() * 1e6 / iters as f64;
+    assert_rows_equal(&dst_p, &dst_c, "refresh equality");
+
+    println!(
+        "commit      µs/op: contiguous {cont_us:>8.3}  paged {paged_us:>8.3}  ratio {:.2}",
+        paged_us / cont_us
+    );
+    println!(
+        "handoff     µs/op: contiguous {cont_refresh_us:>8.3}  paged {paged_refresh_us:>8.3}  speedup {:.1}x",
+        cont_refresh_us / paged_refresh_us
+    );
+    obj(vec![
+        ("iters", num(iters as f64)),
+        ("block_tokens", num(bt as f64)),
+        ("contiguous_us_per_commit", num(cont_us)),
+        ("paged_us_per_commit", num(paged_us)),
+        ("paged_over_contiguous_commit", num(paged_us / cont_us)),
+        ("prefix_rows", num(prefix as f64)),
+        ("contiguous_us_per_refresh", num(cont_refresh_us)),
+        ("paged_us_per_refresh", num(paged_refresh_us)),
+        ("refresh_speedup_vs_contiguous", num(cont_refresh_us / paged_refresh_us)),
+    ])
+}
+
+/// One lane of the serve workload.
+struct BenchLane {
+    seq: Sequence,
+    rng: Pcg64,
+    emitted: usize,
+}
+
+/// Part 3: batched shared-trunk serving workload on one pool per batch
+/// size, with a contiguous serial reference asserted stream-equal first.
+fn serve_workload(max_new: usize) -> (Vec<Json>, usize) {
+    let cfg = CpuModelConfig::tiny();
+    let backend = CpuRefBackend::new(&cfg, 11);
+    let sampling = SamplingConfig::new(0.8, 0.95);
+    let verifier = verify::verifier("SpecInfer").unwrap();
+    let action = Action::new(2, 2, 3); // shared trunk of 2
+    let prompts = ["12*3= ", "9-4= ", "1,2,3,", "(5+5)/2= ", "0.5*8= ", "77+1= ", "6/2= ", "8+8= "];
+    let seed = 7u64;
+    let mut equal_checks = 0usize;
+
+    // contiguous serial reference streams
+    let spec_c = SpecEngine::new(&backend, sampling).with_kv_storage(KvStorage::Contiguous);
+    let mut ref_streams: Vec<Vec<u32>> = Vec::new();
+    for (id, p) in prompts.iter().enumerate() {
+        let mut seq = spec_c.start(p).unwrap();
+        let mut rng = Pcg64::new(seed, id as u64);
+        while !seq.finished && seq.tokens.len() - seq.prompt_len < max_new {
+            spec_c.step(&mut seq, verifier.as_ref(), action, &mut rng).unwrap();
+        }
+        ref_streams.push(seq.tokens[seq.prompt_len..].to_vec());
+    }
+
+    let bt = specdelay::kvcache::default_block_tokens();
+    let d_t = backend.dims(Role::Target);
+    let d_d = backend.dims(Role::Draft);
+    let full_lane_blocks = d_t.max_seq.div_ceil(bt) + 2 * d_d.max_seq.div_ceil(bt);
+
+    let mut rows = Vec::new();
+    println!(
+        "\n{:>6} {:>12} {:>16} {:>12} {:>14}",
+        "batch", "peak_blocks", "contig_equiv", "ratio", "prefix_share"
+    );
+    for batch in [1usize, 2, 4, 8] {
+        let spec = SpecEngine::new(&backend, sampling).with_kv_storage(KvStorage::Paged);
+        let pools = spec.kv_pools().expect("paged pools");
+        let (pool_t, pool_d) = (pools.target.clone(), pools.draft.clone());
+        let mut lanes: Vec<BenchLane> = (0..batch)
+            .map(|id| BenchLane {
+                seq: spec.start(prompts[id % prompts.len()]).unwrap(),
+                rng: Pcg64::new(seed, id as u64),
+                emitted: 0,
+            })
+            .collect();
+        let mut share_sum = 0.0f64;
+        let mut share_ticks = 0usize;
+        loop {
+            let mut any = false;
+            for lane in lanes.iter_mut() {
+                if lane.seq.finished || lane.emitted >= max_new {
+                    continue;
+                }
+                any = true;
+                spec.step(&mut lane.seq, verifier.as_ref(), action, &mut lane.rng).unwrap();
+                lane.emitted = lane.seq.tokens.len() - lane.seq.prompt_len;
+            }
+            if !any {
+                break;
+            }
+            // prefix-share ratio: fraction of table-referenced blocks that
+            // are copy-on-write shared (handoff caches riding their lane's
+            // committed trunk for free)
+            let mut resident = 0usize;
+            let mut shared = 0usize;
+            for lane in &lanes {
+                for cache in [Some(&lane.seq.target_kv), Some(&lane.seq.draft_kv), lane.seq.draft_scratch.branch_cache()]
+                    .into_iter()
+                    .flatten()
+                {
+                    let p = cache.as_paged().expect("paged lane");
+                    resident += p.resident_blocks();
+                    shared += p.cow_shared_blocks();
+                }
+            }
+            if resident > 0 {
+                share_sum += shared as f64 / resident as f64;
+                share_ticks += 1;
+            }
+        }
+        // streams must match the contiguous serial reference bitwise —
+        // full equality, lengths included (identical seeds and stop
+        // conditions guarantee equal lengths when the storages agree)
+        for (id, lane) in lanes.iter().enumerate() {
+            let got = &lane.seq.tokens[lane.seq.prompt_len..];
+            let want = &ref_streams[id % prompts.len()];
+            assert_eq!(
+                got,
+                want.as_slice(),
+                "batch {batch} lane {id}: paged stream diverged from contiguous serial"
+            );
+            equal_checks += 1;
+        }
+        let peak = pool_t.peak_live_blocks() + pool_d.peak_live_blocks();
+        let contig_equiv = batch * full_lane_blocks;
+        let share = if share_ticks > 0 { share_sum / share_ticks as f64 } else { 0.0 };
+        assert!(
+            peak < contig_equiv,
+            "batch {batch}: paged peak {peak} blocks not below contiguous equivalent {contig_equiv}"
+        );
+        println!(
+            "{batch:>6} {peak:>12} {contig_equiv:>16} {:>12.3} {share:>14.3}",
+            peak as f64 / contig_equiv as f64
+        );
+        rows.push(obj(vec![
+            ("batch", num(batch as f64)),
+            ("max_new", num(max_new as f64)),
+            ("peak_resident_blocks", num(peak as f64)),
+            ("contiguous_equiv_blocks", num(contig_equiv as f64)),
+            ("peak_over_contiguous", num(peak as f64 / contig_equiv as f64)),
+            ("prefix_share_ratio_avg", num(share)),
+        ]));
+        drop(lanes);
+        pool_t.validate().unwrap();
+        pool_d.validate().unwrap();
+        assert_eq!(pool_t.live_blocks() + pool_d.live_blocks(), 0, "blocks leaked");
+    }
+    (rows, equal_checks)
+}
+
+fn main() {
+    let iters = env_usize("KVCACHE_PAGED_ITERS", 2000);
+    let max_new = env_usize("KVCACHE_PAGED_MAX_NEW", 24);
+
+    let commit = commit_micro(iters);
+    let (batches, equal_checks) = serve_workload(max_new);
+
+    let report = obj(vec![
+        ("schema", s("kvcache_paged/v1")),
+        (
+            "config",
+            obj(vec![
+                ("backend", s("cpu-ref")),
+                ("block_tokens", num(specdelay::kvcache::default_block_tokens() as f64)),
+                ("iters", num(iters as f64)),
+                ("max_new", num(max_new as f64)),
+            ]),
+        ),
+        ("equal_output_checks", num(equal_checks as f64)),
+        ("equal_output_assertion", s("enabled")),
+        ("commit", commit),
+        ("serve", arr(batches)),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_kvcache_paged.json");
+    std::fs::write(path, format!("{}\n", report.to_string_pretty())).expect("write bench json");
+    println!("wrote {path}");
+}

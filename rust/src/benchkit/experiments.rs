@@ -139,10 +139,10 @@ pub fn figure_1(scale: Scale, family: &str) -> Result<Vec<(String, Vec<f64>)>> {
                 let n_bucket = engine.meta.tree_bucket(tree.len())?;
                 let (toks, pos) = tree.tokens_positions(n_bucket, seq.root_pos, crate::tokenizer::PAD);
                 let bias = tree.attention_bias(n_bucket);
-                let out = engine.tree_verify(
+                let out = crate::runtime::Backend::tree_verify(
+                    &engine,
                     n_bucket,
-                    &seq.target_kv.k,
-                    &seq.target_kv.v,
+                    seq.target_kv.view(),
                     &toks,
                     &pos,
                     &bias,

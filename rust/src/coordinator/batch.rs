@@ -10,6 +10,21 @@
 //! retire and queued requests are admitted in their place, so the batch
 //! stays full until the queue drains.
 //!
+//! ## Memory: lanes vs blocks
+//!
+//! With contiguous KV storage every admitted lane pins `max_seq` rows per
+//! model whether it uses them or not, so `max_batch` is the memory
+//! ceiling. With paged storage ([`ServeLoop::with_kv_storage`], env knob
+//! `SPECDELAY_PAGED_KV`) lanes allocate fixed-size blocks lazily from
+//! shared per-role [`BlockPool`](crate::kvcache::BlockPool)s and share
+//! trunk prefixes copy-on-write, so resident memory tracks committed
+//! tokens. [`ServeLoop::with_block_budget`] caps those pools and turns the
+//! ceiling into admission-level *backpressure*: a request is admitted only
+//! when its worst-case block reservation fits both pools, and otherwise
+//! waits in the queue until running lanes retire and return their blocks —
+//! no in-flight lane can fail for lack of blocks, and streams stay
+//! bit-identical to an uncapped (or contiguous) run.
+//!
 //! ## Determinism contract
 //!
 //! A lane's speculation stream is driven entirely by lane-local state: its
@@ -37,6 +52,7 @@ use anyhow::Result;
 
 use super::{ActionPolicy, GenStats, Sequence, SpecEngine};
 use crate::dist::SamplingConfig;
+use crate::kvcache::{default_block_tokens, KvStorage};
 use crate::runtime::Backend;
 use crate::tokenizer;
 use crate::util::threadpool;
@@ -87,6 +103,27 @@ struct Lane {
     started: Instant,
 }
 
+/// Worst-case block reservation per admitted lane under a capped pool.
+///
+/// With paged KV storage a lane allocates blocks lazily as it commits
+/// rows, so the loop cannot know a lane's final footprint at admission
+/// time. To guarantee an admitted lane never hits pool exhaustion
+/// mid-generation, admission reserves the worst case: every target block a
+/// full `max_seq` context needs, every draft block, plus the trunk→branch
+/// handoff's divergent blocks (the shared prefix is refcounted, only the
+/// boundary fork and the trunk's own blocks are unique). Requests that
+/// don't fit wait in the queue — backpressure instead of failure — and
+/// retiring lanes hand their reservation (and, via `Drop`, their actual
+/// blocks) back.
+struct LaneBudget {
+    /// Blocks reserved against the target pool per lane.
+    reserve_target: usize,
+    /// Blocks reserved against the draft pool per lane.
+    reserve_draft: usize,
+    /// Per-pool cap (both pools), clamped so one lane always fits.
+    cap: usize,
+}
+
 /// The batched serving loop (see the module docs).
 pub struct ServeLoop<'a> {
     spec: SpecEngine<'a>,
@@ -96,6 +133,7 @@ pub struct ServeLoop<'a> {
     workers: usize,
     queue: VecDeque<(u64, ServeRequest)>,
     next_id: u64,
+    budget: Option<LaneBudget>,
 }
 
 impl<'a> ServeLoop<'a> {
@@ -116,6 +154,7 @@ impl<'a> ServeLoop<'a> {
             workers: threadpool::default_workers(),
             queue: VecDeque::new(),
             next_id: 0,
+            budget: None,
         }
     }
 
@@ -124,6 +163,45 @@ impl<'a> ServeLoop<'a> {
     pub fn with_workers(mut self, workers: usize) -> ServeLoop<'a> {
         self.workers = workers.max(1);
         self
+    }
+
+    /// Select the lanes' KV representation explicitly (the default follows
+    /// the `SPECDELAY_PAGED_KV` env knob). Clears any block budget; token
+    /// streams do not depend on the storage — paged is bit-identical to
+    /// the contiguous oracle.
+    pub fn with_kv_storage(mut self, storage: KvStorage) -> ServeLoop<'a> {
+        self.spec =
+            SpecEngine::new(self.spec.engine, self.spec.sampling).with_kv_storage(storage);
+        self.budget = None;
+        self
+    }
+
+    /// Serve from a capped paged block pool: both the target and the draft
+    /// pool are capped at `blocks` blocks (of
+    /// [`default_block_tokens`] tokens each), clamped up so a single lane
+    /// always fits. Admission switches from "a free batch slot" to "a free
+    /// batch slot *and* a worst-case block reservation in both pools" —
+    /// requests that don't fit queue until running lanes retire
+    /// (out-of-blocks backpressure), and token streams are identical to an
+    /// uncapped run because lane content never depends on admission timing.
+    pub fn with_block_budget(mut self, blocks: usize) -> ServeLoop<'a> {
+        let bt = default_block_tokens();
+        let meta = self.spec.engine.meta();
+        let max_trunk = meta.trunk_lens.iter().copied().max().unwrap_or(8);
+        let reserve_target = meta.target.max_seq.div_ceil(bt);
+        // draft lane + the handoff cache's divergent blocks (boundary fork
+        // + the trunk's own rows; the shared prefix costs nothing)
+        let reserve_draft = meta.draft.max_seq.div_ceil(bt) + max_trunk.div_ceil(bt) + 1;
+        let cap = blocks.max(reserve_target).max(reserve_draft);
+        self.spec = SpecEngine::new(self.spec.engine, self.spec.sampling)
+            .with_paged_kv(bt, Some(cap));
+        self.budget = Some(LaneBudget { reserve_target, reserve_draft, cap });
+        self
+    }
+
+    /// The engine driving the lanes (pool introspection for tests/benches).
+    pub fn spec(&self) -> &SpecEngine<'a> {
+        &self.spec
     }
 
     /// Enqueue a request; returns its admission-order id.
@@ -161,14 +239,33 @@ impl<'a> ServeLoop<'a> {
     /// has finished. Returns one output per request, sorted by request id;
     /// a lane that fails mid-generation retires with
     /// [`ServeOutput::error`] set and does not disturb the other lanes.
+    /// Under a block budget ([`ServeLoop::with_block_budget`]) admission
+    /// additionally requires a worst-case block reservation in both pools,
+    /// so requests queue — never fail — when blocks run out.
     pub fn run(&mut self) -> Result<Vec<ServeOutput>> {
         let mut active: Vec<Lane> = Vec::new();
         let mut done: Vec<ServeOutput> = Vec::new();
+        // worst-case blocks reserved by active lanes (0 when uncapped)
+        let (mut reserved_t, mut reserved_d) = (0usize, 0usize);
         loop {
             // admit queued requests into free batch slots (no backend work
             // here: the lane prefills on its first fan-out tick)
             while active.len() < self.max_batch {
+                if let Some(b) = &self.budget {
+                    // out-of-blocks backpressure: leave the request queued
+                    // unless its worst case fits both pools (a single lane
+                    // always fits — the caps are clamped to the reserve)
+                    let fits = reserved_t + b.reserve_target <= b.cap
+                        && reserved_d + b.reserve_draft <= b.cap;
+                    if !fits {
+                        break;
+                    }
+                }
                 let Some((id, req)) = self.queue.pop_front() else { break };
+                if let Some(b) = &self.budget {
+                    reserved_t += b.reserve_target;
+                    reserved_d += b.reserve_draft;
+                }
                 active.push(Lane {
                     id,
                     prompt: req.prompt,
@@ -205,11 +302,17 @@ impl<'a> ServeLoop<'a> {
                 },
             );
             for (lane, err) in stepped {
-                if err.is_some() {
-                    // confine the failure to this lane; keep serving others
+                let retiring = err.is_some() || Self::lane_done(&lane);
+                if retiring {
+                    if let Some(b) = &self.budget {
+                        // the lane's Sequence drops with it, returning its
+                        // actual blocks to the pools' free lists
+                        reserved_t -= b.reserve_target;
+                        reserved_d -= b.reserve_draft;
+                    }
+                    // a failing lane retires with its error recorded; the
+                    // other lanes are unaffected
                     done.push(Self::retire(lane, err));
-                } else if Self::lane_done(&lane) {
-                    done.push(Self::retire(lane, None));
                 } else {
                     active.push(lane);
                 }

@@ -17,7 +17,7 @@ pub mod server;
 mod spec;
 
 pub use batch::{ServeLoop, ServeOutput, ServeRequest};
-pub use spec::{generate_autoregressive, RootFeatures, Sequence, SpecEngine};
+pub use spec::{generate_autoregressive, KvPools, RootFeatures, Sequence, SpecEngine};
 
 use crate::dist::{NodeDist, SamplingConfig};
 use crate::draft::Action;

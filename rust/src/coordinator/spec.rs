@@ -6,6 +6,7 @@
 //! The engine half runs on the always-built CPU reference backend in the
 //! default configuration and on PJRT behind the `pjrt` feature.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
@@ -13,7 +14,7 @@ use anyhow::{anyhow, Result};
 use super::{ActionPolicy, BlockStats, GenStats, StepFeatures};
 use crate::dist::{DistStorage, NodeDist, SamplingConfig};
 use crate::draft::{accepted_row_extent, draft_delayed, Action, DraftScratch};
-use crate::kvcache::KvCache;
+use crate::kvcache::{default_block_tokens, BlockPool, KvCache, KvStorage};
 use crate::runtime::{Backend, Role};
 use crate::tokenizer;
 use crate::tree::DraftTree;
@@ -55,18 +56,89 @@ pub struct Sequence {
     pub verdict: Verdict,
 }
 
+/// One target/draft pair of shared block pools backing every paged lane a
+/// [`SpecEngine`] creates. Lanes of one engine draw from (and retire into)
+/// these pools, so resident memory — and, when the pools are capped, the
+/// serving loop's admission budget — is accounted per *unique* block
+/// across all in-flight sequences.
+pub struct KvPools {
+    /// Pool sized for the target model's dimensions.
+    pub target: Arc<BlockPool>,
+    /// Pool sized for the draft model's dimensions.
+    pub draft: Arc<BlockPool>,
+}
+
+/// Which KV representation a [`SpecEngine`] gives its sequences.
+enum KvContext {
+    Contiguous,
+    Paged(KvPools),
+}
+
 /// The speculative decoding engine for one family.
 pub struct SpecEngine<'a> {
     /// The execution backend (CPU reference or PJRT).
     pub engine: &'a dyn Backend,
     /// Sampling configuration shared by target and draft.
     pub sampling: SamplingConfig,
+    /// KV storage for sequences created by [`SpecEngine::start`].
+    kv: KvContext,
 }
 
 impl<'a> SpecEngine<'a> {
-    /// Wrap a backend with a sampling configuration.
+    /// Wrap a backend with a sampling configuration. KV storage follows
+    /// [`KvStorage::global`] (env knob `SPECDELAY_PAGED_KV`); paged
+    /// engines get fresh uncapped pools — use
+    /// [`SpecEngine::with_paged_kv`] to cap them.
     pub fn new(engine: &'a dyn Backend, sampling: SamplingConfig) -> Self {
-        SpecEngine { engine, sampling }
+        SpecEngine { engine, sampling, kv: KvContext::Contiguous }
+            .with_kv_storage(KvStorage::global())
+    }
+
+    /// Select the KV representation explicitly (tests and benches cover
+    /// both sides of the env knob in one process this way). Paged storage
+    /// gets fresh uncapped pools with [`default_block_tokens`].
+    pub fn with_kv_storage(self, storage: KvStorage) -> Self {
+        match storage {
+            KvStorage::Contiguous => SpecEngine { kv: KvContext::Contiguous, ..self },
+            KvStorage::Paged => {
+                let bt = default_block_tokens();
+                self.with_paged_kv(bt, None)
+            }
+        }
+    }
+
+    /// Force paged KV storage with explicit block size and an optional
+    /// per-pool block budget (both the target and the draft pool get
+    /// `max_blocks`). Exhausting a capped pool panics on the write path,
+    /// so callers gating admission (the batched
+    /// [`ServeLoop`](super::ServeLoop)) must reserve worst-case blocks per
+    /// lane before admitting it.
+    pub fn with_paged_kv(mut self, block_tokens: usize, max_blocks: Option<usize>) -> Self {
+        let meta = self.engine.meta();
+        self.kv = KvContext::Paged(KvPools {
+            target: BlockPool::new(meta.target, block_tokens, max_blocks),
+            draft: BlockPool::new(meta.draft, block_tokens, max_blocks),
+        });
+        self
+    }
+
+    /// The shared block pools, when this engine uses paged storage.
+    pub fn kv_pools(&self) -> Option<&KvPools> {
+        match &self.kv {
+            KvContext::Paged(p) => Some(p),
+            KvContext::Contiguous => None,
+        }
+    }
+
+    /// A fresh empty KV lane in this engine's storage.
+    fn new_cache(&self, role: Role) -> KvCache {
+        match &self.kv {
+            KvContext::Contiguous => KvCache::new(self.engine.dims(role)),
+            KvContext::Paged(pools) => KvCache::paged(match role {
+                Role::Target => &pools.target,
+                Role::Draft => &pools.draft,
+            }),
+        }
     }
 
     /// Prefill both models on the prompt.
@@ -83,8 +155,8 @@ impl<'a> SpecEngine<'a> {
         let t_out = self.engine.prefill(Role::Target, &toks_i32, len)?;
         let d_out = self.engine.prefill(Role::Draft, &toks_i32, len)?;
 
-        let mut target_kv = KvCache::new(self.engine.meta().target);
-        let mut draft_kv = KvCache::new(self.engine.meta().draft);
+        let mut target_kv = self.new_cache(Role::Target);
+        let mut draft_kv = self.new_cache(Role::Draft);
         target_kv.commit_prefill(&t_out.k_rows, &t_out.v_rows, s_pre, len);
         draft_kv.commit_prefill(&d_out.k_rows, &d_out.v_rows, s_pre, len);
 
@@ -174,8 +246,7 @@ impl<'a> SpecEngine<'a> {
         let bias = tree.attention_bias(n_bucket);
         let out = self.engine.tree_verify(
             n_bucket,
-            &seq.target_kv.k,
-            &seq.target_kv.v,
+            seq.target_kv.view(),
             &toks,
             &pos,
             &bias,
@@ -295,8 +366,7 @@ impl<'a> SpecEngine<'a> {
                 let pos = seq.root_pos + tree.nodes[deepest].depth;
                 let d = self.engine.decode(
                     Role::Draft,
-                    &seq.draft_kv.k,
-                    &seq.draft_kv.v,
+                    seq.draft_kv.view(),
                     tree.nodes[deepest].token,
                     pos,
                 )?;
@@ -357,8 +427,7 @@ impl<'a> SpecEngine<'a> {
         let root = *seq.tokens.last().unwrap();
         let d = self.engine.decode(
             Role::Draft,
-            &seq.draft_kv.k,
-            &seq.draft_kv.v,
+            seq.draft_kv.view(),
             root,
             seq.root_pos,
         )?;
@@ -474,7 +543,7 @@ pub fn generate_autoregressive(
     while !seq.finished && seq.tokens.len() - seq.prompt_len < max_new {
         let root = *seq.tokens.last().unwrap();
         let out = engine
-            .decode(Role::Target, &seq.target_kv.k, &seq.target_kv.v, root, seq.root_pos)
+            .decode(Role::Target, seq.target_kv.view(), root, seq.root_pos)
             .map_err(|e| anyhow!(e))?;
         seq.target_kv.commit_row(&out.k_row, &out.v_row, seq.root_pos);
         let p = NodeDist::from_logits(&out.logits, sampling, DistStorage::global());

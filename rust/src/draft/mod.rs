@@ -33,12 +33,16 @@ impl Action {
     }
 
     /// Canonicalize: K=1 trees are single paths (trunk only, capped at the
-    /// longest compiled trunk); L2 = 0 likewise.
+    /// longest compiled trunk); L2 = 0 likewise. Branching actions cap L1
+    /// at the longest compiled trunk too — the trunk rollout has no longer
+    /// entry point, and the serving loop's worst-case block reservation
+    /// (`ServeLoop::with_block_budget`) relies on `l1 ≤ max_trunk` holding
+    /// for every normalized action.
     pub fn normalized(self, max_trunk: usize) -> Action {
         if self.k <= 1 || self.l2 == 0 {
             Action { k: 1, l1: (self.l1 + self.l2).min(max_trunk), l2: 0 }
         } else {
-            Action { k: self.k.min(4), l1: self.l1, l2: self.l2 }
+            Action { k: self.k.min(4), l1: self.l1.min(max_trunk), l2: self.l2 }
         }
     }
 
@@ -52,10 +56,21 @@ impl Action {
 /// branch-rollout handoff cache trunk rows are committed into. Create one
 /// per sequence and reuse it across blocks — after the first trunk+branch
 /// block the cache is warm and steady-state drafting performs no
-/// cache-sized allocations.
+/// cache-sized allocations. The handoff cache inherits the sequence
+/// cache's storage ([`KvCache::new_like`]): with paged storage the prefix
+/// refresh is a copy-on-write fork (refcount bumps) instead of a physical
+/// prefix copy, and only the trunk's own blocks ever diverge.
 #[derive(Clone, Default)]
 pub struct DraftScratch {
     branch_kv: Option<KvCache>,
+}
+
+impl DraftScratch {
+    /// The handoff cache, once a trunk+branch block has warmed it (bench /
+    /// test introspection hook for prefix-sharing measurements).
+    pub fn branch_cache(&self) -> Option<&KvCache> {
+        self.branch_kv.as_ref()
+    }
 }
 
 /// Drafting output: the merged tree plus raw rollout tensors for KV commits.
@@ -107,8 +122,7 @@ pub fn draft_delayed(
         let out = engine.rollout(
             1,
             a.l1,
-            &draft_kv.k,
-            &draft_kv.v,
+            draft_kv.view(),
             root_token,
             root_pos,
             &uniforms,
@@ -135,15 +149,17 @@ pub fn draft_delayed(
         let uniforms: Vec<f32> = (0..a.k * lb).map(|_| rng.next_f32()).collect();
         // Branch paths start l1 positions past the committed prefix, so the
         // trunk's rows must be visible to them: refresh the reusable
-        // handoff cache with the committed prefix (copy cost tracks the
-        // context length; stale rows past start_pos are never read) and
-        // commit the trunk rollout's rows on top — the same handoff
-        // selector::draft_superset performs for superset sampling.
+        // handoff cache with the committed prefix (for contiguous lanes a
+        // span copy tracking the context length; for paged lanes a
+        // copy-on-write fork — O(blocks) refcount bumps; stale rows past
+        // start_pos are never read) and commit the trunk rollout's rows on
+        // top — the same handoff selector::draft_superset performs for
+        // superset sampling.
         let branch_kv: &KvCache = match &trunk_out {
             Some(tr) if a.l1 > 0 => {
                 let kv = scratch
                     .branch_kv
-                    .get_or_insert_with(|| KvCache::new(meta.draft));
+                    .get_or_insert_with(|| draft_kv.new_like());
                 kv.copy_prefix_from(draft_kv, root_pos);
                 kv.commit_rollout_rows(&tr.k_rows, &tr.v_rows, 1, a.l1, 0, a.l1 - 1, root_pos);
                 kv
@@ -153,8 +169,7 @@ pub fn draft_delayed(
         let out = engine.rollout(
             a.k,
             lb,
-            &branch_kv.k,
-            &branch_kv.v,
+            branch_kv.view(),
             start_token,
             start_pos,
             &uniforms,
@@ -223,6 +238,9 @@ mod tests {
         assert_eq!(Action::new(3, 0, 4).normalized(8), Action::new(3, 0, 4));
         assert_eq!(Action::new(2, 2, 0).normalized(8), Action::new(1, 2, 0));
         assert_eq!(Action::new(4, 8, 8).normalized(8).nodes(), 1 + 8 + 32);
+        // branching actions clamp the trunk to the longest compiled length
+        // (the block-budget reservation relies on this bound)
+        assert_eq!(Action::new(2, 40, 1).normalized(8), Action::new(2, 8, 1));
     }
 
     #[test]

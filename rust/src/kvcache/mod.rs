@@ -1,29 +1,51 @@
-//! Host-resident KV cache with row-level commit.
+//! Host-resident KV caches with row-level commit, in two storage
+//! representations behind one surface.
 //!
 //! The AOT entry points are pure: caches go in as arguments and new rows
-//! come back as outputs. The manager owns the canonical [L, H, S, Dh] f32
-//! buffers per sequence, scatters accepted rows after verification, and
-//! rolls back simply by *not* committing rejected rows.
+//! come back as outputs. A cache owns the canonical `[L, H, S, Dh]` f32
+//! row space per sequence, scatters accepted rows after verification, and
+//! rolls back simply by *not* committing rejected rows. Two storages
+//! implement that contract:
+//!
+//! * [`ContiguousKv`] — one flat buffer per lane, rows resolved by offset
+//!   arithmetic. The reference implementation and the bit-exact oracle.
+//! * [`PagedKvCache`] — a copy-on-write block table over a shared
+//!   [`BlockPool`] (see [`paged`]): resident memory tracks committed
+//!   tokens, prefix forks are refcount bumps, and a serving loop can cap
+//!   the pool for admission-level backpressure.
+//!
+//! [`KvCache`] is the storage enum the serving stack carries (selected by
+//! [`KvStorage::global`], env knob `SPECDELAY_PAGED_KV`), and [`KvRef`] is
+//! the read-only view the [`Backend`](crate::runtime::Backend) entry
+//! points take: the CPU backend gathers attention rows *through* it (block
+//! tables included), while the PJRT engine materialises paged lanes into
+//! contiguous scratch before upload.
 //!
 //! ## Copy coalescing
 //!
-//! The [L, H, S, Dh] destination layout is part of the compiled-module
+//! The `[L, H, S, Dh]` destination layout is part of the compiled-module
 //! interface, and it places a token's heads `max_seq·d_head` apart — so a
 //! head-spanning `n_heads·d_head` copy per (layer, step/node) is only legal
-//! when the layout degenerates (`KvCache::heads_contiguous`: one head, or
-//! `max_seq == 1`). What the layout *does* make contiguous is the step
+//! when the layout degenerates (`ContiguousKv::heads_contiguous`: one head,
+//! or `max_seq == 1`). What the layout *does* make contiguous is the step
 //! axis: positions are adjacent per (layer, head), so the rollout commit
 //! coalesces all accepted steps into one span copy whenever the source
 //! rollout is also step-contiguous (single-head models), and otherwise
 //! walks hoisted strides instead of recomputing `row_offset` per
-//! (step, head). Equivalence against the naive per-element scatter is
-//! asserted in the tests below.
+//! (step, head). The paged storage preserves exactly this coalescing per
+//! block (its position axis is tiled, not reordered). Equivalence against
+//! the naive per-element scatter is asserted in the tests below;
+//! paged-vs-contiguous bitwise equality is fuzzed in `tests/paged_kv.rs`.
+
+pub mod paged;
+
+pub use paged::{default_block_tokens, BlockPool, KvStorage, PagedKvCache};
 
 use crate::runtime::ModelDims;
 
-/// One sequence's host-resident KV cache (one lane of the batched loop).
+/// One sequence's contiguous KV lane: flat `[L, H, S, Dh]` buffers.
 #[derive(Clone)]
-pub struct KvCache {
+pub struct ContiguousKv {
     /// Model dimensions fixing the `[L, H, S, Dh]` layout.
     pub dims: ModelDims,
     /// Key buffer, `[L, H, S, Dh]` flat.
@@ -35,16 +57,24 @@ pub struct KvCache {
     pub len: usize,
 }
 
-impl KvCache {
+impl ContiguousKv {
     /// Zeroed cache sized by the model's dimensions.
-    pub fn new(dims: ModelDims) -> KvCache {
+    pub fn new(dims: ModelDims) -> ContiguousKv {
         let n = dims.kv_elems();
-        KvCache { dims, k: vec![0.0; n], v: vec![0.0; n], len: 0 }
+        ContiguousKv { dims, k: vec![0.0; n], v: vec![0.0; n], len: 0 }
     }
 
     #[inline]
     fn row_offset(&self, layer: usize, head: usize, pos: usize) -> usize {
         ((layer * self.dims.n_heads + head) * self.dims.max_seq + pos) * self.dims.d_head
+    }
+
+    /// Read the `d_head` K/V slices at `(layer, head, pos)`.
+    #[inline]
+    pub fn row(&self, layer: usize, head: usize, pos: usize) -> (&[f32], &[f32]) {
+        let off = self.row_offset(layer, head, pos);
+        let dh = self.dims.d_head;
+        (&self.k[off..off + dh], &self.v[off..off + dh])
     }
 
     /// Whether a token's heads are adjacent in the cache layout, making a
@@ -59,9 +89,9 @@ impl KvCache {
     /// copied (one contiguous span per (layer, head), so the cost tracks
     /// the committed context, not `max_seq`), rows past the prefix keep
     /// their previous contents and **must not be read**. Allocation-free —
-    /// the scratch-reuse half of [`KvCache::clone_prefix`]; dims must
+    /// the scratch-reuse half of [`ContiguousKv::clone_prefix`]; dims must
     /// match.
-    pub fn copy_prefix_from(&mut self, src: &KvCache, rows: usize) {
+    pub fn copy_prefix_from(&mut self, src: &ContiguousKv, rows: usize) {
         debug_assert_eq!(self.k.len(), src.k.len(), "prefix copy across dims");
         let rows = rows.min(self.dims.max_seq);
         let (lyr, h, dh) = (self.dims.n_layers, self.dims.n_heads, self.dims.d_head);
@@ -78,9 +108,9 @@ impl KvCache {
 
     /// Freshly allocated copy of this cache holding only rows `< rows`
     /// (later rows zero). Allocating convenience wrapper over
-    /// [`KvCache::copy_prefix_from`].
-    pub fn clone_prefix(&self, rows: usize) -> KvCache {
-        let mut out = KvCache::new(self.dims);
+    /// [`ContiguousKv::copy_prefix_from`].
+    pub fn clone_prefix(&self, rows: usize) -> ContiguousKv {
+        let mut out = ContiguousKv::new(self.dims);
         out.copy_prefix_from(self, rows);
         out
     }
@@ -178,10 +208,9 @@ impl KvCache {
     /// Commit tree-pass rows [Lyr, N, H, Dh] for node `node_idx` at `pos`.
     ///
     /// The source places a node's heads contiguously, so when the cache
-    /// layout agrees (`KvCache::heads_contiguous`) the whole node commits
-    /// as one `n_heads·d_head` copy per layer; otherwise the per-head loop
-    /// advances hoisted strides.
-    #[allow(clippy::too_many_arguments)]
+    /// layout agrees (`ContiguousKv::heads_contiguous`) the whole node
+    /// commits as one `n_heads·d_head` copy per layer; otherwise the
+    /// per-head loop advances hoisted strides.
     pub fn commit_tree_row(
         &mut self,
         k_rows: &[f32],
@@ -214,6 +243,297 @@ impl KvCache {
     }
 }
 
+// ---------------------------------------------------------------------------
+// The storage enum + read view
+// ---------------------------------------------------------------------------
+
+/// One sequence's KV lane in whichever storage the stack selected — the
+/// commit/fork surface the serving coordinator writes through. See the
+/// module docs for the two representations and their equivalence contract.
+#[derive(Clone)]
+pub enum KvCache {
+    /// Flat per-lane buffers (the bit-exact oracle).
+    Contiguous(ContiguousKv),
+    /// Copy-on-write block table over a shared pool.
+    Paged(PagedKvCache),
+}
+
+impl KvCache {
+    /// Zeroed *contiguous* cache sized by the model's dimensions (the
+    /// historical constructor; storage-selected construction goes through
+    /// [`crate::coordinator::SpecEngine`] or [`KvCache::paged`]).
+    pub fn new(dims: ModelDims) -> KvCache {
+        KvCache::Contiguous(ContiguousKv::new(dims))
+    }
+
+    /// Empty paged lane over `pool`.
+    pub fn paged(pool: &std::sync::Arc<BlockPool>) -> KvCache {
+        KvCache::Paged(PagedKvCache::new(pool))
+    }
+
+    /// Empty cache of the same storage (and, for paged lanes, the same
+    /// pool — so prefix copies between the two are copy-on-write forks).
+    pub fn new_like(&self) -> KvCache {
+        match self {
+            KvCache::Contiguous(c) => KvCache::Contiguous(ContiguousKv::new(c.dims)),
+            KvCache::Paged(p) => KvCache::Paged(PagedKvCache::new(p.pool())),
+        }
+    }
+
+    /// Which representation this lane uses.
+    pub fn storage(&self) -> KvStorage {
+        match self {
+            KvCache::Contiguous(_) => KvStorage::Contiguous,
+            KvCache::Paged(_) => KvStorage::Paged,
+        }
+    }
+
+    /// Model dimensions fixing the logical `[L, H, S, Dh]` layout.
+    pub fn dims(&self) -> ModelDims {
+        match self {
+            KvCache::Contiguous(c) => c.dims,
+            KvCache::Paged(p) => p.dims(),
+        }
+    }
+
+    /// Number of committed rows.
+    pub fn len(&self) -> usize {
+        match self {
+            KvCache::Contiguous(c) => c.len,
+            KvCache::Paged(p) => p.len(),
+        }
+    }
+
+    /// Whether no rows are committed.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Read-only view for [`Backend`](crate::runtime::Backend) dispatch.
+    pub fn view(&self) -> KvRef<'_> {
+        match self {
+            KvCache::Contiguous(c) => KvRef::Contiguous { dims: c.dims, k: &c.k, v: &c.v },
+            KvCache::Paged(p) => KvRef::Paged(p),
+        }
+    }
+
+    /// Read the `d_head` K/V slices at `(layer, head, pos)` — test hook for
+    /// bitwise row assertions across storages.
+    pub fn read_row(&self, layer: usize, head: usize, pos: usize) -> (&[f32], &[f32]) {
+        match self {
+            KvCache::Contiguous(c) => c.row(layer, head, pos),
+            KvCache::Paged(p) => p.row(layer, head, pos),
+        }
+    }
+
+    /// The paged representation, when this lane uses it.
+    pub fn as_paged(&self) -> Option<&PagedKvCache> {
+        match self {
+            KvCache::Paged(p) => Some(p),
+            KvCache::Contiguous(_) => None,
+        }
+    }
+
+    /// The contiguous representation, when this lane uses it.
+    pub fn as_contiguous(&self) -> Option<&ContiguousKv> {
+        match self {
+            KvCache::Contiguous(c) => Some(c),
+            KvCache::Paged(_) => None,
+        }
+    }
+
+    /// Commit prefill rows laid out `[L, H, s_pre, Dh]` for positions
+    /// `0..len`.
+    pub fn commit_prefill(&mut self, k_rows: &[f32], v_rows: &[f32], s_pre: usize, len: usize) {
+        match self {
+            KvCache::Contiguous(c) => c.commit_prefill(k_rows, v_rows, s_pre, len),
+            KvCache::Paged(p) => p.commit_prefill(k_rows, v_rows, s_pre, len),
+        }
+    }
+
+    /// Commit one row laid out `[L, H, Dh]` at `pos`.
+    pub fn commit_row(&mut self, k_row: &[f32], v_row: &[f32], pos: usize) {
+        match self {
+            KvCache::Contiguous(c) => c.commit_row(k_row, v_row, pos),
+            KvCache::Paged(p) => p.commit_row(k_row, v_row, pos),
+        }
+    }
+
+    /// Commit rollout rows `[Lyr, K, L, H, Dh]`: path `branch`, steps
+    /// `0..=last_step`, at positions `base_pos + step`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn commit_rollout_rows(
+        &mut self,
+        k_rows: &[f32],
+        v_rows: &[f32],
+        k_paths: usize,
+        l_steps: usize,
+        branch: usize,
+        last_step: usize,
+        base_pos: usize,
+    ) {
+        match self {
+            KvCache::Contiguous(c) => {
+                c.commit_rollout_rows(k_rows, v_rows, k_paths, l_steps, branch, last_step, base_pos)
+            }
+            KvCache::Paged(p) => {
+                p.commit_rollout_rows(k_rows, v_rows, k_paths, l_steps, branch, last_step, base_pos)
+            }
+        }
+    }
+
+    /// Commit tree-pass rows `[Lyr, N, H, Dh]` for node `node_idx` at `pos`.
+    pub fn commit_tree_row(
+        &mut self,
+        k_rows: &[f32],
+        v_rows: &[f32],
+        n_bucket: usize,
+        node_idx: usize,
+        pos: usize,
+    ) {
+        match self {
+            KvCache::Contiguous(c) => c.commit_tree_row(k_rows, v_rows, n_bucket, node_idx, pos),
+            KvCache::Paged(p) => p.commit_tree_row(k_rows, v_rows, n_bucket, node_idx, pos),
+        }
+    }
+
+    /// Refresh this cache as a prefix of `src`: rows `< rows` become
+    /// readable as `src`'s, rows past the prefix must not be read.
+    /// Contiguous lanes copy the spans; paged lanes on the same pool share
+    /// blocks (O(blocks) refcount bumps — the copy-on-write fork). Mixed
+    /// storages fall back to a per-row deep copy.
+    pub fn copy_prefix_from(&mut self, src: &KvCache, rows: usize) {
+        match (self, src) {
+            (KvCache::Contiguous(a), KvCache::Contiguous(b)) => a.copy_prefix_from(b, rows),
+            (KvCache::Paged(a), KvCache::Paged(b)) => a.copy_prefix_from(b, rows),
+            (me, other) => {
+                // cross-storage deep copy (cold path, kept for safety)
+                let d = me.dims();
+                let rows = rows.min(d.max_seq);
+                for pos in 0..rows {
+                    for l in 0..d.n_layers {
+                        for hh in 0..d.n_heads {
+                            let (ks, vs) = other.read_row(l, hh, pos);
+                            let (ks, vs) = (ks.to_vec(), vs.to_vec());
+                            me.write_row_raw(l, hh, pos, &ks, &vs);
+                        }
+                    }
+                }
+                me.set_len(other.len().min(rows));
+            }
+        }
+    }
+
+    /// Fresh cache of the same storage holding only rows `< rows`.
+    pub fn clone_prefix(&self, rows: usize) -> KvCache {
+        match self {
+            KvCache::Contiguous(c) => KvCache::Contiguous(c.clone_prefix(rows)),
+            KvCache::Paged(p) => KvCache::Paged(p.clone_prefix(rows)),
+        }
+    }
+
+    /// Raw single-(layer, head) row write — only used by the cross-storage
+    /// fallback above.
+    fn write_row_raw(&mut self, layer: usize, head: usize, pos: usize, k: &[f32], v: &[f32]) {
+        match self {
+            KvCache::Contiguous(c) => {
+                let off = c.row_offset(layer, head, pos);
+                let dh = c.dims.d_head;
+                c.k[off..off + dh].copy_from_slice(k);
+                c.v[off..off + dh].copy_from_slice(v);
+            }
+            KvCache::Paged(p) => p.write_row(layer, head, pos, k, v),
+        }
+    }
+
+    fn set_len(&mut self, len: usize) {
+        match self {
+            KvCache::Contiguous(c) => c.len = len,
+            KvCache::Paged(p) => p.set_len(len),
+        }
+    }
+}
+
+/// Read-only KV view passed through the [`Backend`](crate::runtime::Backend)
+/// entry points: either borrowed contiguous `[L, H, S, Dh]` buffers or a
+/// paged lane read through its block table. Construct via
+/// [`KvCache::view`], or [`KvRef::contiguous`] for raw buffers.
+#[derive(Clone, Copy)]
+pub enum KvRef<'a> {
+    /// Borrowed flat buffers plus the dims fixing their layout.
+    Contiguous {
+        /// Model dimensions fixing the `[L, H, S, Dh]` layout.
+        dims: ModelDims,
+        /// Key buffer, `[L, H, S, Dh]` flat.
+        k: &'a [f32],
+        /// Value buffer, same layout.
+        v: &'a [f32],
+    },
+    /// A paged lane, read through its block table.
+    Paged(&'a PagedKvCache),
+}
+
+impl<'a> KvRef<'a> {
+    /// View over raw contiguous buffers (the historical two-slice calling
+    /// convention).
+    pub fn contiguous(dims: ModelDims, k: &'a [f32], v: &'a [f32]) -> KvRef<'a> {
+        KvRef::Contiguous { dims, k, v }
+    }
+
+    /// Model dimensions of the viewed lane.
+    pub fn dims(&self) -> ModelDims {
+        match self {
+            KvRef::Contiguous { dims, .. } => *dims,
+            KvRef::Paged(p) => p.dims(),
+        }
+    }
+
+    /// Whether the view's element capacity matches `want` `[L, H, S, Dh]`
+    /// elements (backend shape validation; reports the actual size).
+    pub fn check_elems(&self, want: usize) -> Result<(), (usize, usize)> {
+        match self {
+            KvRef::Contiguous { k, v, .. } => {
+                if k.len() != want || v.len() != want {
+                    return Err((k.len(), v.len()));
+                }
+                Ok(())
+            }
+            KvRef::Paged(p) => {
+                let have = p.dims().kv_elems();
+                if have != want {
+                    return Err((have, have));
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Read the `d_head` K/V slices at `(layer, head, pos)`. The slices
+    /// borrow the underlying lane (`'a`), so gathered attention rows can
+    /// outlive the `KvRef` value itself.
+    #[inline]
+    pub fn row(self, layer: usize, head: usize, pos: usize) -> (&'a [f32], &'a [f32]) {
+        match self {
+            KvRef::Contiguous { dims, k, v } => {
+                let off = ((layer * dims.n_heads + head) * dims.max_seq + pos) * dims.d_head;
+                let dh = dims.d_head;
+                (&k[off..off + dh], &v[off..off + dh])
+            }
+            KvRef::Paged(p) => p.row(layer, head, pos),
+        }
+    }
+
+    /// Contiguous host buffers when the view already is one (the PJRT
+    /// zero-copy path); paged views return `None` and must be gathered via
+    /// [`PagedKvCache::gather`].
+    pub fn as_contiguous(&self) -> Option<(&'a [f32], &'a [f32])> {
+        match self {
+            KvRef::Contiguous { k, v, .. } => Some((k, v)),
+            KvRef::Paged(_) => None,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -224,7 +544,7 @@ mod tests {
 
     #[test]
     fn commit_row_places_values() {
-        let mut c = KvCache::new(dims());
+        let mut c = ContiguousKv::new(dims());
         let row: Vec<f32> = (0..16).map(|x| x as f32).collect(); // [2,2,4]
         c.commit_row(&row, &row, 3);
         assert_eq!(c.len, 4);
@@ -239,7 +559,7 @@ mod tests {
     #[test]
     fn clone_prefix_copies_only_prefix_rows() {
         let d = dims();
-        let mut c = KvCache::new(d);
+        let mut c = ContiguousKv::new(d);
         for (i, v) in c.k.iter_mut().enumerate() {
             *v = i as f32 + 1.0;
         }
@@ -262,7 +582,7 @@ mod tests {
         assert_eq!(full.k, c.k);
         assert_eq!(full.len, 6);
         // the reusing entry refreshes the prefix in place (stale tail kept)
-        let mut reuse = KvCache::new(d);
+        let mut reuse = ContiguousKv::new(d);
         reuse.k.fill(-1.0);
         reuse.v.fill(-1.0);
         reuse.copy_prefix_from(&c, 3);
@@ -276,7 +596,7 @@ mod tests {
     #[test]
     fn commit_prefill_layout() {
         let d = dims();
-        let mut c = KvCache::new(d);
+        let mut c = ContiguousKv::new(d);
         let s_pre = 4;
         let n = d.n_layers * d.n_heads * s_pre * d.d_head;
         let rows: Vec<f32> = (0..n).map(|x| x as f32).collect();
@@ -290,13 +610,13 @@ mod tests {
     #[test]
     fn commit_rollout_rows_branch_selection() {
         let d = dims();
-        let mut c = KvCache::new(d);
+        let mut c = ContiguousKv::new(d);
         let (kp, ls) = (3, 2);
         let n = d.n_layers * kp * ls * d.n_heads * d.d_head;
         let rows: Vec<f32> = (0..n).map(|x| x as f32).collect();
         c.commit_rollout_rows(&rows, &rows, kp, ls, 1, 1, 5);
         assert_eq!(c.len, 7);
-        // layer 0, branch 1, step 0, head 0: src ((0*3+1)*2+0)*2*4 + 0 = 16
+        // layer 0, branch 1, step 0, head 0: src ((0*3+1)*2+0)*2*4 = 16
         let off = c.row_offset(0, 0, 5);
         assert_eq!(c.k[off], 16.0);
     }
@@ -304,7 +624,7 @@ mod tests {
     #[test]
     fn commit_tree_row_layout() {
         let d = dims();
-        let mut c = KvCache::new(d);
+        let mut c = ContiguousKv::new(d);
         let nb = 4;
         let n = d.n_layers * nb * d.n_heads * d.d_head;
         let rows: Vec<f32> = (0..n).map(|x| x as f32).collect();
@@ -317,7 +637,7 @@ mod tests {
 
     /// Naive per-element reference for the rollout scatter.
     fn reference_rollout(
-        c: &mut KvCache,
+        c: &mut ContiguousKv,
         rows: &[f32],
         k_paths: usize,
         l_steps: usize,
@@ -343,7 +663,9 @@ mod tests {
 
     /// The coalesced commits must scatter exactly like the per-element
     /// reference, across head counts (incl. the single-head span-copy fast
-    /// path), branches and partial step extents.
+    /// path), branches and partial step extents — and the paged storage
+    /// must match the contiguous result bitwise for every shape, across
+    /// block sizes that tile the span unevenly.
     #[test]
     fn coalesced_commits_match_reference() {
         for n_heads in [1usize, 2, 3] {
@@ -360,22 +682,43 @@ mod tests {
             let rows: Vec<f32> = (0..n).map(|x| (x as f32) * 0.5 + 1.0).collect();
             for branch in 0..kp {
                 for last_step in 0..ls {
-                    let mut fast = KvCache::new(d);
-                    let mut slow = KvCache::new(d);
+                    let mut fast = ContiguousKv::new(d);
+                    let mut slow = ContiguousKv::new(d);
                     fast.commit_rollout_rows(&rows, &rows, kp, ls, branch, last_step, 5);
                     reference_rollout(&mut slow, &rows, kp, ls, branch, last_step, 5);
                     assert_eq!(fast.k, slow.k, "h={n_heads} b={branch} s={last_step}");
                     assert_eq!(fast.v, slow.v, "h={n_heads} b={branch} s={last_step}");
                     assert_eq!(fast.len, slow.len);
+                    // paged twin, block sizes cutting the span unevenly
+                    for bt in [1usize, 3, 16] {
+                        let pool = BlockPool::new(d, bt, None);
+                        let mut pg = PagedKvCache::new(&pool);
+                        pg.commit_rollout_rows(&rows, &rows, kp, ls, branch, last_step, 5);
+                        assert_eq!(pg.len(), slow.len);
+                        for l in 0..d.n_layers {
+                            for hh in 0..n_heads {
+                                for pos in 0..d.max_seq {
+                                    let (pk, pv) = pg.row(l, hh, pos);
+                                    let off = slow.row_offset(l, hh, pos);
+                                    assert_eq!(
+                                        pk,
+                                        &slow.k[off..off + d.d_head],
+                                        "paged bt={bt} h={n_heads} b={branch} s={last_step} l={l} hh={hh} pos={pos}"
+                                    );
+                                    assert_eq!(pv, &slow.v[off..off + d.d_head]);
+                                }
+                            }
+                        }
+                    }
                 }
             }
             // tree-row and single-row commits against the same reference idea
             let nb = 4;
             let nt = d.n_layers * nb * n_heads * d.d_head;
             let trows: Vec<f32> = (0..nt).map(|x| x as f32 + 0.25).collect();
-            let mut fast = KvCache::new(d);
+            let mut fast = ContiguousKv::new(d);
             fast.commit_tree_row(&trows, &trows, nb, 1, 3);
-            let mut slow = KvCache::new(d);
+            let mut slow = ContiguousKv::new(d);
             for l in 0..d.n_layers {
                 for hh in 0..n_heads {
                     for e in 0..d.d_head {
@@ -392,9 +735,9 @@ mod tests {
 
             let nr = d.n_layers * n_heads * d.d_head;
             let rrow: Vec<f32> = (0..nr).map(|x| x as f32 + 0.75).collect();
-            let mut fast = KvCache::new(d);
+            let mut fast = ContiguousKv::new(d);
             fast.commit_row(&rrow, &rrow, 2);
-            let mut slow = KvCache::new(d);
+            let mut slow = ContiguousKv::new(d);
             for l in 0..d.n_layers {
                 for hh in 0..n_heads {
                     for e in 0..d.d_head {
@@ -408,6 +751,51 @@ mod tests {
             slow.len = 3;
             assert_eq!(fast.k, slow.k, "row h={n_heads}");
             assert_eq!(fast.len, slow.len);
+        }
+    }
+
+    /// The enum surface dispatches identically for both storages, and the
+    /// view's row reads agree with `read_row`.
+    #[test]
+    fn enum_surface_storage_equivalence() {
+        let d = dims();
+        let pool = BlockPool::new(d, 4, None);
+        let mut cont = KvCache::new(d);
+        let mut page = KvCache::paged(&pool);
+        assert_eq!(cont.storage(), KvStorage::Contiguous);
+        assert_eq!(page.storage(), KvStorage::Paged);
+        let n = d.n_layers * d.n_heads * d.d_head;
+        let row: Vec<f32> = (0..n).map(|x| x as f32 * 1.5).collect();
+        for pos in 0..7 {
+            cont.commit_row(&row, &row, pos);
+            page.commit_row(&row, &row, pos);
+        }
+        assert_eq!(cont.len(), page.len());
+        // forked prefixes agree with the sources
+        let cf = cont.clone_prefix(5);
+        let pf = page.clone_prefix(5);
+        assert_eq!(cf.len(), 5);
+        assert_eq!(pf.len(), 5);
+        for l in 0..d.n_layers {
+            for hh in 0..d.n_heads {
+                for pos in 0..5 {
+                    assert_eq!(cf.read_row(l, hh, pos).0, pf.read_row(l, hh, pos).0);
+                    let via_view = cf.view().row(l, hh, pos).0.to_vec();
+                    assert_eq!(via_view.as_slice(), pf.view().row(l, hh, pos).0);
+                }
+            }
+        }
+        // new_like follows storage and pool
+        assert_eq!(cont.new_like().storage(), KvStorage::Contiguous);
+        let nl = page.new_like();
+        assert_eq!(nl.storage(), KvStorage::Paged);
+        assert!(std::sync::Arc::ptr_eq(nl.as_paged().unwrap().pool(), &pool));
+        // cross-storage fallback copy
+        let mut mixed = KvCache::paged(&pool);
+        mixed.copy_prefix_from(&cont, 4);
+        assert_eq!(mixed.len(), 4);
+        for pos in 0..4 {
+            assert_eq!(mixed.read_row(1, 1, pos).0, cont.read_row(1, 1, pos).0);
         }
     }
 }

@@ -1,0 +1,818 @@
+//! Paged KV storage: a block allocator plus copy-on-write block tables.
+//!
+//! The contiguous [`ContiguousKv`](super::ContiguousKv) lane reserves
+//! `max_seq` rows per sequence up front, so the batched serving loop's
+//! memory ceiling is `lanes × max_seq` whether or not the rows are ever
+//! written, and every trunk→branch handoff in
+//! [`draft_delayed`](crate::draft::draft_delayed) physically copies the
+//! committed prefix. This module replaces both costs:
+//!
+//! * [`BlockPool`] — a process-shared allocator of fixed-size *token
+//!   blocks* (`block_tokens` rows of `[L, H, Dh]` KV each). Blocks are
+//!   reference-counted ([`std::sync::Arc`]), recycled through a free list,
+//!   and optionally capped (`max_blocks`) so a serving loop can trade lanes
+//!   for a hard block budget with queue-side backpressure.
+//! * [`PagedKvCache`] — one sequence's lane as a *block table*: an array of
+//!   `ceil(max_seq / block_tokens)` slots, each `None` (reads as zero,
+//!   like a freshly zeroed contiguous cache) or a refcounted block. Blocks
+//!   are allocated lazily on first write, so resident memory tracks the
+//!   tokens a lane actually committed, not `max_seq`.
+//!
+//! ## Copy-on-write forking
+//!
+//! [`PagedKvCache::copy_prefix_from`] and `Clone` do **no** row copies:
+//! they share the source's blocks by bumping refcounts (O(blocks) of the
+//! prefix). The first write to a shared block forks it — one block copy
+//! drawn from the free list — and later writes to the now-unique block are
+//! in place. The trunk→branch handoff therefore shares the whole committed
+//! prefix and pays one boundary-block fork; serving lanes that snapshot a
+//! sequence (`Sequence: Clone`) share everything until they diverge.
+//!
+//! ## Block layout and commit coalescing
+//!
+//! Inside a block the layout is `[L, H, T, Dh]` with `T = block_tokens` —
+//! the contiguous cache's `[L, H, S, Dh]` with the position axis cut into
+//! block-sized tiles. The position axis therefore stays adjacent to `Dh`
+//! *within a block*, so the rollout-commit span coalescing of the
+//! contiguous path (single-head source and destination both
+//! step-contiguous → one `copy_from_slice` per (layer, head)) is preserved
+//! per block: a commit of `n` steps does at most
+//! `ceil(n / block_tokens) + 1` span copies per (layer, head) instead of
+//! one, and the per-head stride walk is hoisted identically.
+//!
+//! ## Determinism contract
+//!
+//! Paged storage is a *bit-exact* drop-in for the contiguous oracle: reads
+//! go through [`PagedKvCache::row`], which returns exactly the bytes the
+//! commit ops stored (commits are pure copies on both representations, and
+//! unallocated blocks read as zeros exactly like the zero-initialised
+//! contiguous buffers). `tests/paged_kv.rs` fuzzes random
+//! alloc/fork/write/retire interleavings against a contiguous shadow and
+//! asserts bitwise equality after every op, plus the allocator invariants
+//! (`created == free + live`, free blocks unreferenced).
+
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::runtime::ModelDims;
+
+/// Which KV-cache representation newly created sequences use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvStorage {
+    /// Full `[L, H, S, Dh]` buffers per lane (the reference/oracle path).
+    Contiguous,
+    /// Block tables over a shared [`BlockPool`] with copy-on-write forking.
+    Paged,
+}
+
+impl KvStorage {
+    /// Process-wide default storage: contiguous, unless `SPECDELAY_PAGED_KV`
+    /// is set to `1`/`true` (the paged hot path). Read once and cached —
+    /// mirrors [`DistStorage::global`](crate::dist::DistStorage::global).
+    pub fn global() -> KvStorage {
+        static STORAGE: OnceLock<KvStorage> = OnceLock::new();
+        *STORAGE.get_or_init(|| {
+            KvStorage::from_env_value(std::env::var("SPECDELAY_PAGED_KV").ok().as_deref())
+        })
+    }
+
+    /// Parse the `SPECDELAY_PAGED_KV` value (`1`/`true` → paged); factored
+    /// out so the knob's parsing is unit-testable despite the cached global.
+    pub fn from_env_value(value: Option<&str>) -> KvStorage {
+        let paged = value
+            .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
+            .unwrap_or(false);
+        if paged {
+            KvStorage::Paged
+        } else {
+            KvStorage::Contiguous
+        }
+    }
+}
+
+/// Default tokens per block: 16, unless `SPECDELAY_KV_BLOCK` overrides it
+/// (values < 1 are ignored). Read once and cached.
+pub fn default_block_tokens() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        std::env::var("SPECDELAY_KV_BLOCK")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or(16)
+    })
+}
+
+/// One fixed-size KV block: `block_tokens` rows of `[L, H, Dh]` keys and
+/// values, laid out `[L, H, T, Dh]`. Uniquely owned while being written;
+/// shared (refcount > 1) after a copy-on-write fork.
+pub(crate) struct KvBlock {
+    pub(crate) k: Vec<f32>,
+    pub(crate) v: Vec<f32>,
+}
+
+impl KvBlock {
+    fn zeroed(elems: usize) -> KvBlock {
+        KvBlock { k: vec![0.0; elems], v: vec![0.0; elems] }
+    }
+
+    fn zero(&mut self) {
+        self.k.fill(0.0);
+        self.v.fill(0.0);
+    }
+
+    fn copy_from(&mut self, src: &KvBlock) {
+        self.k.copy_from_slice(&src.k);
+        self.v.copy_from_slice(&src.v);
+    }
+}
+
+/// Allocator metadata guarded by the pool mutex. Block *data* is never
+/// behind the lock — reads deref shared [`Arc`]s and writes go through
+/// uniquely owned blocks — so the lock is held only for free-list pushes,
+/// pops and the accounting counters.
+struct PoolInner {
+    /// Recycled blocks, each uniquely owned by this list.
+    free: Vec<Arc<KvBlock>>,
+    /// Unique blocks ever created (monotone).
+    created: usize,
+    /// Unique blocks currently held by caches (`created - free.len()`).
+    live: usize,
+    /// High-water mark of `live` (bench: peak resident blocks).
+    peak_live: usize,
+}
+
+/// A shared pool of fixed-size KV blocks for one model's dimensions.
+///
+/// Every [`PagedKvCache`] lane of a serving loop draws from (and returns
+/// to) one pool, so total resident memory is proportional to the *unique*
+/// tokens across all lanes — shared prefixes are counted once. With
+/// `max_blocks` set, allocation fails once the budget is exhausted; the
+/// batched [`ServeLoop`](crate::coordinator::ServeLoop) sizes lane
+/// admission against this budget so in-flight lanes never hit the cap
+/// (out-of-blocks backpressure queues requests instead).
+pub struct BlockPool {
+    dims: ModelDims,
+    block_tokens: usize,
+    block_elems: usize,
+    max_blocks: Option<usize>,
+    inner: Mutex<PoolInner>,
+    /// Read-only zero block backing reads of unallocated table slots.
+    zero: KvBlock,
+}
+
+impl BlockPool {
+    /// A pool of `[L, H, block_tokens, Dh]` blocks for `dims`, optionally
+    /// capped at `max_blocks` unique blocks. `block_tokens` is clamped to
+    /// at least 1.
+    pub fn new(dims: ModelDims, block_tokens: usize, max_blocks: Option<usize>) -> Arc<BlockPool> {
+        let bt = block_tokens.max(1);
+        let block_elems = dims.n_layers * dims.n_heads * bt * dims.d_head;
+        Arc::new(BlockPool {
+            dims,
+            block_tokens: bt,
+            block_elems,
+            max_blocks,
+            inner: Mutex::new(PoolInner { free: Vec::new(), created: 0, live: 0, peak_live: 0 }),
+            zero: KvBlock::zeroed(block_elems),
+        })
+    }
+
+    /// Model dimensions this pool's blocks are sized for.
+    pub fn dims(&self) -> ModelDims {
+        self.dims
+    }
+
+    /// Tokens per block.
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    /// The budget, if this pool is capped.
+    pub fn max_blocks(&self) -> Option<usize> {
+        self.max_blocks
+    }
+
+    /// Blocks a full `max_seq`-row lane needs (the worst-case reservation
+    /// unit for admission control).
+    pub fn blocks_per_seq(&self) -> usize {
+        self.dims.max_seq.div_ceil(self.block_tokens)
+    }
+
+    /// Unique blocks ever created.
+    pub fn created(&self) -> usize {
+        self.inner.lock().unwrap().created
+    }
+
+    /// Blocks currently in the free list.
+    pub fn free_blocks(&self) -> usize {
+        self.inner.lock().unwrap().free.len()
+    }
+
+    /// Unique blocks currently held by caches.
+    pub fn live_blocks(&self) -> usize {
+        self.inner.lock().unwrap().live
+    }
+
+    /// High-water mark of [`BlockPool::live_blocks`].
+    pub fn peak_live_blocks(&self) -> usize {
+        self.inner.lock().unwrap().peak_live
+    }
+
+    /// Check the allocator invariants: `created == free + live`, and every
+    /// free-list block is referenced by nothing but the list itself (no
+    /// cache can read or fork a retired block). Returns a description of
+    /// the first violation, if any.
+    pub fn validate(&self) -> Result<(), String> {
+        let inner = self.inner.lock().unwrap();
+        if inner.created != inner.free.len() + inner.live {
+            return Err(format!(
+                "block conservation violated: created {} != free {} + live {}",
+                inner.created,
+                inner.free.len(),
+                inner.live
+            ));
+        }
+        for (i, b) in inner.free.iter().enumerate() {
+            let rc = Arc::strong_count(b);
+            if rc != 1 {
+                return Err(format!("free block {i} still referenced (strong_count {rc})"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Pop a recycled block or create a fresh one; `None` when a capped
+    /// pool is exhausted. The returned block is zeroed (matching the
+    /// zero-initialised contiguous buffers) and uniquely owned.
+    pub(crate) fn try_alloc_zeroed(&self) -> Option<Arc<KvBlock>> {
+        let mut blk = self.pop_or_create()?;
+        Arc::get_mut(&mut blk).expect("pool blocks are uniquely owned at alloc").zero();
+        Some(blk)
+    }
+
+    /// Like [`BlockPool::try_alloc_zeroed`] but initialised as a copy of
+    /// `src` (the copy-on-write fork path — zeroing first would be wasted).
+    pub(crate) fn try_alloc_copy(&self, src: &KvBlock) -> Option<Arc<KvBlock>> {
+        let mut blk = self.pop_or_create()?;
+        Arc::get_mut(&mut blk).expect("pool blocks are uniquely owned at alloc").copy_from(src);
+        Some(blk)
+    }
+
+    /// Allocation decision + accounting under the lock; block data is
+    /// initialised by the callers after the lock is released.
+    fn pop_or_create(&self) -> Option<Arc<KvBlock>> {
+        let mut inner = self.inner.lock().unwrap();
+        let blk = match inner.free.pop() {
+            Some(b) => b,
+            None => {
+                if let Some(max) = self.max_blocks {
+                    if inner.created >= max {
+                        return None;
+                    }
+                }
+                inner.created += 1;
+                Arc::new(KvBlock::zeroed(self.block_elems))
+            }
+        };
+        inner.live += 1;
+        inner.peak_live = inner.peak_live.max(inner.live);
+        Some(blk)
+    }
+
+    /// Panicking wrapper for the cache write path: exhaustion here means
+    /// the caller admitted more work than it reserved blocks for.
+    pub(crate) fn alloc_zeroed(&self) -> Arc<KvBlock> {
+        self.try_alloc_zeroed().unwrap_or_else(|| self.exhausted())
+    }
+
+    pub(crate) fn alloc_copy(&self, src: &KvBlock) -> Arc<KvBlock> {
+        self.try_alloc_copy(src).unwrap_or_else(|| self.exhausted())
+    }
+
+    fn exhausted(&self) -> ! {
+        panic!(
+            "kv block pool exhausted (budget {:?} blocks of {} tokens): \
+             lane admission must reserve worst-case blocks before writing",
+            self.max_blocks, self.block_tokens
+        )
+    }
+
+    /// Return one table reference. If it was the last reference the block
+    /// is recycled onto the free list; otherwise the refcount just drops.
+    /// The drop happens under the pool lock so two racing releases of the
+    /// same block cannot both observe "still shared" and leak it.
+    pub(crate) fn release(&self, blk: Arc<KvBlock>) {
+        let mut inner = self.inner.lock().unwrap();
+        if Arc::strong_count(&blk) == 1 {
+            inner.live -= 1;
+            inner.free.push(blk);
+        } else {
+            drop(blk);
+        }
+    }
+}
+
+/// One sequence's KV lane as a copy-on-write block table over a shared
+/// [`BlockPool`]. See the module docs for layout and forking semantics.
+pub struct PagedKvCache {
+    pool: Arc<BlockPool>,
+    /// One slot per `block_tokens` positions; `None` reads as zeros.
+    table: Vec<Option<Arc<KvBlock>>>,
+    /// Committed rows, i.e. where the next row will be written.
+    len: usize,
+}
+
+impl Clone for PagedKvCache {
+    /// Fork the whole lane: shares every block (refcount bumps, no row
+    /// copies); the first write to either copy forks the touched block.
+    fn clone(&self) -> PagedKvCache {
+        PagedKvCache { pool: Arc::clone(&self.pool), table: self.table.clone(), len: self.len }
+    }
+}
+
+impl Drop for PagedKvCache {
+    /// Retiring a lane returns every block reference to its pool, so the
+    /// last lane holding a block recycles it onto the free list.
+    fn drop(&mut self) {
+        for slot in self.table.iter_mut() {
+            if let Some(blk) = slot.take() {
+                self.pool.release(blk);
+            }
+        }
+    }
+}
+
+impl PagedKvCache {
+    /// An empty lane over `pool` (no blocks allocated until first write).
+    pub fn new(pool: &Arc<BlockPool>) -> PagedKvCache {
+        let slots = pool.dims.max_seq.div_ceil(pool.block_tokens);
+        PagedKvCache { pool: Arc::clone(pool), table: vec![None; slots], len: 0 }
+    }
+
+    /// Model dimensions fixing the logical `[L, H, S, Dh]` layout.
+    pub fn dims(&self) -> ModelDims {
+        self.pool.dims
+    }
+
+    /// The pool this lane draws from.
+    pub fn pool(&self) -> &Arc<BlockPool> {
+        &self.pool
+    }
+
+    /// Number of committed rows.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether no rows are committed.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Allocated table slots (resident blocks referenced by this lane).
+    pub fn resident_blocks(&self) -> usize {
+        self.table.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Resident blocks currently shared with another lane (refcount > 1) —
+    /// the copy-on-write savings this lane enjoys.
+    pub fn cow_shared_blocks(&self) -> usize {
+        self.table.iter().flatten().filter(|b| Arc::strong_count(b) > 1).count()
+    }
+
+    #[inline]
+    fn block_tokens(&self) -> usize {
+        self.pool.block_tokens
+    }
+
+    /// Offset of `(layer, head, t)` inside a block's `[L, H, T, Dh]` data.
+    #[inline]
+    fn block_offset(&self, layer: usize, head: usize, t: usize) -> usize {
+        ((layer * self.pool.dims.n_heads + head) * self.pool.block_tokens + t)
+            * self.pool.dims.d_head
+    }
+
+    /// Read the `d_head` K/V slices at `(layer, head, pos)`. Unallocated
+    /// blocks read as zeros, exactly like a zero-initialised contiguous
+    /// cache.
+    #[inline]
+    pub fn row(&self, layer: usize, head: usize, pos: usize) -> (&[f32], &[f32]) {
+        let bt = self.block_tokens();
+        let blk: &KvBlock = match &self.table[pos / bt] {
+            Some(b) => b,
+            None => &self.pool.zero,
+        };
+        let off = self.block_offset(layer, head, pos % bt);
+        let dh = self.pool.dims.d_head;
+        (&blk.k[off..off + dh], &blk.v[off..off + dh])
+    }
+
+    /// Unique write access to block `bi`, allocating on first touch and
+    /// forking (one block copy off the free list) when the block is shared.
+    fn block_mut(&mut self, bi: usize) -> &mut KvBlock {
+        enum Need {
+            Ready,
+            Alloc,
+            Fork,
+        }
+        let need = match &self.table[bi] {
+            None => Need::Alloc,
+            Some(b) if Arc::strong_count(b) > 1 => Need::Fork,
+            Some(_) => Need::Ready,
+        };
+        match need {
+            Need::Alloc => self.table[bi] = Some(self.pool.alloc_zeroed()),
+            Need::Fork => {
+                let fresh = self.pool.alloc_copy(self.table[bi].as_deref().unwrap());
+                let old = std::mem::replace(&mut self.table[bi], Some(fresh)).unwrap();
+                self.pool.release(old);
+            }
+            Need::Ready => {}
+        }
+        Arc::get_mut(self.table[bi].as_mut().unwrap())
+            .expect("block uniquely owned after copy-on-write")
+    }
+
+    /// Raw single-(layer, head) row write — the cross-storage fallback path
+    /// of [`KvCache::copy_prefix_from`](super::KvCache::copy_prefix_from).
+    pub(crate) fn write_row(&mut self, layer: usize, head: usize, pos: usize, k: &[f32], v: &[f32]) {
+        let bt = self.block_tokens();
+        let off = self.block_offset(layer, head, pos % bt);
+        let dh = self.pool.dims.d_head;
+        let blk = self.block_mut(pos / bt);
+        blk.k[off..off + dh].copy_from_slice(k);
+        blk.v[off..off + dh].copy_from_slice(v);
+    }
+
+    /// Overwrite the committed-row count (cross-storage fallback path).
+    pub(crate) fn set_len(&mut self, len: usize) {
+        self.len = len;
+    }
+
+    /// Commit prefill rows laid out `[L, H, s_pre, Dh]` for positions
+    /// `0..len` — one span copy per (block, layer, head).
+    pub fn commit_prefill(&mut self, k_rows: &[f32], v_rows: &[f32], s_pre: usize, len: usize) {
+        let (lyr, h, dh) = (self.pool.dims.n_layers, self.pool.dims.n_heads, self.pool.dims.d_head);
+        assert_eq!(k_rows.len(), lyr * h * s_pre * dh);
+        let bt = self.block_tokens();
+        let mut pos = 0usize;
+        while pos < len {
+            let bi = pos / bt;
+            let t = pos % bt;
+            let run = (len - pos).min(bt - t);
+            let block_off = |l: usize, hh: usize| ((l * h + hh) * bt + t) * dh;
+            let blk = self.block_mut(bi);
+            for l in 0..lyr {
+                for hh in 0..h {
+                    let src = ((l * h + hh) * s_pre + pos) * dh;
+                    let dst = block_off(l, hh);
+                    blk.k[dst..dst + run * dh].copy_from_slice(&k_rows[src..src + run * dh]);
+                    blk.v[dst..dst + run * dh].copy_from_slice(&v_rows[src..src + run * dh]);
+                }
+            }
+            pos += run;
+        }
+        self.len = len;
+    }
+
+    /// Commit one row laid out `[L, H, Dh]` at `pos`.
+    pub fn commit_row(&mut self, k_row: &[f32], v_row: &[f32], pos: usize) {
+        let (lyr, h, dh) = (self.pool.dims.n_layers, self.pool.dims.n_heads, self.pool.dims.d_head);
+        assert_eq!(k_row.len(), lyr * h * dh);
+        let bt = self.block_tokens();
+        let t = pos % bt;
+        let dst_head_stride = bt * dh;
+        let blk = self.block_mut(pos / bt);
+        for l in 0..lyr {
+            let mut src = l * h * dh;
+            let mut dst = ((l * h) * bt + t) * dh;
+            for _hh in 0..h {
+                blk.k[dst..dst + dh].copy_from_slice(&k_row[src..src + dh]);
+                blk.v[dst..dst + dh].copy_from_slice(&v_row[src..src + dh]);
+                src += dh;
+                dst += dst_head_stride;
+            }
+        }
+        self.len = self.len.max(pos + 1);
+    }
+
+    /// Commit rollout rows `[Lyr, K, L, H, Dh]`: path `branch`, steps
+    /// `0..=last_step`, at positions `base_pos + step` — the paged twin of
+    /// [`ContiguousKv::commit_rollout_rows`](super::ContiguousKv::commit_rollout_rows),
+    /// with the single-head span coalescing applied per block.
+    #[allow(clippy::too_many_arguments)]
+    pub fn commit_rollout_rows(
+        &mut self,
+        k_rows: &[f32],
+        v_rows: &[f32],
+        k_paths: usize,
+        l_steps: usize,
+        branch: usize,
+        last_step: usize,
+        base_pos: usize,
+    ) {
+        let (lyr, h, dh) = (self.pool.dims.n_layers, self.pool.dims.n_heads, self.pool.dims.d_head);
+        assert_eq!(k_rows.len(), lyr * k_paths * l_steps * h * dh);
+        let steps = last_step + 1;
+        let bt = self.block_tokens();
+        let src_step_stride = h * dh;
+        let mut step = 0usize;
+        while step < steps {
+            let pos = base_pos + step;
+            let bi = pos / bt;
+            let t = pos % bt;
+            let run = (steps - step).min(bt - t);
+            let blk = self.block_mut(bi);
+            for l in 0..lyr {
+                for hh in 0..h {
+                    let src0 = ((((l * k_paths + branch) * l_steps) + step) * h + hh) * dh;
+                    let dst0 = ((l * h + hh) * bt + t) * dh;
+                    if h == 1 {
+                        // src and dst both step-contiguous: one span copy
+                        let n = run * dh;
+                        blk.k[dst0..dst0 + n].copy_from_slice(&k_rows[src0..src0 + n]);
+                        blk.v[dst0..dst0 + n].copy_from_slice(&v_rows[src0..src0 + n]);
+                    } else {
+                        let (mut src, mut dst) = (src0, dst0);
+                        for _s in 0..run {
+                            blk.k[dst..dst + dh].copy_from_slice(&k_rows[src..src + dh]);
+                            blk.v[dst..dst + dh].copy_from_slice(&v_rows[src..src + dh]);
+                            src += src_step_stride;
+                            dst += dh;
+                        }
+                    }
+                }
+            }
+            step += run;
+        }
+        self.len = self.len.max(base_pos + steps);
+    }
+
+    /// Commit tree-pass rows `[Lyr, N, H, Dh]` for node `node_idx` at `pos`.
+    pub fn commit_tree_row(
+        &mut self,
+        k_rows: &[f32],
+        v_rows: &[f32],
+        n_bucket: usize,
+        node_idx: usize,
+        pos: usize,
+    ) {
+        let (lyr, h, dh) = (self.pool.dims.n_layers, self.pool.dims.n_heads, self.pool.dims.d_head);
+        assert_eq!(k_rows.len(), lyr * n_bucket * h * dh);
+        let bt = self.block_tokens();
+        let t = pos % bt;
+        let dst_head_stride = bt * dh;
+        let blk = self.block_mut(pos / bt);
+        for l in 0..lyr {
+            let mut src = (l * n_bucket + node_idx) * h * dh;
+            let mut dst = ((l * h) * bt + t) * dh;
+            for _hh in 0..h {
+                blk.k[dst..dst + dh].copy_from_slice(&k_rows[src..src + dh]);
+                blk.v[dst..dst + dh].copy_from_slice(&v_rows[src..src + dh]);
+                src += dh;
+                dst += dst_head_stride;
+            }
+        }
+        self.len = self.len.max(pos + 1);
+    }
+
+    /// Refresh this lane as a prefix fork of `src`: blocks covering rows
+    /// `< rows` are *shared* (refcount bumps — no row copies; the first
+    /// divergent write forks), blocks past the prefix are released back to
+    /// the pool. Rows past the prefix inside the boundary block keep the
+    /// source's contents and **must not be read** — the same contract as
+    /// the contiguous [`copy_prefix_from`](super::ContiguousKv::copy_prefix_from).
+    ///
+    /// Lanes on different pools (same dims) fall back to a deep row copy.
+    pub fn copy_prefix_from(&mut self, src: &PagedKvCache, rows: usize) {
+        debug_assert_eq!(
+            self.pool.dims.kv_elems(),
+            src.pool.dims.kv_elems(),
+            "prefix copy across dims"
+        );
+        let rows = rows.min(self.pool.dims.max_seq);
+        if Arc::ptr_eq(&self.pool, &src.pool) {
+            let nb = rows.div_ceil(self.block_tokens());
+            for (bi, slot) in self.table.iter_mut().enumerate() {
+                let share = if bi < nb { src.table[bi].clone() } else { None };
+                let old = std::mem::replace(slot, share);
+                if let Some(blk) = old {
+                    self.pool.release(blk);
+                }
+            }
+        } else {
+            // cross-pool: deep copy row by row (cold path, kept for safety)
+            let (lyr, h, dh) =
+                (self.pool.dims.n_layers, self.pool.dims.n_heads, self.pool.dims.d_head);
+            let bt = self.block_tokens();
+            for pos in 0..rows {
+                let t = pos % bt;
+                let bi = pos / bt;
+                for l in 0..lyr {
+                    for hh in 0..h {
+                        let (ks, vs) = src.row(l, hh, pos);
+                        let (ks, vs) = (ks.to_vec(), vs.to_vec());
+                        let off = ((l * h + hh) * bt + t) * dh;
+                        let blk = self.block_mut(bi);
+                        blk.k[off..off + dh].copy_from_slice(&ks);
+                        blk.v[off..off + dh].copy_from_slice(&vs);
+                    }
+                }
+            }
+            for slot in self.table.iter_mut().skip(rows.div_ceil(bt)) {
+                if let Some(blk) = slot.take() {
+                    self.pool.release(blk);
+                }
+            }
+        }
+        self.len = src.len.min(rows);
+    }
+
+    /// Forked lane holding only rows `< rows` — O(prefix blocks) refcount
+    /// bumps, no row copies.
+    pub fn clone_prefix(&self, rows: usize) -> PagedKvCache {
+        let mut out = PagedKvCache::new(&self.pool);
+        out.copy_prefix_from(self, rows);
+        out
+    }
+
+    /// Materialise the full `[L, H, S, Dh]` contiguous buffers (zeros where
+    /// unallocated) — the gather shim the PJRT engine uses to feed compiled
+    /// modules that expect contiguous host caches.
+    pub fn gather(&self) -> (Vec<f32>, Vec<f32>) {
+        let d = self.pool.dims;
+        let (lyr, h, dh, s) = (d.n_layers, d.n_heads, d.d_head, d.max_seq);
+        let bt = self.block_tokens();
+        let mut k = vec![0.0f32; d.kv_elems()];
+        let mut v = vec![0.0f32; d.kv_elems()];
+        for (bi, slot) in self.table.iter().enumerate() {
+            let Some(blk) = slot else { continue };
+            let t0 = bi * bt;
+            let run = bt.min(s - t0);
+            for l in 0..lyr {
+                for hh in 0..h {
+                    let src = ((l * h + hh) * bt) * dh;
+                    let dst = ((l * h + hh) * s + t0) * dh;
+                    k[dst..dst + run * dh].copy_from_slice(&blk.k[src..src + run * dh]);
+                    v[dst..dst + run * dh].copy_from_slice(&blk.v[src..src + run * dh]);
+                }
+            }
+        }
+        (k, v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> ModelDims {
+        ModelDims { n_layers: 2, d_model: 8, n_heads: 2, d_head: 4, vocab: 10, max_seq: 16 }
+    }
+
+    #[test]
+    fn lazy_alloc_and_zero_reads() {
+        let pool = BlockPool::new(dims(), 4, None);
+        let c = PagedKvCache::new(&pool);
+        assert_eq!(pool.created(), 0);
+        assert_eq!(c.resident_blocks(), 0);
+        let (k, v) = c.row(1, 1, 7);
+        assert_eq!(k, &[0.0; 4]);
+        assert_eq!(v, &[0.0; 4]);
+        pool.validate().unwrap();
+    }
+
+    #[test]
+    fn commit_row_allocates_one_block() {
+        let pool = BlockPool::new(dims(), 4, None);
+        let mut c = PagedKvCache::new(&pool);
+        let row: Vec<f32> = (0..16).map(|x| x as f32).collect(); // [2,2,4]
+        c.commit_row(&row, &row, 5); // block 1
+        assert_eq!(c.len(), 6);
+        assert_eq!(c.resident_blocks(), 1);
+        assert_eq!(pool.live_blocks(), 1);
+        // layer 1, head 1 slice = row[12..16]
+        let (k, _) = c.row(1, 1, 5);
+        assert_eq!(k, &[12.0, 13.0, 14.0, 15.0]);
+        // neighbours in the same block read zero
+        let (k, _) = c.row(1, 1, 4);
+        assert_eq!(k, &[0.0; 4]);
+        pool.validate().unwrap();
+    }
+
+    #[test]
+    fn cow_fork_shares_until_write() {
+        let pool = BlockPool::new(dims(), 4, None);
+        let mut a = PagedKvCache::new(&pool);
+        let row: Vec<f32> = (0..16).map(|x| x as f32 + 1.0).collect();
+        for pos in 0..6 {
+            a.commit_row(&row, &row, pos);
+        }
+        assert_eq!(pool.live_blocks(), 2);
+        let mut b = a.clone_prefix(6);
+        // sharing: no new blocks, both lanes fully resident
+        assert_eq!(pool.live_blocks(), 2);
+        assert_eq!(b.cow_shared_blocks(), 2);
+        assert_eq!(b.len(), 6);
+        // first divergent write forks exactly the touched block
+        let row2: Vec<f32> = (0..16).map(|x| x as f32 * 2.0).collect();
+        b.commit_row(&row2, &row2, 5);
+        assert_eq!(pool.live_blocks(), 3);
+        assert_eq!(b.cow_shared_blocks(), 1);
+        // a unaffected; b sees old rows + the new write
+        let (ka, _) = a.row(0, 0, 5);
+        assert_eq!(ka, &row[..4]);
+        let (kb, _) = b.row(0, 0, 5);
+        assert_eq!(kb, &row2[..4]);
+        let (kb4, _) = b.row(0, 0, 4);
+        assert_eq!(kb4, &row[..4], "fork preserves the rest of the block");
+        pool.validate().unwrap();
+    }
+
+    #[test]
+    fn retire_returns_blocks_to_free_list() {
+        let pool = BlockPool::new(dims(), 4, None);
+        let mut a = PagedKvCache::new(&pool);
+        let row = vec![1.0f32; 16];
+        for pos in 0..8 {
+            a.commit_row(&row, &row, pos);
+        }
+        let b = a.clone();
+        assert_eq!(pool.live_blocks(), 2);
+        drop(a);
+        assert_eq!(pool.live_blocks(), 2, "blocks still held by the clone");
+        assert_eq!(pool.free_blocks(), 0);
+        drop(b);
+        assert_eq!(pool.live_blocks(), 0);
+        assert_eq!(pool.free_blocks(), 2);
+        pool.validate().unwrap();
+        // recycled blocks come back zeroed
+        let mut c = PagedKvCache::new(&pool);
+        c.commit_row(&row, &row, 0);
+        assert_eq!(pool.created(), 2, "reuse, not growth");
+        let (k, _) = c.row(0, 0, 1);
+        assert_eq!(k, &[0.0; 4]);
+    }
+
+    #[test]
+    fn budget_exhaustion_fails_cleanly() {
+        let pool = BlockPool::new(dims(), 4, Some(1));
+        assert!(pool.try_alloc_zeroed().is_some());
+        assert!(pool.try_alloc_zeroed().is_none(), "budget must cap creation");
+        // note: the first block is now live but unreachable by any cache —
+        // this is a raw-allocator test, not a cache-lifecycle test
+    }
+
+    #[test]
+    fn copy_prefix_releases_tail_blocks() {
+        let pool = BlockPool::new(dims(), 4, None);
+        let mut a = PagedKvCache::new(&pool);
+        let row = vec![3.0f32; 16];
+        for pos in 0..12 {
+            a.commit_row(&row, &row, pos);
+        }
+        let mut b = a.clone();
+        assert_eq!(pool.live_blocks(), 3);
+        b.copy_prefix_from(&a, 5); // keeps blocks 0..2 shared, drops block 2's tail ref
+        assert_eq!(b.len(), 5);
+        assert_eq!(b.resident_blocks(), 2);
+        assert_eq!(pool.live_blocks(), 3, "a still holds all three");
+        drop(a);
+        assert_eq!(pool.live_blocks(), 2);
+        assert_eq!(pool.free_blocks(), 1);
+        pool.validate().unwrap();
+    }
+
+    #[test]
+    fn gather_matches_rows() {
+        let d = dims();
+        let pool = BlockPool::new(d, 3, None); // uneven block size
+        let mut c = PagedKvCache::new(&pool);
+        let n = d.n_layers * d.n_heads * d.d_head;
+        for pos in [0usize, 4, 7] {
+            let row: Vec<f32> = (0..n).map(|x| (x + pos * 100) as f32).collect();
+            c.commit_row(&row, &row, pos);
+        }
+        let (k, v) = c.gather();
+        assert_eq!(k.len(), d.kv_elems());
+        for l in 0..d.n_layers {
+            for hh in 0..d.n_heads {
+                for pos in 0..d.max_seq {
+                    let (rk, rv) = c.row(l, hh, pos);
+                    let off = ((l * d.n_heads + hh) * d.max_seq + pos) * d.d_head;
+                    assert_eq!(&k[off..off + d.d_head], rk, "l={l} h={hh} p={pos}");
+                    assert_eq!(&v[off..off + d.d_head], rv);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn storage_knob_parsing() {
+        assert_eq!(KvStorage::from_env_value(None), KvStorage::Contiguous);
+        assert_eq!(KvStorage::from_env_value(Some("0")), KvStorage::Contiguous);
+        assert_eq!(KvStorage::from_env_value(Some("1")), KvStorage::Paged);
+        assert_eq!(KvStorage::from_env_value(Some("true")), KvStorage::Paged);
+        assert_eq!(KvStorage::from_env_value(Some("TRUE")), KvStorage::Paged);
+    }
+}

@@ -15,15 +15,20 @@
 //!
 //! The method surface is exactly the compiled-module interface of the AOT
 //! artifacts (see `python/compile/model.py`): KV caches are caller-owned
-//! host arrays in the canonical `[L, H, S, Dh]` layout, every call is pure
-//! (new KV rows come back as outputs and are committed by the caller via
-//! [`crate::kvcache::KvCache`]), and all randomness is injected by the
-//! caller (rollouts sample from caller-supplied uniforms), so any backend
-//! is exactly reproducible given a seed.
+//! host lanes passed as a read-only [`KvRef`] view — either flat
+//! `[L, H, S, Dh]` buffers or a paged block table
+//! ([`crate::kvcache::PagedKvCache`]); the CPU backend gathers attention
+//! rows directly through the view (block tables included), while the PJRT
+//! engine materialises paged lanes into contiguous scratch before upload.
+//! Every call is pure (new KV rows come back as outputs and are committed
+//! by the caller via [`crate::kvcache::KvCache`]), and all randomness is
+//! injected by the caller (rollouts sample from caller-supplied uniforms),
+//! so any backend is exactly reproducible given a seed.
 
 use anyhow::Result;
 
 use super::{DecodeOut, FamilyMeta, ModelDims, PrefillOut, Role, RolloutOut, TreeOut};
+use crate::kvcache::KvRef;
 
 /// A model-execution backend for one target/draft family.
 ///
@@ -54,14 +59,7 @@ pub trait Backend: Send + Sync {
 
     /// One autoregressive step: `token` at position `pos`, attending to
     /// committed cache rows `< pos` plus itself.
-    fn decode(
-        &self,
-        role: Role,
-        k_cache: &[f32],
-        v_cache: &[f32],
-        token: u32,
-        pos: usize,
-    ) -> Result<DecodeOut>;
+    fn decode(&self, role: Role, kv: KvRef<'_>, token: u32, pos: usize) -> Result<DecodeOut>;
 
     /// Fused draft rollout (draft model only): `k` i.i.d. continuation
     /// paths of `l` steps from `token` at `pos`. Sampling (temperature +
@@ -75,8 +73,7 @@ pub trait Backend: Send + Sync {
         &self,
         k: usize,
         l: usize,
-        k_cache: &[f32],
-        v_cache: &[f32],
+        kv: KvRef<'_>,
         token: u32,
         pos: usize,
         uniforms: &[f32],
@@ -92,8 +89,7 @@ pub trait Backend: Send + Sync {
     fn tree_verify(
         &self,
         n_bucket: usize,
-        k_cache: &[f32],
-        v_cache: &[f32],
+        kv: KvRef<'_>,
         tokens: &[i32],
         positions: &[i32],
         bias: &[f32],

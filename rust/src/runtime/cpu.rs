@@ -33,6 +33,7 @@ use anyhow::{bail, Result};
 use super::backend::Backend;
 use super::{DecodeOut, FamilyMeta, ModelDims, PrefillOut, Role, RolloutOut, TreeOut};
 use crate::dist::SamplingConfig;
+use crate::kvcache::KvRef;
 use crate::util::Pcg64;
 
 /// Architecture + scale of one CPU reference model pair.
@@ -227,12 +228,16 @@ impl KeyBuf {
         self.n += 1;
     }
 
-    /// Gather cache position `s` of `layer` from the `[L, H, S, Dh]` cache.
-    fn push_cache_row(&mut self, kc: &[f32], vc: &[f32], dims: &ModelDims, layer: usize, s: usize) {
-        for hh in 0..dims.n_heads {
-            let off = ((layer * dims.n_heads + hh) * dims.max_seq + s) * dims.d_head;
-            self.k.extend_from_slice(&kc[off..off + dims.d_head]);
-            self.v.extend_from_slice(&vc[off..off + dims.d_head]);
+    /// Gather cache position `s` of `layer` through the KV view — offset
+    /// arithmetic for contiguous lanes, a block-table lookup for paged
+    /// lanes; either way the heads arrive in ascending order, so the
+    /// assembled key order (and therefore the forward pass) is
+    /// bit-identical across storages.
+    fn push_cache_row(&mut self, kv: KvRef<'_>, n_heads: usize, layer: usize, s: usize) {
+        for hh in 0..n_heads {
+            let (k, v) = kv.row(layer, hh, s);
+            self.k.extend_from_slice(k);
+            self.v.extend_from_slice(v);
         }
         self.n += 1;
     }
@@ -381,14 +386,13 @@ impl CpuModel {
         }
     }
 
-    /// One token at `pos`: attends committed cache rows `< cache_limit`,
-    /// then `n_own` in-flight path rows (per layer, `[r·H·Dh..]` slices of
-    /// `own_k`/`own_v`), then itself.
+    /// One token at `pos`: attends committed cache rows `< cache_limit`
+    /// (read through the KV view), then `n_own` in-flight path rows (per
+    /// layer, `[r·H·Dh..]` slices of `own_k`/`own_v`), then itself.
     #[allow(clippy::too_many_arguments)]
     fn step(
         &self,
-        k_cache: &[f32],
-        v_cache: &[f32],
+        kv: KvRef<'_>,
         cache_limit: usize,
         own_k: &[Vec<f32>],
         own_v: &[Vec<f32>],
@@ -419,7 +423,7 @@ impl CpuModel {
             rope(&mut k, self.dims.n_heads, self.dims.d_head, pos);
             keys.clear();
             for s in 0..cache_limit {
-                keys.push_cache_row(k_cache, v_cache, &self.dims, l, s);
+                keys.push_cache_row(kv, self.dims.n_heads, l, s);
             }
             for r in 0..n_own {
                 keys.push_row(&own_k[l][r * da..(r + 1) * da], &own_v[l][r * da..(r + 1) * da]);
@@ -463,7 +467,7 @@ impl CpuModel {
     /// `allowed(i, j)` (ascending; `allowed(i, i)` covers self-attention).
     fn batch(
         &self,
-        cache: Option<(&[f32], &[f32], usize)>,
+        cache: Option<(KvRef<'_>, usize)>,
         tokens: &[i32],
         positions: &[i32],
         allowed: &dyn Fn(usize, usize) -> bool,
@@ -500,9 +504,9 @@ impl CpuModel {
             }
             for i in 0..n {
                 keys.clear();
-                if let Some((kc, vc, limit)) = cache {
+                if let Some((kv, limit)) = cache {
                     for s in 0..limit {
-                        keys.push_cache_row(kc, vc, &self.dims, l, s);
+                        keys.push_cache_row(kv, self.dims.n_heads, l, s);
                     }
                 }
                 for j in 0..n {
@@ -599,14 +603,10 @@ impl CpuRefBackend {
         }
     }
 
-    fn check_cache(&self, role: Role, k_cache: &[f32], v_cache: &[f32]) -> Result<()> {
+    fn check_cache(&self, role: Role, kv: KvRef<'_>) -> Result<()> {
         let want = self.model(role).dims.kv_elems();
-        if k_cache.len() != want || v_cache.len() != want {
-            bail!(
-                "cpu-ref: cache size {}/{} != expected {want}",
-                k_cache.len(),
-                v_cache.len()
-            );
+        if let Err((klen, vlen)) = kv.check_elems(want) {
+            bail!("cpu-ref: cache size {klen}/{vlen} != expected {want}");
         }
         Ok(())
     }
@@ -656,21 +656,14 @@ impl Backend for CpuRefBackend {
         })
     }
 
-    fn decode(
-        &self,
-        role: Role,
-        k_cache: &[f32],
-        v_cache: &[f32],
-        token: u32,
-        pos: usize,
-    ) -> Result<DecodeOut> {
-        self.check_cache(role, k_cache, v_cache)?;
+    fn decode(&self, role: Role, kv: KvRef<'_>, token: u32, pos: usize) -> Result<DecodeOut> {
+        self.check_cache(role, kv)?;
         let m = self.model(role);
         if pos >= m.dims.max_seq {
             bail!("decode: position {pos} exceeds max_seq {}", m.dims.max_seq);
         }
         let no_rows: Vec<Vec<f32>> = vec![Vec::new(); m.dims.n_layers];
-        let out = m.step(k_cache, v_cache, pos, &no_rows, &no_rows, 0, token, pos);
+        let out = m.step(kv, pos, &no_rows, &no_rows, 0, token, pos);
         Ok(DecodeOut {
             logits: out.logits,
             hidden: out.hidden,
@@ -683,8 +676,7 @@ impl Backend for CpuRefBackend {
         &self,
         k: usize,
         l: usize,
-        k_cache: &[f32],
-        v_cache: &[f32],
+        kv: KvRef<'_>,
         token: u32,
         pos: usize,
         uniforms: &[f32],
@@ -697,7 +689,7 @@ impl Backend for CpuRefBackend {
         if k == 0 || l == 0 {
             bail!("rollout: k and l must be positive");
         }
-        self.check_cache(Role::Draft, k_cache, v_cache)?;
+        self.check_cache(Role::Draft, kv)?;
         let m = &self.draft;
         if pos + l > m.dims.max_seq {
             bail!("rollout: positions {pos}..{} exceed max_seq", pos + l);
@@ -719,7 +711,7 @@ impl Backend for CpuRefBackend {
                 (0..dims.n_layers).map(|_| Vec::with_capacity(l * da)).collect();
             let mut cur = token;
             for j in 0..l {
-                let out = m.step(k_cache, v_cache, pos, &own_k, &own_v, j, cur, pos + j);
+                let out = m.step(kv, pos, &own_k, &own_v, j, cur, pos + j);
                 for lyr in 0..dims.n_layers {
                     let src = lyr * da;
                     let dst = ((lyr * k + b) * l + j) * da;
@@ -744,8 +736,7 @@ impl Backend for CpuRefBackend {
     fn tree_verify(
         &self,
         n_bucket: usize,
-        k_cache: &[f32],
-        v_cache: &[f32],
+        kv: KvRef<'_>,
         tokens: &[i32],
         positions: &[i32],
         bias: &[f32],
@@ -757,12 +748,12 @@ impl Backend for CpuRefBackend {
         {
             bail!("tree_verify: shape mismatch for bucket {n_bucket}");
         }
-        self.check_cache(Role::Target, k_cache, v_cache)?;
+        self.check_cache(Role::Target, kv)?;
         let m = &self.target;
         if cache_len > m.dims.max_seq {
             bail!("tree_verify: cache_len {cache_len} exceeds max_seq");
         }
-        let out = m.batch(Some((k_cache, v_cache, cache_len)), tokens, positions, &|i, j| {
+        let out = m.batch(Some((kv, cache_len)), tokens, positions, &|i, j| {
             bias[i * n_bucket + j] > -1e29
         });
         Ok(TreeOut {
@@ -790,7 +781,7 @@ mod tests {
         let pre = be.prefill(Role::Target, &toks[..3], 3).unwrap();
         let mut cache = KvCache::new(be.dims(Role::Target));
         cache.commit_prefill(&pre.k_rows, &pre.v_rows, cfg.s_pre, 3);
-        let dec = be.decode(Role::Target, &cache.k, &cache.v, 7, 3).unwrap();
+        let dec = be.decode(Role::Target, cache.view(), 7, 3).unwrap();
         assert_eq!(full.logits, dec.logits, "prefill row vs incremental decode");
         assert_eq!(full.hidden, dec.hidden);
         // the decode's fresh KV row equals the full prefill's row at pos 3
@@ -819,9 +810,9 @@ mod tests {
         let d = be.dims(Role::Draft).d_model;
         let sampling = SamplingConfig::new(0.8, 0.9);
         let uni = [0.37f32, 0.81];
-        let ro = be.rollout(1, 2, &cache.k, &cache.v, 15, 2, &uni, 0.8, 0.9).unwrap();
+        let ro = be.rollout(1, 2, cache.view(), 15, 2, &uni, 0.8, 0.9).unwrap();
         // step 0 == a plain decode of the root token
-        let dec0 = be.decode(Role::Draft, &cache.k, &cache.v, 15, 2).unwrap();
+        let dec0 = be.decode(Role::Draft, cache.view(), 15, 2).unwrap();
         let mut idx = Vec::new();
         let mut probs0 = dec0.logits.clone();
         let _ = sampling.transform_logits(&mut probs0, &mut idx);
@@ -831,14 +822,14 @@ mod tests {
         // commit step 0's KV row; a plain decode then reproduces step 1
         let mut c2 = cache.clone();
         c2.commit_rollout_rows(&ro.k_rows, &ro.v_rows, 1, 2, 0, 0, 2);
-        let dec1 = be.decode(Role::Draft, &c2.k, &c2.v, t0 as u32, 3).unwrap();
+        let dec1 = be.decode(Role::Draft, c2.view(), t0 as u32, 3).unwrap();
         assert_eq!(&ro.hiddens[d..2 * d], &dec1.hidden[..]);
         let mut probs1 = dec1.logits.clone();
         let _ = sampling.transform_logits(&mut probs1, &mut idx);
         assert_eq!(&ro.dists[v..2 * v], &probs1[..], "rollout step-1 dist");
         // two branches share the step-0 context → identical step-0 dists
         let uni4 = [0.1f32, 0.6, 0.9, 0.2];
-        let rb = be.rollout(2, 2, &cache.k, &cache.v, 15, 2, &uni4, 0.8, 0.9).unwrap();
+        let rb = be.rollout(2, 2, cache.view(), 15, 2, &uni4, 0.8, 0.9).unwrap();
         assert_eq!(&rb.dists[..v], &rb.dists[2 * v..3 * v]);
     }
 
@@ -858,18 +849,18 @@ mod tests {
         let nb = 4;
         let (tt, tp) = tree.tokens_positions(nb, root_pos, 63);
         let bias = tree.attention_bias(nb);
-        let out = be.tree_verify(nb, &cache.k, &cache.v, &tt, &tp, &bias, root_pos).unwrap();
+        let out = be.tree_verify(nb, cache.view(), &tt, &tp, &bias, root_pos).unwrap();
         let v = be.dims(Role::Target).vocab;
         // node 0 == a plain decode of the root token
-        let dec0 = be.decode(Role::Target, &cache.k, &cache.v, 30, root_pos).unwrap();
+        let dec0 = be.decode(Role::Target, cache.view(), 30, root_pos).unwrap();
         assert_eq!(&out.logits[..v], &dec0.logits[..], "tree root vs decode");
         // deeper chain nodes == sequential decodes over committed rows
         let mut c2 = cache.clone();
         c2.commit_tree_row(&out.k_rows, &out.v_rows, nb, 0, root_pos);
-        let dec1 = be.decode(Role::Target, &c2.k, &c2.v, 12, root_pos + 1).unwrap();
+        let dec1 = be.decode(Role::Target, c2.view(), 12, root_pos + 1).unwrap();
         assert_eq!(&out.logits[a * v..(a + 1) * v], &dec1.logits[..]);
         c2.commit_tree_row(&out.k_rows, &out.v_rows, nb, a, root_pos + 1);
-        let dec2 = be.decode(Role::Target, &c2.k, &c2.v, 44, root_pos + 2).unwrap();
+        let dec2 = be.decode(Role::Target, c2.view(), 44, root_pos + 2).unwrap();
         assert_eq!(&out.logits[b * v..(b + 1) * v], &dec2.logits[..]);
     }
 
@@ -903,13 +894,73 @@ mod tests {
         assert_eq!(out.logits.len(), cfg.vocab);
     }
 
+    /// The backend must read paged lanes bit-identically to contiguous
+    /// ones: same committed rows → same gathered keys → same logits, KV
+    /// rows and hidden states, for decode, rollout and the tree pass.
+    #[test]
+    fn paged_cache_reads_bit_identical_to_contiguous() {
+        use crate::kvcache::BlockPool;
+
+        let cfg = CpuModelConfig::tiny();
+        let be = CpuRefBackend::new(&cfg, 6);
+        let toks = [5i32, 9, 3, 7];
+        for role in [Role::Target, Role::Draft] {
+            let pre = be.prefill(role, &toks, 4).unwrap();
+            let mut cont = KvCache::new(be.dims(role));
+            cont.commit_prefill(&pre.k_rows, &pre.v_rows, cfg.s_pre, 4);
+            // block size 3 cuts the 4-row prefix across two blocks
+            let pool = BlockPool::new(be.dims(role), 3, None);
+            let mut paged = KvCache::paged(&pool);
+            paged.commit_prefill(&pre.k_rows, &pre.v_rows, cfg.s_pre, 4);
+
+            let dc = be.decode(role, cont.view(), 7, 4).unwrap();
+            let dp = be.decode(role, paged.view(), 7, 4).unwrap();
+            assert_eq!(dc.logits, dp.logits, "decode logits diverge");
+            assert_eq!(dc.hidden, dp.hidden);
+            assert_eq!(dc.k_row, dp.k_row);
+            assert_eq!(dc.v_row, dp.v_row);
+        }
+        // draft rollout + target tree pass over the same two lanes
+        let pre = be.prefill(Role::Draft, &toks, 4).unwrap();
+        let mut cont = KvCache::new(be.dims(Role::Draft));
+        cont.commit_prefill(&pre.k_rows, &pre.v_rows, cfg.s_pre, 4);
+        let pool = BlockPool::new(be.dims(Role::Draft), 3, None);
+        let mut paged = KvCache::paged(&pool);
+        paged.commit_prefill(&pre.k_rows, &pre.v_rows, cfg.s_pre, 4);
+        let uni = [0.3f32, 0.7, 0.1, 0.9];
+        let rc = be.rollout(2, 2, cont.view(), 7, 4, &uni, 0.8, 0.9).unwrap();
+        let rp = be.rollout(2, 2, paged.view(), 7, 4, &uni, 0.8, 0.9).unwrap();
+        assert_eq!(rc.tokens, rp.tokens, "rollout tokens diverge");
+        assert_eq!(rc.dists, rp.dists);
+        assert_eq!(rc.k_rows, rp.k_rows);
+
+        let pre_t = be.prefill(Role::Target, &toks, 4).unwrap();
+        let mut cont_t = KvCache::new(be.dims(Role::Target));
+        cont_t.commit_prefill(&pre_t.k_rows, &pre_t.v_rows, cfg.s_pre, 4);
+        let pool_t = BlockPool::new(be.dims(Role::Target), 3, None);
+        let mut paged_t = KvCache::paged(&pool_t);
+        paged_t.commit_prefill(&pre_t.k_rows, &pre_t.v_rows, cfg.s_pre, 4);
+        let mut tree = DraftTree::new(7);
+        let a = tree.add_child(0, 12, Provenance::Trunk { step: 1 });
+        let _b = tree.add_child(a, 44, Provenance::Trunk { step: 2 });
+        let nb = 4;
+        let (tt, tp) = tree.tokens_positions(nb, 3, 63);
+        let bias = tree.attention_bias(nb);
+        let tc = be.tree_verify(nb, cont_t.view(), &tt, &tp, &bias, 3).unwrap();
+        let tpg = be.tree_verify(nb, paged_t.view(), &tt, &tp, &bias, 3).unwrap();
+        assert_eq!(tc.logits, tpg.logits, "tree-pass logits diverge");
+        assert_eq!(tc.k_rows, tpg.k_rows);
+    }
+
     #[test]
     fn shape_validation() {
         let cfg = CpuModelConfig::tiny();
         let be = CpuRefBackend::new(&cfg, 0);
         let too_long = vec![0i32; cfg.s_pre + 1];
         assert!(be.prefill(Role::Target, &too_long, cfg.s_pre + 1).is_err());
-        assert!(be.rollout(2, 2, &[], &[], 0, 0, &[0.5; 3], 1.0, 1.0).is_err());
-        assert!(be.decode(Role::Target, &[], &[], 0, 0).is_err());
+        let empty = crate::kvcache::KvRef::contiguous(be.dims(Role::Draft), &[], &[]);
+        assert!(be.rollout(2, 2, empty, 0, 0, &[0.5; 3], 1.0, 1.0).is_err());
+        let empty_t = crate::kvcache::KvRef::contiguous(be.dims(Role::Target), &[], &[]);
+        assert!(be.decode(Role::Target, empty_t, 0, 0).is_err());
     }
 }

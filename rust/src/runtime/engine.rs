@@ -282,9 +282,42 @@ impl Engine {
     }
 }
 
+/// Borrowed-or-gathered host buffers for one dispatch: contiguous views
+/// upload zero-copy, paged lanes are materialised into owned scratch first
+/// (compiled modules take flat `[L, H, S, Dh]` operands — the gather cost
+/// is the price of the compiled interface, paid per dispatch, and it is
+/// why the CPU reference backend reads block tables directly instead).
+enum HostKv<'a> {
+    Borrowed(&'a [f32], &'a [f32]),
+    Gathered(Vec<f32>, Vec<f32>),
+}
+
+impl<'a> HostKv<'a> {
+    fn resolve(kv: crate::kvcache::KvRef<'a>) -> HostKv<'a> {
+        match kv.as_contiguous() {
+            Some((k, v)) => HostKv::Borrowed(k, v),
+            None => match kv {
+                crate::kvcache::KvRef::Paged(p) => {
+                    let (k, v) = p.gather();
+                    HostKv::Gathered(k, v)
+                }
+                crate::kvcache::KvRef::Contiguous { .. } => unreachable!(),
+            },
+        }
+    }
+
+    fn slices(&self) -> (&[f32], &[f32]) {
+        match self {
+            HostKv::Borrowed(k, v) => (k, v),
+            HostKv::Gathered(k, v) => (k, v),
+        }
+    }
+}
+
 /// The PJRT engine exposes the same surface through the [`Backend`] seam
 /// the serving stack is written against; every method delegates to the
-/// inherent implementation above.
+/// inherent (contiguous-slice) implementation above, gathering paged lanes
+/// into contiguous scratch first.
 impl super::Backend for Engine {
     fn meta(&self) -> &FamilyMeta {
         &self.meta
@@ -301,11 +334,12 @@ impl super::Backend for Engine {
     fn decode(
         &self,
         role: Role,
-        k_cache: &[f32],
-        v_cache: &[f32],
+        kv: crate::kvcache::KvRef<'_>,
         token: u32,
         pos: usize,
     ) -> Result<DecodeOut> {
+        let host = HostKv::resolve(kv);
+        let (k_cache, v_cache) = host.slices();
         Engine::decode(self, role, k_cache, v_cache, token, pos)
     }
 
@@ -313,27 +347,29 @@ impl super::Backend for Engine {
         &self,
         k: usize,
         l: usize,
-        k_cache: &[f32],
-        v_cache: &[f32],
+        kv: crate::kvcache::KvRef<'_>,
         token: u32,
         pos: usize,
         uniforms: &[f32],
         temperature: f32,
         top_p: f32,
     ) -> Result<RolloutOut> {
+        let host = HostKv::resolve(kv);
+        let (k_cache, v_cache) = host.slices();
         Engine::rollout(self, k, l, k_cache, v_cache, token, pos, uniforms, temperature, top_p)
     }
 
     fn tree_verify(
         &self,
         n_bucket: usize,
-        k_cache: &[f32],
-        v_cache: &[f32],
+        kv: crate::kvcache::KvRef<'_>,
         tokens: &[i32],
         positions: &[i32],
         bias: &[f32],
         cache_len: usize,
     ) -> Result<TreeOut> {
+        let host = HostKv::resolve(kv);
+        let (k_cache, v_cache) = host.slices();
         Engine::tree_verify(self, n_bucket, k_cache, v_cache, tokens, positions, bias, cache_len)
     }
 }

@@ -410,8 +410,7 @@ fn draft_superset(
     let trunk = engine.rollout(
         1,
         L1_MAX,
-        &seq.draft_kv.k,
-        &seq.draft_kv.v,
+        seq.draft_kv.view(),
         root_token,
         root_pos,
         &uni,
@@ -448,8 +447,7 @@ fn draft_superset(
         let out = engine.rollout(
             K_MAX,
             L2_MAX,
-            &kv.k,
-            &kv.v,
+            kv.view(),
             start_tok,
             start_pos,
             &uni,
@@ -489,8 +487,7 @@ fn draft_superset(
     let bias = tree.attention_bias(n_bucket);
     let out = engine.tree_verify(
         n_bucket,
-        &seq.target_kv.k,
-        &seq.target_kv.v,
+        seq.target_kv.view(),
         &toks,
         &pos,
         &bias,

@@ -1,4 +1,5 @@
-//! Streaming statistics and lightweight histograms for metrics and benches.
+//! Streaming statistics, lightweight histograms, and the chi-square
+//! goodness-of-fit machinery the statistical losslessness suites use.
 
 /// Online mean/variance accumulator (Welford).
 #[derive(Clone, Debug, Default)]
@@ -143,6 +144,144 @@ pub fn fmt_mean_sem(r: &Running) -> String {
     format!("{:.2}±{:.2}", r.mean(), r.sem())
 }
 
+// ---------------------------------------------------------------------------
+// Chi-square goodness of fit
+// ---------------------------------------------------------------------------
+
+/// ln Γ(x) via the Lanczos approximation (g = 7, n = 9), accurate to
+/// ~1e-13 over the range the chi-square machinery needs.
+fn ln_gamma(x: f64) -> f64 {
+    const COEF: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1_259.139_216_722_402_8,
+        771.323_428_777_653_13,
+        -176.615_029_162_140_59,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_571_6e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    if x < 0.5 {
+        // reflection formula
+        let pi = std::f64::consts::PI;
+        (pi / (pi * x).sin()).ln() - ln_gamma(1.0 - x)
+    } else {
+        let x = x - 1.0;
+        let t = x + 7.5;
+        let mut a = COEF[0];
+        for (i, &c) in COEF.iter().enumerate().skip(1) {
+            a += c / (x + i as f64);
+        }
+        0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+    }
+}
+
+/// Regularized lower incomplete gamma P(a, x) by series expansion
+/// (converges fast for x < a + 1).
+fn gamma_p_series(a: f64, x: f64) -> f64 {
+    let mut ap = a;
+    let mut sum = 1.0 / a;
+    let mut del = sum;
+    for _ in 0..500 {
+        ap += 1.0;
+        del *= x / ap;
+        sum += del;
+        if del.abs() < sum.abs() * 1e-14 {
+            break;
+        }
+    }
+    sum * (-x + a * x.ln() - ln_gamma(a)).exp()
+}
+
+/// Regularized *upper* incomplete gamma Q(a, x) by Lentz's continued
+/// fraction (converges fast for x ≥ a + 1).
+fn gamma_q_contfrac(a: f64, x: f64) -> f64 {
+    let tiny = 1e-300;
+    let mut b = x + 1.0 - a;
+    let mut c = 1.0 / tiny;
+    let mut d = 1.0 / b.max(tiny);
+    let mut h = d;
+    for i in 1..500 {
+        let an = -(i as f64) * (i as f64 - a);
+        b += 2.0;
+        d = an * d + b;
+        if d.abs() < tiny {
+            d = tiny;
+        }
+        c = b + an / c;
+        if c.abs() < tiny {
+            c = tiny;
+        }
+        d = 1.0 / d;
+        let delta = d * c;
+        h *= delta;
+        if (delta - 1.0).abs() < 1e-14 {
+            break;
+        }
+    }
+    (-x + a * x.ln() - ln_gamma(a)).exp() * h
+}
+
+/// Survival function of the chi-square distribution: `P(X² ≥ stat)` with
+/// `dof` degrees of freedom — the p-value of a goodness-of-fit statistic.
+pub fn chi_square_sf(stat: f64, dof: usize) -> f64 {
+    if stat <= 0.0 || dof == 0 {
+        return 1.0;
+    }
+    let a = dof as f64 / 2.0;
+    let x = stat / 2.0;
+    let q = if x < a + 1.0 { 1.0 - gamma_p_series(a, x) } else { gamma_q_contfrac(a, x) };
+    q.clamp(0.0, 1.0)
+}
+
+/// Pearson goodness-of-fit statistic Σ (O−E)²/E over the given bins, with
+/// every bin whose expectation falls below `min_expected` pooled into one
+/// joint bin (the standard validity fix for sparse tails). If even the
+/// pooled remainder stays below `min_expected` it is folded into the
+/// smallest regular bin instead — the statistic never contains a term
+/// whose expectation violates the chi-square approximation. `expected` is
+/// taken as counts (probabilities already scaled by the sample size).
+/// Returns `(statistic, dof)` with `dof = effective_bins - 1`, or `None`
+/// when fewer than two effective bins remain.
+pub fn chi_square_stat(
+    observed: &[usize],
+    expected: &[f64],
+    min_expected: f64,
+) -> Option<(f64, usize)> {
+    assert_eq!(observed.len(), expected.len(), "bin count mismatch");
+    let mut bins: Vec<(f64, f64)> = Vec::new(); // (observed, expected)
+    let (mut pooled_obs, mut pooled_exp) = (0.0f64, 0.0f64);
+    for (&o, &e) in observed.iter().zip(expected) {
+        if e >= min_expected {
+            bins.push((o as f64, e));
+        } else {
+            pooled_obs += o as f64;
+            pooled_exp += e;
+        }
+    }
+    if pooled_exp >= min_expected {
+        bins.push((pooled_obs, pooled_exp));
+    } else if pooled_exp > 0.0 {
+        // undersized remainder: fold into the smallest regular bin
+        if let Some(min_bin) = bins.iter_mut().min_by(|a, b| a.1.total_cmp(&b.1)) {
+            min_bin.0 += pooled_obs;
+            min_bin.1 += pooled_exp;
+        }
+    }
+    if bins.len() < 2 {
+        return None;
+    }
+    let stat = bins
+        .iter()
+        .map(|&(o, e)| {
+            let d = o - e;
+            d * d / e
+        })
+        .sum();
+    Some((stat, bins.len() - 1))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -195,5 +334,57 @@ mod tests {
     fn histogram_empty_nan() {
         let h = Histogram::log_spaced(1e-6, 1.0, 8);
         assert!(h.quantile(0.5).is_nan());
+    }
+
+    /// Pin the chi-square survival function against standard critical
+    /// values (95th/99th percentiles from any chi-square table).
+    #[test]
+    fn chi_square_sf_known_quantiles() {
+        for (stat, dof, want) in [
+            (3.841f64, 1usize, 0.05f64),
+            (6.635, 1, 0.01),
+            (9.488, 4, 0.05),
+            (18.307, 10, 0.05),
+            (124.342, 100, 0.05),
+        ] {
+            let got = chi_square_sf(stat, dof);
+            assert!(
+                (got - want).abs() < 2e-4,
+                "sf({stat}, {dof}) = {got}, want ≈ {want}"
+            );
+        }
+        assert_eq!(chi_square_sf(0.0, 5), 1.0);
+        assert_eq!(chi_square_sf(-1.0, 5), 1.0);
+        // monotone decreasing in the statistic
+        let mut prev = 1.0;
+        for i in 1..40 {
+            let p = chi_square_sf(i as f64, 6);
+            assert!(p <= prev + 1e-15, "sf must be non-increasing");
+            prev = p;
+        }
+    }
+
+    #[test]
+    fn chi_square_stat_pools_sparse_bins() {
+        // uniform expectation, perfect observation: stat 0, dof n-1
+        let (s, dof) = chi_square_stat(&[10, 10, 10, 10], &[10.0; 4], 5.0).unwrap();
+        assert_eq!(s, 0.0);
+        assert_eq!(dof, 3);
+        // two tiny-expectation bins pool; the undersized remainder folds
+        // into a regular bin instead of standing alone with E < 5
+        let (s, dof) =
+            chi_square_stat(&[10, 10, 1, 1], &[10.0, 10.0, 1.0, 1.0], 5.0).unwrap();
+        assert_eq!(s, 0.0);
+        assert_eq!(dof, 1);
+        // a pooled remainder meeting the threshold stays its own bin
+        let (s, dof) =
+            chi_square_stat(&[10, 10, 3, 3], &[10.0, 10.0, 3.0, 3.0], 5.0).unwrap();
+        assert_eq!(s, 0.0);
+        assert_eq!(dof, 2);
+        // a single effective bin is untestable
+        assert!(chi_square_stat(&[10, 1], &[10.0, 0.1], 5.0).is_none());
+        // a real deviation registers
+        let (s, _) = chi_square_stat(&[30, 10], &[20.0, 20.0], 5.0).unwrap();
+        assert!((s - 10.0).abs() < 1e-12); // 100/20 + 100/20
     }
 }

@@ -1,0 +1,107 @@
+//! Shared seeded Monte-Carlo machinery for the statistical losslessness
+//! suites — the single entry point `tests/e2e_serve.rs` and
+//! `tests/losslessness.rs` previously hand-rolled three variants of:
+//!
+//! * [`replay_block_conditionals`] — replay one speculation block many
+//!   times from a cloned prefilled sequence on its own seeded rng stream,
+//!   collecting first-token counts and second-token conditional counts;
+//! * [`check_counts`] — the per-token binomial tolerance assertion
+//!   (5σ + slack) against an exact distribution;
+//! * [`assert_chi_square`] — the chi-square goodness-of-fit assertion over
+//!   the same counts (sparse bins pooled), powered by
+//!   [`specdelay::util::stats::chi_square_stat`].
+//!
+//! Sample counts are env-tunable via `SPECDELAY_MC_SAMPLES` so CI can
+//! smoke the suites cheaply without code changes.
+
+use std::collections::HashMap;
+
+use specdelay::coordinator::{Sequence, SpecEngine};
+use specdelay::draft::Action;
+use specdelay::util::stats::{chi_square_sf, chi_square_stat};
+use specdelay::util::Pcg64;
+use specdelay::verify::Verifier;
+
+/// Monte-Carlo sample count: `SPECDELAY_MC_SAMPLES` when set (and ≥ 1),
+/// otherwise `default`.
+pub fn mc_samples(default: usize) -> usize {
+    std::env::var("SPECDELAY_MC_SAMPLES")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(default)
+}
+
+/// First-token counts and second-token conditional counts from `n` block
+/// replays.
+pub struct BlockConditionals {
+    /// `counts[t]` = times token `t` was emitted first.
+    pub first: Vec<usize>,
+    /// `second[t1][t2]` = times `t2` followed a first token `t1`.
+    pub second: HashMap<u32, Vec<usize>>,
+}
+
+/// Replay one speculation block `n` times from the prefilled `base`
+/// sequence, each round on a fresh clone and the seeded rng stream
+/// `Pcg64::new(seed, round)`, and tally the emitted-stream conditionals.
+/// Deterministic given `(spec storage, verifier, action, seed, n)` — two
+/// storages that are bit-identical produce *equal* tallies.
+pub fn replay_block_conditionals(
+    spec: &SpecEngine<'_>,
+    base: &Sequence,
+    verifier: &dyn Verifier,
+    action: Action,
+    vocab: usize,
+    n: usize,
+    seed: u64,
+) -> BlockConditionals {
+    let mut first = vec![0usize; vocab];
+    let mut second: HashMap<u32, Vec<usize>> = HashMap::new();
+    for round in 0..n {
+        let mut seq = base.clone();
+        let mut rng = Pcg64::new(seed, round as u64);
+        let b = spec
+            .step(&mut seq, verifier, action, &mut rng)
+            .expect("block replay failed");
+        assert!(b.emitted >= 1, "{}: empty block", verifier.name());
+        let emitted = &seq.tokens[seq.prompt_len..];
+        first[emitted[0] as usize] += 1;
+        if emitted.len() >= 2 {
+            second.entry(emitted[0]).or_insert_with(|| vec![0; vocab])[emitted[1] as usize] += 1;
+        }
+    }
+    BlockConditionals { first, second }
+}
+
+/// Per-token binomial tolerance check: every empirical frequency must sit
+/// within 5σ + `slack` of the exact probability (the shared tolerance
+/// formula of the e2e and toy-LM losslessness suites).
+pub fn check_counts(label: &str, counts: &[usize], want: &[f32], n: usize, slack: f64) {
+    for (t, &c) in counts.iter().enumerate() {
+        let emp = c as f64 / n as f64;
+        let w = want[t] as f64;
+        let tol = 5.0 * (w * (1.0 - w) / n as f64).sqrt() + slack;
+        assert!(
+            (emp - w).abs() < tol,
+            "{label} token {t}: emp {emp:.4} vs target {w:.4} (n={n}, tol {tol:.4})"
+        );
+    }
+}
+
+/// Chi-square goodness-of-fit assertion: the counts' p-value against the
+/// exact distribution must stay above `p_floor` (bins with expectation
+/// < 5 pooled; silently passes when fewer than two effective bins remain —
+/// nothing to test). Under a correct sampler p-values are uniform, so a
+/// floor of 1e-6 false-fails one seeded run in a million while any real
+/// conditional bug drives the p-value to ~0 at these sample sizes.
+pub fn assert_chi_square(label: &str, counts: &[usize], want: &[f32], n: usize, p_floor: f64) {
+    let expected: Vec<f64> = want.iter().map(|&w| w as f64 * n as f64).collect();
+    let Some((stat, dof)) = chi_square_stat(counts, &expected, 5.0) else {
+        return;
+    };
+    let p = chi_square_sf(stat, dof);
+    assert!(
+        p > p_floor,
+        "{label}: chi-square {stat:.2} (dof {dof}) p = {p:.3e} below {p_floor:.0e} (n={n})"
+    );
+}

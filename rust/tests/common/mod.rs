@@ -1,15 +1,18 @@
 //! Shared support for the integration tests and the default-build benches:
 //! the counting global allocator, the synthetic delayed-tree workload
-//! (`tests/alloc_free.rs` + `benches/verify_hot.rs`), and the synthetic
+//! (`tests/alloc_free.rs` + `benches/verify_hot.rs`), the synthetic
 //! superset workload (`tests/selector_score.rs` +
-//! `benches/selector_score.rs`, see [`superset`]). Keeping these in one
-//! module guarantees the configuration the tests assert is exactly the one
-//! the benches measure.
+//! `benches/selector_score.rs`, see [`superset`]), and the seeded
+//! Monte-Carlo machinery of the statistical losslessness suites
+//! (`tests/e2e_serve.rs` + `tests/losslessness.rs`, see [`mc`]). Keeping
+//! these in one module guarantees the configuration the tests assert is
+//! exactly the one the benches measure.
 //!
 //! Each including binary uses a subset of these helpers, hence the
 //! module-wide dead_code allowance.
 #![allow(dead_code)]
 
+pub mod mc;
 pub mod superset;
 
 use std::alloc::{GlobalAlloc, Layout, System};

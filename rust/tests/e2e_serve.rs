@@ -16,16 +16,26 @@
 //!    p(.|prompt, t1), where both conditionals are computed exactly from
 //!    the backend itself.
 //! 3. **Batch equivalence** — `ServeLoop` token streams are bit-identical
-//!    across batch sizes and worker counts, and identical to serial
-//!    `SpecEngine::generate` calls on the same per-request rng streams.
+//!    across batch sizes, worker counts *and KV storages* (contiguous vs
+//!    paged, the oracle claim of `kvcache::paged`), and identical to
+//!    serial `SpecEngine::generate` calls on the same per-request rng
+//!    streams.
+//! 4. **Block backpressure** — oversubscribing a capped block pool queues
+//!    requests instead of failing them, streams stay bit-identical to an
+//!    uncapped run, and retiring lanes return every block to the free
+//!    list.
+
+mod common;
 
 use std::collections::HashMap;
 
+use common::mc::{check_counts, replay_block_conditionals};
 use specdelay::coordinator::{
     generate_autoregressive, FixedPolicy, ServeLoop, ServeRequest, SpecEngine,
 };
 use specdelay::dist::{Dist, SamplingConfig};
 use specdelay::draft::Action;
+use specdelay::kvcache::KvStorage;
 use specdelay::runtime::{Backend, CpuModelConfig, CpuRefBackend, Role};
 use specdelay::util::Pcg64;
 use specdelay::verify::all_verifiers;
@@ -59,21 +69,10 @@ fn greedy_spec_equals_autoregressive_all_verifiers() {
     }
 }
 
-fn check_counts(label: &str, counts: &[usize], want: &Dist, n: usize) {
-    for (t, &c) in counts.iter().enumerate() {
-        let emp = c as f64 / n as f64;
-        let w = want.0[t] as f64;
-        let tol = 5.0 * (w * (1.0 - w) / n as f64).sqrt() + 0.005;
-        assert!(
-            (emp - w).abs() < tol,
-            "{label} token {t}: emp {emp:.4} vs target {w:.4} (n={n}, tol {tol:.4})"
-        );
-    }
-}
-
 /// Monte-Carlo e2e losslessness: replay one speculation block many times
 /// from the same prefilled sequence and check the emitted-stream
-/// conditionals against the backend's exact target conditionals.
+/// conditionals against the backend's exact target conditionals (shared
+/// seeded-sampling machinery in `common::mc`).
 #[test]
 fn e2e_block_conditionals_follow_target_all_verifiers() {
     let backend = CpuRefBackend::new(&CpuModelConfig::tiny(), 3);
@@ -91,25 +90,25 @@ fn e2e_block_conditionals_follow_target_all_verifiers() {
     // exact second-token conditionals p(.|prompt, t1), computed lazily
     let mut cond: HashMap<u32, Dist> = HashMap::new();
 
-    let n = 1200usize;
+    let n = common::mc::mc_samples(1200);
     for (vi, verifier) in all_verifiers().into_iter().enumerate() {
-        let mut counts0 = vec![0usize; v];
-        let mut counts1: HashMap<u32, Vec<usize>> = HashMap::new();
-        for round in 0..n {
-            let mut seq = base.clone();
-            let mut rng = Pcg64::new(0xE2E + vi as u64, round as u64);
-            let b = spec
-                .step(&mut seq, verifier.as_ref(), Action::new(2, 1, 1), &mut rng)
-                .unwrap();
-            assert!(b.emitted >= 1, "{}: empty block", verifier.name());
-            let emitted = &seq.tokens[seq.prompt_len..];
-            counts0[emitted[0] as usize] += 1;
-            if emitted.len() >= 2 {
-                counts1.entry(emitted[0]).or_insert_with(|| vec![0; v])[emitted[1] as usize] += 1;
-            }
-        }
-        check_counts(&format!("{} first-token", verifier.name()), &counts0, &p0, n);
-        for (t1, c) in &counts1 {
+        let tallies = replay_block_conditionals(
+            &spec,
+            &base,
+            verifier.as_ref(),
+            Action::new(2, 1, 1),
+            v,
+            n,
+            0xE2E + vi as u64,
+        );
+        check_counts(
+            &format!("{} first-token", verifier.name()),
+            &tallies.first,
+            &p0.0,
+            n,
+            0.005,
+        );
+        for (t1, c) in &tallies.second {
             let total: usize = c.iter().sum();
             if total < 350 {
                 continue; // not enough conditional mass to test tightly
@@ -118,23 +117,25 @@ fn e2e_block_conditionals_follow_target_all_verifiers() {
                 // context = prompt + t1: decode t1 at the next position over
                 // the prompt-prefilled cache
                 let d = backend
-                    .decode(Role::Target, &base.target_kv.k, &base.target_kv.v, *t1, base.prompt_len)
+                    .decode(Role::Target, base.target_kv.view(), *t1, base.prompt_len)
                     .unwrap();
                 Dist::from_logits(&d.logits, sampling)
             });
             check_counts(
                 &format!("{} second-token|{t1}", verifier.name()),
                 c,
-                p1,
+                &p1.0,
                 total,
+                0.005,
             );
         }
     }
 }
 
-/// Per-request token streams must be bit-identical for every batch size
-/// and worker count, and identical to serial generation on the same
-/// per-request rng stream (`Pcg64::new(seed, id)`).
+/// Per-request token streams must be bit-identical for every batch size,
+/// worker count and KV storage (the paged cache is a bit-exact drop-in
+/// for the contiguous oracle), and identical to serial generation on the
+/// same per-request rng stream (`Pcg64::new(seed, id)`).
 #[test]
 fn batched_serving_matches_serial_generate() {
     let backend = CpuRefBackend::new(&CpuModelConfig::tiny(), 4);
@@ -144,7 +145,9 @@ fn batched_serving_matches_serial_generate() {
     let prompts = ["12*3= ", "9-4= ", "1,2,3,", "(5+5)/2= ", "0.5*8= ", "77+1= "];
     let max_new = 24;
 
-    let spec = SpecEngine::new(&backend, sampling);
+    // serial reference on contiguous storage — the oracle for everything
+    let spec =
+        SpecEngine::new(&backend, sampling).with_kv_storage(KvStorage::Contiguous);
     let mut reference = Vec::new();
     for (id, p) in prompts.iter().enumerate() {
         let mut rng = Pcg64::new(1234, id as u64);
@@ -153,26 +156,99 @@ fn batched_serving_matches_serial_generate() {
         reference.push((text, stats.tokens, stats.blocks));
     }
 
-    for batch in [1usize, 3, 8] {
-        for workers in [1usize, 4] {
-            let mut srv = ServeLoop::new(&backend, sampling, verifier.as_ref(), &policy, batch)
-                .with_workers(workers);
-            for p in &prompts {
-                srv.submit(ServeRequest { prompt: p.to_string(), max_new, seed: 1234 });
-            }
-            let outs = srv.run().unwrap();
-            assert_eq!(outs.len(), prompts.len());
-            for (o, (text, tokens, blocks)) in outs.iter().zip(&reference) {
-                assert!(o.error.is_none(), "lane {} failed: {:?}", o.id, o.error);
-                assert_eq!(
-                    &o.text, text,
-                    "stream diverged: batch {batch} workers {workers} id {}",
-                    o.id
-                );
-                assert_eq!(o.stats.tokens, *tokens);
-                assert_eq!(o.stats.blocks, *blocks);
+    for storage in [KvStorage::Contiguous, KvStorage::Paged] {
+        for batch in [1usize, 3, 8] {
+            for workers in [1usize, 4] {
+                let mut srv =
+                    ServeLoop::new(&backend, sampling, verifier.as_ref(), &policy, batch)
+                        .with_workers(workers)
+                        .with_kv_storage(storage);
+                for p in &prompts {
+                    srv.submit(ServeRequest { prompt: p.to_string(), max_new, seed: 1234 });
+                }
+                let outs = srv.run().unwrap();
+                assert_eq!(outs.len(), prompts.len());
+                for (o, (text, tokens, blocks)) in outs.iter().zip(&reference) {
+                    assert!(o.error.is_none(), "lane {} failed: {:?}", o.id, o.error);
+                    assert_eq!(
+                        &o.text, text,
+                        "stream diverged: storage {storage:?} batch {batch} workers {workers} id {}",
+                        o.id
+                    );
+                    assert_eq!(o.stats.tokens, *tokens);
+                    assert_eq!(o.stats.blocks, *blocks);
+                }
+                // every paged lane retired: its blocks are all back in the
+                // free list, none live
+                if let Some(pools) = srv.spec().kv_pools() {
+                    for (role, pool) in
+                        [("target", &pools.target), ("draft", &pools.draft)]
+                    {
+                        pool.validate().unwrap();
+                        assert_eq!(
+                            pool.live_blocks(),
+                            0,
+                            "{role} pool leaked blocks (batch {batch} workers {workers})"
+                        );
+                    }
+                }
             }
         }
+    }
+}
+
+/// Out-of-blocks backpressure: many lanes against a deliberately tiny
+/// block pool. Requests must queue (never fail), every stream must be
+/// bit-identical to an uncapped run, the pool cap must be respected at its
+/// high-water mark, and lane retirement must return every block.
+#[test]
+fn serve_loop_block_backpressure_queues_and_completes() {
+    let backend = CpuRefBackend::new(&CpuModelConfig::tiny(), 4);
+    let sampling = SamplingConfig::new(0.8, 0.95);
+    let verifier = specdelay::verify::verifier("Traversal").unwrap();
+    let policy = FixedPolicy(Action::new(2, 2, 2));
+    let prompts = ["12*3= ", "9-4= ", "1,2,3,", "(5+5)/2= ", "0.5*8= ", "77+1= ", "6/2= "];
+    let max_new = 16;
+
+    // uncapped paged run: the equality oracle
+    let mut free = ServeLoop::new(&backend, sampling, verifier.as_ref(), &policy, 8)
+        .with_kv_storage(KvStorage::Paged);
+    for p in &prompts {
+        free.submit(ServeRequest { prompt: p.to_string(), max_new, seed: 99 });
+    }
+    let want: Vec<String> = free.run().unwrap().into_iter().map(|o| o.text).collect();
+
+    // capped run: budget 1 forces the smallest pool that still fits one
+    // lane (the cap is clamped to the per-lane reserve), so with 8 batch
+    // slots the block budget — not max_batch — is what serialises lanes
+    let mut srv = ServeLoop::new(&backend, sampling, verifier.as_ref(), &policy, 8)
+        .with_block_budget(1);
+    for p in &prompts {
+        srv.submit(ServeRequest { prompt: p.to_string(), max_new, seed: 99 });
+    }
+    assert_eq!(srv.queued(), prompts.len());
+    let outs = srv.run().unwrap();
+    assert_eq!(srv.queued(), 0, "every queued request must be served");
+    assert_eq!(outs.len(), prompts.len());
+    for (o, want_text) in outs.iter().zip(&want) {
+        assert!(o.error.is_none(), "lane {} failed under backpressure: {:?}", o.id, o.error);
+        assert_eq!(&o.text, want_text, "capped stream diverged (id {})", o.id);
+    }
+    let pools = srv.spec().kv_pools().expect("block budget implies paged pools");
+    for (role, pool) in [("target", &pools.target), ("draft", &pools.draft)] {
+        pool.validate().unwrap();
+        let cap = pool.max_blocks().unwrap();
+        assert!(
+            pool.peak_live_blocks() <= cap,
+            "{role} pool exceeded its cap: peak {} > {cap}",
+            pool.peak_live_blocks()
+        );
+        assert_eq!(pool.live_blocks(), 0, "{role} pool: lane retirement leaked blocks");
+        assert_eq!(
+            pool.free_blocks(),
+            pool.created(),
+            "{role} pool: free list must hold every created block after the drain"
+        );
     }
 }
 
@@ -188,7 +264,10 @@ fn draft_cache_rows_match_from_scratch_prefill() {
     let sampling = SamplingConfig::new(0.0, 1.0); // greedy maximizes full acceptance
     for model_seed in 0..5u64 {
         let backend = CpuRefBackend::new(&CpuModelConfig::tiny(), model_seed);
-        let spec = SpecEngine::new(&backend, sampling);
+        // the invariant must hold for both storages (the paged cache
+        // back-fills through the same page-mapped commit path)
+        let storage = if model_seed % 2 == 0 { KvStorage::Contiguous } else { KvStorage::Paged };
+        let spec = SpecEngine::new(&backend, sampling).with_kv_storage(storage);
         let verifier = specdelay::verify::verifier("SpecInfer").unwrap();
         for action in [Action::new(1, 2, 0), Action::new(2, 1, 1)] {
             let mut seq = spec.start("12*3= ").unwrap();
@@ -206,16 +285,16 @@ fn draft_cache_rows_match_from_scratch_prefill() {
                 for hh in 0..dims.n_heads {
                     for p in 0..n {
                         let src = ((l * dims.n_heads + hh) * s_pre + p) * dims.d_head;
-                        let dst = ((l * dims.n_heads + hh) * dims.max_seq + p) * dims.d_head;
+                        let (krow, vrow) = seq.draft_kv.read_row(l, hh, p);
                         assert_eq!(
                             &pre.k_rows[src..src + dims.d_head],
-                            &seq.draft_kv.k[dst..dst + dims.d_head],
-                            "stale draft K row: seed {model_seed} action {action:?} l={l} h={hh} pos={p}"
+                            krow,
+                            "stale draft K row: seed {model_seed} storage {storage:?} action {action:?} l={l} h={hh} pos={p}"
                         );
                         assert_eq!(
                             &pre.v_rows[src..src + dims.d_head],
-                            &seq.draft_kv.v[dst..dst + dims.d_head],
-                            "stale draft V row: seed {model_seed} action {action:?} l={l} h={hh} pos={p}"
+                            vrow,
+                            "stale draft V row: seed {model_seed} storage {storage:?} action {action:?} l={l} h={hh} pos={p}"
                         );
                     }
                 }

@@ -7,7 +7,7 @@ use std::path::Path;
 use specdelay::coordinator::{generate_autoregressive, FixedPolicy, SpecEngine};
 use specdelay::dist::{Dist, SamplingConfig};
 use specdelay::draft::Action;
-use specdelay::runtime::{Engine, Role};
+use specdelay::runtime::{Backend, Engine, Role};
 use specdelay::util::Pcg64;
 use specdelay::verify;
 
@@ -34,9 +34,7 @@ fn prefill_decode_consistency() {
     let mut kv = specdelay::kvcache::KvCache::new(engine.meta.target);
     let mut last = None;
     for (i, &t) in toks.iter().enumerate() {
-        let d = engine
-            .decode(Role::Target, &kv.k, &kv.v, t as u32, i)
-            .unwrap();
+        let d = Backend::decode(&engine, Role::Target, kv.view(), t as u32, i).unwrap();
         kv.commit_row(&d.k_row, &d.v_row, i);
         last = Some(d.logits);
     }
@@ -63,12 +61,8 @@ fn rollout_dists_match_decode() {
     let root = toks[len - 1] as u32;
     // rollout step 0 dist must equal the decode dist at the root
     let uni = vec![0.5f32; 2];
-    let ro = engine
-        .rollout(1, 2, &kv.k, &kv.v, root, len - 1, &uni, 1.0, 1.0)
-        .unwrap();
-    let de = engine
-        .decode(Role::Draft, &kv.k, &kv.v, root, len - 1)
-        .unwrap();
+    let ro = Backend::rollout(&engine, 1, 2, kv.view(), root, len - 1, &uni, 1.0, 1.0).unwrap();
+    let de = Backend::decode(&engine, Role::Draft, kv.view(), root, len - 1).unwrap();
     let v = engine.meta.draft.vocab;
     let q_ro = &ro.dists[..v];
     let q_de = Dist::from_logits(&de.logits, SamplingConfig::new(1.0, 1.0));

@@ -14,6 +14,15 @@
 //! This is the same style of validation the paper reports for its
 //! acceptance/branching calculators ("empirically confirmed ... with Monte
 //! Carlo sampling").
+//!
+//! On top of the tolerance checks, a chi-square goodness-of-fit pass
+//! (shared machinery in `common::mc`, sample count env-tunable via
+//! `SPECDELAY_MC_SAMPLES`) validates the first/second-token conditionals
+//! of real `SpecEngine::step` blocks on the CPU reference backend for all
+//! eight verifiers, under **both** KV storages (`SPECDELAY_PAGED_KV`
+//! off/on equivalents), and asserts the two storages produce *identical*
+//! tallies — the statistical and the bit-exactness halves of the paged
+//! cache's losslessness contract.
 
 mod common;
 
@@ -123,7 +132,8 @@ fn check_lossless_storage(
     let p_lm = ToyLm { seed: 1111, smooth: 0.2 };
     let q_lm = ToyLm { seed: 2222, smooth: 0.4 };
     let root = vec![1u32, 2];
-    let n = 60_000usize;
+    // full strength by default; SPECDELAY_MC_SAMPLES lets CI smoke cheaply
+    let n = common::mc::mc_samples(60_000);
     let max_check = 3usize;
 
     let mut rng = Pcg64::seeded(seed);
@@ -154,16 +164,13 @@ fn check_lossless_storage(
         let mut ctx = root.clone();
         ctx.extend(prefix);
         let target = p_lm.dist(&ctx);
-        for t in 0..V {
-            let emp = cnt[t] as f64 / total as f64;
-            let want = target.0[t] as f64;
-            let tol = 5.0 * (want * (1.0 - want) / total as f64).sqrt() + 0.004;
-            assert!(
-                (emp - want).abs() < tol,
-                "{} prefix {prefix:?} token {t}: emp {emp:.4} vs target {want:.4} (n={total}, tol {tol:.4})",
-                verifier.name(),
-            );
-        }
+        common::mc::check_counts(
+            &format!("{} prefix {prefix:?}", verifier.name()),
+            cnt,
+            &target.0,
+            total,
+            0.004,
+        );
     }
 }
 
@@ -201,6 +208,90 @@ fn lossless_single_path_all_verifiers() {
 fn lossless_delayed_tree_all_verifiers_sparse_storage() {
     for v in all_verifiers() {
         check_lossless_storage(v.as_ref(), 2, 2, 2, 45, true);
+    }
+}
+
+/// Chi-square goodness-of-fit upgrade of the Monte-Carlo validation, on
+/// the *real* serving stack instead of synthetic trees: replay
+/// `SpecEngine::step` blocks on the CPU reference backend and test the
+/// first-token counts (and the dominant second-token conditionals)
+/// against the backend's exact target conditionals, for all eight
+/// verifiers under both KV storages. The per-storage tallies must also be
+/// *identical* — the bit-exactness contract of the paged cache means the
+/// statistical pass cannot even in principle diverge between storages.
+#[test]
+fn chi_square_block_conditionals_all_verifiers_both_kv_storages() {
+    use specdelay::coordinator::SpecEngine;
+    use specdelay::dist::SamplingConfig;
+    use specdelay::draft::Action;
+    use specdelay::kvcache::KvStorage;
+    use specdelay::runtime::{Backend, CpuModelConfig, CpuRefBackend, Role};
+
+    let backend = CpuRefBackend::new(&CpuModelConfig::tiny(), 3);
+    let sampling = SamplingConfig::new(0.5, 0.9);
+    let v = backend.dims(Role::Target).vocab;
+    let n = common::mc::mc_samples(800);
+    let p_floor = 1e-6;
+
+    // one tally set per storage: [verifier][storage]
+    let mut per_storage: Vec<Vec<common::mc::BlockConditionals>> = Vec::new();
+    for storage in [KvStorage::Contiguous, KvStorage::Paged] {
+        let spec = SpecEngine::new(&backend, sampling).with_kv_storage(storage);
+        let base = spec.start("7+5= ").unwrap();
+        // exact first-token conditional p(.|prompt)
+        let toks_i32: Vec<i32> = base.tokens.iter().map(|&t| t as i32).collect();
+        let pre = backend.prefill(Role::Target, &toks_i32, base.prompt_len).unwrap();
+        let p0 = Dist::from_logits(&pre.logits, sampling);
+
+        let mut tallies = Vec::new();
+        for (vi, verifier) in specdelay::verify::all_verifiers().into_iter().enumerate() {
+            let t = common::mc::replay_block_conditionals(
+                &spec,
+                &base,
+                verifier.as_ref(),
+                Action::new(2, 1, 1),
+                v,
+                n,
+                0xC511 + vi as u64,
+            );
+            common::mc::assert_chi_square(
+                &format!("{} first-token ({storage:?})", verifier.name()),
+                &t.first,
+                &p0.0,
+                n,
+                p_floor,
+            );
+            for (t1, c) in &t.second {
+                let total: usize = c.iter().sum();
+                if total < 250 {
+                    continue; // too little conditional mass for a GOF test
+                }
+                let d = backend
+                    .decode(Role::Target, base.target_kv.view(), *t1, base.prompt_len)
+                    .unwrap();
+                let p1 = Dist::from_logits(&d.logits, sampling);
+                common::mc::assert_chi_square(
+                    &format!("{} second-token|{t1} ({storage:?})", verifier.name()),
+                    c,
+                    &p1.0,
+                    total,
+                    p_floor,
+                );
+            }
+            tallies.push(t);
+        }
+        per_storage.push(tallies);
+    }
+
+    // bit-exactness: identical seeds + bit-identical storages ⇒ identical
+    // emitted streams ⇒ identical tallies
+    let (cont, paged) = (&per_storage[0], &per_storage[1]);
+    for (i, (a, b)) in cont.iter().zip(paged).enumerate() {
+        assert_eq!(a.first, b.first, "verifier #{i}: first-token tallies diverge across storages");
+        assert_eq!(
+            a.second, b.second,
+            "verifier #{i}: second-token tallies diverge across storages"
+        );
     }
 }
 

@@ -1,0 +1,219 @@
+//! Property-based fuzz of the paged KV cache against a contiguous shadow.
+//!
+//! Each seeded sequence drives a random interleaving of lane operations —
+//! create, commit (row / prefill / rollout span / tree row), copy-on-write
+//! fork (`clone_prefix`), prefix refresh (`copy_prefix_from`), retire —
+//! over several lanes sharing one [`BlockPool`], applying every op
+//! identically to a [`ContiguousKv`] shadow. After **every** op it
+//! asserts:
+//!
+//! * allocator invariants via [`BlockPool::validate`]: block conservation
+//!   (`created == free + live`, i.e. no block is ever lost or
+//!   double-freed) and that free-list blocks are referenced by nothing
+//!   (refcount conservation — a retired block can never be read or forked);
+//! * pool/lane accounting: unique live blocks bounded by the lanes' table
+//!   residency (sharing can only reduce, never grow, the unique count);
+//! * **bitwise read equality** with the shadow on every row both
+//!   representations define (rows invalidated by a prefix op are excluded
+//!   on both sides — the shared "must not be read" contract).
+//!
+//! The sequence count (default 1000, the acceptance floor) is tunable via
+//! `SPECDELAY_FUZZ_SEQS`.
+
+use specdelay::kvcache::{BlockPool, ContiguousKv, KvCache};
+use specdelay::runtime::ModelDims;
+use specdelay::util::Pcg64;
+
+struct Lane {
+    paged: KvCache,
+    shadow: ContiguousKv,
+    /// Rows both representations hold defined (written since the last
+    /// prefix op that invalidated them).
+    defined: Vec<bool>,
+}
+
+fn rand_vec(rng: &mut Pcg64, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.next_f32() * 8.0 - 4.0).collect()
+}
+
+fn rand_below(rng: &mut Pcg64, n: usize) -> usize {
+    (rng.next_f32() as f64 * n as f64) as usize % n.max(1)
+}
+
+fn check_lane(lane: &Lane, d: &ModelDims, ctx: &str) {
+    assert_eq!(lane.paged.len(), lane.shadow.len, "{ctx}: len diverged");
+    for (pos, &def) in lane.defined.iter().enumerate() {
+        if !def {
+            continue;
+        }
+        for l in 0..d.n_layers {
+            for hh in 0..d.n_heads {
+                let (pk, pv) = lane.paged.read_row(l, hh, pos);
+                let (sk, sv) = lane.shadow.row(l, hh, pos);
+                assert_eq!(pk, sk, "{ctx}: K row diverged l={l} h={hh} pos={pos}");
+                assert_eq!(pv, sv, "{ctx}: V row diverged l={l} h={hh} pos={pos}");
+            }
+        }
+    }
+}
+
+fn check_all(pool: &BlockPool, lanes: &[Lane], d: &ModelDims, ctx: &str) {
+    pool.validate().unwrap_or_else(|e| panic!("{ctx}: {e}"));
+    let resident: usize = lanes
+        .iter()
+        .map(|l| l.paged.as_paged().unwrap().resident_blocks())
+        .sum();
+    let max_resident = lanes
+        .iter()
+        .map(|l| l.paged.as_paged().unwrap().resident_blocks())
+        .max()
+        .unwrap_or(0);
+    let live = pool.live_blocks();
+    assert!(live <= resident, "{ctx}: live {live} > table refs {resident}");
+    assert!(live >= max_resident, "{ctx}: live {live} < widest lane {max_resident}");
+    for lane in lanes {
+        check_lane(lane, d, ctx);
+    }
+}
+
+#[test]
+fn fuzz_alloc_fork_write_retire_against_contiguous_shadow() {
+    let seqs: usize = std::env::var("SPECDELAY_FUZZ_SEQS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1000);
+    let ops_per_seq = 30usize;
+    let max_lanes = 5usize;
+
+    for seq in 0..seqs as u64 {
+        // alternate shapes: multi-head vs the single-head span-copy path
+        let d = if seq % 2 == 0 {
+            ModelDims { n_layers: 1, d_model: 4, n_heads: 2, d_head: 2, vocab: 7, max_seq: 24 }
+        } else {
+            ModelDims { n_layers: 2, d_model: 4, n_heads: 1, d_head: 3, vocab: 7, max_seq: 24 }
+        };
+        let bt = [1usize, 3, 5, 8][(seq % 4) as usize];
+        let pool = BlockPool::new(d, bt, None);
+        let mut rng = Pcg64::new(0xFA22, seq);
+        let mut lanes: Vec<Lane> = Vec::new();
+        let (lyr, h, dh, s) = (d.n_layers, d.n_heads, d.d_head, d.max_seq);
+
+        for op in 0..ops_per_seq {
+            let ctx = format!("seq {seq} op {op} (bt {bt})");
+            let choice = rand_below(&mut rng, 8);
+            match choice {
+                // create a fresh empty lane
+                0 => {
+                    if lanes.len() < max_lanes {
+                        lanes.push(Lane {
+                            paged: KvCache::paged(&pool),
+                            shadow: ContiguousKv::new(d),
+                            defined: vec![false; s],
+                        });
+                    }
+                }
+                // single-row commit
+                1 if !lanes.is_empty() => {
+                    let li = rand_below(&mut rng, lanes.len());
+                    let pos = rand_below(&mut rng, s);
+                    let row = rand_vec(&mut rng, lyr * h * dh);
+                    let vrow = rand_vec(&mut rng, lyr * h * dh);
+                    lanes[li].paged.commit_row(&row, &vrow, pos);
+                    lanes[li].shadow.commit_row(&row, &vrow, pos);
+                    lanes[li].defined[pos] = true;
+                }
+                // prefill commit
+                2 if !lanes.is_empty() => {
+                    let li = rand_below(&mut rng, lanes.len());
+                    let len = 1 + rand_below(&mut rng, s.min(12));
+                    let s_pre = len + rand_below(&mut rng, 4);
+                    let rows = rand_vec(&mut rng, lyr * h * s_pre * dh);
+                    let vrows = rand_vec(&mut rng, lyr * h * s_pre * dh);
+                    lanes[li].paged.commit_prefill(&rows, &vrows, s_pre, len);
+                    lanes[li].shadow.commit_prefill(&rows, &vrows, s_pre, len);
+                    lanes[li].defined[..len].fill(true);
+                }
+                // rollout span commit (exercises the per-block coalescing)
+                3 if !lanes.is_empty() => {
+                    let li = rand_below(&mut rng, lanes.len());
+                    let k_paths = 1 + rand_below(&mut rng, 3);
+                    let l_steps = 1 + rand_below(&mut rng, 4);
+                    let branch = rand_below(&mut rng, k_paths);
+                    let last_step = rand_below(&mut rng, l_steps);
+                    let base_pos = rand_below(&mut rng, s - last_step);
+                    let n = lyr * k_paths * l_steps * h * dh;
+                    let rows = rand_vec(&mut rng, n);
+                    let vrows = rand_vec(&mut rng, n);
+                    lanes[li]
+                        .paged
+                        .commit_rollout_rows(&rows, &vrows, k_paths, l_steps, branch, last_step, base_pos);
+                    lanes[li]
+                        .shadow
+                        .commit_rollout_rows(&rows, &vrows, k_paths, l_steps, branch, last_step, base_pos);
+                    lanes[li].defined[base_pos..=base_pos + last_step].fill(true);
+                }
+                // tree-row commit
+                4 if !lanes.is_empty() => {
+                    let li = rand_below(&mut rng, lanes.len());
+                    let nb = 1 + rand_below(&mut rng, 4);
+                    let node = rand_below(&mut rng, nb);
+                    let pos = rand_below(&mut rng, s);
+                    let rows = rand_vec(&mut rng, lyr * nb * h * dh);
+                    let vrows = rand_vec(&mut rng, lyr * nb * h * dh);
+                    lanes[li].paged.commit_tree_row(&rows, &vrows, nb, node, pos);
+                    lanes[li].shadow.commit_tree_row(&rows, &vrows, nb, node, pos);
+                    lanes[li].defined[pos] = true;
+                }
+                // copy-on-write fork into a new lane
+                5 if !lanes.is_empty() && lanes.len() < max_lanes => {
+                    let li = rand_below(&mut rng, lanes.len());
+                    let rows = rand_below(&mut rng, s + 4); // may exceed max_seq
+                    let src = &lanes[li];
+                    let forked = Lane {
+                        paged: src.paged.clone_prefix(rows),
+                        shadow: src.shadow.clone_prefix(rows),
+                        defined: (0..s).map(|p| p < rows && src.defined[p]).collect(),
+                    };
+                    lanes.push(forked);
+                }
+                // prefix refresh of one lane from another (or itself — skip)
+                6 if lanes.len() >= 2 => {
+                    let li = rand_below(&mut rng, lanes.len());
+                    let si = rand_below(&mut rng, lanes.len());
+                    if li != si {
+                        let rows = rand_below(&mut rng, s + 4);
+                        let (dst, src) = if li < si {
+                            let (a, b) = lanes.split_at_mut(si);
+                            (&mut a[li], &b[0])
+                        } else {
+                            let (a, b) = lanes.split_at_mut(li);
+                            (&mut b[0], &a[si])
+                        };
+                        dst.paged.copy_prefix_from(&src.paged, rows);
+                        dst.shadow.copy_prefix_from(&src.shadow, rows);
+                        dst.defined =
+                            (0..s).map(|p| p < rows && src.defined[p]).collect();
+                    }
+                }
+                // retire a lane: its blocks must come back to the free list
+                _ => {
+                    if !lanes.is_empty() {
+                        let li = rand_below(&mut rng, lanes.len());
+                        lanes.swap_remove(li);
+                    }
+                }
+            }
+            check_all(&pool, &lanes, &d, &ctx);
+        }
+
+        // drain: retiring every lane returns every block
+        lanes.clear();
+        pool.validate().unwrap_or_else(|e| panic!("seq {seq} drain: {e}"));
+        assert_eq!(pool.live_blocks(), 0, "seq {seq}: blocks leaked past retirement");
+        assert_eq!(
+            pool.free_blocks(),
+            pool.created(),
+            "seq {seq}: free list must hold every created block after drain"
+        );
+    }
+}
