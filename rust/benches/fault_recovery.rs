@@ -1,0 +1,309 @@
+//! Fault-injection recovery benchmark on the CPU reference backend: what
+//! does resilience cost when nothing fails, and what does recovery cost
+//! when things do?
+//!
+//! Four measurements through `coordinator::ServeLoop`:
+//!
+//! * **baseline** — resilience off, plain backend (the `serve_loop` bench's
+//!   configuration);
+//! * **checkpoint overhead** — resilience on, a quiet fault plan (rate 0):
+//!   the pure cost of per-tick `(Sequence, rng)` checkpointing, reported as
+//!   a ratio vs baseline;
+//! * **fault sweep** — resilience on at fault rates {0, 1e-3, 1e-2}
+//!   (transient at the rate, corruption at half of it): aggregate tokens/s
+//!   plus a p99 per-token latency estimate. Before any number is recorded,
+//!   every completed stream is asserted bit-identical to the fault-free
+//!   serial oracle — the numbers always describe lossless recovery, never
+//!   silently-divergent streams;
+//! * **degraded mode** — the speculative path faulting at rate 1.0, so the
+//!   circuit breaker pins lanes to autoregressive decode: the graceful-
+//!   degradation throughput floor.
+//!
+//! The p99 per-token latency is estimated over the distribution of
+//! per-request mean token latencies (request wall / tokens emitted) — with
+//! per-block scheduling the loop does not observe individual token
+//! timestamps, and the per-request mean is the serving-visible quantity.
+//!
+//! Emits a table and `BENCH_fault_recovery.json` at the repo root
+//! (uploaded as a CI artifact). Env knobs: `FAULT_RECOVERY_REQUESTS`
+//! (default 8), `FAULT_RECOVERY_MAX_NEW` (default 32).
+//!
+//! Run: `cargo bench --bench fault_recovery`.
+
+use std::time::Instant;
+
+use specdelay::coordinator::{
+    FixedPolicy, ResilienceConfig, ServeLoop, ServeOutput, ServeRequest, SpecEngine,
+};
+use specdelay::dist::SamplingConfig;
+use specdelay::draft::Action;
+use specdelay::runtime::{
+    Backend, CpuModelConfig, CpuRefBackend, FaultOp, FaultPlan, FaultyBackend,
+};
+use specdelay::util::json::{arr, num, obj, s, Json};
+use specdelay::util::threadpool::default_workers;
+use specdelay::util::Pcg64;
+use specdelay::verify;
+
+const PROMPTS: [&str; 4] = [
+    "Q: 6 * 7 = ? A:",
+    "story: the golden ",
+    "fn add(a, b):",
+    "translate en->fr: the sea => ",
+];
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Resilience with the health machine effectively disabled: every
+/// completed stream stays on the speculative (bit-identical) path.
+fn retry_only() -> ResilienceConfig {
+    ResilienceConfig {
+        max_retries: 50,
+        deadline: None,
+        degrade_after: usize::MAX / 2,
+        fail_after: usize::MAX / 2,
+        probe_interval: 4,
+    }
+}
+
+/// p99 of per-request mean token latency (seconds/token), estimated over
+/// the request distribution (see the module docs).
+fn p99_token_latency(outs: &[ServeOutput]) -> f64 {
+    let mut per_req: Vec<f64> = outs
+        .iter()
+        .filter(|o| o.stats.tokens > 0)
+        .map(|o| o.stats.wall_secs / o.stats.tokens as f64)
+        .collect();
+    if per_req.is_empty() {
+        return f64::NAN;
+    }
+    per_req.sort_by(|a, b| a.total_cmp(b));
+    let idx = ((per_req.len() as f64) * 0.99).ceil() as usize;
+    per_req[idx.clamp(1, per_req.len()) - 1]
+}
+
+struct RunResult {
+    tokens: usize,
+    wall: f64,
+    tps: f64,
+    p99: f64,
+    retries: usize,
+    faults: usize,
+    degraded_lanes: usize,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_loop(
+    backend: &dyn Backend,
+    sampling: SamplingConfig,
+    verifier: &dyn specdelay::verify::Verifier,
+    policy: &FixedPolicy,
+    batch: usize,
+    requests: usize,
+    max_new: usize,
+    seed: u64,
+    resilience: Option<ResilienceConfig>,
+    oracle: Option<&[String]>,
+) -> RunResult {
+    let mut srv = ServeLoop::new(backend, sampling, verifier, policy, batch);
+    if let Some(cfg) = resilience {
+        srv = srv.with_resilience(cfg);
+    }
+    for id in 0..requests {
+        srv.submit(ServeRequest {
+            prompt: PROMPTS[id % PROMPTS.len()].to_string(),
+            max_new,
+            seed,
+        });
+    }
+    let t0 = Instant::now();
+    let outs = srv.run().expect("serve loop");
+    let wall = t0.elapsed().as_secs_f64();
+    // equal-output assertion before any number is recorded
+    for o in &outs {
+        assert!(o.error.is_none(), "lane {} failed: {:?}", o.id, o.error);
+    }
+    if let Some(want) = oracle {
+        for (o, w) in outs.iter().zip(want) {
+            assert!(!o.degraded, "lane {} degraded in a lossless-path run", o.id);
+            assert_eq!(
+                &o.text, w,
+                "lane {}: recovered stream diverged from the fault-free oracle",
+                o.id
+            );
+        }
+    }
+    let tokens: usize = outs.iter().map(|o| o.stats.tokens).sum();
+    let rc = srv.recovery();
+    RunResult {
+        tokens,
+        wall,
+        tps: tokens as f64 / wall.max(1e-12),
+        p99: p99_token_latency(&outs),
+        retries: rc.retries,
+        faults: rc.transient_seen + rc.corrupt_seen + rc.panics,
+        degraded_lanes: outs.iter().filter(|o| o.degraded).count(),
+    }
+}
+
+fn main() {
+    let requests = env_usize("FAULT_RECOVERY_REQUESTS", 8);
+    let max_new = env_usize("FAULT_RECOVERY_MAX_NEW", 32);
+    let batch = 4usize;
+    let seed = 42u64;
+
+    let cfg = CpuModelConfig::small();
+    let backend = CpuRefBackend::new(&cfg, 0);
+    let sampling = SamplingConfig::new(0.8, 0.95);
+    let action = Action::new(2, 2, 3);
+    let policy = FixedPolicy(action);
+    let verifier = verify::verifier("SpecInfer").expect("verifier");
+
+    // fault-free serial oracle streams (untimed)
+    let spec = SpecEngine::new(&backend, sampling);
+    let mut oracle = Vec::with_capacity(requests);
+    for id in 0..requests {
+        let mut rng = Pcg64::new(seed, id as u64);
+        let (text, _stats) = spec
+            .generate(PROMPTS[id % PROMPTS.len()], max_new, verifier.as_ref(), &policy, &mut rng)
+            .expect("serial generate");
+        oracle.push(text);
+    }
+
+    println!(
+        "{:<24} {:>10} {:>12} {:>12} {:>14} {:>9} {:>9}",
+        "mode", "tokens", "wall_secs", "tokens/s", "p99_tok_ms", "faults", "retries"
+    );
+    let print_row = |label: &str, r: &RunResult| {
+        println!(
+            "{label:<24} {:>10} {:>12.3} {:>12.1} {:>14.3} {:>9} {:>9}",
+            r.tokens,
+            r.wall,
+            r.tps,
+            r.p99 * 1e3,
+            r.faults,
+            r.retries
+        );
+    };
+
+    // baseline: resilience off, plain backend
+    let base = run_loop(
+        &backend, sampling, verifier.as_ref(), &policy, batch, requests, max_new, seed, None,
+        Some(&oracle),
+    );
+    print_row("baseline", &base);
+
+    // checkpoint overhead: resilience on, quiet plan (rate 0)
+    let quiet = FaultyBackend::new(&backend, FaultPlan::quiet(7));
+    let ckpt = run_loop(
+        &quiet, sampling, verifier.as_ref(), &policy, batch, requests, max_new, seed,
+        Some(retry_only()), Some(&oracle),
+    );
+    print_row("resilient rate=0", &ckpt);
+    let overhead = base.tps / ckpt.tps.max(1e-12);
+
+    // fault sweep
+    let rates = [0.0f64, 1e-3, 1e-2];
+    let mut rate_rows: Vec<Json> = Vec::new();
+    for &rate in &rates {
+        let plan = FaultPlan::quiet(0xFA17).with_transient(rate).with_corrupt(rate / 2.0);
+        let fb = FaultyBackend::new(&backend, plan);
+        let r = run_loop(
+            &fb, sampling, verifier.as_ref(), &policy, batch, requests, max_new, seed,
+            Some(retry_only()), Some(&oracle),
+        );
+        print_row(&format!("resilient rate={rate}"), &r);
+        rate_rows.push(obj(vec![
+            ("fault_rate", num(rate)),
+            ("tokens", num(r.tokens as f64)),
+            ("wall_secs", num(r.wall)),
+            ("tokens_per_sec", num(r.tps)),
+            ("p99_token_latency_secs", num(r.p99)),
+            ("faults", num(r.faults as f64)),
+            ("retries", num(r.retries as f64)),
+            ("recovery_overhead_vs_baseline", num(base.tps / r.tps.max(1e-12))),
+        ]));
+    }
+
+    // degraded mode: speculative path permanently down, AR fallback serves
+    let plan = FaultPlan::quiet(5)
+        .with_transient(1.0)
+        .with_ops(vec![FaultOp::Rollout, FaultOp::TreeVerify]);
+    let fb = FaultyBackend::new(&backend, plan);
+    let degraded_cfg = ResilienceConfig {
+        max_retries: 4,
+        deadline: None,
+        degrade_after: 2,
+        fail_after: usize::MAX / 2,
+        probe_interval: 0,
+    };
+    let deg = run_loop(
+        &fb, sampling, verifier.as_ref(), &policy, batch, requests, max_new, seed,
+        Some(degraded_cfg), None,
+    );
+    assert!(
+        deg.degraded_lanes == requests,
+        "every lane should degrade at rate 1.0 ({} of {requests} did)",
+        deg.degraded_lanes
+    );
+    print_row("degraded (AR fallback)", &deg);
+
+    println!("checkpoint overhead ratio (baseline tps / resilient rate=0 tps): {overhead:.3}");
+    println!(
+        "degraded-mode throughput: {:.1} tok/s ({:.2}x baseline)",
+        deg.tps,
+        deg.tps / base.tps.max(1e-12)
+    );
+
+    let row = |r: &RunResult| {
+        obj(vec![
+            ("tokens", num(r.tokens as f64)),
+            ("wall_secs", num(r.wall)),
+            ("tokens_per_sec", num(r.tps)),
+            ("p99_token_latency_secs", num(r.p99)),
+            ("faults", num(r.faults as f64)),
+            ("retries", num(r.retries as f64)),
+        ])
+    };
+    let report = obj(vec![
+        ("schema", s("fault_recovery/v1")),
+        (
+            "config",
+            obj(vec![
+                ("backend", s("cpu-ref")),
+                ("family", s(&backend.meta().family)),
+                ("n_layers", num(cfg.n_layers as f64)),
+                ("d_model", num(cfg.d_model as f64)),
+                ("vocab", num(cfg.vocab as f64)),
+                ("requests", num(requests as f64)),
+                ("max_new", num(max_new as f64)),
+                ("batch", num(batch as f64)),
+                ("temperature", num(sampling.temperature as f64)),
+                ("top_p", num(sampling.top_p as f64)),
+                ("action", s(&format!("K={} L1={} L2={}", action.k, action.l1, action.l2))),
+                ("machine_workers", num(default_workers() as f64)),
+            ]),
+        ),
+        ("equal_output_assertion", s("enabled")),
+        ("baseline", row(&base)),
+        ("resilient_quiet", row(&ckpt)),
+        ("checkpoint_overhead_ratio", num(overhead)),
+        ("fault_rates", arr(rate_rows)),
+        (
+            "degraded",
+            obj(vec![
+                ("tokens", num(deg.tokens as f64)),
+                ("wall_secs", num(deg.wall)),
+                ("tokens_per_sec", num(deg.tps)),
+                ("p99_token_latency_secs", num(deg.p99)),
+                ("throughput_vs_baseline", num(deg.tps / base.tps.max(1e-12))),
+                ("degraded_lanes", num(deg.degraded_lanes as f64)),
+            ]),
+        ),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_fault_recovery.json");
+    std::fs::write(path, format!("{}\n", report.to_string_pretty())).expect("write bench json");
+    println!("wrote {path}");
+}

@@ -23,7 +23,10 @@
 //! when its worst-case block reservation fits both pools, and otherwise
 //! waits in the queue until running lanes retire and return their blocks —
 //! no in-flight lane can fail for lack of blocks, and streams stay
-//! bit-identical to an uncapped (or contiguous) run.
+//! bit-identical to an uncapped (or contiguous) run. With
+//! [`ServeLoop::with_resilience`] enabled the per-lane reservation doubles:
+//! a lane's checkpoint is a copy-on-write fork of its sequence, so lane +
+//! checkpoint together are bounded by twice the single-lane worst case.
 //!
 //! ## Determinism contract
 //!
@@ -37,6 +40,43 @@
 //! `Pcg64::new(seed, id)` stream. `tests/e2e_serve.rs` asserts both; the
 //! `serve_loop` bench re-asserts them before timing anything.
 //!
+//! ## Failure model & recovery
+//!
+//! Backend dispatches can fail (transient errors), return corrupted
+//! surfaces (caught by the [`guard_finite`](crate::runtime::guard_finite)
+//! boundary guards and raised as typed faults), straggle, or panic. The
+//! loop always isolates panics — per-lane tick work runs under
+//! `catch_unwind`, so one poisoned lane never takes down the batch — and
+//! classifies every lane failure into the structured [`ServeError`]
+//! taxonomy instead of a bare string.
+//!
+//! With [`ServeLoop::with_resilience`] the loop additionally *recovers*:
+//!
+//! * **checkpoint + deterministic retry** — after every successful tick a
+//!   lane snapshots `(Sequence, rng)`; under paged KV the sequence
+//!   snapshot is a copy-on-write fork (O(blocks) refcount bumps, see
+//!   `kvcache::paged`). A faulting tick restores the snapshot — returning
+//!   any partially-committed blocks to the pools — and re-executes with
+//!   the *same rng stream state*, so a recovered stream is bit-identical
+//!   to the fault-free oracle. Bounded by
+//!   [`ResilienceConfig::max_retries`] consecutive attempts, then the
+//!   lane retires as [`ServeError::Exhausted`].
+//! * **deadlines** — a lane whose wall clock exceeds
+//!   [`ResilienceConfig::deadline`] retires as [`ServeError::Deadline`]
+//!   with whatever partial stream it has.
+//! * **health state machine** — `Healthy → Degraded → Failed` with a
+//!   consecutive-fault circuit breaker ([`BackendHealth`]). While
+//!   `Degraded`, lanes switch from speculation to plain autoregressive
+//!   decoding ([`SpecEngine::step_autoregressive`]): slower, but each
+//!   token is still sampled from the exact target conditional, so the
+//!   served stream stays lossless (degraded outputs are flagged via
+//!   [`ServeOutput::degraded`]). Every
+//!   [`ResilienceConfig::probe_interval`]-th degraded tick re-probes the
+//!   speculative path; a clean probe returns the loop to `Healthy`.
+//!   Consecutive faults *in degraded mode* trip the breaker fully open
+//!   (`Failed`): all in-flight and queued requests retire with
+//!   [`ServeError::Failed`] rather than spinning forever.
+//!
 //! Each tick currently pays one scoped-thread spawn/join round
 //! ([`par_map_init`](crate::util::threadpool::par_map_init)); for model
 //! sizes where a block is sub-millisecond that overhead is visible in
@@ -46,14 +86,16 @@
 //! determinism contract — left as a follow-up.
 
 use std::collections::VecDeque;
-use std::time::Instant;
+use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use super::{ActionPolicy, GenStats, Sequence, SpecEngine};
 use crate::dist::SamplingConfig;
 use crate::kvcache::{default_block_tokens, KvStorage};
-use crate::runtime::Backend;
+use crate::runtime::{Backend, DispatchFault, FaultKind};
 use crate::tokenizer;
 use crate::util::threadpool;
 use crate::util::Pcg64;
@@ -72,6 +114,155 @@ pub struct ServeRequest {
     pub seed: u64,
 }
 
+/// Structured lane-failure taxonomy: why a request retired without (or
+/// with only part of) its stream. Carried on [`ServeOutput::error`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServeError {
+    /// A dispatch failed outright (injected or real); retryable.
+    Transient {
+        /// Human-readable cause.
+        message: String,
+    },
+    /// A dispatch returned a non-finite sampled surface, caught by the
+    /// boundary guards before anything was sampled from it.
+    Corrupt {
+        /// Human-readable cause.
+        message: String,
+    },
+    /// The request exceeded its per-request deadline and retired with a
+    /// partial stream.
+    Deadline {
+        /// Wall-clock seconds from admission to retirement.
+        elapsed_secs: f64,
+    },
+    /// Consecutive retries exceeded [`ResilienceConfig::max_retries`].
+    Exhausted {
+        /// Consecutive retries spent before giving up.
+        retries: usize,
+        /// The final failure's description.
+        last: String,
+    },
+    /// The lane's tick panicked (isolated; the batch was unaffected).
+    Panic {
+        /// The panic payload, when it was a string.
+        message: String,
+    },
+    /// The backend circuit breaker opened fully ([`BackendHealth::Failed`]):
+    /// even degraded autoregressive decoding kept faulting.
+    Failed {
+        /// Human-readable cause.
+        message: String,
+    },
+}
+
+impl ServeError {
+    /// Stable lowercase tag per variant (for logs and reports).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ServeError::Transient { .. } => "transient",
+            ServeError::Corrupt { .. } => "corrupt",
+            ServeError::Deadline { .. } => "deadline",
+            ServeError::Exhausted { .. } => "exhausted",
+            ServeError::Panic { .. } => "panic",
+            ServeError::Failed { .. } => "failed",
+        }
+    }
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Transient { message } => write!(f, "transient: {message}"),
+            ServeError::Corrupt { message } => write!(f, "corrupt: {message}"),
+            ServeError::Deadline { elapsed_secs } => {
+                write!(f, "deadline exceeded after {elapsed_secs:.3}s")
+            }
+            ServeError::Exhausted { retries, last } => {
+                write!(f, "retries exhausted after {retries} attempts (last: {last})")
+            }
+            ServeError::Panic { message } => write!(f, "lane panicked: {message}"),
+            ServeError::Failed { message } => write!(f, "backend failed: {message}"),
+        }
+    }
+}
+
+/// Backend health as seen by the serving loop's circuit breaker.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendHealth {
+    /// Speculative decoding, full speed.
+    Healthy,
+    /// Consecutive faults tripped the breaker: lanes run plain
+    /// autoregressive decode (lossless, slower) and the speculative path
+    /// is re-probed periodically.
+    Degraded,
+    /// Even degraded decoding kept faulting: the loop drains every lane
+    /// and queued request with [`ServeError::Failed`].
+    Failed,
+}
+
+/// Recovery policy for [`ServeLoop::with_resilience`].
+#[derive(Clone, Debug)]
+pub struct ResilienceConfig {
+    /// Consecutive per-lane checkpoint retries before the lane retires as
+    /// [`ServeError::Exhausted`]. Keep this at least as large as
+    /// `degrade_after`, or lanes can exhaust before the loop degrades.
+    pub max_retries: usize,
+    /// Per-request wall-clock deadline; `None` disables deadline
+    /// retirement.
+    pub deadline: Option<Duration>,
+    /// Consecutive backend faults (across lanes, in lane order) before
+    /// `Healthy → Degraded`.
+    pub degrade_after: usize,
+    /// Consecutive degraded-mode faults before `Degraded → Failed`.
+    /// Failed probes do not count — only the autoregressive fallback
+    /// itself faulting can open the breaker fully.
+    pub fail_after: usize,
+    /// Probe the speculative path every this-many degraded ticks (0
+    /// disables probing, pinning the loop in degraded mode).
+    pub probe_interval: usize,
+}
+
+impl Default for ResilienceConfig {
+    fn default() -> ResilienceConfig {
+        ResilienceConfig {
+            max_retries: 16,
+            deadline: None,
+            degrade_after: 6,
+            fail_after: 12,
+            probe_interval: 4,
+        }
+    }
+}
+
+/// Fault-handling counters for one [`ServeLoop::run`] drain. The chaos
+/// suite closes the loop against [`FaultStats`](crate::runtime::FaultStats):
+/// `transient_seen + corrupt_seen + panics == retries + surfaced` — every
+/// observed fault is either deterministically re-executed or reported on
+/// an output, never silently dropped.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RecoveryCounters {
+    /// Transient dispatch faults observed.
+    pub transient_seen: usize,
+    /// Corruption guard trips observed.
+    pub corrupt_seen: usize,
+    /// Lane panics caught (and isolated).
+    pub panics: usize,
+    /// Faults answered with a checkpoint restore + re-execution.
+    pub retries: usize,
+    /// Faults surfaced on a retiring output's [`ServeOutput::error`].
+    pub surfaced: usize,
+    /// Lanes retired by deadline.
+    pub deadline_retired: usize,
+    /// `Healthy → Degraded` transitions.
+    pub degraded_entered: usize,
+    /// Ticks served in autoregressive degraded mode.
+    pub degraded_ticks: usize,
+    /// Speculative re-probes attempted while degraded.
+    pub probes: usize,
+    /// Probes that returned the loop to `Healthy`.
+    pub recoveries: usize,
+}
+
 /// One finished request.
 pub struct ServeOutput {
     /// Admission-order request id (as returned by [`ServeLoop::submit`]).
@@ -79,14 +270,34 @@ pub struct ServeOutput {
     /// Decoded continuation (prompt excluded; possibly partial when
     /// `error` is set).
     pub text: String,
+    /// Emitted token ids (prompt excluded) — the raw stream `text` decodes.
+    pub tokens: Vec<u32>,
     /// Whole-generation statistics; `wall_secs` spans admission→retirement,
     /// so under batching it includes time sharing the machine with other
     /// lanes.
     pub stats: GenStats,
     /// Set when this lane failed mid-generation. A failing lane retires
-    /// with the error recorded here; the other lanes are unaffected — one
-    /// bad request never discards the batch's completed results.
-    pub error: Option<String>,
+    /// with the classified error recorded here; the other lanes are
+    /// unaffected — one bad request never discards the batch's completed
+    /// results.
+    pub error: Option<ServeError>,
+    /// True when any token of this stream was emitted by the degraded-mode
+    /// autoregressive fallback. The stream is still lossless (every token
+    /// sampled from the exact target conditional) but no longer
+    /// bit-identical to the fault-free speculative oracle, because
+    /// autoregressive sampling consumes the rng stream differently.
+    pub degraded: bool,
+    /// Checkpoint retries this lane spent over its lifetime.
+    pub retries: usize,
+}
+
+/// A lane's recovery snapshot: the sequence and rng stream state as of the
+/// last successful tick. Restoring it makes a retried block re-execute
+/// bit-identically to the fault-free schedule; under paged KV the sequence
+/// clone is a copy-on-write fork.
+struct Checkpoint {
+    seq: Sequence,
+    rng: Pcg64,
 }
 
 /// An active lane: one admitted request mid-generation. `seq` stays `None`
@@ -95,12 +306,19 @@ pub struct ServeOutput {
 /// scheduler thread where it would stall the other lanes.
 struct Lane {
     id: u64,
+    seed: u64,
     prompt: String,
     max_new: usize,
     seq: Option<Sequence>,
     rng: Pcg64,
     stats: GenStats,
     started: Instant,
+    checkpoint: Option<Checkpoint>,
+    /// Consecutive failed ticks since the last success.
+    retries: usize,
+    /// Lifetime retry count (reported on the output).
+    total_retries: usize,
+    degraded: bool,
 }
 
 /// Worst-case block reservation per admitted lane under a capped pool.
@@ -111,10 +329,12 @@ struct Lane {
 /// mid-generation, admission reserves the worst case: every target block a
 /// full `max_seq` context needs, every draft block, plus the trunk→branch
 /// handoff's divergent blocks (the shared prefix is refcounted, only the
-/// boundary fork and the trunk's own blocks are unique). Requests that
-/// don't fit wait in the queue — backpressure instead of failure — and
-/// retiring lanes hand their reservation (and, via `Drop`, their actual
-/// blocks) back.
+/// boundary fork and the trunk's own blocks are unique) — doubled when
+/// resilience checkpoints are enabled, since a lane then also pins a
+/// copy-on-write snapshot whose footprint is bounded by the same worst
+/// case. Requests that don't fit wait in the queue — backpressure instead
+/// of failure — and retiring lanes hand their reservation (and, via
+/// `Drop`, their actual blocks) back.
 struct LaneBudget {
     /// Blocks reserved against the target pool per lane.
     reserve_target: usize,
@@ -122,6 +342,13 @@ struct LaneBudget {
     reserve_draft: usize,
     /// Per-pool cap (both pools), clamped so one lane always fits.
     cap: usize,
+}
+
+/// Per-lane tick result, classified in the worker (so only plain data
+/// crosses back to the scheduler).
+enum StepOutcome {
+    Progress,
+    Fault(ServeError),
 }
 
 /// The batched serving loop (see the module docs).
@@ -134,6 +361,9 @@ pub struct ServeLoop<'a> {
     queue: VecDeque<(u64, ServeRequest)>,
     next_id: u64,
     budget: Option<LaneBudget>,
+    requested_blocks: Option<usize>,
+    resilience: Option<ResilienceConfig>,
+    recovery: RecoveryCounters,
 }
 
 impl<'a> ServeLoop<'a> {
@@ -155,6 +385,9 @@ impl<'a> ServeLoop<'a> {
             queue: VecDeque::new(),
             next_id: 0,
             budget: None,
+            requested_blocks: None,
+            resilience: None,
+            recovery: RecoveryCounters::default(),
         }
     }
 
@@ -173,6 +406,7 @@ impl<'a> ServeLoop<'a> {
         self.spec =
             SpecEngine::new(self.spec.engine, self.spec.sampling).with_kv_storage(storage);
         self.budget = None;
+        self.requested_blocks = None;
         self
     }
 
@@ -185,23 +419,53 @@ impl<'a> ServeLoop<'a> {
     /// (out-of-blocks backpressure), and token streams are identical to an
     /// uncapped run because lane content never depends on admission timing.
     pub fn with_block_budget(mut self, blocks: usize) -> ServeLoop<'a> {
+        self.requested_blocks = Some(blocks);
+        self.rebuild_budget();
+        self
+    }
+
+    /// Enable checkpoint/retry recovery, deadlines and the backend health
+    /// state machine (see the module docs). Completed non-degraded streams
+    /// stay bit-identical to the fault-free oracle; degraded streams stay
+    /// lossless. When a block budget is also set, per-lane reservations
+    /// double to cover the checkpoint snapshot.
+    pub fn with_resilience(mut self, cfg: ResilienceConfig) -> ServeLoop<'a> {
+        self.resilience = Some(cfg);
+        self.rebuild_budget();
+        self
+    }
+
+    /// Recompute the paged pools and per-lane reservations from the
+    /// requested budget and the resilience mode (builder-order
+    /// independent: `with_block_budget` and `with_resilience` may be
+    /// called either way around).
+    fn rebuild_budget(&mut self) {
+        let Some(blocks) = self.requested_blocks else { return };
         let bt = default_block_tokens();
         let meta = self.spec.engine.meta();
         let max_trunk = meta.trunk_lens.iter().copied().max().unwrap_or(8);
-        let reserve_target = meta.target.max_seq.div_ceil(bt);
+        // lane + (with resilience) its copy-on-write checkpoint, each
+        // bounded by the single-lane worst case
+        let factor = if self.resilience.is_some() { 2 } else { 1 };
+        let reserve_target = factor * meta.target.max_seq.div_ceil(bt);
         // draft lane + the handoff cache's divergent blocks (boundary fork
         // + the trunk's own rows; the shared prefix costs nothing)
-        let reserve_draft = meta.draft.max_seq.div_ceil(bt) + max_trunk.div_ceil(bt) + 1;
+        let reserve_draft =
+            factor * (meta.draft.max_seq.div_ceil(bt) + max_trunk.div_ceil(bt) + 1);
         let cap = blocks.max(reserve_target).max(reserve_draft);
         self.spec = SpecEngine::new(self.spec.engine, self.spec.sampling)
             .with_paged_kv(bt, Some(cap));
         self.budget = Some(LaneBudget { reserve_target, reserve_draft, cap });
-        self
     }
 
     /// The engine driving the lanes (pool introspection for tests/benches).
     pub fn spec(&self) -> &SpecEngine<'a> {
         &self.spec
+    }
+
+    /// Fault-handling counters of the most recent [`ServeLoop::run`].
+    pub fn recovery(&self) -> &RecoveryCounters {
+        &self.recovery
     }
 
     /// Enqueue a request; returns its admission-order id.
@@ -224,30 +488,78 @@ impl<'a> ServeLoop<'a> {
         }
     }
 
-    fn retire(lane: Lane, error: Option<String>) -> ServeOutput {
+    fn retire(lane: Lane, error: Option<ServeError>) -> ServeOutput {
         let mut stats = lane.stats;
         stats.wall_secs = lane.started.elapsed().as_secs_f64();
-        let text = lane
+        let (text, tokens) = lane
             .seq
             .as_ref()
-            .map(|seq| tokenizer::decode(&seq.tokens[seq.prompt_len..]))
+            .map(|seq| {
+                let emitted = seq.tokens[seq.prompt_len..].to_vec();
+                (tokenizer::decode(&emitted), emitted)
+            })
             .unwrap_or_default();
-        ServeOutput { id: lane.id, text, stats, error }
+        ServeOutput {
+            id: lane.id,
+            text,
+            tokens,
+            stats,
+            error,
+            degraded: lane.degraded,
+            retries: lane.total_retries,
+        }
     }
 
     /// Drain the queue: admit, tick, retire until every submitted request
     /// has finished. Returns one output per request, sorted by request id;
     /// a lane that fails mid-generation retires with
-    /// [`ServeOutput::error`] set and does not disturb the other lanes.
+    /// [`ServeOutput::error`] set and does not disturb the other lanes,
+    /// and a lane that panics is caught and retired the same way.
     /// Under a block budget ([`ServeLoop::with_block_budget`]) admission
     /// additionally requires a worst-case block reservation in both pools,
-    /// so requests queue — never fail — when blocks run out.
+    /// so requests queue — never fail — when blocks run out. With
+    /// [`ServeLoop::with_resilience`] faults are retried from per-lane
+    /// checkpoints and the backend health machine arbitrates speculative
+    /// vs degraded autoregressive mode (see the module docs).
     pub fn run(&mut self) -> Result<Vec<ServeOutput>> {
+        self.recovery = RecoveryCounters::default();
         let mut active: Vec<Lane> = Vec::new();
         let mut done: Vec<ServeOutput> = Vec::new();
         // worst-case blocks reserved by active lanes (0 when uncapped)
         let (mut reserved_t, mut reserved_d) = (0usize, 0usize);
+        let mut health = BackendHealth::Healthy;
+        // consecutive-fault streaks, in lane order across ticks
+        let (mut healthy_faults, mut degraded_faults) = (0usize, 0usize);
+        let mut degraded_ticks = 0usize;
         loop {
+            if health == BackendHealth::Failed {
+                // breaker fully open: drain everything with a structured
+                // error instead of spinning (each lane's blocks return to
+                // the pools as its Sequence drops)
+                const MSG: &str = "backend circuit breaker open (degraded decode kept faulting)";
+                for lane in active.drain(..) {
+                    if let Some(b) = &self.budget {
+                        reserved_t -= b.reserve_target;
+                        reserved_d -= b.reserve_draft;
+                    }
+                    done.push(Self::retire(
+                        lane,
+                        Some(ServeError::Failed { message: MSG.to_string() }),
+                    ));
+                }
+                while let Some((id, _req)) = self.queue.pop_front() {
+                    done.push(ServeOutput {
+                        id,
+                        text: String::new(),
+                        tokens: Vec::new(),
+                        stats: GenStats::default(),
+                        error: Some(ServeError::Failed { message: MSG.to_string() }),
+                        degraded: false,
+                        retries: 0,
+                    });
+                }
+                break;
+            }
             // admit queued requests into free batch slots (no backend work
             // here: the lane prefills on its first fan-out tick)
             while active.len() < self.max_batch {
@@ -268,18 +580,38 @@ impl<'a> ServeLoop<'a> {
                 }
                 active.push(Lane {
                     id,
+                    seed: req.seed,
                     prompt: req.prompt,
                     max_new: req.max_new,
                     seq: None,
                     rng: Pcg64::new(req.seed, id),
                     stats: GenStats::default(),
                     started: Instant::now(),
+                    checkpoint: None,
+                    retries: 0,
+                    total_retries: 0,
+                    degraded: false,
                 });
             }
             if active.is_empty() {
                 break;
             }
-            // one speculation block per lane, fanned out over the pool
+            // tick mode: degraded lanes decode autoregressively, except on
+            // probe ticks, which re-attempt the speculative path
+            let probing = health == BackendHealth::Degraded
+                && self
+                    .resilience
+                    .as_ref()
+                    .is_some_and(|r| r.probe_interval > 0
+                        && (degraded_ticks + 1) % r.probe_interval == 0);
+            let ar = health == BackendHealth::Degraded && !probing;
+            if probing {
+                self.recovery.probes += 1;
+            }
+
+            // one block (or one AR token) per lane, fanned out over the
+            // pool; panics are caught per lane so one poisoned request
+            // cannot take down the batch
             let spec = &self.spec;
             let verifier = self.verifier;
             let policy = self.policy;
@@ -287,34 +619,188 @@ impl<'a> ServeLoop<'a> {
                 std::mem::take(&mut active),
                 self.workers,
                 || (),
-                |_state, _i, mut lane: Lane| -> (Lane, Option<String>) {
-                    let res = (|| -> Result<()> {
-                        if lane.seq.is_none() {
-                            lane.seq = Some(spec.start(&lane.prompt)?);
+                |_state, _i, mut lane: Lane| -> (Lane, StepOutcome) {
+                    let res = catch_unwind(AssertUnwindSafe(|| {
+                        lane_tick(spec, verifier, policy, &mut lane, ar)
+                    }));
+                    let outcome = match res {
+                        Ok(Ok(())) => StepOutcome::Progress,
+                        Ok(Err(e)) => StepOutcome::Fault(classify(e)),
+                        Err(p) => {
+                            StepOutcome::Fault(ServeError::Panic { message: panic_message(p) })
                         }
-                        if !Self::lane_done(&lane) {
-                            step_lane(spec, verifier, policy, &mut lane)?;
-                        }
-                        Ok(())
-                    })();
-                    let err = res.err().map(|e| e.to_string());
-                    (lane, err)
+                    };
+                    (lane, outcome)
                 },
             );
-            for (lane, err) in stepped {
-                let retiring = err.is_some() || Self::lane_done(&lane);
-                if retiring {
-                    if let Some(b) = &self.budget {
-                        // the lane's Sequence drops with it, returning its
-                        // actual blocks to the pools' free lists
-                        reserved_t -= b.reserve_target;
-                        reserved_d -= b.reserve_draft;
+
+            // phase 1: update the health machine from this tick's outcomes
+            // (lane order — deterministic given a deterministic fault
+            // schedule, never dependent on worker timing)
+            let prev_health = health;
+            let mut tick_faults = 0usize;
+            if let Some(cfg) = &self.resilience {
+                for (_, outcome) in &stepped {
+                    match outcome {
+                        StepOutcome::Progress => match health {
+                            BackendHealth::Healthy => healthy_faults = 0,
+                            BackendHealth::Degraded if ar => degraded_faults = 0,
+                            _ => {}
+                        },
+                        StepOutcome::Fault(_) => {
+                            tick_faults += 1;
+                            match health {
+                                BackendHealth::Healthy => {
+                                    healthy_faults += 1;
+                                    if healthy_faults >= cfg.degrade_after {
+                                        health = BackendHealth::Degraded;
+                                        degraded_faults = 0;
+                                        degraded_ticks = 0;
+                                        self.recovery.degraded_entered += 1;
+                                    }
+                                }
+                                BackendHealth::Degraded if ar => {
+                                    degraded_faults += 1;
+                                    if degraded_faults >= cfg.fail_after {
+                                        health = BackendHealth::Failed;
+                                    }
+                                }
+                                // probe failures keep the loop degraded but
+                                // never open the breaker fully
+                                _ => {}
+                            }
+                        }
                     }
-                    // a failing lane retires with its error recorded; the
-                    // other lanes are unaffected
-                    done.push(Self::retire(lane, err));
-                } else {
-                    active.push(lane);
+                }
+                if probing && tick_faults == 0 {
+                    health = BackendHealth::Healthy;
+                    healthy_faults = 0;
+                    self.recovery.recoveries += 1;
+                }
+            }
+            let just_degraded =
+                prev_health == BackendHealth::Healthy && health != BackendHealth::Healthy;
+
+            // phase 2: lane fates, with the post-tick health known
+            for (mut lane, outcome) in stepped {
+                match outcome {
+                    StepOutcome::Progress => {
+                        lane.retries = 0;
+                        if self.resilience.is_some() {
+                            if let Some(seq) = &lane.seq {
+                                lane.checkpoint =
+                                    Some(Checkpoint { seq: seq.clone(), rng: lane.rng.clone() });
+                            }
+                        }
+                        let deadline_hit = self
+                            .resilience
+                            .as_ref()
+                            .and_then(|r| r.deadline)
+                            .is_some_and(|d| lane.started.elapsed() >= d);
+                        if Self::lane_done(&lane) {
+                            if let Some(b) = &self.budget {
+                                reserved_t -= b.reserve_target;
+                                reserved_d -= b.reserve_draft;
+                            }
+                            done.push(Self::retire(lane, None));
+                        } else if deadline_hit {
+                            self.recovery.deadline_retired += 1;
+                            if let Some(b) = &self.budget {
+                                reserved_t -= b.reserve_target;
+                                reserved_d -= b.reserve_draft;
+                            }
+                            let elapsed_secs = lane.started.elapsed().as_secs_f64();
+                            done.push(Self::retire(
+                                lane,
+                                Some(ServeError::Deadline { elapsed_secs }),
+                            ));
+                        } else {
+                            active.push(lane);
+                        }
+                    }
+                    StepOutcome::Fault(err) => {
+                        match &err {
+                            ServeError::Transient { .. } => self.recovery.transient_seen += 1,
+                            ServeError::Corrupt { .. } => self.recovery.corrupt_seen += 1,
+                            ServeError::Panic { .. } => self.recovery.panics += 1,
+                            _ => {}
+                        }
+                        let Some(cfg) = &self.resilience else {
+                            // no recovery configured: the fault retires the
+                            // lane immediately (its blocks return via Drop);
+                            // the other lanes are unaffected
+                            self.recovery.surfaced += 1;
+                            if let Some(b) = &self.budget {
+                                reserved_t -= b.reserve_target;
+                                reserved_d -= b.reserve_draft;
+                            }
+                            done.push(Self::retire(lane, Some(err)));
+                            continue;
+                        };
+                        // restore the checkpoint: sequence (partially
+                        // committed blocks return to the pools as the
+                        // failed state drops) and rng stream state, so the
+                        // re-execution is bit-identical to a fault-free run
+                        match &lane.checkpoint {
+                            Some(cp) => {
+                                lane.seq = Some(cp.seq.clone());
+                                lane.rng = cp.rng.clone();
+                            }
+                            None => {
+                                lane.seq = None;
+                                lane.rng = Pcg64::new(lane.seed, lane.id);
+                            }
+                        }
+                        let deadline_hit =
+                            cfg.deadline.is_some_and(|d| lane.started.elapsed() >= d);
+                        if health == BackendHealth::Failed {
+                            // drained (with a surfaced error) next tick
+                            self.recovery.surfaced += 1;
+                            active.push(lane);
+                        } else if deadline_hit {
+                            self.recovery.surfaced += 1;
+                            self.recovery.deadline_retired += 1;
+                            if let Some(b) = &self.budget {
+                                reserved_t -= b.reserve_target;
+                                reserved_d -= b.reserve_draft;
+                            }
+                            let elapsed_secs = lane.started.elapsed().as_secs_f64();
+                            done.push(Self::retire(
+                                lane,
+                                Some(ServeError::Deadline { elapsed_secs }),
+                            ));
+                        } else if just_degraded || probing {
+                            // mode switch / failed probe: re-execute from
+                            // the checkpoint without charging the lane —
+                            // the fault was the backend's, not the lane's
+                            self.recovery.retries += 1;
+                            lane.retries = 0;
+                            lane.total_retries += 1;
+                            active.push(lane);
+                        } else if lane.retries < cfg.max_retries {
+                            self.recovery.retries += 1;
+                            lane.retries += 1;
+                            lane.total_retries += 1;
+                            active.push(lane);
+                        } else {
+                            self.recovery.surfaced += 1;
+                            if let Some(b) = &self.budget {
+                                reserved_t -= b.reserve_target;
+                                reserved_d -= b.reserve_draft;
+                            }
+                            let retries = lane.retries;
+                            done.push(Self::retire(
+                                lane,
+                                Some(ServeError::Exhausted { retries, last: err.to_string() }),
+                            ));
+                        }
+                    }
+                }
+            }
+            if health == BackendHealth::Degraded {
+                degraded_ticks += 1;
+                if ar {
+                    self.recovery.degraded_ticks += 1;
                 }
             }
         }
@@ -323,17 +809,56 @@ impl<'a> ServeLoop<'a> {
     }
 }
 
-/// One speculation block for one lane — the exact per-block body of
-/// [`SpecEngine::generate`], so a lane's stream matches a serial run.
-fn step_lane(
+/// One tick of lane-local work: prefill on the first tick, then either one
+/// speculation block (the exact per-block body of [`SpecEngine::generate`],
+/// so a lane's stream matches a serial run) or — in degraded mode — one
+/// lossless autoregressive token.
+fn lane_tick(
     spec: &SpecEngine<'_>,
     verifier: &dyn Verifier,
     policy: &dyn ActionPolicy,
     lane: &mut Lane,
+    ar: bool,
 ) -> Result<()> {
-    let seq = lane.seq.as_mut().expect("lane prefilled before stepping");
-    let action = spec.choose_action(seq, policy)?;
-    let b = spec.step(seq, verifier, action, &mut lane.rng)?;
-    lane.stats.add_block(&b);
+    if lane.seq.is_none() {
+        lane.seq = Some(spec.start(&lane.prompt)?);
+    }
+    if !ServeLoop::lane_done(lane) {
+        if ar {
+            let seq = lane.seq.as_mut().expect("lane prefilled before stepping");
+            let b = spec.step_autoregressive(seq, &mut lane.rng)?;
+            if b.emitted > 0 {
+                lane.degraded = true;
+            }
+            lane.stats.add_block(&b);
+        } else {
+            let seq = lane.seq.as_mut().expect("lane prefilled before stepping");
+            let action = spec.choose_action(seq, policy)?;
+            let b = spec.step(seq, verifier, action, &mut lane.rng)?;
+            lane.stats.add_block(&b);
+        }
+    }
     Ok(())
+}
+
+/// Classify a lane failure into the [`ServeError`] taxonomy: typed
+/// [`DispatchFault`]s (raised by the fault injector and the corruption
+/// guards) map to their class; anything else is treated as transient —
+/// retry-worthy by default, and a deterministic error simply exhausts its
+/// bounded retries.
+fn classify(e: anyhow::Error) -> ServeError {
+    match e.downcast_ref::<DispatchFault>() {
+        Some(f) if f.kind == FaultKind::Corrupt => ServeError::Corrupt { message: e.to_string() },
+        _ => ServeError::Transient { message: e.to_string() },
+    }
+}
+
+fn panic_message(p: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "lane panicked (non-string payload)".to_string()
+    }
 }

@@ -10,13 +10,20 @@
 //! * [`SpecEngine::generate`] — one sequence, serial blocks;
 //! * [`server`] — the TCP line-protocol front-end (single lane);
 //! * [`ServeLoop`] — the multi-request continuous-batching loop with
-//!   per-request KV-cache lanes and data-parallel per-tick block work.
+//!   per-request KV-cache lanes, data-parallel per-tick block work, and an
+//!   opt-in recovery layer ([`ServeLoop::with_resilience`]): per-lane
+//!   checkpoints with deterministic retry, per-request deadlines, the
+//!   [`ServeError`] failure taxonomy, and a [`BackendHealth`] circuit
+//!   breaker that falls back to lossless autoregressive decoding.
 
 mod batch;
 pub mod server;
 mod spec;
 
-pub use batch::{ServeLoop, ServeOutput, ServeRequest};
+pub use batch::{
+    BackendHealth, RecoveryCounters, ResilienceConfig, ServeError, ServeLoop, ServeOutput,
+    ServeRequest,
+};
 pub use spec::{generate_autoregressive, KvPools, RootFeatures, Sequence, SpecEngine};
 
 use crate::dist::{NodeDist, SamplingConfig};

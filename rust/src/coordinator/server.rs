@@ -6,15 +6,33 @@
 //!   response: {"text": "...", "tokens": n, "blocks": m, "tps": x,
 //!              "block_efficiency": y}
 //!
+//! Every failure is answered with a structured error object rather than a
+//! bare string (or a dropped connection):
+//!   error:    {"error": {"kind": "...", "message": "..."}}
+//! with stable kinds `bad_json` (unparseable line), `bad_request` (wrong
+//! shape, e.g. missing prompt), `bad_params` (out-of-range or non-numeric
+//! sampling parameters), `unknown_verifier`, `oversized_line` (longer than
+//! [`ServerConfig::max_line_bytes`]; the rest of the line is drained and
+//! the connection survives), `too_many_requests` (the per-connection cap
+//! [`ServerConfig::max_requests_per_conn`] was hit; the connection closes
+//! after the reply) and `generation` (the backend failed mid-generation).
+//!
+//! Slow or stalled clients are bounded by [`ServerConfig::read_timeout`] /
+//! [`ServerConfig::write_timeout`]: an idle connection is closed (without
+//! tearing down the listener) instead of wedging the single-lane server
+//! forever. Oversized lines are skipped in bounded chunks — a client
+//! streaming an endless line can never balloon server memory past the cap.
+//!
 //! The listener accepts connections sequentially and processes requests in
 //! arrival order — a deliberate single-lane scheduler matching the paper's
 //! 1-core testbed. For concurrent multi-request serving use the batched
 //! [`super::ServeLoop`] instead.
 
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
+use std::net::TcpListener;
+use std::time::Duration;
 
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
 use crate::coordinator::{FixedPolicy, SpecEngine};
 use crate::dist::SamplingConfig;
@@ -30,6 +48,58 @@ pub struct ServerConfig {
     pub addr: String,
     /// Seed of the server-wide rng stream.
     pub seed: u64,
+    /// Per-read socket timeout; an idle connection is closed (the listener
+    /// keeps serving). `None` waits forever.
+    pub read_timeout: Option<Duration>,
+    /// Per-write socket timeout; a stalled client is disconnected rather
+    /// than wedging the server.
+    pub write_timeout: Option<Duration>,
+    /// Longest accepted request line in bytes; longer lines are answered
+    /// with an `oversized_line` error and skipped in bounded chunks.
+    pub max_line_bytes: usize,
+    /// Requests served per connection before a `too_many_requests` reply
+    /// closes it.
+    pub max_requests_per_conn: usize,
+}
+
+impl ServerConfig {
+    /// Config with the given bind address and rng seed and hardened
+    /// defaults for everything else (30 s socket timeouts, 64 KiB line
+    /// cap, 1024 requests per connection).
+    pub fn new(addr: impl Into<String>, seed: u64) -> ServerConfig {
+        ServerConfig { addr: addr.into(), seed, ..ServerConfig::default() }
+    }
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig {
+            addr: "127.0.0.1:7333".to_string(),
+            seed: 0,
+            read_timeout: Some(Duration::from_secs(30)),
+            write_timeout: Some(Duration::from_secs(30)),
+            max_line_bytes: 64 * 1024,
+            max_requests_per_conn: 1024,
+        }
+    }
+}
+
+/// A structured request-level failure: the stable `kind` tag plus a
+/// human-readable message, rendered as the protocol's error object.
+struct ReqError {
+    kind: &'static str,
+    message: String,
+}
+
+impl ReqError {
+    fn new(kind: &'static str, message: impl Into<String>) -> ReqError {
+        ReqError { kind, message: message.into() }
+    }
+}
+
+/// The protocol's error reply: `{"error": {"kind": ..., "message": ...}}`.
+fn error_reply(kind: &str, message: &str) -> Json {
+    obj(vec![("error", obj(vec![("kind", s(kind)), ("message", s(message))]))])
 }
 
 /// Serve forever (or until `max_requests` when Some — used by tests).
@@ -40,7 +110,11 @@ pub fn serve(engine: &dyn Backend, cfg: &ServerConfig, max_requests: Option<usiz
     let mut served = 0usize;
     for stream in listener.incoming() {
         let stream = stream?;
-        served += handle_conn(engine, stream, &mut rng)?;
+        stream.set_read_timeout(cfg.read_timeout)?;
+        stream.set_write_timeout(cfg.write_timeout)?;
+        let mut reader = BufReader::new(stream.try_clone()?);
+        let mut out = stream;
+        served += handle_conn(engine, &mut reader, &mut out, cfg, &mut rng)?;
         if let Some(m) = max_requests {
             if served >= m {
                 break;
@@ -50,53 +124,165 @@ pub fn serve(engine: &dyn Backend, cfg: &ServerConfig, max_requests: Option<usiz
     Ok(())
 }
 
-fn handle_conn(engine: &dyn Backend, stream: TcpStream, rng: &mut Pcg64) -> Result<usize> {
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut out = stream;
+/// Outcome of one capped line read.
+enum LineRead {
+    /// Clean end of stream.
+    Eof,
+    /// A complete line within the cap (trailing newline stripped by caller).
+    Line,
+    /// The line exceeded the cap; its remainder was drained in bounded
+    /// chunks and the reader stands at the start of the next line.
+    Oversized,
+}
+
+/// Read one `\n`-terminated line of at most `cap` bytes. Oversized lines
+/// are consumed to their newline through the BufRead buffer (bounded
+/// memory: at most `cap` + one buffer's worth resident at a time).
+fn read_capped_line<R: BufRead>(
+    reader: &mut R,
+    buf: &mut String,
+    cap: usize,
+) -> std::io::Result<LineRead> {
+    buf.clear();
+    let n = (&mut *reader).take(cap as u64 + 1).read_line(buf)?;
+    if n == 0 {
+        return Ok(LineRead::Eof);
+    }
+    // newline within the window = complete line (content ≤ cap bytes);
+    // n ≤ cap without one = EOF-terminated final line, also complete
+    if buf.ends_with('\n') || n <= cap {
+        return Ok(LineRead::Line);
+    }
+    // over the cap: drop what we buffered and skip to the newline
+    buf.clear();
+    loop {
+        let (done, used) = {
+            let chunk = reader.fill_buf()?;
+            if chunk.is_empty() {
+                break; // EOF mid-line
+            }
+            match chunk.iter().position(|&b| b == b'\n') {
+                Some(i) => (true, i + 1),
+                None => (false, chunk.len()),
+            }
+        };
+        reader.consume(used);
+        if done {
+            break;
+        }
+    }
+    Ok(LineRead::Oversized)
+}
+
+/// True for the error kinds socket timeouts surface as (platform-dependent
+/// which of the two).
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut)
+}
+
+/// Serve one connection: returns the number of requests answered.
+/// Read/write timeouts and disconnects close this connection gracefully
+/// (never the listener); malformed requests are answered with structured
+/// errors and the connection survives.
+fn handle_conn<R: BufRead, W: Write>(
+    engine: &dyn Backend,
+    reader: &mut R,
+    out: &mut W,
+    cfg: &ServerConfig,
+    rng: &mut Pcg64,
+) -> Result<usize> {
     let mut line = String::new();
     let mut count = 0usize;
     loop {
-        line.clear();
-        if reader.read_line(&mut line)? == 0 {
-            return Ok(count);
-        }
-        let reply = match handle_request(engine, line.trim(), rng) {
-            Ok(j) => j,
-            Err(e) => obj(vec![("error", s(&format!("{e}")))]),
+        let read = match read_capped_line(reader, &mut line, cfg.max_line_bytes) {
+            Ok(r) => r,
+            Err(e) if is_timeout(&e) => return Ok(count), // idle client: close
+            Err(e) if e.kind() == ErrorKind::InvalidData => {
+                // non-UTF-8 bytes: reply once, then close (the stream
+                // position within the garbage is unknowable)
+                let reply = error_reply("bad_request", "request line is not valid UTF-8");
+                let _ = writeln!(out, "{reply}");
+                return Ok(count);
+            }
+            Err(e) => return Err(anyhow::Error::new(e)),
         };
-        writeln!(out, "{reply}")?;
+        let reply = match read {
+            LineRead::Eof => return Ok(count),
+            LineRead::Oversized => error_reply(
+                "oversized_line",
+                &format!("request line exceeds {} bytes", cfg.max_line_bytes),
+            ),
+            LineRead::Line => {
+                if count >= cfg.max_requests_per_conn {
+                    let reply = error_reply(
+                        "too_many_requests",
+                        &format!("connection served {count} requests; reconnect to continue"),
+                    );
+                    let _ = writeln!(out, "{reply}");
+                    return Ok(count);
+                }
+                match handle_request(engine, line.trim(), rng) {
+                    Ok(j) => j,
+                    Err(e) => error_reply(e.kind, &e.message),
+                }
+            }
+        };
+        match writeln!(out, "{reply}") {
+            Ok(()) => {}
+            Err(e) if is_timeout(&e) || e.kind() == ErrorKind::BrokenPipe => return Ok(count),
+            Err(e) => return Err(anyhow::Error::new(e)),
+        }
         count += 1;
     }
 }
 
-fn handle_request(engine: &dyn Backend, line: &str, rng: &mut Pcg64) -> Result<Json> {
-    let req = Json::parse(line).map_err(|e| anyhow!("bad json: {e}"))?;
+/// A numeric parameter with a default and an inclusive validity range;
+/// present-but-non-numeric and out-of-range values are `bad_params`.
+fn num_param(req: &Json, key: &str, default: f64, lo: f64, hi: f64) -> Result<f64, ReqError> {
+    let Ok(v) = req.get(key) else { return Ok(default) };
+    match v.as_f64() {
+        None => Err(ReqError::new("bad_params", format!("{key} must be a number"))),
+        Some(x) if !(lo..=hi).contains(&x) => Err(ReqError::new(
+            "bad_params",
+            format!("{key} = {x} out of range [{lo}, {hi}]"),
+        )),
+        Some(x) => Ok(x),
+    }
+}
+
+fn handle_request(engine: &dyn Backend, line: &str, rng: &mut Pcg64) -> Result<Json, ReqError> {
+    let req = Json::parse(line).map_err(|e| ReqError::new("bad_json", format!("bad json: {e}")))?;
     let prompt = req
         .get("prompt")
-        .map_err(|e| anyhow!(e))?
+        .map_err(|e| ReqError::new("bad_request", e))?
         .as_str()
-        .ok_or_else(|| anyhow!("prompt must be a string"))?
+        .ok_or_else(|| ReqError::new("bad_request", "prompt must be a string"))?
         .to_string();
-    let gx = |k: &str, d: f64| req.get(k).ok().and_then(|v| v.as_f64()).unwrap_or(d);
-    let sampling = SamplingConfig::new(gx("temperature", 1.0) as f32, gx("top_p", 1.0) as f32);
+    let temperature = num_param(&req, "temperature", 1.0, 0.0, 16.0)? as f32;
+    let top_p = num_param(&req, "top_p", 1.0, 0.0, 1.0)? as f32;
+    if top_p <= 0.0 {
+        return Err(ReqError::new("bad_params", "top_p must be in (0, 1]"));
+    }
+    let sampling = SamplingConfig::new(temperature, top_p);
     let vname = req
         .get("verifier")
         .ok()
         .and_then(|v| v.as_str())
         .unwrap_or("SpecInfer")
         .to_string();
-    let verifier =
-        verify::verifier(&vname).ok_or_else(|| anyhow!("unknown verifier {vname}"))?;
+    let verifier = verify::verifier(&vname)
+        .ok_or_else(|| ReqError::new("unknown_verifier", format!("unknown verifier {vname}")))?;
     let action = Action::new(
-        gx("k", 2.0) as usize,
-        gx("l1", 2.0) as usize,
-        gx("l2", 4.0) as usize,
+        num_param(&req, "k", 2.0, 1.0, 64.0)? as usize,
+        num_param(&req, "l1", 2.0, 0.0, 64.0)? as usize,
+        num_param(&req, "l2", 4.0, 0.0, 64.0)? as usize,
     );
-    let max_new = gx("max_new", 64.0) as usize;
+    let max_new = num_param(&req, "max_new", 64.0, 1.0, 4096.0)? as usize;
 
     let spec = SpecEngine::new(engine, sampling);
-    let (text, stats) =
-        spec.generate(&prompt, max_new, verifier.as_ref(), &FixedPolicy(action), rng)?;
+    let (text, stats) = spec
+        .generate(&prompt, max_new, verifier.as_ref(), &FixedPolicy(action), rng)
+        .map_err(|e| ReqError::new("generation", e.to_string()))?;
     Ok(obj(vec![
         ("text", s(&text)),
         ("tokens", num(stats.tokens as f64)),
@@ -104,4 +290,142 @@ fn handle_request(engine: &dyn Backend, line: &str, rng: &mut Pcg64) -> Result<J
         ("tps", num(stats.tps())),
         ("block_efficiency", num(stats.block_efficiency())),
     ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{CpuModelConfig, CpuRefBackend};
+    use std::io::Cursor;
+
+    fn backend() -> CpuRefBackend {
+        CpuRefBackend::new(&CpuModelConfig::tiny(), 11)
+    }
+
+    fn request(engine: &dyn Backend, line: &str) -> Json {
+        let mut rng = Pcg64::seeded(0);
+        match handle_request(engine, line, &mut rng) {
+            Ok(j) => j,
+            Err(e) => error_reply(e.kind, &e.message),
+        }
+    }
+
+    fn error_kind(j: &Json) -> Option<String> {
+        j.get("error")
+            .ok()
+            .and_then(|e| e.get("kind").ok())
+            .and_then(|k| k.as_str())
+            .map(|k| k.to_string())
+    }
+
+    #[test]
+    fn malformed_json_is_structured_bad_json() {
+        let b = backend();
+        let j = request(&b, "{not json");
+        assert_eq!(error_kind(&j).as_deref(), Some("bad_json"));
+        let msg = j.get("error").unwrap().get("message").unwrap().as_str().unwrap().to_string();
+        assert!(msg.contains("bad json"), "{msg}");
+    }
+
+    #[test]
+    fn missing_or_nonstring_prompt_is_bad_request() {
+        let b = backend();
+        let j = request(&b, r#"{"max_new": 4}"#);
+        assert_eq!(error_kind(&j).as_deref(), Some("bad_request"));
+        let j = request(&b, r#"{"prompt": 7}"#);
+        assert_eq!(error_kind(&j).as_deref(), Some("bad_request"));
+    }
+
+    #[test]
+    fn unknown_verifier_is_structured() {
+        let b = backend();
+        let j = request(&b, r#"{"prompt": "hi", "verifier": "NotAVerifier"}"#);
+        assert_eq!(error_kind(&j).as_deref(), Some("unknown_verifier"));
+        let msg = j.get("error").unwrap().get("message").unwrap().as_str().unwrap().to_string();
+        assert!(msg.contains("NotAVerifier"), "{msg}");
+    }
+
+    #[test]
+    fn out_of_range_and_nonnumeric_params_are_bad_params() {
+        let b = backend();
+        for line in [
+            r#"{"prompt": "hi", "top_p": 0.0}"#,
+            r#"{"prompt": "hi", "top_p": 1.5}"#,
+            r#"{"prompt": "hi", "temperature": -1}"#,
+            r#"{"prompt": "hi", "temperature": "hot"}"#,
+            r#"{"prompt": "hi", "max_new": 0}"#,
+            r#"{"prompt": "hi", "max_new": 100000}"#,
+            r#"{"prompt": "hi", "k": 0}"#,
+            r#"{"prompt": "hi", "l1": -3}"#,
+        ] {
+            let j = request(&b, line);
+            assert_eq!(error_kind(&j).as_deref(), Some("bad_params"), "line: {line}");
+        }
+    }
+
+    #[test]
+    fn valid_request_generates() {
+        let b = backend();
+        let j = request(&b, r#"{"prompt": "2+2= ", "max_new": 4, "temperature": 0}"#);
+        assert!(error_kind(&j).is_none(), "{j}");
+        assert!(j.get("text").unwrap().as_str().is_some());
+        assert!(j.get("tokens").unwrap().as_f64().unwrap() >= 1.0);
+    }
+
+    #[test]
+    fn oversized_line_replies_and_connection_survives() {
+        let b = backend();
+        let mut cfg = ServerConfig::new("unused", 0);
+        cfg.max_line_bytes = 64;
+        let huge = format!("{{\"prompt\": \"{}\"}}\n", "x".repeat(500));
+        let follow = r#"{"prompt": "2+2= ", "max_new": 2, "temperature": 0}"#;
+        let input = format!("{huge}{follow}\n");
+        let mut reader = Cursor::new(input.into_bytes());
+        let mut out: Vec<u8> = Vec::new();
+        let mut rng = Pcg64::seeded(0);
+        let served = handle_conn(&b, &mut reader, &mut out, &cfg, &mut rng).unwrap();
+        assert_eq!(served, 2);
+        let text = String::from_utf8(out).unwrap();
+        let replies: Vec<&str> = text.lines().collect();
+        assert_eq!(replies.len(), 2, "{text}");
+        let first = Json::parse(replies[0]).unwrap();
+        assert_eq!(error_kind(&first).as_deref(), Some("oversized_line"));
+        let second = Json::parse(replies[1]).unwrap();
+        assert!(error_kind(&second).is_none(), "{text}");
+    }
+
+    #[test]
+    fn per_connection_request_cap_closes_with_structured_error() {
+        let b = backend();
+        let mut cfg = ServerConfig::new("unused", 0);
+        cfg.max_requests_per_conn = 2;
+        let line = r#"{"prompt": "2+2= ", "max_new": 2, "temperature": 0}"#;
+        let input = format!("{line}\n{line}\n{line}\n{line}\n");
+        let mut reader = Cursor::new(input.into_bytes());
+        let mut out: Vec<u8> = Vec::new();
+        let mut rng = Pcg64::seeded(0);
+        let served = handle_conn(&b, &mut reader, &mut out, &cfg, &mut rng).unwrap();
+        assert_eq!(served, 2);
+        let text = String::from_utf8(out).unwrap();
+        let replies: Vec<&str> = text.lines().collect();
+        assert_eq!(replies.len(), 3, "{text}");
+        let last = Json::parse(replies[2]).unwrap();
+        assert_eq!(error_kind(&last).as_deref(), Some("too_many_requests"));
+    }
+
+    #[test]
+    fn non_utf8_line_replies_then_closes() {
+        let b = backend();
+        let cfg = ServerConfig::new("unused", 0);
+        let mut bytes = vec![b'{', 0xFF, 0xFE, b'}'];
+        bytes.push(b'\n');
+        let mut reader = Cursor::new(bytes);
+        let mut out: Vec<u8> = Vec::new();
+        let mut rng = Pcg64::seeded(0);
+        let served = handle_conn(&b, &mut reader, &mut out, &cfg, &mut rng).unwrap();
+        assert_eq!(served, 0);
+        let text = String::from_utf8(out).unwrap();
+        let j = Json::parse(text.trim()).unwrap();
+        assert_eq!(error_kind(&j).as_deref(), Some("bad_request"));
+    }
 }

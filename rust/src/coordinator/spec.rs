@@ -9,13 +9,13 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
 use super::{ActionPolicy, BlockStats, GenStats, StepFeatures};
 use crate::dist::{DistStorage, NodeDist, SamplingConfig};
 use crate::draft::{accepted_row_extent, draft_delayed, Action, DraftScratch};
 use crate::kvcache::{default_block_tokens, BlockPool, KvCache, KvStorage};
-use crate::runtime::{Backend, Role};
+use crate::runtime::{guard_finite, Backend, FaultOp, Role};
 use crate::tokenizer;
 use crate::tree::DraftTree;
 use crate::util::Pcg64;
@@ -153,7 +153,9 @@ impl<'a> SpecEngine<'a> {
         let len = toks.len();
 
         let t_out = self.engine.prefill(Role::Target, &toks_i32, len)?;
+        guard_finite(FaultOp::Prefill, "target prefill logits", &t_out.logits)?;
         let d_out = self.engine.prefill(Role::Draft, &toks_i32, len)?;
+        guard_finite(FaultOp::Prefill, "draft prefill logits", &d_out.logits)?;
 
         let mut target_kv = self.new_cache(Role::Target);
         let mut draft_kv = self.new_cache(Role::Draft);
@@ -252,6 +254,7 @@ impl<'a> SpecEngine<'a> {
             &bias,
             seq.root_pos,
         )?;
+        guard_finite(FaultOp::TreeVerify, "tree-pass logits", &out.logits)?;
         let v = meta.target.vocab;
         let storage = DistStorage::global();
         for i in 0..tree.len() {
@@ -370,6 +373,9 @@ impl<'a> SpecEngine<'a> {
                     tree.nodes[deepest].token,
                     pos,
                 )?;
+                // the logits are unused here, but non-finite logits mean
+                // the forward pass (and so the KV rows) cannot be trusted
+                guard_finite(FaultOp::Decode, "backfill decode logits", &d.logits)?;
                 seq.draft_kv.commit_row(&d.k_row, &d.v_row, pos);
             }
         }
@@ -431,9 +437,51 @@ impl<'a> SpecEngine<'a> {
             root,
             seq.root_pos,
         )?;
+        guard_finite(FaultOp::Decode, "root-feature decode logits", &d.logits)?;
         Ok(RootFeatures {
             hidden_q_cur: d.hidden,
             q_root: NodeDist::from_logits(&d.logits, self.sampling, DistStorage::global()),
+        })
+    }
+
+    /// One plain autoregressive step on an in-flight sequence: a single
+    /// target decode, sampled from the exact target distribution — the
+    /// serving loop's lossless degraded mode when the speculative path
+    /// (rollout / tree dispatches) is faulting. Also runs one draft decode
+    /// so the sequence's draft cache stays row-complete: if the backend
+    /// recovers and the lane switches back to speculation, drafting
+    /// attends every committed position, exactly as if the tokens had been
+    /// committed by speculative blocks. Rows are committed only after both
+    /// dispatches pass the corruption guards, and the rng is consumed by
+    /// exactly one draw per emitted token.
+    pub fn step_autoregressive(&self, seq: &mut Sequence, rng: &mut Pcg64) -> Result<BlockStats> {
+        let meta = self.engine.meta();
+        if seq.root_pos + 2 >= meta.target.max_seq {
+            seq.finished = true;
+            return Ok(BlockStats::default());
+        }
+        let root = *seq.tokens.last().unwrap();
+        let t0 = Instant::now();
+        let out = self.engine.decode(Role::Target, seq.target_kv.view(), root, seq.root_pos)?;
+        guard_finite(FaultOp::Decode, "target decode logits", &out.logits)?;
+        let d = self.engine.decode(Role::Draft, seq.draft_kv.view(), root, seq.root_pos)?;
+        guard_finite(FaultOp::Decode, "draft decode logits", &d.logits)?;
+        seq.target_kv.commit_row(&out.k_row, &out.v_row, seq.root_pos);
+        seq.draft_kv.commit_row(&d.k_row, &d.v_row, seq.root_pos);
+        let p = NodeDist::from_logits(&out.logits, self.sampling, DistStorage::global());
+        let tok = p.sample(rng) as u32;
+        seq.tokens.push(tok);
+        seq.root_pos += 1;
+        if tokenizer::is_terminal(tok) || seq.root_pos + 2 >= meta.target.max_seq {
+            seq.finished = true;
+        }
+        Ok(BlockStats {
+            accepted: 0,
+            emitted: 1,
+            draft_secs: 0.0,
+            tree_secs: t0.elapsed().as_secs_f64(),
+            verify_secs: 0.0,
+            tree_nodes: 0,
         })
     }
 }
@@ -542,9 +590,8 @@ pub fn generate_autoregressive(
     let t0 = Instant::now();
     while !seq.finished && seq.tokens.len() - seq.prompt_len < max_new {
         let root = *seq.tokens.last().unwrap();
-        let out = engine
-            .decode(Role::Target, seq.target_kv.view(), root, seq.root_pos)
-            .map_err(|e| anyhow!(e))?;
+        let out = engine.decode(Role::Target, seq.target_kv.view(), root, seq.root_pos)?;
+        guard_finite(FaultOp::Decode, "target decode logits", &out.logits)?;
         seq.target_kv.commit_row(&out.k_row, &out.v_row, seq.root_pos);
         let p = NodeDist::from_logits(&out.logits, sampling, DistStorage::global());
         let tok = p.sample(rng) as u32;

@@ -11,7 +11,7 @@ use anyhow::Result;
 
 use crate::dist::{DistStorage, NodeDist, SamplingConfig};
 use crate::kvcache::KvCache;
-use crate::runtime::{Backend, RolloutOut};
+use crate::runtime::{guard_finite, Backend, FaultOp, RolloutOut};
 use crate::tree::{DraftTree, PathDraws, Provenance};
 use crate::util::Pcg64;
 
@@ -129,6 +129,7 @@ pub fn draft_delayed(
             sampling.temperature,
             sampling.top_p,
         )?;
+        guard_finite(FaultOp::Rollout, "trunk rollout dists", &out.dists)?;
         let storage = DistStorage::global();
         for step in 0..a.l1 {
             let q = NodeDist::from_probs(&out.dists[step * v..(step + 1) * v], storage);
@@ -176,6 +177,7 @@ pub fn draft_delayed(
             sampling.temperature,
             sampling.top_p,
         )?;
+        guard_finite(FaultOp::Rollout, "branch rollout dists", &out.dists)?;
         let storage = DistStorage::global();
         for b in 0..a.k {
             let mut cur = branch_point;

@@ -151,10 +151,10 @@ fn cmd_generate(argv: Vec<String>) -> Result<()> {
 fn cmd_serve(argv: Vec<String>) -> Result<()> {
     let a = Args::parse(argv, &[]).map_err(|e| anyhow!(e))?;
     let backend = load_backend(&a)?;
-    let cfg = server::ServerConfig {
-        addr: a.get_or("addr", "127.0.0.1:7333").to_string(),
-        seed: a.get_usize("seed", 0).map_err(|e| anyhow!(e))? as u64,
-    };
+    let cfg = server::ServerConfig::new(
+        a.get_or("addr", "127.0.0.1:7333").to_string(),
+        a.get_usize("seed", 0).map_err(|e| anyhow!(e))? as u64,
+    );
     server::serve(backend.as_ref(), &cfg, None)
 }
 

@@ -1,6 +1,8 @@
 //! Model runtime: the [`Backend`] execution seam, the always-built
-//! [`CpuRefBackend`] reference implementation, AOT artifact metadata,
-//! weight containers, and (behind the `pjrt` feature) the PJRT engine.
+//! [`CpuRefBackend`] reference implementation, the deterministic
+//! fault-injection wrapper [`FaultyBackend`] (plus the [`guard_finite`]
+//! dispatch-boundary corruption guard), AOT artifact metadata, weight
+//! containers, and (behind the `pjrt` feature) the PJRT engine.
 //!
 //! The serving stack drives models only through [`Backend`], whose method
 //! surface mirrors the compiled-module interface (prefill / decode / fused
@@ -14,12 +16,16 @@ mod backend;
 mod cpu;
 #[cfg(feature = "pjrt")]
 mod engine;
+mod faulty;
 mod weights;
 
 pub use backend::Backend;
 pub use cpu::{CpuModelConfig, CpuRefBackend};
 #[cfg(feature = "pjrt")]
 pub use engine::Engine;
+pub use faulty::{
+    guard_finite, DispatchFault, FaultKind, FaultOp, FaultPlan, FaultStats, FaultyBackend,
+};
 pub use weights::{read_weights, Tensor};
 
 use std::path::Path;

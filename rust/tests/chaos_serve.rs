@@ -1,0 +1,518 @@
+//! Seeded chaos suite for the resilient serving loop.
+//!
+//! A [`FaultyBackend`] wraps the CPU reference backend with a seeded,
+//! content-addressed fault plan — transient dispatch failures, NaN-corrupted
+//! sampled surfaces, latency spikes — and the suite drives
+//! [`ServeLoop`] through it, asserting the recovery layer's contracts:
+//!
+//! * completed non-degraded streams are **bit-identical** to the fault-free
+//!   oracle, for every batch size × worker count × KV storage swept;
+//! * every injected fault is **retried or surfaced**, never silently
+//!   dropped (`FaultStats` vs `RecoveryCounters` accounting closes);
+//! * failing and panicking lanes never leak paged KV blocks (pool
+//!   `validate()`, zero live blocks, `free == created` after the drain);
+//! * degraded autoregressive fallback stays **lossless in distribution**
+//!   (chi-square against the exact target conditional);
+//! * deadlines and panic isolation retire exactly the affected lanes.
+//!
+//! Sample counts follow `SPECDELAY_MC_SAMPLES`; `SPECDELAY_CHAOS_FAST=1`
+//! shrinks the sweep matrix for CI smoke runs. Everything is seeded — a
+//! failure reproduces exactly.
+
+mod common;
+
+use std::time::Duration;
+
+use common::mc::{assert_chi_square, check_counts, mc_samples};
+use specdelay::coordinator::{
+    FixedPolicy, ResilienceConfig, ServeError, ServeLoop, ServeRequest, SpecEngine,
+};
+use specdelay::dist::{Dist, SamplingConfig};
+use specdelay::draft::Action;
+use specdelay::kvcache::{KvRef, KvStorage};
+use specdelay::runtime::{
+    Backend, CpuModelConfig, CpuRefBackend, DecodeOut, FamilyMeta, FaultOp, FaultPlan,
+    FaultyBackend, PrefillOut, Role, RolloutOut, TreeOut,
+};
+use specdelay::tokenizer;
+use specdelay::util::Pcg64;
+use specdelay::verify;
+
+const PROMPTS: [&str; 6] = ["12*3= ", "9-4= ", "1,2,3,", "(5+5)/2= ", "0.5*8= ", "77+1= "];
+
+fn fast() -> bool {
+    std::env::var("SPECDELAY_CHAOS_FAST").is_ok_and(|v| v != "0" && !v.is_empty())
+}
+
+/// Resilience with retries but the health machine effectively disabled, so
+/// every completed stream stays on the speculative (bit-identical) path.
+fn retry_only() -> ResilienceConfig {
+    ResilienceConfig {
+        max_retries: 50,
+        deadline: None,
+        degrade_after: usize::MAX / 2,
+        fail_after: usize::MAX / 2,
+        probe_interval: 4,
+    }
+}
+
+/// Fault-free oracle streams (text, tokens, blocks) per request id, from a
+/// serial single-lane loop on contiguous storage.
+fn oracle(
+    backend: &dyn Backend,
+    sampling: SamplingConfig,
+    max_new: usize,
+    seed: u64,
+) -> Vec<(String, Vec<u32>, usize)> {
+    let verifier = verify::verifier("SpecInfer").unwrap();
+    let policy = FixedPolicy(Action::new(2, 2, 2));
+    let mut srv = ServeLoop::new(backend, sampling, verifier.as_ref(), &policy, 1)
+        .with_workers(1)
+        .with_kv_storage(KvStorage::Contiguous);
+    for p in &PROMPTS {
+        srv.submit(ServeRequest { prompt: p.to_string(), max_new, seed });
+    }
+    srv.run()
+        .unwrap()
+        .into_iter()
+        .map(|o| {
+            assert!(o.error.is_none(), "oracle lane {} failed: {:?}", o.id, o.error);
+            (o.text, o.tokens, o.stats.blocks)
+        })
+        .collect()
+}
+
+/// Same plan + same seeds ⇒ same faults, same recoveries, same streams:
+/// the injector is content-addressed and attempt-indexed, so the whole
+/// chaotic run is reproducible bit-for-bit.
+#[test]
+fn faulty_serving_is_deterministic() {
+    let inner = CpuRefBackend::new(&CpuModelConfig::tiny(), 4);
+    let sampling = SamplingConfig::new(0.8, 0.95);
+    let plan = FaultPlan::quiet(7).with_transient(0.05).with_corrupt(0.02);
+    let fb = FaultyBackend::new(&inner, plan);
+    let verifier = verify::verifier("SpecInfer").unwrap();
+    let policy = FixedPolicy(Action::new(2, 2, 2));
+    let mut runs = Vec::new();
+    for _ in 0..2 {
+        fb.reset();
+        // one worker: dispatch arrival order is lane order, so even the
+        // injector's per-signature attempt counters replay exactly (with
+        // more workers, two lanes issuing byte-identical dispatch
+        // signatures would race for attempt indices — see the
+        // faulty-backend docs; stream equality across worker counts is
+        // covered by the sweep test against the fault-free oracle)
+        let mut srv = ServeLoop::new(&fb, sampling, verifier.as_ref(), &policy, 3)
+            .with_workers(1)
+            .with_resilience(retry_only());
+        for p in &PROMPTS {
+            srv.submit(ServeRequest { prompt: p.to_string(), max_new: 12, seed: 5 });
+        }
+        let outs = srv.run().unwrap();
+        let summary: Vec<_> = outs
+            .into_iter()
+            .map(|o| (o.id, o.text, o.tokens, o.degraded, o.retries, o.error))
+            .collect();
+        runs.push((summary, fb.stats(), srv.recovery().clone()));
+    }
+    assert_eq!(runs[0].1, runs[1].1, "fault schedules diverged across identical runs");
+    assert_eq!(runs[0].2, runs[1].2, "recovery counters diverged across identical runs");
+    assert_eq!(runs[0].0, runs[1].0, "served streams diverged across identical runs");
+}
+
+/// The main sweep: fault rates × KV storages × batch sizes × worker counts.
+/// Every request completes, every completed stream is bit-identical to the
+/// fault-free oracle, the fault/recovery accounting closes, and no paged
+/// block leaks.
+#[test]
+fn chaos_sweep_streams_bit_identical_and_faults_accounted() {
+    let inner = CpuRefBackend::new(&CpuModelConfig::tiny(), 4);
+    let sampling = SamplingConfig::new(0.8, 0.95);
+    let verifier = verify::verifier("SpecInfer").unwrap();
+    let policy = FixedPolicy(Action::new(2, 2, 2));
+    let max_new = if fast() { 12 } else { 20 };
+    let want = oracle(&inner, sampling, max_new, 1234);
+
+    let rates: &[f64] = if fast() { &[0.02] } else { &[0.002, 0.02] };
+    let batches: &[usize] = if fast() { &[3] } else { &[1, 3, 8] };
+    let workerses: &[usize] = if fast() { &[4] } else { &[1, 4] };
+    for &rate in rates {
+        for storage in [KvStorage::Contiguous, KvStorage::Paged] {
+            for &batch in batches {
+                for &workers in workerses {
+                    let plan = FaultPlan::quiet(0xC4A05)
+                        .with_transient(rate)
+                        .with_corrupt(rate / 2.0);
+                    let fb = FaultyBackend::new(&inner, plan);
+                    let mut srv =
+                        ServeLoop::new(&fb, sampling, verifier.as_ref(), &policy, batch)
+                            .with_workers(workers)
+                            .with_kv_storage(storage)
+                            .with_resilience(retry_only());
+                    for p in &PROMPTS {
+                        srv.submit(ServeRequest { prompt: p.to_string(), max_new, seed: 1234 });
+                    }
+                    let outs = srv.run().unwrap();
+                    let ctx = format!(
+                        "rate {rate} storage {storage:?} batch {batch} workers {workers}"
+                    );
+                    assert_eq!(outs.len(), PROMPTS.len(), "{ctx}");
+                    for (o, (text, toks, blocks)) in outs.iter().zip(&want) {
+                        assert!(o.error.is_none(), "{ctx}: lane {} failed: {:?}", o.id, o.error);
+                        assert!(!o.degraded, "{ctx}: lane {} degraded unexpectedly", o.id);
+                        assert_eq!(&o.text, text, "{ctx}: stream diverged (id {})", o.id);
+                        assert_eq!(&o.tokens, toks, "{ctx}: token stream diverged (id {})", o.id);
+                        assert_eq!(o.stats.blocks, *blocks, "{ctx}: block count diverged");
+                    }
+                    // accounting closes: injector-side faults == loop-side
+                    // observations == retried + surfaced
+                    let fs = fb.stats();
+                    let rc = srv.recovery();
+                    assert_eq!(
+                        fs.transient + fs.corrupt,
+                        rc.transient_seen + rc.corrupt_seen,
+                        "{ctx}: loop missed injected faults"
+                    );
+                    assert_eq!(
+                        rc.transient_seen + rc.corrupt_seen + rc.panics,
+                        rc.retries + rc.surfaced,
+                        "{ctx}: a fault was neither retried nor surfaced"
+                    );
+                    assert_eq!(rc.surfaced, 0, "{ctx}: no lane should exhaust at this rate");
+                    if let Some(pools) = srv.spec().kv_pools() {
+                        for (role, pool) in [("target", &pools.target), ("draft", &pools.draft)] {
+                            pool.validate().unwrap();
+                            assert_eq!(pool.live_blocks(), 0, "{ctx}: {role} pool leaked");
+                            assert_eq!(pool.free_blocks(), pool.created(), "{ctx}: {role} pool");
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Checkpoint restores under a capped block budget: the doubled per-lane
+/// reservation must keep the cap respected at its high-water mark while
+/// streams stay bit-identical to the oracle.
+#[test]
+fn block_budget_cap_respected_under_faults() {
+    let inner = CpuRefBackend::new(&CpuModelConfig::tiny(), 4);
+    let sampling = SamplingConfig::new(0.8, 0.95);
+    let verifier = verify::verifier("SpecInfer").unwrap();
+    let policy = FixedPolicy(Action::new(2, 2, 2));
+    let max_new = 12;
+    let want = oracle(&inner, sampling, max_new, 77);
+
+    let plan = FaultPlan::quiet(0xB10C).with_transient(0.03).with_corrupt(0.01);
+    let fb = FaultyBackend::new(&inner, plan);
+    let mut srv = ServeLoop::new(&fb, sampling, verifier.as_ref(), &policy, 4)
+        .with_workers(2)
+        .with_block_budget(2)
+        .with_resilience(retry_only());
+    for p in &PROMPTS {
+        srv.submit(ServeRequest { prompt: p.to_string(), max_new, seed: 77 });
+    }
+    let outs = srv.run().unwrap();
+    for (o, (text, toks, _)) in outs.iter().zip(&want) {
+        assert!(o.error.is_none(), "lane {} failed: {:?}", o.id, o.error);
+        assert_eq!(&o.text, text, "budgeted stream diverged (id {})", o.id);
+        assert_eq!(&o.tokens, toks);
+    }
+    let pools = srv.spec().kv_pools().expect("block budget implies paged pools");
+    for (role, pool) in [("target", &pools.target), ("draft", &pools.draft)] {
+        pool.validate().unwrap();
+        let cap = pool.max_blocks().unwrap();
+        assert!(
+            pool.peak_live_blocks() <= cap,
+            "{role} pool exceeded its cap under faults: peak {} > {cap}",
+            pool.peak_live_blocks()
+        );
+        assert_eq!(pool.live_blocks(), 0, "{role} pool leaked under faults");
+        assert_eq!(pool.free_blocks(), pool.created(), "{role} pool free-list incomplete");
+    }
+}
+
+/// Satellite regression: without any recovery configured, a lane that
+/// errors mid-generation is dropped on the error path — its
+/// partially-committed paged blocks must all return to the pool
+/// (`created == free` after the drain). This is the lane-error block-leak
+/// guard.
+#[test]
+fn lane_error_path_leaks_no_blocks() {
+    let inner = CpuRefBackend::new(&CpuModelConfig::tiny(), 4);
+    let sampling = SamplingConfig::new(0.8, 0.95);
+    let verifier = verify::verifier("SpecInfer").unwrap();
+    let policy = FixedPolicy(Action::new(2, 2, 2));
+    let plan = FaultPlan::quiet(0xDEAD).with_transient(0.4).with_corrupt(0.2);
+    let fb = FaultyBackend::new(&inner, plan);
+    let mut srv = ServeLoop::new(&fb, sampling, verifier.as_ref(), &policy, 4)
+        .with_workers(2)
+        .with_kv_storage(KvStorage::Paged);
+    for p in &PROMPTS {
+        srv.submit(ServeRequest { prompt: p.to_string(), max_new: 16, seed: 3 });
+    }
+    let outs = srv.run().unwrap();
+    assert_eq!(outs.len(), PROMPTS.len());
+    let failed = outs.iter().filter(|o| o.error.is_some()).count();
+    assert!(failed > 0, "fault rates this high must fail at least one lane");
+    for o in &outs {
+        if let Some(e) = &o.error {
+            assert!(
+                matches!(e, ServeError::Transient { .. } | ServeError::Corrupt { .. }),
+                "unexpected error class without resilience: {e:?}"
+            );
+        }
+    }
+    let rc = srv.recovery();
+    assert_eq!(rc.retries, 0, "no retries without resilience");
+    assert_eq!(rc.surfaced, failed, "every fault must surface on an output");
+    let pools = srv.spec().kv_pools().expect("paged storage has pools");
+    for (role, pool) in [("target", &pools.target), ("draft", &pools.draft)] {
+        pool.validate().unwrap();
+        assert_eq!(pool.live_blocks(), 0, "{role} pool: error-path lane drop leaked blocks");
+        assert_eq!(
+            pool.free_blocks(),
+            pool.created(),
+            "{role} pool: free list must hold every created block after the drain"
+        );
+    }
+}
+
+/// Degraded-mode losslessness: with the speculative path permanently
+/// faulting, the circuit breaker switches lanes to autoregressive decode.
+/// The first emitted token of each request must follow the exact target
+/// conditional p(·|prompt) — degraded throughput, identical distribution.
+#[test]
+fn degraded_mode_first_token_follows_target_conditional() {
+    let inner = CpuRefBackend::new(&CpuModelConfig::tiny(), 3);
+    let sampling = SamplingConfig::new(0.5, 0.9);
+    let prompt = "7+5= ";
+
+    // exact first-token conditional from the plain backend
+    let spec = SpecEngine::new(&inner, sampling);
+    let base = spec.start(prompt).unwrap();
+    let toks_i32: Vec<i32> = base.tokens.iter().map(|&t| t as i32).collect();
+    let pre = inner.prefill(Role::Target, &toks_i32, base.prompt_len).unwrap();
+    let p0 = Dist::from_logits(&pre.logits, sampling);
+    drop(base);
+
+    // every speculative dispatch faults; prefill/decode stay clean
+    let plan = FaultPlan::quiet(5)
+        .with_transient(1.0)
+        .with_ops(vec![FaultOp::Rollout, FaultOp::TreeVerify]);
+    let fb = FaultyBackend::new(&inner, plan);
+    let cfg = ResilienceConfig {
+        max_retries: 4,
+        deadline: None,
+        degrade_after: 2,
+        fail_after: usize::MAX / 2,
+        probe_interval: 0, // pin degraded: every probe would fault anyway
+    };
+    let verifier = verify::verifier("SpecInfer").unwrap();
+    let policy = FixedPolicy(Action::new(2, 2, 2));
+    let n = mc_samples(600);
+    let mut srv = ServeLoop::new(&fb, sampling, verifier.as_ref(), &policy, 8)
+        .with_workers(4)
+        .with_resilience(cfg);
+    for _ in 0..n {
+        srv.submit(ServeRequest { prompt: prompt.to_string(), max_new: 1, seed: 0xC0FFEE });
+    }
+    let outs = srv.run().unwrap();
+    assert_eq!(outs.len(), n);
+    let v = inner.dims(Role::Target).vocab;
+    let mut counts = vec![0usize; v];
+    for o in &outs {
+        assert!(o.error.is_none(), "lane {} failed: {:?}", o.id, o.error);
+        assert!(o.degraded, "lane {} should be flagged degraded", o.id);
+        assert_eq!(o.tokens.len(), 1, "lane {} emitted {} tokens", o.id, o.tokens.len());
+        counts[o.tokens[0] as usize] += 1;
+    }
+    let rc = srv.recovery();
+    assert!(rc.degraded_entered >= 1, "breaker never tripped: {rc:?}");
+    assert!(rc.degraded_ticks > 0);
+    check_counts("degraded first-token", &counts, &p0.0, n, 0.005);
+    assert_chi_square("degraded first-token", &counts, &p0.0, n, 1e-3);
+}
+
+/// Per-request deadlines: a latency-spiking backend makes every tick slow;
+/// lanes must retire with `ServeError::Deadline` and partial streams
+/// instead of holding the batch hostage.
+#[test]
+fn deadline_retires_straggling_lanes() {
+    let inner = CpuRefBackend::new(&CpuModelConfig::tiny(), 4);
+    let sampling = SamplingConfig::new(0.8, 0.95);
+    let plan = FaultPlan::quiet(2).with_latency(1.0, Duration::from_millis(10));
+    let fb = FaultyBackend::new(&inner, plan);
+    let cfg = ResilienceConfig {
+        max_retries: 50,
+        deadline: Some(Duration::from_millis(2)),
+        degrade_after: usize::MAX / 2,
+        fail_after: usize::MAX / 2,
+        probe_interval: 0,
+    };
+    let verifier = verify::verifier("SpecInfer").unwrap();
+    let policy = FixedPolicy(Action::new(2, 2, 2));
+    let mut srv = ServeLoop::new(&fb, sampling, verifier.as_ref(), &policy, 3)
+        .with_workers(1)
+        .with_resilience(cfg);
+    for p in &PROMPTS[..3] {
+        srv.submit(ServeRequest { prompt: p.to_string(), max_new: 64, seed: 9 });
+    }
+    let outs = srv.run().unwrap();
+    assert_eq!(outs.len(), 3);
+    for o in &outs {
+        match &o.error {
+            Some(ServeError::Deadline { elapsed_secs }) => {
+                assert!(*elapsed_secs >= 0.002, "deadline fired early: {elapsed_secs}");
+            }
+            other => panic!("lane {} should retire by deadline, got {other:?}", o.id),
+        }
+    }
+    assert_eq!(srv.recovery().deadline_retired, 3);
+    assert!(fb.stats().latency > 0, "latency spikes never fired");
+}
+
+/// A backend wrapper that panics on one specific prompt's prefill —
+/// modelling a poisoned request rather than a flaky backend.
+struct PanickyBackend<'a> {
+    inner: &'a dyn Backend,
+    trip: Vec<i32>,
+}
+
+impl Backend for PanickyBackend<'_> {
+    fn meta(&self) -> &FamilyMeta {
+        self.inner.meta()
+    }
+    fn name(&self) -> &'static str {
+        "panicky"
+    }
+    fn prefill(&self, role: Role, tokens: &[i32], length: usize) -> anyhow::Result<PrefillOut> {
+        if tokens[..length] == self.trip[..] {
+            panic!("injected prefill panic");
+        }
+        self.inner.prefill(role, tokens, length)
+    }
+    fn decode(&self, role: Role, kv: KvRef<'_>, token: u32, pos: usize) -> anyhow::Result<DecodeOut> {
+        self.inner.decode(role, kv, token, pos)
+    }
+    #[allow(clippy::too_many_arguments)]
+    fn rollout(
+        &self,
+        k: usize,
+        l: usize,
+        kv: KvRef<'_>,
+        token: u32,
+        pos: usize,
+        uniforms: &[f32],
+        temperature: f32,
+        top_p: f32,
+    ) -> anyhow::Result<RolloutOut> {
+        self.inner.rollout(k, l, kv, token, pos, uniforms, temperature, top_p)
+    }
+    #[allow(clippy::too_many_arguments)]
+    fn tree_verify(
+        &self,
+        n_bucket: usize,
+        kv: KvRef<'_>,
+        tokens: &[i32],
+        positions: &[i32],
+        bias: &[f32],
+        cache_len: usize,
+    ) -> anyhow::Result<TreeOut> {
+        self.inner.tree_verify(n_bucket, kv, tokens, positions, bias, cache_len)
+    }
+}
+
+/// Panic isolation: one lane's tick panics; that lane retires as
+/// `ServeError::Panic`, every other lane's stream is bit-identical to the
+/// oracle, and nothing leaks.
+#[test]
+fn lane_panic_is_isolated_from_the_batch() {
+    let inner = CpuRefBackend::new(&CpuModelConfig::tiny(), 4);
+    let sampling = SamplingConfig::new(0.8, 0.95);
+    let max_new = 12;
+    let want = oracle(&inner, sampling, max_new, 21);
+
+    let poisoned = 2usize; // PROMPTS[2] panics at prefill
+    let trip: Vec<i32> = tokenizer::encode(PROMPTS[poisoned]).iter().map(|&t| t as i32).collect();
+    let pb = PanickyBackend { inner: &inner, trip };
+    let verifier = verify::verifier("SpecInfer").unwrap();
+    let policy = FixedPolicy(Action::new(2, 2, 2));
+    let mut srv = ServeLoop::new(&pb, sampling, verifier.as_ref(), &policy, 3)
+        .with_workers(2)
+        .with_kv_storage(KvStorage::Paged);
+    for p in &PROMPTS {
+        srv.submit(ServeRequest { prompt: p.to_string(), max_new, seed: 21 });
+    }
+    let outs = srv.run().unwrap();
+    assert_eq!(outs.len(), PROMPTS.len());
+    for (i, (o, (text, toks, _))) in outs.iter().zip(&want).enumerate() {
+        if i == poisoned {
+            match &o.error {
+                Some(ServeError::Panic { message }) => {
+                    assert!(message.contains("injected prefill panic"), "{message}");
+                }
+                other => panic!("poisoned lane should retire as Panic, got {other:?}"),
+            }
+        } else {
+            assert!(o.error.is_none(), "healthy lane {} failed: {:?}", o.id, o.error);
+            assert_eq!(&o.text, text, "healthy lane {} diverged beside a panic", o.id);
+            assert_eq!(&o.tokens, toks);
+        }
+    }
+    assert_eq!(srv.recovery().panics, 1);
+    let pools = srv.spec().kv_pools().expect("paged storage has pools");
+    for (role, pool) in [("target", &pools.target), ("draft", &pools.draft)] {
+        pool.validate().unwrap();
+        assert_eq!(pool.live_blocks(), 0, "{role} pool leaked beside a panic");
+    }
+}
+
+/// Resilience must be a no-op on a healthy backend: identical streams to
+/// the plain loop, zero recovery activity, zero checkpoint-induced drift.
+#[test]
+fn fault_free_resilience_is_identity() {
+    let inner = CpuRefBackend::new(&CpuModelConfig::tiny(), 4);
+    let sampling = SamplingConfig::new(0.8, 0.95);
+    let verifier = verify::verifier("SpecInfer").unwrap();
+    let policy = FixedPolicy(Action::new(2, 2, 2));
+    let max_new = 14;
+
+    let mut plain = ServeLoop::new(&inner, sampling, verifier.as_ref(), &policy, 3)
+        .with_workers(2)
+        .with_kv_storage(KvStorage::Paged);
+    let fb = FaultyBackend::new(&inner, FaultPlan::quiet(1));
+    let mut resil = ServeLoop::new(&fb, sampling, verifier.as_ref(), &policy, 3)
+        .with_workers(2)
+        .with_kv_storage(KvStorage::Paged)
+        .with_resilience(ResilienceConfig::default());
+    for p in &PROMPTS {
+        plain.submit(ServeRequest { prompt: p.to_string(), max_new, seed: 42 });
+        resil.submit(ServeRequest { prompt: p.to_string(), max_new, seed: 42 });
+    }
+    let a = plain.run().unwrap();
+    let b = resil.run().unwrap();
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert!(x.error.is_none() && y.error.is_none());
+        assert_eq!(x.text, y.text, "resilience changed a fault-free stream (id {})", x.id);
+        assert_eq!(x.tokens, y.tokens);
+        assert_eq!(x.stats.blocks, y.stats.blocks);
+        assert!(!y.degraded);
+        assert_eq!(y.retries, 0);
+    }
+    let fs = fb.stats();
+    assert!(fs.dispatches > 0);
+    assert_eq!(fs.transient + fs.corrupt + fs.latency, 0, "quiet plan injected something");
+    assert_eq!(
+        *resil.recovery(),
+        Default::default(),
+        "fault-free run must report zero recovery activity"
+    );
+    let pools = resil.spec().kv_pools().expect("paged storage has pools");
+    for (role, pool) in [("target", &pools.target), ("draft", &pools.draft)] {
+        pool.validate().unwrap();
+        assert_eq!(pool.live_blocks(), 0, "{role} pool leaked with checkpoints on");
+    }
+}

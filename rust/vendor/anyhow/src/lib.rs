@@ -6,23 +6,48 @@
 //! `Result`/`Option`, and the `anyhow!`/`bail!` macros. Error chains are
 //! flattened into a single message at attachment time, so `{e}` and `{e:#}`
 //! both print `context: cause` the way downstream code expects.
+//!
+//! Like the real crate, [`Error::new`] additionally retains the source
+//! error value so callers can recover it with [`Error::downcast_ref`]
+//! (the serving loop classifies backend dispatch faults this way). The
+//! blanket `?` conversion and the [`Context`] trait still flatten to a
+//! message — only errors raised explicitly through `Error::new` carry a
+//! typed payload, and [`Error::context`] preserves it.
 
+use std::any::Any;
 use std::fmt;
 
 /// A flattened, message-carrying error value.
 pub struct Error {
     msg: String,
+    payload: Option<Box<dyn Any + Send + Sync>>,
 }
 
 impl Error {
     /// Build an error from anything displayable.
     pub fn msg<M: fmt::Display>(m: M) -> Error {
-        Error { msg: m.to_string() }
+        Error { msg: m.to_string(), payload: None }
     }
 
-    /// Prepend a context layer, `context: cause` style.
+    /// Build an error from a concrete error value, retaining it for
+    /// [`Error::downcast_ref`] (the real anyhow's `Error::new`).
+    pub fn new<E>(e: E) -> Error
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        Error { msg: e.to_string(), payload: Some(Box::new(e)) }
+    }
+
+    /// Prepend a context layer, `context: cause` style. The typed payload
+    /// (when present) survives context attachment.
     pub fn context<C: fmt::Display>(self, context: C) -> Error {
-        Error { msg: format!("{context}: {}", self.msg) }
+        Error { msg: format!("{context}: {}", self.msg), payload: self.payload }
+    }
+
+    /// The retained source error, if this error was built with
+    /// [`Error::new`] from a value of type `T`.
+    pub fn downcast_ref<T: 'static>(&self) -> Option<&T> {
+        self.payload.as_ref().and_then(|p| p.downcast_ref::<T>())
     }
 }
 
@@ -41,6 +66,8 @@ impl fmt::Debug for Error {
 // `?` conversion from any std error. `Error` itself deliberately does not
 // implement `std::error::Error`, exactly like the real anyhow, so this
 // blanket impl cannot collide with the reflexive `From<Error> for Error`.
+// Flattens to a message: use `Error::new` when the value must survive for
+// downcasting.
 impl<E: std::error::Error> From<E> for Error {
     fn from(e: E) -> Error {
         Error::msg(e)
@@ -58,11 +85,11 @@ pub trait Context<T> {
 
 impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
     fn context<C: fmt::Display>(self, context: C) -> Result<T> {
-        self.map_err(|e| Error { msg: format!("{context}: {e}") })
+        self.map_err(|e| Error { msg: format!("{context}: {e}"), payload: None })
     }
 
     fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
-        self.map_err(|e| Error { msg: format!("{}: {e}", f()) })
+        self.map_err(|e| Error { msg: format!("{}: {e}", f()), payload: None })
     }
 }
 
@@ -150,5 +177,28 @@ mod tests {
             Ok(())
         }
         assert_eq!(f().unwrap_err().to_string(), "boom");
+    }
+
+    #[test]
+    fn new_retains_payload_for_downcast() {
+        let e = Error::new(io_err());
+        assert_eq!(e.to_string(), "boom");
+        let io = e.downcast_ref::<std::io::Error>().expect("payload retained");
+        assert_eq!(io.kind(), std::io::ErrorKind::Other);
+        assert!(e.downcast_ref::<fmt::Error>().is_none());
+    }
+
+    #[test]
+    fn context_preserves_payload() {
+        let e = Error::new(io_err()).context("during dispatch");
+        assert_eq!(e.to_string(), "during dispatch: boom");
+        assert!(e.downcast_ref::<std::io::Error>().is_some());
+    }
+
+    #[test]
+    fn msg_and_blanket_conversion_have_no_payload() {
+        assert!(Error::msg("plain").downcast_ref::<std::io::Error>().is_none());
+        let via_from: Error = io_err().into();
+        assert!(via_from.downcast_ref::<std::io::Error>().is_none());
     }
 }
