@@ -112,11 +112,7 @@ fn run_loop(
         srv = srv.with_resilience(cfg);
     }
     for id in 0..requests {
-        srv.submit(ServeRequest {
-            prompt: PROMPTS[id % PROMPTS.len()].to_string(),
-            max_new,
-            seed,
-        });
+        srv.submit(ServeRequest::new(PROMPTS[id % PROMPTS.len()].to_string(), max_new, seed));
     }
     let t0 = Instant::now();
     let outs = srv.run().expect("serve loop");

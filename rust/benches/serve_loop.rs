@@ -81,11 +81,7 @@ fn main() {
         for &batch in &batches {
             let mut srv = ServeLoop::new(&backend, sampling, verifier.as_ref(), &policy, batch);
             for id in 0..requests {
-                srv.submit(ServeRequest {
-                    prompt: PROMPTS[id % PROMPTS.len()].to_string(),
-                    max_new,
-                    seed,
-                });
+                srv.submit(ServeRequest::new(PROMPTS[id % PROMPTS.len()].to_string(), max_new, seed));
             }
             let t0 = Instant::now();
             let outs = srv.run().expect("serve loop");

@@ -1,0 +1,399 @@
+//! Overload-robustness benchmark: FIFO vs the preemptive priority
+//! scheduler on the same seeded open-loop arrival trace (pure rust CPU
+//! backend, no artifacts, no PJRT).
+//!
+//! A Poisson-burst trace (exponential inter-arrivals with alternating
+//! burst/lull rate modulation, seeded) is submitted twice via
+//! [`ServeLoop::submit_after`] — once to a strict-FIFO loop, once to the
+//! scheduler (chunked prefill, weighted per-class admission, preemption
+//! under the shared block budget). Before anything is timed, both arms'
+//! token streams are asserted bit-identical to a serial
+//! `SpecEngine::generate` oracle on the same per-request rng streams — the
+//! scheduler is allowed to change latency, never content. A third
+//! scheduler-only *overload* arm caps the queue and records structured
+//! shedding with a closed `submitted == completed + shed` accounting.
+//!
+//! Reported per arm: per-token latency p50/p99 (from each output's
+//! per-tick emission trace), TTFT p50/p99 per priority class, queue wait,
+//! makespan, preemption/resume/release/rebuild/shed counters, and peak
+//! resident blocks in both pools.
+//!
+//! Emits a human-readable table and `BENCH_serve_sched.json` at the repo
+//! root (uploaded as a CI artifact). Env knobs: `SERVE_SCHED_REQUESTS`
+//! (default 24), `SERVE_SCHED_MAX_NEW` (default 24), `SERVE_SCHED_CHUNK`
+//! (prefill chunk rows, default 8), `SERVE_SCHED_BUDGET` (blocks per pool,
+//! default 24), `SERVE_SCHED_MEAN_MS` (mean inter-arrival, default 4),
+//! `SERVE_SCHED_SEED` (default 7).
+//!
+//! Run: `cargo bench --bench serve_sched`.
+
+use std::time::{Duration, Instant};
+
+use specdelay::coordinator::{
+    FixedPolicy, Priority, SchedConfig, ServeLoop, ServeOutput, ServeRequest, SpecEngine,
+};
+use specdelay::dist::SamplingConfig;
+use specdelay::draft::Action;
+use specdelay::kvcache::KvStorage;
+use specdelay::runtime::{Backend, CpuModelConfig, CpuRefBackend};
+use specdelay::util::json::{num, obj, s, Json};
+use specdelay::util::Pcg64;
+use specdelay::verify;
+
+const PROMPTS: [&str; 4] = [
+    "Q: compute 12 * 34 + 56 - 7 = ? A:",
+    "story: the golden harbor at dusk, ",
+    "fn partition(xs, pivot): # quicksort",
+    "translate en->fr: the sea is calm => ",
+];
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// One request of the precomputed arrival trace.
+struct TraceItem {
+    prompt: &'static str,
+    priority: Priority,
+    arrival: Duration,
+}
+
+/// Seeded open-loop Poisson-burst trace: exponential inter-arrivals whose
+/// rate alternates between a burst (4x) and a lull (1/4x) every few
+/// requests, with a seeded 20/50/30 high/normal/low class mix.
+fn build_trace(n: usize, mean_ms: f64, seed: u64) -> Vec<TraceItem> {
+    let mut rng = Pcg64::new(seed, 0);
+    let mut at = 0.0f64;
+    let mut items = Vec::with_capacity(n);
+    for i in 0..n {
+        // burst of 6, lull of 2: sustained pressure then a breather
+        let factor = if (i / 6) % 2 == 0 { 0.25 } else { 4.0 };
+        let u = rng.next_f32().max(1e-6) as f64;
+        at += -u.ln() * mean_ms * factor;
+        let c = rng.next_f32();
+        let priority = if c < 0.2 {
+            Priority::High
+        } else if c < 0.7 {
+            Priority::Normal
+        } else {
+            Priority::Low
+        };
+        items.push(TraceItem {
+            prompt: PROMPTS[i % PROMPTS.len()],
+            priority,
+            arrival: Duration::from_secs_f64(at / 1000.0),
+        });
+    }
+    items
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx]
+}
+
+/// Per-token inter-emission gaps of one output: each tick that emitted
+/// `delta` tokens at `at` seconds contributes `delta` gaps of
+/// `(at - prev) / delta`, with `prev` starting at arrival (0).
+fn token_gaps(o: &ServeOutput) -> Vec<f64> {
+    let mut gaps = Vec::new();
+    let mut prev = 0.0f64;
+    for &(at, delta) in &o.tick_emits {
+        let per = (at - prev).max(0.0) / delta.max(1) as f64;
+        for _ in 0..delta {
+            gaps.push(per);
+        }
+        prev = at;
+    }
+    gaps
+}
+
+struct ArmStats {
+    gap_p50: f64,
+    gap_p99: f64,
+    ttft: [(f64, f64); 3], // per class (p50, p99), NaN when the class is empty
+    queue_mean: f64,
+    makespan: f64,
+}
+
+fn arm_stats(outs: &[ServeOutput], makespan: f64) -> ArmStats {
+    let mut gaps: Vec<f64> = outs.iter().flat_map(token_gaps).collect();
+    gaps.sort_by(f64::total_cmp);
+    let mut ttft = [(f64::NAN, f64::NAN); 3];
+    for (c, slot) in ttft.iter_mut().enumerate() {
+        let mut xs: Vec<f64> = outs
+            .iter()
+            .filter(|o| o.priority.index() == c)
+            .filter_map(|o| o.ttft_secs)
+            .collect();
+        xs.sort_by(f64::total_cmp);
+        *slot = (percentile(&xs, 0.5), percentile(&xs, 0.99));
+    }
+    let waits: Vec<f64> = outs.iter().map(|o| o.queue_secs).collect();
+    let queue_mean = waits.iter().sum::<f64>() / waits.len().max(1) as f64;
+    ArmStats {
+        gap_p50: percentile(&gaps, 0.5),
+        gap_p99: percentile(&gaps, 0.99),
+        ttft,
+        queue_mean,
+        makespan,
+    }
+}
+
+fn arm_json(stats: &ArmStats, srv: &ServeLoop<'_>, completed: usize, shed: usize) -> Json {
+    let sc = srv.sched_counters();
+    let (peak_t, peak_d) = srv
+        .spec()
+        .kv_pools()
+        .map(|p| (p.target.peak_live_blocks(), p.draft.peak_live_blocks()))
+        .unwrap_or((0, 0));
+    let class_names = ["high", "normal", "low"];
+    let ttft_rows: Vec<(&str, Json)> = class_names
+        .iter()
+        .zip(stats.ttft.iter())
+        .map(|(name, &(p50, p99))| {
+            (*name, obj(vec![("p50_secs", num(p50)), ("p99_secs", num(p99))]))
+        })
+        .collect();
+    obj(vec![
+        ("token_gap_p50_secs", num(stats.gap_p50)),
+        ("token_gap_p99_secs", num(stats.gap_p99)),
+        ("ttft_by_class", obj(ttft_rows)),
+        ("queue_wait_mean_secs", num(stats.queue_mean)),
+        ("makespan_secs", num(stats.makespan)),
+        ("completed", num(completed as f64)),
+        ("shed", num(shed as f64)),
+        ("peak_active", num(sc.peak_active as f64)),
+        ("preempted", num(sc.preempted as f64)),
+        ("resumed", num(sc.resumed as f64)),
+        ("released", num(sc.released as f64)),
+        ("rebuilt", num(sc.rebuilt as f64)),
+        ("prefill_chunks", num(sc.prefill_chunks as f64)),
+        ("peak_blocks_target", num(peak_t as f64)),
+        ("peak_blocks_draft", num(peak_d as f64)),
+    ])
+}
+
+/// Feed the whole trace to a loop via open-loop delayed arrivals. In the
+/// overload arm (`deadlines`), low-priority requests carry a deadline so
+/// short it is effectively doomed — they are shed from the queue or
+/// deadline-retired on their first tick.
+fn submit_trace(
+    srv: &mut ServeLoop<'_>,
+    trace: &[TraceItem],
+    max_new: usize,
+    seed: u64,
+    mean_ms: f64,
+    deadlines: bool,
+) {
+    for item in trace {
+        let mut req = ServeRequest::new(item.prompt.to_string(), max_new, seed)
+            .with_priority(item.priority);
+        if deadlines && item.priority == Priority::Low {
+            req = req.with_deadline(Duration::from_secs_f64(mean_ms / 250.0));
+        }
+        srv.submit_after(req, item.arrival);
+    }
+}
+
+fn main() {
+    let requests = env_usize("SERVE_SCHED_REQUESTS", 24);
+    let max_new = env_usize("SERVE_SCHED_MAX_NEW", 24);
+    let chunk = env_usize("SERVE_SCHED_CHUNK", 8).max(1);
+    let budget = env_usize("SERVE_SCHED_BUDGET", 24);
+    let mean_ms = env_f64("SERVE_SCHED_MEAN_MS", 4.0);
+    let seed = env_usize("SERVE_SCHED_SEED", 7) as u64;
+    let max_batch = 3;
+
+    let cfg = CpuModelConfig::small();
+    let backend = CpuRefBackend::new(&cfg, 0);
+    let sampling = SamplingConfig::new(0.8, 0.95);
+    let action = Action::new(2, 2, 3);
+    let policy = FixedPolicy(action);
+    let verifier = verify::verifier("SpecInfer").unwrap();
+    let trace = build_trace(requests, mean_ms, seed);
+
+    // serial oracle streams (untimed): both arms must reproduce these
+    // bit-for-bit — the bench aborts before reporting numbers otherwise
+    let spec = SpecEngine::new(&backend, sampling).with_kv_storage(KvStorage::Contiguous);
+    let mut want = Vec::with_capacity(requests);
+    for (id, item) in trace.iter().enumerate() {
+        let mut rng = Pcg64::new(seed, id as u64);
+        let (text, _stats) = spec
+            .generate(item.prompt, max_new, verifier.as_ref(), &policy, &mut rng)
+            .expect("serial generate");
+        want.push(text);
+    }
+    let mut equal_output_checks = 0usize;
+
+    let mut report_arms: Vec<(&str, Json)> = Vec::new();
+    println!(
+        "{:<10} {:>12} {:>12} {:>12} {:>12} {:>10} {:>8} {:>6}",
+        "arm", "gap_p50_ms", "gap_p99_ms", "ttft_hi_p99", "queue_mean", "makespan", "preempt", "shed"
+    );
+
+    // ---- arm 1: strict FIFO (tight worst-case reservations) ------------
+    {
+        let mut srv = ServeLoop::new(&backend, sampling, verifier.as_ref(), &policy, max_batch)
+            .with_block_budget(budget)
+            .without_scheduler();
+        submit_trace(&mut srv, &trace, max_new, seed, mean_ms, false);
+        let t0 = Instant::now();
+        let outs = srv.run().expect("fifo run");
+        let makespan = t0.elapsed().as_secs_f64();
+        assert_eq!(outs.len(), requests);
+        for (o, want_text) in outs.iter().zip(&want) {
+            assert!(o.error.is_none(), "fifo lane {} failed: {:?}", o.id, o.error);
+            assert_eq!(&o.text, want_text, "fifo stream diverged (id {})", o.id);
+            equal_output_checks += 1;
+        }
+        let stats = arm_stats(&outs, makespan);
+        println!(
+            "{:<10} {:>12.3} {:>12.3} {:>12.3} {:>12.3} {:>10.3} {:>8} {:>6}",
+            "fifo",
+            stats.gap_p50 * 1e3,
+            stats.gap_p99 * 1e3,
+            stats.ttft[0].1 * 1e3,
+            stats.queue_mean * 1e3,
+            makespan,
+            srv.sched_counters().preempted,
+            srv.sched_counters().shed,
+        );
+        report_arms.push(("fifo", arm_json(&stats, &srv, outs.len(), 0)));
+    }
+
+    // ---- arm 2: the scheduler, same trace, same budget ------------------
+    {
+        let mut srv = ServeLoop::new(&backend, sampling, verifier.as_ref(), &policy, max_batch)
+            .with_block_budget(budget)
+            .with_scheduler(SchedConfig {
+                prefill_chunk: chunk,
+                max_queue: None,
+                ..SchedConfig::default()
+            });
+        submit_trace(&mut srv, &trace, max_new, seed, mean_ms, false);
+        let t0 = Instant::now();
+        let outs = srv.run().expect("sched run");
+        let makespan = t0.elapsed().as_secs_f64();
+        assert_eq!(outs.len(), requests);
+        for (o, want_text) in outs.iter().zip(&want) {
+            assert!(o.error.is_none(), "sched lane {} failed: {:?}", o.id, o.error);
+            assert_eq!(&o.text, want_text, "sched stream diverged (id {})", o.id);
+            equal_output_checks += 1;
+        }
+        let stats = arm_stats(&outs, makespan);
+        println!(
+            "{:<10} {:>12.3} {:>12.3} {:>12.3} {:>12.3} {:>10.3} {:>8} {:>6}",
+            "sched",
+            stats.gap_p50 * 1e3,
+            stats.gap_p99 * 1e3,
+            stats.ttft[0].1 * 1e3,
+            stats.queue_mean * 1e3,
+            makespan,
+            srv.sched_counters().preempted,
+            srv.sched_counters().shed,
+        );
+        report_arms.push(("sched", arm_json(&stats, &srv, outs.len(), 0)));
+    }
+
+    // ---- arm 3: overload — capped queue + doomed low-priority deadlines -
+    {
+        let mut srv = ServeLoop::new(&backend, sampling, verifier.as_ref(), &policy, max_batch)
+            .with_block_budget(budget)
+            .with_scheduler(SchedConfig {
+                prefill_chunk: chunk,
+                max_queue: Some((requests / 4).max(2)),
+                ..SchedConfig::default()
+            });
+        submit_trace(&mut srv, &trace, max_new, seed, mean_ms, true);
+        let t0 = Instant::now();
+        let outs = srv.run().expect("overload run");
+        let makespan = t0.elapsed().as_secs_f64();
+        assert_eq!(outs.len(), requests);
+        let mut completed = 0usize;
+        let mut shed = 0usize;
+        let mut deadline_retired = 0usize;
+        for o in &outs {
+            match o.error.as_ref().map(|e| e.kind()) {
+                None => {
+                    assert_eq!(
+                        &o.text, &want[o.id as usize],
+                        "overload survivor diverged (id {})",
+                        o.id
+                    );
+                    equal_output_checks += 1;
+                    completed += 1;
+                }
+                Some("shed") => {
+                    assert!(o.tokens.is_empty(), "shed lane {} ran backend work", o.id);
+                    shed += 1;
+                }
+                // a low-priority lane whose doomed deadline expired after
+                // admission retires mid-flight instead of being shed
+                Some("deadline") => deadline_retired += 1,
+                Some(k) => panic!("unexpected overload error kind {k} (id {})", o.id),
+            }
+        }
+        assert_eq!(
+            completed + shed + deadline_retired,
+            requests,
+            "overload accounting must close"
+        );
+        assert_eq!(srv.sched_counters().shed, shed);
+        let stats = arm_stats(&outs, makespan);
+        println!(
+            "{:<10} {:>12.3} {:>12.3} {:>12.3} {:>12.3} {:>10.3} {:>8} {:>6}",
+            "overload",
+            stats.gap_p50 * 1e3,
+            stats.gap_p99 * 1e3,
+            stats.ttft[0].1 * 1e3,
+            stats.queue_mean * 1e3,
+            makespan,
+            srv.sched_counters().preempted,
+            shed,
+        );
+        let mut j = arm_json(&stats, &srv, completed, shed);
+        if let Json::Obj(rows) = &mut j {
+            rows.insert("deadline_retired".to_string(), num(deadline_retired as f64));
+        }
+        report_arms.push(("overload", j));
+    }
+
+    let report = obj(vec![
+        ("schema", s("serve_sched/v1")),
+        (
+            "config",
+            obj(vec![
+                ("backend", s("cpu-ref")),
+                ("family", s(&backend.meta().family)),
+                ("n_layers", num(cfg.n_layers as f64)),
+                ("d_model", num(cfg.d_model as f64)),
+                ("vocab", num(cfg.vocab as f64)),
+                ("requests", num(requests as f64)),
+                ("max_new", num(max_new as f64)),
+                ("max_batch", num(max_batch as f64)),
+                ("prefill_chunk", num(chunk as f64)),
+                ("block_budget", num(budget as f64)),
+                ("mean_interarrival_ms", num(mean_ms)),
+                ("seed", num(seed as f64)),
+                ("temperature", num(sampling.temperature as f64)),
+                ("top_p", num(sampling.top_p as f64)),
+                ("action", s(&format!("K={} L1={} L2={}", action.k, action.l1, action.l2))),
+                ("class_mix", s("20% high / 50% normal / 30% low (seeded)")),
+            ]),
+        ),
+        ("equal_output_checks", num(equal_output_checks as f64)),
+        ("equal_output_assertion", s("enabled")),
+        ("arms", obj(report_arms)),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve_sched.json");
+    std::fs::write(path, format!("{}\n", report.to_string_pretty())).expect("write bench json");
+    println!("wrote {path}");
+}

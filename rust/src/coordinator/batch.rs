@@ -77,6 +77,43 @@
 //!   (`Failed`): all in-flight and queued requests retire with
 //!   [`ServeError::Failed`] rather than spinning forever.
 //!
+//! ## Overload-robust scheduling
+//!
+//! [`ServeLoop::with_scheduler`] (or `SPECDELAY_SCHED=1`) upgrades the
+//! FIFO loop into a preemptive priority scheduler:
+//!
+//! * **chunked prefill** — long prompts prefill in fixed-size chunks
+//!   ([`SchedConfig::prefill_chunk`], env `SPECDELAY_PREFILL_CHUNK`)
+//!   interleaved with the decode ticks of the other lanes, so one long
+//!   prompt no longer stalls the batch for a whole prefill. Chunking runs
+//!   through [`Backend::prefill_chunk`], which is bit-identical to the
+//!   one-shot prefill under the backend consistency contract, so streams
+//!   are unchanged for any chunk schedule.
+//! * **priority classes + weighted admission** — requests carry a
+//!   [`Priority`]; admission is stride-scheduled across the per-class
+//!   queues with [`SchedConfig::weights`], so high-priority work is
+//!   favoured without starving the lower classes.
+//! * **preempt-and-requeue** — under a block budget the scheduler admits
+//!   against *committed* blocks plus a per-tick worst-case margin instead
+//!   of the whole-lifetime worst case, so more lanes run concurrently; on
+//!   pool pressure it parks the lowest-priority/youngest lane (dropping
+//!   its checkpoint, keeping its committed prefix resident) and, if still
+//!   short, releases the parked lane's blocks entirely and later rebuilds
+//!   its context via chunked prefill — the replay is bitwise identical to
+//!   the original rows, so a preempted-and-resumed stream matches the
+//!   never-preempted oracle.
+//! * **deadline-aware shedding** — per-request deadlines are checked
+//!   before every dispatch, and queued requests whose deadline already
+//!   expired (or that overflow [`SchedConfig::max_queue`]) retire as
+//!   structured [`ServeError::Shed`] instead of consuming backend work.
+//!
+//! Every submitted request is accounted for:
+//! `submitted == completed + shed + failed` — shedding returns an output,
+//! it never silently drops a request. `tests/serve_sched.rs` pins the
+//! scheduler losslessness oracle and the accounting identity;
+//! `benches/serve_sched.rs` measures tail latency against FIFO on a
+//! bursty arrival trace.
+//!
 //! Each tick currently pays one scoped-thread spawn/join round
 //! ([`par_map_init`](crate::util::threadpool::par_map_init)); for model
 //! sizes where a block is sub-millisecond that overhead is visible in
@@ -92,6 +129,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use super::spec::PrefillState;
 use super::{ActionPolicy, GenStats, Sequence, SpecEngine};
 use crate::dist::SamplingConfig;
 use crate::kvcache::{default_block_tokens, KvStorage};
@@ -101,7 +139,56 @@ use crate::util::threadpool;
 use crate::util::Pcg64;
 use crate::verify::Verifier;
 
+/// Service class of a [`ServeRequest`]. Priorities shape *scheduling*
+/// (admission order, preemption victims, shed order) — never content: a
+/// request's token stream is identical at every priority.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    /// Latency-sensitive: favoured at admission, preempted last.
+    High,
+    /// The default class.
+    #[default]
+    Normal,
+    /// Throughput/batch work: admitted opportunistically, preempted and
+    /// shed first under overload.
+    Low,
+}
+
+impl Priority {
+    /// All classes, highest first (index order).
+    pub const ALL: [Priority; 3] = [Priority::High, Priority::Normal, Priority::Low];
+
+    /// Dense class index: `High = 0`, `Normal = 1`, `Low = 2`.
+    pub fn index(self) -> usize {
+        match self {
+            Priority::High => 0,
+            Priority::Normal => 1,
+            Priority::Low => 2,
+        }
+    }
+
+    /// Stable lowercase name (wire format and reports).
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::High => "high",
+            Priority::Normal => "normal",
+            Priority::Low => "low",
+        }
+    }
+
+    /// Parse the wire name back; `None` for anything unknown.
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s {
+            "high" => Some(Priority::High),
+            "normal" => Some(Priority::Normal),
+            "low" => Some(Priority::Low),
+            _ => None,
+        }
+    }
+}
+
 /// One queued generation request.
+#[derive(Clone)]
 pub struct ServeRequest {
     /// Prompt text (byte-tokenized; truncated to the family's `s_pre`).
     pub prompt: String,
@@ -112,6 +199,38 @@ pub struct ServeRequest {
     /// Seed of this request's private rng stream (the admission id is the
     /// stream selector, so equal seeds still draw independent streams).
     pub seed: u64,
+    /// Service class (scheduler mode only; FIFO mode ignores it).
+    pub priority: Priority,
+    /// Per-request wall-clock deadline measured from *arrival* (not
+    /// admission). Checked before every dispatch; an expired queued
+    /// request is shed, an expired running lane retires with its partial
+    /// stream as [`ServeError::Deadline`]. `None` disables it.
+    pub deadline: Option<Duration>,
+}
+
+impl ServeRequest {
+    /// A normal-priority request with no deadline.
+    pub fn new(prompt: impl Into<String>, max_new: usize, seed: u64) -> ServeRequest {
+        ServeRequest {
+            prompt: prompt.into(),
+            max_new,
+            seed,
+            priority: Priority::default(),
+            deadline: None,
+        }
+    }
+
+    /// Set the service class.
+    pub fn with_priority(mut self, priority: Priority) -> ServeRequest {
+        self.priority = priority;
+        self
+    }
+
+    /// Set the per-request deadline (from arrival).
+    pub fn with_deadline(mut self, deadline: Duration) -> ServeRequest {
+        self.deadline = Some(deadline);
+        self
+    }
 }
 
 /// Structured lane-failure taxonomy: why a request retired without (or
@@ -153,6 +272,13 @@ pub enum ServeError {
         /// Human-readable cause.
         message: String,
     },
+    /// Load shedding: the scheduler retired the request from the queue
+    /// without running it (expired deadline or queue overflow). No backend
+    /// work was spent; the output carries an empty stream.
+    Shed {
+        /// Why the request was shed.
+        reason: String,
+    },
 }
 
 impl ServeError {
@@ -165,6 +291,7 @@ impl ServeError {
             ServeError::Exhausted { .. } => "exhausted",
             ServeError::Panic { .. } => "panic",
             ServeError::Failed { .. } => "failed",
+            ServeError::Shed { .. } => "shed",
         }
     }
 }
@@ -182,6 +309,7 @@ impl fmt::Display for ServeError {
             }
             ServeError::Panic { message } => write!(f, "lane panicked: {message}"),
             ServeError::Failed { message } => write!(f, "backend failed: {message}"),
+            ServeError::Shed { reason } => write!(f, "shed: {reason}"),
         }
     }
 }
@@ -232,6 +360,60 @@ impl Default for ResilienceConfig {
             probe_interval: 4,
         }
     }
+}
+
+/// Policy knobs for the preemptive priority scheduler
+/// ([`ServeLoop::with_scheduler`]).
+#[derive(Clone, Debug)]
+pub struct SchedConfig {
+    /// Prefill chunk size in rows. Each prefilling lane commits at most
+    /// this many prompt (or rebuild-replay) rows per scheduler tick,
+    /// interleaved with the other lanes' decode work. Defaults to the
+    /// `SPECDELAY_PREFILL_CHUNK` env knob, else 256.
+    pub prefill_chunk: usize,
+    /// Queue-overflow shedding threshold: when more than this many
+    /// requests are queued, the scheduler sheds from the back of the
+    /// lowest-priority non-empty queue. `None` disables overflow shedding
+    /// (expired-deadline shedding still applies).
+    pub max_queue: Option<usize>,
+    /// Stride-scheduling weights per class (`[high, normal, low]`): a
+    /// class with weight `w` is admitted `w` times as often as a class
+    /// with weight 1 under sustained contention, so lower classes are
+    /// starvation-free. Zero weights are clamped to 1.
+    pub weights: [u64; 3],
+}
+
+impl Default for SchedConfig {
+    fn default() -> SchedConfig {
+        let prefill_chunk = std::env::var("SPECDELAY_PREFILL_CHUNK")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&c| c >= 1)
+            .unwrap_or(256);
+        SchedConfig { prefill_chunk, max_queue: None, weights: [4, 2, 1] }
+    }
+}
+
+/// Scheduler-side counters for one [`ServeLoop::run`] drain (all zero in
+/// FIFO mode except `peak_active`).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct SchedCounters {
+    /// Lanes parked by the preemptor (checkpoint dropped, committed
+    /// prefix kept resident).
+    pub preempted: usize,
+    /// Parked lanes re-admitted.
+    pub resumed: usize,
+    /// Parked lanes whose KV blocks were released entirely under
+    /// continued pool pressure (context rebuilt on resume).
+    pub released: usize,
+    /// Context rebuilds completed via chunked replay.
+    pub rebuilt: usize,
+    /// Requests shed from the queue ([`ServeError::Shed`]).
+    pub shed: usize,
+    /// Prefill chunks dispatched (fresh prompts and rebuild replays).
+    pub prefill_chunks: usize,
+    /// Peak concurrently active lanes.
+    pub peak_active: usize,
 }
 
 /// Fault-handling counters for one [`ServeLoop::run`] drain. The chaos
@@ -289,6 +471,17 @@ pub struct ServeOutput {
     pub degraded: bool,
     /// Checkpoint retries this lane spent over its lifetime.
     pub retries: usize,
+    /// The request's service class.
+    pub priority: Priority,
+    /// Seconds spent queued before admission (arrival → admission).
+    pub queue_secs: f64,
+    /// Time-to-first-token: seconds from *arrival* to the first tick that
+    /// emitted at least one token. `None` when nothing was emitted.
+    pub ttft_secs: Option<f64>,
+    /// Per-tick emission trace: `(seconds_since_arrival, tokens_emitted)`
+    /// for every tick that emitted tokens — the raw series the latency
+    /// benches derive per-token inter-arrival gaps from.
+    pub tick_emits: Vec<(f64, usize)>,
 }
 
 /// A lane's recovery snapshot: the sequence and rng stream state as of the
@@ -319,6 +512,28 @@ struct Lane {
     /// Lifetime retry count (reported on the output).
     total_retries: usize,
     degraded: bool,
+    priority: Priority,
+    /// Per-request deadline, measured from `arrival`.
+    deadline: Option<Duration>,
+    /// When the request was submitted (TTFT / queue-time origin).
+    arrival: Instant,
+    /// Arrival → admission wait, frozen at admission.
+    queue_secs: f64,
+    /// Seconds from arrival to the first emitting tick.
+    ttft: Option<f64>,
+    /// `(seconds_since_arrival, emitted)` per emitting tick.
+    tick_emits: Vec<(f64, usize)>,
+    /// Tokens already counted into `tick_emits`.
+    emitted_seen: usize,
+    /// In-flight chunked prefill (fresh prompt or post-release rebuild).
+    prefill: Option<PrefillState>,
+    /// The lane's KV was released under pool pressure; its context must
+    /// be replayed (chunked) before it can decode again.
+    needs_rebuild: bool,
+    /// Blocks this lane holds reserved against the target/draft pools
+    /// (zero when uncapped). Returned at every retirement site.
+    reserve_t: usize,
+    reserve_d: usize,
 }
 
 /// Worst-case block reservation per admitted lane under a capped pool.
@@ -336,19 +551,86 @@ struct Lane {
 /// of failure — and retiring lanes hand their reservation (and, via
 /// `Drop`, their actual blocks) back.
 struct LaneBudget {
-    /// Blocks reserved against the target pool per lane.
-    reserve_target: usize,
-    /// Blocks reserved against the draft pool per lane.
-    reserve_draft: usize,
+    /// Tokens per block in both pools.
+    bt: usize,
+    /// 2 with resilience checkpoints (lane + COW snapshot), else 1.
+    factor: usize,
+    /// Longest trunk the draft handoff cache carries.
+    max_trunk: usize,
+    /// Worst-case rows one speculation block can commit beyond the
+    /// request's stated budget (trunk + branch + bonus overshoot).
+    overshoot: usize,
+    /// Whole-`max_seq` worst case per pool — the cap clamp, and the
+    /// per-tick safety bound for a lane running alone.
+    worst_target: usize,
+    worst_draft: usize,
     /// Per-pool cap (both pools), clamped so one lane always fits.
     cap: usize,
+}
+
+impl LaneBudget {
+    /// Tight per-request reservation: `prompt + max_new + overshoot` rows
+    /// (clamped to `max_seq`) instead of the whole-lifetime `max_seq`
+    /// worst case, so short requests stop pinning blocks they can never
+    /// touch and a small pool admits more concurrent lanes.
+    fn reserve(&self, meta: &crate::runtime::FamilyMeta, prompt: &str, max_new: usize) -> (usize, usize) {
+        let prompt_len = tokenizer::encode(prompt).len().max(1).min(meta.s_pre);
+        let rows = (prompt_len + max_new + self.overshoot).min(meta.target.max_seq);
+        let t = (self.factor * rows.div_ceil(self.bt)).min(self.worst_target);
+        let d = (self.factor
+            * (rows.min(meta.draft.max_seq).div_ceil(self.bt)
+                + self.max_trunk.div_ceil(self.bt)
+                + 1))
+            .min(self.worst_draft);
+        (t, d)
+    }
+
+    /// Worst-case blocks one tick of this lane can newly allocate
+    /// (committed rows plus COW forks of checkpoint-shared tail blocks).
+    /// Prefilling lanes commit one chunk per role; decoding lanes commit
+    /// at most `overshoot` target rows and the draft handoff.
+    fn tick_margin(&self, prefill_chunk: Option<usize>) -> (usize, usize) {
+        match prefill_chunk {
+            Some(chunk) => {
+                let m = chunk.div_ceil(self.bt) + 1;
+                (m, m)
+            }
+            None => {
+                let t = self.factor * (self.overshoot.div_ceil(self.bt) + 1);
+                let d = self.factor
+                    * (self.overshoot.div_ceil(self.bt) + 1 + self.max_trunk.div_ceil(self.bt) + 1);
+                (t, d)
+            }
+        }
+    }
+}
+
+/// One queued request with its arrival time (open-loop traces submit
+/// future arrivals via [`ServeLoop::submit_after`]).
+struct QueueEntry {
+    id: u64,
+    req: ServeRequest,
+    arrival: Instant,
 }
 
 /// Per-lane tick result, classified in the worker (so only plain data
 /// crosses back to the scheduler).
 enum StepOutcome {
-    Progress,
+    Progress(TickReport),
+    /// The lane's deadline expired before any work was dispatched this
+    /// tick (satellite: deadline granularity — checked per tick, not per
+    /// generation).
+    DeadlinePre,
     Fault(ServeError),
+}
+
+/// What a successful tick actually did (scheduler accounting).
+#[derive(Clone, Copy, Default)]
+struct TickReport {
+    /// This tick dispatched one prefill chunk (fresh or rebuild).
+    chunk: bool,
+    /// This tick completed a preempted lane's context rebuild.
+    rebuilt: bool,
 }
 
 /// The batched serving loop (see the module docs).
@@ -358,12 +640,18 @@ pub struct ServeLoop<'a> {
     policy: &'a dyn ActionPolicy,
     max_batch: usize,
     workers: usize,
-    queue: VecDeque<(u64, ServeRequest)>,
+    /// Per-class queues, `Priority::index()`-addressed. FIFO mode pops
+    /// the globally smallest id; scheduler mode stride-schedules.
+    queues: [VecDeque<QueueEntry>; 3],
     next_id: u64,
     budget: Option<LaneBudget>,
     requested_blocks: Option<usize>,
     resilience: Option<ResilienceConfig>,
     recovery: RecoveryCounters,
+    sched: Option<SchedConfig>,
+    counters: SchedCounters,
+    /// Stride-scheduling pass values per class (scheduler mode).
+    passes: [u64; 3],
 }
 
 impl<'a> ServeLoop<'a> {
@@ -376,19 +664,46 @@ impl<'a> ServeLoop<'a> {
         policy: &'a dyn ActionPolicy,
         max_batch: usize,
     ) -> ServeLoop<'a> {
+        // opt the whole process into scheduler mode without touching call
+        // sites (the CI equality rerun flips this)
+        let sched = match std::env::var("SPECDELAY_SCHED") {
+            Ok(v) if v == "1" => Some(SchedConfig::default()),
+            _ => None,
+        };
         ServeLoop {
             spec: SpecEngine::new(engine, sampling),
             verifier,
             policy,
             max_batch: max_batch.max(1),
             workers: threadpool::default_workers(),
-            queue: VecDeque::new(),
+            queues: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
             next_id: 0,
             budget: None,
             requested_blocks: None,
             resilience: None,
             recovery: RecoveryCounters::default(),
+            sched,
+            counters: SchedCounters::default(),
+            passes: [0; 3],
         }
+    }
+
+    /// Enable the preemptive priority scheduler (chunked prefill,
+    /// weighted per-class admission, preempt-and-requeue under a block
+    /// budget, deadline-aware shedding — see the module docs). Completed
+    /// streams stay bit-identical to FIFO and to the serial oracle; only
+    /// *scheduling* (ordering, latency, shedding) changes.
+    pub fn with_scheduler(mut self, cfg: SchedConfig) -> ServeLoop<'a> {
+        self.sched = Some(cfg);
+        self
+    }
+
+    /// Disable the scheduler (back to strict-FIFO admission), overriding
+    /// the `SPECDELAY_SCHED` env default. Benches use this to hold the
+    /// comparison baseline fixed.
+    pub fn without_scheduler(mut self) -> ServeLoop<'a> {
+        self.sched = None;
+        self
     }
 
     /// Override the per-tick worker count (defaults to
@@ -444,18 +759,23 @@ impl<'a> ServeLoop<'a> {
         let bt = default_block_tokens();
         let meta = self.spec.engine.meta();
         let max_trunk = meta.trunk_lens.iter().copied().max().unwrap_or(8);
+        let max_branch = meta.branch_lens.iter().copied().max().unwrap_or(8);
         // lane + (with resilience) its copy-on-write checkpoint, each
         // bounded by the single-lane worst case
         let factor = if self.resilience.is_some() { 2 } else { 1 };
-        let reserve_target = factor * meta.target.max_seq.div_ceil(bt);
+        // one block commits at most trunk + branch rows plus the bonus
+        // token — the per-tick (and per-request) growth bound
+        let overshoot = max_trunk + max_branch + 2;
+        let worst_target = factor * meta.target.max_seq.div_ceil(bt);
         // draft lane + the handoff cache's divergent blocks (boundary fork
         // + the trunk's own rows; the shared prefix costs nothing)
-        let reserve_draft =
+        let worst_draft =
             factor * (meta.draft.max_seq.div_ceil(bt) + max_trunk.div_ceil(bt) + 1);
-        let cap = blocks.max(reserve_target).max(reserve_draft);
+        let cap = blocks.max(worst_target).max(worst_draft);
         self.spec = SpecEngine::new(self.spec.engine, self.spec.sampling)
             .with_paged_kv(bt, Some(cap));
-        self.budget = Some(LaneBudget { reserve_target, reserve_draft, cap });
+        self.budget =
+            Some(LaneBudget { bt, factor, max_trunk, overshoot, worst_target, worst_draft, cap });
     }
 
     /// The engine driving the lanes (pool introspection for tests/benches).
@@ -468,22 +788,50 @@ impl<'a> ServeLoop<'a> {
         &self.recovery
     }
 
+    /// Scheduler counters of the most recent [`ServeLoop::run`].
+    pub fn sched_counters(&self) -> &SchedCounters {
+        &self.counters
+    }
+
+    /// Whether the preemptive scheduler is enabled.
+    pub fn scheduler_enabled(&self) -> bool {
+        self.sched.is_some()
+    }
+
     /// Enqueue a request; returns its admission-order id.
     pub fn submit(&mut self, req: ServeRequest) -> u64 {
+        self.submit_after(req, Duration::ZERO)
+    }
+
+    /// Enqueue a request that *arrives* `delay` from now: it is invisible
+    /// to admission until its arrival time, which lets a bench drive the
+    /// loop with a precomputed open-loop arrival trace. Ids are still
+    /// assigned in submission order.
+    pub fn submit_after(&mut self, req: ServeRequest, delay: Duration) -> u64 {
         let id = self.next_id;
         self.next_id += 1;
-        self.queue.push_back((id, req));
+        let class = req.priority.index();
+        self.queues[class].push_back(QueueEntry { id, req, arrival: Instant::now() + delay });
         id
     }
 
     /// Requests waiting for admission.
     pub fn queued(&self) -> usize {
-        self.queue.len()
+        self.queues.iter().map(|q| q.len()).sum()
+    }
+
+    /// Requests waiting for admission, per class (`[high, normal, low]`).
+    pub fn queued_by_class(&self) -> [usize; 3] {
+        [self.queues[0].len(), self.queues[1].len(), self.queues[2].len()]
     }
 
     fn lane_done(lane: &Lane) -> bool {
         match &lane.seq {
-            Some(seq) => seq.finished || seq.tokens.len() - seq.prompt_len >= lane.max_new,
+            Some(seq) => {
+                !lane.needs_rebuild
+                    && lane.prefill.is_none()
+                    && (seq.finished || seq.tokens.len() - seq.prompt_len >= lane.max_new)
+            }
             None => false, // not even prefilled yet
         }
     }
@@ -507,7 +855,160 @@ impl<'a> ServeLoop<'a> {
             error,
             degraded: lane.degraded,
             retries: lane.total_retries,
+            priority: lane.priority,
+            queue_secs: lane.queue_secs,
+            ttft_secs: lane.ttft,
+            tick_emits: lane.tick_emits,
         }
+    }
+
+    /// A shed queue entry's output: empty stream, structured error, the
+    /// queue wait it paid before being turned away.
+    fn shed_output(entry: QueueEntry, reason: &str) -> ServeOutput {
+        ServeOutput {
+            id: entry.id,
+            text: String::new(),
+            tokens: Vec::new(),
+            stats: GenStats::default(),
+            error: Some(ServeError::Shed { reason: reason.to_string() }),
+            degraded: false,
+            retries: 0,
+            priority: entry.req.priority,
+            queue_secs: entry.arrival.elapsed().as_secs_f64(),
+            ttft_secs: None,
+            tick_emits: Vec::new(),
+        }
+    }
+
+    /// FIFO head: the class holding the globally smallest id among
+    /// arrived queue fronts (each per-class queue is id-ordered, so the
+    /// global head is one of the three fronts) — byte-for-byte the legacy
+    /// admission order.
+    fn fifo_front(&self, now: Instant) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for c in 0..3 {
+            if let Some(e) = self.queues[c].front() {
+                if e.arrival <= now
+                    && best.map_or(true, |b| {
+                        e.id < self.queues[b].front().map_or(u64::MAX, |f| f.id)
+                    })
+                {
+                    best = Some(c);
+                }
+            }
+        }
+        best
+    }
+
+    /// Stride-scheduled head across the arrived class fronts: each class
+    /// advances a pass value by `STRIDE / weight` per admission and the
+    /// smallest pass wins (ties to the higher class), so admissions
+    /// converge to the weight ratios without starving any class.
+    fn weighted_front(&self, now: Instant) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for c in 0..3 {
+            let arrived = self.queues[c].front().is_some_and(|e| e.arrival <= now);
+            if arrived && best.map_or(true, |b| self.passes[c] < self.passes[b]) {
+                best = Some(c);
+            }
+        }
+        best
+    }
+
+    /// Pop the head of `class`, advancing its stride pass in scheduler
+    /// mode (pass values reset at the start of every drain).
+    fn take_front(&mut self, class: usize) -> Option<QueueEntry> {
+        const STRIDE: u64 = 1 << 20;
+        if let Some(cfg) = &self.sched {
+            self.passes[class] += STRIDE / cfg.weights[class].max(1);
+        }
+        self.queues[class].pop_front()
+    }
+
+    /// Committed-usage fit check (scheduler mode under a budget): do the
+    /// blocks actually resident in both pools, plus every given lane's
+    /// worst-case per-tick growth margin — and, when `extra` is set, one
+    /// more lane whose next tick is a prefill chunk — fit under the cap?
+    /// Uncapped or contiguous storage always fits.
+    fn usage_fits(&self, lanes: &[Lane], extra: Option<usize>) -> bool {
+        let Some(b) = &self.budget else { return true };
+        let Some(pools) = self.spec.kv_pools() else { return true };
+        let chunk = self.sched.as_ref().map_or(256, |s| s.prefill_chunk);
+        let (mut need_t, mut need_d) = (0usize, 0usize);
+        for lane in lanes {
+            let pre = (lane.prefill.is_some() || lane.seq.is_none() || lane.needs_rebuild)
+                .then_some(chunk);
+            let (t, d) = b.tick_margin(pre);
+            need_t += t;
+            need_d += d;
+        }
+        if let Some(chunk) = extra {
+            let (t, d) = b.tick_margin(Some(chunk));
+            need_t += t;
+            need_d += d;
+        }
+        pools.target.live_blocks() + need_t <= b.cap && pools.draft.live_blocks() + need_d <= b.cap
+    }
+
+    /// Would resuming `lane` on top of `active` stay under the cap for
+    /// its next tick?
+    fn resume_fits(&self, active: &[Lane], lane: &Lane) -> bool {
+        let chunk = self.sched.as_ref().map_or(256, |s| s.prefill_chunk);
+        let pre = (lane.prefill.is_some() || lane.seq.is_none() || lane.needs_rebuild)
+            .then_some(chunk);
+        let Some(b) = &self.budget else { return true };
+        let Some(pools) = self.spec.kv_pools() else { return true };
+        let (mut need_t, mut need_d) = b.tick_margin(pre);
+        for l in active {
+            let p = (l.prefill.is_some() || l.seq.is_none() || l.needs_rebuild)
+                .then_some(chunk);
+            let (t, d) = b.tick_margin(p);
+            need_t += t;
+            need_d += d;
+        }
+        pools.target.live_blocks() + need_t <= b.cap && pools.draft.live_blocks() + need_d <= b.cap
+    }
+
+    /// Drop every block a parked lane holds: discard an in-flight fresh
+    /// prefill outright, or release a decoded sequence's caches and mark
+    /// it for a chunked rebuild on resume. The lane's stream is unchanged
+    /// — the rebuild replays its exact committed context.
+    fn release_lane(lane: &mut Lane) {
+        lane.checkpoint = None;
+        if let Some(seq) = &mut lane.seq {
+            seq.release_kv();
+            lane.needs_rebuild = true;
+            lane.prefill = None;
+        } else {
+            lane.prefill = None;
+        }
+    }
+
+    /// A parked lane still holds pool blocks (so releasing it would help).
+    fn holds_blocks(lane: &Lane) -> bool {
+        (lane.seq.is_some() && !lane.needs_rebuild) || lane.prefill.is_some()
+    }
+
+    /// Make room for parked lane `keep` by releasing the *other* parked
+    /// lanes' blocks, youngest first. Returns true when something was
+    /// released (the caller re-checks the fit).
+    fn force_resume_room(&mut self, parked: &mut [Lane], keep: usize) -> bool {
+        let mut victim: Option<usize> = None;
+        for (i, lane) in parked.iter().enumerate() {
+            if i == keep || !Self::holds_blocks(lane) {
+                continue;
+            }
+            let better = victim.map_or(true, |v| {
+                (lane.priority.index(), lane.id) > (parked[v].priority.index(), parked[v].id)
+            });
+            if better {
+                victim = Some(i);
+            }
+        }
+        let Some(v) = victim else { return false };
+        Self::release_lane(&mut parked[v]);
+        self.counters.released += 1;
+        true
     }
 
     /// Drain the queue: admit, tick, retire until every submitted request
@@ -523,9 +1024,14 @@ impl<'a> ServeLoop<'a> {
     /// vs degraded autoregressive mode (see the module docs).
     pub fn run(&mut self) -> Result<Vec<ServeOutput>> {
         self.recovery = RecoveryCounters::default();
+        self.counters = SchedCounters::default();
+        self.passes = [0; 3];
         let mut active: Vec<Lane> = Vec::new();
+        // lanes preempted under pool pressure, waiting to be re-admitted
+        let mut parked: Vec<Lane> = Vec::new();
         let mut done: Vec<ServeOutput> = Vec::new();
-        // worst-case blocks reserved by active lanes (0 when uncapped)
+        // worst-case blocks reserved by active lanes (FIFO mode under a
+        // budget; scheduler mode admits on committed usage instead)
         let (mut reserved_t, mut reserved_d) = (0usize, 0usize);
         let mut health = BackendHealth::Healthy;
         // consecutive-fault streaks, in lane order across ticks
@@ -537,47 +1043,144 @@ impl<'a> ServeLoop<'a> {
                 // error instead of spinning (each lane's blocks return to
                 // the pools as its Sequence drops)
                 const MSG: &str = "backend circuit breaker open (degraded decode kept faulting)";
-                for lane in active.drain(..) {
-                    if let Some(b) = &self.budget {
-                        reserved_t -= b.reserve_target;
-                        reserved_d -= b.reserve_draft;
-                    }
+                for lane in active.drain(..).chain(parked.drain(..)) {
+                    reserved_t -= lane.reserve_t;
+                    reserved_d -= lane.reserve_d;
                     done.push(Self::retire(
                         lane,
                         Some(ServeError::Failed { message: MSG.to_string() }),
                     ));
                 }
-                while let Some((id, _req)) = self.queue.pop_front() {
-                    done.push(ServeOutput {
-                        id,
-                        text: String::new(),
-                        tokens: Vec::new(),
-                        stats: GenStats::default(),
-                        error: Some(ServeError::Failed { message: MSG.to_string() }),
-                        degraded: false,
-                        retries: 0,
-                    });
+                for q in &mut self.queues {
+                    while let Some(entry) = q.pop_front() {
+                        done.push(ServeOutput {
+                            id: entry.id,
+                            text: String::new(),
+                            tokens: Vec::new(),
+                            stats: GenStats::default(),
+                            error: Some(ServeError::Failed { message: MSG.to_string() }),
+                            degraded: false,
+                            retries: 0,
+                            priority: entry.req.priority,
+                            queue_secs: entry.arrival.elapsed().as_secs_f64(),
+                            ttft_secs: None,
+                            tick_emits: Vec::new(),
+                        });
+                    }
                 }
                 break;
             }
-            // admit queued requests into free batch slots (no backend work
-            // here: the lane prefills on its first fan-out tick)
-            while active.len() < self.max_batch {
-                if let Some(b) = &self.budget {
-                    // out-of-blocks backpressure: leave the request queued
-                    // unless its worst case fits both pools (a single lane
-                    // always fits — the caps are clamped to the reserve)
-                    let fits = reserved_t + b.reserve_target <= b.cap
-                        && reserved_d + b.reserve_draft <= b.cap;
-                    if !fits {
-                        break;
+            // load shedding (scheduler mode): expired-deadline entries and
+            // queue overflow retire from the queue as structured Shed
+            // outputs — no backend work is ever spent on them
+            if self.sched.is_some() {
+                for c in 0..3 {
+                    let mut i = 0;
+                    while i < self.queues[c].len() {
+                        let e = &self.queues[c][i];
+                        let expired = e.req.deadline.is_some_and(|d| e.arrival.elapsed() >= d);
+                        if expired {
+                            let entry = self.queues[c].remove(i).expect("indexed entry");
+                            self.counters.shed += 1;
+                            done.push(Self::shed_output(entry, "deadline expired in queue"));
+                        } else {
+                            i += 1;
+                        }
                     }
                 }
-                let Some((id, req)) = self.queue.pop_front() else { break };
-                if let Some(b) = &self.budget {
-                    reserved_t += b.reserve_target;
-                    reserved_d += b.reserve_draft;
+                if let Some(max_queue) = self.sched.as_ref().and_then(|s| s.max_queue) {
+                    while self.queued() > max_queue {
+                        // shed from the back of the lowest-priority class
+                        let c = (0..3).rev().find(|&c| !self.queues[c].is_empty());
+                        let Some(c) = c else { break };
+                        let entry = self.queues[c].pop_back().expect("non-empty queue");
+                        self.counters.shed += 1;
+                        done.push(Self::shed_output(entry, "queue overflow"));
+                    }
                 }
+            }
+            // admit into free batch slots (no backend work here: lanes
+            // prefill inside the fan-out). Parked lanes resume first —
+            // they hold committed work; fresh admissions come from the
+            // queues by FIFO id (legacy) or stride-weighted class order.
+            let now = Instant::now();
+            while active.len() < self.max_batch {
+                // resume the best parked lane (highest class, oldest id)
+                // whose tick margin fits on top of the committed blocks
+                if !parked.is_empty() {
+                    let mut best = 0usize;
+                    for i in 1..parked.len() {
+                        let (bp, bi) = (parked[best].priority.index(), parked[best].id);
+                        let (cp, ci) = (parked[i].priority.index(), parked[i].id);
+                        if (cp, ci) < (bp, bi) {
+                            best = i;
+                        }
+                    }
+                    let fits = self.resume_fits(&active, &parked[best]);
+                    if fits {
+                        let lane = parked.remove(best);
+                        self.counters.resumed += 1;
+                        active.push(lane);
+                        continue;
+                    }
+                    if active.is_empty() {
+                        // nothing running and the best parked lane still
+                        // does not fit: release other parked lanes'
+                        // blocks (youngest first), then its own — alone
+                        // it always fits, so the drain cannot strand it
+                        if !self.force_resume_room(&mut parked, best) {
+                            let mut lane = parked.remove(best);
+                            Self::release_lane(&mut lane);
+                            self.counters.released += 1;
+                            self.counters.resumed += 1;
+                            active.push(lane);
+                            continue;
+                        }
+                        // room was made: re-check fit on the next pass
+                        continue;
+                    }
+                    // parked lanes wait for running lanes to retire;
+                    // fresh admissions would only add pressure
+                    break;
+                }
+                let class = match if self.sched.is_some() {
+                    self.weighted_front(now)
+                } else {
+                    self.fifo_front(now)
+                } {
+                    Some(c) => c,
+                    None => break,
+                };
+                let entry = &self.queues[class][0];
+                let (mut r_t, mut r_d) = (0usize, 0usize);
+                if let Some(b) = &self.budget {
+                    if self.sched.is_some() {
+                        // committed-usage admission: the new lane only
+                        // needs its first tick's margin on top of what is
+                        // actually resident — overload is handled by
+                        // preemption, not by worst-case reservations
+                        let chunk =
+                            self.sched.as_ref().map_or(256, |s| s.prefill_chunk);
+                        if !self.usage_fits(&active, Some(chunk)) {
+                            break;
+                        }
+                    } else {
+                        // FIFO out-of-blocks backpressure: leave the
+                        // request queued unless its (tight) worst case
+                        // fits both pools
+                        let meta = self.spec.engine.meta();
+                        let (t, d) = b.reserve(meta, &entry.req.prompt, entry.req.max_new);
+                        let fits = reserved_t + t <= b.cap && reserved_d + d <= b.cap;
+                        if !fits {
+                            break;
+                        }
+                        (r_t, r_d) = (t, d);
+                    }
+                }
+                let entry = self.take_front(class).expect("peeked entry");
+                reserved_t += r_t;
+                reserved_d += r_d;
+                let QueueEntry { id, req, arrival } = entry;
                 active.push(Lane {
                     id,
                     seed: req.seed,
@@ -591,10 +1194,87 @@ impl<'a> ServeLoop<'a> {
                     retries: 0,
                     total_retries: 0,
                     degraded: false,
+                    priority: req.priority,
+                    deadline: req.deadline,
+                    arrival,
+                    queue_secs: arrival.elapsed().as_secs_f64(),
+                    ttft: None,
+                    tick_emits: Vec::new(),
+                    emitted_seen: 0,
+                    prefill: None,
+                    needs_rebuild: false,
+                    reserve_t: r_t,
+                    reserve_d: r_d,
                 });
             }
+            self.counters.peak_active = self.counters.peak_active.max(active.len());
             if active.is_empty() {
-                break;
+                if self.queued() == 0 && parked.is_empty() {
+                    break;
+                }
+                // only future arrivals remain: sleep until the earliest
+                // one instead of spinning
+                let next = self
+                    .queues
+                    .iter()
+                    .filter_map(|q| q.iter().map(|e| e.arrival).min())
+                    .min();
+                if let Some(at) = next {
+                    let now = Instant::now();
+                    if at > now {
+                        std::thread::sleep(at - now);
+                    }
+                }
+                continue;
+            }
+            // preemption (scheduler mode under a budget): when the blocks
+            // actually resident plus every active lane's worst-case
+            // per-tick growth no longer fit the pools, park the
+            // lowest-priority / youngest lane (its checkpoint fork is
+            // dropped, its committed prefix stays resident); if a single
+            // lane still does not fit, release parked lanes' blocks
+            // entirely — they rebuild their context by chunked replay on
+            // resume. An admitted tick therefore can never hit pool
+            // exhaustion mid-dispatch.
+            if self.sched.is_some() && self.budget.is_some() {
+                while !self.usage_fits(&active, None) {
+                    if active.len() > 1 {
+                        let mut v = 0usize;
+                        for i in 1..active.len() {
+                            if (active[i].priority.index(), active[i].id)
+                                > (active[v].priority.index(), active[v].id)
+                            {
+                                v = i;
+                            }
+                        }
+                        let mut lane = active.remove(v);
+                        lane.checkpoint = None; // frees the COW snapshot
+                        self.counters.preempted += 1;
+                        parked.push(lane);
+                        continue;
+                    }
+                    let mut victim: Option<usize> = None;
+                    for (i, lane) in parked.iter().enumerate() {
+                        if !Self::holds_blocks(lane) {
+                            continue;
+                        }
+                        let better = victim.map_or(true, |w| {
+                            (lane.priority.index(), lane.id)
+                                > (parked[w].priority.index(), parked[w].id)
+                        });
+                        if better {
+                            victim = Some(i);
+                        }
+                    }
+                    match victim {
+                        Some(i) => {
+                            Self::release_lane(&mut parked[i]);
+                            self.counters.released += 1;
+                        }
+                        // a lone lane always fits under the cap clamp
+                        None => break,
+                    }
+                }
             }
             // tick mode: degraded lanes decode autoregressively, except on
             // probe ticks, which re-attempt the speculative path
@@ -615,16 +1295,27 @@ impl<'a> ServeLoop<'a> {
             let spec = &self.spec;
             let verifier = self.verifier;
             let policy = self.policy;
+            let chunk = self.sched.as_ref().map(|s| s.prefill_chunk);
+            let global_deadline = self.resilience.as_ref().and_then(|r| r.deadline);
             let stepped = threadpool::par_map_init(
                 std::mem::take(&mut active),
                 self.workers,
                 || (),
                 |_state, _i, mut lane: Lane| -> (Lane, StepOutcome) {
+                    // deadline granularity: check before dispatching any
+                    // work for this tick, so an expired lane retires
+                    // within one chunk/block of its deadline instead of
+                    // running its whole generation first
+                    let expired = lane.deadline.is_some_and(|d| lane.arrival.elapsed() >= d)
+                        || global_deadline.is_some_and(|d| lane.started.elapsed() >= d);
+                    if expired {
+                        return (lane, StepOutcome::DeadlinePre);
+                    }
                     let res = catch_unwind(AssertUnwindSafe(|| {
-                        lane_tick(spec, verifier, policy, &mut lane, ar)
+                        lane_tick(spec, verifier, policy, &mut lane, ar, chunk)
                     }));
                     let outcome = match res {
-                        Ok(Ok(())) => StepOutcome::Progress,
+                        Ok(Ok(rep)) => StepOutcome::Progress(rep),
                         Ok(Err(e)) => StepOutcome::Fault(classify(e)),
                         Err(p) => {
                             StepOutcome::Fault(ServeError::Panic { message: panic_message(p) })
@@ -642,11 +1333,13 @@ impl<'a> ServeLoop<'a> {
             if let Some(cfg) = &self.resilience {
                 for (_, outcome) in &stepped {
                     match outcome {
-                        StepOutcome::Progress => match health {
+                        StepOutcome::Progress(_) => match health {
                             BackendHealth::Healthy => healthy_faults = 0,
                             BackendHealth::Degraded if ar => degraded_faults = 0,
                             _ => {}
                         },
+                        // no dispatch happened: says nothing about health
+                        StepOutcome::DeadlinePre => {}
                         StepOutcome::Fault(_) => {
                             tick_faults += 1;
                             match health {
@@ -684,31 +1377,53 @@ impl<'a> ServeLoop<'a> {
             // phase 2: lane fates, with the post-tick health known
             for (mut lane, outcome) in stepped {
                 match outcome {
-                    StepOutcome::Progress => {
+                    StepOutcome::Progress(rep) => {
                         lane.retries = 0;
-                        if self.resilience.is_some() {
+                        if rep.chunk {
+                            self.counters.prefill_chunks += 1;
+                        }
+                        if rep.rebuilt {
+                            self.counters.rebuilt += 1;
+                        }
+                        // never checkpoint a half-built cache: a lane
+                        // mid-prefill or mid-rebuild restores from scratch
+                        // instead (its stream is deterministic either way)
+                        if self.resilience.is_some()
+                            && lane.prefill.is_none()
+                            && !lane.needs_rebuild
+                        {
                             if let Some(seq) = &lane.seq {
                                 lane.checkpoint =
                                     Some(Checkpoint { seq: seq.clone(), rng: lane.rng.clone() });
+                            }
+                        }
+                        // emission trace: TTFT and the per-tick series the
+                        // latency benches aggregate
+                        if let Some(seq) = &lane.seq {
+                            let emitted = seq.tokens.len() - seq.prompt_len;
+                            if emitted > lane.emitted_seen {
+                                let at = lane.arrival.elapsed().as_secs_f64();
+                                if lane.ttft.is_none() {
+                                    lane.ttft = Some(at);
+                                }
+                                lane.tick_emits.push((at, emitted - lane.emitted_seen));
+                                lane.emitted_seen = emitted;
                             }
                         }
                         let deadline_hit = self
                             .resilience
                             .as_ref()
                             .and_then(|r| r.deadline)
-                            .is_some_and(|d| lane.started.elapsed() >= d);
+                            .is_some_and(|d| lane.started.elapsed() >= d)
+                            || lane.deadline.is_some_and(|d| lane.arrival.elapsed() >= d);
                         if Self::lane_done(&lane) {
-                            if let Some(b) = &self.budget {
-                                reserved_t -= b.reserve_target;
-                                reserved_d -= b.reserve_draft;
-                            }
+                            reserved_t -= lane.reserve_t;
+                            reserved_d -= lane.reserve_d;
                             done.push(Self::retire(lane, None));
                         } else if deadline_hit {
                             self.recovery.deadline_retired += 1;
-                            if let Some(b) = &self.budget {
-                                reserved_t -= b.reserve_target;
-                                reserved_d -= b.reserve_draft;
-                            }
+                            reserved_t -= lane.reserve_t;
+                            reserved_d -= lane.reserve_d;
                             let elapsed_secs = lane.started.elapsed().as_secs_f64();
                             done.push(Self::retire(
                                 lane,
@@ -717,6 +1432,18 @@ impl<'a> ServeLoop<'a> {
                         } else {
                             active.push(lane);
                         }
+                    }
+                    StepOutcome::DeadlinePre => {
+                        // expired before any work was dispatched: retire
+                        // with the partial stream it already has
+                        self.recovery.deadline_retired += 1;
+                        reserved_t -= lane.reserve_t;
+                        reserved_d -= lane.reserve_d;
+                        let elapsed_secs = lane.started.elapsed().as_secs_f64();
+                        done.push(Self::retire(
+                            lane,
+                            Some(ServeError::Deadline { elapsed_secs }),
+                        ));
                     }
                     StepOutcome::Fault(err) => {
                         match &err {
@@ -730,10 +1457,8 @@ impl<'a> ServeLoop<'a> {
                             // lane immediately (its blocks return via Drop);
                             // the other lanes are unaffected
                             self.recovery.surfaced += 1;
-                            if let Some(b) = &self.budget {
-                                reserved_t -= b.reserve_target;
-                                reserved_d -= b.reserve_draft;
-                            }
+                            reserved_t -= lane.reserve_t;
+                            reserved_d -= lane.reserve_d;
                             done.push(Self::retire(lane, Some(err)));
                             continue;
                         };
@@ -747,12 +1472,25 @@ impl<'a> ServeLoop<'a> {
                                 lane.rng = cp.rng.clone();
                             }
                             None => {
+                                // full restart (also the only fault path
+                                // for a lane caught mid-prefill or
+                                // mid-rebuild, whose caches are half
+                                // built): drop the partial stream and its
+                                // emission trace — deterministic replay
+                                // re-emits the identical tokens
                                 lane.seq = None;
                                 lane.rng = Pcg64::new(lane.seed, lane.id);
+                                lane.prefill = None;
+                                lane.needs_rebuild = false;
+                                lane.emitted_seen = 0;
+                                lane.tick_emits.clear();
+                                lane.ttft = None;
                             }
                         }
-                        let deadline_hit =
-                            cfg.deadline.is_some_and(|d| lane.started.elapsed() >= d);
+                        let deadline_hit = cfg
+                            .deadline
+                            .is_some_and(|d| lane.started.elapsed() >= d)
+                            || lane.deadline.is_some_and(|d| lane.arrival.elapsed() >= d);
                         if health == BackendHealth::Failed {
                             // drained (with a surfaced error) next tick
                             self.recovery.surfaced += 1;
@@ -760,10 +1498,8 @@ impl<'a> ServeLoop<'a> {
                         } else if deadline_hit {
                             self.recovery.surfaced += 1;
                             self.recovery.deadline_retired += 1;
-                            if let Some(b) = &self.budget {
-                                reserved_t -= b.reserve_target;
-                                reserved_d -= b.reserve_draft;
-                            }
+                            reserved_t -= lane.reserve_t;
+                            reserved_d -= lane.reserve_d;
                             let elapsed_secs = lane.started.elapsed().as_secs_f64();
                             done.push(Self::retire(
                                 lane,
@@ -784,10 +1520,8 @@ impl<'a> ServeLoop<'a> {
                             active.push(lane);
                         } else {
                             self.recovery.surfaced += 1;
-                            if let Some(b) = &self.budget {
-                                reserved_t -= b.reserve_target;
-                                reserved_d -= b.reserve_draft;
-                            }
+                            reserved_t -= lane.reserve_t;
+                            reserved_d -= lane.reserve_d;
                             let retries = lane.retries;
                             done.push(Self::retire(
                                 lane,
@@ -809,19 +1543,56 @@ impl<'a> ServeLoop<'a> {
     }
 }
 
-/// One tick of lane-local work: prefill on the first tick, then either one
-/// speculation block (the exact per-block body of [`SpecEngine::generate`],
-/// so a lane's stream matches a serial run) or — in degraded mode — one
-/// lossless autoregressive token.
+/// One tick of lane-local work. In FIFO mode (`chunk == None`): one-shot
+/// prefill on the first tick, then one speculation block per tick (the
+/// exact per-block body of [`SpecEngine::generate`], so a lane's stream
+/// matches a serial run) or — in degraded mode — one lossless
+/// autoregressive token. In scheduler mode (`chunk == Some(_)`): a lane
+/// mid-prefill (fresh prompt) or mid-rebuild (preempted-and-released
+/// context replay) commits at most one chunk of rows and yields the tick;
+/// decode work resumes only once the caches are whole. The chunk schedule
+/// changes *when* rows are committed, never their values, so streams are
+/// bit-identical across modes.
 fn lane_tick(
     spec: &SpecEngine<'_>,
     verifier: &dyn Verifier,
     policy: &dyn ActionPolicy,
     lane: &mut Lane,
     ar: bool,
-) -> Result<()> {
-    if lane.seq.is_none() {
-        lane.seq = Some(spec.start(&lane.prompt)?);
+    chunk: Option<usize>,
+) -> Result<TickReport> {
+    let mut rep = TickReport::default();
+    match chunk {
+        None => {
+            if lane.seq.is_none() {
+                lane.seq = Some(spec.start(&lane.prompt)?);
+            }
+        }
+        Some(chunk) => {
+            if lane.needs_rebuild && lane.prefill.is_none() {
+                let seq = lane.seq.as_ref().expect("rebuild implies a sequence");
+                lane.prefill = Some(spec.rebuild_prefill(seq));
+            }
+            if lane.seq.is_none() && lane.prefill.is_none() {
+                lane.prefill = Some(spec.start_chunked(&lane.prompt));
+            }
+            if let Some(st) = &mut lane.prefill {
+                rep.chunk = true;
+                let finished = spec.prefill_step(st, chunk)?;
+                if finished {
+                    let st = lane.prefill.take().expect("prefill state present");
+                    if st.is_rebuild() {
+                        let seq = lane.seq.as_mut().expect("rebuild implies a sequence");
+                        spec.finish_rebuild(st, seq)?;
+                        lane.needs_rebuild = false;
+                        rep.rebuilt = true;
+                    } else {
+                        lane.seq = Some(spec.finish_prefill(st)?);
+                    }
+                }
+                return Ok(rep);
+            }
+        }
     }
     if !ServeLoop::lane_done(lane) {
         if ar {
@@ -838,7 +1609,7 @@ fn lane_tick(
             lane.stats.add_block(&b);
         }
     }
-    Ok(())
+    Ok(rep)
 }
 
 /// Classify a lane failure into the [`ServeError`] taxonomy: typed

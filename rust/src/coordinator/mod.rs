@@ -21,10 +21,12 @@ pub mod server;
 mod spec;
 
 pub use batch::{
-    BackendHealth, RecoveryCounters, ResilienceConfig, ServeError, ServeLoop, ServeOutput,
-    ServeRequest,
+    BackendHealth, Priority, RecoveryCounters, ResilienceConfig, SchedConfig, SchedCounters,
+    ServeError, ServeLoop, ServeOutput, ServeRequest,
 };
-pub use spec::{generate_autoregressive, KvPools, RootFeatures, Sequence, SpecEngine};
+pub use spec::{
+    generate_autoregressive, KvPools, PrefillState, RootFeatures, Sequence, SpecEngine,
+};
 
 use crate::dist::{NodeDist, SamplingConfig};
 use crate::draft::Action;

@@ -2,9 +2,29 @@
 //!
 //! Protocol: one JSON object per line in, one per line out.
 //!   request:  {"prompt": "...", "max_new": 64, "temperature": 0.8,
-//!              "top_p": 1.0, "verifier": "SpecInfer", "k": 2, "l1": 2, "l2": 4}
+//!              "top_p": 1.0, "verifier": "SpecInfer", "k": 2, "l1": 2, "l2": 4,
+//!              "priority": "high|normal|low", "deadline_ms": 250}
 //!   response: {"text": "...", "tokens": n, "blocks": m, "tps": x,
-//!              "block_efficiency": y}
+//!              "block_efficiency": y, "priority": "...",
+//!              "deadline_exceeded": bool (only when deadline_ms was set)}
+//!
+//! `priority` tags the request with a service class (the batched
+//! [`super::ServeLoop`] scheduler's wire vocabulary; this single-lane
+//! front-end serves in arrival order regardless, but validates and echoes
+//! the class and accounts served requests per class). `deadline_ms`
+//! bounds generation wall-clock from request start: the deadline is
+//! checked between speculation blocks, so an expired request returns its
+//! partial stream with `deadline_exceeded: true` within one block of the
+//! limit instead of running to `max_new`.
+//!
+//! A `{"stats": true}` line returns queue depths per priority class and
+//! per-class served counts instead of generating — the lightweight
+//! health/load probe:
+//!   {"queued": {"high": 0, "normal": 0, "low": 0}, "active": 0,
+//!    "served": {"high": h, "normal": n, "low": l}}
+//! (depths are always zero here: this front-end has no queue — the
+//! batched scheduler's [`super::ServeLoop::queued_by_class`] is the
+//! populated counterpart).
 //!
 //! Every failure is answered with a structured error object rather than a
 //! bare string (or a dropped connection):
@@ -30,17 +50,26 @@
 
 use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
 use std::net::TcpListener;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::coordinator::{FixedPolicy, SpecEngine};
+use crate::coordinator::{FixedPolicy, GenStats, Priority, SpecEngine};
 use crate::dist::SamplingConfig;
 use crate::draft::Action;
 use crate::runtime::Backend;
+use crate::tokenizer;
 use crate::util::json::{num, obj, s, Json};
 use crate::util::Pcg64;
 use crate::verify;
+
+/// Per-class service accounting for one server process (reported by the
+/// `stats` request).
+#[derive(Clone, Debug, Default)]
+pub struct ServeStats {
+    /// Requests generated to completion, per [`Priority::index`] class.
+    pub served: [u64; 3],
+}
 
 /// Listener configuration.
 pub struct ServerConfig {
@@ -108,13 +137,14 @@ pub fn serve(engine: &dyn Backend, cfg: &ServerConfig, max_requests: Option<usiz
     eprintln!("[specdelay] serving {} on {}", engine.meta().family, cfg.addr);
     let mut rng = Pcg64::seeded(cfg.seed);
     let mut served = 0usize;
+    let mut stats = ServeStats::default();
     for stream in listener.incoming() {
         let stream = stream?;
         stream.set_read_timeout(cfg.read_timeout)?;
         stream.set_write_timeout(cfg.write_timeout)?;
         let mut reader = BufReader::new(stream.try_clone()?);
         let mut out = stream;
-        served += handle_conn(engine, &mut reader, &mut out, cfg, &mut rng)?;
+        served += handle_conn(engine, &mut reader, &mut out, cfg, &mut rng, &mut stats)?;
         if let Some(m) = max_requests {
             if served >= m {
                 break;
@@ -190,6 +220,7 @@ fn handle_conn<R: BufRead, W: Write>(
     out: &mut W,
     cfg: &ServerConfig,
     rng: &mut Pcg64,
+    stats: &mut ServeStats,
 ) -> Result<usize> {
     let mut line = String::new();
     let mut count = 0usize;
@@ -214,14 +245,29 @@ fn handle_conn<R: BufRead, W: Write>(
             ),
             LineRead::Line => {
                 if count >= cfg.max_requests_per_conn {
-                    let reply = error_reply(
-                        "too_many_requests",
-                        &format!("connection served {count} requests; reconnect to continue"),
-                    );
+                    // enriched overload error: how much work this
+                    // connection already got, that nothing is queued
+                    // behind it, and that an immediate reconnect (which
+                    // resets the per-connection cap) is fine
+                    let reply = obj(vec![(
+                        "error",
+                        obj(vec![
+                            ("kind", s("too_many_requests")),
+                            (
+                                "message",
+                                s(&format!(
+                                    "connection served {count} requests; reconnect to continue"
+                                )),
+                            ),
+                            ("queued", num(0.0)),
+                            ("active", num(0.0)),
+                            ("retry_after_hint_ms", num(0.0)),
+                        ]),
+                    )]);
                     let _ = writeln!(out, "{reply}");
                     return Ok(count);
                 }
-                match handle_request(engine, line.trim(), rng) {
+                match handle_request(engine, line.trim(), rng, stats) {
                     Ok(j) => j,
                     Err(e) => error_reply(e.kind, &e.message),
                 }
@@ -250,14 +296,45 @@ fn num_param(req: &Json, key: &str, default: f64, lo: f64, hi: f64) -> Result<f6
     }
 }
 
-fn handle_request(engine: &dyn Backend, line: &str, rng: &mut Pcg64) -> Result<Json, ReqError> {
+/// The `{"stats": true}` reply: per-class queue depths (always zero for
+/// this queueless front-end — wire-compatible with the batched
+/// scheduler's), in-flight lane count, and per-class served totals.
+fn stats_reply(stats: &ServeStats) -> Json {
+    let class = |v: [f64; 3]| {
+        obj(vec![("high", num(v[0])), ("normal", num(v[1])), ("low", num(v[2]))])
+    };
+    obj(vec![
+        ("queued", class([0.0, 0.0, 0.0])),
+        ("active", num(0.0)),
+        ("served", class([stats.served[0] as f64, stats.served[1] as f64, stats.served[2] as f64])),
+    ])
+}
+
+fn handle_request(
+    engine: &dyn Backend,
+    line: &str,
+    rng: &mut Pcg64,
+    stats: &mut ServeStats,
+) -> Result<Json, ReqError> {
     let req = Json::parse(line).map_err(|e| ReqError::new("bad_json", format!("bad json: {e}")))?;
+    if req.get("stats").is_ok() {
+        return Ok(stats_reply(stats));
+    }
     let prompt = req
         .get("prompt")
         .map_err(|e| ReqError::new("bad_request", e))?
         .as_str()
         .ok_or_else(|| ReqError::new("bad_request", "prompt must be a string"))?
         .to_string();
+    let priority = match req.get("priority").ok().map(|p| p.as_str().map(|v| v.to_string())) {
+        None => Priority::Normal,
+        Some(Some(name)) => Priority::parse(&name).ok_or_else(|| {
+            ReqError::new("bad_params", format!("priority must be high|normal|low, got {name}"))
+        })?,
+        Some(None) => {
+            return Err(ReqError::new("bad_params", "priority must be a string"));
+        }
+    };
     let temperature = num_param(&req, "temperature", 1.0, 0.0, 16.0)? as f32;
     let top_p = num_param(&req, "top_p", 1.0, 0.0, 1.0)? as f32;
     if top_p <= 0.0 {
@@ -278,18 +355,45 @@ fn handle_request(engine: &dyn Backend, line: &str, rng: &mut Pcg64) -> Result<J
         num_param(&req, "l2", 4.0, 0.0, 64.0)? as usize,
     );
     let max_new = num_param(&req, "max_new", 64.0, 1.0, 4096.0)? as usize;
+    let deadline_ms = num_param(&req, "deadline_ms", 0.0, 0.0, 3_600_000.0)?;
+    let deadline =
+        (deadline_ms > 0.0).then(|| Duration::from_micros((deadline_ms * 1000.0) as u64));
 
+    let gen_err = |e: anyhow::Error| ReqError::new("generation", e.to_string());
     let spec = SpecEngine::new(engine, sampling);
-    let (text, stats) = spec
-        .generate(&prompt, max_new, verifier.as_ref(), &FixedPolicy(action), rng)
-        .map_err(|e| ReqError::new("generation", e.to_string()))?;
-    Ok(obj(vec![
+    let policy = FixedPolicy(action);
+    // the exact per-block loop of `SpecEngine::generate` (same rng
+    // consumption, so streams match a plain generate call), with the
+    // deadline checked between blocks: an expired request returns its
+    // partial stream within one block of the limit
+    let started = Instant::now();
+    let mut seq = spec.start(&prompt).map_err(gen_err)?;
+    let mut gstats = GenStats::default();
+    let mut exceeded = false;
+    while !(seq.finished || seq.tokens.len() - seq.prompt_len >= max_new) {
+        if deadline.is_some_and(|d| started.elapsed() >= d) {
+            exceeded = true;
+            break;
+        }
+        let a = spec.choose_action(&mut seq, &policy).map_err(gen_err)?;
+        let b = spec.step(&mut seq, verifier.as_ref(), a, rng).map_err(gen_err)?;
+        gstats.add_block(&b);
+    }
+    gstats.wall_secs = started.elapsed().as_secs_f64();
+    let text = tokenizer::decode(&seq.tokens[seq.prompt_len..]);
+    stats.served[priority.index()] += 1;
+    let mut fields = vec![
         ("text", s(&text)),
-        ("tokens", num(stats.tokens as f64)),
-        ("blocks", num(stats.blocks as f64)),
-        ("tps", num(stats.tps())),
-        ("block_efficiency", num(stats.block_efficiency())),
-    ]))
+        ("tokens", num(gstats.tokens as f64)),
+        ("blocks", num(gstats.blocks as f64)),
+        ("tps", num(gstats.tps())),
+        ("block_efficiency", num(gstats.block_efficiency())),
+        ("priority", s(priority.name())),
+    ];
+    if deadline.is_some() {
+        fields.push(("deadline_exceeded", Json::Bool(exceeded)));
+    }
+    Ok(obj(fields))
 }
 
 #[cfg(test)]
@@ -304,7 +408,8 @@ mod tests {
 
     fn request(engine: &dyn Backend, line: &str) -> Json {
         let mut rng = Pcg64::seeded(0);
-        match handle_request(engine, line, &mut rng) {
+        let mut stats = ServeStats::default();
+        match handle_request(engine, line, &mut rng, &mut stats) {
             Ok(j) => j,
             Err(e) => error_reply(e.kind, &e.message),
         }
@@ -383,7 +488,7 @@ mod tests {
         let mut reader = Cursor::new(input.into_bytes());
         let mut out: Vec<u8> = Vec::new();
         let mut rng = Pcg64::seeded(0);
-        let served = handle_conn(&b, &mut reader, &mut out, &cfg, &mut rng).unwrap();
+        let served = handle_conn(&b, &mut reader, &mut out, &cfg, &mut rng, &mut ServeStats::default()).unwrap();
         assert_eq!(served, 2);
         let text = String::from_utf8(out).unwrap();
         let replies: Vec<&str> = text.lines().collect();
@@ -404,13 +509,97 @@ mod tests {
         let mut reader = Cursor::new(input.into_bytes());
         let mut out: Vec<u8> = Vec::new();
         let mut rng = Pcg64::seeded(0);
-        let served = handle_conn(&b, &mut reader, &mut out, &cfg, &mut rng).unwrap();
+        let served = handle_conn(&b, &mut reader, &mut out, &cfg, &mut rng, &mut ServeStats::default()).unwrap();
         assert_eq!(served, 2);
         let text = String::from_utf8(out).unwrap();
         let replies: Vec<&str> = text.lines().collect();
         assert_eq!(replies.len(), 3, "{text}");
         let last = Json::parse(replies[2]).unwrap();
         assert_eq!(error_kind(&last).as_deref(), Some("too_many_requests"));
+    }
+
+    #[test]
+    fn priority_is_validated_and_echoed() {
+        let b = backend();
+        let j = request(&b, r#"{"prompt": "2+2= ", "max_new": 2, "priority": "high"}"#);
+        assert!(error_kind(&j).is_none(), "{j}");
+        assert_eq!(j.get("priority").unwrap().as_str(), Some("high"));
+        // default class when omitted
+        let j = request(&b, r#"{"prompt": "2+2= ", "max_new": 2}"#);
+        assert_eq!(j.get("priority").unwrap().as_str(), Some("normal"));
+        // junk class and non-string class are bad_params
+        for line in [
+            r#"{"prompt": "hi", "priority": "urgent"}"#,
+            r#"{"prompt": "hi", "priority": 3}"#,
+        ] {
+            let j = request(&b, line);
+            assert_eq!(error_kind(&j).as_deref(), Some("bad_params"), "line: {line}");
+        }
+    }
+
+    #[test]
+    fn deadline_ms_bounds_generation_and_is_reported() {
+        let b = backend();
+        // a deadline that has effectively already passed: partial (here
+        // empty) stream plus the exceeded flag, not an error
+        let j = request(&b, r#"{"prompt": "2+2= ", "max_new": 64, "deadline_ms": 0.001}"#);
+        assert!(error_kind(&j).is_none(), "{j}");
+        assert_eq!(j.get("deadline_exceeded").unwrap(), &Json::Bool(true));
+        // a generous deadline finishes and reports false
+        let j = request(
+            &b,
+            r#"{"prompt": "2+2= ", "max_new": 2, "deadline_ms": 60000, "temperature": 0}"#,
+        );
+        assert!(error_kind(&j).is_none(), "{j}");
+        assert_eq!(j.get("deadline_exceeded").unwrap(), &Json::Bool(false));
+        assert!(j.get("tokens").unwrap().as_f64().unwrap() >= 1.0);
+        // no deadline → no flag in the reply
+        let j = request(&b, r#"{"prompt": "2+2= ", "max_new": 2, "temperature": 0}"#);
+        assert!(j.get("deadline_exceeded").is_err(), "{j}");
+    }
+
+    #[test]
+    fn stats_request_reports_class_depths_and_served_counts() {
+        let b = backend();
+        let mut rng = Pcg64::seeded(0);
+        let mut stats = ServeStats::default();
+        let gen = r#"{"prompt": "2+2= ", "max_new": 2, "priority": "low"}"#;
+        handle_request(&b, gen, &mut rng, &mut stats).unwrap();
+        handle_request(&b, gen, &mut rng, &mut stats).unwrap();
+        let j = handle_request(&b, r#"{"stats": true}"#, &mut rng, &mut stats).unwrap();
+        let queued = j.get("queued").unwrap();
+        for class in ["high", "normal", "low"] {
+            assert_eq!(queued.get(class).unwrap().as_f64(), Some(0.0), "{j}");
+        }
+        assert_eq!(j.get("active").unwrap().as_f64(), Some(0.0));
+        let served = j.get("served").unwrap();
+        assert_eq!(served.get("low").unwrap().as_f64(), Some(2.0), "{j}");
+        assert_eq!(served.get("high").unwrap().as_f64(), Some(0.0), "{j}");
+        // a stats probe is not itself a served generation
+        assert!(j.get("text").is_err());
+    }
+
+    #[test]
+    fn request_cap_reply_carries_load_fields() {
+        let b = backend();
+        let mut cfg = ServerConfig::new("unused", 0);
+        cfg.max_requests_per_conn = 1;
+        let line = r#"{"prompt": "2+2= ", "max_new": 2, "temperature": 0}"#;
+        let input = format!("{line}\n{line}\n");
+        let mut reader = Cursor::new(input.into_bytes());
+        let mut out: Vec<u8> = Vec::new();
+        let mut rng = Pcg64::seeded(0);
+        let served =
+            handle_conn(&b, &mut reader, &mut out, &cfg, &mut rng, &mut ServeStats::default())
+                .unwrap();
+        assert_eq!(served, 1);
+        let text = String::from_utf8(out).unwrap();
+        let last = Json::parse(text.lines().last().unwrap()).unwrap();
+        assert_eq!(error_kind(&last).as_deref(), Some("too_many_requests"));
+        let err = last.get("error").unwrap();
+        assert_eq!(err.get("queued").unwrap().as_f64(), Some(0.0));
+        assert_eq!(err.get("active").unwrap().as_f64(), Some(0.0));
+        assert!(err.get("retry_after_hint_ms").unwrap().as_f64().is_some());
     }
 
     #[test]
@@ -422,7 +611,7 @@ mod tests {
         let mut reader = Cursor::new(bytes);
         let mut out: Vec<u8> = Vec::new();
         let mut rng = Pcg64::seeded(0);
-        let served = handle_conn(&b, &mut reader, &mut out, &cfg, &mut rng).unwrap();
+        let served = handle_conn(&b, &mut reader, &mut out, &cfg, &mut rng, &mut ServeStats::default()).unwrap();
         assert_eq!(served, 0);
         let text = String::from_utf8(out).unwrap();
         let j = Json::parse(text.trim()).unwrap();

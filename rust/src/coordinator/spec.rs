@@ -56,6 +56,72 @@ pub struct Sequence {
     pub verdict: Verdict,
 }
 
+impl Sequence {
+    /// Drop this sequence's KV lanes and drafting scratch, releasing their
+    /// blocks back to the pool while keeping tokens, rng-independent
+    /// feature memory and the verification arena. The hard half of
+    /// preemption: the lane stays logically alive, but holds no cache
+    /// memory — it can only resume after a
+    /// [`SpecEngine::rebuild_prefill`] replay recommits rows
+    /// `0..root_pos`, which reproduces the dropped rows bit-for-bit under
+    /// the backend consistency contract.
+    pub fn release_kv(&mut self) {
+        self.target_kv = self.target_kv.new_like();
+        self.draft_kv = self.draft_kv.new_like();
+        self.draft_scratch = DraftScratch::default();
+    }
+}
+
+/// In-flight chunked prefill: the resumable seam between
+/// [`SpecEngine::start_chunked`] / [`SpecEngine::rebuild_prefill`] and the
+/// finished [`Sequence`]. Each [`SpecEngine::prefill_step`] call runs one
+/// bounded chunk through both models and commits its rows, so a serving
+/// loop can interleave long prefills with decode ticks (and retire a lane
+/// mid-prefill without losing determinism: the replay consumes no rng).
+pub struct PrefillState {
+    /// The context being prefilled: the truncated prompt, or — for a
+    /// preemption rebuild — the committed tokens `0..root_pos`.
+    tokens: Vec<u32>,
+    /// Backend-facing copy of `tokens`.
+    toks_i32: Vec<i32>,
+    /// Rows already committed into the caches below.
+    rows_done: usize,
+    /// Rows this prefill must commit in total.
+    rows_total: usize,
+    /// Target lane under construction.
+    target_kv: KvCache,
+    /// Draft lane under construction.
+    draft_kv: KvCache,
+    /// Last chunk's target (logits, hidden) — the values `start()` would
+    /// have produced, bitwise, once the final chunk lands.
+    last_target: Option<(Vec<f32>, Vec<f32>)>,
+    /// Last chunk's draft (logits, hidden).
+    last_draft: Option<(Vec<f32>, Vec<f32>)>,
+    /// Whether this replays an existing sequence's context (finish via
+    /// [`SpecEngine::finish_rebuild`]) rather than a fresh prompt (finish
+    /// via [`SpecEngine::finish_prefill`]).
+    rebuild: bool,
+}
+
+impl PrefillState {
+    /// Rows committed so far.
+    pub fn rows_done(&self) -> usize {
+        self.rows_done
+    }
+    /// Total rows this prefill will commit.
+    pub fn rows_total(&self) -> usize {
+        self.rows_total
+    }
+    /// Whether every row is committed and the state can be finished.
+    pub fn is_done(&self) -> bool {
+        self.rows_done >= self.rows_total
+    }
+    /// Whether this state replays an existing sequence's context.
+    pub fn is_rebuild(&self) -> bool {
+        self.rebuild
+    }
+}
+
 /// One target/draft pair of shared block pools backing every paged lane a
 /// [`SpecEngine`] creates. Lanes of one engine draw from (and retire into)
 /// these pools, so resident memory — and, when the pools are capped, the
@@ -184,6 +250,134 @@ impl<'a> SpecEngine<'a> {
             draft_scratch: DraftScratch::default(),
             verdict,
         })
+    }
+
+    /// Begin a *chunked* prefill of `prompt`: tokenize and truncate exactly
+    /// like [`SpecEngine::start`], but run no model work yet. Drive the
+    /// returned state with [`SpecEngine::prefill_step`] and turn it into a
+    /// [`Sequence`] with [`SpecEngine::finish_prefill`]; the result is
+    /// bit-identical to `start()` for every chunk schedule (pinned by
+    /// `chunked_prefill_matches_one_shot` and the scheduler equality grid
+    /// in `tests/serve_sched.rs`).
+    pub fn start_chunked(&self, prompt: &str) -> PrefillState {
+        let mut toks = tokenizer::encode(prompt);
+        let s_pre = self.engine.meta().s_pre;
+        if toks.is_empty() {
+            toks.push(tokenizer::BOS);
+        }
+        toks.truncate(s_pre);
+        let toks_i32: Vec<i32> = toks.iter().map(|&t| t as i32).collect();
+        let rows_total = toks.len();
+        PrefillState {
+            tokens: toks,
+            toks_i32,
+            rows_done: 0,
+            rows_total,
+            target_kv: self.new_cache(Role::Target),
+            draft_kv: self.new_cache(Role::Draft),
+            last_target: None,
+            last_draft: None,
+            rebuild: false,
+        }
+    }
+
+    /// Begin replaying a hard-preempted sequence's context (after
+    /// [`Sequence::release_kv`]): fresh lanes that, once every chunk has
+    /// run, hold rows `0..root_pos` of both caches — bitwise the rows the
+    /// sequence held before its memory was released, because a prefill
+    /// row, a decode step, and a tree-pass node agree bit-for-bit given
+    /// the same context (the backend consistency contract; the draft half
+    /// is additionally pinned by `draft_cache_rows_match_from_scratch_prefill`).
+    /// Rows at and past `root_pos` are recomputed by the next block itself.
+    /// Finish with [`SpecEngine::finish_rebuild`].
+    pub fn rebuild_prefill(&self, seq: &Sequence) -> PrefillState {
+        let rows = seq.root_pos;
+        let tokens: Vec<u32> = seq.tokens[..rows].to_vec();
+        let toks_i32: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+        PrefillState {
+            tokens,
+            toks_i32,
+            rows_done: 0,
+            rows_total: rows,
+            target_kv: self.new_cache(Role::Target),
+            draft_kv: self.new_cache(Role::Draft),
+            last_target: None,
+            last_draft: None,
+            rebuild: true,
+        }
+    }
+
+    /// Run one prefill chunk of at most `chunk` rows through both models
+    /// and commit the rows. Returns `Ok(true)` when the state is complete.
+    /// On error nothing is committed and `rows_done` is unchanged, so the
+    /// caller retries the same chunk (both dispatches are re-issued — the
+    /// chunk commits only when target *and* draft pass the corruption
+    /// guards, mirroring [`SpecEngine::start`]).
+    pub fn prefill_step(&self, st: &mut PrefillState, chunk: usize) -> Result<bool> {
+        if st.is_done() {
+            return Ok(true);
+        }
+        let take = chunk.max(1).min(st.rows_total - st.rows_done);
+        let start = st.rows_done;
+        let t_out =
+            self.engine.prefill_chunk(Role::Target, st.target_kv.view(), &st.toks_i32, start, take)?;
+        guard_finite(FaultOp::Prefill, "target prefill logits", &t_out.logits)?;
+        let d_out =
+            self.engine.prefill_chunk(Role::Draft, st.draft_kv.view(), &st.toks_i32, start, take)?;
+        guard_finite(FaultOp::Prefill, "draft prefill logits", &d_out.logits)?;
+        st.target_kv.commit_chunk(&t_out.k_rows, &t_out.v_rows, take, start, take);
+        st.draft_kv.commit_chunk(&d_out.k_rows, &d_out.v_rows, take, start, take);
+        st.last_target = Some((t_out.logits, t_out.hidden));
+        st.last_draft = Some((d_out.logits, d_out.hidden));
+        st.rows_done += take;
+        Ok(st.is_done())
+    }
+
+    /// Turn a completed fresh-prompt prefill into a [`Sequence`] —
+    /// constructed exactly as [`SpecEngine::start`] would have, from the
+    /// final chunk's logits/hidden (bitwise equal to the one-shot
+    /// prefill's last row).
+    pub fn finish_prefill(&self, st: PrefillState) -> Result<Sequence> {
+        anyhow::ensure!(!st.rebuild, "finish_prefill on a rebuild state");
+        anyhow::ensure!(st.is_done(), "prefill incomplete: {}/{}", st.rows_done, st.rows_total);
+        let (t_logits, t_hidden) = st.last_target.expect("fresh prefill has >= 1 row");
+        let (d_logits, d_hidden) = st.last_draft.expect("fresh prefill has >= 1 row");
+        let storage = DistStorage::global();
+        let p0 = NodeDist::from_logits(&t_logits, self.sampling, storage);
+        let q0 = NodeDist::from_logits(&d_logits, self.sampling, storage);
+        let mut scratch = VerifyScratch::default();
+        scratch.reserve(self.engine.meta().target.vocab, 32, 8);
+        let mut verdict = Verdict::default();
+        verdict.accepted.reserve(32);
+        let len = st.rows_total;
+        Ok(Sequence {
+            tokens: st.tokens,
+            prompt_len: len,
+            target_kv: st.target_kv,
+            draft_kv: st.draft_kv,
+            root_pos: len - 1,
+            finished: false,
+            prev_hidden_target: t_hidden,
+            prev_hidden_draft: d_hidden,
+            prev_p: p0,
+            prev_q: q0,
+            scratch,
+            draft_scratch: DraftScratch::default(),
+            verdict,
+        })
+    }
+
+    /// Install a completed rebuild's caches into the preempted sequence.
+    /// Everything else — tokens, rng position, feature memory — was never
+    /// touched, so the resumed stream is bit-identical to an unpreempted
+    /// run.
+    pub fn finish_rebuild(&self, st: PrefillState, seq: &mut Sequence) -> Result<()> {
+        anyhow::ensure!(st.rebuild, "finish_rebuild on a fresh-prompt state");
+        anyhow::ensure!(st.is_done(), "rebuild incomplete: {}/{}", st.rows_done, st.rows_total);
+        seq.target_kv = st.target_kv;
+        seq.draft_kv = st.draft_kv;
+        seq.draft_scratch = DraftScratch::default();
+        Ok(())
     }
 
     /// Remaining position headroom for one block at the given action.

@@ -130,6 +130,35 @@ impl ContiguousKv {
         self.len = len;
     }
 
+    /// Commit a prefill *chunk*: rows laid out [L, H, stride, Dh] where the
+    /// first `len` source rows land at positions `start..start + len`. This
+    /// is the incremental sibling of [`ContiguousKv::commit_prefill`]
+    /// (which always starts at position 0 and resets `len`): chunked
+    /// prefill commits each chunk as it is produced, and the committed row
+    /// count only ever grows.
+    pub fn commit_chunk(
+        &mut self,
+        k_rows: &[f32],
+        v_rows: &[f32],
+        stride: usize,
+        start: usize,
+        len: usize,
+    ) {
+        let (lyr, h, dh) = (self.dims.n_layers, self.dims.n_heads, self.dims.d_head);
+        assert!(len <= stride, "chunk rows {len} exceed source stride {stride}");
+        assert!(start + len <= self.dims.max_seq, "chunk past max_seq");
+        assert_eq!(k_rows.len(), lyr * h * stride * dh);
+        for l in 0..lyr {
+            for hh in 0..h {
+                let src = ((l * h + hh) * stride) * dh;
+                let dst = self.row_offset(l, hh, start);
+                self.k[dst..dst + len * dh].copy_from_slice(&k_rows[src..src + len * dh]);
+                self.v[dst..dst + len * dh].copy_from_slice(&v_rows[src..src + len * dh]);
+            }
+        }
+        self.len = self.len.max(start + len);
+    }
+
     /// Commit one row laid out [L, H, Dh] at `pos`. The source heads are
     /// contiguous; when the cache layout agrees the row commits as one
     /// `n_heads·d_head` copy per layer.
@@ -348,6 +377,22 @@ impl KvCache {
         match self {
             KvCache::Contiguous(c) => c.commit_prefill(k_rows, v_rows, s_pre, len),
             KvCache::Paged(p) => p.commit_prefill(k_rows, v_rows, s_pre, len),
+        }
+    }
+
+    /// Commit a prefill chunk laid out `[L, H, stride, Dh]`: the first
+    /// `len` source rows land at positions `start..start + len`.
+    pub fn commit_chunk(
+        &mut self,
+        k_rows: &[f32],
+        v_rows: &[f32],
+        stride: usize,
+        start: usize,
+        len: usize,
+    ) {
+        match self {
+            KvCache::Contiguous(c) => c.commit_chunk(k_rows, v_rows, stride, start, len),
+            KvCache::Paged(p) => p.commit_chunk(k_rows, v_rows, stride, start, len),
         }
     }
 
@@ -605,6 +650,59 @@ mod tests {
         // layer 0, head 1, pos 2 = src offset ((0*2+1)*4+2)*4 = 24
         let off = c.row_offset(0, 1, 2);
         assert_eq!(c.k[off], 24.0);
+    }
+
+    /// Committing a prefill in chunks (any chunk sizes, any block tiling)
+    /// must reproduce the one-shot `commit_prefill` buffers bitwise, for
+    /// both storages.
+    #[test]
+    fn commit_chunk_matches_one_shot_prefill() {
+        let d = dims();
+        let s_pre = 11;
+        let n = d.n_layers * d.n_heads * s_pre * d.d_head;
+        let rows: Vec<f32> = (0..n).map(|x| x as f32 * 0.25 + 1.0).collect();
+        let len = 9;
+        let mut oracle = ContiguousKv::new(d);
+        oracle.commit_prefill(&rows, &rows, s_pre, len);
+        for chunk in [1usize, 2, 4, 9, 16] {
+            let mut c = ContiguousKv::new(d);
+            let pool = BlockPool::new(d, 3, None);
+            let mut p = PagedKvCache::new(&pool);
+            let mut start = 0usize;
+            while start < len {
+                let take = chunk.min(len - start);
+                // repack this chunk's rows into a [L, H, take, Dh] buffer,
+                // as a chunked prefill dispatch would return them
+                let m = d.n_layers * d.n_heads * take * d.d_head;
+                let mut sub = vec![0.0f32; m];
+                for l in 0..d.n_layers {
+                    for hh in 0..d.n_heads {
+                        for i in 0..take {
+                            let src = ((l * d.n_heads + hh) * s_pre + start + i) * d.d_head;
+                            let dst = ((l * d.n_heads + hh) * take + i) * d.d_head;
+                            sub[dst..dst + d.d_head].copy_from_slice(&rows[src..src + d.d_head]);
+                        }
+                    }
+                }
+                c.commit_chunk(&sub, &sub, take, start, take);
+                p.commit_chunk(&sub, &sub, take, start, take);
+                start += take;
+            }
+            assert_eq!(c.len, oracle.len, "chunk={chunk}");
+            assert_eq!(c.k, oracle.k, "chunk={chunk}");
+            assert_eq!(c.v, oracle.v, "chunk={chunk}");
+            assert_eq!(p.len(), oracle.len, "paged chunk={chunk}");
+            for l in 0..d.n_layers {
+                for hh in 0..d.n_heads {
+                    for pos in 0..len {
+                        let off = oracle.row_offset(l, hh, pos);
+                        let (pk, pv) = p.row(l, hh, pos);
+                        assert_eq!(pk, &oracle.k[off..off + d.d_head], "chunk={chunk} pos={pos}");
+                        assert_eq!(pv, &oracle.v[off..off + d.d_head], "chunk={chunk} pos={pos}");
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -475,6 +475,45 @@ impl PagedKvCache {
         self.len = len;
     }
 
+    /// Commit a prefill chunk laid out `[L, H, stride, Dh]`: the first
+    /// `len` source rows land at positions `start..start + len` — the paged
+    /// twin of [`ContiguousKv::commit_chunk`](super::ContiguousKv::commit_chunk),
+    /// walking whole block runs like `commit_prefill` but offset by `start`
+    /// and growing (never resetting) the committed row count.
+    pub fn commit_chunk(
+        &mut self,
+        k_rows: &[f32],
+        v_rows: &[f32],
+        stride: usize,
+        start: usize,
+        len: usize,
+    ) {
+        let (lyr, h, dh) = (self.pool.dims.n_layers, self.pool.dims.n_heads, self.pool.dims.d_head);
+        assert!(len <= stride, "chunk rows {len} exceed source stride {stride}");
+        assert!(start + len <= self.pool.dims.max_seq, "chunk past max_seq");
+        assert_eq!(k_rows.len(), lyr * h * stride * dh);
+        let bt = self.block_tokens();
+        let mut i = 0usize;
+        while i < len {
+            let pos = start + i;
+            let bi = pos / bt;
+            let t = pos % bt;
+            let run = (len - i).min(bt - t);
+            let block_off = |l: usize, hh: usize| ((l * h + hh) * bt + t) * dh;
+            let blk = self.block_mut(bi);
+            for l in 0..lyr {
+                for hh in 0..h {
+                    let src = ((l * h + hh) * stride + i) * dh;
+                    let dst = block_off(l, hh);
+                    blk.k[dst..dst + run * dh].copy_from_slice(&k_rows[src..src + run * dh]);
+                    blk.v[dst..dst + run * dh].copy_from_slice(&v_rows[src..src + run * dh]);
+                }
+            }
+            i += run;
+        }
+        self.len = self.len.max(start + len);
+    }
+
     /// Commit one row laid out `[L, H, Dh]` at `pos`.
     pub fn commit_row(&mut self, k_row: &[f32], v_row: &[f32], pos: usize) {
         let (lyr, h, dh) = (self.pool.dims.n_layers, self.pool.dims.n_heads, self.pool.dims.d_head);

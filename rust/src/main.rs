@@ -186,11 +186,7 @@ fn cmd_serve_loop(argv: Vec<String>) -> Result<()> {
     ];
     let mut srv = ServeLoop::new(backend.as_ref(), sampling, verifier.as_ref(), &policy, batch);
     for i in 0..requests {
-        srv.submit(ServeRequest {
-            prompt: PROMPTS[i % PROMPTS.len()].to_string(),
-            max_new,
-            seed,
-        });
+        srv.submit(ServeRequest::new(PROMPTS[i % PROMPTS.len()].to_string(), max_new, seed));
     }
     let t0 = Instant::now();
     let outs = srv.run()?;

@@ -28,7 +28,7 @@
 use anyhow::Result;
 
 use super::{DecodeOut, FamilyMeta, ModelDims, PrefillOut, Role, RolloutOut, TreeOut};
-use crate::kvcache::KvRef;
+use crate::kvcache::{ContiguousKv, KvRef};
 
 /// A model-execution backend for one target/draft family.
 ///
@@ -56,6 +56,95 @@ pub trait Backend: Send + Sync {
     /// the last valid token's logits/hidden plus KV rows for every prompt
     /// position (layout `[L, H, s_pre, Dh]`, rows past `length` undefined).
     fn prefill(&self, role: Role, tokens: &[i32], length: usize) -> Result<PrefillOut>;
+
+    /// One *chunk* of an incremental prefill: run `tokens[start..start+len]`
+    /// with each chunk row attending the committed cache rows `< start`
+    /// (read through `kv`), the earlier rows of this chunk, and itself —
+    /// exactly the causal mask the one-shot [`Backend::prefill`] applies.
+    /// Returns the last chunk row's logits/hidden plus KV rows laid out
+    /// `[L, H, len, Dh]` (the step stride is `len`, **not** `s_pre`); the
+    /// caller commits them at positions `start..start+len` via
+    /// [`crate::kvcache::KvCache::commit_chunk`].
+    ///
+    /// Under the backend consistency contract (a prefill row, a decode
+    /// step, and a tree-pass node are bitwise identical given the same
+    /// context) chunked prefill reproduces the one-shot prefill rows,
+    /// logits and hidden state bit-for-bit for any chunk schedule — pinned
+    /// by `chunked_prefill_matches_one_shot` in the CPU backend tests.
+    ///
+    /// Unlike `prefill`, `start + len` is bounded by `max_seq` rather than
+    /// `s_pre`: preemption recovery replays *generated* context through
+    /// this entry point, not just the prompt.
+    ///
+    /// The provided implementation re-materialises the prefix into a
+    /// private contiguous lane and decodes the chunk one row at a time —
+    /// correct for any conforming backend but O(context) per chunk;
+    /// backends with a batched prefill path should override it.
+    fn prefill_chunk(
+        &self,
+        role: Role,
+        kv: KvRef<'_>,
+        tokens: &[i32],
+        start: usize,
+        len: usize,
+    ) -> Result<PrefillOut> {
+        let dims = self.dims(role);
+        anyhow::ensure!(len >= 1, "prefill_chunk: empty chunk");
+        anyhow::ensure!(
+            start + len <= tokens.len(),
+            "prefill_chunk: rows {start}..{} past the {} prompt tokens",
+            start + len,
+            tokens.len()
+        );
+        anyhow::ensure!(
+            start + len <= dims.max_seq,
+            "prefill_chunk: rows {start}..{} past max_seq {}",
+            start + len,
+            dims.max_seq
+        );
+        let (lyr, h, dh) = (dims.n_layers, dims.n_heads, dims.d_head);
+        let mut tmp = ContiguousKv::new(dims);
+        let mut k_row = vec![0.0f32; lyr * h * dh];
+        let mut v_row = vec![0.0f32; lyr * h * dh];
+        for pos in 0..start {
+            for l in 0..lyr {
+                for hh in 0..h {
+                    let (ks, vs) = kv.row(l, hh, pos);
+                    let off = (l * h + hh) * dh;
+                    k_row[off..off + dh].copy_from_slice(ks);
+                    v_row[off..off + dh].copy_from_slice(vs);
+                }
+            }
+            tmp.commit_row(&k_row, &v_row, pos);
+        }
+        let mut out = PrefillOut {
+            logits: Vec::new(),
+            hidden: Vec::new(),
+            k_rows: vec![0.0; lyr * h * len * dh],
+            v_rows: vec![0.0; lyr * h * len * dh],
+        };
+        for i in 0..len {
+            let pos = start + i;
+            let tok = tokens[pos];
+            anyhow::ensure!(tok >= 0, "prefill_chunk: negative token id {tok} at {pos}");
+            let view = KvRef::contiguous(dims, &tmp.k, &tmp.v);
+            let step = self.decode(role, view, tok as u32, pos)?;
+            for l in 0..lyr {
+                for hh in 0..h {
+                    let src = (l * h + hh) * dh;
+                    let dst = ((l * h + hh) * len + i) * dh;
+                    out.k_rows[dst..dst + dh].copy_from_slice(&step.k_row[src..src + dh]);
+                    out.v_rows[dst..dst + dh].copy_from_slice(&step.v_row[src..src + dh]);
+                }
+            }
+            tmp.commit_row(&step.k_row, &step.v_row, pos);
+            if i + 1 == len {
+                out.logits = step.logits;
+                out.hidden = step.hidden;
+            }
+        }
+        Ok(out)
+    }
 
     /// One autoregressive step: `token` at position `pos`, attending to
     /// committed cache rows `< pos` plus itself.

@@ -656,6 +656,56 @@ impl Backend for CpuRefBackend {
         })
     }
 
+    fn prefill_chunk(
+        &self,
+        role: Role,
+        kv: KvRef<'_>,
+        tokens: &[i32],
+        start: usize,
+        len: usize,
+    ) -> Result<PrefillOut> {
+        self.check_cache(role, kv)?;
+        let m = self.model(role);
+        if len == 0 || start + len > tokens.len() {
+            bail!("prefill_chunk: bad rows {start}..{} of {} tokens", start + len, tokens.len());
+        }
+        if start + len > m.dims.max_seq {
+            bail!("prefill_chunk: rows {start}..{} exceed max_seq {}", start + len, m.dims.max_seq);
+        }
+        // one batched causal pass over just the chunk, attending committed
+        // cache rows < start — the KeyBuf order (cache rows ascending, then
+        // batch rows, then self) matches the one-shot prefill summation
+        // order exactly, so the chunk rows are bitwise identical to theirs
+        let positions: Vec<i32> = (start as i32..(start + len) as i32).collect();
+        let out =
+            m.batch(Some((kv, start)), &tokens[start..start + len], &positions, &|i, j| j <= i);
+        let dims = m.dims;
+        let (h, dh) = (dims.n_heads, dims.d_head);
+        let da = h * dh;
+        let mut k_rows = vec![0.0f32; dims.n_layers * h * len * dh];
+        let mut v_rows = vec![0.0f32; dims.n_layers * h * len * dh];
+        for l in 0..dims.n_layers {
+            for s in 0..len {
+                let src = (l * len + s) * da;
+                for hh in 0..h {
+                    let dst = ((l * h + hh) * len + s) * dh;
+                    k_rows[dst..dst + dh]
+                        .copy_from_slice(&out.k_rows[src + hh * dh..src + (hh + 1) * dh]);
+                    v_rows[dst..dst + dh]
+                        .copy_from_slice(&out.v_rows[src + hh * dh..src + (hh + 1) * dh]);
+                }
+            }
+        }
+        let last = len - 1;
+        let (v, d) = (dims.vocab, dims.d_model);
+        Ok(PrefillOut {
+            logits: out.logits[last * v..(last + 1) * v].to_vec(),
+            hidden: out.hidden[last * d..(last + 1) * d].to_vec(),
+            k_rows,
+            v_rows,
+        })
+    }
+
     fn decode(&self, role: Role, kv: KvRef<'_>, token: u32, pos: usize) -> Result<DecodeOut> {
         self.check_cache(role, kv)?;
         let m = self.model(role);
@@ -795,6 +845,121 @@ mod tests {
                     &dec.k_row[dst..dst + dims.d_head],
                 );
             }
+        }
+    }
+
+    /// Chunked prefill must reproduce the one-shot prefill bitwise — same
+    /// last-row logits/hidden and same committed KV rows — for every chunk
+    /// schedule, for both roles and both storages.
+    #[test]
+    fn chunked_prefill_matches_one_shot() {
+        let cfg = CpuModelConfig::tiny();
+        let be = CpuRefBackend::new(&cfg, 3);
+        let toks = [5i32, 9, 3, 7, 1, 12, 4, 6, 2, 10, 8];
+        let n = toks.len();
+        for role in [Role::Target, Role::Draft] {
+            let dims = be.dims(role);
+            let full = be.prefill(role, &toks, n).unwrap();
+            let mut oracle = KvCache::new(dims);
+            oracle.commit_prefill(&full.k_rows, &full.v_rows, cfg.s_pre, n);
+            for chunk in [1usize, 3, 4, 11, 64] {
+                for paged in [false, true] {
+                    let pool = crate::kvcache::BlockPool::new(dims, 4, None);
+                    let mut cache =
+                        if paged { KvCache::paged(&pool) } else { KvCache::new(dims) };
+                    let mut start = 0usize;
+                    let mut last = None;
+                    while start < n {
+                        let take = chunk.min(n - start);
+                        let out = be.prefill_chunk(role, cache.view(), &toks, start, take).unwrap();
+                        cache.commit_chunk(&out.k_rows, &out.v_rows, take, start, take);
+                        start += take;
+                        last = Some(out);
+                    }
+                    let last = last.unwrap();
+                    assert_eq!(last.logits, full.logits, "chunk={chunk} paged={paged}");
+                    assert_eq!(last.hidden, full.hidden, "chunk={chunk} paged={paged}");
+                    assert_eq!(cache.len(), n);
+                    for l in 0..dims.n_layers {
+                        for hh in 0..dims.n_heads {
+                            for pos in 0..n {
+                                assert_eq!(
+                                    cache.read_row(l, hh, pos),
+                                    oracle.read_row(l, hh, pos),
+                                    "chunk={chunk} paged={paged} l={l} h={hh} pos={pos}"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// The provided (decode-based) `prefill_chunk` implementation must
+    /// agree bitwise with the CPU backend's native batched override — the
+    /// guarantee any non-overriding backend relies on.
+    #[test]
+    fn default_prefill_chunk_impl_matches_native() {
+        /// Forwards everything except `prefill_chunk`, which it inherits
+        /// from the trait's provided implementation.
+        struct NoOverride<'a>(&'a CpuRefBackend);
+        impl Backend for NoOverride<'_> {
+            fn meta(&self) -> &FamilyMeta {
+                self.0.meta()
+            }
+            fn name(&self) -> &'static str {
+                "no-override"
+            }
+            fn prefill(&self, role: Role, tokens: &[i32], length: usize) -> Result<PrefillOut> {
+                self.0.prefill(role, tokens, length)
+            }
+            fn decode(&self, role: Role, kv: KvRef<'_>, token: u32, pos: usize) -> Result<DecodeOut> {
+                self.0.decode(role, kv, token, pos)
+            }
+            #[allow(clippy::too_many_arguments)]
+            fn rollout(
+                &self,
+                k: usize,
+                l: usize,
+                kv: KvRef<'_>,
+                token: u32,
+                pos: usize,
+                uniforms: &[f32],
+                temperature: f32,
+                top_p: f32,
+            ) -> Result<RolloutOut> {
+                self.0.rollout(k, l, kv, token, pos, uniforms, temperature, top_p)
+            }
+            #[allow(clippy::too_many_arguments)]
+            fn tree_verify(
+                &self,
+                n_bucket: usize,
+                kv: KvRef<'_>,
+                tokens: &[i32],
+                positions: &[i32],
+                bias: &[f32],
+                cache_len: usize,
+            ) -> Result<TreeOut> {
+                self.0.tree_verify(n_bucket, kv, tokens, positions, bias, cache_len)
+            }
+        }
+        let cfg = CpuModelConfig::tiny();
+        let be = CpuRefBackend::new(&cfg, 4);
+        let wrap = NoOverride(&be);
+        let toks = [2i32, 7, 5, 1, 9, 3, 8];
+        let dims = be.dims(Role::Target);
+        let mut native_cache = KvCache::new(dims);
+        let mut default_cache = KvCache::new(dims);
+        for (start, len) in [(0usize, 3usize), (3, 2), (5, 2)] {
+            let a = be.prefill_chunk(Role::Target, native_cache.view(), &toks, start, len).unwrap();
+            let b = wrap.prefill_chunk(Role::Target, default_cache.view(), &toks, start, len).unwrap();
+            assert_eq!(a.logits, b.logits, "start={start}");
+            assert_eq!(a.hidden, b.hidden, "start={start}");
+            assert_eq!(a.k_rows, b.k_rows, "start={start}");
+            assert_eq!(a.v_rows, b.v_rows, "start={start}");
+            native_cache.commit_chunk(&a.k_rows, &a.v_rows, len, start, len);
+            default_cache.commit_chunk(&b.k_rows, &b.v_rows, len, start, len);
         }
     }
 

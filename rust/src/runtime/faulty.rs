@@ -348,6 +348,33 @@ impl Backend for FaultyBackend<'_> {
         Ok(out)
     }
 
+    // Provided trait methods do NOT forward through wrappers: without this
+    // explicit impl, chunked prefill would fall through to the trait
+    // default (built on `self.decode`) and every chunk would draw per-row
+    // Decode-signature faults instead of one Prefill-signature decision —
+    // breaking the chaos suite's fault accounting.
+    fn prefill_chunk(
+        &self,
+        role: Role,
+        kv: KvRef<'_>,
+        tokens: &[i32],
+        start: usize,
+        len: usize,
+    ) -> Result<PrefillOut> {
+        let mut key = 0xcbf2_9ce4_8422_2325u64;
+        fnv_u64(&mut key, FaultOp::Prefill.tag());
+        fnv_u64(&mut key, matches!(role, Role::Target) as u64);
+        fnv_u64(&mut key, start as u64);
+        fnv_u64(&mut key, len as u64);
+        for &t in tokens {
+            fnv(&mut key, &t.to_le_bytes());
+        }
+        let d = self.decide(FaultOp::Prefill, key)?;
+        let mut out = self.inner.prefill_chunk(role, kv, tokens, start, len)?;
+        self.poison(&d, &mut out.logits);
+        Ok(out)
+    }
+
     fn decode(&self, role: Role, kv: KvRef<'_>, token: u32, pos: usize) -> Result<DecodeOut> {
         let mut key = 0xcbf2_9ce4_8422_2325u64;
         fnv_u64(&mut key, FaultOp::Decode.tag());

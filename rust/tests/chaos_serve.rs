@@ -25,7 +25,7 @@ use std::time::Duration;
 
 use common::mc::{assert_chi_square, check_counts, mc_samples};
 use specdelay::coordinator::{
-    FixedPolicy, ResilienceConfig, ServeError, ServeLoop, ServeRequest, SpecEngine,
+    FixedPolicy, ResilienceConfig, SchedConfig, ServeError, ServeLoop, ServeRequest, SpecEngine,
 };
 use specdelay::dist::{Dist, SamplingConfig};
 use specdelay::draft::Action;
@@ -70,7 +70,7 @@ fn oracle(
         .with_workers(1)
         .with_kv_storage(KvStorage::Contiguous);
     for p in &PROMPTS {
-        srv.submit(ServeRequest { prompt: p.to_string(), max_new, seed });
+        srv.submit(ServeRequest::new(p.to_string(), max_new, seed));
     }
     srv.run()
         .unwrap()
@@ -106,7 +106,7 @@ fn faulty_serving_is_deterministic() {
             .with_workers(1)
             .with_resilience(retry_only());
         for p in &PROMPTS {
-            srv.submit(ServeRequest { prompt: p.to_string(), max_new: 12, seed: 5 });
+            srv.submit(ServeRequest::new(p.to_string(), 12, 5));
         }
         let outs = srv.run().unwrap();
         let summary: Vec<_> = outs
@@ -150,7 +150,7 @@ fn chaos_sweep_streams_bit_identical_and_faults_accounted() {
                             .with_kv_storage(storage)
                             .with_resilience(retry_only());
                     for p in &PROMPTS {
-                        srv.submit(ServeRequest { prompt: p.to_string(), max_new, seed: 1234 });
+                        srv.submit(ServeRequest::new(p.to_string(), max_new, 1234));
                     }
                     let outs = srv.run().unwrap();
                     let ctx = format!(
@@ -211,7 +211,7 @@ fn block_budget_cap_respected_under_faults() {
         .with_block_budget(2)
         .with_resilience(retry_only());
     for p in &PROMPTS {
-        srv.submit(ServeRequest { prompt: p.to_string(), max_new, seed: 77 });
+        srv.submit(ServeRequest::new(p.to_string(), max_new, 77));
     }
     let outs = srv.run().unwrap();
     for (o, (text, toks, _)) in outs.iter().zip(&want) {
@@ -250,7 +250,7 @@ fn lane_error_path_leaks_no_blocks() {
         .with_workers(2)
         .with_kv_storage(KvStorage::Paged);
     for p in &PROMPTS {
-        srv.submit(ServeRequest { prompt: p.to_string(), max_new: 16, seed: 3 });
+        srv.submit(ServeRequest::new(p.to_string(), 16, 3));
     }
     let outs = srv.run().unwrap();
     assert_eq!(outs.len(), PROMPTS.len());
@@ -316,7 +316,7 @@ fn degraded_mode_first_token_follows_target_conditional() {
         .with_workers(4)
         .with_resilience(cfg);
     for _ in 0..n {
-        srv.submit(ServeRequest { prompt: prompt.to_string(), max_new: 1, seed: 0xC0FFEE });
+        srv.submit(ServeRequest::new(prompt.to_string(), 1, 0xC0FFEE));
     }
     let outs = srv.run().unwrap();
     assert_eq!(outs.len(), n);
@@ -357,7 +357,7 @@ fn deadline_retires_straggling_lanes() {
         .with_workers(1)
         .with_resilience(cfg);
     for p in &PROMPTS[..3] {
-        srv.submit(ServeRequest { prompt: p.to_string(), max_new: 64, seed: 9 });
+        srv.submit(ServeRequest::new(p.to_string(), 64, 9));
     }
     let outs = srv.run().unwrap();
     assert_eq!(outs.len(), 3);
@@ -443,7 +443,7 @@ fn lane_panic_is_isolated_from_the_batch() {
         .with_workers(2)
         .with_kv_storage(KvStorage::Paged);
     for p in &PROMPTS {
-        srv.submit(ServeRequest { prompt: p.to_string(), max_new, seed: 21 });
+        srv.submit(ServeRequest::new(p.to_string(), max_new, 21));
     }
     let outs = srv.run().unwrap();
     assert_eq!(outs.len(), PROMPTS.len());
@@ -488,8 +488,8 @@ fn fault_free_resilience_is_identity() {
         .with_kv_storage(KvStorage::Paged)
         .with_resilience(ResilienceConfig::default());
     for p in &PROMPTS {
-        plain.submit(ServeRequest { prompt: p.to_string(), max_new, seed: 42 });
-        resil.submit(ServeRequest { prompt: p.to_string(), max_new, seed: 42 });
+        plain.submit(ServeRequest::new(p.to_string(), max_new, 42));
+        resil.submit(ServeRequest::new(p.to_string(), max_new, 42));
     }
     let a = plain.run().unwrap();
     let b = resil.run().unwrap();
@@ -514,5 +514,73 @@ fn fault_free_resilience_is_identity() {
     for (role, pool) in [("target", &pools.target), ("draft", &pools.draft)] {
         pool.validate().unwrap();
         assert_eq!(pool.live_blocks(), 0, "{role} pool leaked with checkpoints on");
+    }
+}
+
+/// Scheduler × fault interaction: chunked prefill, preemption and context
+/// rebuild must compose with the recovery layer — every PR-6 invariant
+/// (bit-identical completed streams, closed fault accounting, zero block
+/// leaks) holds while a tiny block pool forces lanes to park and resume
+/// under an active fault injector.
+#[test]
+fn scheduler_preserves_fault_invariants_under_preemption() {
+    let inner = CpuRefBackend::new(&CpuModelConfig::tiny(), 4);
+    let sampling = SamplingConfig::new(0.8, 0.95);
+    let verifier = verify::verifier("SpecInfer").unwrap();
+    let policy = FixedPolicy(Action::new(2, 2, 2));
+    let max_new = if fast() { 12 } else { 20 };
+    let want = oracle(&inner, sampling, max_new, 2026);
+
+    let plan = FaultPlan::quiet(0x5C4ED).with_transient(0.02).with_corrupt(0.01);
+    let fb = FaultyBackend::new(&inner, plan);
+    // budget 1 clamps the pools to the single-lane worst case, so four
+    // batch slots guarantee pool pressure: lanes park, resume, and (under
+    // sustained pressure) rebuild their context by chunked replay — all
+    // while faults restore checkpoints or force full restarts
+    let mut srv = ServeLoop::new(&fb, sampling, verifier.as_ref(), &policy, 4)
+        .with_block_budget(1)
+        .with_resilience(retry_only())
+        .with_scheduler(SchedConfig { prefill_chunk: 4, ..SchedConfig::default() });
+    for p in &PROMPTS {
+        srv.submit(ServeRequest::new(p.to_string(), max_new, 2026));
+    }
+    let outs = srv.run().unwrap();
+    assert_eq!(outs.len(), PROMPTS.len());
+    for (o, (text, toks, blocks)) in outs.iter().zip(&want) {
+        assert!(o.error.is_none(), "lane {} failed under sched+faults: {:?}", o.id, o.error);
+        assert!(!o.degraded, "lane {} degraded unexpectedly", o.id);
+        assert_eq!(&o.text, text, "sched+fault stream diverged (id {})", o.id);
+        assert_eq!(&o.tokens, toks, "sched+fault token stream diverged (id {})", o.id);
+        assert_eq!(o.stats.blocks, *blocks, "sched+fault block count diverged (id {})", o.id);
+    }
+    let sc = srv.sched_counters().clone();
+    assert!(sc.preempted >= 1, "tiny pool must force preemption: {sc:?}");
+    assert!(sc.resumed >= sc.preempted, "every parked lane resumes: {sc:?}");
+    assert!(sc.prefill_chunks >= PROMPTS.len(), "chunked prefill never engaged: {sc:?}");
+    // fault accounting still closes with the scheduler in the loop
+    let fs = fb.stats();
+    let rc = srv.recovery();
+    assert_eq!(
+        fs.transient + fs.corrupt,
+        rc.transient_seen + rc.corrupt_seen,
+        "loop missed injected faults under the scheduler"
+    );
+    assert_eq!(
+        rc.transient_seen + rc.corrupt_seen + rc.panics,
+        rc.retries + rc.surfaced,
+        "a fault was neither retried nor surfaced under the scheduler"
+    );
+    assert_eq!(rc.surfaced, 0, "no lane should exhaust at this rate");
+    let pools = srv.spec().kv_pools().expect("block budget implies paged pools");
+    for (role, pool) in [("target", &pools.target), ("draft", &pools.draft)] {
+        pool.validate().unwrap();
+        let cap = pool.max_blocks().unwrap();
+        assert!(
+            pool.peak_live_blocks() <= cap,
+            "{role} pool exceeded its cap under sched+faults: peak {} > {cap}",
+            pool.peak_live_blocks()
+        );
+        assert_eq!(pool.live_blocks(), 0, "{role} pool leaked under sched+faults");
+        assert_eq!(pool.free_blocks(), pool.created(), "{role} pool free/created mismatch");
     }
 }

@@ -164,7 +164,7 @@ fn batched_serving_matches_serial_generate() {
                         .with_workers(workers)
                         .with_kv_storage(storage);
                 for p in &prompts {
-                    srv.submit(ServeRequest { prompt: p.to_string(), max_new, seed: 1234 });
+                    srv.submit(ServeRequest::new(p.to_string(), max_new, 1234));
                 }
                 let outs = srv.run().unwrap();
                 assert_eq!(outs.len(), prompts.len());
@@ -214,7 +214,7 @@ fn serve_loop_block_backpressure_queues_and_completes() {
     let mut free = ServeLoop::new(&backend, sampling, verifier.as_ref(), &policy, 8)
         .with_kv_storage(KvStorage::Paged);
     for p in &prompts {
-        free.submit(ServeRequest { prompt: p.to_string(), max_new, seed: 99 });
+        free.submit(ServeRequest::new(p.to_string(), max_new, 99));
     }
     let want: Vec<String> = free.run().unwrap().into_iter().map(|o| o.text).collect();
 
@@ -224,7 +224,7 @@ fn serve_loop_block_backpressure_queues_and_completes() {
     let mut srv = ServeLoop::new(&backend, sampling, verifier.as_ref(), &policy, 8)
         .with_block_budget(1);
     for p in &prompts {
-        srv.submit(ServeRequest { prompt: p.to_string(), max_new, seed: 99 });
+        srv.submit(ServeRequest::new(p.to_string(), max_new, 99));
     }
     assert_eq!(srv.queued(), prompts.len());
     let outs = srv.run().unwrap();
@@ -314,11 +314,8 @@ fn serve_loop_drains_queue_in_order() {
     let mut srv = ServeLoop::new(&backend, sampling, verifier.as_ref(), &policy, 2);
     let n = 5usize;
     for i in 0..n {
-        let id = srv.submit(ServeRequest {
-            prompt: format!("{i}+{i}= "),
-            max_new: 8 + 4 * i, // staggered lengths force mid-run admission
-            seed: 7,
-        });
+        // staggered lengths force mid-run admission
+        let id = srv.submit(ServeRequest::new(format!("{i}+{i}= "), 8 + 4 * i, 7));
         assert_eq!(id, i as u64);
     }
     assert_eq!(srv.queued(), n);

@@ -1,0 +1,425 @@
+//! Acceptance suite for the preemptive priority scheduler
+//! ([`ServeLoop::with_scheduler`]) — the overload-robustness layer on top
+//! of the continuous-batching loop.
+//!
+//! The scheduler's one non-negotiable contract is **losslessness**: chunked
+//! prefill, preempt-and-requeue, context release/rebuild, priorities and
+//! weighted admission may change *when* work runs, but never *what* any
+//! stream contains. Every test here pins a scheduler behaviour against the
+//! serial [`SpecEngine::generate`] oracle on the same per-request rng
+//! stream (`Pcg64::new(seed, id)`):
+//!
+//! * **Equality grid** — scheduler streams (with chunking forced on) are
+//!   bit-identical to serial generation *and* to the FIFO loop across
+//!   batch sizes × worker counts × KV storages;
+//! * **Preemption** — a deliberately tiny block pool forces lanes to park,
+//!   resume, and rebuild; streams stay bit-identical and the pools leak
+//!   nothing;
+//! * **Shedding** — expired deadlines and queue overflow retire requests
+//!   as structured [`ServeError::Shed`] outputs with zero backend work,
+//!   and the accounting closes: submitted == completed + shed;
+//! * **Deadline granularity** — an expired lane retires within one prefill
+//!   chunk of its deadline instead of finishing its generation first;
+//! * **Tight reservations** — the FIFO loop's per-request block reserve is
+//!   sized from `prompt + max_new + overshoot`, so a small pool admits
+//!   short lanes concurrently instead of serialising on the whole-model
+//!   worst case.
+
+use std::time::Duration;
+
+use specdelay::coordinator::{
+    FixedPolicy, Priority, SchedConfig, ServeLoop, ServeRequest, SpecEngine,
+};
+use specdelay::dist::SamplingConfig;
+use specdelay::draft::Action;
+use specdelay::kvcache::{KvRef, KvStorage};
+use specdelay::runtime::{
+    Backend, CpuModelConfig, CpuRefBackend, DecodeOut, FamilyMeta, PrefillOut, Role, RolloutOut,
+    TreeOut,
+};
+use specdelay::util::Pcg64;
+use specdelay::verify;
+
+const PROMPTS: [&str; 6] = ["12*3= ", "9-4= ", "1,2,3,", "(5+5)/2= ", "0.5*8= ", "77+1= "];
+
+/// Serial per-request oracle: (text, tokens, blocks) for each prompt on
+/// the contiguous reference path, rng stream `Pcg64::new(seed, id)` —
+/// exactly what every `ServeLoop` mode must reproduce bit-for-bit.
+fn serial_oracle(
+    backend: &CpuRefBackend,
+    sampling: SamplingConfig,
+    verifier: &dyn specdelay::verify::Verifier,
+    policy: &FixedPolicy,
+    max_new: usize,
+    seed: u64,
+) -> Vec<(String, usize, usize)> {
+    let spec = SpecEngine::new(backend, sampling).with_kv_storage(KvStorage::Contiguous);
+    PROMPTS
+        .iter()
+        .enumerate()
+        .map(|(id, p)| {
+            let mut rng = Pcg64::new(seed, id as u64);
+            let (text, stats) = spec.generate(p, max_new, verifier, policy, &mut rng).unwrap();
+            (text, stats.tokens, stats.blocks)
+        })
+        .collect()
+}
+
+fn assert_pools_clean(srv: &ServeLoop<'_>, label: &str) {
+    if let Some(pools) = srv.spec().kv_pools() {
+        for (role, pool) in [("target", &pools.target), ("draft", &pools.draft)] {
+            pool.validate().unwrap();
+            assert_eq!(pool.live_blocks(), 0, "{label}: {role} pool leaked blocks");
+            assert_eq!(
+                pool.free_blocks(),
+                pool.created(),
+                "{label}: {role} pool free/created mismatch"
+            );
+            if let Some(cap) = pool.max_blocks() {
+                assert!(
+                    pool.peak_live_blocks() <= cap,
+                    "{label}: {role} pool exceeded its cap: peak {} > {cap}",
+                    pool.peak_live_blocks()
+                );
+            }
+        }
+    }
+}
+
+/// The scheduler losslessness oracle: with chunked prefill engaged and
+/// priorities mixed, every stream is bit-identical to serial generation
+/// and to the FIFO loop, for every batch size × worker count × storage.
+#[test]
+fn scheduler_streams_match_serial_and_fifo() {
+    let backend = CpuRefBackend::new(&CpuModelConfig::tiny(), 4);
+    let sampling = SamplingConfig::new(0.8, 0.95);
+    let verifier = verify::verifier("SpecInfer").unwrap();
+    let policy = FixedPolicy(Action::new(2, 2, 2));
+    let max_new = 24;
+    let seed = 4321;
+    let reference =
+        serial_oracle(&backend, sampling, verifier.as_ref(), &policy, max_new, seed);
+    let classes = [Priority::High, Priority::Normal, Priority::Low];
+
+    for storage in [KvStorage::Contiguous, KvStorage::Paged] {
+        for batch in [1usize, 3, 8] {
+            for workers in [1usize, 4] {
+                let label = format!("storage {storage:?} batch {batch} workers {workers}");
+                let requests: Vec<ServeRequest> = PROMPTS
+                    .iter()
+                    .enumerate()
+                    .map(|(i, p)| {
+                        ServeRequest::new(p.to_string(), max_new, seed)
+                            .with_priority(classes[i % classes.len()])
+                    })
+                    .collect();
+
+                let mut fifo =
+                    ServeLoop::new(&backend, sampling, verifier.as_ref(), &policy, batch)
+                        .with_workers(workers)
+                        .with_kv_storage(storage)
+                        .without_scheduler();
+                for r in &requests {
+                    fifo.submit(r.clone());
+                }
+                let fifo_outs = fifo.run().unwrap();
+
+                // chunk 3 is smaller than every prompt, so every lane
+                // actually takes the multi-tick prefill path
+                let mut srv =
+                    ServeLoop::new(&backend, sampling, verifier.as_ref(), &policy, batch)
+                        .with_workers(workers)
+                        .with_kv_storage(storage)
+                        .with_scheduler(SchedConfig {
+                            prefill_chunk: 3,
+                            ..SchedConfig::default()
+                        });
+                for r in &requests {
+                    srv.submit(r.clone());
+                }
+                let outs = srv.run().unwrap();
+
+                assert!(
+                    srv.sched_counters().prefill_chunks >= 2 * PROMPTS.len(),
+                    "{label}: chunked prefill never engaged"
+                );
+                assert_eq!(outs.len(), PROMPTS.len());
+                for ((o, f), (text, tokens, blocks)) in
+                    outs.iter().zip(&fifo_outs).zip(&reference)
+                {
+                    assert!(o.error.is_none(), "{label}: lane {} failed: {:?}", o.id, o.error);
+                    assert!(f.error.is_none(), "{label}: FIFO lane {} failed: {:?}", f.id, f.error);
+                    assert_eq!(&o.text, text, "{label}: scheduler diverged from serial (id {})", o.id);
+                    assert_eq!(&f.text, text, "{label}: FIFO diverged from serial (id {})", f.id);
+                    assert_eq!(o.tokens, f.tokens, "{label}: scheduler diverged from FIFO (id {})", o.id);
+                    assert_eq!(o.stats.tokens, *tokens, "{label}: token count (id {})", o.id);
+                    assert_eq!(o.stats.blocks, *blocks, "{label}: block count (id {})", o.id);
+                    assert_eq!(o.priority, classes[o.id as usize % classes.len()]);
+                }
+                assert_pools_clean(&srv, &label);
+            }
+        }
+    }
+}
+
+/// Overload under a deliberately tiny block pool: the scheduler must park
+/// lanes (and, under sustained pressure, release their blocks entirely and
+/// rebuild by chunked replay) — and every stream must still be
+/// bit-identical to serial generation, with zero leaked blocks.
+#[test]
+fn preempted_lanes_resume_and_stay_bit_identical() {
+    let backend = CpuRefBackend::new(&CpuModelConfig::tiny(), 4);
+    let sampling = SamplingConfig::new(0.8, 0.95);
+    let verifier = verify::verifier("Traversal").unwrap();
+    let policy = FixedPolicy(Action::new(2, 2, 2));
+    let max_new = 24;
+    let seed = 777;
+    let reference =
+        serial_oracle(&backend, sampling, verifier.as_ref(), &policy, max_new, seed);
+
+    // budget 1 clamps the pools to the single-lane worst case — the
+    // smallest legal pool — while 4 batch slots keep admission eager, so
+    // active lanes must fight over blocks
+    let mut srv = ServeLoop::new(&backend, sampling, verifier.as_ref(), &policy, 4)
+        .with_block_budget(1)
+        .with_scheduler(SchedConfig { prefill_chunk: 4, ..SchedConfig::default() });
+    for p in &PROMPTS {
+        srv.submit(ServeRequest::new(p.to_string(), max_new, seed));
+    }
+    let outs = srv.run().unwrap();
+    assert_eq!(srv.queued(), 0);
+    assert_eq!(outs.len(), PROMPTS.len());
+
+    let c = srv.sched_counters().clone();
+    assert!(c.preempted >= 1, "tiny pool must force preemption: {c:?}");
+    assert!(c.resumed >= 1, "parked lanes must be re-admitted: {c:?}");
+    assert!(
+        c.resumed >= c.preempted,
+        "every preempted lane resumes (possibly after a release): {c:?}"
+    );
+    for (o, (text, tokens, blocks)) in outs.iter().zip(&reference) {
+        assert!(o.error.is_none(), "lane {} failed under preemption: {:?}", o.id, o.error);
+        assert_eq!(&o.text, text, "preempted stream diverged (id {})", o.id);
+        assert_eq!(o.stats.tokens, *tokens);
+        assert_eq!(o.stats.blocks, *blocks, "preemption must not change block count (id {})", o.id);
+    }
+    assert_pools_clean(&srv, "preemption");
+}
+
+/// Load shedding is structured and fully accounted: an expired-deadline
+/// request and queue-overflow victims retire from the queue as
+/// [`ServeError::Shed`] outputs (empty stream, no backend work), overflow
+/// sheds lowest-priority-first, and submitted == completed + shed.
+#[test]
+fn shedding_is_structured_and_accounted() {
+    let backend = CpuRefBackend::new(&CpuModelConfig::tiny(), 4);
+    let sampling = SamplingConfig::new(0.8, 0.95);
+    let verifier = verify::verifier("SpecInfer").unwrap();
+    let policy = FixedPolicy(Action::new(2, 2, 2));
+    let max_new = 16;
+    let seed = 55;
+    let reference =
+        serial_oracle(&backend, sampling, verifier.as_ref(), &policy, max_new, seed);
+
+    let mut srv = ServeLoop::new(&backend, sampling, verifier.as_ref(), &policy, 2)
+        .with_scheduler(SchedConfig {
+            prefill_chunk: 4,
+            max_queue: Some(3),
+            ..SchedConfig::default()
+        });
+    for (i, p) in PROMPTS.iter().enumerate() {
+        let mut req = ServeRequest::new(p.to_string(), max_new, seed);
+        if i == 2 {
+            // already expired on arrival: must be shed, never dispatched
+            req = req.with_deadline(Duration::ZERO);
+        }
+        if i == 5 {
+            // the only low-priority request: overflow's first victim
+            req = req.with_priority(Priority::Low);
+        }
+        srv.submit(req);
+    }
+    let outs = srv.run().unwrap();
+    assert_eq!(srv.queued(), 0);
+    assert_eq!(outs.len(), PROMPTS.len(), "every submitted request gets exactly one output");
+
+    let shed: Vec<u64> = outs
+        .iter()
+        .filter(|o| o.error.as_ref().is_some_and(|e| e.kind() == "shed"))
+        .map(|o| o.id)
+        .collect();
+    let completed: Vec<u64> =
+        outs.iter().filter(|o| o.error.is_none()).map(|o| o.id).collect();
+    // deadline sheds id 2; overflow (queued 5 > 3) sheds the low-priority
+    // id 5 first, then the youngest normal id 4
+    assert_eq!(shed, vec![2, 4, 5]);
+    assert_eq!(completed, vec![0, 1, 3]);
+    assert_eq!(srv.sched_counters().shed, shed.len());
+    assert_eq!(completed.len() + shed.len(), PROMPTS.len(), "accounting must close");
+
+    for o in &outs {
+        if shed.contains(&o.id) {
+            assert!(o.tokens.is_empty(), "shed lane {} ran backend work", o.id);
+            assert!(o.ttft_secs.is_none());
+            let msg = o.error.as_ref().unwrap().to_string();
+            if o.id == 2 {
+                assert!(msg.contains("deadline"), "id 2 shed reason: {msg}");
+            } else {
+                assert!(msg.contains("overflow"), "id {} shed reason: {msg}", o.id);
+            }
+        } else {
+            let (text, tokens, _) = &reference[o.id as usize];
+            assert_eq!(&o.text, text, "survivor stream diverged (id {})", o.id);
+            assert_eq!(o.stats.tokens, *tokens);
+        }
+    }
+}
+
+/// A backend whose chunked-prefill entry point is slow — stands in for a
+/// long-context prefill so the deadline-granularity contract is observable
+/// on the tiny model.
+struct SlowBackend {
+    inner: CpuRefBackend,
+    delay: Duration,
+}
+
+impl Backend for SlowBackend {
+    fn meta(&self) -> &FamilyMeta {
+        self.inner.meta()
+    }
+    fn name(&self) -> &'static str {
+        "slow-prefill"
+    }
+    fn prefill(&self, role: Role, tokens: &[i32], length: usize) -> anyhow::Result<PrefillOut> {
+        self.inner.prefill(role, tokens, length)
+    }
+    fn prefill_chunk(
+        &self,
+        role: Role,
+        kv: KvRef<'_>,
+        tokens: &[i32],
+        start: usize,
+        len: usize,
+    ) -> anyhow::Result<PrefillOut> {
+        std::thread::sleep(self.delay);
+        self.inner.prefill_chunk(role, kv, tokens, start, len)
+    }
+    fn decode(&self, role: Role, kv: KvRef<'_>, token: u32, pos: usize) -> anyhow::Result<DecodeOut> {
+        self.inner.decode(role, kv, token, pos)
+    }
+    #[allow(clippy::too_many_arguments)]
+    fn rollout(
+        &self,
+        k: usize,
+        l: usize,
+        kv: KvRef<'_>,
+        token: u32,
+        pos: usize,
+        uniforms: &[f32],
+        temperature: f32,
+        top_p: f32,
+    ) -> anyhow::Result<RolloutOut> {
+        self.inner.rollout(k, l, kv, token, pos, uniforms, temperature, top_p)
+    }
+    #[allow(clippy::too_many_arguments)]
+    fn tree_verify(
+        &self,
+        n_bucket: usize,
+        kv: KvRef<'_>,
+        tokens: &[i32],
+        positions: &[i32],
+        bias: &[f32],
+        cache_len: usize,
+    ) -> anyhow::Result<TreeOut> {
+        self.inner.tree_verify(n_bucket, kv, tokens, positions, bias, cache_len)
+    }
+}
+
+/// Deadline granularity: with chunked prefill, an expired lane retires
+/// before its *next* chunk is dispatched — a deadline shorter than the
+/// full prefill yields a partial-prefill retirement, not a
+/// whole-generation overrun.
+#[test]
+fn deadline_retires_within_one_chunk_of_expiry() {
+    let slow = SlowBackend {
+        inner: CpuRefBackend::new(&CpuModelConfig::tiny(), 4),
+        delay: Duration::from_millis(5),
+    };
+    let sampling = SamplingConfig::new(0.8, 0.95);
+    let verifier = verify::verifier("SpecInfer").unwrap();
+    let policy = FixedPolicy(Action::new(2, 2, 2));
+    // 20 prompt rows at chunk 1 and 5ms/chunk: the full prefill alone
+    // takes ~100ms, far past the 12ms deadline
+    let prompt = "1+2+3+4+5+6+7+8+9+0=";
+    let rows = specdelay::tokenizer::encode(prompt).len();
+    assert!(rows >= 16, "prompt must span many chunks (got {rows})");
+
+    let mut srv = ServeLoop::new(&slow, sampling, verifier.as_ref(), &policy, 1)
+        .with_scheduler(SchedConfig { prefill_chunk: 1, ..SchedConfig::default() });
+    srv.submit(
+        ServeRequest::new(prompt, 8, 9).with_deadline(Duration::from_millis(12)),
+    );
+    let outs = srv.run().unwrap();
+    assert_eq!(outs.len(), 1);
+    let o = &outs[0];
+    assert_eq!(
+        o.error.as_ref().map(|e| e.kind()),
+        Some("deadline"),
+        "expected a deadline retirement, got {:?}",
+        o.error
+    );
+    assert!(o.tokens.is_empty(), "the lane never finished prefill, so nothing was emitted");
+
+    let chunks = srv.sched_counters().prefill_chunks;
+    assert!(chunks >= 1, "the deadline must expire mid-prefill, not before any work");
+    assert!(
+        chunks < rows,
+        "lane must retire within a chunk of its deadline, not run the full {rows}-row \
+         prefill (dispatched {chunks} chunks)"
+    );
+}
+
+/// Tight per-request reservations (FIFO mode): a pool sized well below
+/// `lanes × whole-model worst case` still admits short requests
+/// concurrently, because the reserve is `prompt + max_new + overshoot`
+/// rows — and the streams stay bit-identical to an uncapped run.
+#[test]
+fn tight_reservations_admit_short_lanes_concurrently() {
+    let backend = CpuRefBackend::new(&CpuModelConfig::tiny(), 4);
+    let sampling = SamplingConfig::new(0.8, 0.95);
+    let verifier = verify::verifier("SpecInfer").unwrap();
+    let policy = FixedPolicy(Action::new(2, 2, 2));
+    let max_new = 8;
+    let seed = 31;
+
+    let mut free = ServeLoop::new(&backend, sampling, verifier.as_ref(), &policy, 4)
+        .with_kv_storage(KvStorage::Paged)
+        .without_scheduler();
+    for p in &PROMPTS {
+        free.submit(ServeRequest::new(p.to_string(), max_new, seed));
+    }
+    let want: Vec<String> = free.run().unwrap().into_iter().map(|o| o.text).collect();
+
+    // 12 blocks: under the old whole-model reservation (the single-lane
+    // worst case in *both* pools) this pool serialised lanes; the tight
+    // `prompt + max_new + overshoot` reserve fits at least two short
+    // lanes at once
+    let mut srv = ServeLoop::new(&backend, sampling, verifier.as_ref(), &policy, 4)
+        .with_block_budget(12)
+        .without_scheduler();
+    for p in &PROMPTS {
+        srv.submit(ServeRequest::new(p.to_string(), max_new, seed));
+    }
+    let outs = srv.run().unwrap();
+    assert_eq!(outs.len(), PROMPTS.len());
+    assert!(
+        srv.sched_counters().peak_active >= 2,
+        "tight reservations must admit short lanes concurrently (peak {})",
+        srv.sched_counters().peak_active
+    );
+    for (o, want_text) in outs.iter().zip(&want) {
+        assert!(o.error.is_none(), "lane {} failed: {:?}", o.id, o.error);
+        assert_eq!(&o.text, want_text, "capped stream diverged (id {})", o.id);
+    }
+    assert_pools_clean(&srv, "tight-reserve");
+}
