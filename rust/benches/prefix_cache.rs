@@ -1,0 +1,295 @@
+//! Cross-request radix prefix-cache benchmark: cold vs warm serving on
+//! prefix-heavy workloads (pure rust CPU backend, no artifacts, no PJRT).
+//!
+//! Two workloads, each run through the same FIFO [`ServeLoop`] twice over
+//! paged KV storage — once with the prefix cache disabled (cold) and once
+//! enabled (warm):
+//!
+//! * **template** — every request shares a long instruction template and
+//!   differs only in a short question suffix, the classic system-prompt
+//!   shape. The first request inserts the template's block run; every
+//!   later request adopts it at admission.
+//! * **conversation** — multi-turn chats where turn `t+1`'s prompt is turn
+//!   `t`'s prompt plus its generated reply plus a new user line, so each
+//!   turn re-prefixes the whole conversation so far. Retirement inserts
+//!   grow the cached run turn by turn.
+//!
+//! Before anything is reported, every arm's token streams are asserted
+//! bit-identical to a serial contiguous `SpecEngine::generate` oracle on
+//! the same per-request rng streams — the cache is allowed to change
+//! *latency*, never content — and both pools must pass block-conservation
+//! validation. Reported per arm: makespan, TTFT p50/p99, prefill rows
+//! saved (Σ `cached_prefix_rows`), prefix-hit ratio and the full
+//! [`PrefixCacheCounters`] set.
+//!
+//! Emits a human-readable table and `BENCH_prefix_cache.json` at the repo
+//! root (uploaded as a CI artifact). Env knobs: `PREFIX_CACHE_REQUESTS`
+//! (template requests, default 10), `PREFIX_CACHE_TEMPLATE_BLOCKS`
+//! (template length in 16-token blocks, default 10), `PREFIX_CACHE_CONVS`
+//! (conversations, default 2), `PREFIX_CACHE_TURNS` (turns each, default
+//! 3), `PREFIX_CACHE_MAX_NEW` (default 12), `PREFIX_CACHE_SEED`
+//! (default 11).
+//!
+//! Run: `cargo bench --bench prefix_cache`.
+
+use std::time::Instant;
+
+use specdelay::coordinator::{
+    ActionPolicy, FixedPolicy, ServeLoop, ServeOutput, ServeRequest, SpecEngine,
+};
+use specdelay::dist::SamplingConfig;
+use specdelay::draft::Action;
+use specdelay::kvcache::KvStorage;
+use specdelay::runtime::{Backend, CpuModelConfig, CpuRefBackend};
+use specdelay::util::json::{num, obj, s, Json};
+use specdelay::util::Pcg64;
+use specdelay::verify;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx]
+}
+
+/// The template workload: one long shared instruction prefix, short unique
+/// suffixes. The template is sized to `blocks` whole KV blocks including
+/// the BOS token, so warm admissions can adopt it in full.
+fn template_prompts(n: usize, blocks: usize, bt: usize) -> Vec<String> {
+    let mut t = String::new();
+    while t.len() + 1 < blocks * bt {
+        t.push_str("system: you are a terse arithmetic assistant; reply with digits only. ");
+    }
+    t.truncate(blocks * bt - 1); // +BOS = exactly `blocks` whole blocks
+    (0..n).map(|i| format!("{t} Q{i}: {}+{}= ", i, i + 1)).collect()
+}
+
+/// The conversation workload plus its oracle streams, built turn by turn:
+/// each turn's prompt embeds every earlier prompt and reply of its
+/// conversation. Prompts are indexed in submission order, so request `id`
+/// replays with rng stream `Pcg64::new(seed, id)` — the same stream the
+/// serve loop gives lane `id`.
+#[allow(clippy::too_many_arguments)]
+fn conversation_workload(
+    spec: &SpecEngine<'_>,
+    convs: usize,
+    turns: usize,
+    max_new: usize,
+    verifier: &dyn specdelay::verify::Verifier,
+    policy: &dyn ActionPolicy,
+    seed: u64,
+) -> (Vec<String>, Vec<String>) {
+    let mut prompts = Vec::new();
+    let mut want = Vec::new();
+    for c in 0..convs {
+        let mut ctx =
+            format!("chat {c}\nuser: describe the golden harbor at dusk\nassistant: ");
+        for t in 0..turns {
+            let id = prompts.len() as u64;
+            let mut rng = Pcg64::new(seed, id);
+            let (reply, _stats) =
+                spec.generate(&ctx, max_new, verifier, policy, &mut rng).expect("oracle");
+            prompts.push(ctx.clone());
+            want.push(reply.clone());
+            ctx = format!("{ctx}{reply}\nuser: and then? ({t})\nassistant: ");
+        }
+    }
+    (prompts, want)
+}
+
+struct ArmResult {
+    makespan: f64,
+    ttft_p50: f64,
+    ttft_p99: f64,
+    rows_saved: usize,
+    hit_ratio: f64,
+    json: Json,
+}
+
+/// One serving arm: FIFO loop, paged storage, batch of one (so retirement
+/// order is submission order and every insert lands before the next
+/// admission), prefix cache on or off. Streams are asserted against the
+/// oracle and both pools validated before any number is reported.
+#[allow(clippy::too_many_arguments)]
+fn run_arm(
+    backend: &dyn Backend,
+    sampling: SamplingConfig,
+    verifier: &dyn specdelay::verify::Verifier,
+    policy: &dyn ActionPolicy,
+    prompts: &[String],
+    want: &[String],
+    max_new: usize,
+    seed: u64,
+    warm: bool,
+    equal_output_checks: &mut usize,
+) -> ArmResult {
+    let mut srv = ServeLoop::new(backend, sampling, verifier, policy, 1)
+        .without_scheduler()
+        .with_kv_storage(KvStorage::Paged)
+        .with_prefix_cache(warm);
+    for prompt in prompts {
+        srv.submit(ServeRequest::new(prompt.clone(), max_new, seed));
+    }
+    let t0 = Instant::now();
+    let outs = srv.run().expect("serve run");
+    let makespan = t0.elapsed().as_secs_f64();
+    assert_eq!(outs.len(), prompts.len());
+    for (o, want_text) in outs.iter().zip(want) {
+        assert!(o.error.is_none(), "lane {} failed: {:?}", o.id, o.error);
+        assert_eq!(&o.text, want_text, "stream diverged (id {}, warm={warm})", o.id);
+        *equal_output_checks += 1;
+    }
+    let pools = srv.spec().kv_pools().expect("paged pools");
+    pools.target.validate().expect("target pool conserved");
+    pools.draft.validate().expect("draft pool conserved");
+    let rows_saved: usize = outs.iter().map(|o: &ServeOutput| o.cached_prefix_rows).sum();
+    if !warm {
+        assert_eq!(rows_saved, 0, "cold arm must not report cached rows");
+    }
+    let mut ttfts: Vec<f64> = outs.iter().filter_map(|o| o.ttft_secs).collect();
+    ttfts.sort_by(f64::total_cmp);
+    let (ttft_p50, ttft_p99) = (percentile(&ttfts, 0.5), percentile(&ttfts, 0.99));
+    let c = srv.prefix_counters();
+    let hit_ratio = if c.lookups > 0 { c.hits as f64 / c.lookups as f64 } else { 0.0 };
+    let json = obj(vec![
+        ("makespan_secs", num(makespan)),
+        ("ttft_p50_secs", num(ttft_p50)),
+        ("ttft_p99_secs", num(ttft_p99)),
+        ("prefill_rows_saved", num(rows_saved as f64)),
+        ("prefix_hit_ratio", num(hit_ratio)),
+        ("lookups", num(c.lookups as f64)),
+        ("hits", num(c.hits as f64)),
+        ("matched_rows", num(c.matched_rows as f64)),
+        ("inserted_runs", num(c.inserted_runs as f64)),
+        ("evicted_blocks", num(c.evicted_blocks as f64)),
+        ("reclaimed_under_pressure", num(c.reclaimed_under_pressure as f64)),
+        ("skipped_contiguous", num(c.skipped_contiguous as f64)),
+        ("completed", num(outs.len() as f64)),
+    ]);
+    ArmResult { makespan, ttft_p50, ttft_p99, rows_saved, hit_ratio, json }
+}
+
+fn main() {
+    let requests = env_usize("PREFIX_CACHE_REQUESTS", 10);
+    let template_blocks = env_usize("PREFIX_CACHE_TEMPLATE_BLOCKS", 10).max(2);
+    let convs = env_usize("PREFIX_CACHE_CONVS", 2);
+    let turns = env_usize("PREFIX_CACHE_TURNS", 3).max(2);
+    let max_new = env_usize("PREFIX_CACHE_MAX_NEW", 12);
+    let seed = env_usize("PREFIX_CACHE_SEED", 11) as u64;
+    let bt = 16usize; // default_block_tokens() in the default configuration
+
+    let cfg = CpuModelConfig::small();
+    let backend = CpuRefBackend::new(&cfg, 0);
+    let sampling = SamplingConfig::new(0.8, 0.95);
+    let action = Action::new(2, 2, 3);
+    let policy = FixedPolicy(action);
+    let verifier = verify::verifier("SpecInfer").unwrap();
+
+    // serial contiguous oracle: every arm must reproduce these streams
+    // bit-for-bit before its numbers are trusted
+    let oracle = SpecEngine::new(&backend, sampling).with_kv_storage(KvStorage::Contiguous);
+    let template = template_prompts(requests, template_blocks, bt);
+    let mut template_want = Vec::with_capacity(requests);
+    for (id, prompt) in template.iter().enumerate() {
+        let mut rng = Pcg64::new(seed, id as u64);
+        let (text, _stats) = oracle
+            .generate(prompt, max_new, verifier.as_ref(), &policy, &mut rng)
+            .expect("serial generate");
+        template_want.push(text);
+    }
+    let (conversation, conversation_want) = conversation_workload(
+        &oracle,
+        convs,
+        turns,
+        max_new,
+        verifier.as_ref(),
+        &policy,
+        seed,
+    );
+    let mut equal_output_checks = 0usize;
+
+    println!(
+        "{:<14} {:<6} {:>12} {:>12} {:>12} {:>10} {:>9}",
+        "workload", "arm", "ttft_p50_ms", "ttft_p99_ms", "makespan_s", "rows_saved", "hit_ratio"
+    );
+    let mut workloads: Vec<(&str, Json)> = Vec::new();
+    for (name, prompts, want) in [
+        ("template", &template, &template_want),
+        ("conversation", &conversation, &conversation_want),
+    ] {
+        let mut arms: Vec<(&str, Json)> = Vec::new();
+        let mut warm_vs_cold = [0.0f64; 2];
+        for (arm, enabled) in [("cold", false), ("warm", true)] {
+            let r = run_arm(
+                &backend,
+                sampling,
+                verifier.as_ref(),
+                &policy,
+                prompts,
+                want,
+                max_new,
+                seed,
+                enabled,
+                &mut equal_output_checks,
+            );
+            if enabled {
+                assert!(r.hit_ratio > 0.0, "{name} warm arm never hit the cache");
+                assert!(r.rows_saved > 0, "{name} warm arm saved no prefill rows");
+            }
+            println!(
+                "{:<14} {:<6} {:>12.3} {:>12.3} {:>12.3} {:>10} {:>9.3}",
+                name,
+                arm,
+                r.ttft_p50 * 1e3,
+                r.ttft_p99 * 1e3,
+                r.makespan,
+                r.rows_saved,
+                r.hit_ratio,
+            );
+            warm_vs_cold[usize::from(enabled)] = r.ttft_p50;
+            arms.push((arm, r.json));
+        }
+        println!(
+            "{:<14} warm/cold ttft_p50 = {:.3}",
+            name,
+            warm_vs_cold[1] / warm_vs_cold[0].max(1e-12)
+        );
+        workloads.push((name, obj(arms)));
+    }
+
+    let report = obj(vec![
+        ("schema", s("prefix_cache/v1")),
+        (
+            "config",
+            obj(vec![
+                ("backend", s("cpu-ref")),
+                ("family", s(&backend.meta().family)),
+                ("n_layers", num(cfg.n_layers as f64)),
+                ("d_model", num(cfg.d_model as f64)),
+                ("vocab", num(cfg.vocab as f64)),
+                ("requests", num(requests as f64)),
+                ("template_blocks", num(template_blocks as f64)),
+                ("conversations", num(convs as f64)),
+                ("turns", num(turns as f64)),
+                ("max_new", num(max_new as f64)),
+                ("max_batch", num(1.0)),
+                ("block_tokens", num(bt as f64)),
+                ("seed", num(seed as f64)),
+                ("temperature", num(sampling.temperature as f64)),
+                ("top_p", num(sampling.top_p as f64)),
+                ("action", s(&format!("K={} L1={} L2={}", action.k, action.l1, action.l2))),
+            ]),
+        ),
+        ("equal_output_checks", num(equal_output_checks as f64)),
+        ("equal_output_assertion", s("enabled")),
+        ("workloads", obj(workloads)),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_prefix_cache.json");
+    std::fs::write(path, format!("{}\n", report.to_string_pretty())).expect("write bench json");
+    println!("wrote {path}");
+}

@@ -132,7 +132,9 @@ use anyhow::Result;
 use super::spec::PrefillState;
 use super::{ActionPolicy, GenStats, Sequence, SpecEngine};
 use crate::dist::SamplingConfig;
-use crate::kvcache::{default_block_tokens, KvStorage};
+use crate::kvcache::{
+    default_block_tokens, prefix_cache_enabled, KvStorage, PrefixCache, PrefixCacheCounters,
+};
 use crate::runtime::{Backend, DispatchFault, FaultKind};
 use crate::tokenizer;
 use crate::util::threadpool;
@@ -482,6 +484,13 @@ pub struct ServeOutput {
     /// for every tick that emitted tokens — the raw series the latency
     /// benches derive per-token inter-arrival gaps from.
     pub tick_emits: Vec<(f64, usize)>,
+    /// Prompt KV rows adopted from the cross-request radix prefix cache at
+    /// admission instead of being recomputed by prefill — so TTFT
+    /// attribution can distinguish cache hits from chunked-prefill speed.
+    /// Zero on a cache miss, when prefix caching is disabled, and when the
+    /// lane later lost its caches (a released-and-rebuilt or fully
+    /// restarted lane recomputes those rows, so the benefit is gone).
+    pub cached_prefix_rows: usize,
 }
 
 /// A lane's recovery snapshot: the sequence and rng stream state as of the
@@ -534,6 +543,10 @@ struct Lane {
     /// (zero when uncapped). Returned at every retirement site.
     reserve_t: usize,
     reserve_d: usize,
+    /// Prompt rows adopted from the prefix cache at admission (reported as
+    /// [`ServeOutput::cached_prefix_rows`]; reset when the lane's caches
+    /// are released or fully restarted).
+    cached_rows: usize,
 }
 
 /// Worst-case block reservation per admitted lane under a capped pool.
@@ -652,6 +665,16 @@ pub struct ServeLoop<'a> {
     counters: SchedCounters,
     /// Stride-scheduling pass values per class (scheduler mode).
     passes: [u64; 3],
+    /// Cross-request radix prefix cache toggle (defaults to the
+    /// `SPECDELAY_PREFIX_CACHE` env knob; see [`prefix_cache_enabled`]).
+    prefix_enabled: bool,
+    /// The cache itself — `Some` only when enabled *and* the engine runs
+    /// paged storage (cached runs are refcounted pool blocks).
+    prefix: Option<PrefixCache>,
+    /// Admissions that wanted the cache but found none because lanes run
+    /// contiguous storage (folded into
+    /// [`PrefixCacheCounters::skipped_contiguous`]).
+    prefix_skipped: u64,
 }
 
 impl<'a> ServeLoop<'a> {
@@ -670,7 +693,7 @@ impl<'a> ServeLoop<'a> {
             Ok(v) if v == "1" => Some(SchedConfig::default()),
             _ => None,
         };
-        ServeLoop {
+        let mut sl = ServeLoop {
             spec: SpecEngine::new(engine, sampling),
             verifier,
             policy,
@@ -685,7 +708,12 @@ impl<'a> ServeLoop<'a> {
             sched,
             counters: SchedCounters::default(),
             passes: [0; 3],
-        }
+            prefix_enabled: prefix_cache_enabled(),
+            prefix: None,
+            prefix_skipped: 0,
+        };
+        sl.rebuild_prefix();
+        sl
     }
 
     /// Enable the preemptive priority scheduler (chunked prefill,
@@ -722,6 +750,7 @@ impl<'a> ServeLoop<'a> {
             SpecEngine::new(self.spec.engine, self.spec.sampling).with_kv_storage(storage);
         self.budget = None;
         self.requested_blocks = None;
+        self.rebuild_prefix();
         self
     }
 
@@ -776,6 +805,7 @@ impl<'a> ServeLoop<'a> {
             .with_paged_kv(bt, Some(cap));
         self.budget =
             Some(LaneBudget { bt, factor, max_trunk, overshoot, worst_target, worst_draft, cap });
+        self.rebuild_prefix();
     }
 
     /// The engine driving the lanes (pool introspection for tests/benches).
@@ -796,6 +826,59 @@ impl<'a> ServeLoop<'a> {
     /// Whether the preemptive scheduler is enabled.
     pub fn scheduler_enabled(&self) -> bool {
         self.sched.is_some()
+    }
+
+    /// Enable or disable the cross-request radix prefix cache explicitly,
+    /// overriding the `SPECDELAY_PREFIX_CACHE` env default. The cache only
+    /// materialises over paged storage; contiguous lanes fall back to cold
+    /// prefill and count `skipped_contiguous`. Warm streams are
+    /// bit-identical to cold ones: a cached row is exactly the row a cold
+    /// prefill of the same tokens would have committed (the backend
+    /// consistency contract), and admission adopts runs via refcounted
+    /// block handles, never by copying or mutating shared rows.
+    pub fn with_prefix_cache(mut self, enabled: bool) -> ServeLoop<'a> {
+        self.prefix_enabled = enabled;
+        self.rebuild_prefix();
+        self
+    }
+
+    /// Prefix-cache counters accumulated so far (lookups, hits, matched
+    /// rows, inserted runs, evictions). `skipped_contiguous` folds in
+    /// admissions that found no cache at all because the engine runs
+    /// contiguous storage.
+    pub fn prefix_counters(&self) -> PrefixCacheCounters {
+        let mut c = self.prefix.as_ref().map(|p| p.counters()).unwrap_or_default();
+        c.skipped_contiguous += self.prefix_skipped;
+        c
+    }
+
+    /// Whether prefix caching is enabled (it still needs paged storage to
+    /// materialise; see [`ServeLoop::with_prefix_cache`]).
+    pub fn prefix_cache_on(&self) -> bool {
+        self.prefix_enabled
+    }
+
+    /// Flush every cached prefix run back to the block pools (cache
+    /// invalidation — e.g. after a model swap, or to assert a drained
+    /// loop holds zero live blocks). Blocks still adopted by live lanes
+    /// only lose the cache's reference. The cache stays enabled and
+    /// repopulates from subsequent retirements; counters are kept.
+    pub fn clear_prefix_cache(&mut self) {
+        if let Some(cache) = self.prefix.as_mut() {
+            cache.clear();
+        }
+    }
+
+    /// (Re)build the cache over the engine's current pools. Called after
+    /// every builder that swaps the engine, because cached runs are only
+    /// valid against the pools that allocated them; dropping the old cache
+    /// releases every cached block back to its pool.
+    fn rebuild_prefix(&mut self) {
+        self.prefix = if self.prefix_enabled {
+            self.spec.kv_pools().map(|p| PrefixCache::new(&p.target, &p.draft))
+        } else {
+            None
+        };
     }
 
     /// Enqueue a request; returns its admission-order id.
@@ -859,6 +942,7 @@ impl<'a> ServeLoop<'a> {
             queue_secs: lane.queue_secs,
             ttft_secs: lane.ttft,
             tick_emits: lane.tick_emits,
+            cached_prefix_rows: lane.cached_rows,
         }
     }
 
@@ -877,6 +961,7 @@ impl<'a> ServeLoop<'a> {
             queue_secs: entry.arrival.elapsed().as_secs_f64(),
             ttft_secs: None,
             tick_emits: Vec::new(),
+            cached_prefix_rows: 0,
         }
     }
 
@@ -947,7 +1032,12 @@ impl<'a> ServeLoop<'a> {
             need_t += t;
             need_d += d;
         }
-        pools.target.live_blocks() + need_t <= b.cap && pools.draft.live_blocks() + need_d <= b.cap
+        // cached-but-unreferenced prefix runs are reclaimable on demand
+        // (the pre-tick headroom pass physically evicts them), so they
+        // never count against admission or preemption headroom
+        let reclaim = self.prefix.as_ref().map_or(0, |c| c.reclaimable_pairs());
+        pools.target.live_blocks() + need_t <= b.cap + reclaim
+            && pools.draft.live_blocks() + need_d <= b.cap + reclaim
     }
 
     /// Would resuming `lane` on top of `active` stay under the cap for
@@ -966,7 +1056,82 @@ impl<'a> ServeLoop<'a> {
             need_t += t;
             need_d += d;
         }
-        pools.target.live_blocks() + need_t <= b.cap && pools.draft.live_blocks() + need_d <= b.cap
+        // see usage_fits: reclaimable cache blocks count as headroom
+        let reclaim = self.prefix.as_ref().map_or(0, |c| c.reclaimable_pairs());
+        pools.target.live_blocks() + need_t <= b.cap + reclaim
+            && pools.draft.live_blocks() + need_d <= b.cap + reclaim
+    }
+
+    /// Physically evict cached-but-unreferenced prefix runs when the
+    /// upcoming tick's worst-case block growth does not fit the pools'
+    /// actual residency. The fit checks above treat reclaimable cache
+    /// blocks as free headroom; this pass makes that headroom real before
+    /// any lane dispatches, so the dispatch-side `alloc_zeroed` panic
+    /// ("lane admission must reserve pool headroom") stays unreachable.
+    /// FIFO mode needs it too: worst-case reservations bound lane growth,
+    /// but never accounted for cache-only resident blocks.
+    fn reclaim_headroom(&mut self, active: &[Lane]) {
+        if self.prefix.is_none() {
+            return;
+        }
+        let Some(b) = &self.budget else { return };
+        let chunk = self.sched.as_ref().map_or(256, |s| s.prefill_chunk);
+        let (mut need_t, mut need_d) = (0usize, 0usize);
+        for lane in active {
+            let pre = (lane.prefill.is_some() || lane.seq.is_none() || lane.needs_rebuild)
+                .then_some(chunk);
+            let (t, d) = b.tick_margin(pre);
+            need_t += t;
+            need_d += d;
+        }
+        let cap = b.cap;
+        let Some(pools) = self.spec.kv_pools() else { return };
+        let short_t = (pools.target.live_blocks() + need_t).saturating_sub(cap);
+        let short_d = (pools.draft.live_blocks() + need_d).saturating_sub(cap);
+        let need_pairs = short_t.max(short_d);
+        if need_pairs > 0 {
+            if let Some(cache) = self.prefix.as_mut() {
+                cache.reclaim(need_pairs);
+            }
+        }
+    }
+
+    /// Warm admission: consult the prefix cache for the longest cached
+    /// block run matching the lane's prompt and adopt it into the lane's
+    /// caches (refcounted handles only — no backend work, no row copies),
+    /// leaving a pre-seeded chunked prefill that resumes at the first
+    /// uncached row. A miss leaves the lane cold, byte-for-byte the legacy
+    /// admission path.
+    fn warm_admit(&mut self, lane: &mut Lane) {
+        if !self.prefix_enabled {
+            return;
+        }
+        let Some(cache) = self.prefix.as_mut() else {
+            // enabled but the engine runs contiguous storage: graceful
+            // cold-prefill fallback, counted rather than erroring
+            self.prefix_skipped += 1;
+            return;
+        };
+        let st = self.spec.start_chunked_cached(&lane.prompt, cache);
+        if st.rows_done() > 0 {
+            lane.cached_rows = st.rows_done();
+            lane.prefill = Some(st);
+        }
+    }
+
+    /// On clean retirement, publish the lane's committed prefix
+    /// (`tokens[..root_pos]` — rows the backend consistency contract makes
+    /// bit-identical to any future prefill of the same tokens) into the
+    /// radix cache so later requests sharing the prefix skip that much
+    /// prefill. Faulted and deadline retirements never insert: their
+    /// caches may be half-built.
+    fn cache_retired_prefix(&mut self, lane: &Lane) {
+        let Some(cache) = self.prefix.as_mut() else { return };
+        let Some(seq) = &lane.seq else { return };
+        let (Some(t), Some(d)) = (seq.target_kv.as_paged(), seq.draft_kv.as_paged()) else {
+            return;
+        };
+        cache.insert(&seq.tokens[..seq.root_pos], t, d);
     }
 
     /// Drop every block a parked lane holds: discard an in-flight fresh
@@ -975,6 +1140,9 @@ impl<'a> ServeLoop<'a> {
     /// — the rebuild replays its exact committed context.
     fn release_lane(lane: &mut Lane) {
         lane.checkpoint = None;
+        // either arm recomputes the adopted rows (chunked replay or cold
+        // restart), so the cache benefit is gone — report honestly
+        lane.cached_rows = 0;
         if let Some(seq) = &mut lane.seq {
             seq.release_kv();
             lane.needs_rebuild = true;
@@ -1065,6 +1233,7 @@ impl<'a> ServeLoop<'a> {
                             queue_secs: entry.arrival.elapsed().as_secs_f64(),
                             ttft_secs: None,
                             tick_emits: Vec::new(),
+                            cached_prefix_rows: 0,
                         });
                     }
                 }
@@ -1181,7 +1350,7 @@ impl<'a> ServeLoop<'a> {
                 reserved_t += r_t;
                 reserved_d += r_d;
                 let QueueEntry { id, req, arrival } = entry;
-                active.push(Lane {
+                let mut lane = Lane {
                     id,
                     seed: req.seed,
                     prompt: req.prompt,
@@ -1205,7 +1374,12 @@ impl<'a> ServeLoop<'a> {
                     needs_rebuild: false,
                     reserve_t: r_t,
                     reserve_d: r_d,
-                });
+                    cached_rows: 0,
+                };
+                // warm admission: adopt any cached prefix rows before the
+                // first tick (handle clones only — no backend work)
+                self.warm_admit(&mut lane);
+                active.push(lane);
             }
             self.counters.peak_active = self.counters.peak_active.max(active.len());
             if active.is_empty() {
@@ -1276,6 +1450,9 @@ impl<'a> ServeLoop<'a> {
                     }
                 }
             }
+            // turn the reclaimable headroom the fit checks promised into
+            // real free blocks before any lane dispatches
+            self.reclaim_headroom(&active);
             // tick mode: degraded lanes decode autoregressively, except on
             // probe ticks, which re-attempt the speculative path
             let probing = health == BackendHealth::Degraded
@@ -1417,6 +1594,7 @@ impl<'a> ServeLoop<'a> {
                             .is_some_and(|d| lane.started.elapsed() >= d)
                             || lane.deadline.is_some_and(|d| lane.arrival.elapsed() >= d);
                         if Self::lane_done(&lane) {
+                            self.cache_retired_prefix(&lane);
                             reserved_t -= lane.reserve_t;
                             reserved_d -= lane.reserve_d;
                             done.push(Self::retire(lane, None));
@@ -1485,6 +1663,8 @@ impl<'a> ServeLoop<'a> {
                                 lane.emitted_seen = 0;
                                 lane.tick_emits.clear();
                                 lane.ttft = None;
+                                // the replay prefills cold
+                                lane.cached_rows = 0;
                             }
                         }
                         let deadline_hit = cfg
@@ -1564,7 +1744,14 @@ fn lane_tick(
     let mut rep = TickReport::default();
     match chunk {
         None => {
-            if lane.seq.is_none() {
+            if let Some(mut st) = lane.prefill.take() {
+                // warm admission pre-seeded this lane with cached prefix
+                // rows; drive the chunked prefill to completion within the
+                // tick — chunking commits the same rows as the one-shot
+                // `start`, so FIFO streams are unchanged
+                while !spec.prefill_step(&mut st, usize::MAX)? {}
+                lane.seq = Some(spec.finish_prefill(st)?);
+            } else if lane.seq.is_none() {
                 lane.seq = Some(spec.start(&lane.prompt)?);
             }
         }

@@ -24,6 +24,7 @@ pub use batch::{
     BackendHealth, Priority, RecoveryCounters, ResilienceConfig, SchedConfig, SchedCounters,
     ServeError, ServeLoop, ServeOutput, ServeRequest,
 };
+pub use crate::kvcache::PrefixCacheCounters;
 pub use spec::{
     generate_autoregressive, KvPools, PrefillState, RootFeatures, Sequence, SpecEngine,
 };

@@ -6,6 +6,8 @@
 //!              "priority": "high|normal|low", "deadline_ms": 250}
 //!   response: {"text": "...", "tokens": n, "blocks": m, "tps": x,
 //!              "block_efficiency": y, "priority": "...",
+//!              "cached_prefix_rows": r (prompt rows adopted from the
+//!              cross-request prefix cache; 0 when cold or disabled),
 //!              "deadline_exceeded": bool (only when deadline_ms was set)}
 //!
 //! `priority` tags the request with a service class (the batched
@@ -21,10 +23,14 @@
 //! per-class served counts instead of generating — the lightweight
 //! health/load probe:
 //!   {"queued": {"high": 0, "normal": 0, "low": 0}, "active": 0,
-//!    "served": {"high": h, "normal": n, "low": l}}
+//!    "served": {"high": h, "normal": n, "low": l},
+//!    "prefix_cache": {"lookups": ..., "hits": ..., "matched_rows": ...,
+//!    "inserted_runs": ..., "evicted_blocks": ...,
+//!    "reclaimed_under_pressure": ..., "skipped_contiguous": ...}}
 //! (depths are always zero here: this front-end has no queue — the
 //! batched scheduler's [`super::ServeLoop::queued_by_class`] is the
-//! populated counterpart).
+//! populated counterpart; the prefix-cache object is all-zero unless
+//! `SPECDELAY_PREFIX_CACHE=1` and the process runs paged storage).
 //!
 //! Every failure is answered with a structured error object rather than a
 //! bare string (or a dropped connection):
@@ -54,9 +60,10 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::coordinator::{FixedPolicy, GenStats, Priority, SpecEngine};
+use crate::coordinator::{FixedPolicy, GenStats, KvPools, Priority, SpecEngine};
 use crate::dist::SamplingConfig;
 use crate::draft::Action;
+use crate::kvcache::{prefix_cache_enabled, KvStorage, PrefixCache};
 use crate::runtime::Backend;
 use crate::tokenizer;
 use crate::util::json::{num, obj, s, Json};
@@ -69,6 +76,35 @@ use crate::verify;
 pub struct ServeStats {
     /// Requests generated to completion, per [`Priority::index`] class.
     pub served: [u64; 3],
+    /// Requests that wanted the prefix cache but ran without one because
+    /// the process uses contiguous KV storage (folded into the stats
+    /// reply's `skipped_contiguous`).
+    pub prefix_skipped: u64,
+}
+
+/// Cross-request prefix-cache state: one shared pool pair plus the radix
+/// cache indexing it, kept alive across the per-request engines (each
+/// request adopts the pools via [`SpecEngine::with_kv_pools`], so cached
+/// blocks stay valid between requests). `None` when prefix caching is
+/// disabled or the process runs contiguous storage — requests then prefill
+/// cold, exactly as before.
+struct WarmState {
+    pools: KvPools,
+    cache: PrefixCache,
+}
+
+/// Build the server's warm state when the `SPECDELAY_PREFIX_CACHE` knob is
+/// on and the process-wide storage is paged.
+fn warm_state(engine: &dyn Backend) -> Option<WarmState> {
+    if !prefix_cache_enabled() || !matches!(KvStorage::global(), KvStorage::Paged) {
+        return None;
+    }
+    // a throwaway engine materialises the pool pair for this backend's
+    // dimensions; sampling is irrelevant to storage
+    let probe = SpecEngine::new(engine, SamplingConfig::new(1.0, 1.0));
+    let pools = probe.kv_pools()?.clone();
+    let cache = PrefixCache::new(&pools.target, &pools.draft);
+    Some(WarmState { pools, cache })
 }
 
 /// Listener configuration.
@@ -138,13 +174,15 @@ pub fn serve(engine: &dyn Backend, cfg: &ServerConfig, max_requests: Option<usiz
     let mut rng = Pcg64::seeded(cfg.seed);
     let mut served = 0usize;
     let mut stats = ServeStats::default();
+    let mut warm = warm_state(engine);
     for stream in listener.incoming() {
         let stream = stream?;
         stream.set_read_timeout(cfg.read_timeout)?;
         stream.set_write_timeout(cfg.write_timeout)?;
         let mut reader = BufReader::new(stream.try_clone()?);
         let mut out = stream;
-        served += handle_conn(engine, &mut reader, &mut out, cfg, &mut rng, &mut stats)?;
+        served +=
+            handle_conn(engine, &mut reader, &mut out, cfg, &mut rng, &mut stats, &mut warm)?;
         if let Some(m) = max_requests {
             if served >= m {
                 break;
@@ -221,6 +259,7 @@ fn handle_conn<R: BufRead, W: Write>(
     cfg: &ServerConfig,
     rng: &mut Pcg64,
     stats: &mut ServeStats,
+    warm: &mut Option<WarmState>,
 ) -> Result<usize> {
     let mut line = String::new();
     let mut count = 0usize;
@@ -267,7 +306,7 @@ fn handle_conn<R: BufRead, W: Write>(
                     let _ = writeln!(out, "{reply}");
                     return Ok(count);
                 }
-                match handle_request(engine, line.trim(), rng, stats) {
+                match handle_request(engine, line.trim(), rng, stats, warm) {
                     Ok(j) => j,
                     Err(e) => error_reply(e.kind, &e.message),
                 }
@@ -298,15 +337,30 @@ fn num_param(req: &Json, key: &str, default: f64, lo: f64, hi: f64) -> Result<f6
 
 /// The `{"stats": true}` reply: per-class queue depths (always zero for
 /// this queueless front-end — wire-compatible with the batched
-/// scheduler's), in-flight lane count, and per-class served totals.
-fn stats_reply(stats: &ServeStats) -> Json {
+/// scheduler's), in-flight lane count, per-class served totals, and the
+/// prefix-cache counters (all-zero when the cache never materialised).
+fn stats_reply(stats: &ServeStats, warm: &Option<WarmState>) -> Json {
     let class = |v: [f64; 3]| {
         obj(vec![("high", num(v[0])), ("normal", num(v[1])), ("low", num(v[2]))])
     };
+    let mut c = warm.as_ref().map(|w| w.cache.counters()).unwrap_or_default();
+    c.skipped_contiguous += stats.prefix_skipped;
     obj(vec![
         ("queued", class([0.0, 0.0, 0.0])),
         ("active", num(0.0)),
         ("served", class([stats.served[0] as f64, stats.served[1] as f64, stats.served[2] as f64])),
+        (
+            "prefix_cache",
+            obj(vec![
+                ("lookups", num(c.lookups as f64)),
+                ("hits", num(c.hits as f64)),
+                ("matched_rows", num(c.matched_rows as f64)),
+                ("inserted_runs", num(c.inserted_runs as f64)),
+                ("evicted_blocks", num(c.evicted_blocks as f64)),
+                ("reclaimed_under_pressure", num(c.reclaimed_under_pressure as f64)),
+                ("skipped_contiguous", num(c.skipped_contiguous as f64)),
+            ]),
+        ),
     ])
 }
 
@@ -315,10 +369,11 @@ fn handle_request(
     line: &str,
     rng: &mut Pcg64,
     stats: &mut ServeStats,
+    warm: &mut Option<WarmState>,
 ) -> Result<Json, ReqError> {
     let req = Json::parse(line).map_err(|e| ReqError::new("bad_json", format!("bad json: {e}")))?;
     if req.get("stats").is_ok() {
-        return Ok(stats_reply(stats));
+        return Ok(stats_reply(stats, warm));
     }
     let prompt = req
         .get("prompt")
@@ -360,14 +415,37 @@ fn handle_request(
         (deadline_ms > 0.0).then(|| Duration::from_micros((deadline_ms * 1000.0) as u64));
 
     let gen_err = |e: anyhow::Error| ReqError::new("generation", e.to_string());
-    let spec = SpecEngine::new(engine, sampling);
+    let mut spec = SpecEngine::new(engine, sampling);
+    if let Some(w) = warm.as_ref() {
+        // share the server-wide pool pair so this request can adopt (and
+        // later publish) cached prefix blocks
+        spec = spec.with_kv_pools(w.pools.clone());
+    }
     let policy = FixedPolicy(action);
     // the exact per-block loop of `SpecEngine::generate` (same rng
     // consumption, so streams match a plain generate call), with the
     // deadline checked between blocks: an expired request returns its
     // partial stream within one block of the limit
     let started = Instant::now();
-    let mut seq = spec.start(&prompt).map_err(gen_err)?;
+    let (mut seq, cached_rows) = match warm.as_mut() {
+        Some(w) => {
+            // warm prefill: adopt the longest cached block run, then
+            // prefill only the uncached tail — chunked rows are
+            // bit-identical to the one-shot `start`, so the stream (and
+            // the rng consumption after it) is unchanged
+            let mut st = spec.start_chunked_cached(&prompt, &mut w.cache);
+            let cached = st.rows_done();
+            while !spec.prefill_step(&mut st, usize::MAX).map_err(gen_err)? {}
+            (spec.finish_prefill(st).map_err(gen_err)?, cached)
+        }
+        None => {
+            if prefix_cache_enabled() {
+                // knob on but contiguous storage: graceful cold fallback
+                stats.prefix_skipped += 1;
+            }
+            (spec.start(&prompt).map_err(gen_err)?, 0)
+        }
+    };
     let mut gstats = GenStats::default();
     let mut exceeded = false;
     while !(seq.finished || seq.tokens.len() - seq.prompt_len >= max_new) {
@@ -380,6 +458,14 @@ fn handle_request(
         gstats.add_block(&b);
     }
     gstats.wall_secs = started.elapsed().as_secs_f64();
+    if let Some(w) = warm.as_mut() {
+        // publish the finished request's committed prefix for future
+        // requests sharing it (error paths above returned early, so only
+        // whole, fault-free caches are ever inserted)
+        if let (Some(t), Some(d)) = (seq.target_kv.as_paged(), seq.draft_kv.as_paged()) {
+            w.cache.insert(&seq.tokens[..seq.root_pos], t, d);
+        }
+    }
     let text = tokenizer::decode(&seq.tokens[seq.prompt_len..]);
     stats.served[priority.index()] += 1;
     let mut fields = vec![
@@ -389,6 +475,7 @@ fn handle_request(
         ("tps", num(gstats.tps())),
         ("block_efficiency", num(gstats.block_efficiency())),
         ("priority", s(priority.name())),
+        ("cached_prefix_rows", num(cached_rows as f64)),
     ];
     if deadline.is_some() {
         fields.push(("deadline_exceeded", Json::Bool(exceeded)));
@@ -409,10 +496,20 @@ mod tests {
     fn request(engine: &dyn Backend, line: &str) -> Json {
         let mut rng = Pcg64::seeded(0);
         let mut stats = ServeStats::default();
-        match handle_request(engine, line, &mut rng, &mut stats) {
+        match handle_request(engine, line, &mut rng, &mut stats, &mut None) {
             Ok(j) => j,
             Err(e) => error_reply(e.kind, &e.message),
         }
+    }
+
+    /// A warm state over explicit paged pools, independent of the
+    /// process-wide storage knob.
+    fn forced_warm(engine: &dyn Backend) -> Option<WarmState> {
+        let probe =
+            SpecEngine::new(engine, SamplingConfig::new(1.0, 1.0)).with_paged_kv(16, None);
+        let pools = probe.kv_pools().expect("paged engine has pools").clone();
+        let cache = PrefixCache::new(&pools.target, &pools.draft);
+        Some(WarmState { pools, cache })
     }
 
     fn error_kind(j: &Json) -> Option<String> {
@@ -488,7 +585,7 @@ mod tests {
         let mut reader = Cursor::new(input.into_bytes());
         let mut out: Vec<u8> = Vec::new();
         let mut rng = Pcg64::seeded(0);
-        let served = handle_conn(&b, &mut reader, &mut out, &cfg, &mut rng, &mut ServeStats::default()).unwrap();
+        let served = handle_conn(&b, &mut reader, &mut out, &cfg, &mut rng, &mut ServeStats::default(), &mut None).unwrap();
         assert_eq!(served, 2);
         let text = String::from_utf8(out).unwrap();
         let replies: Vec<&str> = text.lines().collect();
@@ -509,7 +606,7 @@ mod tests {
         let mut reader = Cursor::new(input.into_bytes());
         let mut out: Vec<u8> = Vec::new();
         let mut rng = Pcg64::seeded(0);
-        let served = handle_conn(&b, &mut reader, &mut out, &cfg, &mut rng, &mut ServeStats::default()).unwrap();
+        let served = handle_conn(&b, &mut reader, &mut out, &cfg, &mut rng, &mut ServeStats::default(), &mut None).unwrap();
         assert_eq!(served, 2);
         let text = String::from_utf8(out).unwrap();
         let replies: Vec<&str> = text.lines().collect();
@@ -564,9 +661,9 @@ mod tests {
         let mut rng = Pcg64::seeded(0);
         let mut stats = ServeStats::default();
         let gen = r#"{"prompt": "2+2= ", "max_new": 2, "priority": "low"}"#;
-        handle_request(&b, gen, &mut rng, &mut stats).unwrap();
-        handle_request(&b, gen, &mut rng, &mut stats).unwrap();
-        let j = handle_request(&b, r#"{"stats": true}"#, &mut rng, &mut stats).unwrap();
+        handle_request(&b, gen, &mut rng, &mut stats, &mut None).unwrap();
+        handle_request(&b, gen, &mut rng, &mut stats, &mut None).unwrap();
+        let j = handle_request(&b, r#"{"stats": true}"#, &mut rng, &mut stats, &mut None).unwrap();
         let queued = j.get("queued").unwrap();
         for class in ["high", "normal", "low"] {
             assert_eq!(queued.get(class).unwrap().as_f64(), Some(0.0), "{j}");
@@ -590,7 +687,7 @@ mod tests {
         let mut out: Vec<u8> = Vec::new();
         let mut rng = Pcg64::seeded(0);
         let served =
-            handle_conn(&b, &mut reader, &mut out, &cfg, &mut rng, &mut ServeStats::default())
+            handle_conn(&b, &mut reader, &mut out, &cfg, &mut rng, &mut ServeStats::default(), &mut None)
                 .unwrap();
         assert_eq!(served, 1);
         let text = String::from_utf8(out).unwrap();
@@ -611,10 +708,65 @@ mod tests {
         let mut reader = Cursor::new(bytes);
         let mut out: Vec<u8> = Vec::new();
         let mut rng = Pcg64::seeded(0);
-        let served = handle_conn(&b, &mut reader, &mut out, &cfg, &mut rng, &mut ServeStats::default()).unwrap();
+        let served = handle_conn(&b, &mut reader, &mut out, &cfg, &mut rng, &mut ServeStats::default(), &mut None).unwrap();
         assert_eq!(served, 0);
         let text = String::from_utf8(out).unwrap();
         let j = Json::parse(text.trim()).unwrap();
         assert_eq!(error_kind(&j).as_deref(), Some("bad_request"));
+    }
+
+    #[test]
+    fn warm_repeat_request_hits_cache_and_stream_is_unchanged() {
+        let b = backend();
+        let line = r#"{"prompt": "12*12*12*12*12*12= ", "max_new": 6, "temperature": 0}"#;
+        // cold oracle: no warm state at all
+        let cold = request(&b, line);
+        assert!(error_kind(&cold).is_none(), "{cold}");
+        assert_eq!(cold.get("cached_prefix_rows").unwrap().as_f64(), Some(0.0));
+        // warm server: identical request twice against one shared cache
+        let mut warm = forced_warm(&b);
+        let mut stats = ServeStats::default();
+        let mut rng = Pcg64::seeded(0);
+        let first = handle_request(&b, line, &mut rng, &mut stats, &mut warm).unwrap();
+        let mut rng = Pcg64::seeded(0);
+        let second = handle_request(&b, line, &mut rng, &mut stats, &mut warm).unwrap();
+        // bit-identical text across cold, warm-miss and warm-hit runs
+        let text = |j: &Json| j.get("text").unwrap().as_str().unwrap().to_string();
+        assert_eq!(text(&cold), text(&first));
+        assert_eq!(text(&cold), text(&second));
+        assert_eq!(first.get("cached_prefix_rows").unwrap().as_f64(), Some(0.0));
+        // the prompt tokenizes to 20 tokens with BOS, so the repeat
+        // adopts at least one whole cached block of 16
+        let hit = second.get("cached_prefix_rows").unwrap().as_f64().unwrap();
+        assert!(hit >= 16.0, "expected a block-aligned hit, got {hit}");
+        let w = warm.as_ref().unwrap();
+        let c = w.cache.counters();
+        assert_eq!(c.lookups, 2);
+        assert_eq!(c.hits, 1);
+        assert!(c.matched_rows as f64 >= hit);
+        assert!(c.inserted_runs >= 1);
+    }
+
+    #[test]
+    fn stats_reply_reports_prefix_cache_counters() {
+        let b = backend();
+        let mut warm = forced_warm(&b);
+        let mut stats = ServeStats::default();
+        let mut rng = Pcg64::seeded(0);
+        let line = r#"{"prompt": "12*12*12*12*12*12= ", "max_new": 4, "temperature": 0}"#;
+        handle_request(&b, line, &mut rng, &mut stats, &mut warm).unwrap();
+        handle_request(&b, line, &mut rng, &mut stats, &mut warm).unwrap();
+        let j = handle_request(&b, r#"{"stats": true}"#, &mut rng, &mut stats, &mut warm)
+            .unwrap();
+        let pc = j.get("prefix_cache").unwrap();
+        assert_eq!(pc.get("lookups").unwrap().as_f64(), Some(2.0));
+        assert_eq!(pc.get("hits").unwrap().as_f64(), Some(1.0));
+        assert!(pc.get("matched_rows").unwrap().as_f64().unwrap() >= 16.0);
+        assert!(pc.get("inserted_runs").unwrap().as_f64().unwrap() >= 1.0);
+        assert_eq!(pc.get("skipped_contiguous").unwrap().as_f64(), Some(0.0));
+        // the cold front-end still answers with the all-zero object
+        let cold = request(&b, r#"{"stats": true}"#);
+        let pc = cold.get("prefix_cache").unwrap();
+        assert_eq!(pc.get("lookups").unwrap().as_f64(), Some(0.0));
     }
 }

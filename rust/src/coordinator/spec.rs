@@ -14,7 +14,7 @@ use anyhow::Result;
 use super::{ActionPolicy, BlockStats, GenStats, StepFeatures};
 use crate::dist::{DistStorage, NodeDist, SamplingConfig};
 use crate::draft::{accepted_row_extent, draft_delayed, Action, DraftScratch};
-use crate::kvcache::{default_block_tokens, BlockPool, KvCache, KvStorage};
+use crate::kvcache::{default_block_tokens, BlockPool, KvCache, KvStorage, PrefixCache};
 use crate::runtime::{guard_finite, Backend, FaultOp, Role};
 use crate::tokenizer;
 use crate::tree::DraftTree;
@@ -126,7 +126,10 @@ impl PrefillState {
 /// [`SpecEngine`] creates. Lanes of one engine draw from (and retire into)
 /// these pools, so resident memory — and, when the pools are capped, the
 /// serving loop's admission budget — is accounted per *unique* block
-/// across all in-flight sequences.
+/// across all in-flight sequences. `Clone` shares the pools (the fields
+/// are [`Arc`]s), which is how the server keeps one pool pair — and the
+/// radix prefix cache indexing it — alive across per-request engines.
+#[derive(Clone)]
 pub struct KvPools {
     /// Pool sized for the target model's dimensions.
     pub target: Arc<BlockPool>,
@@ -185,6 +188,16 @@ impl<'a> SpecEngine<'a> {
             target: BlockPool::new(meta.target, block_tokens, max_blocks),
             draft: BlockPool::new(meta.draft, block_tokens, max_blocks),
         });
+        self
+    }
+
+    /// Adopt an *existing* pool pair instead of creating fresh ones: lanes
+    /// of this engine share blocks (and a [`PrefixCache`] indexing them)
+    /// with every other engine built over the same pools — the
+    /// cross-request seam the TCP server uses to keep prefix KV alive
+    /// between per-request engines.
+    pub fn with_kv_pools(mut self, pools: KvPools) -> Self {
+        self.kv = KvContext::Paged(pools);
         self
     }
 
@@ -279,6 +292,25 @@ impl<'a> SpecEngine<'a> {
             last_draft: None,
             rebuild: false,
         }
+    }
+
+    /// Begin a chunked prefill *warmed* by the radix prefix cache: like
+    /// [`SpecEngine::start_chunked`], but the longest cached block run for
+    /// the prompt is adopted into the fresh lanes (refcount bumps, no row
+    /// copies) and `rows_done` starts at the matched row count, so
+    /// [`SpecEngine::prefill_step`] begins at the first token past the
+    /// cached prefix. Only `tokens[..len-1]` is probed, guaranteeing at
+    /// least one fresh row — the final chunk's logits/hidden that
+    /// [`SpecEngine::finish_prefill`] needs. Cached rows are bit-identical
+    /// to the rows a cold prefill would commit (the backend consistency
+    /// contract), so the finished [`Sequence`] — and every token it emits —
+    /// matches the cold-cache run exactly.
+    pub fn start_chunked_cached(&self, prompt: &str, cache: &mut PrefixCache) -> PrefillState {
+        let mut st = self.start_chunked(prompt);
+        let probe_len = st.tokens.len() - 1;
+        let matched = cache.match_into(&st.tokens[..probe_len], &mut st.target_kv, &mut st.draft_kv);
+        st.rows_done = matched;
+        st
     }
 
     /// Begin replaying a hard-preempted sequence's context (after

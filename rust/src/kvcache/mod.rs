@@ -38,8 +38,10 @@
 //! paged-vs-contiguous bitwise equality is fuzzed in `tests/paged_kv.rs`.
 
 pub mod paged;
+pub mod radix;
 
 pub use paged::{default_block_tokens, BlockPool, KvStorage, PagedKvCache};
+pub use radix::{prefix_cache_enabled, PrefixCache, PrefixCacheCounters};
 
 use crate::runtime::ModelDims;
 

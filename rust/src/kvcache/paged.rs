@@ -433,6 +433,32 @@ impl PagedKvCache {
             .expect("block uniquely owned after copy-on-write")
     }
 
+    /// Clone the first `n_blocks` table entries — the refcount-bump export
+    /// the radix prefix cache stores on lane retirement. `None` when any of
+    /// those slots is unallocated (a lane that never committed the rows).
+    pub(crate) fn block_arcs(&self, n_blocks: usize) -> Option<Vec<Arc<KvBlock>>> {
+        if n_blocks > self.table.len() {
+            return None;
+        }
+        self.table[..n_blocks].iter().cloned().collect()
+    }
+
+    /// Install `blocks` as this lane's leading table entries and mark
+    /// `rows` committed — the adoption half of a prefix-cache hit. Existing
+    /// entries in the overwritten slots are released; the adopted blocks
+    /// are shared (refcount bumps), so the first divergent write forks them
+    /// exactly like any other copy-on-write fork.
+    pub(crate) fn adopt_blocks(&mut self, blocks: Vec<Arc<KvBlock>>, rows: usize) {
+        assert_eq!(blocks.len(), rows.div_ceil(self.block_tokens()), "run/row mismatch");
+        assert!(blocks.len() <= self.table.len(), "adopted run exceeds lane table");
+        for (slot, blk) in self.table.iter_mut().zip(blocks) {
+            if let Some(old) = slot.replace(blk) {
+                self.pool.release(old);
+            }
+        }
+        self.len = self.len.max(rows);
+    }
+
     /// Raw single-(layer, head) row write — the cross-storage fallback path
     /// of [`KvCache::copy_prefix_from`](super::KvCache::copy_prefix_from).
     pub(crate) fn write_row(&mut self, layer: usize, head: usize, pos: usize, k: &[f32], v: &[f32]) {

@@ -1,0 +1,699 @@
+//! Cross-request radix prefix cache over the paged [`BlockPool`].
+//!
+//! The copy-on-write block table ([`PagedKvCache`]) shares committed KV
+//! blocks *within* one request — trunk→branch handoffs are refcount bumps.
+//! Production traffic (shared system prompts, few-shot templates,
+//! conversation turns) shares long prefixes *across* requests, and without
+//! an index every admission re-prefills tokens whose KV rows already sit
+//! in the pool. This module adds that index:
+//!
+//! * [`PrefixCache`] — a radix tree keyed on token ids. Each node owns one
+//!   path-compressed edge (`key`, a whole number of `block_tokens`-sized
+//!   token blocks) plus the matching refcounted runs of committed target
+//!   **and** draft blocks. Retiring lanes [`insert`](PrefixCache::insert)
+//!   their committed prompt prefix (Arc clones — no row copies); admission
+//!   [`match_into`](PrefixCache::match_into)s an incoming prompt and adopts
+//!   the longest cached block run into the fresh lanes, so chunked prefill
+//!   starts at the first token past the cached rows.
+//! * [`PrefixCacheCounters`] — observability for the serving loop's
+//!   `{"stats":true}` reply and the prefix-cache bench.
+//!
+//! ## Block-aligned matching
+//!
+//! Blocks are the unit of sharing, so the tree only caches and matches
+//! *whole* blocks: inserted token runs are truncated to a multiple of
+//! `block_tokens`, edges split only on block boundaries, and a child is
+//! entered only when its entire first block matches the probe. The
+//! resulting invariant — the first blocks of a node's children are pairwise
+//! distinct — keeps descent unambiguous without per-token child fan-out.
+//!
+//! ## Refcounts, reclaimability and eviction
+//!
+//! The cache holds plain [`Arc`] clones of lane table entries, so a cached
+//! block stays live in its pool. Blocks whose only reference is the cache
+//! itself (`strong_count == 1`) are *reclaimable*: the serving loop never
+//! counts them against admission headroom, and under budget pressure
+//! [`reclaim`](PrefixCache::reclaim) evicts LRU leaf runs tail-first,
+//! releasing the block pairs back to their pools. Because lanes adopt
+//! root-contiguous runs, reclaimable blocks always form suffixes of leaf
+//! paths, so repeated tail truncation can reach every reclaimable block.
+//!
+//! ## Determinism contract
+//!
+//! Cached rows come from committed prefill/decode rows, which the backend
+//! consistency contract pins bit-identical to a cold prefill of the same
+//! tokens. Adopting a cached run therefore yields exactly the bytes a cold
+//! chunked prefill would have produced, and the warm path stays
+//! bit-identical to the cold-cache oracle (asserted across the e2e grid
+//! and `benches/prefix_cache.rs`).
+
+use std::sync::{Arc, OnceLock};
+
+use super::paged::KvBlock;
+use super::{BlockPool, KvCache, PagedKvCache};
+
+/// Whether cross-request prefix caching is enabled process-wide: off,
+/// unless `SPECDELAY_PREFIX_CACHE` is set to `1`/`true`. Read once and
+/// cached — mirrors [`KvStorage::global`](super::KvStorage::global).
+pub fn prefix_cache_enabled() -> bool {
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| {
+        prefix_cache_from_env_value(std::env::var("SPECDELAY_PREFIX_CACHE").ok().as_deref())
+    })
+}
+
+/// Parse the `SPECDELAY_PREFIX_CACHE` value (`1`/`true` → enabled);
+/// factored out so the knob's parsing is unit-testable despite the cached
+/// global.
+pub fn prefix_cache_from_env_value(value: Option<&str>) -> bool {
+    value.map(|v| v == "1" || v.eq_ignore_ascii_case("true")).unwrap_or(false)
+}
+
+/// Observability counters for one [`PrefixCache`], surfaced through
+/// `ServeLoop::prefix_counters` and the server `{"stats":true}` reply.
+/// Misses are derived: `lookups - hits`.
+#[derive(Clone, Debug, Default)]
+pub struct PrefixCacheCounters {
+    /// Prompt lookups against the tree (paged admissions only; contiguous
+    /// fallbacks count under [`skipped_contiguous`](Self::skipped_contiguous)
+    /// instead).
+    pub lookups: u64,
+    /// Lookups that matched at least one whole cached block.
+    pub hits: u64,
+    /// Total KV rows adopted from the cache across all hits (prefill rows
+    /// the serving loop did not recompute).
+    pub matched_rows: u64,
+    /// Insertions that stored at least one new block run in the tree
+    /// (re-inserting an already-cached prefix keeps the existing run and
+    /// does not count).
+    pub inserted_runs: u64,
+    /// Blocks released back to their pools by eviction or
+    /// [`PrefixCache::clear`], counted across both the target and draft
+    /// pools.
+    pub evicted_blocks: u64,
+    /// The subset of [`evicted_blocks`](Self::evicted_blocks) released by
+    /// [`PrefixCache::reclaim`] under admission/dispatch budget pressure.
+    pub reclaimed_under_pressure: u64,
+    /// Admissions that skipped the cache because the lane storage is
+    /// contiguous (graceful degradation — see `ServeLoop` docs).
+    pub skipped_contiguous: u64,
+}
+
+/// One path-compressed radix node: a token edge (`key.len()` is a multiple
+/// of the pool block size) plus the paired target/draft block runs backing
+/// it (`key.len() / block_tokens` blocks each). The root has an empty key
+/// and no runs.
+struct Node {
+    key: Vec<u32>,
+    target_run: Vec<Arc<KvBlock>>,
+    draft_run: Vec<Arc<KvBlock>>,
+    children: Vec<Node>,
+    /// Monotone LRU stamp (a logical clock, not wall time — eviction order
+    /// must be deterministic for the equality oracle).
+    last_touch: u64,
+}
+
+impl Node {
+    fn empty() -> Node {
+        Node {
+            key: Vec::new(),
+            target_run: Vec::new(),
+            draft_run: Vec::new(),
+            children: Vec::new(),
+            last_touch: 0,
+        }
+    }
+}
+
+/// A cross-request radix index of committed KV block runs over one
+/// (target pool, draft pool) pair. See the module docs for matching,
+/// refcount and eviction semantics.
+pub struct PrefixCache {
+    target_pool: Arc<BlockPool>,
+    draft_pool: Arc<BlockPool>,
+    bt: usize,
+    root: Node,
+    clock: u64,
+    counters: PrefixCacheCounters,
+}
+
+impl PrefixCache {
+    /// An empty cache over the two pools a serving loop's lanes draw from.
+    /// Both pools must use the same block size.
+    pub fn new(target_pool: &Arc<BlockPool>, draft_pool: &Arc<BlockPool>) -> PrefixCache {
+        assert_eq!(
+            target_pool.block_tokens(),
+            draft_pool.block_tokens(),
+            "prefix cache requires matching block sizes"
+        );
+        PrefixCache {
+            target_pool: Arc::clone(target_pool),
+            draft_pool: Arc::clone(draft_pool),
+            bt: target_pool.block_tokens(),
+            root: Node::empty(),
+            clock: 0,
+            counters: PrefixCacheCounters::default(),
+        }
+    }
+
+    /// Tokens per cached block (the match/insert granularity).
+    pub fn block_tokens(&self) -> usize {
+        self.bt
+    }
+
+    /// Counter snapshot.
+    pub fn counters(&self) -> PrefixCacheCounters {
+        self.counters.clone()
+    }
+
+    /// Cache `tokens` (truncated to whole blocks) with the committed block
+    /// runs of a retiring lane's target and draft caches. The runs are
+    /// shared by Arc clone — no row copies — and overlapping prefixes keep
+    /// the runs already in the tree (bit-identical by the determinism
+    /// contract). Returns the number of newly cached rows; lanes on foreign
+    /// pools or with unallocated prefix blocks are skipped (0).
+    pub fn insert(&mut self, tokens: &[u32], target: &PagedKvCache, draft: &PagedKvCache) -> usize {
+        if !Arc::ptr_eq(target.pool(), &self.target_pool)
+            || !Arc::ptr_eq(draft.pool(), &self.draft_pool)
+        {
+            return 0;
+        }
+        let rows = (tokens.len() / self.bt) * self.bt;
+        if rows == 0 || rows > target.len() || rows > draft.len() {
+            return 0;
+        }
+        let nb = rows / self.bt;
+        let (Some(t_run), Some(d_run)) = (target.block_arcs(nb), draft.block_arcs(nb)) else {
+            return 0;
+        };
+        self.clock += 1;
+        let stored = Self::insert_rec(
+            &mut self.root,
+            &self.target_pool,
+            &self.draft_pool,
+            &tokens[..rows],
+            t_run,
+            d_run,
+            self.bt,
+            self.clock,
+        );
+        if stored > 0 {
+            self.counters.inserted_runs += 1;
+        }
+        stored * self.bt
+    }
+
+    /// Recursive insert below `node`; `tokens` is block-aligned and `t_run`
+    /// / `d_run` carry one block per token block. Returns newly stored
+    /// blocks (per pool). Runs for already-cached prefixes are released
+    /// back through the pools (refcount drops — the lane still holds them).
+    #[allow(clippy::too_many_arguments)]
+    fn insert_rec(
+        node: &mut Node,
+        target_pool: &BlockPool,
+        draft_pool: &BlockPool,
+        tokens: &[u32],
+        mut t_run: Vec<Arc<KvBlock>>,
+        mut d_run: Vec<Arc<KvBlock>>,
+        bt: usize,
+        clock: u64,
+    ) -> usize {
+        node.last_touch = clock;
+        if tokens.is_empty() {
+            Self::release_runs(target_pool, draft_pool, t_run, d_run);
+            return 0;
+        }
+        let slot = node.children.iter().position(|c| c.key[..bt] == tokens[..bt]);
+        let Some(ci) = slot else {
+            // No child shares the first block: attach the whole remainder
+            // as a fresh leaf (keeps the distinct-first-block invariant).
+            let stored = t_run.len();
+            node.children.push(Node {
+                key: tokens.to_vec(),
+                target_run: t_run,
+                draft_run: d_run,
+                children: Vec::new(),
+                last_touch: clock,
+            });
+            return stored;
+        };
+        // Count whole matching blocks along the child's edge.
+        let child = &mut node.children[ci];
+        let mut nb = 1;
+        while (nb + 1) * bt <= child.key.len()
+            && (nb + 1) * bt <= tokens.len()
+            && child.key[nb * bt..(nb + 1) * bt] == tokens[nb * bt..(nb + 1) * bt]
+        {
+            nb += 1;
+        }
+        let pb = nb * bt;
+        // The matched prefix is already cached: keep the tree's runs and
+        // drop ours (content is bit-identical by the determinism contract).
+        let t_rest = t_run.split_off(nb);
+        let d_rest = d_run.split_off(nb);
+        Self::release_runs(target_pool, draft_pool, t_run, d_run);
+        if pb == child.key.len() {
+            return Self::insert_rec(
+                child,
+                target_pool,
+                draft_pool,
+                &tokens[pb..],
+                t_rest,
+                d_rest,
+                bt,
+                clock,
+            );
+        }
+        // Divergence inside the edge: split the child at the block
+        // boundary, demoting its tail (and subtree) under a new
+        // intermediate node that keeps the matched prefix.
+        let tail_key = child.key.split_off(pb);
+        let tail_t = child.target_run.split_off(nb);
+        let tail_d = child.draft_run.split_off(nb);
+        let demoted = Node {
+            key: tail_key,
+            target_run: tail_t,
+            draft_run: tail_d,
+            children: std::mem::take(&mut child.children),
+            last_touch: child.last_touch,
+        };
+        child.children.push(demoted);
+        child.last_touch = clock;
+        let rest = &tokens[pb..];
+        if rest.is_empty() {
+            Self::release_runs(target_pool, draft_pool, t_rest, d_rest);
+            return 0;
+        }
+        let stored = t_rest.len();
+        child.children.push(Node {
+            key: rest.to_vec(),
+            target_run: t_rest,
+            draft_run: d_rest,
+            children: Vec::new(),
+            last_touch: clock,
+        });
+        stored
+    }
+
+    /// Match `tokens` against the tree and adopt the longest cached block
+    /// run into the `target` / `draft` lanes (Arc clones installed in their
+    /// block tables; committed length set to the matched rows). Returns the
+    /// matched row count — always a multiple of the block size, and 0 for
+    /// contiguous lanes (graceful degradation, counted under
+    /// `skipped_contiguous`) or lanes on foreign pools.
+    pub fn match_into(&mut self, tokens: &[u32], target: &mut KvCache, draft: &mut KvCache) -> usize {
+        let (KvCache::Paged(t), KvCache::Paged(d)) = (target, draft) else {
+            self.counters.skipped_contiguous += 1;
+            return 0;
+        };
+        if !Arc::ptr_eq(t.pool(), &self.target_pool) || !Arc::ptr_eq(d.pool(), &self.draft_pool) {
+            self.counters.lookups += 1;
+            return 0;
+        }
+        self.counters.lookups += 1;
+        self.clock += 1;
+        let mut t_run: Vec<Arc<KvBlock>> = Vec::new();
+        let mut d_run: Vec<Arc<KvBlock>> = Vec::new();
+        Self::match_rec(&mut self.root, tokens, self.bt, self.clock, &mut t_run, &mut d_run);
+        let rows = t_run.len() * self.bt;
+        if rows == 0 {
+            return 0;
+        }
+        t.adopt_blocks(t_run, rows);
+        d.adopt_blocks(d_run, rows);
+        self.counters.hits += 1;
+        self.counters.matched_rows += rows as u64;
+        rows
+    }
+
+    /// Recursive descent for [`PrefixCache::match_into`], collecting the
+    /// cached block run for the longest block-aligned prefix of `tokens`
+    /// and LRU-touching every node on the path.
+    fn match_rec(
+        node: &mut Node,
+        tokens: &[u32],
+        bt: usize,
+        clock: u64,
+        t_out: &mut Vec<Arc<KvBlock>>,
+        d_out: &mut Vec<Arc<KvBlock>>,
+    ) {
+        node.last_touch = clock;
+        if tokens.len() < bt {
+            return;
+        }
+        let slot = node.children.iter().position(|c| c.key[..bt] == tokens[..bt]);
+        let Some(ci) = slot else { return };
+        let child = &mut node.children[ci];
+        let mut nb = 1;
+        while (nb + 1) * bt <= child.key.len()
+            && (nb + 1) * bt <= tokens.len()
+            && child.key[nb * bt..(nb + 1) * bt] == tokens[nb * bt..(nb + 1) * bt]
+        {
+            nb += 1;
+        }
+        for i in 0..nb {
+            t_out.push(Arc::clone(&child.target_run[i]));
+            d_out.push(Arc::clone(&child.draft_run[i]));
+        }
+        if nb * bt == child.key.len() {
+            Self::match_rec(child, &tokens[nb * bt..], bt, clock, t_out, d_out);
+        } else {
+            child.last_touch = clock;
+        }
+    }
+
+    /// Cached block pairs whose only remaining reference is the cache
+    /// itself — the blocks admission may treat as free-able headroom.
+    pub fn reclaimable_pairs(&self) -> usize {
+        let mut pairs = 0usize;
+        let mut stack: Vec<&Node> = vec![&self.root];
+        while let Some(n) = stack.pop() {
+            for (t, d) in n.target_run.iter().zip(&n.draft_run) {
+                if Arc::strong_count(t) == 1 && Arc::strong_count(d) == 1 {
+                    pairs += 1;
+                }
+            }
+            stack.extend(n.children.iter());
+        }
+        pairs
+    }
+
+    /// Total block pairs held by the tree (reclaimable or not).
+    pub fn cached_pairs(&self) -> usize {
+        let mut pairs = 0usize;
+        let mut stack: Vec<&Node> = vec![&self.root];
+        while let Some(n) = stack.pop() {
+            pairs += n.target_run.len();
+            stack.extend(n.children.iter());
+        }
+        pairs
+    }
+
+    /// Evict under budget pressure: release up to `need_pairs` reclaimable
+    /// block pairs back to the pools, LRU leaf first, tail blocks first
+    /// (emptied nodes are removed, which may expose their parents as the
+    /// next LRU leaves). Returns the pairs actually freed — fewer than
+    /// requested only when nothing else is reclaimable.
+    pub fn reclaim(&mut self, need_pairs: usize) -> usize {
+        let mut freed = 0usize;
+        while freed < need_pairs {
+            let mut best: Option<(u64, Vec<usize>)> = None;
+            let mut path = Vec::new();
+            Self::find_lru_leaf(&self.root, &mut path, &mut best);
+            let Some((_, path)) = best else { break };
+            let mut parent = &mut self.root;
+            for &i in &path[..path.len() - 1] {
+                parent = &mut parent.children[i];
+            }
+            let li = *path.last().expect("root is never an evictable leaf");
+            let leaf = &mut parent.children[li];
+            while freed < need_pairs
+                && leaf
+                    .target_run
+                    .last()
+                    .is_some_and(|b| Arc::strong_count(b) == 1)
+                && leaf.draft_run.last().is_some_and(|b| Arc::strong_count(b) == 1)
+            {
+                let t = leaf.target_run.pop().expect("checked non-empty");
+                let d = leaf.draft_run.pop().expect("runs stay paired");
+                leaf.key.truncate(leaf.key.len() - self.bt);
+                self.target_pool.release(t);
+                self.draft_pool.release(d);
+                freed += 1;
+            }
+            if leaf.target_run.is_empty() {
+                parent.children.swap_remove(li);
+            }
+        }
+        self.counters.evicted_blocks += (freed * 2) as u64;
+        self.counters.reclaimed_under_pressure += (freed * 2) as u64;
+        freed
+    }
+
+    /// Locate the least-recently-touched leaf whose tail block pair is
+    /// reclaimable (both refcounts 1); `path` is the child-index route from
+    /// the root.
+    fn find_lru_leaf(node: &Node, path: &mut Vec<usize>, best: &mut Option<(u64, Vec<usize>)>) {
+        if node.children.is_empty() {
+            let tail_free = node.target_run.last().is_some_and(|b| Arc::strong_count(b) == 1)
+                && node.draft_run.last().is_some_and(|b| Arc::strong_count(b) == 1);
+            if tail_free && best.as_ref().is_none_or(|(t, _)| node.last_touch < *t) {
+                *best = Some((node.last_touch, path.clone()));
+            }
+            return;
+        }
+        for (i, c) in node.children.iter().enumerate() {
+            path.push(i);
+            Self::find_lru_leaf(c, path, best);
+            path.pop();
+        }
+    }
+
+    /// Drop every cached run, releasing all block references back to their
+    /// pools (blocks still adopted by live lanes just lose the cache's
+    /// refcount). Also invoked by `Drop`, so a retired cache can never leak
+    /// pool accounting.
+    pub fn clear(&mut self) {
+        let mut released = 0usize;
+        let mut stack = std::mem::take(&mut self.root.children);
+        while let Some(mut n) = stack.pop() {
+            for b in n.target_run.drain(..) {
+                self.target_pool.release(b);
+                released += 1;
+            }
+            for b in n.draft_run.drain(..) {
+                self.draft_pool.release(b);
+                released += 1;
+            }
+            stack.append(&mut n.children);
+        }
+        self.counters.evicted_blocks += released as u64;
+    }
+
+    fn release_runs(
+        target_pool: &BlockPool,
+        draft_pool: &BlockPool,
+        t_run: Vec<Arc<KvBlock>>,
+        d_run: Vec<Arc<KvBlock>>,
+    ) {
+        for b in t_run {
+            target_pool.release(b);
+        }
+        for b in d_run {
+            draft_pool.release(b);
+        }
+    }
+}
+
+impl Drop for PrefixCache {
+    fn drop(&mut self) {
+        self.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ModelDims;
+
+    fn dims() -> ModelDims {
+        ModelDims { n_layers: 2, d_model: 8, n_heads: 2, d_head: 4, vocab: 300, max_seq: 64 }
+    }
+
+    /// Deterministic committed-row content: a function of the position and
+    /// the token at that position, so any lane that committed the same
+    /// token prefix holds bit-identical rows (the determinism contract the
+    /// real engine provides).
+    fn committed_lane(pool: &Arc<BlockPool>, tokens: &[u32], salt: f32) -> PagedKvCache {
+        let d = pool.dims();
+        let n = d.n_layers * d.n_heads * d.d_head;
+        let mut c = PagedKvCache::new(pool);
+        for (pos, &tok) in tokens.iter().enumerate() {
+            let row: Vec<f32> =
+                (0..n).map(|e| salt + tok as f32 * 1000.0 + (pos * n + e) as f32).collect();
+            c.commit_row(&row, &row, pos);
+        }
+        c
+    }
+
+    fn toks(n: usize, seed: u32) -> Vec<u32> {
+        (0..n as u32).map(|i| (i * 7 + seed) % 256).collect()
+    }
+
+    #[test]
+    fn knob_parsing() {
+        assert!(!prefix_cache_from_env_value(None));
+        assert!(!prefix_cache_from_env_value(Some("0")));
+        assert!(prefix_cache_from_env_value(Some("1")));
+        assert!(prefix_cache_from_env_value(Some("true")));
+        assert!(prefix_cache_from_env_value(Some("TRUE")));
+    }
+
+    #[test]
+    fn insert_match_roundtrip_is_bitwise() {
+        let tp = BlockPool::new(dims(), 4, None);
+        let dp = BlockPool::new(dims(), 4, None);
+        let mut cache = PrefixCache::new(&tp, &dp);
+        let tokens = toks(11, 3); // 2 whole blocks + 3 spare tokens
+        let t_lane = committed_lane(&tp, &tokens, 0.25);
+        let d_lane = committed_lane(&dp, &tokens, 0.75);
+        let stored = cache.insert(&tokens, &t_lane, &d_lane);
+        assert_eq!(stored, 8, "truncated to whole blocks");
+        assert_eq!(cache.cached_pairs(), 2);
+
+        let mut wt = KvCache::paged(&tp);
+        let mut wd = KvCache::paged(&dp);
+        let matched = cache.match_into(&tokens, &mut wt, &mut wd);
+        assert_eq!(matched, 8);
+        assert_eq!(wt.len(), 8);
+        assert_eq!(wd.len(), 8);
+        let d = dims();
+        for l in 0..d.n_layers {
+            for h in 0..d.n_heads {
+                for pos in 0..8 {
+                    assert_eq!(wt.read_row(l, h, pos), t_lane.row(l, h, pos), "target row {pos}");
+                    assert_eq!(wd.read_row(l, h, pos), d_lane.row(l, h, pos), "draft row {pos}");
+                }
+            }
+        }
+        // adoption shares blocks, it does not copy them
+        assert_eq!(wt.as_paged().unwrap().cow_shared_blocks(), 2);
+        let c = cache.counters();
+        assert_eq!((c.lookups, c.hits, c.matched_rows, c.inserted_runs), (1, 1, 8, 1));
+        drop((wt, wd, t_lane, d_lane));
+        drop(cache);
+        assert_eq!(tp.live_blocks(), 0, "cache drop releases every reference");
+        assert_eq!(dp.live_blocks(), 0);
+        tp.validate().unwrap();
+        dp.validate().unwrap();
+    }
+
+    #[test]
+    fn diverging_prompts_split_on_block_boundary() {
+        let tp = BlockPool::new(dims(), 4, None);
+        let dp = BlockPool::new(dims(), 4, None);
+        let mut cache = PrefixCache::new(&tp, &dp);
+        let mut a = toks(16, 9);
+        let mut b = a.clone();
+        b[10] = 255; // diverge inside block 2
+        let (ta, da) = (committed_lane(&tp, &a, 1.0), committed_lane(&dp, &a, 2.0));
+        let (tb, db) = (committed_lane(&tp, &b, 1.0), committed_lane(&dp, &b, 2.0));
+        assert_eq!(cache.insert(&a, &ta, &da), 16);
+        // b shares blocks 0..2; blocks 2..4 are new
+        assert_eq!(cache.insert(&b, &tb, &db), 8);
+        assert_eq!(cache.cached_pairs(), 6);
+        // each prompt matches its own full run
+        for (toksv, lane) in [(&a, &ta), (&b, &tb)] {
+            let mut wt = KvCache::paged(&tp);
+            let mut wd = KvCache::paged(&dp);
+            assert_eq!(cache.match_into(toksv, &mut wt, &mut wd), 16);
+            assert_eq!(wt.read_row(1, 1, 11), lane.row(1, 1, 11));
+        }
+        // a probe diverging inside block 1 matches exactly one block
+        a[5] = 254;
+        let mut wt = KvCache::paged(&tp);
+        let mut wd = KvCache::paged(&dp);
+        assert_eq!(cache.match_into(&a, &mut wt, &mut wd), 4);
+        let c = cache.counters();
+        assert_eq!(c.lookups, 3);
+        assert_eq!(c.hits, 3);
+        drop((ta, da, tb, db, wt, wd));
+        drop(cache);
+        assert_eq!(tp.live_blocks(), 0);
+        tp.validate().unwrap();
+        dp.validate().unwrap();
+    }
+
+    #[test]
+    fn sub_block_probe_misses() {
+        let tp = BlockPool::new(dims(), 8, None);
+        let dp = BlockPool::new(dims(), 8, None);
+        let mut cache = PrefixCache::new(&tp, &dp);
+        let tokens = toks(16, 1);
+        let (t, d) = (committed_lane(&tp, &tokens, 0.0), committed_lane(&dp, &tokens, 0.5));
+        cache.insert(&tokens, &t, &d);
+        let mut wt = KvCache::paged(&tp);
+        let mut wd = KvCache::paged(&dp);
+        assert_eq!(cache.match_into(&tokens[..5], &mut wt, &mut wd), 0, "needs a whole block");
+        let c = cache.counters();
+        assert_eq!(c.lookups, 1);
+        assert_eq!(c.hits, 0);
+        assert_eq!(c.lookups - c.hits, 1, "misses derive from lookups - hits");
+    }
+
+    #[test]
+    fn contiguous_lanes_skip_gracefully() {
+        let tp = BlockPool::new(dims(), 4, None);
+        let dp = BlockPool::new(dims(), 4, None);
+        let mut cache = PrefixCache::new(&tp, &dp);
+        let mut ct = KvCache::new(dims());
+        let mut cd = KvCache::new(dims());
+        assert_eq!(cache.match_into(&toks(8, 0), &mut ct, &mut cd), 0);
+        let c = cache.counters();
+        assert_eq!(c.skipped_contiguous, 1);
+        assert_eq!(c.lookups, 0, "skips are not lookups");
+    }
+
+    #[test]
+    fn reclaim_evicts_lru_unreferenced_runs_only() {
+        let tp = BlockPool::new(dims(), 4, None);
+        let dp = BlockPool::new(dims(), 4, None);
+        let mut cache = PrefixCache::new(&tp, &dp);
+        let a = toks(8, 11);
+        let b = toks(8, 200); // distinct first block → sibling leaf
+        let (ta, da) = (committed_lane(&tp, &a, 1.0), committed_lane(&dp, &a, 2.0));
+        let (tb, db) = (committed_lane(&tp, &b, 1.0), committed_lane(&dp, &b, 2.0));
+        cache.insert(&a, &ta, &da);
+        cache.insert(&b, &tb, &db);
+        // lanes still hold every block: nothing reclaimable
+        assert_eq!(cache.reclaimable_pairs(), 0);
+        assert_eq!(cache.reclaim(4), 0);
+        drop((ta, da)); // a's run becomes cache-only
+        assert_eq!(cache.reclaimable_pairs(), 2);
+        // touch b so a is the LRU leaf, then free one pair: a's tail block
+        let mut wt = KvCache::paged(&tp);
+        let mut wd = KvCache::paged(&dp);
+        cache.match_into(&b, &mut wt, &mut wd);
+        let live_before = tp.live_blocks();
+        assert_eq!(cache.reclaim(1), 1);
+        assert_eq!(tp.live_blocks(), live_before - 1);
+        assert_eq!(cache.cached_pairs(), 3);
+        // a still matches its first (surviving) block
+        let mut xt = KvCache::paged(&tp);
+        let mut xd = KvCache::paged(&dp);
+        assert_eq!(cache.match_into(&a, &mut xt, &mut xd), 4);
+        // drain everything reclaimable
+        drop((wt, wd, xt, xd, tb, db));
+        let freed = cache.reclaim(usize::MAX);
+        assert_eq!(freed, 3);
+        assert_eq!(cache.cached_pairs(), 0);
+        assert_eq!(tp.live_blocks(), 0);
+        assert_eq!(dp.live_blocks(), 0);
+        let c = cache.counters();
+        assert_eq!(c.evicted_blocks, 8);
+        assert_eq!(c.reclaimed_under_pressure, 8);
+        tp.validate().unwrap();
+        dp.validate().unwrap();
+    }
+
+    #[test]
+    fn repeated_insert_keeps_existing_runs() {
+        let tp = BlockPool::new(dims(), 4, None);
+        let dp = BlockPool::new(dims(), 4, None);
+        let mut cache = PrefixCache::new(&tp, &dp);
+        let tokens = toks(12, 5);
+        let (t1, d1) = (committed_lane(&tp, &tokens, 3.0), committed_lane(&dp, &tokens, 4.0));
+        assert_eq!(cache.insert(&tokens, &t1, &d1), 12);
+        let live = tp.live_blocks();
+        let (t2, d2) = (committed_lane(&tp, &tokens, 3.0), committed_lane(&dp, &tokens, 4.0));
+        assert_eq!(cache.insert(&tokens, &t2, &d2), 0, "fully cached prefix stores nothing");
+        assert_eq!(cache.cached_pairs(), 3);
+        assert_eq!(cache.counters().inserted_runs, 1);
+        drop((t2, d2));
+        assert_eq!(tp.live_blocks(), live, "duplicate insert leaks no references");
+        drop((t1, d1));
+        drop(cache);
+        assert_eq!(tp.live_blocks(), 0);
+        tp.validate().unwrap();
+    }
+}

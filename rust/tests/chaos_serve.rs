@@ -179,6 +179,7 @@ fn chaos_sweep_streams_bit_identical_and_faults_accounted() {
                         "{ctx}: a fault was neither retried nor surfaced"
                     );
                     assert_eq!(rc.surfaced, 0, "{ctx}: no lane should exhaust at this rate");
+                    srv.clear_prefix_cache(); // cache-held runs are not leaks
                     if let Some(pools) = srv.spec().kv_pools() {
                         for (role, pool) in [("target", &pools.target), ("draft", &pools.draft)] {
                             pool.validate().unwrap();
@@ -219,6 +220,7 @@ fn block_budget_cap_respected_under_faults() {
         assert_eq!(&o.text, text, "budgeted stream diverged (id {})", o.id);
         assert_eq!(&o.tokens, toks);
     }
+    srv.clear_prefix_cache(); // cache-held runs are not leaks
     let pools = srv.spec().kv_pools().expect("block budget implies paged pools");
     for (role, pool) in [("target", &pools.target), ("draft", &pools.draft)] {
         pool.validate().unwrap();
@@ -267,6 +269,7 @@ fn lane_error_path_leaks_no_blocks() {
     let rc = srv.recovery();
     assert_eq!(rc.retries, 0, "no retries without resilience");
     assert_eq!(rc.surfaced, failed, "every fault must surface on an output");
+    srv.clear_prefix_cache(); // cache-held runs are not leaks
     let pools = srv.spec().kv_pools().expect("paged storage has pools");
     for (role, pool) in [("target", &pools.target), ("draft", &pools.draft)] {
         pool.validate().unwrap();
@@ -462,6 +465,7 @@ fn lane_panic_is_isolated_from_the_batch() {
         }
     }
     assert_eq!(srv.recovery().panics, 1);
+    srv.clear_prefix_cache(); // cache-held runs are not leaks
     let pools = srv.spec().kv_pools().expect("paged storage has pools");
     for (role, pool) in [("target", &pools.target), ("draft", &pools.draft)] {
         pool.validate().unwrap();
@@ -510,6 +514,7 @@ fn fault_free_resilience_is_identity() {
         Default::default(),
         "fault-free run must report zero recovery activity"
     );
+    resil.clear_prefix_cache(); // cache-held runs are not leaks
     let pools = resil.spec().kv_pools().expect("paged storage has pools");
     for (role, pool) in [("target", &pools.target), ("draft", &pools.draft)] {
         pool.validate().unwrap();
@@ -571,6 +576,7 @@ fn scheduler_preserves_fault_invariants_under_preemption() {
         "a fault was neither retried nor surfaced under the scheduler"
     );
     assert_eq!(rc.surfaced, 0, "no lane should exhaust at this rate");
+    srv.clear_prefix_cache(); // cache-held runs are not leaks
     let pools = srv.spec().kv_pools().expect("block budget implies paged pools");
     for (role, pool) in [("target", &pools.target), ("draft", &pools.draft)] {
         pool.validate().unwrap();

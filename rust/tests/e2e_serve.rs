@@ -31,7 +31,7 @@ use std::collections::HashMap;
 
 use common::mc::{check_counts, replay_block_conditionals};
 use specdelay::coordinator::{
-    generate_autoregressive, FixedPolicy, ServeLoop, ServeRequest, SpecEngine,
+    generate_autoregressive, FixedPolicy, SchedConfig, ServeLoop, ServeRequest, SpecEngine,
 };
 use specdelay::dist::{Dist, SamplingConfig};
 use specdelay::draft::Action;
@@ -179,7 +179,9 @@ fn batched_serving_matches_serial_generate() {
                     assert_eq!(o.stats.blocks, *blocks);
                 }
                 // every paged lane retired: its blocks are all back in the
-                // free list, none live
+                // free list, none live (under SPECDELAY_PREFIX_CACHE=1 the
+                // cache legitimately retains runs — flush it first)
+                srv.clear_prefix_cache();
                 if let Some(pools) = srv.spec().kv_pools() {
                     for (role, pool) in
                         [("target", &pools.target), ("draft", &pools.draft)]
@@ -190,6 +192,127 @@ fn batched_serving_matches_serial_generate() {
                             0,
                             "{role} pool leaked blocks (batch {batch} workers {workers})"
                         );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The cross-request prefix cache is a pure latency optimisation: warm
+/// streams must stay bit-identical to the cold serial oracle across
+/// storages, batch sizes, worker counts and both admission modes. The
+/// prompts share a template prefix spanning whole KV blocks, so repeat
+/// admissions deterministically hit the cache whenever any retirement
+/// precedes an admission (batch < number of prompts). Also pins the
+/// satellite contracts: `cached_prefix_rows` plumbing, the
+/// `skipped_contiguous` fallback, counter accounting
+/// (`lookups == hits + misses`, `matched_rows == Σ cached_prefix_rows`)
+/// and zero leaked blocks once the loop — cache included — is dropped.
+#[test]
+fn prefix_cached_serving_is_bit_identical_to_cold() {
+    let backend = CpuRefBackend::new(&CpuModelConfig::tiny(), 4);
+    let sampling = SamplingConfig::new(0.8, 0.95);
+    let verifier = specdelay::verify::verifier("SpecInfer").unwrap();
+    let policy = FixedPolicy(Action::new(2, 2, 2));
+    // 48-char template + BOS = 49 shared tokens = 3 whole blocks of 16
+    let template = "sum table: 1+1=2; 2+2=4; 3+3=6; 4+4=8; 5+5=10;  ";
+    assert_eq!(template.len(), 48);
+    let prompts: Vec<String> = ["12*3= ", "9-4= ", "1,2,3,", "(5+5)/2= ", "0.5*8= ", "77+1= "]
+        .iter()
+        .map(|p| format!("{template}{p}"))
+        .collect();
+    let max_new = 24;
+
+    // serial reference on contiguous storage, cache never in play
+    let spec = SpecEngine::new(&backend, sampling).with_kv_storage(KvStorage::Contiguous);
+    let mut reference = Vec::new();
+    for (id, p) in prompts.iter().enumerate() {
+        let mut rng = Pcg64::new(1234, id as u64);
+        let (text, _stats) =
+            spec.generate(p, max_new, verifier.as_ref(), &policy, &mut rng).unwrap();
+        reference.push(text);
+    }
+
+    for sched in [false, true] {
+        for storage in [KvStorage::Contiguous, KvStorage::Paged] {
+            for batch in [1usize, 3, 8] {
+                for workers in [1usize, 4] {
+                    let ctx = format!(
+                        "sched {sched} storage {storage:?} batch {batch} workers {workers}"
+                    );
+                    let mut srv =
+                        ServeLoop::new(&backend, sampling, verifier.as_ref(), &policy, batch)
+                            .with_workers(workers)
+                            .with_kv_storage(storage)
+                            .with_prefix_cache(true);
+                    srv = if sched {
+                        srv.with_scheduler(SchedConfig {
+                            prefill_chunk: 4,
+                            ..SchedConfig::default()
+                        })
+                    } else {
+                        srv.without_scheduler()
+                    };
+                    for p in &prompts {
+                        srv.submit(ServeRequest::new(p.clone(), max_new, 1234));
+                    }
+                    let outs = srv.run().unwrap();
+                    assert_eq!(outs.len(), prompts.len());
+                    let mut cached_total = 0usize;
+                    for (o, text) in outs.iter().zip(&reference) {
+                        assert!(o.error.is_none(), "lane {} failed ({ctx}): {:?}", o.id, o.error);
+                        assert_eq!(&o.text, text, "warm stream diverged ({ctx}, id {})", o.id);
+                        cached_total += o.cached_prefix_rows;
+                    }
+                    let c = srv.prefix_counters();
+                    match storage {
+                        KvStorage::Contiguous => {
+                            // graceful fallback: every admission counted,
+                            // nothing looked up, nothing adopted
+                            assert_eq!(cached_total, 0, "{ctx}");
+                            assert_eq!(c.lookups, 0, "{ctx}");
+                            assert_eq!(c.skipped_contiguous, prompts.len() as u64, "{ctx}");
+                        }
+                        KvStorage::Paged => {
+                            assert_eq!(c.lookups, prompts.len() as u64, "{ctx}");
+                            assert_eq!(c.skipped_contiguous, 0, "{ctx}");
+                            assert!(c.hits <= c.lookups, "{ctx}");
+                            let misses = c.lookups - c.hits;
+                            assert_eq!(c.hits + misses, c.lookups, "{ctx}");
+                            assert_eq!(
+                                c.matched_rows, cached_total as u64,
+                                "adopted rows must all be attributed ({ctx})"
+                            );
+                            if batch < prompts.len() {
+                                // some admission follows a retirement, so a
+                                // hit on the 3-block template is guaranteed
+                                assert!(c.hits > 0, "{ctx}");
+                                assert!(cached_total >= 48, "{ctx}: cached {cached_total}");
+                            } else {
+                                // every request admitted before any insert
+                                assert_eq!(c.hits, 0, "{ctx}");
+                                assert_eq!(cached_total, 0, "{ctx}");
+                            }
+                            assert!(c.inserted_runs >= 1, "{ctx}");
+                        }
+                    }
+                    // cached blocks are live while the cache holds them;
+                    // dropping the loop (and with it the cache) must hand
+                    // every block back
+                    if let Some(pools) = srv.spec().kv_pools() {
+                        pools.target.validate().unwrap();
+                        pools.draft.validate().unwrap();
+                        let keep = (pools.target.clone(), pools.draft.clone());
+                        drop(srv);
+                        for (role, pool) in [("target", &keep.0), ("draft", &keep.1)] {
+                            pool.validate().unwrap();
+                            assert_eq!(
+                                pool.live_blocks(),
+                                0,
+                                "{role} pool leaked blocks after cache drop ({ctx})"
+                            );
+                        }
                     }
                 }
             }
@@ -234,6 +357,7 @@ fn serve_loop_block_backpressure_queues_and_completes() {
         assert!(o.error.is_none(), "lane {} failed under backpressure: {:?}", o.id, o.error);
         assert_eq!(&o.text, want_text, "capped stream diverged (id {})", o.id);
     }
+    srv.clear_prefix_cache(); // cache-held runs are not leaks
     let pools = srv.spec().kv_pools().expect("block budget implies paged pools");
     for (role, pool) in [("target", &pools.target), ("draft", &pools.draft)] {
         pool.validate().unwrap();

@@ -19,8 +19,15 @@
 //!
 //! The sequence count (default 1000, the acceptance floor) is tunable via
 //! `SPECDELAY_FUZZ_SEQS`.
+//!
+//! A second fuzz layers the cross-request [`PrefixCache`] on top: random
+//! interleavings of lane admission (`match_into` + warm commit of the
+//! uncached tail), retirement `insert`, LRU `reclaim`, `clear` and lane
+//! drops, asserting after every op that warm lanes read bit-identical to a
+//! cold contiguous shadow, that both pools conserve blocks, and that
+//! dropping the cache leaks nothing.
 
-use specdelay::kvcache::{BlockPool, ContiguousKv, KvCache};
+use specdelay::kvcache::{BlockPool, ContiguousKv, KvCache, PrefixCache};
 use specdelay::runtime::ModelDims;
 use specdelay::util::Pcg64;
 
@@ -215,5 +222,186 @@ fn fuzz_alloc_fork_write_retire_against_contiguous_shadow() {
             pool.created(),
             "seq {seq}: free list must hold every created block after drain"
         );
+    }
+}
+
+/// One warm lane plus its cold oracle: the shadows commit every row from
+/// scratch, while the paged pair adopts whatever the cache matched and only
+/// commits the tail.
+struct WarmLane {
+    tokens: Vec<u32>,
+    target: KvCache,
+    draft: KvCache,
+    t_shadow: ContiguousKv,
+    d_shadow: ContiguousKv,
+}
+
+/// Deterministic committed-row content, a pure function of (position,
+/// token, role salt) — the property the real engine's backend consistency
+/// contract provides, and the reason a cached block is interchangeable with
+/// a cold prefill of the same tokens.
+fn role_row(d: &ModelDims, tok: u32, pos: usize, salt: f32) -> (Vec<f32>, Vec<f32>) {
+    let n = d.n_layers * d.n_heads * d.d_head;
+    let k: Vec<f32> =
+        (0..n).map(|e| salt + tok as f32 * 100.0 + (pos * n + e) as f32 * 0.5).collect();
+    let v: Vec<f32> = k.iter().map(|x| -x + salt).collect();
+    (k, v)
+}
+
+/// A token sequence that, most of the time, extends a prefix of an earlier
+/// sequence — so the fuzz actually produces shared prefixes for the cache
+/// to hit, split and evict.
+fn gen_tokens(rng: &mut Pcg64, history: &[Vec<u32>], max_len: usize) -> Vec<u32> {
+    let len = 1 + rand_below(rng, max_len);
+    let mut t: Vec<u32> = Vec::new();
+    if !history.is_empty() && rand_below(rng, 4) > 0 {
+        let src = &history[rand_below(rng, history.len())];
+        t.extend_from_slice(&src[..rand_below(rng, src.len().min(len) + 1)]);
+    }
+    while t.len() < len {
+        t.push(rand_below(rng, 23) as u32);
+    }
+    t
+}
+
+fn check_warm_lane(lane: &WarmLane, d: &ModelDims, ctx: &str) {
+    for pos in 0..lane.tokens.len() {
+        for l in 0..d.n_layers {
+            for hh in 0..d.n_heads {
+                let (pk, pv) = lane.target.read_row(l, hh, pos);
+                let (sk, sv) = lane.t_shadow.row(l, hh, pos);
+                assert_eq!(pk, sk, "{ctx}: warm target K != cold l={l} h={hh} pos={pos}");
+                assert_eq!(pv, sv, "{ctx}: warm target V != cold l={l} h={hh} pos={pos}");
+                let (pk, pv) = lane.draft.read_row(l, hh, pos);
+                let (sk, sv) = lane.d_shadow.row(l, hh, pos);
+                assert_eq!(pk, sk, "{ctx}: warm draft K != cold l={l} h={hh} pos={pos}");
+                assert_eq!(pv, sv, "{ctx}: warm draft V != cold l={l} h={hh} pos={pos}");
+            }
+        }
+    }
+}
+
+/// Random interleavings of prefix-cache ops across lanes sharing two pools.
+/// Every op preserves block conservation in both pools and bitwise equality
+/// of every warm lane with its cold shadow; dropping all lanes leaves the
+/// pools holding exactly the cached pairs, and dropping the cache drains
+/// them to zero.
+#[test]
+fn fuzz_prefix_cache_insert_match_evict_interleavings() {
+    let seqs: usize = std::env::var("SPECDELAY_FUZZ_SEQS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1000);
+    let ops_per_seq = 24usize;
+    let max_lanes = 4usize;
+    let max_len = 20usize;
+
+    for seq in 0..seqs as u64 {
+        let d = if seq % 2 == 0 {
+            ModelDims { n_layers: 1, d_model: 4, n_heads: 2, d_head: 2, vocab: 7, max_seq: 24 }
+        } else {
+            ModelDims { n_layers: 2, d_model: 4, n_heads: 1, d_head: 3, vocab: 7, max_seq: 24 }
+        };
+        let bt = [1usize, 2, 4, 8][(seq % 4) as usize];
+        let tp = BlockPool::new(d, bt, None);
+        let dp = BlockPool::new(d, bt, None);
+        let mut cache = PrefixCache::new(&tp, &dp);
+        let mut rng = Pcg64::new(0xCA5E, seq);
+        let mut lanes: Vec<WarmLane> = Vec::new();
+        let mut history: Vec<Vec<u32>> = Vec::new();
+        let (mut lookups, mut matched_total) = (0u64, 0u64);
+
+        for op in 0..ops_per_seq {
+            let ctx = format!("seq {seq} op {op} (bt {bt})");
+            match rand_below(&mut rng, 8) {
+                // admit a warm lane: match, adopt, commit only the tail
+                0 | 1 | 2 if lanes.len() < max_lanes => {
+                    let tokens = gen_tokens(&mut rng, &history, max_len);
+                    let mut target = KvCache::paged(&tp);
+                    let mut draft = KvCache::paged(&dp);
+                    let matched = cache.match_into(&tokens, &mut target, &mut draft);
+                    lookups += 1;
+                    matched_total += matched as u64;
+                    assert_eq!(matched % bt, 0, "{ctx}: partial-block match");
+                    assert!(matched <= tokens.len(), "{ctx}: matched past the prompt");
+                    let mut t_shadow = ContiguousKv::new(d);
+                    let mut d_shadow = ContiguousKv::new(d);
+                    for (pos, &tok) in tokens.iter().enumerate() {
+                        let (tk, tv) = role_row(&d, tok, pos, 1.0);
+                        let (dk, dv) = role_row(&d, tok, pos, 2.0);
+                        if pos >= matched {
+                            target.commit_row(&tk, &tv, pos);
+                            draft.commit_row(&dk, &dv, pos);
+                        }
+                        t_shadow.commit_row(&tk, &tv, pos);
+                        d_shadow.commit_row(&dk, &dv, pos);
+                    }
+                    history.push(tokens.clone());
+                    lanes.push(WarmLane { tokens, target, draft, t_shadow, d_shadow });
+                }
+                // retire a lane into the cache (then sometimes drop it)
+                3 | 4 if !lanes.is_empty() => {
+                    let li = rand_below(&mut rng, lanes.len());
+                    let lane = &lanes[li];
+                    let plen = rand_below(&mut rng, lane.tokens.len() + 1);
+                    cache.insert(
+                        &lane.tokens[..plen],
+                        lane.target.as_paged().unwrap(),
+                        lane.draft.as_paged().unwrap(),
+                    );
+                    if rand_below(&mut rng, 2) == 0 {
+                        lanes.swap_remove(li);
+                    }
+                }
+                // budget pressure: evict some reclaimable pairs
+                5 => {
+                    let want = rand_below(&mut rng, 5);
+                    let freed = cache.reclaim(want);
+                    assert!(freed <= want, "{ctx}: reclaim overshot");
+                }
+                // full flush
+                6 => cache.clear(),
+                // drop a lane without caching it
+                _ => {
+                    if !lanes.is_empty() {
+                        let li = rand_below(&mut rng, lanes.len());
+                        lanes.swap_remove(li);
+                    }
+                }
+            }
+            tp.validate().unwrap_or_else(|e| panic!("{ctx}: target {e}"));
+            dp.validate().unwrap_or_else(|e| panic!("{ctx}: draft {e}"));
+            assert!(
+                cache.reclaimable_pairs() <= cache.cached_pairs(),
+                "{ctx}: reclaimable exceeds cached"
+            );
+            for lane in &lanes {
+                check_warm_lane(lane, &d, &ctx);
+            }
+        }
+
+        let c = cache.counters();
+        assert_eq!(c.lookups, lookups, "seq {seq}: every paged admission is a lookup");
+        assert_eq!(c.matched_rows, matched_total, "seq {seq}: adopted rows all accounted");
+        assert!(c.hits <= c.lookups, "seq {seq}: hits bounded by lookups");
+
+        // dropping every lane leaves exactly the cached pairs live...
+        lanes.clear();
+        tp.validate().unwrap_or_else(|e| panic!("seq {seq} post-lanes: {e}"));
+        dp.validate().unwrap_or_else(|e| panic!("seq {seq} post-lanes: {e}"));
+        let pairs = cache.cached_pairs();
+        assert_eq!(tp.live_blocks(), pairs, "seq {seq}: target live != cached pairs");
+        assert_eq!(dp.live_blocks(), pairs, "seq {seq}: draft live != cached pairs");
+        // ...and dropping the cache drains both pools to zero
+        drop(cache);
+        for (role, pool) in [("target", &tp), ("draft", &dp)] {
+            pool.validate().unwrap_or_else(|e| panic!("seq {seq} {role} post-cache: {e}"));
+            assert_eq!(pool.live_blocks(), 0, "seq {seq}: {role} blocks leaked by the cache");
+            assert_eq!(
+                pool.free_blocks(),
+                pool.created(),
+                "seq {seq}: {role} free list incomplete after cache drop"
+            );
+        }
     }
 }
