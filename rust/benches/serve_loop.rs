@@ -8,6 +8,14 @@
 //! the numbers always describe the deterministic configuration the tests
 //! validate.
 //!
+//! A second section benches the online dynamic selector
+//! ([`ServeLoop::with_selector`] over [`SelectorConfig::with_default_arms`])
+//! against every static (verifier × drafter × action) arm served
+//! standalone: the selector's streams are equality-asserted against a
+//! serial selector replay before timing, and the report carries
+//! `block_efficiency_selector` vs `block_efficiency_best_static` plus
+//! per-arm and per-drafter block counts.
+//!
 //! Emits a human-readable table and `BENCH_serve_loop.json` at the repo
 //! root (uploaded as a CI artifact). Env knobs: `SERVE_LOOP_REQUESTS`
 //! (default 8), `SERVE_LOOP_MAX_NEW` (default 48), `SERVE_LOOP_VERIFIERS`
@@ -19,8 +27,10 @@ use std::time::Instant;
 
 use specdelay::coordinator::{FixedPolicy, ServeLoop, ServeRequest, SpecEngine};
 use specdelay::dist::SamplingConfig;
-use specdelay::draft::Action;
+use specdelay::draft::{Action, DrafterKind};
 use specdelay::runtime::{Backend, CpuModelConfig, CpuRefBackend};
+use specdelay::selector::{ArmStats, OnlineSelector, SelectorConfig};
+use specdelay::tokenizer;
 use specdelay::util::json::{arr, num, obj, s, Json};
 use specdelay::util::threadpool::default_workers;
 use specdelay::util::Pcg64;
@@ -35,6 +45,38 @@ const PROMPTS: [&str; 4] = [
 
 fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Serial replay of one selector-driven request (the equality oracle for
+/// the batched selector runs — mirrors `tests/selector_serve.rs`).
+fn serial_selector(
+    backend: &CpuRefBackend,
+    sampling: SamplingConfig,
+    config: &SelectorConfig,
+    prompt: &str,
+    max_new: usize,
+    seed: u64,
+    id: u64,
+) -> (String, Vec<ArmStats>) {
+    let sel = OnlineSelector::new(config.clone()).expect("selector config");
+    let spec = SpecEngine::new(backend, sampling);
+    let mut seq = spec.start(prompt).expect("prefill");
+    let mut rng = Pcg64::new(seed, id);
+    let mut sel_rng = Pcg64::new(config.seed, id);
+    let mut tally = vec![ArmStats::default(); config.arms.len()];
+    while !seq.finished && seq.tokens.len() - seq.prompt_len < max_new {
+        let i = {
+            let f = spec.root_features(&mut seq).expect("root features");
+            let feats = f.as_features(&seq, sampling);
+            sel.choose(&feats, &mut sel_rng).expect("active selector")
+        };
+        let arm = &sel.arms()[i];
+        let b = spec
+            .step_drafted(&mut seq, sel.verifier(i), arm.action, arm.drafter, &mut rng)
+            .expect("selector step");
+        tally[i].record(b.tree_nodes.saturating_sub(1), b.accepted, b.emitted);
+    }
+    (tokenizer::decode(&seq.tokens[seq.prompt_len..]), tally)
 }
 
 fn main() {
@@ -120,8 +162,123 @@ fn main() {
         vrows.push((vname.as_str(), obj(vec![("batches", arr(brows))])));
     }
 
+    // ---- dynamic selector vs the best static arm ----
+    let sel_cfg = SelectorConfig::with_default_arms();
+    // serial selector oracle: reference streams + expected priors (untimed)
+    let mut sel_ref = Vec::with_capacity(requests);
+    let mut want_priors = vec![ArmStats::default(); sel_cfg.arms.len()];
+    for id in 0..requests {
+        let (text, tally) = serial_selector(
+            &backend,
+            sampling,
+            &sel_cfg,
+            PROMPTS[id % PROMPTS.len()],
+            max_new,
+            seed,
+            id as u64,
+        );
+        for (w, t) in want_priors.iter_mut().zip(&tally) {
+            w.merge(t);
+        }
+        sel_ref.push(text);
+    }
+
+    // selector-driven batched runs, equality-asserted before timing
+    let fb_verifier = verify::verifier("SpecInfer").expect("verifier");
+    let mut sel_rows: Vec<Json> = Vec::new();
+    let mut sel_tokens = 0usize;
+    let mut sel_blocks = 0usize;
+    for &batch in &batches {
+        let mut srv = ServeLoop::new(&backend, sampling, fb_verifier.as_ref(), &policy, batch)
+            .with_selector(sel_cfg.clone());
+        for id in 0..requests {
+            srv.submit(ServeRequest::new(PROMPTS[id % PROMPTS.len()].to_string(), max_new, seed));
+        }
+        let t0 = Instant::now();
+        let outs = srv.run().expect("selector serve loop");
+        let wall = t0.elapsed().as_secs_f64();
+        assert_eq!(outs.len(), sel_ref.len());
+        for (o, want) in outs.iter().zip(&sel_ref) {
+            assert!(o.error.is_none(), "selector lane {} failed: {:?}", o.id, o.error);
+            assert_eq!(
+                &o.text, want,
+                "selector batch {batch} id {}: batched stream diverged from serial",
+                o.id
+            );
+            equal_output_checks += 1;
+        }
+        assert_eq!(
+            srv.selector_priors().arms,
+            want_priors,
+            "selector batch {batch}: calibrated priors diverged from the serial tallies"
+        );
+        let tokens: usize = outs.iter().map(|o| o.stats.tokens).sum();
+        let blocks: usize = outs.iter().map(|o| o.stats.blocks).sum();
+        sel_tokens = tokens;
+        sel_blocks = blocks;
+        let block_eff = tokens as f64 / blocks.max(1) as f64;
+        let tps = tokens as f64 / wall.max(1e-12);
+        println!(
+            "{:<12} {batch:>6} {tokens:>10} {wall:>12.3} {tps:>12.1} {block_eff:>14.2}",
+            "selector"
+        );
+        sel_rows.push(obj(vec![
+            ("batch", num(batch as f64)),
+            ("tokens", num(tokens as f64)),
+            ("wall_secs", num(wall)),
+            ("tokens_per_sec", num(tps)),
+            ("block_efficiency", num(block_eff)),
+        ]));
+    }
+    let block_eff_selector = sel_tokens as f64 / sel_blocks.max(1) as f64;
+
+    // every selector arm served standalone as a static configuration
+    let mut best_static = f64::MIN;
+    let mut best_static_arm = String::new();
+    let mut drafter_blocks = [0u64; 3];
+    let mut arm_rows: Vec<Json> = Vec::new();
+    for (arm, prior) in sel_cfg.arms.iter().zip(&want_priors) {
+        let v = verify::verifier(&arm.verifier).expect("arm verifier");
+        let sp = SpecEngine::new(&backend, sampling).with_drafter(arm.drafter);
+        let pol = FixedPolicy(arm.action);
+        let (mut tokens, mut blocks) = (0usize, 0usize);
+        for id in 0..requests {
+            let mut rng = Pcg64::new(seed, id as u64);
+            let (_text, st) = sp
+                .generate(PROMPTS[id % PROMPTS.len()], max_new, v.as_ref(), &pol, &mut rng)
+                .expect("static arm generate");
+            tokens += st.tokens;
+            blocks += st.blocks;
+        }
+        let be = tokens as f64 / blocks.max(1) as f64;
+        let label = format!(
+            "{}/{} K={} L1={} L2={}",
+            arm.verifier,
+            arm.drafter.name(),
+            arm.action.k,
+            arm.action.l1,
+            arm.action.l2
+        );
+        if be > best_static {
+            best_static = be;
+            best_static_arm = label.clone();
+        }
+        drafter_blocks[arm.drafter.index()] += prior.blocks;
+        arm_rows.push(obj(vec![
+            ("arm", s(&label)),
+            ("static_block_efficiency", num(be)),
+            ("selector_blocks", num(prior.blocks as f64)),
+            ("selector_drafted", num(prior.drafted as f64)),
+            ("selector_accepted", num(prior.accepted as f64)),
+            ("selector_emitted", num(prior.emitted as f64)),
+        ]));
+    }
+    println!(
+        "-- selector block efficiency {block_eff_selector:.3} vs best static {best_static:.3} ({best_static_arm})"
+    );
+
     let report = obj(vec![
-        ("schema", s("serve_loop/v1")),
+        ("schema", s("serve_loop/v2")),
         (
             "config",
             obj(vec![
@@ -141,6 +298,25 @@ fn main() {
         ("equal_output_checks", num(equal_output_checks as f64)),
         ("equal_output_assertion", s("enabled")),
         ("verifiers", obj(vrows)),
+        (
+            "selector",
+            obj(vec![
+                ("epsilon", num(sel_cfg.epsilon as f64)),
+                ("seed", num(sel_cfg.seed as f64)),
+                ("block_efficiency_selector", num(block_eff_selector)),
+                ("block_efficiency_best_static", num(best_static)),
+                ("best_static_arm", s(&best_static_arm)),
+                ("arms", arr(arm_rows)),
+                (
+                    "drafter_blocks",
+                    obj(DrafterKind::ALL
+                        .into_iter()
+                        .map(|k| (k.name(), num(drafter_blocks[k.index()] as f64)))
+                        .collect()),
+                ),
+                ("batches", arr(sel_rows)),
+            ]),
+        ),
     ]);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve_loop.json");
     std::fs::write(path, format!("{}\n", report.to_string_pretty())).expect("write bench json");

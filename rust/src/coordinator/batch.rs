@@ -114,6 +114,25 @@
 //! `benches/serve_sched.rs` measures tail latency against FIFO on a
 //! bursty arrival trace.
 //!
+//! ## Online dynamic selection
+//!
+//! [`ServeLoop::with_selector`] (or `SPECDELAY_SELECTOR=1`) replaces the
+//! static verifier/policy pair with the paper's serving-time dynamic
+//! policy: every speculative tick scores a configured arm set
+//! (verifier × drafter × action) from the lane's live root features
+//! ([`OnlineSelector::choose`]) and runs the winning arm via
+//! [`SpecEngine::step_drafted`]. Decisions draw from a *dedicated*
+//! per-lane rng stream (`Pcg64::new(selector seed, lane id)`), so the
+//! token-sampling stream is never perturbed by policy or seed changes;
+//! both streams are checkpointed and restored together, keeping recovered
+//! streams bit-identical. Acceptance tallies from every served block fold
+//! into per-arm priors in lane order at tick end — worker-count
+//! independent by the same argument as the health fold — and can be fed
+//! back as the next run's [`SelectorConfig::priors`]. A selector with no
+//! arms (the `SPECDELAY_SELECTOR=1` default) is engaged but transparent:
+//! no decisions, no extra rng draws, streams byte-for-byte the static
+//! path. `tests/selector_serve.rs` pins all of this.
+//!
 //! Each tick currently pays one scoped-thread spawn/join round
 //! ([`par_map_init`](crate::util::threadpool::par_map_init)); for model
 //! sizes where a block is sub-millisecond that overhead is visible in
@@ -132,10 +151,12 @@ use anyhow::Result;
 use super::spec::PrefillState;
 use super::{ActionPolicy, GenStats, Sequence, SpecEngine};
 use crate::dist::SamplingConfig;
+use crate::draft::DrafterKind;
 use crate::kvcache::{
     default_block_tokens, prefix_cache_enabled, KvStorage, PrefixCache, PrefixCacheCounters,
 };
 use crate::runtime::{Backend, DispatchFault, FaultKind};
+use crate::selector::{ArmStats, OnlineSelector, SelectorConfig, SelectorPriors};
 use crate::tokenizer;
 use crate::util::threadpool;
 use crate::util::Pcg64;
@@ -500,6 +521,9 @@ pub struct ServeOutput {
 struct Checkpoint {
     seq: Sequence,
     rng: Pcg64,
+    /// Selector-decision stream state. Without an active selector the
+    /// stream never advances, so restoring it is a no-op.
+    sel_rng: Pcg64,
 }
 
 /// An active lane: one admitted request mid-generation. `seq` stays `None`
@@ -513,6 +537,10 @@ struct Lane {
     max_new: usize,
     seq: Option<Sequence>,
     rng: Pcg64,
+    /// Dedicated rng stream for drafter/selector decisions
+    /// (`Pcg64::new(selector seed, id)`), so changing the selection policy
+    /// or its seed never perturbs the token-sampling stream `rng`.
+    sel_rng: Pcg64,
     stats: GenStats,
     started: Instant,
     checkpoint: Option<Checkpoint>,
@@ -644,6 +672,11 @@ struct TickReport {
     chunk: bool,
     /// This tick completed a preempted lane's context rebuild.
     rebuilt: bool,
+    /// Selector-served block: the chosen arm index and the block's
+    /// acceptance tally, folded into the calibration priors in lane order
+    /// at tick end (and naturally discarded on a faulted tick — the retry
+    /// re-tallies exactly once).
+    sel: Option<(usize, ArmStats)>,
 }
 
 /// The batched serving loop (see the module docs).
@@ -675,6 +708,18 @@ pub struct ServeLoop<'a> {
     /// contiguous storage (folded into
     /// [`PrefixCacheCounters::skipped_contiguous`]).
     prefix_skipped: u64,
+    /// Serving-time online selector ([`ServeLoop::with_selector`], env
+    /// knob `SPECDELAY_SELECTOR=1`). `None` — or a selector with no arms —
+    /// leaves the static verifier/policy path byte-for-byte unchanged.
+    selector: Option<OnlineSelector>,
+    /// Seed of the per-lane selector-decision rng streams
+    /// (`Pcg64::new(sel_seed, lane id)`); held even with no selector so
+    /// lanes can always construct the stream.
+    sel_seed: u64,
+    /// Online-calibration tallies observed by this loop's runs, one entry
+    /// per selector arm. Folded in lane order at tick end, so the result
+    /// is identical for every worker count.
+    sel_priors: SelectorPriors,
 }
 
 impl<'a> ServeLoop<'a> {
@@ -693,6 +738,18 @@ impl<'a> ServeLoop<'a> {
             Ok(v) if v == "1" => Some(SchedConfig::default()),
             _ => None,
         };
+        // engage the selector machinery process-wide without touching call
+        // sites (the CI equality rerun flips this); the default config has
+        // no arms, so the engaged selector is transparent — streams match
+        // the static path byte for byte until arms are configured
+        let selector = match std::env::var("SPECDELAY_SELECTOR") {
+            Ok(v) if v == "1" => Some(
+                OnlineSelector::new(SelectorConfig::default())
+                    .expect("default selector config is valid"),
+            ),
+            _ => None,
+        };
+        let sel_seed = SelectorConfig::default().seed;
         let mut sl = ServeLoop {
             spec: SpecEngine::new(engine, sampling),
             verifier,
@@ -711,9 +768,55 @@ impl<'a> ServeLoop<'a> {
             prefix_enabled: prefix_cache_enabled(),
             prefix: None,
             prefix_skipped: 0,
+            selector,
+            sel_seed,
+            sel_priors: SelectorPriors::default(),
         };
         sl.rebuild_prefix();
         sl
+    }
+
+    /// Serve with the online dynamic selector: each lane picks a
+    /// (verifier × drafter × action) arm per block from its live
+    /// [`StepFeatures`](super::StepFeatures), on a dedicated decision rng
+    /// stream seeded from [`SelectorConfig::seed`] and the lane id (token
+    /// sampling rng is never touched). A config with no arms is engaged
+    /// but transparent — streams stay byte-for-byte the static path.
+    /// Acceptance tallies are calibrated online into
+    /// [`ServeLoop::selector_priors`], deterministically for every worker
+    /// count. Panics on a config naming an unknown verifier.
+    pub fn with_selector(mut self, cfg: SelectorConfig) -> ServeLoop<'a> {
+        self.sel_seed = cfg.seed;
+        self.sel_priors = SelectorPriors::zeros(cfg.arms.len());
+        self.selector = Some(OnlineSelector::new(cfg).expect("selector config"));
+        self
+    }
+
+    /// Select the drafting policy lanes speculate with on the static path
+    /// (selector arms carry their own drafter). Survives the engine
+    /// rebuilds of [`ServeLoop::with_kv_storage`] and
+    /// [`ServeLoop::with_block_budget`].
+    pub fn with_drafter(mut self, kind: DrafterKind) -> ServeLoop<'a> {
+        self.spec.set_drafter(kind);
+        self
+    }
+
+    /// The online selector, when one is configured.
+    pub fn selector(&self) -> Option<&OnlineSelector> {
+        self.selector.as_ref()
+    }
+
+    /// Whether an *active* selector (configured with at least one arm) is
+    /// driving the lanes.
+    pub fn selector_active(&self) -> bool {
+        self.selector.as_ref().is_some_and(|s| s.is_active())
+    }
+
+    /// Online-calibration tallies accumulated by this loop's runs, one
+    /// [`ArmStats`] per selector arm (empty with no selector). Feed them
+    /// back as [`SelectorConfig::priors`] to warm-start the next run.
+    pub fn selector_priors(&self) -> &SelectorPriors {
+        &self.sel_priors
     }
 
     /// Enable the preemptive priority scheduler (chunked prefill,
@@ -746,8 +849,9 @@ impl<'a> ServeLoop<'a> {
     /// streams do not depend on the storage — paged is bit-identical to
     /// the contiguous oracle.
     pub fn with_kv_storage(mut self, storage: KvStorage) -> ServeLoop<'a> {
-        self.spec =
-            SpecEngine::new(self.spec.engine, self.spec.sampling).with_kv_storage(storage);
+        self.spec = SpecEngine::new(self.spec.engine, self.spec.sampling)
+            .with_kv_storage(storage)
+            .with_drafter(self.spec.drafter());
         self.budget = None;
         self.requested_blocks = None;
         self.rebuild_prefix();
@@ -802,7 +906,8 @@ impl<'a> ServeLoop<'a> {
             factor * (meta.draft.max_seq.div_ceil(bt) + max_trunk.div_ceil(bt) + 1);
         let cap = blocks.max(worst_target).max(worst_draft);
         self.spec = SpecEngine::new(self.spec.engine, self.spec.sampling)
-            .with_paged_kv(bt, Some(cap));
+            .with_paged_kv(bt, Some(cap))
+            .with_drafter(self.spec.drafter());
         self.budget =
             Some(LaneBudget { bt, factor, max_trunk, overshoot, worst_target, worst_draft, cap });
         self.rebuild_prefix();
@@ -1357,6 +1462,7 @@ impl<'a> ServeLoop<'a> {
                     max_new: req.max_new,
                     seq: None,
                     rng: Pcg64::new(req.seed, id),
+                    sel_rng: Pcg64::new(self.sel_seed, id),
                     stats: GenStats::default(),
                     started: Instant::now(),
                     checkpoint: None,
@@ -1472,6 +1578,7 @@ impl<'a> ServeLoop<'a> {
             let spec = &self.spec;
             let verifier = self.verifier;
             let policy = self.policy;
+            let selector = self.selector.as_ref();
             let chunk = self.sched.as_ref().map(|s| s.prefill_chunk);
             let global_deadline = self.resilience.as_ref().and_then(|r| r.deadline);
             let stepped = threadpool::par_map_init(
@@ -1489,7 +1596,7 @@ impl<'a> ServeLoop<'a> {
                         return (lane, StepOutcome::DeadlinePre);
                     }
                     let res = catch_unwind(AssertUnwindSafe(|| {
-                        lane_tick(spec, verifier, policy, &mut lane, ar, chunk)
+                        lane_tick(spec, verifier, policy, selector, &mut lane, ar, chunk)
                     }));
                     let outcome = match res {
                         Ok(Ok(rep)) => StepOutcome::Progress(rep),
@@ -1562,6 +1669,17 @@ impl<'a> ServeLoop<'a> {
                         if rep.rebuilt {
                             self.counters.rebuilt += 1;
                         }
+                        // online calibration: fold the block's tally into
+                        // the arm's prior. This loop runs in lane order on
+                        // the scheduler thread, so the accumulated priors
+                        // are identical for every worker count (the
+                        // par_map_init contract: results index-addressed,
+                        // never schedule-ordered).
+                        if let Some((arm, delta)) = rep.sel {
+                            if let Some(s) = self.sel_priors.arms.get_mut(arm) {
+                                s.merge(&delta);
+                            }
+                        }
                         // never checkpoint a half-built cache: a lane
                         // mid-prefill or mid-rebuild restores from scratch
                         // instead (its stream is deterministic either way)
@@ -1570,8 +1688,11 @@ impl<'a> ServeLoop<'a> {
                             && !lane.needs_rebuild
                         {
                             if let Some(seq) = &lane.seq {
-                                lane.checkpoint =
-                                    Some(Checkpoint { seq: seq.clone(), rng: lane.rng.clone() });
+                                lane.checkpoint = Some(Checkpoint {
+                                    seq: seq.clone(),
+                                    rng: lane.rng.clone(),
+                                    sel_rng: lane.sel_rng.clone(),
+                                });
                             }
                         }
                         // emission trace: TTFT and the per-tick series the
@@ -1648,6 +1769,7 @@ impl<'a> ServeLoop<'a> {
                             Some(cp) => {
                                 lane.seq = Some(cp.seq.clone());
                                 lane.rng = cp.rng.clone();
+                                lane.sel_rng = cp.sel_rng.clone();
                             }
                             None => {
                                 // full restart (also the only fault path
@@ -1658,6 +1780,7 @@ impl<'a> ServeLoop<'a> {
                                 // re-emits the identical tokens
                                 lane.seq = None;
                                 lane.rng = Pcg64::new(lane.seed, lane.id);
+                                lane.sel_rng = Pcg64::new(self.sel_seed, lane.id);
                                 lane.prefill = None;
                                 lane.needs_rebuild = false;
                                 lane.emitted_seen = 0;
@@ -1737,6 +1860,7 @@ fn lane_tick(
     spec: &SpecEngine<'_>,
     verifier: &dyn Verifier,
     policy: &dyn ActionPolicy,
+    selector: Option<&OnlineSelector>,
     lane: &mut Lane,
     ar: bool,
     chunk: Option<usize>,
@@ -1788,6 +1912,24 @@ fn lane_tick(
             if b.emitted > 0 {
                 lane.degraded = true;
             }
+            lane.stats.add_block(&b);
+        } else if let Some(sel) = selector.filter(|s| s.is_active()) {
+            // dynamic selection: score the arms from this root's live
+            // features on the lane's dedicated decision stream, then run
+            // the chosen (verifier × drafter × action) block with the
+            // untouched token-sampling stream. Degraded AR ticks (above)
+            // make no decision and consume no selector rng.
+            let seq = lane.seq.as_mut().expect("lane prefilled before stepping");
+            let i = {
+                let f = spec.root_features(seq)?;
+                let feats = f.as_features(seq, spec.sampling);
+                sel.choose(&feats, &mut lane.sel_rng).expect("active selector has arms")
+            };
+            let arm = &sel.arms()[i];
+            let b = spec.step_drafted(seq, sel.verifier(i), arm.action, arm.drafter, &mut lane.rng)?;
+            let mut delta = ArmStats::default();
+            delta.record(b.tree_nodes.saturating_sub(1), b.accepted, b.emitted);
+            rep.sel = Some((i, delta));
             lane.stats.add_block(&b);
         } else {
             let seq = lane.seq.as_mut().expect("lane prefilled before stepping");

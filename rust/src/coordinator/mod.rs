@@ -14,7 +14,10 @@
 //!   opt-in recovery layer ([`ServeLoop::with_resilience`]): per-lane
 //!   checkpoints with deterministic retry, per-request deadlines, the
 //!   [`ServeError`] failure taxonomy, and a [`BackendHealth`] circuit
-//!   breaker that falls back to lossless autoregressive decoding.
+//!   breaker that falls back to lossless autoregressive decoding. With
+//!   [`ServeLoop::with_selector`] the loop serves the paper's dynamic
+//!   policy: per-block (verifier × drafter × action) selection from live
+//!   [`StepFeatures`], with online-calibrated acceptance priors.
 
 mod batch;
 pub mod server;

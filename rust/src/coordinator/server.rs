@@ -3,9 +3,10 @@
 //! Protocol: one JSON object per line in, one per line out.
 //!   request:  {"prompt": "...", "max_new": 64, "temperature": 0.8,
 //!              "top_p": 1.0, "verifier": "SpecInfer", "k": 2, "l1": 2, "l2": 4,
+//!              "drafter": "delayed|root|greedy",
 //!              "priority": "high|normal|low", "deadline_ms": 250}
 //!   response: {"text": "...", "tokens": n, "blocks": m, "tps": x,
-//!              "block_efficiency": y, "priority": "...",
+//!              "block_efficiency": y, "priority": "...", "drafter": "...",
 //!              "cached_prefix_rows": r (prompt rows adopted from the
 //!              cross-request prefix cache; 0 when cold or disabled),
 //!              "deadline_exceeded": bool (only when deadline_ms was set)}
@@ -19,11 +20,16 @@
 //! partial stream with `deadline_exceeded: true` within one block of the
 //! limit instead of running to `max_new`.
 //!
+//! `drafter` picks the tree-shaping policy per request
+//! ([`crate::draft::DrafterKind`], default `delayed`); every kind is
+//! lossless, and the choice is echoed in the reply.
+//!
 //! A `{"stats": true}` line returns queue depths per priority class and
 //! per-class served counts instead of generating — the lightweight
 //! health/load probe:
 //!   {"queued": {"high": 0, "normal": 0, "low": 0}, "active": 0,
 //!    "served": {"high": h, "normal": n, "low": l},
+//!    "drafter_blocks": {"delayed": d, "root": r, "greedy": g},
 //!    "prefix_cache": {"lookups": ..., "hits": ..., "matched_rows": ...,
 //!    "inserted_runs": ..., "evicted_blocks": ...,
 //!    "reclaimed_under_pressure": ..., "skipped_contiguous": ...}}
@@ -62,7 +68,7 @@ use anyhow::Result;
 
 use crate::coordinator::{FixedPolicy, GenStats, KvPools, Priority, SpecEngine};
 use crate::dist::SamplingConfig;
-use crate::draft::Action;
+use crate::draft::{Action, DrafterKind};
 use crate::kvcache::{prefix_cache_enabled, KvStorage, PrefixCache};
 use crate::runtime::Backend;
 use crate::tokenizer;
@@ -76,6 +82,9 @@ use crate::verify;
 pub struct ServeStats {
     /// Requests generated to completion, per [`Priority::index`] class.
     pub served: [u64; 3],
+    /// Speculation blocks run, per [`DrafterKind::index`] — which drafting
+    /// policies this process's traffic actually exercised.
+    pub drafter_blocks: [u64; 3],
     /// Requests that wanted the prefix cache but ran without one because
     /// the process uses contiguous KV storage (folded into the stats
     /// reply's `skipped_contiguous`).
@@ -350,6 +359,13 @@ fn stats_reply(stats: &ServeStats, warm: &Option<WarmState>) -> Json {
         ("active", num(0.0)),
         ("served", class([stats.served[0] as f64, stats.served[1] as f64, stats.served[2] as f64])),
         (
+            "drafter_blocks",
+            obj(DrafterKind::ALL
+                .into_iter()
+                .map(|k| (k.name(), num(stats.drafter_blocks[k.index()] as f64)))
+                .collect()),
+        ),
+        (
             "prefix_cache",
             obj(vec![
                 ("lookups", num(c.lookups as f64)),
@@ -390,6 +406,15 @@ fn handle_request(
             return Err(ReqError::new("bad_params", "priority must be a string"));
         }
     };
+    let drafter = match req.get("drafter").ok().map(|d| d.as_str().map(|v| v.to_string())) {
+        None => DrafterKind::default(),
+        Some(Some(name)) => DrafterKind::parse(&name).ok_or_else(|| {
+            ReqError::new("bad_params", format!("drafter must be delayed|root|greedy, got {name}"))
+        })?,
+        Some(None) => {
+            return Err(ReqError::new("bad_params", "drafter must be a string"));
+        }
+    };
     let temperature = num_param(&req, "temperature", 1.0, 0.0, 16.0)? as f32;
     let top_p = num_param(&req, "top_p", 1.0, 0.0, 1.0)? as f32;
     if top_p <= 0.0 {
@@ -415,7 +440,7 @@ fn handle_request(
         (deadline_ms > 0.0).then(|| Duration::from_micros((deadline_ms * 1000.0) as u64));
 
     let gen_err = |e: anyhow::Error| ReqError::new("generation", e.to_string());
-    let mut spec = SpecEngine::new(engine, sampling);
+    let mut spec = SpecEngine::new(engine, sampling).with_drafter(drafter);
     if let Some(w) = warm.as_ref() {
         // share the server-wide pool pair so this request can adopt (and
         // later publish) cached prefix blocks
@@ -468,6 +493,7 @@ fn handle_request(
     }
     let text = tokenizer::decode(&seq.tokens[seq.prompt_len..]);
     stats.served[priority.index()] += 1;
+    stats.drafter_blocks[drafter.index()] += gstats.blocks as u64;
     let mut fields = vec![
         ("text", s(&text)),
         ("tokens", num(gstats.tokens as f64)),
@@ -475,6 +501,7 @@ fn handle_request(
         ("tps", num(gstats.tps())),
         ("block_efficiency", num(gstats.block_efficiency())),
         ("priority", s(priority.name())),
+        ("drafter", s(drafter.name())),
         ("cached_prefix_rows", num(cached_rows as f64)),
     ];
     if deadline.is_some() {
@@ -632,6 +659,46 @@ mod tests {
             let j = request(&b, line);
             assert_eq!(error_kind(&j).as_deref(), Some("bad_params"), "line: {line}");
         }
+    }
+
+    #[test]
+    fn drafter_is_validated_and_echoed() {
+        let b = backend();
+        for name in ["delayed", "root", "greedy"] {
+            let line =
+                format!(r#"{{"prompt": "2+2= ", "max_new": 2, "drafter": "{name}"}}"#);
+            let j = request(&b, &line);
+            assert!(error_kind(&j).is_none(), "{j}");
+            assert_eq!(j.get("drafter").unwrap().as_str(), Some(name));
+            assert!(j.get("tokens").unwrap().as_f64().unwrap() >= 1.0);
+        }
+        // default kind when omitted
+        let j = request(&b, r#"{"prompt": "2+2= ", "max_new": 2}"#);
+        assert_eq!(j.get("drafter").unwrap().as_str(), Some("delayed"));
+        // junk kind and non-string kind are bad_params
+        for line in [
+            r#"{"prompt": "hi", "drafter": "eager"}"#,
+            r#"{"prompt": "hi", "drafter": 1}"#,
+        ] {
+            let j = request(&b, line);
+            assert_eq!(error_kind(&j).as_deref(), Some("bad_params"), "line: {line}");
+        }
+    }
+
+    #[test]
+    fn stats_reply_reports_per_drafter_blocks() {
+        let b = backend();
+        let mut rng = Pcg64::seeded(0);
+        let mut stats = ServeStats::default();
+        let root = r#"{"prompt": "2+2= ", "max_new": 2, "drafter": "root"}"#;
+        let plain = r#"{"prompt": "2+2= ", "max_new": 2}"#;
+        handle_request(&b, root, &mut rng, &mut stats, &mut None).unwrap();
+        handle_request(&b, plain, &mut rng, &mut stats, &mut None).unwrap();
+        let j = handle_request(&b, r#"{"stats": true}"#, &mut rng, &mut stats, &mut None).unwrap();
+        let db = j.get("drafter_blocks").unwrap();
+        assert!(db.get("root").unwrap().as_f64().unwrap() >= 1.0, "{j}");
+        assert!(db.get("delayed").unwrap().as_f64().unwrap() >= 1.0, "{j}");
+        assert_eq!(db.get("greedy").unwrap().as_f64(), Some(0.0), "{j}");
     }
 
     #[test]

@@ -13,7 +13,7 @@ use anyhow::Result;
 
 use super::{ActionPolicy, BlockStats, GenStats, StepFeatures};
 use crate::dist::{DistStorage, NodeDist, SamplingConfig};
-use crate::draft::{accepted_row_extent, draft_delayed, Action, DraftScratch};
+use crate::draft::{accepted_row_extent, Action, Drafted, DrafterKind, DraftScratch};
 use crate::kvcache::{default_block_tokens, BlockPool, KvCache, KvStorage, PrefixCache};
 use crate::runtime::{guard_finite, Backend, FaultOp, Role};
 use crate::tokenizer;
@@ -151,6 +151,8 @@ pub struct SpecEngine<'a> {
     pub sampling: SamplingConfig,
     /// KV storage for sequences created by [`SpecEngine::start`].
     kv: KvContext,
+    /// Drafting policy [`SpecEngine::step`] dispatches through.
+    drafter: DrafterKind,
 }
 
 impl<'a> SpecEngine<'a> {
@@ -159,8 +161,32 @@ impl<'a> SpecEngine<'a> {
     /// engines get fresh uncapped pools — use
     /// [`SpecEngine::with_paged_kv`] to cap them.
     pub fn new(engine: &'a dyn Backend, sampling: SamplingConfig) -> Self {
-        SpecEngine { engine, sampling, kv: KvContext::Contiguous }
-            .with_kv_storage(KvStorage::global())
+        SpecEngine {
+            engine,
+            sampling,
+            kv: KvContext::Contiguous,
+            drafter: DrafterKind::Delayed,
+        }
+        .with_kv_storage(KvStorage::global())
+    }
+
+    /// Select the drafting policy (default [`DrafterKind::Delayed`]).
+    /// Every kind is lossless; [`SpecEngine::step`] shapes actions through
+    /// the selected drafter's geometry.
+    pub fn with_drafter(mut self, kind: DrafterKind) -> Self {
+        self.set_drafter(kind);
+        self
+    }
+
+    /// In-place [`SpecEngine::with_drafter`] (the serving loop re-applies
+    /// the drafter across its engine-rebuilding builders this way).
+    pub fn set_drafter(&mut self, kind: DrafterKind) {
+        self.drafter = kind;
+    }
+
+    /// The active drafting policy.
+    pub fn drafter(&self) -> DrafterKind {
+        self.drafter
     }
 
     /// Select the KV representation explicitly (tests and benches cover
@@ -418,8 +444,9 @@ impl<'a> SpecEngine<'a> {
         seq.root_pos + depth < self.engine.meta().target.max_seq
     }
 
-    /// One speculation block. Returns stats; marks `seq.finished` on EOS or
-    /// length cap.
+    /// One speculation block through the engine's own drafter
+    /// ([`SpecEngine::with_drafter`]). Returns stats; marks `seq.finished`
+    /// on EOS or length cap.
     pub fn step(
         &self,
         seq: &mut Sequence,
@@ -427,9 +454,24 @@ impl<'a> SpecEngine<'a> {
         action: Action,
         rng: &mut Pcg64,
     ) -> Result<BlockStats> {
+        self.step_drafted(seq, verifier, action, self.drafter, rng)
+    }
+
+    /// One speculation block with an explicit drafter — the per-block seam
+    /// the serving-time selector drives, where each block may pick a
+    /// different (verifier × drafter × action) arm. `step` delegates here
+    /// with the engine-level drafter.
+    pub fn step_drafted(
+        &self,
+        seq: &mut Sequence,
+        verifier: &dyn Verifier,
+        action: Action,
+        drafter: DrafterKind,
+        rng: &mut Pcg64,
+    ) -> Result<BlockStats> {
         let meta = self.engine.meta();
-        let max_trunk = meta.trunk_lens.iter().copied().max().unwrap_or(8);
-        let mut a = action.normalized(max_trunk);
+        let dr = drafter.drafter();
+        let mut a = dr.shape(action, &meta);
         if a.l1 == 0 && (a.k <= 1 || a.l2 == 0) {
             // always draft at least one token so the root's draft KV row
             // gets computed (see draft::draft_delayed)
@@ -454,7 +496,7 @@ impl<'a> SpecEngine<'a> {
 
         // --- draft ---
         let t0 = Instant::now();
-        let mut drafted = draft_delayed(
+        let mut drafted = dr.draft(
             self.engine,
             &seq.draft_kv,
             root_token,
@@ -498,7 +540,7 @@ impl<'a> SpecEngine<'a> {
         let verify_secs = t2.elapsed().as_secs_f64();
 
         // --- commit ---
-        self.commit(seq, &tree, &drafted, &out, &verdict.accepted, a)?;
+        self.commit(seq, &tree, &drafted, &out, &verdict.accepted)?;
         let mut emitted: Vec<u32> =
             verdict.accepted.iter().map(|&n| tree.nodes[n].token).collect();
         emitted.push(verdict.correction);
@@ -542,10 +584,9 @@ impl<'a> SpecEngine<'a> {
         &self,
         seq: &mut Sequence,
         tree: &DraftTree,
-        drafted: &crate::draft::Drafted,
+        drafted: &Drafted,
         out: &crate::runtime::TreeOut,
         accepted: &[usize],
-        a: Action,
     ) -> Result<()> {
         // target rows: root + accepted chain
         seq.target_kv
@@ -566,8 +607,10 @@ impl<'a> SpecEngine<'a> {
         }
         if let Some(br) = &drafted.branch {
             // commit the accepted branch's rows; if no branch node was
-            // accepted, still commit step 0 of branch 0 (the trunk-end /
-            // root row lives there)
+            // accepted, still commit step 0 of branch 0 (the branch-start /
+            // root row lives there). Branch rows are based at the rollout's
+            // start position: root_pos + l1 for delayed trees, root_pos
+            // itself when the branches started at the root.
             let (b, s) = branch_ext.unwrap_or((0, 0));
             let last = s.min(br.l.saturating_sub(1));
             seq.draft_kv.commit_rollout_rows(
@@ -577,7 +620,7 @@ impl<'a> SpecEngine<'a> {
                 br.l,
                 b,
                 last,
-                seq.root_pos + a.l1,
+                seq.root_pos + drafted.branch_start,
             );
         }
 
@@ -744,20 +787,27 @@ impl RootFeatures {
 /// rollouts record rows only for nodes they *visited* (a node's row is
 /// produced by the step that sampled its child), so the deepest node of a
 /// trunk-only draft — and a branch node at its rollout's final bucket
-/// position — has none. The trunk end is the exception: when a branch
-/// rollout ran, its step 0 revisits the trunk end and supplies the row.
+/// position — has none. The trunk end is the exception *only in delayed
+/// geometry*: there the branch rollout starts at the trunk end
+/// (`branch_start == l1`) and its step 0 revisits it, supplying the row.
+/// When the branches start at the root (root / greedy drafters) no rollout
+/// revisits a fully-accepted trunk's end, and it back-fills like a
+/// trunk-only draft.
 fn draft_row_missing(
     tree: &DraftTree,
-    drafted: &crate::draft::Drafted,
+    drafted: &Drafted,
     node: usize,
 ) -> bool {
     use crate::tree::Provenance;
     match tree.nodes[node].provenance {
         Provenance::Root => false,
-        Provenance::Trunk { step } => match (&drafted.trunk, &drafted.branch) {
-            (_, Some(_)) => false, // branch rollout step 0 covers the trunk end
-            (Some(tr), None) => step >= tr.l,
-            (None, None) => true,
+        Provenance::Trunk { step } => match &drafted.trunk {
+            Some(tr) => {
+                let branch_covers_end =
+                    drafted.branch.is_some() && drafted.branch_start == tr.l;
+                step >= tr.l && !(branch_covers_end && step == tr.l)
+            }
+            None => true,
         },
         Provenance::Branch { step, .. } => {
             drafted.branch.as_ref().is_none_or(|br| step >= br.l)
@@ -768,7 +818,7 @@ fn draft_row_missing(
 /// Draft hidden state for a tree node, if the rollouts computed one.
 fn draft_hidden_for(
     tree: &DraftTree,
-    drafted: &crate::draft::Drafted,
+    drafted: &Drafted,
     node: usize,
     d_model: usize,
 ) -> Option<Vec<f32>> {
@@ -782,12 +832,17 @@ fn draft_hidden_for(
         Provenance::Trunk { step } => drafted.trunk.as_ref().and_then(|t| {
             if step < t.l {
                 Some(t.hiddens[step * d_model..(step + 1) * d_model].to_vec())
-            } else {
-                // trunk end: branch rollout visited it at step 0
+            } else if drafted.branch_start == t.l {
+                // trunk end in delayed geometry: the branch rollout visited
+                // it at step 0
                 drafted
                     .branch
                     .as_ref()
                     .map(|b| b.hiddens[0..d_model].to_vec())
+            } else {
+                // root-started branches never revisit the trunk end: keep
+                // the previous feature memory (policy features only)
+                None
             }
         }),
         Provenance::Branch { branch, step } => drafted.branch.as_ref().and_then(|b| {

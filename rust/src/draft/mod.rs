@@ -6,12 +6,20 @@
 //! bucketed length, truncated to L2). Root-node i.i.d. multipath (paper
 //! §3.2) is the L1 = 0 special case; single-path drafting is K ≤ 1 or
 //! L2 = 0.
+//!
+//! The [`Drafter`] trait is the seam the serving loop dispatches through:
+//! every implementation shares the same rollout dispatches, the same
+//! [`DraftScratch`] handoff contract, and — critically — the same
+//! losslessness construction (tokens sampled through [`Backend::rollout`]
+//! from rng-consumed uniforms, with the proposal recorded per node via
+//! [`NodeDist::from_probs`]), so only the tree *shape* differs between
+//! drafters and every verifier stays exact over all of them.
 
 use anyhow::Result;
 
 use crate::dist::{DistStorage, NodeDist, SamplingConfig};
 use crate::kvcache::KvCache;
-use crate::runtime::{guard_finite, Backend, FaultOp, RolloutOut};
+use crate::runtime::{guard_finite, Backend, FamilyMeta, FaultOp, RolloutOut};
 use crate::tree::{DraftTree, PathDraws, Provenance};
 use crate::util::Pcg64;
 
@@ -81,20 +89,188 @@ pub struct Drafted {
     pub trunk: Option<RolloutOut>,
     /// Raw branch rollout output (None for single-path actions).
     pub branch: Option<RolloutOut>,
-    /// node index of the trunk end (branch point); root if L1 = 0
+    /// Node index the branches attach to: the trunk end for delayed trees,
+    /// the root for root-branching and greedy trees.
     pub branch_point: usize,
+    /// Offset of the branch rollout's start position past `root_pos`: L1
+    /// for delayed trees, 0 when the branches start at the root. KV
+    /// commits of branch rows are based at `root_pos + branch_start`.
+    pub branch_start: usize,
+}
+
+/// Which drafting policy shapes the tree (CLI `--drafter`, server wire
+/// field `"drafter"`). All kinds are lossless: they share the rollout +
+/// proposal-recording construction and differ only in tree shape.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum DrafterKind {
+    /// Delayed tree expansion (paper Definition 5.2): an L1 trunk, then K
+    /// branches of L2 attached at the trunk end.
+    #[default]
+    Delayed,
+    /// Classic i.i.d. root branching (paper §3.2): K independent paths
+    /// drawn from the root; the requested L1 budget folds into the path
+    /// length.
+    Root,
+    /// Greedy multi-path: one trunk of L1 *and* K branches of L2, all
+    /// starting at the root — the undelayed counterpart of `Delayed` with
+    /// the same node budget.
+    Greedy,
+}
+
+impl DrafterKind {
+    /// Every drafter kind, in CLI order.
+    pub const ALL: [DrafterKind; 3] = [DrafterKind::Delayed, DrafterKind::Root, DrafterKind::Greedy];
+
+    /// Wire/CLI name (`"delayed"` / `"root"` / `"greedy"`).
+    pub fn name(self) -> &'static str {
+        match self {
+            DrafterKind::Delayed => "delayed",
+            DrafterKind::Root => "root",
+            DrafterKind::Greedy => "greedy",
+        }
+    }
+
+    /// Parse a wire/CLI name; `None` for unknown names.
+    pub fn parse(s: &str) -> Option<DrafterKind> {
+        DrafterKind::ALL.into_iter().find(|k| k.name() == s)
+    }
+
+    /// The (stateless) drafter implementing this kind.
+    pub fn drafter(self) -> &'static dyn Drafter {
+        match self {
+            DrafterKind::Delayed => &DelayedDrafter,
+            DrafterKind::Root => &RootDrafter,
+            DrafterKind::Greedy => &GreedyDrafter,
+        }
+    }
+
+    /// Stable index into per-drafter counter arrays (= position in
+    /// [`DrafterKind::ALL`]).
+    pub fn index(self) -> usize {
+        match self {
+            DrafterKind::Delayed => 0,
+            DrafterKind::Root => 1,
+            DrafterKind::Greedy => 2,
+        }
+    }
+}
+
+/// A drafting policy: shapes a requested action onto its own tree geometry
+/// and drafts the tree over the shared [`DraftScratch`]/`KvRef` handoff
+/// contract. Implementations are stateless unit structs dispatched through
+/// [`DrafterKind::drafter`].
+pub trait Drafter: Send + Sync {
+    /// Wire/CLI name of this drafter.
+    fn name(&self) -> &'static str;
+
+    /// Whether branches attach at the root (independent of the trunk)
+    /// rather than at the trunk end.
+    fn branches_at_root(&self) -> bool;
+
+    /// Map a requested (K, L1, L2) action onto this drafter's geometry.
+    /// The result is a fixed point of itself, never drafts deeper than the
+    /// normalized input's `l1 + l2` (the serving loop's context-window
+    /// reservation bound), and always fits the compiled rollout and tree
+    /// buckets.
+    fn shape(&self, action: Action, meta: &FamilyMeta) -> Action;
+
+    /// Draft a tree for an already-[`Drafter::shape`]d action. The default
+    /// body is the shared generalized construction; `shaped` must come
+    /// from this drafter's `shape`.
+    #[allow(clippy::too_many_arguments)]
+    fn draft(
+        &self,
+        engine: &dyn Backend,
+        draft_kv: &KvCache,
+        root_token: u32,
+        root_pos: usize,
+        shaped: Action,
+        sampling: SamplingConfig,
+        scratch: &mut DraftScratch,
+        rng: &mut Pcg64,
+    ) -> Result<Drafted> {
+        draft_tree(
+            engine,
+            draft_kv,
+            root_token,
+            root_pos,
+            shaped,
+            sampling,
+            scratch,
+            rng,
+            self.branches_at_root(),
+        )
+    }
+}
+
+fn max_trunk(meta: &FamilyMeta) -> usize {
+    meta.trunk_lens.iter().copied().max().unwrap_or(8)
+}
+
+/// Delayed tree expansion (the repo's original drafter): trunk from the
+/// root, branches attached at the trunk end, branch rollout run off the
+/// reusable handoff cache.
+pub struct DelayedDrafter;
+
+impl Drafter for DelayedDrafter {
+    fn name(&self) -> &'static str {
+        "delayed"
+    }
+    fn branches_at_root(&self) -> bool {
+        false
+    }
+    fn shape(&self, action: Action, meta: &FamilyMeta) -> Action {
+        action.normalized(max_trunk(meta))
+    }
+}
+
+/// Classic i.i.d. root branching: K independent paths from the root, no
+/// trunk. The requested L1 budget folds into the branch length (clamped to
+/// the longest compiled branch bucket), so a root-shaped action never
+/// exceeds the requested depth or node budget.
+pub struct RootDrafter;
+
+impl Drafter for RootDrafter {
+    fn name(&self) -> &'static str {
+        "root"
+    }
+    fn branches_at_root(&self) -> bool {
+        true
+    }
+    fn shape(&self, action: Action, meta: &FamilyMeta) -> Action {
+        let n = action.normalized(max_trunk(meta));
+        if n.k <= 1 {
+            return n;
+        }
+        let max_branch = meta.branch_lens.iter().copied().max().unwrap_or(8);
+        Action { k: n.k, l1: 0, l2: (n.l1 + n.l2).min(max_branch) }
+    }
+}
+
+/// Greedy multi-path: the normalized delayed action's trunk *and* branches,
+/// but with the branches starting at the root (no delay), so the trunk and
+/// each branch are K+1 independent path draws over the same node budget.
+pub struct GreedyDrafter;
+
+impl Drafter for GreedyDrafter {
+    fn name(&self) -> &'static str {
+        "greedy"
+    }
+    fn branches_at_root(&self) -> bool {
+        true
+    }
+    fn shape(&self, action: Action, meta: &FamilyMeta) -> Action {
+        action.normalized(max_trunk(meta))
+    }
 }
 
 /// Draft a delayed tree from the current draft KV cache by issuing the
 /// fused rollout dispatches on any [`Backend`].
 ///
-/// `root_token` is the last committed token at position `root_pos`; the
-/// draft cache must hold valid rows for positions < root_pos. When the
-/// action has both a trunk and branches, the trunk's freshly drafted KV
-/// rows are committed into `scratch`'s reusable handoff cache before the
-/// branch rollout (the fused rollout only carries its *own* path's rows,
-/// and the branch paths start l1 positions past the committed prefix);
-/// with a warm scratch the handoff allocates nothing.
+/// Back-compat wrapper over [`DelayedDrafter`]: normalizes the action and
+/// runs the shared construction with delayed geometry. `root_token` is the
+/// last committed token at position `root_pos`; the draft cache must hold
+/// valid rows for positions < root_pos.
 #[allow(clippy::too_many_arguments)]
 pub fn draft_delayed(
     engine: &dyn Backend,
@@ -106,9 +282,34 @@ pub fn draft_delayed(
     scratch: &mut DraftScratch,
     rng: &mut Pcg64,
 ) -> Result<Drafted> {
+    let a = DelayedDrafter.shape(action, &engine.meta());
+    DelayedDrafter.draft(engine, draft_kv, root_token, root_pos, a, sampling, scratch, rng)
+}
+
+/// The shared drafting construction behind every [`Drafter`]: at most one
+/// trunk rollout (single path, exact length) plus one branch rollout (K
+/// paths, bucketed length, truncated to L2). With `branch_at_root` false
+/// the branches attach at the trunk end and the trunk's freshly drafted KV
+/// rows are committed into `scratch`'s reusable handoff cache before the
+/// branch rollout (the fused rollout only carries its *own* path's rows,
+/// and the branch paths start l1 positions past the committed prefix) —
+/// with a warm scratch the handoff allocates nothing. With `branch_at_root`
+/// true the branches run off `draft_kv` directly (their prefix is the
+/// committed context, no trunk rows needed) and every path is an
+/// independent draw (`shared_edges` = 0).
+#[allow(clippy::too_many_arguments)]
+fn draft_tree(
+    engine: &dyn Backend,
+    draft_kv: &KvCache,
+    root_token: u32,
+    root_pos: usize,
+    a: Action,
+    sampling: SamplingConfig,
+    scratch: &mut DraftScratch,
+    rng: &mut Pcg64,
+    branch_at_root: bool,
+) -> Result<Drafted> {
     let meta = engine.meta();
-    let max_trunk = meta.trunk_lens.iter().copied().max().unwrap_or(8);
-    let a = action.normalized(max_trunk);
     let v = meta.draft.vocab;
 
     let mut tree = DraftTree::new(root_token);
@@ -139,25 +340,34 @@ pub fn draft_delayed(
         }
         trunk_out = Some(out);
     }
-    let branch_point = node;
+    let trunk_end = node;
+    let (branch_point, branch_start) = if branch_at_root { (0, 0) } else { (trunk_end, a.l1) };
+
+    let mut paths: Vec<Vec<usize>> = Vec::new();
+    if branch_at_root && a.l1 > 0 {
+        // the root-started trunk is its own independent path draw, recorded
+        // ahead of the branch draws (draft order)
+        paths.push(tree.path_nodes(trunk_end));
+    }
 
     // --- branch rollout (K paths, bucketed length) ---
-    let mut paths: Vec<Vec<usize>> = Vec::new();
     if a.k > 1 && a.l2 > 0 {
         let lb = meta.branch_bucket(a.l2)?;
         let start_token = tree.nodes[branch_point].token;
-        let start_pos = root_pos + a.l1;
+        let start_pos = root_pos + branch_start;
         let uniforms: Vec<f32> = (0..a.k * lb).map(|_| rng.next_f32()).collect();
-        // Branch paths start l1 positions past the committed prefix, so the
-        // trunk's rows must be visible to them: refresh the reusable
-        // handoff cache with the committed prefix (for contiguous lanes a
-        // span copy tracking the context length; for paged lanes a
-        // copy-on-write fork — O(blocks) refcount bumps; stale rows past
-        // start_pos are never read) and commit the trunk rollout's rows on
-        // top — the same handoff selector::draft_superset performs for
-        // superset sampling.
+        // Delayed geometry: branch paths start l1 positions past the
+        // committed prefix, so the trunk's rows must be visible to them —
+        // refresh the reusable handoff cache with the committed prefix (for
+        // contiguous lanes a span copy tracking the context length; for
+        // paged lanes a copy-on-write fork — O(blocks) refcount bumps;
+        // stale rows past start_pos are never read) and commit the trunk
+        // rollout's rows on top — the same handoff
+        // selector::draft_superset performs for superset sampling.
+        // Root-started branches need no trunk rows: they read only the
+        // committed prefix, straight off `draft_kv`.
         let branch_kv: &KvCache = match &trunk_out {
-            Some(tr) if a.l1 > 0 => {
+            Some(tr) if !branch_at_root && a.l1 > 0 => {
                 let kv = scratch
                     .branch_kv
                     .get_or_insert_with(|| draft_kv.new_like());
@@ -195,12 +405,13 @@ pub fn draft_delayed(
             paths.push(tree.path_nodes(cur));
         }
         branch_out = Some(out);
-    } else if a.l1 > 0 {
-        paths.push(tree.path_nodes(node));
+    } else if !branch_at_root && a.l1 > 0 {
+        paths.push(tree.path_nodes(trunk_end));
     }
 
-    tree.path_draws = Some(PathDraws { paths, shared_edges: a.l1 });
-    Ok(Drafted { tree, trunk: trunk_out, branch: branch_out, branch_point })
+    let shared_edges = if branch_at_root { 0 } else { a.l1 };
+    tree.path_draws = Some(PathDraws { paths, shared_edges });
+    Ok(Drafted { tree, trunk: trunk_out, branch: branch_out, branch_point, branch_start })
 }
 
 /// KV rows that must be written into the draft cache when the chain of
@@ -243,6 +454,116 @@ mod tests {
         // branching actions clamp the trunk to the longest compiled length
         // (the block-budget reservation relies on this bound)
         assert_eq!(Action::new(2, 40, 1).normalized(8), Action::new(2, 8, 1));
+    }
+
+    fn meta() -> FamilyMeta {
+        use crate::runtime::{CpuModelConfig, CpuRefBackend};
+        CpuRefBackend::new(&CpuModelConfig::tiny(), 1).meta().clone()
+    }
+
+    #[test]
+    fn drafter_kind_roundtrip() {
+        for k in DrafterKind::ALL {
+            assert_eq!(DrafterKind::parse(k.name()), Some(k));
+            assert_eq!(k.drafter().name(), k.name());
+            assert_eq!(DrafterKind::ALL[k.index()], k);
+        }
+        assert_eq!(DrafterKind::parse("bogus"), None);
+        assert_eq!(DrafterKind::default(), DrafterKind::Delayed);
+    }
+
+    #[test]
+    fn drafter_shapes() {
+        let m = meta();
+        let mt = m.trunk_lens.iter().copied().max().unwrap();
+        let mb = m.branch_lens.iter().copied().max().unwrap();
+        let a = Action::new(3, 2, 2);
+        // delayed: plain normalization
+        assert_eq!(DelayedDrafter.shape(a, &m), a.normalized(mt));
+        // root: trunk budget folds into the branch length, capped by the
+        // longest compiled branch bucket
+        assert_eq!(RootDrafter.shape(a, &m), Action::new(3, 0, 4));
+        assert_eq!(RootDrafter.shape(Action::new(2, 8, 8), &m), Action::new(2, 0, mb.min(16)));
+        // single-path requests collapse identically for every drafter
+        let sp = Action::new(1, 3, 2);
+        for k in DrafterKind::ALL {
+            assert_eq!(k.drafter().shape(sp, &m), sp.normalized(mt));
+        }
+        // greedy keeps the delayed node budget, only the geometry differs
+        assert_eq!(GreedyDrafter.shape(a, &m), a.normalized(mt));
+        // every shape is a fixed point of itself (the serving loop shapes
+        // exactly once per block) and respects the depth reservation
+        for k in DrafterKind::ALL {
+            let s = k.drafter().shape(a, &m);
+            assert_eq!(k.drafter().shape(s, &m), s);
+            let n = a.normalized(mt);
+            assert!(s.l1 + s.l2 <= n.l1 + n.l2);
+        }
+    }
+
+    #[test]
+    fn drafted_geometry_per_kind() {
+        use crate::runtime::{CpuModelConfig, CpuRefBackend, Role};
+        let be = CpuRefBackend::new(&CpuModelConfig::tiny(), 3);
+        let m = be.meta();
+        let toks: Vec<i32> = vec![1, 5, 9];
+        let pre = be.prefill(Role::Draft, &toks, toks.len()).unwrap();
+        let mut kv = KvCache::new(be.dims(Role::Draft));
+        kv.commit_prefill(&pre.k_rows, &pre.v_rows, m.s_pre, toks.len());
+        let (root_token, root_pos) = (9u32, 2usize);
+        let req = Action::new(3, 2, 2);
+
+        for kind in DrafterKind::ALL {
+            let d = kind.drafter();
+            let shaped = d.shape(req, &m);
+            let mut scratch = DraftScratch::default();
+            let mut rng = Pcg64::seeded(7);
+            let out = d
+                .draft(
+                    &be,
+                    &kv,
+                    root_token,
+                    root_pos,
+                    shaped,
+                    SamplingConfig::default(),
+                    &mut scratch,
+                    &mut rng,
+                )
+                .unwrap();
+            let draws = out.tree.path_draws.as_ref().unwrap();
+            match kind {
+                DrafterKind::Delayed => {
+                    assert_eq!(out.branch_start, 2);
+                    assert_eq!(out.tree.nodes[out.branch_point].depth, 2);
+                    assert_eq!(draws.shared_edges, 2);
+                    assert_eq!(draws.paths.len(), 3);
+                    assert_eq!(out.tree.max_depth(), 4);
+                }
+                DrafterKind::Root => {
+                    assert!(out.trunk.is_none());
+                    assert_eq!((out.branch_point, out.branch_start), (0, 0));
+                    assert_eq!(draws.shared_edges, 0);
+                    assert_eq!(draws.paths.len(), 3);
+                    assert_eq!(out.tree.max_depth(), 4);
+                }
+                DrafterKind::Greedy => {
+                    assert!(out.trunk.is_some() && out.branch.is_some());
+                    assert_eq!((out.branch_point, out.branch_start), (0, 0));
+                    assert_eq!(draws.shared_edges, 0);
+                    // one trunk draw + K branch draws, trunk recorded first
+                    assert_eq!(draws.paths.len(), 4);
+                    assert_eq!(draws.paths[0].len(), 2);
+                    assert_eq!(out.tree.max_depth(), 2);
+                }
+            }
+            // the losslessness prerequisite: every expanded node carries
+            // the proposal it sampled its children from
+            for n in &out.tree.nodes {
+                if !n.children.is_empty() {
+                    assert!(n.q.is_some(), "{}: expanded node without q", kind.name());
+                }
+            }
+        }
     }
 
     #[test]

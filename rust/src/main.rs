@@ -11,6 +11,11 @@
 //! (`--family <name>`, needs a `--features pjrt` build plus compiled
 //! artifacts).
 //!
+//! Drafting policy: `--drafter delayed|root|greedy` (generate and
+//! serve-loop) picks the tree shape; `--selector` (serve-loop) replaces
+//! the static verifier/action flags with the online dynamic selector over
+//! [`SelectorConfig::with_default_arms`].
+//!
 //! pjrt-only subcommands (need artifacts):
 //!   microbench      per-entry latency model (Eq. 11 inputs)
 //!   collect-traces  offline NDE trace collection
@@ -26,10 +31,11 @@ use anyhow::{anyhow, Result};
 use specdelay::benchkit::{self, experiments, Scale};
 use specdelay::coordinator::{server, FixedPolicy, ServeLoop, ServeRequest, SpecEngine};
 use specdelay::dist::SamplingConfig;
-use specdelay::draft::Action;
+use specdelay::draft::{Action, DrafterKind};
 use specdelay::runtime::{Backend, CpuModelConfig, CpuRefBackend};
 #[cfg(feature = "pjrt")]
 use specdelay::selector::LatencyModel;
+use specdelay::selector::SelectorConfig;
 use specdelay::util::cli::Args;
 use specdelay::util::Pcg64;
 use specdelay::verify;
@@ -68,6 +74,12 @@ fn print_usage() {
         "usage: specdelay <generate|serve|serve-loop|microbench|collect-traces|train-selector|bench|version> [--opts]\n\
          backend: --backend cpu (default, --preset tiny|small) | --backend pjrt (--family <name>)"
     );
+}
+
+/// Resolve `--drafter delayed|root|greedy` (default `delayed`).
+fn parse_drafter(a: &Args) -> Result<DrafterKind> {
+    let name = a.get_or("drafter", "delayed");
+    DrafterKind::parse(name).ok_or_else(|| anyhow!("unknown drafter {name} (delayed|root|greedy)"))
 }
 
 fn cpu_config(a: &Args) -> Result<CpuModelConfig> {
@@ -131,12 +143,14 @@ fn cmd_generate(argv: Vec<String>) -> Result<()> {
         a.get_usize("l1", 2).map_err(|e| anyhow!(e))?,
         a.get_usize("l2", 4).map_err(|e| anyhow!(e))?,
     );
-    let spec = SpecEngine::new(backend.as_ref(), sampling);
+    let drafter = parse_drafter(&a)?;
+    let spec = SpecEngine::new(backend.as_ref(), sampling).with_drafter(drafter);
     let (text, stats) =
         spec.generate(&prompt, max_new, verifier.as_ref(), &FixedPolicy(action), &mut rng)?;
     println!("{text}");
     println!(
-        "-- {vname} on {} (K={},L1={},L2={}): {} tokens, block efficiency {:.2}, {:.2} tok/s",
+        "-- {vname} ({} drafter) on {} (K={},L1={},L2={}): {} tokens, block efficiency {:.2}, {:.2} tok/s",
+        drafter.name(),
         backend.name(),
         action.k,
         action.l1,
@@ -159,7 +173,7 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
 }
 
 fn cmd_serve_loop(argv: Vec<String>) -> Result<()> {
-    let a = Args::parse(argv, &[]).map_err(|e| anyhow!(e))?;
+    let a = Args::parse(argv, &["selector"]).map_err(|e| anyhow!(e))?;
     let backend = load_backend(&a)?;
     let sampling = SamplingConfig::new(
         a.get_f64("temperature", 0.8).map_err(|e| anyhow!(e))? as f32,
@@ -184,7 +198,15 @@ fn cmd_serve_loop(argv: Vec<String>) -> Result<()> {
         "fn add(a, b):",
         "translate en->fr: the sea => ",
     ];
-    let mut srv = ServeLoop::new(backend.as_ref(), sampling, verifier.as_ref(), &policy, batch);
+    let drafter = parse_drafter(&a)?;
+    let mut srv = ServeLoop::new(backend.as_ref(), sampling, verifier.as_ref(), &policy, batch)
+        .with_drafter(drafter);
+    if a.flag("selector") {
+        // dynamic per-block (verifier × drafter × action) selection with
+        // online-calibrated acceptance priors; the static flags above stay
+        // the fallback for degraded/AR ticks
+        srv = srv.with_selector(SelectorConfig::with_default_arms());
+    }
     for i in 0..requests {
         srv.submit(ServeRequest::new(PROMPTS[i % PROMPTS.len()].to_string(), max_new, seed));
     }
@@ -211,6 +233,22 @@ fn cmd_serve_loop(argv: Vec<String>) -> Result<()> {
         backend.name(),
         total as f64 / wall.max(1e-9)
     );
+    if srv.selector_active() {
+        let sel = srv.selector().expect("active selector");
+        for (arm, stats) in sel.arms().iter().zip(&srv.selector_priors().arms) {
+            println!(
+                "-- arm {}/{} (K={},L1={},L2={}): {} blocks, {} drafted, {} accepted",
+                arm.verifier,
+                arm.drafter.name(),
+                arm.action.k,
+                arm.action.l1,
+                arm.action.l2,
+                stats.blocks,
+                stats.drafted,
+                stats.accepted
+            );
+        }
+    }
     Ok(())
 }
 

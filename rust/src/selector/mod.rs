@@ -19,14 +19,14 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::coordinator::{ActionPolicy, SpecEngine, StepFeatures};
 use crate::dist::{DistStorage, NodeDist, SamplingConfig};
-use crate::draft::Action;
+use crate::draft::{Action, DrafterKind};
 use crate::runtime::Backend;
 #[cfg(feature = "pjrt")]
 use crate::runtime::{Engine, Role};
 use crate::tree::{DraftTree, Provenance};
 use crate::util::json::{arr, num, obj, Json};
 use crate::util::{Pcg64, Json as J};
-use crate::verify::OtlpSolver;
+use crate::verify::{OtlpSolver, Verifier};
 use mlp::{softmax, SelectorNet};
 pub use score::{
     expected_by_depth, expected_by_depth_into, score_superset, score_superset_into,
@@ -775,6 +775,290 @@ impl ActionPolicy for NeuralPolicy {
 }
 
 // ---------------------------------------------------------------------------
+// Serving-time online selector
+// ---------------------------------------------------------------------------
+//
+// The offline pipeline above trains a neural policy from superset traces; the
+// types below are the *serving* half of the paper's dynamic-selection story:
+// a small arm set (verifier × drafter × action) scored per block from live
+// [`StepFeatures`], with acceptance-rate priors calibrated online from served
+// traffic. `coordinator::batch::ServeLoop` owns the calibration fold (per-lane
+// tallies merged in lane order at tick end, so results are worker-count
+// independent); the selector itself is a pure function of the features, the
+// frozen input priors, and a dedicated decision rng stream.
+
+/// Minimum drafted-token mass a prior needs before it is blended into the
+/// acceptance-rate estimate (below this the feature-derived α is used alone).
+pub const PRIOR_MIN_DRAFTED: u64 = 64;
+
+/// Documented latency heuristic: relative per-node cost used by
+/// [`OnlineSelector::choose`] to normalize expected emitted tokens
+/// (`score = Ê / (1 + COST_PER_NODE · nodes)`).
+pub const COST_PER_NODE: f64 = 0.02;
+
+/// One candidate the online selector may pick per block: a verifier, a
+/// drafting policy, and the expansion action handed to it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SelectorArm {
+    /// Verifier name, resolvable via [`crate::verify::verifier`].
+    pub verifier: String,
+    /// Drafting policy for this arm.
+    pub drafter: DrafterKind,
+    /// Expansion action (shaped per-family by the drafter at draft time).
+    pub action: Action,
+}
+
+/// Acceptance tallies for one arm, accumulated from served blocks.
+///
+/// Deterministic regardless of worker count: `ServeLoop` folds per-lane
+/// deltas in lane order at tick end, mirroring the `par_map_init` contract.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ArmStats {
+    /// Blocks served with this arm.
+    pub blocks: u64,
+    /// Draft tokens proposed (tree nodes minus the root).
+    pub drafted: u64,
+    /// Draft tokens accepted by verification.
+    pub accepted: u64,
+    /// Tokens emitted (accepted + bonus/correction).
+    pub emitted: u64,
+}
+
+impl ArmStats {
+    /// Fold one served block into the tally.
+    pub fn record(&mut self, drafted: usize, accepted: usize, emitted: usize) {
+        self.blocks += 1;
+        self.drafted += drafted as u64;
+        self.accepted += accepted as u64;
+        self.emitted += emitted as u64;
+    }
+
+    /// Fold another tally into this one (used for the lane-order merge).
+    pub fn merge(&mut self, other: &ArmStats) {
+        self.blocks += other.blocks;
+        self.drafted += other.drafted;
+        self.accepted += other.accepted;
+        self.emitted += other.emitted;
+    }
+
+    /// Observed per-token acceptance rate, or `None` below
+    /// [`PRIOR_MIN_DRAFTED`] drafted tokens.
+    pub fn acceptance_rate(&self) -> Option<f64> {
+        (self.drafted >= PRIOR_MIN_DRAFTED)
+            .then(|| self.accepted as f64 / self.drafted as f64)
+    }
+}
+
+/// Per-arm acceptance priors, index-aligned with [`SelectorConfig::arms`].
+///
+/// Produced by one serve run's online calibration and optionally fed back as
+/// the next run's input priors.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct SelectorPriors {
+    /// One tally per arm, in arm order.
+    pub arms: Vec<ArmStats>,
+}
+
+impl SelectorPriors {
+    /// Empty priors sized for `n` arms.
+    pub fn zeros(n: usize) -> SelectorPriors {
+        SelectorPriors { arms: vec![ArmStats::default(); n] }
+    }
+
+    /// Fold another prior set in, extending to the longer arm count.
+    pub fn merge(&mut self, other: &SelectorPriors) {
+        if self.arms.len() < other.arms.len() {
+            self.arms.resize(other.arms.len(), ArmStats::default());
+        }
+        for (a, b) in self.arms.iter_mut().zip(&other.arms) {
+            a.merge(b);
+        }
+    }
+}
+
+/// Configuration for the serving-time selector.
+#[derive(Clone, Debug)]
+pub struct SelectorConfig {
+    /// Candidate arms; empty means "selector engaged but transparent"
+    /// (no decisions are made and the static path runs unchanged).
+    pub arms: Vec<SelectorArm>,
+    /// Seed for the dedicated per-lane decision rng streams
+    /// (`Pcg64::new(seed, lane_id)`), independent of token sampling rng.
+    pub seed: u64,
+    /// ε-greedy exploration probability in `[0, 1)`; `0` is pure argmax.
+    pub epsilon: f32,
+    /// Optional input priors from a previous run's calibration,
+    /// index-aligned with `arms`.
+    pub priors: Option<SelectorPriors>,
+}
+
+impl Default for SelectorConfig {
+    fn default() -> SelectorConfig {
+        SelectorConfig { arms: Vec::new(), seed: 0x5e1ec7, epsilon: 0.0, priors: None }
+    }
+}
+
+impl SelectorConfig {
+    /// A documented default arm set spanning the three drafters under the
+    /// SpecInfer verifier (used by the CLI `--selector` flag).
+    pub fn with_default_arms() -> SelectorConfig {
+        let arm = |drafter, k, l1, l2| SelectorArm {
+            verifier: "SpecInfer".to_string(),
+            drafter,
+            action: Action::new(k, l1, l2),
+        };
+        SelectorConfig {
+            arms: vec![
+                arm(DrafterKind::Delayed, 1, 4, 0),
+                arm(DrafterKind::Delayed, 2, 2, 2),
+                arm(DrafterKind::Delayed, 3, 2, 2),
+                arm(DrafterKind::Root, 3, 0, 2),
+                arm(DrafterKind::Greedy, 2, 2, 2),
+            ],
+            ..SelectorConfig::default()
+        }
+    }
+}
+
+/// Deterministic closed-form Ê[emitted] for one block under per-token
+/// acceptance probability `alpha`, by drafter shape (paper Eq. 3 specialized
+/// to i.i.d. acceptance; the `+1` is the bonus/correction token).
+///
+/// Chains accept geometrically (`Σ αⁱ`); a k-way branch point is survived
+/// with probability `β = 1 − (1−α)^k` and then continues down one branch.
+/// The drafter's family-specific shaping (bucket clamps) is intentionally
+/// ignored here — this is a scoring model, not the drafted geometry.
+pub fn expected_emitted(a: Action, kind: DrafterKind, alpha: f64) -> f64 {
+    let alpha = alpha.clamp(0.0, 1.0);
+    let chain = |l: usize| -> f64 { (1..=l).map(|i| alpha.powi(i as i32)).sum() };
+    let k = a.k.max(1) as i32;
+    let beta = 1.0 - (1.0 - alpha).powi(k);
+    let branch = |l: usize| -> f64 { (1..=l).map(|j| beta * alpha.powi(j as i32 - 1)).sum() };
+    let single = a.k <= 1 || a.l2 == 0;
+    let e = match kind {
+        DrafterKind::Delayed => {
+            if single {
+                chain(a.l1 + a.l2)
+            } else {
+                chain(a.l1) + alpha.powi(a.l1 as i32) * branch(a.l2)
+            }
+        }
+        DrafterKind::Root => {
+            if single {
+                chain(a.l1 + a.l2)
+            } else {
+                branch(a.l1 + a.l2)
+            }
+        }
+        DrafterKind::Greedy => {
+            if single {
+                chain(a.l1 + a.l2)
+            } else {
+                chain(a.l1).max(branch(a.l2))
+            }
+        }
+    };
+    1.0 + e
+}
+
+/// Draft tree size the arm's drafter actually builds for `a` (before family
+/// shaping), used as the latency proxy in [`OnlineSelector::choose`].
+pub fn arm_nodes(a: Action, kind: DrafterKind) -> usize {
+    let single = a.k <= 1 || a.l2 == 0;
+    match kind {
+        DrafterKind::Root if !single => 1 + a.k * (a.l1 + a.l2),
+        _ => a.nodes(),
+    }
+}
+
+/// The serving-time online selector: scores every arm per block from live
+/// features and (optionally) calibrated priors, with ε-greedy exploration on
+/// a dedicated decision rng stream.
+pub struct OnlineSelector {
+    cfg: SelectorConfig,
+    verifiers: Vec<Box<dyn Verifier>>,
+}
+
+impl OnlineSelector {
+    /// Build a selector, resolving every arm's verifier by name.
+    pub fn new(cfg: SelectorConfig) -> Result<OnlineSelector> {
+        let verifiers = cfg
+            .arms
+            .iter()
+            .map(|a| {
+                crate::verify::verifier(&a.verifier)
+                    .ok_or_else(|| anyhow!("unknown verifier {:?} in selector arm", a.verifier))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(OnlineSelector { cfg, verifiers })
+    }
+
+    /// The configuration this selector was built from.
+    pub fn config(&self) -> &SelectorConfig {
+        &self.cfg
+    }
+
+    /// The candidate arms, in configuration order.
+    pub fn arms(&self) -> &[SelectorArm] {
+        &self.cfg.arms
+    }
+
+    /// The resolved verifier for arm `i`.
+    pub fn verifier(&self, i: usize) -> &dyn Verifier {
+        self.verifiers[i].as_ref()
+    }
+
+    /// Whether the selector actually makes decisions (has any arms).
+    pub fn is_active(&self) -> bool {
+        !self.cfg.arms.is_empty()
+    }
+
+    /// Pick an arm for the next block, or `None` when no arms are configured.
+    ///
+    /// Consumes exactly one rng draw per call (the exploration gate) plus one
+    /// more when exploring, so the stream stays aligned across ε settings on
+    /// non-exploring blocks. The exploit path is a pure function of the
+    /// features and the frozen input priors: the feature-derived acceptance
+    /// estimate `α = clamp(1 − ½·L1(p_prev, q_prev), 0.05, 0.95)` is blended
+    /// 50/50 with an arm's prior acceptance rate once the prior has seen
+    /// [`PRIOR_MIN_DRAFTED`] drafted tokens, and each arm is scored as
+    /// `expected_emitted / (1 + COST_PER_NODE · arm_nodes)` with first-index
+    /// argmax tie-breaking.
+    pub fn choose(&self, f: &StepFeatures<'_>, rng: &mut Pcg64) -> Option<usize> {
+        if self.cfg.arms.is_empty() {
+            return None;
+        }
+        let gate = rng.next_f32();
+        if gate < self.cfg.epsilon {
+            return Some(rng.next_below(self.cfg.arms.len()));
+        }
+        let alpha_feat =
+            (1.0 - 0.5 * NodeDist::l1(f.p_prev, f.q_prev) as f64).clamp(0.05, 0.95);
+        let mut best = 0usize;
+        let mut best_score = f64::MIN;
+        for (i, arm) in self.cfg.arms.iter().enumerate() {
+            let alpha = match self
+                .cfg
+                .priors
+                .as_ref()
+                .and_then(|p| p.arms.get(i))
+                .and_then(|s| s.acceptance_rate())
+            {
+                Some(rate) => 0.5 * (alpha_feat + rate),
+                None => alpha_feat,
+            };
+            let e = expected_emitted(arm.action, arm.drafter, alpha);
+            let score = e / (1.0 + COST_PER_NODE * arm_nodes(arm.action, arm.drafter) as f64);
+            if score > best_score {
+                best_score = score;
+                best = i;
+            }
+        }
+        Some(best)
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Checkpoint (de)serialization
 // ---------------------------------------------------------------------------
 
@@ -918,5 +1202,146 @@ mod tests {
             .forward(&r.hidden_p, &r.hidden_q_prev, &r.hidden_q_cur, &sc);
         let best = (0..n_a).max_by(|&a, &b| logits[a].partial_cmp(&logits[b]).unwrap()).unwrap();
         assert_eq!(best, target_action, "selector picked {:?}", actions[best]);
+    }
+
+    fn feats<'a>(p: &'a NodeDist, q: &'a NodeDist, hidden: &'a [f32]) -> StepFeatures<'a> {
+        StepFeatures {
+            hidden_p_prev: hidden,
+            hidden_q_prev: hidden,
+            hidden_q_cur: hidden,
+            p_prev: p,
+            q_prev: q,
+            q_root: q,
+            ctx_len: 16,
+            sampling: SamplingConfig::default(),
+        }
+    }
+
+    /// Ê[emitted] is monotone in α, rewards branching when α is low on
+    /// delayed trees, and collapses to the chain form for single paths.
+    #[test]
+    fn expected_emitted_shapes() {
+        for kind in DrafterKind::ALL {
+            let a = Action::new(3, 2, 2);
+            let lo = expected_emitted(a, kind, 0.3);
+            let hi = expected_emitted(a, kind, 0.9);
+            assert!(hi > lo, "{kind:?} not monotone in alpha");
+            // single-path collapse: all drafters share the chain form
+            let s = expected_emitted(Action::new(1, 4, 0), kind, 0.5);
+            let expect = 1.0 + 0.5 + 0.25 + 0.125 + 0.0625;
+            assert!((s - expect).abs() < 1e-12, "{kind:?} chain {s}");
+        }
+        // k-way branching beats a single path at the branch point
+        let multi = expected_emitted(Action::new(4, 2, 2), DrafterKind::Delayed, 0.4);
+        let single = expected_emitted(Action::new(1, 2, 2), DrafterKind::Delayed, 0.4);
+        assert!(multi > single);
+        // root drafter spends k× nodes for its resilience
+        assert!(
+            arm_nodes(Action::new(3, 2, 2), DrafterKind::Root)
+                > arm_nodes(Action::new(3, 2, 2), DrafterKind::Delayed)
+        );
+    }
+
+    /// `choose` is deterministic given the same rng state, consumes exactly
+    /// one draw on non-exploring calls, and returns None with no arms.
+    #[test]
+    fn online_selector_choose_deterministic() {
+        let p = NodeDist::from_probs(&[0.5, 0.3, 0.2], DistStorage::Dense);
+        let q = NodeDist::from_probs(&[0.4, 0.4, 0.2], DistStorage::Dense);
+        let hidden = [0.0f32; 4];
+        let f = feats(&p, &q, &hidden);
+
+        let empty = OnlineSelector::new(SelectorConfig::default()).unwrap();
+        assert!(!empty.is_active());
+        assert_eq!(empty.choose(&f, &mut Pcg64::seeded(1)), None);
+
+        let sel = OnlineSelector::new(SelectorConfig::with_default_arms()).unwrap();
+        assert!(sel.is_active());
+        let mut r1 = Pcg64::seeded(9);
+        let mut r2 = Pcg64::seeded(9);
+        let c1 = sel.choose(&f, &mut r1).unwrap();
+        let c2 = sel.choose(&f, &mut r2).unwrap();
+        assert_eq!(c1, c2);
+        // exactly one gating draw consumed: streams stay aligned
+        assert_eq!(r1.next_u64(), r2.next_u64());
+        // unknown verifier is rejected at construction
+        let bad = SelectorConfig {
+            arms: vec![SelectorArm {
+                verifier: "no-such-verifier".into(),
+                drafter: DrafterKind::Delayed,
+                action: Action::new(1, 2, 0),
+            }],
+            ..SelectorConfig::default()
+        };
+        assert!(OnlineSelector::new(bad).is_err());
+    }
+
+    /// A strong prior on one arm shifts the exploit-path decision; ε=1
+    /// explores uniformly over the arm index space.
+    #[test]
+    fn online_selector_priors_and_exploration() {
+        // disjoint supports ⇒ L1 = 2 ⇒ α clamps to 0.05: short chains win
+        let p = NodeDist::from_probs(&[1.0, 0.0, 0.0], DistStorage::Dense);
+        let q = NodeDist::from_probs(&[0.0, 0.0, 1.0], DistStorage::Dense);
+        let hidden = [0.0f32; 4];
+        let f = feats(&p, &q, &hidden);
+        let arm = |drafter, k, l1, l2| SelectorArm {
+            verifier: "SpecInfer".into(),
+            drafter,
+            action: Action::new(k, l1, l2),
+        };
+        let arms =
+            vec![arm(DrafterKind::Delayed, 1, 1, 0), arm(DrafterKind::Delayed, 1, 8, 0)];
+        // divergent p/q ⇒ low α ⇒ the short chain wins without priors
+        let sel = OnlineSelector::new(SelectorConfig {
+            arms: arms.clone(),
+            ..SelectorConfig::default()
+        })
+        .unwrap();
+        assert_eq!(sel.choose(&f, &mut Pcg64::seeded(3)), Some(0));
+        // a near-perfect prior on the long arm flips the decision
+        let mut priors = SelectorPriors::zeros(2);
+        priors.arms[1] =
+            ArmStats { blocks: 100, drafted: 800, accepted: 790, emitted: 890 };
+        let sel = OnlineSelector::new(SelectorConfig {
+            arms: arms.clone(),
+            priors: Some(priors),
+            ..SelectorConfig::default()
+        })
+        .unwrap();
+        assert_eq!(sel.choose(&f, &mut Pcg64::seeded(3)), Some(1));
+        // ε = 1 explores: both arms appear over a few draws
+        let sel = OnlineSelector::new(SelectorConfig {
+            arms,
+            epsilon: 1.0,
+            ..SelectorConfig::default()
+        })
+        .unwrap();
+        let mut rng = Pcg64::seeded(11);
+        let picks: Vec<usize> =
+            (0..16).map(|_| sel.choose(&f, &mut rng).unwrap()).collect();
+        assert!(picks.contains(&0) && picks.contains(&1));
+    }
+
+    /// ArmStats/SelectorPriors merges are order-respecting tallies.
+    #[test]
+    fn selector_priors_merge() {
+        let mut a = ArmStats::default();
+        a.record(4, 3, 4);
+        a.record(4, 2, 3);
+        assert_eq!(a, ArmStats { blocks: 2, drafted: 8, accepted: 5, emitted: 7 });
+        assert_eq!(a.acceptance_rate(), None, "below PRIOR_MIN_DRAFTED");
+        let mut big = ArmStats { blocks: 10, drafted: 100, accepted: 50, emitted: 60 };
+        big.merge(&a);
+        assert_eq!(big, ArmStats { blocks: 12, drafted: 108, accepted: 55, emitted: 67 });
+        assert!((big.acceptance_rate().unwrap() - 55.0 / 108.0).abs() < 1e-12);
+        let mut p = SelectorPriors::zeros(1);
+        p.arms[0] = a;
+        let mut q = SelectorPriors::zeros(2);
+        q.arms[1] = big;
+        p.merge(&q);
+        assert_eq!(p.arms.len(), 2);
+        assert_eq!(p.arms[0], a);
+        assert_eq!(p.arms[1], big);
     }
 }

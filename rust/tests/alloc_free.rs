@@ -10,7 +10,10 @@
 
 mod common;
 
-use common::{allocs, make_topp_tree, make_tree, random_dist, sparsify_tree, CountingAlloc};
+use common::{
+    allocs, make_greedy_tree, make_root_tree, make_topp_tree, make_tree, random_dist,
+    sparsify_tree, CountingAlloc,
+};
 use specdelay::dist::{Dist, SparseDist};
 use specdelay::tree::DraftTree;
 use specdelay::util::Pcg64;
@@ -84,6 +87,43 @@ fn steady_state_verify_is_allocation_free() {
         );
     }
     assert_eq!(allocs() - a0, 0, "Traversal fallback path allocated");
+
+    // ---- root / greedy drafter geometries ----
+    // The same steady-state guarantee over the new drafters' tree shapes:
+    // branches attached at the root, every path an independent draw
+    // (`shared_edges = 0`), with the greedy shape mixing a root-started
+    // trunk path into the draw list.
+    let root_trees: Vec<DraftTree> = (0..16).map(|_| make_root_tree(&mut rng, vocab)).collect();
+    let greedy_trees: Vec<DraftTree> =
+        (0..16).map(|_| make_greedy_tree(&mut rng, vocab)).collect();
+    for (geom, geom_trees) in [("root", &root_trees), ("greedy", &greedy_trees)] {
+        for _ in 0..2 {
+            for (_, ver) in &verifiers {
+                for t in geom_trees {
+                    ver.verify_into(t, &mut rng, &mut scratch, &mut verdict);
+                }
+            }
+        }
+        for (name, ver) in &verifiers {
+            let rounds = 200usize;
+            let a0 = allocs();
+            for i in 0..rounds {
+                ver.verify_into(
+                    &geom_trees[i % geom_trees.len()],
+                    &mut rng,
+                    &mut scratch,
+                    &mut verdict,
+                );
+            }
+            let da = allocs() - a0;
+            assert_eq!(
+                da, 0,
+                "{name} ({geom} drafter geometry): {da} allocations across {rounds} \
+                 steady-state verifies (expected 0)"
+            );
+            assert!(verdict.block_tokens() >= 1);
+        }
+    }
 
     // And the core dist kernels themselves: sampling and scratch residuals.
     let p = random_dist(vocab, &mut rng, 2.0);

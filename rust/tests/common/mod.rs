@@ -133,6 +133,85 @@ pub fn make_tree(rng: &mut Pcg64, v: usize) -> DraftTree {
     make_tree_with(rng, |r| random_dist(v, r, 2.0), |r| random_dist(v, r, 1.0))
 }
 
+/// Root-started tree: an optional trunk of `trunk_len` plus `branches`
+/// branches of `branch_len`, every path attached at the root and recorded
+/// as an independent draw (`shared_edges = 0`) — the geometry the root and
+/// greedy drafters produce.
+fn make_root_started_tree_with(
+    rng: &mut Pcg64,
+    mut gen_p: impl FnMut(&mut Pcg64) -> Dist,
+    mut gen_q: impl FnMut(&mut Pcg64) -> Dist,
+    trunk_len: usize,
+    branches: usize,
+    branch_len: usize,
+) -> DraftTree {
+    let mut t = DraftTree::new(5);
+    let mut paths = Vec::new();
+    // root-started trunk: its own independent path draw, recorded ahead of
+    // the branch draws (draft order, matching the greedy drafter)
+    if trunk_len > 0 {
+        let mut cur = 0;
+        for step in 0..trunk_len {
+            if t.nodes[cur].q.is_none() {
+                t.set_q(cur, gen_q(rng));
+            }
+            let tok = t.nodes[cur].q.as_ref().unwrap().sample(rng) as u32;
+            cur = t.add_child(cur, tok, Provenance::Trunk { step: step + 1 });
+        }
+        paths.push(t.path_nodes(cur));
+    }
+    for b in 0..branches {
+        let mut cur = 0;
+        for step in 0..branch_len {
+            if t.nodes[cur].q.is_none() {
+                t.set_q(cur, gen_q(rng));
+            }
+            let tok = t.nodes[cur].q.as_ref().unwrap().sample(rng) as u32;
+            cur = t.add_child(cur, tok, Provenance::Branch { branch: b, step: step + 1 });
+        }
+        paths.push(t.path_nodes(cur));
+    }
+    for i in 0..t.len() {
+        if t.nodes[i].p.is_none() {
+            t.set_p(i, gen_p(rng));
+        }
+        if t.nodes[i].q.is_none() {
+            let q = gen_q(rng);
+            t.set_q(i, q);
+        }
+    }
+    t.path_draws = Some(PathDraws { paths, shared_edges: 0 });
+    t
+}
+
+/// Classic root-branching workload (the root drafter's geometry for a
+/// shaped (K=3, L1=0, L2=3) action): no trunk, 3 independent branches of
+/// 3 from the root, 9 non-root nodes.
+pub fn make_root_tree(rng: &mut Pcg64, v: usize) -> DraftTree {
+    make_root_started_tree_with(
+        rng,
+        |r| random_dist(v, r, 2.0),
+        |r| random_dist(v, r, 1.0),
+        0,
+        3,
+        3,
+    )
+}
+
+/// Greedy multi-path workload (the greedy drafter's geometry): a
+/// root-started trunk of 2 plus 3 root-started branches of 3 — 4
+/// independent path draws over 11 non-root nodes.
+pub fn make_greedy_tree(rng: &mut Pcg64, v: usize) -> DraftTree {
+    make_root_started_tree_with(
+        rng,
+        |r| random_dist(v, r, 2.0),
+        |r| random_dist(v, r, 1.0),
+        2,
+        3,
+        3,
+    )
+}
+
 /// Truncated-support workload: every p/q runs through top-p, so the sparse
 /// twin ([`sparsify_tree`]) carries genuinely small supports. Dense storage
 /// (the oracle side of the pair).

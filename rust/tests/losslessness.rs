@@ -215,15 +215,16 @@ fn lossless_delayed_tree_all_verifiers_sparse_storage() {
 /// the *real* serving stack instead of synthetic trees: replay
 /// `SpecEngine::step` blocks on the CPU reference backend and test the
 /// first-token counts (and the dominant second-token conditionals)
-/// against the backend's exact target conditionals, for all eight
-/// verifiers under both KV storages. The per-storage tallies must also be
-/// *identical* — the bit-exactness contract of the paged cache means the
-/// statistical pass cannot even in principle diverge between storages.
+/// against the backend's exact target conditionals, for **every drafter**
+/// (delayed, root, greedy) × all eight verifiers under both KV storages.
+/// The per-storage tallies must also be *identical* per drafter — the
+/// bit-exactness contract of the paged cache means the statistical pass
+/// cannot even in principle diverge between storages.
 #[test]
-fn chi_square_block_conditionals_all_verifiers_both_kv_storages() {
+fn chi_square_block_conditionals_all_drafters_verifiers_both_kv_storages() {
     use specdelay::coordinator::SpecEngine;
     use specdelay::dist::SamplingConfig;
-    use specdelay::draft::Action;
+    use specdelay::draft::{Action, DrafterKind};
     use specdelay::kvcache::KvStorage;
     use specdelay::runtime::{Backend, CpuModelConfig, CpuRefBackend, Role};
 
@@ -233,65 +234,73 @@ fn chi_square_block_conditionals_all_verifiers_both_kv_storages() {
     let n = common::mc::mc_samples(800);
     let p_floor = 1e-6;
 
-    // one tally set per storage: [verifier][storage]
-    let mut per_storage: Vec<Vec<common::mc::BlockConditionals>> = Vec::new();
-    for storage in [KvStorage::Contiguous, KvStorage::Paged] {
-        let spec = SpecEngine::new(&backend, sampling).with_kv_storage(storage);
-        let base = spec.start("7+5= ").unwrap();
-        // exact first-token conditional p(.|prompt)
-        let toks_i32: Vec<i32> = base.tokens.iter().map(|&t| t as i32).collect();
-        let pre = backend.prefill(Role::Target, &toks_i32, base.prompt_len).unwrap();
-        let p0 = Dist::from_logits(&pre.logits, sampling);
+    for (di, drafter) in DrafterKind::ALL.into_iter().enumerate() {
+        // one tally set per storage: [verifier][storage]
+        let mut per_storage: Vec<Vec<common::mc::BlockConditionals>> = Vec::new();
+        for storage in [KvStorage::Contiguous, KvStorage::Paged] {
+            let spec = SpecEngine::new(&backend, sampling)
+                .with_kv_storage(storage)
+                .with_drafter(drafter);
+            let base = spec.start("7+5= ").unwrap();
+            // exact first-token conditional p(.|prompt)
+            let toks_i32: Vec<i32> = base.tokens.iter().map(|&t| t as i32).collect();
+            let pre = backend.prefill(Role::Target, &toks_i32, base.prompt_len).unwrap();
+            let p0 = Dist::from_logits(&pre.logits, sampling);
 
-        let mut tallies = Vec::new();
-        for (vi, verifier) in specdelay::verify::all_verifiers().into_iter().enumerate() {
-            let t = common::mc::replay_block_conditionals(
-                &spec,
-                &base,
-                verifier.as_ref(),
-                Action::new(2, 1, 1),
-                v,
-                n,
-                0xC511 + vi as u64,
-            );
-            common::mc::assert_chi_square(
-                &format!("{} first-token ({storage:?})", verifier.name()),
-                &t.first,
-                &p0.0,
-                n,
-                p_floor,
-            );
-            for (t1, c) in &t.second {
-                let total: usize = c.iter().sum();
-                if total < 250 {
-                    continue; // too little conditional mass for a GOF test
-                }
-                let d = backend
-                    .decode(Role::Target, base.target_kv.view(), *t1, base.prompt_len)
-                    .unwrap();
-                let p1 = Dist::from_logits(&d.logits, sampling);
+            let mut tallies = Vec::new();
+            for (vi, verifier) in specdelay::verify::all_verifiers().into_iter().enumerate() {
+                let name = format!("{}/{}", drafter.name(), verifier.name());
+                let t = common::mc::replay_block_conditionals(
+                    &spec,
+                    &base,
+                    verifier.as_ref(),
+                    Action::new(2, 1, 1),
+                    v,
+                    n,
+                    0xC511 + (di * 100 + vi) as u64,
+                );
                 common::mc::assert_chi_square(
-                    &format!("{} second-token|{t1} ({storage:?})", verifier.name()),
-                    c,
-                    &p1.0,
-                    total,
+                    &format!("{name} first-token ({storage:?})"),
+                    &t.first,
+                    &p0.0,
+                    n,
                     p_floor,
                 );
+                for (t1, c) in &t.second {
+                    let total: usize = c.iter().sum();
+                    if total < 250 {
+                        continue; // too little conditional mass for a GOF test
+                    }
+                    let d = backend
+                        .decode(Role::Target, base.target_kv.view(), *t1, base.prompt_len)
+                        .unwrap();
+                    let p1 = Dist::from_logits(&d.logits, sampling);
+                    common::mc::assert_chi_square(
+                        &format!("{name} second-token|{t1} ({storage:?})"),
+                        c,
+                        &p1.0,
+                        total,
+                        p_floor,
+                    );
+                }
+                tallies.push(t);
             }
-            tallies.push(t);
+            per_storage.push(tallies);
         }
-        per_storage.push(tallies);
-    }
 
-    // bit-exactness: identical seeds + bit-identical storages ⇒ identical
-    // emitted streams ⇒ identical tallies
-    let (cont, paged) = (&per_storage[0], &per_storage[1]);
-    for (i, (a, b)) in cont.iter().zip(paged).enumerate() {
-        assert_eq!(a.first, b.first, "verifier #{i}: first-token tallies diverge across storages");
-        assert_eq!(
-            a.second, b.second,
-            "verifier #{i}: second-token tallies diverge across storages"
-        );
+        // bit-exactness: identical seeds + bit-identical storages ⇒
+        // identical emitted streams ⇒ identical tallies
+        let (cont, paged) = (&per_storage[0], &per_storage[1]);
+        for (i, (a, b)) in cont.iter().zip(paged).enumerate() {
+            assert_eq!(
+                a.first, b.first,
+                "{drafter:?} verifier #{i}: first-token tallies diverge across storages"
+            );
+            assert_eq!(
+                a.second, b.second,
+                "{drafter:?} verifier #{i}: second-token tallies diverge across storages"
+            );
+        }
     }
 }
 

@@ -1,0 +1,268 @@
+//! Serving-time online-selector validation: the dynamic
+//! (verifier × drafter × action) policy wired into `ServeLoop` must keep
+//! every determinism contract the static path has, and its online
+//! calibration must be worker-count independent.
+//!
+//! * **Oracle equality** — selector-driven `ServeLoop` streams are
+//!   bit-identical across batch sizes, worker counts, KV storages and
+//!   FIFO/scheduler modes, and identical to a serial replay of the same
+//!   per-request rng streams (`Pcg64::new(seed, id)` for tokens,
+//!   `Pcg64::new(selector seed, id)` for decisions).
+//! * **Calibration determinism** — per-arm acceptance priors folded from
+//!   served traffic equal the serial tallies for every worker count.
+//! * **Transparency** — a selector with no arms (the `SPECDELAY_SELECTOR=1`
+//!   default config) serves byte-for-byte the legacy static path.
+//! * **Rng decoupling** — drafter/selector decisions draw from their own
+//!   stream: changing only the selector seed never perturbs token streams
+//!   (the regression for the rng-stream coupling hazard).
+
+use specdelay::coordinator::{FixedPolicy, SchedConfig, ServeLoop, ServeRequest, SpecEngine};
+use specdelay::dist::SamplingConfig;
+use specdelay::draft::{Action, DrafterKind};
+use specdelay::kvcache::KvStorage;
+use specdelay::runtime::{CpuModelConfig, CpuRefBackend};
+use specdelay::selector::{ArmStats, OnlineSelector, SelectorArm, SelectorConfig};
+use specdelay::tokenizer;
+use specdelay::util::Pcg64;
+
+const PROMPTS: [&str; 6] = ["12*3= ", "9-4= ", "1,2,3,", "(5+5)/2= ", "0.5*8= ", "77+1= "];
+const MAX_NEW: usize = 20;
+const SEED: u64 = 1234;
+
+/// An arm set spanning all three drafters and two verifiers.
+fn arms() -> Vec<SelectorArm> {
+    let arm = |verifier: &str, drafter, k, l1, l2| SelectorArm {
+        verifier: verifier.to_string(),
+        drafter,
+        action: Action::new(k, l1, l2),
+    };
+    vec![
+        arm("SpecInfer", DrafterKind::Delayed, 2, 2, 2),
+        arm("Traversal", DrafterKind::Root, 3, 0, 2),
+        arm("SpecInfer", DrafterKind::Greedy, 2, 2, 2),
+        arm("Traversal", DrafterKind::Delayed, 1, 4, 0),
+    ]
+}
+
+fn cfg(epsilon: f32, seed: u64) -> SelectorConfig {
+    SelectorConfig { arms: arms(), seed, epsilon, ..SelectorConfig::default() }
+}
+
+/// Serial replay of one selector-driven lane through the public API —
+/// the oracle every `ServeLoop` configuration must match bit-for-bit.
+/// Returns the decoded stream and the per-arm acceptance tallies.
+fn serial_selector_oracle(
+    backend: &CpuRefBackend,
+    sampling: SamplingConfig,
+    config: &SelectorConfig,
+    storage: KvStorage,
+    prompt: &str,
+    id: u64,
+) -> (String, Vec<ArmStats>) {
+    let sel = OnlineSelector::new(config.clone()).unwrap();
+    let spec = SpecEngine::new(backend, sampling).with_kv_storage(storage);
+    let mut seq = spec.start(prompt).unwrap();
+    let mut rng = Pcg64::new(SEED, id);
+    let mut sel_rng = Pcg64::new(config.seed, id);
+    let mut tally = vec![ArmStats::default(); config.arms.len()];
+    while !seq.finished && seq.tokens.len() - seq.prompt_len < MAX_NEW {
+        let i = {
+            let f = spec.root_features(&mut seq).unwrap();
+            let feats = f.as_features(&seq, sampling);
+            sel.choose(&feats, &mut sel_rng).unwrap()
+        };
+        let arm = &sel.arms()[i];
+        let b = spec
+            .step_drafted(&mut seq, sel.verifier(i), arm.action, arm.drafter, &mut rng)
+            .unwrap();
+        tally[i].record(b.tree_nodes.saturating_sub(1), b.accepted, b.emitted);
+    }
+    (tokenizer::decode(&seq.tokens[seq.prompt_len..]), tally)
+}
+
+/// Selector-driven streams are bit-identical across batch {1,3,8} ×
+/// workers {1,4} × both KV storages × FIFO/scheduler modes, and equal to
+/// the serial oracle; the online-calibrated priors equal the summed
+/// serial tallies in every configuration (so they are independent of
+/// batching, workers, storage and scheduling — not just worker count).
+#[test]
+fn selector_streams_and_priors_match_serial_oracle() {
+    let backend = CpuRefBackend::new(&CpuModelConfig::tiny(), 4);
+    let sampling = SamplingConfig::new(0.8, 0.95);
+    // static fallbacks the selector path must never consult
+    let verifier = specdelay::verify::verifier("BV").unwrap();
+    let policy = FixedPolicy(Action::new(1, 1, 0));
+    let config = cfg(0.25, 0x5e1ec7);
+
+    for storage in [KvStorage::Contiguous, KvStorage::Paged] {
+        // oracle per request id + accumulated expected priors
+        let mut reference = Vec::new();
+        let mut want_priors = vec![ArmStats::default(); config.arms.len()];
+        for (id, p) in PROMPTS.iter().enumerate() {
+            let (text, tally) =
+                serial_selector_oracle(&backend, sampling, &config, storage, p, id as u64);
+            for (w, t) in want_priors.iter_mut().zip(&tally) {
+                w.merge(t);
+            }
+            reference.push(text);
+        }
+        assert!(
+            want_priors.iter().map(|a| a.blocks).sum::<u64>() > 0,
+            "oracle served no selector blocks"
+        );
+
+        for sched in [false, true] {
+            for batch in [1usize, 3, 8] {
+                for workers in [1usize, 4] {
+                    let ctx =
+                        format!("storage {storage:?} sched {sched} batch {batch} workers {workers}");
+                    let mut srv =
+                        ServeLoop::new(&backend, sampling, verifier.as_ref(), &policy, batch)
+                            .with_workers(workers)
+                            .with_kv_storage(storage)
+                            .with_selector(config.clone());
+                    srv = if sched {
+                        srv.with_scheduler(SchedConfig {
+                            prefill_chunk: 4,
+                            ..SchedConfig::default()
+                        })
+                    } else {
+                        srv.without_scheduler()
+                    };
+                    assert!(srv.selector_active());
+                    for p in &PROMPTS {
+                        srv.submit(ServeRequest::new(p.to_string(), MAX_NEW, SEED));
+                    }
+                    let outs = srv.run().unwrap();
+                    assert_eq!(outs.len(), PROMPTS.len());
+                    for (o, text) in outs.iter().zip(&reference) {
+                        assert!(o.error.is_none(), "lane {} failed ({ctx}): {:?}", o.id, o.error);
+                        assert_eq!(&o.text, text, "selector stream diverged ({ctx}, id {})", o.id);
+                    }
+                    assert_eq!(
+                        srv.selector_priors().arms,
+                        want_priors,
+                        "calibrated priors diverged from the serial tallies ({ctx})"
+                    );
+                    // every selector block is accounted into exactly one arm
+                    let blocks: u64 = srv.selector_priors().arms.iter().map(|a| a.blocks).sum();
+                    let served: u64 = outs.iter().map(|o| o.stats.blocks as u64).sum();
+                    assert_eq!(blocks, served, "{ctx}");
+                }
+            }
+        }
+    }
+}
+
+/// The explicit worker-count determinism property for the calibration
+/// fold: identical priors for 1 and 4 workers, and non-trivial traffic on
+/// the arm set (the fold actually ran).
+#[test]
+fn selector_calibration_priors_worker_count_independent() {
+    let backend = CpuRefBackend::new(&CpuModelConfig::tiny(), 7);
+    let sampling = SamplingConfig::new(0.7, 1.0);
+    let verifier = specdelay::verify::verifier("BV").unwrap();
+    let policy = FixedPolicy(Action::new(1, 1, 0));
+    let config = cfg(0.25, 9);
+
+    let mut priors = Vec::new();
+    for workers in [1usize, 4] {
+        let mut srv = ServeLoop::new(&backend, sampling, verifier.as_ref(), &policy, 4)
+            .with_workers(workers)
+            .with_selector(config.clone());
+        for p in &PROMPTS {
+            srv.submit(ServeRequest::new(p.to_string(), MAX_NEW, SEED));
+        }
+        let outs = srv.run().unwrap();
+        assert!(outs.iter().all(|o| o.error.is_none()));
+        priors.push(srv.selector_priors().clone());
+    }
+    assert_eq!(priors[0], priors[1], "priors depend on the worker count");
+    let total: u64 = priors[0].arms.iter().map(|a| a.blocks).sum();
+    assert!(total > 0, "no selector traffic was calibrated");
+    assert!(
+        priors[0].arms.iter().map(|a| a.drafted).sum::<u64>() > 0,
+        "no draft tokens tallied"
+    );
+}
+
+/// A selector configured with no arms (the `SPECDELAY_SELECTOR=1` default)
+/// is engaged but transparent: streams, stats and block counts are
+/// byte-for-byte the legacy static path, and nothing is calibrated.
+#[test]
+fn selector_empty_config_is_legacy_byte_for_byte() {
+    let backend = CpuRefBackend::new(&CpuModelConfig::tiny(), 4);
+    let sampling = SamplingConfig::new(0.8, 0.95);
+    let verifier = specdelay::verify::verifier("SpecInfer").unwrap();
+    let policy = FixedPolicy(Action::new(2, 2, 2));
+
+    let run = |selector: bool| -> Vec<(String, usize, usize)> {
+        let mut srv = ServeLoop::new(&backend, sampling, verifier.as_ref(), &policy, 3)
+            .with_workers(2);
+        if selector {
+            srv = srv.with_selector(SelectorConfig::default());
+            assert!(srv.selector().is_some());
+            assert!(!srv.selector_active(), "empty config must stay transparent");
+        }
+        for p in &PROMPTS {
+            srv.submit(ServeRequest::new(p.to_string(), MAX_NEW, SEED));
+        }
+        let outs = srv.run().unwrap();
+        assert!(srv.selector_priors().arms.iter().all(|a| a.blocks == 0));
+        outs.iter()
+            .map(|o| {
+                assert!(o.error.is_none());
+                (o.text.clone(), o.stats.tokens, o.stats.blocks)
+            })
+            .collect()
+    };
+    assert_eq!(run(false), run(true), "engaged-but-armless selector changed the stream");
+}
+
+/// The rng-decoupling regression: with a single arm every decision is
+/// forced, so *only* the selector seed (and its exploration draws) change
+/// between runs — token streams must be bit-identical, and equal to the
+/// equivalent static run (same verifier/drafter/action via `FixedPolicy`
+/// + `with_drafter`).
+#[test]
+fn selector_seed_change_never_perturbs_token_streams() {
+    let backend = CpuRefBackend::new(&CpuModelConfig::tiny(), 4);
+    let sampling = SamplingConfig::new(0.8, 0.95);
+    let fallback = specdelay::verify::verifier("BV").unwrap();
+    let fallback_policy = FixedPolicy(Action::new(1, 1, 0));
+    let arm = SelectorArm {
+        verifier: "Traversal".to_string(),
+        drafter: DrafterKind::Greedy,
+        action: Action::new(2, 2, 2),
+    };
+
+    let run = |sel_seed: u64| -> Vec<String> {
+        let config = SelectorConfig {
+            arms: vec![arm.clone()],
+            seed: sel_seed,
+            epsilon: 0.5, // exploration draws differ per seed; the arm cannot change
+            ..SelectorConfig::default()
+        };
+        let mut srv = ServeLoop::new(&backend, sampling, fallback.as_ref(), &fallback_policy, 3)
+            .with_workers(2)
+            .with_selector(config);
+        for p in &PROMPTS {
+            srv.submit(ServeRequest::new(p.to_string(), MAX_NEW, SEED));
+        }
+        srv.run().unwrap().into_iter().map(|o| o.text).collect()
+    };
+    let a = run(0xAA);
+    let b = run(0xBB);
+    assert_eq!(a, b, "selector seed leaked into token sampling rng");
+
+    // single-arm selector ≡ the static configuration it pins
+    let verifier = specdelay::verify::verifier("Traversal").unwrap();
+    let policy = FixedPolicy(arm.action);
+    let spec = SpecEngine::new(&backend, sampling).with_drafter(arm.drafter);
+    for (id, (p, got)) in PROMPTS.iter().zip(&a).enumerate() {
+        let mut rng = Pcg64::new(SEED, id as u64);
+        let (text, _) =
+            spec.generate(p, MAX_NEW, verifier.as_ref(), &policy, &mut rng).unwrap();
+        assert_eq!(&text, got, "single-arm selector diverged from static (id {id})");
+    }
+}
