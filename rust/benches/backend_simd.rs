@@ -1,0 +1,271 @@
+//! SIMD backend + quantized-KV benchmark (pure rust, no artifacts).
+//!
+//! Three measurements, each preceded by an equal-output (tolerance)
+//! assertion so the numbers always describe the configuration the tests
+//! validate:
+//!
+//! 1. **Per-op µs** — prefill / decode / tree-verify on the small preset,
+//!    `cpu-ref` (scalar reductions) vs `cpu-simd` (f32x8 lane chunks),
+//!    with `speedup_vs_ref` per op and the geometric mean.
+//! 2. **tokens/s per (backend × kv-dtype)** — real `SpecEngine::step`
+//!    decode loops over paged pools of every element precision, both
+//!    backends.
+//! 3. **Effective capacity** — under one fixed f32-equivalent block
+//!    budget, the rows a lane can commit before pool exhaustion: f16
+//!    must fit exactly 2× and int8 exactly 4× the f32 rows (asserted).
+//!
+//! Emits `BENCH_backend_simd.json` at the repo root (uploaded as a CI
+//! artifact). Env knobs: `BACKEND_SIMD_ITERS` (default 300, per-op
+//! timing loops), `BACKEND_SIMD_MAX_NEW` (default 32, tokens per e2e
+//! run).
+//!
+//! Run: `cargo bench --bench backend_simd`.
+
+use std::time::Instant;
+
+use specdelay::coordinator::{KvPools, SpecEngine};
+use specdelay::dist::SamplingConfig;
+use specdelay::draft::Action;
+use specdelay::kvcache::{BlockPool, KvCache, KvDtype};
+use specdelay::runtime::{Backend, CpuModelConfig, CpuRefBackend, CpuSimdBackend, Role};
+use specdelay::util::json::{arr, num, obj, s, Json};
+use specdelay::util::Pcg64;
+use specdelay::verify;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn rel_err(got: &[f32], want: &[f32]) -> f32 {
+    assert_eq!(got.len(), want.len());
+    got.iter()
+        .zip(want)
+        .map(|(&g, &w)| (g - w).abs() / w.abs().max(1e-6))
+        .fold(0.0f32, f32::max)
+}
+
+/// Part 1: per-op scalar vs f32x8 timing on the small preset. Returns the
+/// JSON row set and the per-op speedups for the geomean.
+fn per_op_micro(iters: usize) -> (Vec<Json>, Vec<f64>) {
+    let cfg = CpuModelConfig::small();
+    let rb = CpuRefBackend::new(&cfg, 11);
+    let sb = CpuSimdBackend::new(&cfg, 11);
+    let toks: Vec<i32> = (0..cfg.s_pre as i32).map(|i| (i * 31 + 5) % cfg.vocab as i32).collect();
+    let n = toks.len();
+
+    // warm caches: each backend reads its own committed rows
+    let pr = rb.prefill(Role::Target, &toks, n).unwrap();
+    let ps = sb.prefill(Role::Target, &toks, n).unwrap();
+    assert!(rel_err(&ps.logits, &pr.logits) <= 1e-5, "prefill logits out of tolerance");
+    let mut cr = KvCache::new(rb.dims(Role::Target));
+    let mut cs = KvCache::new(sb.dims(Role::Target));
+    cr.commit_prefill(&pr.k_rows, &pr.v_rows, cfg.s_pre, n);
+    cs.commit_prefill(&ps.k_rows, &ps.v_rows, cfg.s_pre, n);
+    let dr = rb.decode(Role::Target, cr.view(), 7, n).unwrap();
+    let ds = sb.decode(Role::Target, cs.view(), 7, n).unwrap();
+    assert!(rel_err(&ds.logits, &dr.logits) <= 1e-5, "decode logits out of tolerance");
+
+    // a 16-node chain tree for the tree-verify op
+    use specdelay::tree::{DraftTree, Provenance};
+    let mut tree = DraftTree::new(7);
+    let mut node = 0usize;
+    for step in 1..8usize {
+        node = tree.add_child(node, ((step * 13) % cfg.vocab) as u32, Provenance::Trunk { step });
+    }
+    let nb = 16usize;
+    let (tt, tp) = tree.tokens_positions(nb, n - 1, 63);
+    let bias = tree.attention_bias(nb);
+
+    let time = |f: &mut dyn FnMut()| -> f64 {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        t0.elapsed().as_secs_f64() * 1e6 / iters as f64
+    };
+
+    let mut rows = Vec::new();
+    let mut speedups = Vec::new();
+    println!("{:>12} {:>12} {:>12} {:>10}", "op", "ref µs", "simd µs", "speedup");
+    let ops: Vec<(&str, f64, f64)> = vec![
+        (
+            "prefill",
+            time(&mut || {
+                let _ = rb.prefill(Role::Target, &toks, n).unwrap();
+            }),
+            time(&mut || {
+                let _ = sb.prefill(Role::Target, &toks, n).unwrap();
+            }),
+        ),
+        (
+            "decode",
+            time(&mut || {
+                let _ = rb.decode(Role::Target, cr.view(), 7, n).unwrap();
+            }),
+            time(&mut || {
+                let _ = sb.decode(Role::Target, cs.view(), 7, n).unwrap();
+            }),
+        ),
+        (
+            "tree_verify",
+            time(&mut || {
+                let _ = rb.tree_verify(nb, cr.view(), &tt, &tp, &bias, n - 1).unwrap();
+            }),
+            time(&mut || {
+                let _ = sb.tree_verify(nb, cs.view(), &tt, &tp, &bias, n - 1).unwrap();
+            }),
+        ),
+    ];
+    for (name, ref_us, simd_us) in ops {
+        let speedup = ref_us / simd_us;
+        println!("{name:>12} {ref_us:>12.2} {simd_us:>12.2} {speedup:>9.2}x");
+        speedups.push(speedup);
+        rows.push(obj(vec![
+            ("op", s(name)),
+            ("ref_us", num(ref_us)),
+            ("simd_us", num(simd_us)),
+            ("speedup_vs_ref", num(speedup)),
+        ]));
+    }
+    (rows, speedups)
+}
+
+/// Part 2: end-to-end tokens/s of real `SpecEngine::step` loops per
+/// (backend × kv-dtype) cell over paged pools.
+fn e2e_matrix(max_new: usize) -> Vec<Json> {
+    let cfg = CpuModelConfig::small();
+    let backends: Vec<Box<dyn Backend>> =
+        vec![Box::new(CpuRefBackend::new(&cfg, 11)), Box::new(CpuSimdBackend::new(&cfg, 11))];
+    let sampling = SamplingConfig::new(0.8, 0.95);
+    let verifier = verify::verifier("SpecInfer").unwrap();
+    let action = Action::new(2, 2, 3);
+    let prompts = ["12*3= ", "9-4= ", "(5+5)/2= ", "0.5*8= "];
+
+    let mut rows = Vec::new();
+    println!("\n{:>10} {:>6} {:>10} {:>10}", "backend", "kv", "tokens", "tok/s");
+    for backend in &backends {
+        let backend = backend.as_ref();
+        for dtype in [KvDtype::F32, KvDtype::F16, KvDtype::Int8] {
+            let pools = KvPools {
+                target: BlockPool::with_dtype(
+                    backend.dims(Role::Target),
+                    specdelay::kvcache::default_block_tokens(),
+                    None,
+                    dtype,
+                ),
+                draft: BlockPool::with_dtype(
+                    backend.dims(Role::Draft),
+                    specdelay::kvcache::default_block_tokens(),
+                    None,
+                    dtype,
+                ),
+            };
+            let spec = SpecEngine::new(backend, sampling).with_kv_pools(pools);
+            let mut tokens = 0usize;
+            let t0 = Instant::now();
+            for (id, p) in prompts.iter().enumerate() {
+                let mut seq = spec.start(p).unwrap();
+                let mut rng = Pcg64::new(7, id as u64);
+                while !seq.finished && seq.tokens.len() - seq.prompt_len < max_new {
+                    spec.step(&mut seq, verifier.as_ref(), action, &mut rng).unwrap();
+                }
+                tokens += seq.tokens.len() - seq.prompt_len;
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let tps = tokens as f64 / wall.max(1e-9);
+            println!("{:>10} {:>6} {tokens:>10} {tps:>10.1}", backend.name(), dtype.name());
+            rows.push(obj(vec![
+                ("backend", s(backend.name())),
+                ("kv_dtype", s(dtype.name())),
+                ("tokens", num(tokens as f64)),
+                ("wall_s", num(wall)),
+                ("tokens_per_s", num(tps)),
+            ]));
+        }
+    }
+    rows
+}
+
+/// Part 3: under one fixed f32-equivalent block budget, commit rows into
+/// a fresh lane until the pool's effective capacity is reached; f16/int8
+/// must fit exactly 2×/4× the f32 rows (asserted — the ISSUE's capacity
+/// criterion).
+fn capacity_demo() -> Vec<Json> {
+    let dims = specdelay::runtime::ModelDims {
+        n_layers: 2,
+        d_model: 16,
+        n_heads: 2,
+        d_head: 8,
+        vocab: 64,
+        max_seq: 64,
+    };
+    let (bt, budget) = (4usize, 4usize);
+    let row: Vec<f32> = (0..dims.n_layers * dims.n_heads * dims.d_head)
+        .map(|x| (x as f32 * 0.37).sin())
+        .collect();
+    let mut rows_fit = Vec::new();
+    let mut out = Vec::new();
+    println!("\n{:>6} {:>12} {:>12} {:>10}", "kv", "eff_blocks", "rows_fit", "vs f32");
+    for dtype in [KvDtype::F32, KvDtype::F16, KvDtype::Int8] {
+        let pool = BlockPool::with_dtype(dims, bt, Some(budget), dtype);
+        let eff = pool.effective_max_blocks().expect("capped pool");
+        let capacity_rows = eff * bt;
+        let mut lane = KvCache::paged(&pool);
+        for pos in 0..capacity_rows {
+            lane.commit_row(&row, &row, pos);
+        }
+        assert_eq!(
+            pool.live_blocks(),
+            eff,
+            "{}: committed rows did not land on the effective block capacity",
+            dtype.name()
+        );
+        rows_fit.push(capacity_rows);
+        out.push(obj(vec![
+            ("kv_dtype", s(dtype.name())),
+            ("budget_f32_blocks", num(budget as f64)),
+            ("effective_blocks", num(eff as f64)),
+            ("rows_fit", num(capacity_rows as f64)),
+        ]));
+        println!(
+            "{:>6} {eff:>12} {capacity_rows:>12} {:>9.1}x",
+            dtype.name(),
+            capacity_rows as f64 / rows_fit[0] as f64
+        );
+    }
+    assert_eq!(rows_fit[1], 2 * rows_fit[0], "f16 must fit 2x the f32 rows");
+    assert_eq!(rows_fit[2], 4 * rows_fit[0], "int8 must fit 4x the f32 rows");
+    out
+}
+
+fn main() {
+    let iters = env_usize("BACKEND_SIMD_ITERS", 300);
+    let max_new = env_usize("BACKEND_SIMD_MAX_NEW", 32);
+
+    let (ops, speedups) = per_op_micro(iters);
+    let geomean =
+        (speedups.iter().map(|x| x.ln()).sum::<f64>() / speedups.len() as f64).exp();
+    println!("{:>12} {:>37.2}x", "geomean", geomean);
+    let e2e = e2e_matrix(max_new);
+    let capacity = capacity_demo();
+
+    let report = obj(vec![
+        ("schema", s("backend_simd/v1")),
+        (
+            "config",
+            obj(vec![
+                ("preset", s("small")),
+                ("iters", num(iters as f64)),
+                ("max_new", num(max_new as f64)),
+            ]),
+        ),
+        ("equal_output_assertion", s("enabled")),
+        ("per_op", arr(ops)),
+        ("speedup_vs_ref_geomean", num(geomean)),
+        ("e2e", arr(e2e)),
+        ("capacity", arr(capacity)),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_backend_simd.json");
+    std::fs::write(path, format!("{}\n", report.to_string_pretty())).expect("write bench json");
+    println!("wrote {path}");
+}

@@ -153,7 +153,8 @@ use super::{ActionPolicy, GenStats, Sequence, SpecEngine};
 use crate::dist::SamplingConfig;
 use crate::draft::DrafterKind;
 use crate::kvcache::{
-    default_block_tokens, prefix_cache_enabled, KvStorage, PrefixCache, PrefixCacheCounters,
+    default_block_tokens, prefix_cache_enabled, KvDtype, KvStorage, PrefixCache,
+    PrefixCacheCounters,
 };
 use crate::runtime::{Backend, DispatchFault, FaultKind};
 use crate::selector::{ArmStats, OnlineSelector, SelectorConfig, SelectorPriors};
@@ -605,7 +606,11 @@ struct LaneBudget {
     /// per-tick safety bound for a lane running alone.
     worst_target: usize,
     worst_draft: usize,
-    /// Per-pool cap (both pools), clamped so one lane always fits.
+    /// Per-pool *effective* cap in actual blocks (both pools): the
+    /// f32-equivalent budget scaled by the KV dtype's capacity multiplier
+    /// ([`crate::kvcache::BlockPool::effective_max_blocks`]) and clamped
+    /// so one lane always fits. All reservations and live-block admission
+    /// checks compare against this.
     cap: usize,
 }
 
@@ -859,9 +864,13 @@ impl<'a> ServeLoop<'a> {
     }
 
     /// Serve from a capped paged block pool: both the target and the draft
-    /// pool are capped at `blocks` blocks (of
+    /// pool are capped at `blocks` *f32-equivalent* blocks (of
     /// [`default_block_tokens`] tokens each), clamped up so a single lane
-    /// always fits. Admission switches from "a free batch slot" to "a free
+    /// always fits. With a reduced-precision KV dtype
+    /// (`SPECDELAY_KV_DTYPE`) the same byte budget holds 2× (f16) or 4×
+    /// (int8) the actual blocks, and admission schedules against that
+    /// effective capacity — more concurrent lanes, same stated budget.
+    /// Admission switches from "a free batch slot" to "a free
     /// batch slot *and* a worst-case block reservation in both pools" —
     /// requests that don't fit queue until running lanes retire
     /// (out-of-blocks backpressure), and token streams are identical to an
@@ -904,9 +913,17 @@ impl<'a> ServeLoop<'a> {
         // + the trunk's own rows; the shared prefix costs nothing)
         let worst_draft =
             factor * (meta.draft.max_seq.div_ceil(bt) + max_trunk.div_ceil(bt) + 1);
-        let cap = blocks.max(worst_target).max(worst_draft);
+        // the stated budget is in f32-equivalent block units (bytes); a
+        // reduced-precision pool fits `mult×` more actual blocks in the
+        // same bytes, so admission schedules against the *effective*
+        // capacity. Clamp the effective capacity up so one lane always
+        // fits, then hand the pool the raw (f32-unit) budget it scales by
+        // the same multiplier.
+        let mult = KvDtype::global().capacity_multiplier();
+        let raw = blocks.max(worst_target.div_ceil(mult)).max(worst_draft.div_ceil(mult));
+        let cap = raw * mult;
         self.spec = SpecEngine::new(self.spec.engine, self.spec.sampling)
-            .with_paged_kv(bt, Some(cap))
+            .with_paged_kv(bt, Some(raw))
             .with_drafter(self.spec.drafter());
         self.budget =
             Some(LaneBudget { bt, factor, max_trunk, overshoot, worst_target, worst_draft, cap });

@@ -32,7 +32,10 @@
 //!    "drafter_blocks": {"delayed": d, "root": r, "greedy": g},
 //!    "prefix_cache": {"lookups": ..., "hits": ..., "matched_rows": ...,
 //!    "inserted_runs": ..., "evicted_blocks": ...,
-//!    "reclaimed_under_pressure": ..., "skipped_contiguous": ...}}
+//!    "reclaimed_under_pressure": ..., "skipped_contiguous": ...},
+//!    "kv": {"storage": "paged"|"contiguous", "dtype": "f32"|"f16"|"int8",
+//!    "capacity_multiplier": 1|2|4, "target_live_blocks": ...,
+//!    "draft_live_blocks": ...}}
 //! (depths are always zero here: this front-end has no queue — the
 //! batched scheduler's [`super::ServeLoop::queued_by_class`] is the
 //! populated counterpart; the prefix-cache object is all-zero unless
@@ -69,7 +72,7 @@ use anyhow::Result;
 use crate::coordinator::{FixedPolicy, GenStats, KvPools, Priority, SpecEngine};
 use crate::dist::SamplingConfig;
 use crate::draft::{Action, DrafterKind};
-use crate::kvcache::{prefix_cache_enabled, KvStorage, PrefixCache};
+use crate::kvcache::{prefix_cache_enabled, KvDtype, KvStorage, PrefixCache};
 use crate::runtime::Backend;
 use crate::tokenizer;
 use crate::util::json::{num, obj, s, Json};
@@ -375,6 +378,31 @@ fn stats_reply(stats: &ServeStats, warm: &Option<WarmState>) -> Json {
                 ("evicted_blocks", num(c.evicted_blocks as f64)),
                 ("reclaimed_under_pressure", num(c.reclaimed_under_pressure as f64)),
                 ("skipped_contiguous", num(c.skipped_contiguous as f64)),
+            ]),
+        ),
+        (
+            "kv",
+            obj(vec![
+                (
+                    "storage",
+                    s(match KvStorage::global() {
+                        KvStorage::Paged => "paged",
+                        KvStorage::Contiguous => "contiguous",
+                    }),
+                ),
+                ("dtype", s(KvDtype::global().name())),
+                (
+                    "capacity_multiplier",
+                    num(KvDtype::global().capacity_multiplier() as f64),
+                ),
+                (
+                    "target_live_blocks",
+                    num(warm.as_ref().map(|w| w.pools.target.live_blocks()).unwrap_or(0) as f64),
+                ),
+                (
+                    "draft_live_blocks",
+                    num(warm.as_ref().map(|w| w.pools.draft.live_blocks()).unwrap_or(0) as f64),
+                ),
             ]),
         ),
     ])
@@ -699,6 +727,30 @@ mod tests {
         assert!(db.get("root").unwrap().as_f64().unwrap() >= 1.0, "{j}");
         assert!(db.get("delayed").unwrap().as_f64().unwrap() >= 1.0, "{j}");
         assert_eq!(db.get("greedy").unwrap().as_f64(), Some(0.0), "{j}");
+    }
+
+    #[test]
+    fn stats_reply_reports_kv_config() {
+        let b = backend();
+        let mut rng = Pcg64::seeded(0);
+        let mut stats = ServeStats::default();
+        let j = handle_request(&b, r#"{"stats": true}"#, &mut rng, &mut stats, &mut None).unwrap();
+        let kv = j.get("kv").unwrap();
+        // the process-global knobs are unset in tier-1 runs; under the CI
+        // dtype matrix these echo the selected configuration
+        let storage = kv.get("storage").unwrap().as_str().unwrap().to_string();
+        assert!(storage == "paged" || storage == "contiguous", "{j}");
+        let dtype = kv.get("dtype").unwrap().as_str().unwrap().to_string();
+        let mult = kv.get("capacity_multiplier").unwrap().as_f64().unwrap();
+        let want = match dtype.as_str() {
+            "f32" => 1.0,
+            "f16" => 2.0,
+            "int8" => 4.0,
+            other => panic!("unexpected dtype {other}"),
+        };
+        assert_eq!(mult, want, "{j}");
+        assert!(kv.get("target_live_blocks").unwrap().as_f64().is_some(), "{j}");
+        assert!(kv.get("draft_live_blocks").unwrap().as_f64().is_some(), "{j}");
     }
 
     #[test]

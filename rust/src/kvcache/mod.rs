@@ -15,7 +15,10 @@
 //!   the pool for admission-level backpressure.
 //!
 //! [`KvCache`] is the storage enum the serving stack carries (selected by
-//! [`KvStorage::global`], env knob `SPECDELAY_PAGED_KV`), and [`KvRef`] is
+//! [`KvStorage::global`], env knob `SPECDELAY_PAGED_KV`; paged pools
+//! additionally pick an element precision via [`KvDtype::global`], env
+//! knob `SPECDELAY_KV_DTYPE` — quantize-on-write, dequantize-on-read, see
+//! [`quant`]), and [`KvRef`] is
 //! the read-only view the [`Backend`](crate::runtime::Backend) entry
 //! points take: the CPU backend gathers attention rows *through* it (block
 //! tables included), while the PJRT engine materialises paged lanes into
@@ -38,9 +41,10 @@
 //! paged-vs-contiguous bitwise equality is fuzzed in `tests/paged_kv.rs`.
 
 pub mod paged;
+pub mod quant;
 pub mod radix;
 
-pub use paged::{default_block_tokens, BlockPool, KvStorage, PagedKvCache};
+pub use paged::{default_block_tokens, BlockPool, KvDtype, KvStorage, PagedKvCache};
 pub use radix::{prefix_cache_enabled, PrefixCache, PrefixCacheCounters};
 
 use crate::runtime::ModelDims;

@@ -40,19 +40,38 @@
 //! `ceil(n / block_tokens) + 1` span copies per (layer, head) instead of
 //! one, and the per-head stride walk is hoisted identically.
 //!
+//! ## Element precision
+//!
+//! A pool stores its rows at a selectable [`KvDtype`] (`SPECDELAY_KV_DTYPE`):
+//! full f32, IEEE half (round-to-nearest-even per element), or affine int8
+//! with per-(block, layer·head, token-row) scale/zero-point. Commits
+//! quantize on write and reads return the dequantized values through the
+//! unchanged f32 `row()` surface, so every backend (CPU reference, SIMD,
+//! PJRT gather) is dtype-transparent. A capped pool's budget is stated in
+//! f32-equivalent blocks and scaled by the dtype's byte ratio
+//! ([`BlockPool::effective_max_blocks`]): the same byte budget holds 2×
+//! the blocks at f16 and 4× at int8.
+//!
 //! ## Determinism contract
 //!
-//! Paged storage is a *bit-exact* drop-in for the contiguous oracle: reads
-//! go through [`PagedKvCache::row`], which returns exactly the bytes the
-//! commit ops stored (commits are pure copies on both representations, and
-//! unallocated blocks read as zeros exactly like the zero-initialised
-//! contiguous buffers). `tests/paged_kv.rs` fuzzes random
-//! alloc/fork/write/retire interleavings against a contiguous shadow and
-//! asserts bitwise equality after every op, plus the allocator invariants
-//! (`created == free + live`, free blocks unreferenced).
+//! At the default [`KvDtype::F32`], paged storage is a *bit-exact* drop-in
+//! for the contiguous oracle: reads go through [`PagedKvCache::row`],
+//! which returns exactly the bytes the commit ops stored (commits are pure
+//! copies on both representations, and unallocated blocks read as zeros
+//! exactly like the zero-initialised contiguous buffers).
+//! `tests/paged_kv.rs` fuzzes random alloc/fork/write/retire
+//! interleavings against a contiguous shadow and asserts bitwise equality
+//! after every op, plus the allocator invariants (`created == free +
+//! live`, free blocks unreferenced). The lossy dtypes weaken "bytes
+//! stored" to "committed bytes through the codec" but keep every
+//! *structural* guarantee bit-exact: quantization is content-pure (a row's
+//! stored value is a function of that row's committed f32 content alone),
+//! so identical per-lane commit sequences still produce identical reads —
+//! batched == serial, fork == source, replay == original.
 
 use std::sync::{Arc, Mutex, OnceLock};
 
+use super::quant::{affine_dequantize, affine_params, affine_quantize, f16_round, Affine};
 use crate::runtime::ModelDims;
 
 /// Which KV-cache representation newly created sequences use.
@@ -89,6 +108,89 @@ impl KvStorage {
     }
 }
 
+/// Element precision of a [`BlockPool`]'s stored KV rows.
+///
+/// The logical row space stays f32 everywhere — commits take f32 rows and
+/// [`PagedKvCache::row`] returns f32 slices — but a reduced-precision pool
+/// stores each written element through its codec and serves the
+/// *dequantized* value back (quantize-on-write, dequantize-on-read, like a
+/// device cache holding half/int8 KV). Reads are backed by a per-block f32
+/// mirror holding exactly the dequantized codes, so the borrow-based
+/// `row()` surface (and every backend gathering through
+/// [`KvRef`](super::KvRef), PJRT `gather` included) is unchanged.
+///
+/// * [`KvDtype::F32`] — lossless; the mirror *is* the storage and every
+///   bit-exactness contract of the module docs holds verbatim.
+/// * [`KvDtype::F16`] — IEEE 754 binary16 with round-to-nearest-even,
+///   per element (see [`super::quant`]). 2 bytes/element on a device.
+/// * [`KvDtype::Int8`] — affine 8-bit codes with per-(block, layer·head,
+///   token-row) `scale`/`zero_point` over each `d_head` span.
+///   1 byte/element (+ 8 bytes of parameters per row span) on a device.
+///
+/// Both lossy codecs are *content-pure*: a stored row's dequantized value
+/// is a function of that row's committed f32 content alone (parameters are
+/// per row span, never pooled across rows), so writes never perturb other
+/// rows, batched == serial determinism survives, and copy-on-write forks
+/// reproduce the source block bit-for-bit. All-zero (never written) rows
+/// dequantize to exactly `0.0`, preserving the zero-fill contract.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvDtype {
+    /// Full-precision storage (the default, and the bit-exact oracle).
+    F32,
+    /// IEEE 754 half precision, round-to-nearest-even per element.
+    F16,
+    /// Affine int8 with per-row-span scale/zero-point.
+    Int8,
+}
+
+impl KvDtype {
+    /// Process-wide default dtype: [`KvDtype::F32`], unless
+    /// `SPECDELAY_KV_DTYPE` selects `f16` or `int8`. Read once and cached —
+    /// mirrors [`KvStorage::global`].
+    pub fn global() -> KvDtype {
+        static DTYPE: OnceLock<KvDtype> = OnceLock::new();
+        *DTYPE.get_or_init(|| {
+            KvDtype::from_env_value(std::env::var("SPECDELAY_KV_DTYPE").ok().as_deref())
+        })
+    }
+
+    /// Parse the `SPECDELAY_KV_DTYPE` value (`f16`/`fp16`/`half` → F16,
+    /// `int8`/`i8`/`q8` → Int8, anything else → F32); factored out so the
+    /// knob's parsing is unit-testable despite the cached global.
+    pub fn from_env_value(value: Option<&str>) -> KvDtype {
+        match value.map(|v| v.to_ascii_lowercase()).as_deref() {
+            Some("f16") | Some("fp16") | Some("half") => KvDtype::F16,
+            Some("int8") | Some("i8") | Some("q8") => KvDtype::Int8,
+            _ => KvDtype::F32,
+        }
+    }
+
+    /// How many blocks of this dtype fit in the bytes of one f32 block:
+    /// 4, 2 and 1 bytes per element give 1×, 2× and 4×. (Int8's per-row
+    /// parameter overhead is 8 bytes per `d_head` span — under 13% at
+    /// `d_head = 16` and shrinking with head size; the multiplier states
+    /// the element-payload ratio, the convention block-budget accounting
+    /// is stated in.) A capped pool's budget is configured in f32-block
+    /// units and scaled by this factor — see
+    /// [`BlockPool::effective_max_blocks`].
+    pub fn capacity_multiplier(self) -> usize {
+        match self {
+            KvDtype::F32 => 1,
+            KvDtype::F16 => 2,
+            KvDtype::Int8 => 4,
+        }
+    }
+
+    /// Stable lowercase name (CLI/stats/bench labels).
+    pub fn name(self) -> &'static str {
+        match self {
+            KvDtype::F32 => "f32",
+            KvDtype::F16 => "f16",
+            KvDtype::Int8 => "int8",
+        }
+    }
+}
+
 /// Default tokens per block: 16, unless `SPECDELAY_KV_BLOCK` overrides it
 /// (values < 1 are ignored). Read once and cached.
 pub fn default_block_tokens() -> usize {
@@ -102,27 +204,117 @@ pub fn default_block_tokens() -> usize {
     })
 }
 
+/// Affine int8 payload of one quantized block: the codes are the ground
+/// truth the f32 mirror is dequantized from, with one [`Affine`] parameter
+/// pair per `d_head` row span (see [`KvDtype::Int8`]).
+struct Int8State {
+    k_q: Vec<u8>,
+    v_q: Vec<u8>,
+    k_aff: Vec<Affine>,
+    v_aff: Vec<Affine>,
+}
+
 /// One fixed-size KV block: `block_tokens` rows of `[L, H, Dh]` keys and
 /// values, laid out `[L, H, T, Dh]`. Uniquely owned while being written;
 /// shared (refcount > 1) after a copy-on-write fork.
+///
+/// `k`/`v` hold what reads return. For [`KvDtype::F32`] that is exactly
+/// the committed bytes; for the lossy dtypes it is the *dequantized
+/// mirror* — every element is the round trip of the committed f32 through
+/// the pool's codec, updated on write so `row()` can keep returning
+/// borrowed f32 slices. (An f16 mirror element is exactly
+/// binary16-representable, so its codes are bit-recoverable from the
+/// mirror itself; int8 additionally carries its codes and per-span
+/// parameters in [`Int8State`].)
 pub(crate) struct KvBlock {
     pub(crate) k: Vec<f32>,
     pub(crate) v: Vec<f32>,
+    /// Element precision of the owning pool.
+    dtype: KvDtype,
+    /// Elements per quantization span (`d_head` — one (layer, head, token)
+    /// row), the granularity of int8 parameters.
+    span: usize,
+    /// Int8 codes + parameters; `None` for f32/f16 blocks.
+    int8: Option<Box<Int8State>>,
 }
 
 impl KvBlock {
-    fn zeroed(elems: usize) -> KvBlock {
-        KvBlock { k: vec![0.0; elems], v: vec![0.0; elems] }
+    fn zeroed(elems: usize, span: usize, dtype: KvDtype) -> KvBlock {
+        let int8 = match dtype {
+            KvDtype::Int8 => Some(Box::new(Int8State {
+                k_q: vec![0; elems],
+                v_q: vec![0; elems],
+                k_aff: vec![Affine::ZERO; elems / span],
+                v_aff: vec![Affine::ZERO; elems / span],
+            })),
+            _ => None,
+        };
+        KvBlock { k: vec![0.0; elems], v: vec![0.0; elems], dtype, span, int8 }
     }
 
     fn zero(&mut self) {
         self.k.fill(0.0);
         self.v.fill(0.0);
+        if let Some(q) = self.int8.as_mut() {
+            q.k_q.fill(0);
+            q.v_q.fill(0);
+            q.k_aff.fill(Affine::ZERO);
+            q.v_aff.fill(Affine::ZERO);
+        }
     }
 
     fn copy_from(&mut self, src: &KvBlock) {
         self.k.copy_from_slice(&src.k);
         self.v.copy_from_slice(&src.v);
+        if let (Some(dst), Some(sq)) = (self.int8.as_mut(), src.int8.as_ref()) {
+            dst.k_q.copy_from_slice(&sq.k_q);
+            dst.v_q.copy_from_slice(&sq.v_q);
+            dst.k_aff.copy_from_slice(&sq.k_aff);
+            dst.v_aff.copy_from_slice(&sq.v_aff);
+        }
+    }
+
+    /// Store `k`/`v` rows at element offset `off` through the pool's
+    /// codec. Every commit path funnels here; the span is always a whole
+    /// number of `d_head` rows inside one (layer, head) tile of the
+    /// `[L, H, T, Dh]` layout, which is exactly the int8 parameter
+    /// granularity.
+    pub(crate) fn write(&mut self, off: usize, k: &[f32], v: &[f32]) {
+        debug_assert_eq!(k.len(), v.len());
+        match self.dtype {
+            KvDtype::F32 => {
+                self.k[off..off + k.len()].copy_from_slice(k);
+                self.v[off..off + v.len()].copy_from_slice(v);
+            }
+            KvDtype::F16 => {
+                for (d, &x) in self.k[off..off + k.len()].iter_mut().zip(k) {
+                    *d = f16_round(x);
+                }
+                for (d, &x) in self.v[off..off + v.len()].iter_mut().zip(v) {
+                    *d = f16_round(x);
+                }
+            }
+            KvDtype::Int8 => {
+                debug_assert!(off % self.span == 0 && k.len() % self.span == 0, "partial span");
+                let q = self.int8.as_mut().expect("int8 blocks carry codes");
+                let r0 = off / self.span;
+                for (r, (ks, vs)) in
+                    k.chunks_exact(self.span).zip(v.chunks_exact(self.span)).enumerate()
+                {
+                    let lo = (r0 + r) * self.span;
+                    let ka = affine_params(ks);
+                    let va = affine_params(vs);
+                    q.k_aff[r0 + r] = ka;
+                    q.v_aff[r0 + r] = va;
+                    for i in 0..self.span {
+                        q.k_q[lo + i] = affine_quantize(ks[i], ka);
+                        self.k[lo + i] = affine_dequantize(q.k_q[lo + i], ka);
+                        q.v_q[lo + i] = affine_quantize(vs[i], va);
+                        self.v[lo + i] = affine_dequantize(q.v_q[lo + i], va);
+                    }
+                }
+            }
+        }
     }
 }
 
@@ -154,7 +346,11 @@ pub struct BlockPool {
     dims: ModelDims,
     block_tokens: usize,
     block_elems: usize,
+    /// Configured budget in *f32-equivalent* block units (bytes-of-f32
+    /// accounting); reduced-precision pools admit
+    /// [`BlockPool::effective_max_blocks`] actual blocks.
     max_blocks: Option<usize>,
+    dtype: KvDtype,
     inner: Mutex<PoolInner>,
     /// Read-only zero block backing reads of unallocated table slots.
     zero: KvBlock,
@@ -162,9 +358,22 @@ pub struct BlockPool {
 
 impl BlockPool {
     /// A pool of `[L, H, block_tokens, Dh]` blocks for `dims`, optionally
-    /// capped at `max_blocks` unique blocks. `block_tokens` is clamped to
-    /// at least 1.
+    /// capped at `max_blocks` f32-equivalent blocks. `block_tokens` is
+    /// clamped to at least 1. Element precision follows
+    /// [`KvDtype::global`] (env knob `SPECDELAY_KV_DTYPE`); use
+    /// [`BlockPool::with_dtype`] to pick one explicitly.
     pub fn new(dims: ModelDims, block_tokens: usize, max_blocks: Option<usize>) -> Arc<BlockPool> {
+        BlockPool::with_dtype(dims, block_tokens, max_blocks, KvDtype::global())
+    }
+
+    /// [`BlockPool::new`] with an explicit element precision (tests and
+    /// benches cover every dtype in one process this way).
+    pub fn with_dtype(
+        dims: ModelDims,
+        block_tokens: usize,
+        max_blocks: Option<usize>,
+        dtype: KvDtype,
+    ) -> Arc<BlockPool> {
         let bt = block_tokens.max(1);
         let block_elems = dims.n_layers * dims.n_heads * bt * dims.d_head;
         Arc::new(BlockPool {
@@ -172,8 +381,9 @@ impl BlockPool {
             block_tokens: bt,
             block_elems,
             max_blocks,
+            dtype,
             inner: Mutex::new(PoolInner { free: Vec::new(), created: 0, live: 0, peak_live: 0 }),
-            zero: KvBlock::zeroed(block_elems),
+            zero: KvBlock::zeroed(block_elems, dims.d_head, dtype),
         })
     }
 
@@ -187,9 +397,23 @@ impl BlockPool {
         self.block_tokens
     }
 
-    /// The budget, if this pool is capped.
+    /// Element precision of this pool's blocks.
+    pub fn kv_dtype(&self) -> KvDtype {
+        self.dtype
+    }
+
+    /// The configured budget in f32-equivalent block units, if capped.
     pub fn max_blocks(&self) -> Option<usize> {
         self.max_blocks
+    }
+
+    /// Actual blocks a capped pool admits: the f32-equivalent budget
+    /// scaled by the dtype's [`KvDtype::capacity_multiplier`] — the same
+    /// byte budget holds 2× the blocks at f16 and 4× at int8. This is the
+    /// bound [`BlockPool::try_alloc_zeroed`] enforces and the capacity the
+    /// serving loop's admission control schedules against.
+    pub fn effective_max_blocks(&self) -> Option<usize> {
+        self.max_blocks.map(|m| m.saturating_mul(self.dtype.capacity_multiplier()))
     }
 
     /// Blocks a full `max_seq`-row lane needs (the worst-case reservation
@@ -265,13 +489,13 @@ impl BlockPool {
         let blk = match inner.free.pop() {
             Some(b) => b,
             None => {
-                if let Some(max) = self.max_blocks {
+                if let Some(max) = self.effective_max_blocks() {
                     if inner.created >= max {
                         return None;
                     }
                 }
                 inner.created += 1;
-                Arc::new(KvBlock::zeroed(self.block_elems))
+                Arc::new(KvBlock::zeroed(self.block_elems, self.dims.d_head, self.dtype))
             }
         };
         inner.live += 1;
@@ -291,9 +515,12 @@ impl BlockPool {
 
     fn exhausted(&self) -> ! {
         panic!(
-            "kv block pool exhausted (budget {:?} blocks of {} tokens): \
-             lane admission must reserve worst-case blocks before writing",
-            self.max_blocks, self.block_tokens
+            "kv block pool exhausted (budget {:?} f32-equivalent = {:?} {} blocks \
+             of {} tokens): lane admission must reserve worst-case blocks before writing",
+            self.max_blocks,
+            self.effective_max_blocks(),
+            self.dtype.name(),
+            self.block_tokens
         )
     }
 
@@ -464,10 +691,9 @@ impl PagedKvCache {
     pub(crate) fn write_row(&mut self, layer: usize, head: usize, pos: usize, k: &[f32], v: &[f32]) {
         let bt = self.block_tokens();
         let off = self.block_offset(layer, head, pos % bt);
-        let dh = self.pool.dims.d_head;
+        debug_assert_eq!(k.len(), self.pool.dims.d_head);
         let blk = self.block_mut(pos / bt);
-        blk.k[off..off + dh].copy_from_slice(k);
-        blk.v[off..off + dh].copy_from_slice(v);
+        blk.write(off, k, v);
     }
 
     /// Overwrite the committed-row count (cross-storage fallback path).
@@ -492,8 +718,7 @@ impl PagedKvCache {
                 for hh in 0..h {
                     let src = ((l * h + hh) * s_pre + pos) * dh;
                     let dst = block_off(l, hh);
-                    blk.k[dst..dst + run * dh].copy_from_slice(&k_rows[src..src + run * dh]);
-                    blk.v[dst..dst + run * dh].copy_from_slice(&v_rows[src..src + run * dh]);
+                    blk.write(dst, &k_rows[src..src + run * dh], &v_rows[src..src + run * dh]);
                 }
             }
             pos += run;
@@ -531,8 +756,7 @@ impl PagedKvCache {
                 for hh in 0..h {
                     let src = ((l * h + hh) * stride + i) * dh;
                     let dst = block_off(l, hh);
-                    blk.k[dst..dst + run * dh].copy_from_slice(&k_rows[src..src + run * dh]);
-                    blk.v[dst..dst + run * dh].copy_from_slice(&v_rows[src..src + run * dh]);
+                    blk.write(dst, &k_rows[src..src + run * dh], &v_rows[src..src + run * dh]);
                 }
             }
             i += run;
@@ -552,8 +776,7 @@ impl PagedKvCache {
             let mut src = l * h * dh;
             let mut dst = ((l * h) * bt + t) * dh;
             for _hh in 0..h {
-                blk.k[dst..dst + dh].copy_from_slice(&k_row[src..src + dh]);
-                blk.v[dst..dst + dh].copy_from_slice(&v_row[src..src + dh]);
+                blk.write(dst, &k_row[src..src + dh], &v_row[src..src + dh]);
                 src += dh;
                 dst += dst_head_stride;
             }
@@ -593,15 +816,13 @@ impl PagedKvCache {
                     let src0 = ((((l * k_paths + branch) * l_steps) + step) * h + hh) * dh;
                     let dst0 = ((l * h + hh) * bt + t) * dh;
                     if h == 1 {
-                        // src and dst both step-contiguous: one span copy
+                        // src and dst both step-contiguous: one span write
                         let n = run * dh;
-                        blk.k[dst0..dst0 + n].copy_from_slice(&k_rows[src0..src0 + n]);
-                        blk.v[dst0..dst0 + n].copy_from_slice(&v_rows[src0..src0 + n]);
+                        blk.write(dst0, &k_rows[src0..src0 + n], &v_rows[src0..src0 + n]);
                     } else {
                         let (mut src, mut dst) = (src0, dst0);
                         for _s in 0..run {
-                            blk.k[dst..dst + dh].copy_from_slice(&k_rows[src..src + dh]);
-                            blk.v[dst..dst + dh].copy_from_slice(&v_rows[src..src + dh]);
+                            blk.write(dst, &k_rows[src..src + dh], &v_rows[src..src + dh]);
                             src += src_step_stride;
                             dst += dh;
                         }
@@ -632,8 +853,7 @@ impl PagedKvCache {
             let mut src = (l * n_bucket + node_idx) * h * dh;
             let mut dst = ((l * h) * bt + t) * dh;
             for _hh in 0..h {
-                blk.k[dst..dst + dh].copy_from_slice(&k_rows[src..src + dh]);
-                blk.v[dst..dst + dh].copy_from_slice(&v_rows[src..src + dh]);
+                blk.write(dst, &k_rows[src..src + dh], &v_rows[src..src + dh]);
                 src += dh;
                 dst += dst_head_stride;
             }
@@ -679,8 +899,9 @@ impl PagedKvCache {
                         let (ks, vs) = (ks.to_vec(), vs.to_vec());
                         let off = ((l * h + hh) * bt + t) * dh;
                         let blk = self.block_mut(bi);
-                        blk.k[off..off + dh].copy_from_slice(&ks);
-                        blk.v[off..off + dh].copy_from_slice(&vs);
+                        // re-quantizes under *this* pool's dtype when the
+                        // pools differ (cold cross-pool path)
+                        blk.write(off, &ks, &vs);
                     }
                 }
             }
@@ -879,5 +1100,144 @@ mod tests {
         assert_eq!(KvStorage::from_env_value(Some("1")), KvStorage::Paged);
         assert_eq!(KvStorage::from_env_value(Some("true")), KvStorage::Paged);
         assert_eq!(KvStorage::from_env_value(Some("TRUE")), KvStorage::Paged);
+    }
+
+    #[test]
+    fn dtype_knob_parsing() {
+        assert_eq!(KvDtype::from_env_value(None), KvDtype::F32);
+        assert_eq!(KvDtype::from_env_value(Some("f32")), KvDtype::F32);
+        assert_eq!(KvDtype::from_env_value(Some("garbage")), KvDtype::F32);
+        assert_eq!(KvDtype::from_env_value(Some("f16")), KvDtype::F16);
+        assert_eq!(KvDtype::from_env_value(Some("FP16")), KvDtype::F16);
+        assert_eq!(KvDtype::from_env_value(Some("half")), KvDtype::F16);
+        assert_eq!(KvDtype::from_env_value(Some("int8")), KvDtype::Int8);
+        assert_eq!(KvDtype::from_env_value(Some("I8")), KvDtype::Int8);
+        assert_eq!(KvDtype::F32.capacity_multiplier(), 1);
+        assert_eq!(KvDtype::F16.capacity_multiplier(), 2);
+        assert_eq!(KvDtype::Int8.capacity_multiplier(), 4);
+    }
+
+    /// An f16 pool serves back exactly the half-precision rounding of each
+    /// committed element — and nothing else changes (zero reads, lengths).
+    #[test]
+    fn f16_pool_rounds_rows_to_half_precision() {
+        use super::super::quant::{f16_round, f32_to_f16_bits, f16_bits_to_f32};
+        let pool = BlockPool::with_dtype(dims(), 4, None, KvDtype::F16);
+        assert_eq!(pool.kv_dtype(), KvDtype::F16);
+        let mut c = PagedKvCache::new(&pool);
+        let row: Vec<f32> = (0..16).map(|x| x as f32 * 0.1003 + 0.017).collect();
+        c.commit_row(&row, &row, 5);
+        for hh in 0..2 {
+            for l in 0..2 {
+                let (k, v) = c.row(l, hh, 5);
+                for (i, &got) in k.iter().enumerate() {
+                    let want = f16_round(row[(l * 2 + hh) * 4 + i]);
+                    assert_eq!(got.to_bits(), want.to_bits(), "l={l} h={hh} i={i}");
+                    // the mirror value is exactly binary16-representable
+                    assert_eq!(f16_bits_to_f32(f32_to_f16_bits(got)).to_bits(), got.to_bits());
+                }
+                assert_eq!(k, v);
+            }
+        }
+        let (kz, _) = c.row(1, 1, 4);
+        assert_eq!(kz, &[0.0; 4], "unwritten rows still read exact zeros");
+    }
+
+    /// Int8 storage is content-pure: a row's dequantized value depends only
+    /// on that row's committed content, so (a) rewriting one row never
+    /// perturbs a neighbour in the same block, (b) the same content
+    /// committed through different op sequences reads identically, and
+    /// (c) the error is bounded by half a quantization step.
+    #[test]
+    fn int8_pool_content_pure_and_bounded_error() {
+        let d = dims();
+        let n = d.n_layers * d.n_heads * d.d_head;
+        let row_a: Vec<f32> = (0..n).map(|x| (x as f32 * 0.7).sin() * 3.0).collect();
+        let row_b: Vec<f32> = (0..n).map(|x| (x as f32 * 1.3).cos() * 40.0).collect();
+
+        let pool = BlockPool::with_dtype(d, 4, None, KvDtype::Int8);
+        let mut c = PagedKvCache::new(&pool);
+        c.commit_row(&row_a, &row_a, 0);
+        let before: Vec<f32> = c.row(0, 0, 0).0.to_vec();
+        // error bound: half a step of this row's span (range 6.0 / 255)
+        for (got, want) in before.iter().zip(&row_a[..4]) {
+            assert!((got - want).abs() <= 6.0 / 255.0 * 0.5 + 1e-5, "{got} vs {want}");
+        }
+        // (a) a much larger neighbour row in the same block must not
+        // disturb the first row's dequantized values (per-row params)
+        c.commit_row(&row_b, &row_b, 1);
+        assert_eq!(c.row(0, 0, 0).0, before.as_slice(), "neighbour write perturbed row 0");
+
+        // (b) same logical content via a different op sequence
+        let mut c2 = PagedKvCache::new(&pool);
+        c2.commit_row(&row_b, &row_b, 1); // reverse order
+        c2.commit_row(&row_a, &row_a, 0);
+        for l in 0..d.n_layers {
+            for hh in 0..d.n_heads {
+                for pos in 0..2 {
+                    assert_eq!(c.row(l, hh, pos).0, c2.row(l, hh, pos).0, "order-dependent reads");
+                    assert_eq!(c.row(l, hh, pos).1, c2.row(l, hh, pos).1);
+                }
+            }
+        }
+
+        // constant rows (scale 0) dequantize exactly
+        let flat = vec![2.5f32; n];
+        c.commit_row(&flat, &flat, 2);
+        assert_eq!(c.row(1, 1, 2).0, &[2.5; 4]);
+    }
+
+    /// A quantized fork reads bit-identically to its source, and a
+    /// recycled quantized block comes back fully zeroed (codes and params
+    /// included).
+    #[test]
+    fn quantized_fork_and_recycle_preserve_contract() {
+        let d = dims();
+        let n = d.n_layers * d.n_heads * d.d_head;
+        for dtype in [KvDtype::F16, KvDtype::Int8] {
+            let pool = BlockPool::with_dtype(d, 4, None, dtype);
+            let mut a = PagedKvCache::new(&pool);
+            let row: Vec<f32> = (0..n).map(|x| x as f32 * 0.31 - 2.0).collect();
+            for pos in 0..6 {
+                a.commit_row(&row, &row, pos);
+            }
+            let b = a.clone_prefix(6);
+            for pos in 0..6 {
+                assert_eq!(a.row(1, 1, pos), b.row(1, 1, pos), "{dtype:?} fork diverges");
+            }
+            // divergent write forks; the source still reads its own codes
+            let mut b = b;
+            let row2: Vec<f32> = row.iter().map(|x| x * 10.0).collect();
+            b.commit_row(&row2, &row2, 5);
+            assert_ne!(a.row(0, 0, 5).0, b.row(0, 0, 5).0);
+            drop(a);
+            drop(b);
+            // recycled blocks must read as zeros again
+            let mut c = PagedKvCache::new(&pool);
+            c.commit_row(&row, &row, 0);
+            let (kz, vz) = c.row(0, 0, 2);
+            assert_eq!(kz, &[0.0; 4], "{dtype:?} recycled block not zeroed");
+            assert_eq!(vz, &[0.0; 4]);
+            let _ = a5;
+        }
+    }
+
+    /// The same f32-equivalent budget admits `capacity_multiplier()` times
+    /// the blocks on a reduced-precision pool — the lane-capacity win the
+    /// serving loop's admission schedules against.
+    #[test]
+    fn effective_capacity_scales_with_dtype() {
+        for (dtype, want) in [(KvDtype::F32, 2), (KvDtype::F16, 4), (KvDtype::Int8, 8)] {
+            let pool = BlockPool::with_dtype(dims(), 4, Some(2), dtype);
+            assert_eq!(pool.max_blocks(), Some(2), "budget stays in f32 units");
+            assert_eq!(pool.effective_max_blocks(), Some(want));
+            let mut held = Vec::new();
+            for i in 0..want {
+                held.push(pool.try_alloc_zeroed().unwrap_or_else(|| {
+                    panic!("{dtype:?}: block {i} of {want} must fit the budget")
+                }));
+            }
+            assert!(pool.try_alloc_zeroed().is_none(), "{dtype:?}: budget must cap at {want}");
+        }
     }
 }

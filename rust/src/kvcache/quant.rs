@@ -1,0 +1,237 @@
+//! Scalar quantization primitives for reduced-precision KV blocks.
+//!
+//! Two codecs, both pure and deterministic:
+//!
+//! * **f16** — IEEE 754 binary16, converted manually (no nightly `f16`,
+//!   no new dependencies) with round-to-nearest-even, the hardware
+//!   rounding mode. Conversion is per-element and stateless, so a stored
+//!   f16 value is a pure function of the single f32 written.
+//! * **int8** — affine (asymmetric) 8-bit codes `q ∈ [0, 255]` with
+//!   per-span `scale`/`zero_point` chosen from the span's min/max:
+//!   `x̂ = zero + scale·q`. The KV pool applies this per
+//!   (block, layer·head, token-row) `d_head` span, so writing one row
+//!   never perturbs the dequantized contents of any other row — the
+//!   content-purity property the paged cache's determinism contract
+//!   (batched == serial, write-order independence) relies on.
+//!
+//! Both codecs map an all-zero span to exactly `0.0`, matching the
+//! "unallocated blocks read as zeros" contract of
+//! [`PagedKvCache`](super::PagedKvCache).
+
+/// Convert an `f32` to IEEE 754 binary16 bits with round-to-nearest-even.
+/// Overflow saturates to ±infinity; NaN payloads are quietened.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let abs = bits & 0x7fff_ffff;
+    if abs >= 0x7f80_0000 {
+        // infinity (mantissa 0) or NaN (quietened)
+        return sign | if abs > 0x7f80_0000 { 0x7e00 } else { 0x7c00 };
+    }
+    let exp = (abs >> 23) as i32 - 127;
+    let mant = (abs & 0x007f_ffff) | 0x0080_0000; // 24-bit significand
+    if exp < -25 {
+        // below half the smallest subnormal: rounds to (signed) zero
+        return sign;
+    }
+    // Bits shifted off the 24-bit significand: 13 for normals, more as
+    // the value sinks into the subnormal range.
+    let shift: u32 = if exp < -14 { (13 + (-14 - exp)) as u32 } else { 13 };
+    let halfway = 1u32 << (shift - 1);
+    let rest = mant & ((1u32 << shift) - 1);
+    let mut out = mant >> shift;
+    if rest > halfway || (rest == halfway && (out & 1) == 1) {
+        out += 1; // round to nearest, ties to even
+    }
+    if exp < -14 {
+        // subnormal result; a rounding carry into bit 10 promotes to the
+        // smallest normal, which the bit pattern encodes naturally
+        return sign | out as u16;
+    }
+    // normal result: remove the implicit bit and add the exponent field;
+    // a rounding carry propagates into the exponent via the addition
+    let val = (((exp + 15) as u32) << 10) + (out - (1 << 10));
+    if val >= 0x7c00 {
+        return sign | 0x7c00; // rounded past the largest finite half
+    }
+    sign | val as u16
+}
+
+/// Convert IEEE 754 binary16 bits back to `f32` (exact — every half value
+/// is representable in single precision).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x3ff) as u32;
+    let bits = if exp == 0x1f {
+        sign | 0x7f80_0000 | (mant << 13)
+    } else if exp == 0 {
+        if mant == 0 {
+            sign // signed zero
+        } else {
+            // subnormal: value = (mant/1024)·2^-14 — normalize into f32
+            let mut e = -14i32;
+            let mut m = mant;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | (((e + 127) as u32) << 23) | ((m & 0x3ff) << 13)
+        }
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Round an `f32` through binary16 and back: the value a reduced-precision
+/// KV pool actually stores for a written element.
+#[inline]
+pub fn f16_round(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+/// Affine int8 parameters for one quantized span: `x̂ = zero + scale·q`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Affine {
+    /// Step between adjacent codes; `0.0` for a constant span (every code
+    /// dequantizes to `zero` exactly).
+    pub scale: f32,
+    /// Value of code 0 (the span minimum).
+    pub zero: f32,
+}
+
+impl Affine {
+    /// The parameters of an all-zero (never written) span.
+    pub const ZERO: Affine = Affine { scale: 0.0, zero: 0.0 };
+}
+
+/// Choose affine parameters covering `xs` exactly at the extremes:
+/// `scale = (max − min)/255`, `zero = min`. A constant (or empty) span
+/// gets `scale = 0`, so dequantization reproduces the constant exactly —
+/// in particular an all-zero span dequantizes to exact zeros.
+pub fn affine_params(xs: &[f32]) -> Affine {
+    let mut min = f32::INFINITY;
+    let mut max = f32::NEG_INFINITY;
+    for &x in xs {
+        min = min.min(x);
+        max = max.max(x);
+    }
+    if !min.is_finite() || !max.is_finite() || max <= min {
+        return Affine { scale: 0.0, zero: if min.is_finite() { min } else { 0.0 } };
+    }
+    Affine { scale: (max - min) / 255.0, zero: min }
+}
+
+/// Quantize one element under `a` (round to nearest code, clamped).
+#[inline]
+pub fn affine_quantize(x: f32, a: Affine) -> u8 {
+    if a.scale == 0.0 {
+        return 0;
+    }
+    ((x - a.zero) / a.scale).round().clamp(0.0, 255.0) as u8
+}
+
+/// Dequantize one code under `a`.
+#[inline]
+pub fn affine_dequantize(q: u8, a: Affine) -> f32 {
+    a.zero + a.scale * q as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f16_round_trip_exact_for_representable_values() {
+        for x in [
+            0.0f32, -0.0, 1.0, -1.0, 0.5, -2.5, 0.25, 1024.0, 65504.0, -65504.0,
+            6.103515625e-5,          // smallest normal
+            5.960464477539063e-8,    // smallest subnormal
+        ] {
+            let r = f16_round(x);
+            assert_eq!(r.to_bits(), x.to_bits(), "{x} not preserved (got {r})");
+        }
+    }
+
+    #[test]
+    fn f16_rounds_to_nearest_even() {
+        // 1.0 + 2^-11 sits exactly halfway between 1.0 and the next half
+        // (1.0 + 2^-10); ties go to the even mantissa, i.e. 1.0.
+        let tie = 1.0f32 + 2.0f32.powi(-11);
+        assert_eq!(f16_round(tie), 1.0);
+        // 1.0 + 3·2^-11 is halfway between odd 1.0+2^-10 and even 1.0+2^-9
+        let tie_up = 1.0f32 + 3.0 * 2.0f32.powi(-11);
+        assert_eq!(f16_round(tie_up), 1.0 + 2.0f32.powi(-9));
+        // just above halfway rounds up
+        assert_eq!(f16_round(1.0 + 2.0f32.powi(-11) + 2.0f32.powi(-20)), 1.0 + 2.0f32.powi(-10));
+        // relative error of any normal-range value is bounded by 2^-11
+        for i in 0..200 {
+            let x = 0.37f32 * i as f32 + 0.013;
+            let r = f16_round(x);
+            assert!((r - x).abs() <= x.abs() * 2.0f32.powi(-11) + 1e-12, "{x} -> {r}");
+        }
+    }
+
+    #[test]
+    fn f16_specials_and_overflow() {
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7c00);
+        assert_eq!(f32_to_f16_bits(f32::NEG_INFINITY), 0xfc00);
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        // past the largest finite half: saturate to infinity
+        assert_eq!(f32_to_f16_bits(65520.0), 0x7c00);
+        assert_eq!(f32_to_f16_bits(1e9), 0x7c00);
+        assert_eq!(f32_to_f16_bits(-1e9), 0xfc00);
+        // largest value that still rounds down to 65504
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(65519.0)), 65504.0);
+        // underflow to zero keeps the sign
+        assert_eq!(f32_to_f16_bits(1e-12), 0x0000);
+        assert_eq!(f32_to_f16_bits(-1e-12), 0x8000);
+        // subnormal round trip through the bit patterns
+        for bits in [0x0001u16, 0x0155, 0x03ff, 0x8001, 0x83ff] {
+            assert_eq!(f32_to_f16_bits(f16_bits_to_f32(bits)), bits);
+        }
+    }
+
+    #[test]
+    fn affine_constant_and_zero_spans_are_exact() {
+        let a = affine_params(&[0.0; 8]);
+        assert_eq!(a, Affine::ZERO);
+        assert_eq!(affine_dequantize(affine_quantize(0.0, a), a), 0.0);
+        let c = affine_params(&[-3.25; 5]);
+        assert_eq!(c.scale, 0.0);
+        assert_eq!(affine_dequantize(affine_quantize(-3.25, c), c), -3.25);
+        assert_eq!(affine_params(&[]), Affine { scale: 0.0, zero: 0.0 });
+    }
+
+    #[test]
+    fn affine_error_bounded_by_half_step_and_exact_at_extremes() {
+        let xs: Vec<f32> = (0..32).map(|i| (i as f32 * 0.77).sin() * 4.0 - 1.0).collect();
+        let a = affine_params(&xs);
+        assert!(a.scale > 0.0);
+        let min = xs.iter().cloned().fold(f32::INFINITY, f32::min);
+        let max = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        for &x in &xs {
+            let xhat = affine_dequantize(affine_quantize(x, a), a);
+            assert!((xhat - x).abs() <= a.scale * 0.5 + 1e-6, "{x} -> {xhat} (scale {})", a.scale);
+        }
+        // the span extremes are codes 0 and 255 (up to fp rounding)
+        let rmin = affine_dequantize(affine_quantize(min, a), a);
+        let rmax = affine_dequantize(affine_quantize(max, a), a);
+        assert!((rmin - min).abs() <= a.scale * 1e-3);
+        assert!((rmax - max).abs() <= a.scale * 1e-3);
+    }
+
+    #[test]
+    fn affine_codes_monotone() {
+        let a = Affine { scale: 0.1, zero: -1.0 };
+        let mut last = 0u8;
+        for i in 0..=100 {
+            let q = affine_quantize(-1.0 + i as f32 * 0.02, a);
+            assert!(q >= last, "codes must be monotone in the input");
+            last = q;
+        }
+        assert_eq!(affine_quantize(-5.0, a), 0, "clamped below");
+        assert_eq!(affine_quantize(500.0, a), 255, "clamped above");
+    }
+}

@@ -7,9 +7,13 @@
 //!   version
 //!
 //! Backend selection: `--backend cpu` (default; `--preset tiny|small`,
-//! `--model-seed N` size and seed the reference model) or `--backend pjrt`
+//! `--model-seed N` size and seed the reference model), `--backend
+//! cpu-simd` (same model, f32x8 lane-chunk kernels) or `--backend pjrt`
 //! (`--family <name>`, needs a `--features pjrt` build plus compiled
-//! artifacts).
+//! artifacts). With no `--backend` flag the `SPECDELAY_BACKEND`
+//! environment variable picks the default. `--kv-dtype f32|f16|int8`
+//! mirrors `SPECDELAY_KV_DTYPE` and selects the paged-KV element
+//! precision for the whole process.
 //!
 //! Drafting policy: `--drafter delayed|root|greedy` (generate and
 //! serve-loop) picks the tree shape; `--selector` (serve-loop) replaces
@@ -32,7 +36,7 @@ use specdelay::benchkit::{self, experiments, Scale};
 use specdelay::coordinator::{server, FixedPolicy, ServeLoop, ServeRequest, SpecEngine};
 use specdelay::dist::SamplingConfig;
 use specdelay::draft::{Action, DrafterKind};
-use specdelay::runtime::{Backend, CpuModelConfig, CpuRefBackend};
+use specdelay::runtime::{Backend, CpuModelConfig, CpuRefBackend, CpuSimdBackend};
 #[cfg(feature = "pjrt")]
 use specdelay::selector::LatencyModel;
 use specdelay::selector::SelectorConfig;
@@ -47,6 +51,19 @@ fn main() {
         std::process::exit(2);
     }
     let cmd = argv.remove(0);
+    // `--kv-dtype` mirrors SPECDELAY_KV_DTYPE; it must be exported before
+    // the first KV pool latches the process-wide dtype
+    // (`kvcache::KvDtype::global`), so handle it ahead of dispatch. The
+    // option stays in argv — subcommand parsers simply ignore it.
+    for (i, s) in argv.iter().enumerate() {
+        if let Some(v) = s.strip_prefix("--kv-dtype=") {
+            std::env::set_var("SPECDELAY_KV_DTYPE", v);
+        } else if s == "--kv-dtype" {
+            if let Some(v) = argv.get(i + 1) {
+                std::env::set_var("SPECDELAY_KV_DTYPE", v);
+            }
+        }
+    }
     let res = match cmd.as_str() {
         "generate" => cmd_generate(argv),
         "serve" => cmd_serve(argv),
@@ -72,7 +89,8 @@ fn main() {
 fn print_usage() {
     eprintln!(
         "usage: specdelay <generate|serve|serve-loop|microbench|collect-traces|train-selector|bench|version> [--opts]\n\
-         backend: --backend cpu (default, --preset tiny|small) | --backend pjrt (--family <name>)"
+         backend: --backend cpu|cpu-simd (--preset tiny|small) | --backend pjrt (--family <name>)\n\
+         kv: --kv-dtype f32|f16|int8 (paged pools; mirrors SPECDELAY_KV_DTYPE)"
     );
 }
 
@@ -90,15 +108,23 @@ fn cpu_config(a: &Args) -> Result<CpuModelConfig> {
     }
 }
 
-/// Resolve `--backend cpu|pjrt` into a boxed backend.
+/// Resolve `--backend cpu|cpu-simd|pjrt` into a boxed backend. When the
+/// flag is absent, `SPECDELAY_BACKEND` supplies the default ("cpu" if
+/// that is unset too).
 fn load_backend(a: &Args) -> Result<Box<dyn Backend>> {
-    match a.get_or("backend", "cpu") {
-        "cpu" => {
+    let env = std::env::var("SPECDELAY_BACKEND").ok();
+    let choice = a.get("backend").unwrap_or_else(|| env.as_deref().unwrap_or("cpu"));
+    match choice {
+        "cpu" | "cpu-ref" => {
             let seed = a.get_usize("model-seed", 0).map_err(|e| anyhow!(e))? as u64;
             Ok(Box::new(CpuRefBackend::new(&cpu_config(a)?, seed)))
         }
+        "cpu-simd" => {
+            let seed = a.get_usize("model-seed", 0).map_err(|e| anyhow!(e))? as u64;
+            Ok(Box::new(CpuSimdBackend::new(&cpu_config(a)?, seed)))
+        }
         "pjrt" => pjrt_backend(a),
-        other => Err(anyhow!("unknown backend {other} (cpu|pjrt)")),
+        other => Err(anyhow!("unknown backend {other} (cpu|cpu-simd|pjrt)")),
     }
 }
 

@@ -28,9 +28,12 @@
 //! a truncated test vocabulary) wrap modulo the vocab instead of panicking —
 //! padding lanes of a bucketed tree pass are computed and discarded.
 
+use std::marker::PhantomData;
+
 use anyhow::{bail, Result};
 
 use super::backend::Backend;
+use super::kernels::{attend, ln, matvec, rope, ForwardKernels, ScalarKernels};
 use super::{DecodeOut, FamilyMeta, ModelDims, PrefillOut, Role, RolloutOut, TreeOut};
 use crate::dist::SamplingConfig;
 use crate::kvcache::KvRef;
@@ -154,58 +157,6 @@ fn norm_vec(rng: &mut Pcg64, n: usize, scale: f32) -> Vec<f32> {
     (0..n).map(|_| normal(rng) * scale).collect()
 }
 
-/// LayerNorm with affine params, written into `out` (same length as `x`).
-fn ln(x: &[f32], g: &[f32], b: &[f32], out: &mut [f32]) {
-    let n = x.len() as f32;
-    let mut mu = 0.0f32;
-    for &v in x {
-        mu += v;
-    }
-    mu /= n;
-    let mut var = 0.0f32;
-    for &v in x {
-        let dv = v - mu;
-        var += dv * dv;
-    }
-    var /= n;
-    let inv = 1.0 / (var + 1e-5).sqrt();
-    for (((o, &xv), &gv), &bv) in out.iter_mut().zip(x).zip(g).zip(b) {
-        *o = (xv - mu) * inv * gv + bv;
-    }
-}
-
-/// out = x @ w with `w` row-major `[x.len(), n_out]`.
-fn matvec(x: &[f32], w: &[f32], n_out: usize, out: &mut [f32]) {
-    out.fill(0.0);
-    for (i, &xi) in x.iter().enumerate() {
-        let row = &w[i * n_out..(i + 1) * n_out];
-        for (o, &wv) in out.iter_mut().zip(row) {
-            *o += xi * wv;
-        }
-    }
-}
-
-/// tanh-approximation GELU (matches `jax.nn.gelu`'s default).
-fn gelu(x: f32) -> f32 {
-    0.5 * x * (1.0 + ((0.797_884_6 * (x + 0.044715 * x * x * x)).tanh()))
-}
-
-/// Rotary position embedding applied in place to a `[H·Dh]` row.
-fn rope(row: &mut [f32], n_heads: usize, d_head: usize, pos: usize) {
-    for h in 0..n_heads {
-        let base = h * d_head;
-        for j in 0..d_head / 2 {
-            let freq = 10000.0f32.powf(-((2 * j) as f32) / d_head as f32);
-            let theta = pos as f32 * freq;
-            let (sin, cos) = theta.sin_cos();
-            let x1 = row[base + 2 * j];
-            let x2 = row[base + 2 * j + 1];
-            row[base + 2 * j] = x1 * cos - x2 * sin;
-            row[base + 2 * j + 1] = x1 * sin + x2 * cos;
-        }
-    }
-}
-
 /// Gathered attention keys/values: one `[H·Dh]` row per visible position,
 /// in the canonical order (cache rows ascending, in-flight rows, self).
 #[derive(Default)]
@@ -240,57 +191,6 @@ impl KeyBuf {
             self.v.extend_from_slice(v);
         }
         self.n += 1;
-    }
-}
-
-/// Softmax attention of one query row over gathered keys, per head, with
-/// 1/√Dh score scaling; output written into `out` (`[H·Dh]`).
-#[allow(clippy::too_many_arguments)]
-fn attend(
-    q: &[f32],
-    keys: &[f32],
-    vals: &[f32],
-    n_keys: usize,
-    n_heads: usize,
-    d_head: usize,
-    scores: &mut Vec<f32>,
-    out: &mut [f32],
-) {
-    let scale = 1.0 / (d_head as f32).sqrt();
-    let row = n_heads * d_head;
-    for h in 0..n_heads {
-        let qh = &q[h * d_head..(h + 1) * d_head];
-        scores.clear();
-        let mut max = f32::NEG_INFINITY;
-        for kidx in 0..n_keys {
-            let base = kidx * row + h * d_head;
-            let kh = &keys[base..base + d_head];
-            let mut sv = 0.0f32;
-            for (a, b) in qh.iter().zip(kh) {
-                sv += a * b;
-            }
-            sv *= scale;
-            if sv > max {
-                max = sv;
-            }
-            scores.push(sv);
-        }
-        let mut denom = 0.0f32;
-        for sv in scores.iter_mut() {
-            *sv = (*sv - max).exp();
-            denom += *sv;
-        }
-        let inv = 1.0 / denom;
-        let oh = &mut out[h * d_head..(h + 1) * d_head];
-        oh.fill(0.0);
-        for (kidx, &w) in scores.iter().enumerate() {
-            let base = kidx * row + h * d_head;
-            let vh = &vals[base..base + d_head];
-            let wn = w * inv;
-            for (o, &vv) in oh.iter_mut().zip(vh) {
-                *o += wn * vv;
-            }
-        }
     }
 }
 
@@ -374,15 +274,11 @@ impl CpuModel {
     }
 
     /// Tied-embedding logits of a final-LN hidden state, into `out` (`[V]`).
-    fn logits_into(&self, hidden: &[f32], out: &mut [f32]) {
+    fn logits_into<K: ForwardKernels>(&self, hidden: &[f32], out: &mut [f32]) {
         let d = self.dims.d_model;
         for (t, o) in out.iter_mut().enumerate() {
             let row = &self.tok_emb[t * d..(t + 1) * d];
-            let mut acc = 0.0f32;
-            for (a, b) in hidden.iter().zip(row) {
-                acc += a * b;
-            }
-            *o = acc * self.logit_scale;
+            *o = K::dot(hidden, row) * self.logit_scale;
         }
     }
 
@@ -390,7 +286,7 @@ impl CpuModel {
     /// (read through the KV view), then `n_own` in-flight path rows (per
     /// layer, `[r·H·Dh..]` slices of `own_k`/`own_v`), then itself.
     #[allow(clippy::too_many_arguments)]
-    fn step(
+    fn step<K: ForwardKernels>(
         &self,
         kv: KvRef<'_>,
         cache_limit: usize,
@@ -412,7 +308,7 @@ impl CpuModel {
         let mut k_rows = Vec::with_capacity(self.dims.n_layers * da);
         let mut v_rows = Vec::with_capacity(self.dims.n_layers * da);
         for (l, layer) in self.layers.iter().enumerate() {
-            ln(&x, &layer.ln1_g, &layer.ln1_b, &mut yv);
+            ln::<K>(&x, &layer.ln1_g, &layer.ln1_b, &mut yv);
             let mut q = vec![0.0f32; da];
             let mut k = vec![0.0f32; da];
             let mut v = vec![0.0f32; da];
@@ -429,7 +325,7 @@ impl CpuModel {
                 keys.push_row(&own_k[l][r * da..(r + 1) * da], &own_v[l][r * da..(r + 1) * da]);
             }
             keys.push_row(&k, &v);
-            attend(
+            attend::<K>(
                 &q,
                 &keys.k,
                 &keys.v,
@@ -443,11 +339,9 @@ impl CpuModel {
             for (xv, &pv) in x.iter_mut().zip(&proj) {
                 *xv += pv;
             }
-            ln(&x, &layer.ln2_g, &layer.ln2_b, &mut yv);
+            ln::<K>(&x, &layer.ln2_g, &layer.ln2_b, &mut yv);
             matvec(&yv, &layer.w1, self.d_mlp, &mut h1);
-            for (hv, &bv) in h1.iter_mut().zip(&layer.b1) {
-                *hv = gelu(*hv + bv);
-            }
+            K::gelu_bias(&mut h1, &layer.b1);
             matvec(&h1, &layer.w2, d, &mut proj);
             for ((xv, &pv), &bv) in x.iter_mut().zip(&proj).zip(&layer.b2) {
                 *xv += pv + bv;
@@ -456,16 +350,16 @@ impl CpuModel {
             v_rows.extend_from_slice(&v);
         }
         let mut hidden = vec![0.0f32; d];
-        ln(&x, &self.lnf_g, &self.lnf_b, &mut hidden);
+        ln::<K>(&x, &self.lnf_g, &self.lnf_b, &mut hidden);
         let mut logits = vec![0.0f32; self.dims.vocab];
-        self.logits_into(&hidden, &mut logits);
+        self.logits_into::<K>(&hidden, &mut logits);
         StepOut { logits, hidden, k_rows, v_rows }
     }
 
     /// Batched forward over `tokens` at `positions`: each row attends cache
     /// rows `< limit` (when a cache is given) plus every batch row `j` with
     /// `allowed(i, j)` (ascending; `allowed(i, i)` covers self-attention).
-    fn batch(
+    fn batch<K: ForwardKernels>(
         &self,
         cache: Option<(KvRef<'_>, usize)>,
         tokens: &[i32],
@@ -492,7 +386,7 @@ impl CpuModel {
             // every row's q/k/v first: attention reads the whole batch's
             // pre-update keys
             for i in 0..n {
-                ln(&xs[i * d..(i + 1) * d], &layer.ln1_g, &layer.ln1_b, &mut yv);
+                ln::<K>(&xs[i * d..(i + 1) * d], &layer.ln1_g, &layer.ln1_b, &mut yv);
                 let pos = positions[i].max(0) as usize;
                 let qrow = &mut qs[i * da..(i + 1) * da];
                 matvec(&yv, &layer.wq, da, qrow);
@@ -515,7 +409,7 @@ impl CpuModel {
                         keys.push_row(&k_rows[base..base + da], &v_rows[base..base + da]);
                     }
                 }
-                attend(
+                attend::<K>(
                     &qs[i * da..(i + 1) * da],
                     &keys.k,
                     &keys.v,
@@ -530,11 +424,9 @@ impl CpuModel {
                 for (xv, &pv) in x.iter_mut().zip(&proj) {
                     *xv += pv;
                 }
-                ln(x, &layer.ln2_g, &layer.ln2_b, &mut yv);
+                ln::<K>(x, &layer.ln2_g, &layer.ln2_b, &mut yv);
                 matvec(&yv, &layer.w1, self.d_mlp, &mut h1);
-                for (hv, &bv) in h1.iter_mut().zip(&layer.b1) {
-                    *hv = gelu(*hv + bv);
-                }
+                K::gelu_bias(&mut h1, &layer.b1);
                 matvec(&h1, &layer.w2, d, &mut proj);
                 for ((xv, &pv), &bv) in x.iter_mut().zip(&proj).zip(&layer.b2) {
                     *xv += pv + bv;
@@ -545,8 +437,8 @@ impl CpuModel {
         let mut hidden = vec![0.0f32; n * d];
         let mut logits = vec![0.0f32; n * v];
         for i in 0..n {
-            ln(&xs[i * d..(i + 1) * d], &self.lnf_g, &self.lnf_b, &mut hidden[i * d..(i + 1) * d]);
-            self.logits_into(&hidden[i * d..(i + 1) * d], &mut logits[i * v..(i + 1) * v]);
+            ln::<K>(&xs[i * d..(i + 1) * d], &self.lnf_g, &self.lnf_b, &mut hidden[i * d..(i + 1) * d]);
+            self.logits_into::<K>(&hidden[i * d..(i + 1) * d], &mut logits[i * v..(i + 1) * v]);
         }
         BatchOut { logits, hidden, k_rows, v_rows }
     }
@@ -556,8 +448,14 @@ impl CpuModel {
 // The backend
 // ---------------------------------------------------------------------------
 
-/// Always-built CPU reference backend: one seeded target/draft model pair
-/// behind the [`Backend`] trait.
+/// Always-built CPU backend core: one seeded target/draft model pair
+/// behind the [`Backend`] trait, generic over the
+/// [`ForwardKernels`] set its forward passes reduce with. The two
+/// instantiations — [`CpuRefBackend`] (scalar, the bit-exact oracle) and
+/// [`CpuSimdBackend`](super::CpuSimdBackend) (f32x8 lanes, ≤ 1e-5
+/// relative tolerance against the oracle) — share *everything* else:
+/// identical seeded weights, identical key-gather order, identical shape
+/// handling.
 ///
 /// ```
 /// use specdelay::runtime::{Backend, CpuModelConfig, CpuRefBackend, Role};
@@ -566,21 +464,28 @@ impl CpuModel {
 /// let out = backend.prefill(Role::Target, &[7, 3, 11], 3).unwrap();
 /// assert_eq!(out.logits.len(), backend.dims(Role::Target).vocab);
 /// ```
-pub struct CpuRefBackend {
+pub struct CpuBackendCore<K: ForwardKernels> {
     meta: FamilyMeta,
     target: CpuModel,
     draft: CpuModel,
+    _kernels: PhantomData<fn() -> K>,
 }
 
-impl CpuRefBackend {
+/// The scalar CPU reference backend — the bit-exact oracle every other
+/// execution path (paged reads, SIMD lanes, PJRT) is scored against.
+pub type CpuRefBackend = CpuBackendCore<ScalarKernels>;
+
+impl<K: ForwardKernels> CpuBackendCore<K> {
     /// Build a target/draft pair from one config: same dimensions,
     /// different seeded weights (streams derived from `seed`), so p ≠ q
-    /// with comparable entropy.
-    pub fn new(cfg: &CpuModelConfig, seed: u64) -> CpuRefBackend {
+    /// with comparable entropy. The weight streams do not depend on `K`
+    /// — every kernel set sees bit-identical weights for a given
+    /// `(config, seed)` pair.
+    pub fn new(cfg: &CpuModelConfig, seed: u64) -> CpuBackendCore<K> {
         let dims = cfg.dims();
-        CpuRefBackend {
+        CpuBackendCore {
             meta: FamilyMeta {
-                family: "cpu-ref".to_string(),
+                family: K::NAME.to_string(),
                 target: dims,
                 draft: dims,
                 s_pre: cfg.s_pre,
@@ -606,19 +511,19 @@ impl CpuRefBackend {
     fn check_cache(&self, role: Role, kv: KvRef<'_>) -> Result<()> {
         let want = self.model(role).dims.kv_elems();
         if let Err((klen, vlen)) = kv.check_elems(want) {
-            bail!("cpu-ref: cache size {klen}/{vlen} != expected {want}");
+            bail!("{}: cache size {klen}/{vlen} != expected {want}", K::NAME);
         }
         Ok(())
     }
 }
 
-impl Backend for CpuRefBackend {
+impl<K: ForwardKernels> Backend for CpuBackendCore<K> {
     fn meta(&self) -> &FamilyMeta {
         &self.meta
     }
 
     fn name(&self) -> &'static str {
-        "cpu-ref"
+        K::NAME
     }
 
     fn prefill(&self, role: Role, tokens: &[i32], length: usize) -> Result<PrefillOut> {
@@ -628,7 +533,7 @@ impl Backend for CpuRefBackend {
             bail!("prefill: bad token count {} (s_pre {s_pre})", tokens.len());
         }
         let positions: Vec<i32> = (0..length as i32).collect();
-        let out = m.batch(None, &tokens[..length], &positions, &|i, j| j <= i);
+        let out = m.batch::<K>(None, &tokens[..length], &positions, &|i, j| j <= i);
         let dims = m.dims;
         let (h, dh) = (dims.n_heads, dims.d_head);
         let da = h * dh;
@@ -678,7 +583,7 @@ impl Backend for CpuRefBackend {
         // order exactly, so the chunk rows are bitwise identical to theirs
         let positions: Vec<i32> = (start as i32..(start + len) as i32).collect();
         let out =
-            m.batch(Some((kv, start)), &tokens[start..start + len], &positions, &|i, j| j <= i);
+            m.batch::<K>(Some((kv, start)), &tokens[start..start + len], &positions, &|i, j| j <= i);
         let dims = m.dims;
         let (h, dh) = (dims.n_heads, dims.d_head);
         let da = h * dh;
@@ -713,7 +618,7 @@ impl Backend for CpuRefBackend {
             bail!("decode: position {pos} exceeds max_seq {}", m.dims.max_seq);
         }
         let no_rows: Vec<Vec<f32>> = vec![Vec::new(); m.dims.n_layers];
-        let out = m.step(kv, pos, &no_rows, &no_rows, 0, token, pos);
+        let out = m.step::<K>(kv, pos, &no_rows, &no_rows, 0, token, pos);
         Ok(DecodeOut {
             logits: out.logits,
             hidden: out.hidden,
@@ -761,7 +666,7 @@ impl Backend for CpuRefBackend {
                 (0..dims.n_layers).map(|_| Vec::with_capacity(l * da)).collect();
             let mut cur = token;
             for j in 0..l {
-                let out = m.step(kv, pos, &own_k, &own_v, j, cur, pos + j);
+                let out = m.step::<K>(kv, pos, &own_k, &own_v, j, cur, pos + j);
                 for lyr in 0..dims.n_layers {
                     let src = lyr * da;
                     let dst = ((lyr * k + b) * l + j) * da;
@@ -803,7 +708,7 @@ impl Backend for CpuRefBackend {
         if cache_len > m.dims.max_seq {
             bail!("tree_verify: cache_len {cache_len} exceeds max_seq");
         }
-        let out = m.batch(Some((kv, cache_len)), tokens, positions, &|i, j| {
+        let out = m.batch::<K>(Some((kv, cache_len)), tokens, positions, &|i, j| {
             bias[i * n_bucket + j] > -1e29
         });
         Ok(TreeOut {
@@ -893,6 +798,69 @@ mod tests {
                     }
                 }
             }
+        }
+    }
+
+    /// RoPE absolute-position invariant under preemption resume
+    /// (release-and-rebuild): a lane preempted at a *non-block-aligned*
+    /// offset loses its blocks and later replays its whole context through
+    /// `prefill_chunk` with a chunk schedule unrelated to the original
+    /// one. Every rebuilt row must be RoPE'd at its absolute sequence
+    /// position — bitwise equal to the one-shot prefill — and the next
+    /// decode must continue the stream as if the preemption never
+    /// happened. An off-by-one in the `pos` passed through a resumed
+    /// `prefill_chunk` (e.g. restarting relative positions at the resume
+    /// offset) shifts every rotary angle and fails this bitwise.
+    #[test]
+    fn rope_positions_survive_release_and_rebuild_resume() {
+        use crate::kvcache::BlockPool;
+
+        let cfg = CpuModelConfig::tiny();
+        let be = CpuRefBackend::new(&cfg, 9);
+        let toks = [5i32, 9, 3, 7, 1, 12, 4, 6, 2, 10, 8];
+        let n = toks.len();
+        for role in [Role::Target, Role::Draft] {
+            let dims = be.dims(role);
+            let full = be.prefill(role, &toks, n).unwrap();
+            let mut oracle = KvCache::new(dims);
+            oracle.commit_prefill(&full.k_rows, &full.v_rows, cfg.s_pre, n);
+
+            // original lane progresses in chunks over paged storage with
+            // block size 4, reaching row 8 before preemption
+            let pool = BlockPool::new(dims, 4, None);
+            let mut lane = KvCache::paged(&pool);
+            for (start, len) in [(0usize, 5usize), (5, 3)] {
+                let out = be.prefill_chunk(role, lane.view(), &toks, start, len).unwrap();
+                lane.commit_chunk(&out.k_rows, &out.v_rows, len, start, len);
+            }
+            // preempt: release every block, then rebuild with a different
+            // schedule whose resume offsets (3, 7) are not block-aligned
+            drop(lane);
+            let mut rebuilt = KvCache::paged(&pool);
+            let mut last = None;
+            for (start, len) in [(0usize, 3usize), (3, 4), (7, 4)] {
+                let out = be.prefill_chunk(role, rebuilt.view(), &toks, start, len).unwrap();
+                rebuilt.commit_chunk(&out.k_rows, &out.v_rows, len, start, len);
+                last = Some(out);
+            }
+            let last = last.unwrap();
+            assert_eq!(last.logits, full.logits, "{role:?}: resumed logits diverge");
+            assert_eq!(last.hidden, full.hidden, "{role:?}: resumed hidden diverges");
+            for l in 0..dims.n_layers {
+                for hh in 0..dims.n_heads {
+                    for pos in 0..n {
+                        assert_eq!(
+                            rebuilt.read_row(l, hh, pos),
+                            oracle.read_row(l, hh, pos),
+                            "{role:?}: rebuilt row l={l} h={hh} pos={pos} not bitwise equal"
+                        );
+                    }
+                }
+            }
+            // the stream continues exactly where it would have
+            let d_oracle = be.decode(role, oracle.view(), 13, n).unwrap();
+            let d_rebuilt = be.decode(role, rebuilt.view(), 13, n).unwrap();
+            assert_eq!(d_oracle.logits, d_rebuilt.logits, "{role:?}: post-resume decode diverges");
         }
     }
 

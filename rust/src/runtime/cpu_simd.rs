@@ -1,0 +1,222 @@
+//! f32x8 SIMD CPU backend: the fast sibling of the scalar reference.
+//!
+//! [`CpuSimdBackend`] instantiates the shared
+//! [`CpuBackendCore`](super::CpuBackendCore) with the [`SimdKernels`]
+//! set: every reduction (attention score dots, softmax denominators,
+//! LayerNorm moments, tied-embedding logit dots) runs over eight
+//! independent lane accumulators in ascending 8-element chunks —
+//! portable `std::simd`-style lane code on stable rust (plain `[f32; 8]`
+//! arrays the compiler vectorizes; no nightly features, no new
+//! dependencies). Everything else — seeded weights, the canonical
+//! key-gather order over [`crate::kvcache::KvRef`] block-table views,
+//! shape handling, sampling — is byte-for-byte the reference backend's
+//! code, so the only difference between `cpu-ref` and `cpu-simd` outputs
+//! is floating-point summation order.
+//!
+//! That difference is bounded, not bit-exact: the per-op and end-to-end
+//! contract (pinned by the tests here and in `tests/backend_simd.rs`) is
+//! ≤ 1e-5 *relative* error against [`CpuRefBackend`](super::CpuRefBackend)
+//! on every kernel output. Greedy token streams therefore agree with the
+//! reference for a bounded horizon but may eventually diverge where two
+//! logits sit within rounding distance — the determinism ladder in
+//! `docs/ARCHITECTURE.md` spells out which suites require which rung.
+
+use super::cpu::CpuBackendCore;
+use super::kernels::{self, gelu, ForwardKernels};
+
+/// The f32x8 kernel set: lane-chunked reductions (see
+/// [`kernels::dot_f32x8`] for the exact combine order) plus a chunked
+/// GELU whose polynomial part vectorizes.
+pub struct SimdKernels;
+
+impl ForwardKernels for SimdKernels {
+    const NAME: &'static str = "cpu-simd";
+
+    fn dot(a: &[f32], b: &[f32]) -> f32 {
+        kernels::dot_f32x8(a, b)
+    }
+
+    fn sum(x: &[f32]) -> f32 {
+        kernels::sum_f32x8(x)
+    }
+
+    fn sum_sq_diff(x: &[f32], mu: f32) -> f32 {
+        kernels::sum_sq_diff_f32x8(x, mu)
+    }
+
+    fn gelu_bias(h: &mut [f32], b: &[f32]) {
+        // per-element math identical to the scalar default (same tanh
+        // call, same polynomial); the 8-chunk structure lets the
+        // bias-add and cubic vectorize
+        let n = h.len().min(b.len());
+        let (hc, ht) = h[..n].split_at_mut(n - n % 8);
+        for (ch, cb) in hc.chunks_exact_mut(8).zip(b.chunks_exact(8)) {
+            for i in 0..8 {
+                ch[i] = gelu(ch[i] + cb[i]);
+            }
+        }
+        for (hv, &bv) in ht.iter_mut().zip(&b[n - n % 8..]) {
+            *hv = gelu(*hv + bv);
+        }
+    }
+}
+
+/// The f32x8 SIMD CPU backend — selectable via `--backend cpu-simd` or
+/// `SPECDELAY_BACKEND=cpu-simd`; tolerance-tested (≤ 1e-5 relative)
+/// against the scalar oracle per op and end-to-end.
+pub type CpuSimdBackend = CpuBackendCore<SimdKernels>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::{BlockPool, KvCache};
+    use crate::runtime::{Backend, CpuModelConfig, CpuRefBackend, Role};
+
+    /// Max relative error of `got` against `want` (absolute floor 1e-6 so
+    /// near-zero entries compare sanely).
+    fn rel_err(got: &[f32], want: &[f32]) -> f32 {
+        assert_eq!(got.len(), want.len());
+        got.iter()
+            .zip(want)
+            .map(|(&g, &w)| (g - w).abs() / w.abs().max(1e-6))
+            .fold(0.0f32, f32::max)
+    }
+
+    const TOL: f32 = 1e-5;
+
+    /// The SIMD backend's prefill / decode / rollout / tree pass must all
+    /// stay within the 1e-5 relative tolerance of the reference, over
+    /// both KV storages (same gather order, different summation order).
+    #[test]
+    fn simd_backend_within_tolerance_of_reference_all_entry_points() {
+        let cfg = CpuModelConfig::tiny();
+        let rb = CpuRefBackend::new(&cfg, 6);
+        let sb = CpuSimdBackend::new(&cfg, 6);
+        assert_eq!(rb.name(), "cpu-ref");
+        assert_eq!(sb.name(), "cpu-simd");
+        let toks = [5i32, 9, 3, 7];
+        for role in [Role::Target, Role::Draft] {
+            let pr = rb.prefill(role, &toks, 4).unwrap();
+            let ps = sb.prefill(role, &toks, 4).unwrap();
+            assert!(rel_err(&ps.logits, &pr.logits) <= TOL, "{role:?} prefill logits");
+            assert!(rel_err(&ps.k_rows, &pr.k_rows) <= TOL, "{role:?} prefill k_rows");
+            for paged in [false, true] {
+                // each backend reads its *own* committed rows (a lane
+                // served by cpu-simd holds SIMD-computed KV)
+                let pool = BlockPool::new(rb.dims(role), 3, None);
+                let mut cr = if paged { KvCache::paged(&pool) } else { KvCache::new(rb.dims(role)) };
+                let mut cs = if paged { KvCache::paged(&pool) } else { KvCache::new(rb.dims(role)) };
+                cr.commit_prefill(&pr.k_rows, &pr.v_rows, cfg.s_pre, 4);
+                cs.commit_prefill(&ps.k_rows, &ps.v_rows, cfg.s_pre, 4);
+                let dr = rb.decode(role, cr.view(), 7, 4).unwrap();
+                let ds = sb.decode(role, cs.view(), 7, 4).unwrap();
+                assert!(
+                    rel_err(&ds.logits, &dr.logits) <= TOL,
+                    "{role:?} paged={paged} decode logits"
+                );
+                assert!(
+                    rel_err(&ds.k_row, &dr.k_row) <= TOL,
+                    "{role:?} paged={paged} decode k_row"
+                );
+            }
+        }
+        // draft rollout: identical uniforms, per-step dists within
+        // tolerance (token draws may only differ at rounding-distance
+        // nucleus boundaries — not with this seed)
+        let pr = rb.prefill(Role::Draft, &toks, 4).unwrap();
+        let ps = sb.prefill(Role::Draft, &toks, 4).unwrap();
+        let mut cr = KvCache::new(rb.dims(Role::Draft));
+        let mut cs = KvCache::new(sb.dims(Role::Draft));
+        cr.commit_prefill(&pr.k_rows, &pr.v_rows, cfg.s_pre, 4);
+        cs.commit_prefill(&ps.k_rows, &ps.v_rows, cfg.s_pre, 4);
+        let uni = [0.3f32, 0.7, 0.1, 0.9];
+        let rr = rb.rollout(2, 2, cr.view(), 7, 4, &uni, 0.8, 0.9).unwrap();
+        let rs = sb.rollout(2, 2, cs.view(), 7, 4, &uni, 0.8, 0.9).unwrap();
+        let v = rb.dims(Role::Draft).vocab;
+        // a draw landing within rounding distance of a nucleus boundary
+        // may legitimately pick a different token, after which the
+        // contexts (and dists) diverge — compare each branch's per-step
+        // dists only while its token prefix still agrees. Step 0 of every
+        // branch shares the committed context, so at least those compare.
+        for b in 0..2usize {
+            for j in 0..2usize {
+                let slot = b * 2 + j;
+                // sampling zeroes out-of-nucleus entries; compare kept mass
+                for (a, s) in rr.dists[slot * v..(slot + 1) * v]
+                    .iter()
+                    .zip(&rs.dists[slot * v..(slot + 1) * v])
+                {
+                    if *a > 0.0 && *s > 0.0 {
+                        assert!(
+                            (a - s).abs() / a.max(1e-6) <= 1e-4,
+                            "rollout b={b} j={j} dist entry {a} vs {s}"
+                        );
+                    }
+                }
+                if rr.tokens[slot] != rs.tokens[slot] {
+                    break; // boundary draw: contexts fork from here
+                }
+            }
+        }
+        // target tree pass
+        use crate::tree::{DraftTree, Provenance};
+        let pr = rb.prefill(Role::Target, &toks, 4).unwrap();
+        let ps = sb.prefill(Role::Target, &toks, 4).unwrap();
+        let mut cr = KvCache::new(rb.dims(Role::Target));
+        let mut cs = KvCache::new(sb.dims(Role::Target));
+        cr.commit_prefill(&pr.k_rows, &pr.v_rows, cfg.s_pre, 4);
+        cs.commit_prefill(&ps.k_rows, &ps.v_rows, cfg.s_pre, 4);
+        let mut tree = DraftTree::new(7);
+        let a = tree.add_child(0, 12, Provenance::Trunk { step: 1 });
+        let _ = tree.add_child(a, 44, Provenance::Trunk { step: 2 });
+        let nb = 4;
+        let (tt, tp) = tree.tokens_positions(nb, 3, 63);
+        let bias = tree.attention_bias(nb);
+        let tr = rb.tree_verify(nb, cr.view(), &tt, &tp, &bias, 3).unwrap();
+        let ts = sb.tree_verify(nb, cs.view(), &tt, &tp, &bias, 3).unwrap();
+        assert!(rel_err(&ts.logits, &tr.logits) <= TOL, "tree-pass logits");
+    }
+
+    /// Both kernel sets must see bit-identical weights for one
+    /// `(config, seed)` pair — the SIMD backend is the same model, not a
+    /// retrained one. Pinned through the embedding of a prefill at
+    /// length 1 (a pure table lookup, no reductions).
+    #[test]
+    fn simd_and_ref_share_seeded_weights() {
+        let cfg = CpuModelConfig::tiny();
+        let rb = CpuRefBackend::new(&cfg, 3);
+        let sb = CpuSimdBackend::new(&cfg, 3);
+        // meta is identical except the family label
+        assert_eq!(rb.meta().s_pre, sb.meta().s_pre);
+        assert_eq!(rb.meta().tree_sizes, sb.meta().tree_sizes);
+        assert_eq!(rb.meta().family, "cpu-ref");
+        assert_eq!(sb.meta().family, "cpu-simd");
+        // different seeds must still differ under SIMD
+        let other = CpuSimdBackend::new(&cfg, 4);
+        let a = sb.prefill(Role::Target, &[5, 9], 2).unwrap();
+        let b = other.prefill(Role::Target, &[5, 9], 2).unwrap();
+        assert_ne!(a.logits, b.logits);
+    }
+
+    /// The SIMD backend must read paged lanes bit-identically to
+    /// contiguous ones — the gather happens before any lane-chunked
+    /// reduction, so the storage contract is kernel-set independent.
+    #[test]
+    fn simd_paged_reads_bit_identical_to_contiguous() {
+        let cfg = CpuModelConfig::tiny();
+        let be = CpuSimdBackend::new(&cfg, 6);
+        let toks = [5i32, 9, 3, 7];
+        for role in [Role::Target, Role::Draft] {
+            let pre = be.prefill(role, &toks, 4).unwrap();
+            let mut cont = KvCache::new(be.dims(role));
+            cont.commit_prefill(&pre.k_rows, &pre.v_rows, cfg.s_pre, 4);
+            let pool = BlockPool::new(be.dims(role), 3, None);
+            let mut paged = KvCache::paged(&pool);
+            paged.commit_prefill(&pre.k_rows, &pre.v_rows, cfg.s_pre, 4);
+            let dc = be.decode(role, cont.view(), 7, 4).unwrap();
+            let dp = be.decode(role, paged.view(), 7, 4).unwrap();
+            assert_eq!(dc.logits, dp.logits, "{role:?}: simd paged decode diverges");
+            assert_eq!(dc.k_row, dp.k_row);
+        }
+    }
+}

@@ -1,0 +1,375 @@
+//! Shared f32 forward-pass kernels and the reduction-order contract.
+//!
+//! ## The reduction-order contract
+//!
+//! Floating-point addition does not associate, so every f32 reduction in
+//! the CPU forward pass pins an explicit summation order — that pin is
+//! what makes "bit-identical" a meaningful word anywhere else in the
+//! crate (paged vs contiguous reads, batched vs serial serving, replayed
+//! vs live streams all compare bitwise).
+//!
+//! * **Scalar (reference) order** — [`ScalarKernels`]: a single
+//!   accumulator folded over ascending element index, `acc += a[i]·b[i]`
+//!   for `i = 0, 1, 2, …`. Every reduction the reference backend performs
+//!   — attention score dots, softmax denominators, LayerNorm mean and
+//!   variance, tied-embedding logit dots, and the per-output accumulation
+//!   of [`matvec`] (for output `j`, ascending `i` of `x[i]·w[i][j]`) —
+//!   realizes exactly this order. Gathered inputs (paged block-table
+//!   rows, in-flight rollout rows) are materialized into contiguous
+//!   buffers in canonical order *before* any reduction runs, so storage
+//!   layout can never change the summation order.
+//! * **f32x8 lane order** — [`dot_f32x8`] and friends: eight independent
+//!   partial accumulators over ascending 8-element chunks
+//!   (`lane[i % 8] += …` within each chunk), combined by the fixed
+//!   pairwise tree `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))`, then the
+//!   scalar tail (`len % 8` elements) folded in ascending order. The
+//!   independent lanes are what lets LLVM vectorize the loop (the scalar
+//!   order forbids reassociation); the result differs from the scalar
+//!   order only by rounding, bounded by the ≤ 1e-5 relative tolerance the
+//!   SIMD backend is tested to.
+//!
+//! Elementwise maps ([`axpy`], [`gelu`], [`rope`], the affine tail of
+//! [`ln`]) have no reduction and are shared verbatim by both kernel sets.
+
+/// One kernel set for the CPU forward pass: the three reduction
+/// primitives every composite op ([`ln`], [`attend`], logit dots) is
+/// built from, each pinning its own summation order (see the module
+/// docs). Implementations are zero-sized tags — the backend is generic
+/// over the set and monomorphizes to straight-line code.
+pub trait ForwardKernels {
+    /// Backend name this kernel set labels (`"cpu-ref"` / `"cpu-simd"`).
+    const NAME: &'static str;
+
+    /// Dot product Σ a\[i\]·b\[i\] over `a.len().min(b.len())` elements.
+    fn dot(a: &[f32], b: &[f32]) -> f32;
+
+    /// Plain sum Σ x\[i\].
+    fn sum(x: &[f32]) -> f32;
+
+    /// Sum of squared deviations Σ (x\[i\] − mu)² (LayerNorm variance
+    /// numerator).
+    fn sum_sq_diff(x: &[f32], mu: f32) -> f32;
+
+    /// In-place biased GELU: `h[i] = gelu(h[i] + b[i])`. Elementwise — the
+    /// default is shared; kernel sets may restructure it for
+    /// vectorization but the per-element math is identical.
+    fn gelu_bias(h: &mut [f32], b: &[f32]) {
+        for (hv, &bv) in h.iter_mut().zip(b) {
+            *hv = gelu(*hv + bv);
+        }
+    }
+}
+
+/// The reference kernel set: single-accumulator ascending-index
+/// reductions (the scalar order of the contract above). This is the
+/// order every bit-exactness suite in the crate pins.
+pub struct ScalarKernels;
+
+impl ForwardKernels for ScalarKernels {
+    const NAME: &'static str = "cpu-ref";
+
+    fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let mut acc = 0.0f32;
+        for (x, y) in a.iter().zip(b) {
+            acc += x * y;
+        }
+        acc
+    }
+
+    fn sum(x: &[f32]) -> f32 {
+        let mut acc = 0.0f32;
+        for &v in x {
+            acc += v;
+        }
+        acc
+    }
+
+    fn sum_sq_diff(x: &[f32], mu: f32) -> f32 {
+        let mut acc = 0.0f32;
+        for &v in x {
+            let d = v - mu;
+            acc += d * d;
+        }
+        acc
+    }
+}
+
+/// Horizontal sum of eight lane accumulators in the fixed pairwise order
+/// of the contract: `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))`.
+#[inline]
+fn hsum8(l: [f32; 8]) -> f32 {
+    ((l[0] + l[1]) + (l[2] + l[3])) + ((l[4] + l[5]) + (l[6] + l[7]))
+}
+
+/// f32x8 dot product: eight independent partial sums over ascending
+/// 8-chunks, pairwise-combined, scalar tail last. The independent lanes
+/// are the whole point — they license the vectorization the scalar order
+/// forbids.
+pub fn dot_f32x8(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let (a, b) = (&a[..n], &b[..n]);
+    let mut lanes = [0.0f32; 8];
+    let mut ca = a.chunks_exact(8);
+    let mut cb = b.chunks_exact(8);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        for i in 0..8 {
+            lanes[i] += xa[i] * xb[i];
+        }
+    }
+    let mut acc = hsum8(lanes);
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        acc += x * y;
+    }
+    acc
+}
+
+/// f32x8 sum (same lane structure as [`dot_f32x8`]).
+pub fn sum_f32x8(x: &[f32]) -> f32 {
+    let mut lanes = [0.0f32; 8];
+    let mut cx = x.chunks_exact(8);
+    for xa in &mut cx {
+        for i in 0..8 {
+            lanes[i] += xa[i];
+        }
+    }
+    let mut acc = hsum8(lanes);
+    for &v in cx.remainder() {
+        acc += v;
+    }
+    acc
+}
+
+/// f32x8 sum of squared deviations (same lane structure as
+/// [`dot_f32x8`]).
+pub fn sum_sq_diff_f32x8(x: &[f32], mu: f32) -> f32 {
+    let mut lanes = [0.0f32; 8];
+    let mut cx = x.chunks_exact(8);
+    for xa in &mut cx {
+        for i in 0..8 {
+            let d = xa[i] - mu;
+            lanes[i] += d * d;
+        }
+    }
+    let mut acc = hsum8(lanes);
+    for &v in cx.remainder() {
+        let d = v - mu;
+        acc += d * d;
+    }
+    acc
+}
+
+/// LayerNorm with affine params, written into `out` (same length as
+/// `x`). Mean and variance reduce in `K`'s order; the affine tail is
+/// elementwise.
+pub fn ln<K: ForwardKernels>(x: &[f32], g: &[f32], b: &[f32], out: &mut [f32]) {
+    let n = x.len() as f32;
+    let mu = K::sum(x) / n;
+    let var = K::sum_sq_diff(x, mu) / n;
+    let inv = 1.0 / (var + 1e-5).sqrt();
+    for (((o, &xv), &gv), &bv) in out.iter_mut().zip(x).zip(g).zip(b) {
+        *o = (xv - mu) * inv * gv + bv;
+    }
+}
+
+/// `out[j] += s · v[j]` — the elementwise accumulation step shared by
+/// [`matvec`] and the attention weighted sum (independent lanes, no
+/// reduction, auto-vectorizable as-is).
+#[inline]
+pub fn axpy(out: &mut [f32], s: f32, v: &[f32]) {
+    for (o, &vv) in out.iter_mut().zip(v) {
+        *o += s * vv;
+    }
+}
+
+/// out = x @ w with `w` row-major `[x.len(), n_out]`. Outer-product
+/// accumulation: for every output `j` this realizes the scalar ascending-
+/// `i` order of the contract (a single accumulator per output), so its
+/// results are bitwise equal to per-output [`ScalarKernels::dot`] against
+/// the corresponding weight column.
+pub fn matvec(x: &[f32], w: &[f32], n_out: usize, out: &mut [f32]) {
+    out.fill(0.0);
+    for (i, &xi) in x.iter().enumerate() {
+        axpy(out, xi, &w[i * n_out..(i + 1) * n_out]);
+    }
+}
+
+/// tanh-approximation GELU (matches `jax.nn.gelu`'s default).
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + ((0.797_884_6 * (x + 0.044715 * x * x * x)).tanh()))
+}
+
+/// Rotary position embedding applied in place to a `[H·Dh]` row at
+/// absolute position `pos`. Elementwise over (cos, sin) pairs — shared
+/// by both kernel sets.
+pub fn rope(row: &mut [f32], n_heads: usize, d_head: usize, pos: usize) {
+    for h in 0..n_heads {
+        let base = h * d_head;
+        for j in 0..d_head / 2 {
+            let freq = 10000.0f32.powf(-((2 * j) as f32) / d_head as f32);
+            let theta = pos as f32 * freq;
+            let (sin, cos) = theta.sin_cos();
+            let x1 = row[base + 2 * j];
+            let x2 = row[base + 2 * j + 1];
+            row[base + 2 * j] = x1 * cos - x2 * sin;
+            row[base + 2 * j + 1] = x1 * sin + x2 * cos;
+        }
+    }
+}
+
+/// Softmax attention of one query row over gathered keys, per head, with
+/// 1/√Dh score scaling; output written into `out` (`[H·Dh]`). Score dots
+/// and the softmax denominator reduce in `K`'s order; max-subtraction
+/// and the weighted sum are order-insensitive / elementwise.
+#[allow(clippy::too_many_arguments)]
+pub fn attend<K: ForwardKernels>(
+    q: &[f32],
+    keys: &[f32],
+    vals: &[f32],
+    n_keys: usize,
+    n_heads: usize,
+    d_head: usize,
+    scores: &mut Vec<f32>,
+    out: &mut [f32],
+) {
+    let scale = 1.0 / (d_head as f32).sqrt();
+    let row = n_heads * d_head;
+    for h in 0..n_heads {
+        let qh = &q[h * d_head..(h + 1) * d_head];
+        scores.clear();
+        let mut max = f32::NEG_INFINITY;
+        for kidx in 0..n_keys {
+            let base = kidx * row + h * d_head;
+            let sv = K::dot(qh, &keys[base..base + d_head]) * scale;
+            if sv > max {
+                max = sv;
+            }
+            scores.push(sv);
+        }
+        for sv in scores.iter_mut() {
+            *sv = (*sv - max).exp();
+        }
+        let inv = 1.0 / K::sum(scores);
+        let oh = &mut out[h * d_head..(h + 1) * d_head];
+        oh.fill(0.0);
+        for (kidx, &w) in scores.iter().enumerate() {
+            let base = kidx * row + h * d_head;
+            axpy(oh, w * inv, &vals[base..base + d_head]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A deterministic pseudo-random f32 vector (no RNG dependency).
+    fn vec_n(n: usize, salt: u64) -> Vec<f32> {
+        (0..n)
+            .map(|i| {
+                let h = (i as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15 ^ salt);
+                ((h >> 40) as f32 / (1u64 << 24) as f32) - 0.5
+            })
+            .collect()
+    }
+
+    /// Pin the scalar order bitwise with reorder-sensitive inputs:
+    /// sequential ascending folding gives 1.0 here, while any pairwise
+    /// regrouping collapses the large terms first and gives 0.0. This is
+    /// the regression test for the reduction-order contract — if a
+    /// refactor reassociates the reference sum, this fails.
+    #[test]
+    fn scalar_sum_is_sequential_ascending_bitwise() {
+        let xs = [1e8f32, 1.0, -1e8, 1.0];
+        // sequential: ((1e8 + 1) + -1e8) + 1 = (1e8 + -1e8) + 1 = 1.0
+        assert_eq!(ScalarKernels::sum(&xs).to_bits(), 1.0f32.to_bits());
+        // the pairwise regrouping the SIMD tree would apply is different
+        assert_eq!(((xs[0] + xs[1]) + (xs[2] + xs[3])), 0.0);
+        let ones = [1.0f32; 4];
+        assert_eq!(ScalarKernels::dot(&xs, &ones).to_bits(), 1.0f32.to_bits());
+    }
+
+    /// The cross-site half of the contract: [`matvec`]'s outer-product
+    /// accumulation must equal a per-output ascending-`i` scalar dot
+    /// *bitwise* — attention (dot-shaped) and projections (outer-product-
+    /// shaped) realize one summation order, not two.
+    #[test]
+    fn matvec_bitwise_equals_per_output_scalar_dot() {
+        let (n_in, n_out) = (13usize, 7usize);
+        let x = vec_n(n_in, 1);
+        let w = vec_n(n_in * n_out, 2);
+        let mut out = vec![0.0f32; n_out];
+        matvec(&x, &w, n_out, &mut out);
+        for j in 0..n_out {
+            let col: Vec<f32> = (0..n_in).map(|i| w[i * n_out + j]).collect();
+            assert_eq!(
+                out[j].to_bits(),
+                ScalarKernels::dot(&x, &col).to_bits(),
+                "output {j} disagrees with the scalar dot order"
+            );
+        }
+    }
+
+    /// Reductions over a buffer gathered from several sub-slices must
+    /// equal the same reduction over the contiguous original — gathering
+    /// (the paged block-table read path) happens *before* the reduction,
+    /// so it cannot change the order.
+    #[test]
+    fn gathered_then_reduced_bitwise_equals_contiguous() {
+        let x = vec_n(37, 3);
+        let y = vec_n(37, 4);
+        let mut gx = Vec::new();
+        // gather in canonical ascending order from uneven "blocks"
+        for chunk in x.chunks(5) {
+            gx.extend_from_slice(chunk);
+        }
+        assert_eq!(
+            ScalarKernels::dot(&gx, &y).to_bits(),
+            ScalarKernels::dot(&x, &y).to_bits()
+        );
+        assert_eq!(ScalarKernels::sum(&gx).to_bits(), ScalarKernels::sum(&x).to_bits());
+    }
+
+    /// f32x8 reductions agree with the scalar order within the SIMD
+    /// backend's tolerance across lengths that exercise every tail size
+    /// (including the empty and the sub-chunk cases).
+    #[test]
+    fn f32x8_matches_scalar_within_tolerance() {
+        for n in 0..40usize {
+            let a = vec_n(n, 5);
+            let b = vec_n(n, 6);
+            let (ds, d8) = (ScalarKernels::dot(&a, &b), dot_f32x8(&a, &b));
+            assert!(
+                (ds - d8).abs() <= 1e-5 * ds.abs().max(1.0),
+                "dot n={n}: scalar {ds} vs f32x8 {d8}"
+            );
+            let (ss, s8) = (ScalarKernels::sum(&a), sum_f32x8(&a));
+            assert!(
+                (ss - s8).abs() <= 1e-5 * ss.abs().max(1.0),
+                "sum n={n}: scalar {ss} vs f32x8 {s8}"
+            );
+            let (qs, q8) =
+                (ScalarKernels::sum_sq_diff(&a, 0.125), sum_sq_diff_f32x8(&a, 0.125));
+            assert!(
+                (qs - q8).abs() <= 1e-5 * qs.abs().max(1.0),
+                "sum_sq_diff n={n}: scalar {qs} vs f32x8 {q8}"
+            );
+        }
+    }
+
+    /// Exact-chunk inputs exercise the pairwise lane-combine alone; the
+    /// f32x8 result must equal the explicitly-written lane tree.
+    #[test]
+    fn f32x8_lane_combine_order_pinned() {
+        let x: Vec<f32> = (0..16).map(|i| (i as f32 + 0.5) * 0.1).collect();
+        let mut lanes = [0.0f32; 8];
+        for c in x.chunks_exact(8) {
+            for i in 0..8 {
+                lanes[i] += c[i];
+            }
+        }
+        let want = ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+            + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7]));
+        assert_eq!(sum_f32x8(&x).to_bits(), want.to_bits());
+    }
+}

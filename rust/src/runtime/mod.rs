@@ -1,8 +1,11 @@
 //! Model runtime: the [`Backend`] execution seam, the always-built
-//! [`CpuRefBackend`] reference implementation, the deterministic
-//! fault-injection wrapper [`FaultyBackend`] (plus the [`guard_finite`]
-//! dispatch-boundary corruption guard), AOT artifact metadata, weight
-//! containers, and (behind the `pjrt` feature) the PJRT engine.
+//! [`CpuRefBackend`] reference implementation and its f32x8 sibling
+//! [`CpuSimdBackend`] (shared seeded weights, lane-chunked reductions,
+//! ≤ 1e-5 relative tolerance — see [`kernels`] for the reduction-order
+//! contract), the deterministic fault-injection wrapper [`FaultyBackend`]
+//! (plus the [`guard_finite`] dispatch-boundary corruption guard), AOT
+//! artifact metadata, weight containers, and (behind the `pjrt` feature)
+//! the PJRT engine.
 //!
 //! The serving stack drives models only through [`Backend`], whose method
 //! surface mirrors the compiled-module interface (prefill / decode / fused
@@ -14,13 +17,16 @@
 
 mod backend;
 mod cpu;
+mod cpu_simd;
 #[cfg(feature = "pjrt")]
 mod engine;
 mod faulty;
+pub mod kernels;
 mod weights;
 
 pub use backend::Backend;
-pub use cpu::{CpuModelConfig, CpuRefBackend};
+pub use cpu::{CpuBackendCore, CpuModelConfig, CpuRefBackend};
+pub use cpu_simd::{CpuSimdBackend, SimdKernels};
 #[cfg(feature = "pjrt")]
 pub use engine::Engine;
 pub use faulty::{

@@ -177,32 +177,47 @@ fn ln_gamma(x: f64) -> f64 {
     }
 }
 
+/// Iteration budget for the incomplete-gamma expansions. Both the series
+/// and the continued fraction slow down near the switchover x ≈ a, where
+/// the number of terms needed grows like O(√a); a fixed cap silently
+/// truncates at large dof and returns a partial sum that *looks* like a
+/// healthy p-value. Scale the budget with the arguments so convergence is
+/// reached (and detected) across the dof range the quantized-KV
+/// chi-square matrix produces.
+fn gamma_iters(a: f64, x: f64) -> usize {
+    600 + (10.0 * a.max(x).max(1.0).sqrt()) as usize
+}
+
 /// Regularized lower incomplete gamma P(a, x) by series expansion
-/// (converges fast for x < a + 1).
-fn gamma_p_series(a: f64, x: f64) -> f64 {
+/// (converges fast for x < a + 1). Returns `(value, converged)` so the
+/// caller can detect a truncated sum instead of trusting it.
+fn gamma_p_series(a: f64, x: f64) -> (f64, bool) {
     let mut ap = a;
     let mut sum = 1.0 / a;
     let mut del = sum;
-    for _ in 0..500 {
+    let mut converged = false;
+    for _ in 0..gamma_iters(a, x) {
         ap += 1.0;
         del *= x / ap;
         sum += del;
         if del.abs() < sum.abs() * 1e-14 {
+            converged = true;
             break;
         }
     }
-    sum * (-x + a * x.ln() - ln_gamma(a)).exp()
+    (sum * (-x + a * x.ln() - ln_gamma(a)).exp(), converged)
 }
 
 /// Regularized *upper* incomplete gamma Q(a, x) by Lentz's continued
-/// fraction (converges fast for x ≥ a + 1).
-fn gamma_q_contfrac(a: f64, x: f64) -> f64 {
+/// fraction (converges fast for x ≥ a + 1). Returns `(value, converged)`.
+fn gamma_q_contfrac(a: f64, x: f64) -> (f64, bool) {
     let tiny = 1e-300;
     let mut b = x + 1.0 - a;
     let mut c = 1.0 / tiny;
     let mut d = 1.0 / b.max(tiny);
     let mut h = d;
-    for i in 1..500 {
+    let mut converged = false;
+    for i in 1..gamma_iters(a, x) {
         let an = -(i as f64) * (i as f64 - a);
         b += 2.0;
         d = an * d + b;
@@ -217,21 +232,75 @@ fn gamma_q_contfrac(a: f64, x: f64) -> f64 {
         let delta = d * c;
         h *= delta;
         if (delta - 1.0).abs() < 1e-14 {
+            converged = true;
             break;
         }
     }
-    (-x + a * x.ln() - ln_gamma(a)).exp() * h
+    ((-x + a * x.ln() - ln_gamma(a)).exp() * h, converged)
+}
+
+/// Standard normal survival function Φ̄(z) = erfc(z/√2)/2 via the
+/// Abramowitz–Stegun 7.1.26 rational approximation (abs error < 1.5e-7)
+/// — only used as the Wilson–Hilferty fallback when the incomplete-gamma
+/// expansions fail to converge, never on the primary path.
+fn normal_sf(z: f64) -> f64 {
+    let x = z.abs() / std::f64::consts::SQRT_2;
+    let t = 1.0 / (1.0 + 0.327_591_1 * x);
+    let poly = t
+        * (0.254_829_592
+            + t * (-0.284_496_736 + t * (1.421_413_741 + t * (-1.453_152_027 + t * 1.061_405_429))));
+    let erfc = poly * (-x * x).exp();
+    let tail = 0.5 * erfc;
+    if z >= 0.0 {
+        tail
+    } else {
+        1.0 - tail
+    }
+}
+
+/// Wilson–Hilferty cube-root normal approximation of the chi-square
+/// survival function — the last-resort fallback when both incomplete-gamma
+/// expansions report non-convergence (accurate to a few 1e-3 at moderate
+/// dof and improving with dof, which is exactly the regime where the
+/// expansions are slowest).
+fn chi_square_sf_wilson_hilferty(stat: f64, dof: f64) -> f64 {
+    let v = stat / dof;
+    let s = 2.0 / (9.0 * dof);
+    normal_sf((v.cbrt() - (1.0 - s)) / s.sqrt())
 }
 
 /// Survival function of the chi-square distribution: `P(X² ≥ stat)` with
 /// `dof` degrees of freedom — the p-value of a goodness-of-fit statistic.
+///
+/// Hardened for the extremes the backend × kv-dtype losslessness matrix
+/// can reach (large dof, tiny tail mass): the incomplete-gamma iteration
+/// budget scales with dof, a truncated expansion falls back to the
+/// Wilson–Hilferty approximation instead of returning a partial sum, and
+/// the result is never NaN — a non-finite intermediate degrades to 0.0
+/// (a conservative *fail* for callers asserting `p > floor`, never a
+/// false pass).
 pub fn chi_square_sf(stat: f64, dof: usize) -> f64 {
+    if stat.is_nan() {
+        return 0.0;
+    }
     if stat <= 0.0 || dof == 0 {
         return 1.0;
     }
+    if stat.is_infinite() {
+        return 0.0;
+    }
     let a = dof as f64 / 2.0;
     let x = stat / 2.0;
-    let q = if x < a + 1.0 { 1.0 - gamma_p_series(a, x) } else { gamma_q_contfrac(a, x) };
+    let (q, converged) = if x < a + 1.0 {
+        let (p, c) = gamma_p_series(a, x);
+        (1.0 - p, c)
+    } else {
+        gamma_q_contfrac(a, x)
+    };
+    let q = if !converged || q.is_nan() { chi_square_sf_wilson_hilferty(stat, dof as f64) } else { q };
+    if q.is_nan() {
+        return 0.0;
+    }
     q.clamp(0.0, 1.0)
 }
 
@@ -361,6 +430,82 @@ mod tests {
             let p = chi_square_sf(i as f64, 6);
             assert!(p <= prev + 1e-15, "sf must be non-increasing");
             prev = p;
+        }
+    }
+
+    /// The extremes the quantized-KV losslessness matrix can reach: large
+    /// dof (many effective bins) and tiny tail mass. Pin against closed
+    /// forms (dof 1: `erfc(√(stat/2))`; dof 2: `exp(−stat/2)`) and
+    /// published table quantiles at dof 200/1000 — the fixed-iteration
+    /// expansions used to truncate silently here and report a partial sum.
+    #[test]
+    fn chi_square_sf_extreme_pins() {
+        // dof 1 deep tail: sf(100, 1) = erfc(√50) ≈ 1.524e-23
+        let got = chi_square_sf(100.0, 1);
+        let want = 1.523_970_604_832_1e-23;
+        assert!(
+            ((got - want) / want).abs() < 1e-9,
+            "sf(100, 1) = {got:e}, want {want:e}"
+        );
+        // dof 2 closed form: sf(stat, 2) = exp(−stat/2), down to ~1e-218
+        for stat in [10.0f64, 100.0, 500.0, 1000.0] {
+            let got = chi_square_sf(stat, 2);
+            let want = (-stat / 2.0).exp();
+            assert!(
+                ((got - want) / want).abs() < 1e-9,
+                "sf({stat}, 2) = {got:e}, want {want:e}"
+            );
+        }
+        // published table quantiles at large dof (series/contfrac both sit
+        // near the slow x ≈ a switchover here)
+        for (stat, dof, want) in [
+            (233.994f64, 200usize, 0.05f64),
+            (1074.679, 1000, 0.05),
+            (1106.969, 1000, 0.01),
+        ] {
+            let got = chi_square_sf(stat, dof);
+            assert!(
+                (got - want).abs() < 2e-4,
+                "sf({stat}, {dof}) = {got}, want ≈ {want}"
+            );
+        }
+    }
+
+    /// Hardening contract: the sf never returns NaN and stays monotone in
+    /// the statistic even at dof and statistic magnitudes far beyond what
+    /// the suites produce.
+    #[test]
+    fn chi_square_sf_never_nan_and_monotone_at_scale() {
+        for &dof in &[1usize, 2, 10, 100, 1000, 10_000, 100_000] {
+            let mut prev = 1.0f64;
+            for i in 0..60 {
+                let stat = dof as f64 * (0.05 * i as f64);
+                let p = chi_square_sf(stat, dof);
+                assert!(!p.is_nan(), "sf({stat}, {dof}) is NaN");
+                assert!((0.0..=1.0).contains(&p), "sf({stat}, {dof}) = {p} out of range");
+                assert!(p <= prev + 1e-12, "sf not monotone at ({stat}, {dof})");
+                prev = p;
+            }
+        }
+        assert_eq!(chi_square_sf(f64::NAN, 5), 0.0);
+        assert_eq!(chi_square_sf(f64::INFINITY, 5), 0.0);
+        assert_eq!(chi_square_sf(f64::NEG_INFINITY, 5), 1.0);
+        // a huge statistic at dof 1 underflows cleanly to 0, not NaN
+        assert_eq!(chi_square_sf(1e9, 1), 0.0);
+    }
+
+    /// The Wilson–Hilferty fallback (used only on expansion
+    /// non-convergence) must itself be a sane approximation.
+    #[test]
+    fn wilson_hilferty_fallback_close_to_exact() {
+        for (stat, dof, want) in
+            [(124.342f64, 100usize, 0.05f64), (1074.679, 1000, 0.05), (18.307, 10, 0.05)]
+        {
+            let got = chi_square_sf_wilson_hilferty(stat, dof as f64);
+            assert!(
+                (got - want).abs() < 5e-3,
+                "WH sf({stat}, {dof}) = {got}, want ≈ {want}"
+            );
         }
     }
 

@@ -1,0 +1,297 @@
+//! Integration contract of the f32x8 SIMD backend and the quantized KV
+//! pools.
+//!
+//! Three layers of pinning on top of the in-module unit tests:
+//!
+//! * **Odd shapes** — the ≤ 1e-5 relative per-op tolerance of
+//!   `cpu-simd` against `cpu-ref` must hold when every reduction length
+//!   has a scalar tail (`d_head` not a multiple of 8, odd head counts,
+//!   odd vocab), including single-row prefills and chunked prefills at
+//!   non-aligned offsets.
+//! * **Sequence-capacity edge** — both backends must agree (within
+//!   tolerance) all the way to `max_seq - 1` and reject `max_seq`
+//!   identically.
+//! * **End-to-end greedy divergence bound** — teacher-forcing the scalar
+//!   reference's greedy stream through every (backend × kv-dtype) cell,
+//!   each cell's per-step argmax must match the reference wherever the
+//!   reference's top-2 logit gap exceeds the cell's error budget (f32:
+//!   rounding, f16: half-precision KV, int8: affine-code KV). The
+//!   bit-exact rung — `cpu-ref` over f32 paged storage — must agree at
+//!   *every* step with no margin at all.
+
+use specdelay::kvcache::{BlockPool, KvCache, KvDtype};
+use specdelay::runtime::{Backend, CpuModelConfig, CpuRefBackend, CpuSimdBackend, Role};
+use specdelay::tree::{DraftTree, Provenance};
+
+/// Max relative error of `got` against `want` (absolute floor 1e-6 so
+/// near-zero entries compare sanely).
+fn rel_err(got: &[f32], want: &[f32]) -> f32 {
+    assert_eq!(got.len(), want.len());
+    got.iter()
+        .zip(want)
+        .map(|(&g, &w)| (g - w).abs() / w.abs().max(1e-6))
+        .fold(0.0f32, f32::max)
+}
+
+const TOL: f32 = 1e-5;
+
+/// Shapes chosen so every lane-chunked reduction has a non-empty scalar
+/// tail: `d_head` 10 (even for RoPE, not a multiple of 8), 3 heads
+/// (`d_attn` 30), `d_model` 22, `d_mlp` 44, vocab 83.
+fn odd_config() -> CpuModelConfig {
+    CpuModelConfig {
+        n_layers: 2,
+        d_model: 22,
+        n_heads: 3,
+        d_head: 10,
+        vocab: 83,
+        max_seq: 40,
+        s_pre: 21,
+        mlp_ratio: 2,
+        logit_scale: 30.0,
+    }
+}
+
+#[test]
+fn simd_within_tolerance_on_odd_shapes_all_entry_points() {
+    let cfg = odd_config();
+    let rb = CpuRefBackend::new(&cfg, 17);
+    let sb = CpuSimdBackend::new(&cfg, 17);
+    let toks: Vec<i32> = (0..13).map(|i| (i * 29 + 7) % 83).collect();
+
+    for role in [Role::Target, Role::Draft] {
+        // single-row prefill: the smallest batch, tails everywhere
+        let pr1 = rb.prefill(role, &toks[..1], 1).unwrap();
+        let ps1 = sb.prefill(role, &toks[..1], 1).unwrap();
+        assert!(rel_err(&ps1.logits, &pr1.logits) <= TOL, "{role:?} len-1 prefill logits");
+        assert!(rel_err(&ps1.hidden, &pr1.hidden) <= TOL, "{role:?} len-1 prefill hidden");
+
+        // full odd-length prefill
+        let pr = rb.prefill(role, &toks, toks.len()).unwrap();
+        let ps = sb.prefill(role, &toks, toks.len()).unwrap();
+        assert!(rel_err(&ps.logits, &pr.logits) <= TOL, "{role:?} prefill logits");
+        assert!(rel_err(&ps.k_rows, &pr.k_rows) <= TOL, "{role:?} prefill k_rows");
+        assert!(rel_err(&ps.v_rows, &pr.v_rows) <= TOL, "{role:?} prefill v_rows");
+
+        // chunked prefill at non-aligned offsets, each backend reading its
+        // own committed rows
+        let mut cr = KvCache::new(rb.dims(role));
+        let mut cs = KvCache::new(sb.dims(role));
+        for (start, len) in [(0usize, 5usize), (5, 2), (7, 6)] {
+            let or = rb.prefill_chunk(role, cr.view(), &toks, start, len).unwrap();
+            let os = sb.prefill_chunk(role, cs.view(), &toks, start, len).unwrap();
+            assert!(
+                rel_err(&os.logits, &or.logits) <= TOL,
+                "{role:?} chunk {start}+{len} logits"
+            );
+            assert!(
+                rel_err(&os.k_rows, &or.k_rows) <= TOL,
+                "{role:?} chunk {start}+{len} k_rows"
+            );
+            cr.commit_chunk(&or.k_rows, &or.v_rows, len, start, len);
+            cs.commit_chunk(&os.k_rows, &os.v_rows, len, start, len);
+        }
+
+        // decode over the chunk-built caches
+        let dr = rb.decode(role, cr.view(), 19, toks.len()).unwrap();
+        let ds = sb.decode(role, cs.view(), 19, toks.len()).unwrap();
+        assert!(rel_err(&ds.logits, &dr.logits) <= TOL, "{role:?} decode logits");
+        assert!(rel_err(&ds.k_row, &dr.k_row) <= TOL, "{role:?} decode k_row");
+        assert!(rel_err(&ds.hidden, &dr.hidden) <= TOL, "{role:?} decode hidden");
+    }
+
+    // draft rollout with odd K/L: per-step kept-mass tolerance while the
+    // token prefix agrees (a boundary draw legitimately forks the branch)
+    let pr = rb.prefill(Role::Draft, &toks, toks.len()).unwrap();
+    let ps = sb.prefill(Role::Draft, &toks, toks.len()).unwrap();
+    let mut cr = KvCache::new(rb.dims(Role::Draft));
+    let mut cs = KvCache::new(sb.dims(Role::Draft));
+    cr.commit_prefill(&pr.k_rows, &pr.v_rows, cfg.s_pre, toks.len());
+    cs.commit_prefill(&ps.k_rows, &ps.v_rows, cfg.s_pre, toks.len());
+    let uni: Vec<f32> = (0..9).map(|i| (i as f32 * 0.107 + 0.03) % 1.0).collect();
+    let root = toks[toks.len() - 1] as u32;
+    let rr = rb.rollout(3, 3, cr.view(), root, toks.len(), &uni, 0.8, 0.9).unwrap();
+    let rs = sb.rollout(3, 3, cs.view(), root, toks.len(), &uni, 0.8, 0.9).unwrap();
+    let v = cfg.vocab;
+    for b in 0..3usize {
+        for j in 0..3usize {
+            let slot = b * 3 + j;
+            for (a, s) in
+                rr.dists[slot * v..(slot + 1) * v].iter().zip(&rs.dists[slot * v..(slot + 1) * v])
+            {
+                if *a > 0.0 && *s > 0.0 {
+                    assert!(
+                        (a - s).abs() / a.max(1e-6) <= 1e-4,
+                        "rollout b={b} j={j} dist entry {a} vs {s}"
+                    );
+                }
+            }
+            if rr.tokens[slot] != rs.tokens[slot] {
+                break;
+            }
+        }
+    }
+
+    // target tree pass over a 5-node tree in an 8-bucket (padded lanes)
+    let pr = rb.prefill(Role::Target, &toks, toks.len()).unwrap();
+    let ps = sb.prefill(Role::Target, &toks, toks.len()).unwrap();
+    let mut cr = KvCache::new(rb.dims(Role::Target));
+    let mut cs = KvCache::new(sb.dims(Role::Target));
+    cr.commit_prefill(&pr.k_rows, &pr.v_rows, cfg.s_pre, toks.len());
+    cs.commit_prefill(&ps.k_rows, &ps.v_rows, cfg.s_pre, toks.len());
+    let root_pos = toks.len() - 1;
+    let mut tree = DraftTree::new(root);
+    let a = tree.add_child(0, 12, Provenance::Trunk { step: 1 });
+    let _ = tree.add_child(a, 44, Provenance::Branch { branch: 0, step: 0 });
+    let _ = tree.add_child(a, 51, Provenance::Branch { branch: 1, step: 0 });
+    let _ = tree.add_child(0, 23, Provenance::Trunk { step: 1 });
+    let nb = 8;
+    let (tt, tp) = tree.tokens_positions(nb, root_pos, 80);
+    let bias = tree.attention_bias(nb);
+    let tr = rb.tree_verify(nb, cr.view(), &tt, &tp, &bias, root_pos).unwrap();
+    let ts = sb.tree_verify(nb, cs.view(), &tt, &tp, &bias, root_pos).unwrap();
+    // compare only the real nodes: padding lanes are computed-and-discarded
+    for i in 0..tree.len() {
+        assert!(
+            rel_err(&ts.logits[i * v..(i + 1) * v], &tr.logits[i * v..(i + 1) * v]) <= TOL,
+            "tree node {i} logits"
+        );
+    }
+}
+
+/// Both backends must agree within tolerance all the way to the last
+/// legal position and reject `max_seq` identically.
+#[test]
+fn simd_agrees_with_ref_to_the_max_seq_edge() {
+    let cfg = CpuModelConfig {
+        n_layers: 1,
+        d_model: 10,
+        n_heads: 1,
+        d_head: 10,
+        vocab: 37,
+        max_seq: 12,
+        s_pre: 8,
+        mlp_ratio: 2,
+        logit_scale: 30.0,
+    };
+    let rb = CpuRefBackend::new(&cfg, 5);
+    let sb = CpuSimdBackend::new(&cfg, 5);
+    let toks = [3i32, 11, 7, 19, 2];
+    let pr = rb.prefill(Role::Target, &toks, toks.len()).unwrap();
+    let ps = sb.prefill(Role::Target, &toks, toks.len()).unwrap();
+    let mut cr = KvCache::new(rb.dims(Role::Target));
+    let mut cs = KvCache::new(sb.dims(Role::Target));
+    cr.commit_prefill(&pr.k_rows, &pr.v_rows, cfg.s_pre, toks.len());
+    cs.commit_prefill(&ps.k_rows, &ps.v_rows, cfg.s_pre, toks.len());
+    let mut cur = 9u32;
+    for pos in toks.len()..cfg.max_seq {
+        let dr = rb.decode(Role::Target, cr.view(), cur, pos).unwrap();
+        let ds = sb.decode(Role::Target, cs.view(), cur, pos).unwrap();
+        assert!(rel_err(&ds.logits, &dr.logits) <= TOL, "pos {pos} logits");
+        cr.commit_row(&dr.k_row, &dr.v_row, pos);
+        cs.commit_row(&ds.k_row, &ds.v_row, pos);
+        cur = (cur + 13) % cfg.vocab as u32;
+    }
+    assert!(rb.decode(Role::Target, cr.view(), cur, cfg.max_seq).is_err());
+    assert!(sb.decode(Role::Target, cs.view(), cur, cfg.max_seq).is_err());
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Greedy decode chain over `cache`, teacher-forced to follow `stream`
+/// when given one (the cell commits its *own* KV rows either way).
+/// Returns the per-step argmax choices and the per-step top-2 logit gaps
+/// of this backend's own logits.
+fn greedy_chain(
+    be: &dyn Backend,
+    prompt: &[i32],
+    steps: usize,
+    mut cache: KvCache,
+    force: Option<&[u32]>,
+) -> (Vec<u32>, Vec<f32>) {
+    let pre = be.prefill(Role::Target, prompt, prompt.len()).unwrap();
+    cache.commit_prefill(&pre.k_rows, &pre.v_rows, be.meta().s_pre, prompt.len());
+    let mut choices = Vec::with_capacity(steps);
+    let mut gaps = Vec::with_capacity(steps);
+    let mut logits = pre.logits;
+    let mut pos = prompt.len();
+    for j in 0..steps {
+        let top = argmax(&logits) as u32;
+        let mut second = f32::NEG_INFINITY;
+        for (i, &l) in logits.iter().enumerate() {
+            if i != top as usize && l > second {
+                second = l;
+            }
+        }
+        choices.push(top);
+        gaps.push(logits[top as usize] - second);
+        let next = force.map_or(top, |s| s[j]);
+        let d = be.decode(Role::Target, cache.view(), next, pos).unwrap();
+        cache.commit_row(&d.k_row, &d.v_row, pos);
+        pos += 1;
+        logits = d.logits;
+    }
+    (choices, gaps)
+}
+
+/// End-to-end greedy divergence bound per (backend × kv-dtype): along the
+/// scalar reference's own greedy path, each cell's argmax must agree with
+/// the reference at every step where the reference's top-2 logit gap
+/// exceeds the cell's error margin. Disagreement with a *wide* gap means
+/// the cell's logits are off by more than its error budget — the failure
+/// this test exists to catch. The f32 cells carry tight margins (paged
+/// f32 under `cpu-ref` carries none: bit-exact); the lossy dtypes carry
+/// budgets sized to half-precision rounding and int8 affine-code error.
+#[test]
+fn e2e_greedy_divergence_bounded_per_backend_and_kv_dtype() {
+    let cfg = CpuModelConfig::tiny();
+    let rb = CpuRefBackend::new(&cfg, 11);
+    let sb = CpuSimdBackend::new(&cfg, 11);
+    let prompt = [7i32, 3, 11, 5, 9, 2];
+    let steps = 24usize;
+
+    // the reference path: cpu-ref over contiguous f32
+    let (ref_stream, ref_gaps) =
+        greedy_chain(&rb, &prompt, steps, KvCache::new(rb.dims(Role::Target)), None);
+
+    // margin per cell: the logit-gap below which an argmax flip is
+    // attributable to the cell's error budget rather than a bug
+    let cells: [(&dyn Backend, KvDtype, f32); 6] = [
+        (&rb, KvDtype::F32, 0.0), // bit-exact rung: no margin at all
+        (&rb, KvDtype::F16, 0.5),
+        (&rb, KvDtype::Int8, 2.0),
+        (&sb, KvDtype::F32, 0.01),
+        (&sb, KvDtype::F16, 0.5),
+        (&sb, KvDtype::Int8, 2.0),
+    ];
+    for (be, dtype, margin) in cells {
+        let pool = BlockPool::with_dtype(be.dims(Role::Target), 4, None, dtype);
+        let (cell_stream, _) =
+            greedy_chain(be, &prompt, steps, KvCache::paged(&pool), Some(&ref_stream));
+        let label = format!("{}/{}", be.name(), dtype.name());
+        for j in 0..steps {
+            if cell_stream[j] != ref_stream[j] {
+                assert!(
+                    ref_gaps[j] < margin,
+                    "{label} step {j}: argmax {} != ref {} with wide gap {:.3} (margin {margin})",
+                    cell_stream[j],
+                    ref_stream[j],
+                    ref_gaps[j]
+                );
+            }
+        }
+        // within-cell determinism: the same cell replayed is identical
+        let pool2 = BlockPool::with_dtype(be.dims(Role::Target), 4, None, dtype);
+        let (replay, _) =
+            greedy_chain(be, &prompt, steps, KvCache::paged(&pool2), Some(&ref_stream));
+        assert_eq!(replay, cell_stream, "{label}: replay not deterministic");
+    }
+}
